@@ -1,0 +1,118 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the rust runtime.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is listed in `manifest.txt` as whitespace-separated
+`key=value` records (one artifact per line) so the rust side needs no JSON
+dependency:
+
+    name=predict_n256_k200_b8 file=... kind=predict n=256 k=200 b=8 dim=51200
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_predict(n, k, b):
+    fn = lambda sig, w: (model.predict_scores(sig, w, b=b),)
+    return jax.jit(fn).lower(
+        _spec((n, k), jnp.int32), _spec((k * (1 << b),), jnp.float32)
+    )
+
+
+def lower_step(kind, n, k, b):
+    step = model.logreg_step if kind == "logreg" else model.svm_step
+    fn = lambda w, sig, y, c, lr: step(w, sig, y, c, lr, b=b)
+    return jax.jit(fn).lower(
+        _spec((k * (1 << b),), jnp.float32),
+        _spec((n, k), jnp.int32),
+        _spec((n,), jnp.float32),
+        _spec((), jnp.float32),
+        _spec((), jnp.float32),
+    )
+
+
+def lower_match(m, n, k):
+    from compile.kernels.match_count import match_count
+
+    # tile_k must divide k; pick the largest divisor <= 32.
+    tile_k = max(t for t in range(1, min(32, k) + 1) if k % t == 0)
+    fn = lambda a, b: (match_count(a, b, tile_k=tile_k),)
+    return jax.jit(fn).lower(_spec((m, k), jnp.int32), _spec((n, k), jnp.int32))
+
+
+# (name, builder, manifest-extras). Shapes are the contract with rust/src/runtime.
+ARTIFACTS = [
+    # production shapes: k=200, b=8 — the paper's recommended operating point.
+    ("predict_n256_k200_b8", lambda: lower_predict(256, 200, 8),
+     dict(kind="predict", n=256, k=200, b=8, dim=200 * 256)),
+    ("logreg_step_n256_k200_b8", lambda: lower_step("logreg", 256, 200, 8),
+     dict(kind="logreg_step", n=256, k=200, b=8, dim=200 * 256)),
+    ("svm_step_n256_k200_b8", lambda: lower_step("svm", 256, 200, 8),
+     dict(kind="svm_step", n=256, k=200, b=8, dim=200 * 256)),
+    ("match_count_m128_n128_k200", lambda: lower_match(128, 128, 200),
+     dict(kind="match_count", m=128, n=128, k=200)),
+    # small shapes: fast-compiling variants for integration tests.
+    ("predict_n8_k16_b4", lambda: lower_predict(8, 16, 4),
+     dict(kind="predict", n=8, k=16, b=4, dim=16 * 16)),
+    ("logreg_step_n8_k16_b4", lambda: lower_step("logreg", 8, 16, 4),
+     dict(kind="logreg_step", n=8, k=16, b=4, dim=16 * 16)),
+    ("svm_step_n8_k16_b4", lambda: lower_step("svm", 8, 16, 4),
+     dict(kind="svm_step", n=8, k=16, b=4, dim=16 * 16)),
+    ("match_count_m8_n8_k16", lambda: lower_match(8, 8, 16),
+     dict(kind="match_count", m=8, n=8, k=16)),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest_lines = []
+    for name, build, extras in ARTIFACTS:
+        if only is not None and name not in only:
+            continue
+        text = to_hlo_text(build())
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in extras.items())
+        manifest_lines.append(f"name={name} file={fname} {kv}")
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

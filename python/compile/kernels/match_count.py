@@ -1,0 +1,68 @@
+"""Pallas kernel: b-bit signature match counts (the minwise Gram matrix).
+
+K[i, j] = #{t : A[i, t] == B[j, t]}  — i.e. k·P̂_b between examples i and j
+(paper eq. (5)).  Dividing by k and applying the eq. (5) bias correction
+turns this into the resemblance estimate; the matrix itself (scaled by 1/k)
+is the positive-definite b-bit minwise kernel of Theorem 2, which the kernel
+SVM of paper §5.1 consumes.
+
+Tiling: grid = (m / TILE_M, n / TILE_N, k / TILE_K); each step loads a
+(TILE_M, TILE_K) strip of A and a (TILE_N, TILE_K) strip of B into VMEM,
+compares all pairs with a broadcast equality, and accumulates the partial
+match counts into the (TILE_M, TILE_N) output tile across the k-grid.
+
+VMEM per step = (TILE_M + TILE_N)·TILE_K·4 + TILE_M·TILE_N·TILE_K (transient
+bool) + TILE_M·TILE_N·4.  Defaults TILE_M=TILE_N=64, TILE_K=32 →
+64·64·32 ≈ 128 KiB transient — small; the compare-reduce is VPU work (no
+MXU), so the block shapes are chosen to keep the HBM↔VMEM streams long.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _match_count_kernel(a_ref, b_ref, o_ref):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (TILE_M, TILE_K) int32
+    b = b_ref[...]  # (TILE_N, TILE_K) int32
+    eq = (a[:, None, :] == b[None, :, :]).astype(jnp.float32)
+    o_ref[...] += eq.sum(axis=2)
+
+
+def match_count(a, b, *, tile_m=64, tile_n=64, tile_k=32):
+    """K[i,j] = #matching positions between signatures a[i] and b[j].
+
+    Args:
+      a: (m, k) int32 signatures.
+      b: (n, k) int32 signatures.
+    Returns:
+      (m, n) float32 match counts.
+    """
+    m, k = a.shape
+    n, kb = b.shape
+    if k != kb:
+        raise ValueError(f"signature widths differ: {k} vs {kb}")
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    tile_k = min(tile_k, k)
+    if m % tile_m or n % tile_n or k % tile_k:
+        raise ValueError(f"shapes ({m},{n},{k}) not divisible by tiles "
+                         f"({tile_m},{tile_n},{tile_k})")
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+    return pl.pallas_call(
+        _match_count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, t: (i, t)),
+            pl.BlockSpec((tile_n, tile_k), lambda i, j, t: (j, t)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

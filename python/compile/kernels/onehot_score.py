@@ -1,0 +1,91 @@
+"""Pallas kernel: linear scores over the Theorem-2 one-hot expansion.
+
+The paper's run-time hot loop is `score(x_i) = <w, expand(sig_i)>` where
+`expand` turns k b-bit hash values into a (k * 2^b)-dim vector with exactly
+k ones (paper §4).  On a CPU that is a gather; on TPU gathers are hostile to
+the vector unit, so this kernel re-expresses the gather as an
+
+    iota-compare one-hot expansion  →  MXU matmul
+
+which is precisely the paper's own linearization trick (Theorem 2's
+inner-product construction) restated for the systolic array.
+
+Tiling (see DESIGN.md §Hardware-Adaptation and §Perf):
+  grid = (n / TILE_N, k / TILE_K)
+  sig block   : (TILE_N, TILE_K)   int32   — VMEM
+  w block     : (TILE_K, 2^b)      float32 — VMEM (w viewed as (k, 2^b))
+  scores block: (TILE_N, 1)        float32 — accumulated across the k-grid
+
+VMEM footprint per step  = TILE_N*TILE_K*4  +  TILE_K*2^b*4
+                         + TILE_N*TILE_K*2^b*4 (the transient one-hot tile)
+With the default TILE_N=128, TILE_K=8, b=8: 128*8*256*4 B ≈ 1.0 MiB —
+comfortably inside a 16 MiB VMEM budget, and the (128×2048)·(2048×1)-shaped
+contraction per k-chunk keeps the MXU fed.  interpret=True everywhere (CPU
+PJRT cannot execute Mosaic custom-calls); real-TPU perf is estimated from
+this footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot_score_kernel(sig_ref, w_ref, o_ref, *, width):
+    """One (TILE_N, TILE_K) step: o += onehot(sig) · w_chunk."""
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sig = sig_ref[...]                       # (TILE_N, TILE_K) int32
+    w = w_ref[...]                           # (TILE_K, width)  f32
+    tile_n, tile_k = sig.shape
+    # iota-compare one-hot: (TILE_N, TILE_K, width) in {0,1}
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile_n, tile_k, width), 2)
+    onehot = (sig[:, :, None] == iota).astype(jnp.float32)
+    # contract (TILE_K, width) jointly — a (TILE_N, TILE_K*width) x
+    # (TILE_K*width,) matvec: MXU-shaped on real hardware.
+    partial = jax.lax.dot_general(
+        onehot.reshape(tile_n, tile_k * width),
+        w.reshape(tile_k * width),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += partial[:, None]
+
+
+def onehot_score(sig, w, b, *, tile_n=128, tile_k=8):
+    """scores[i] = sum_j w[j*2^b + sig[i,j]]  via the tiled Pallas kernel.
+
+    Args:
+      sig: (n, k) int32, entries in [0, 2**b).
+      w:   (k * 2**b,) float32.
+      b:   bits per hashed value (static).
+      tile_n, tile_k: block shape; n % tile_n == 0 and k % tile_k == 0 is
+        required (the rust coordinator pads batches — see runtime/).
+    Returns:
+      (n,) float32 scores.
+    """
+    n, k = sig.shape
+    width = 1 << b
+    tile_n = min(tile_n, n)
+    tile_k = min(tile_k, k)
+    if n % tile_n != 0 or k % tile_k != 0:
+        raise ValueError(f"n={n} k={k} not divisible by tiles ({tile_n},{tile_k})")
+    w2 = w.reshape(k, width)
+    grid = (n // tile_n, k // tile_k)
+    out = pl.pallas_call(
+        functools.partial(_onehot_score_kernel, width=width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_k), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_k, width), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(sig, w2)
+    return out[:, 0]

@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+These are deliberately written in the most transparent way possible — no
+tiling, no tricks — so that the Pallas kernels in `onehot_score.py` and
+`match_count.py` can be validated against them with `assert_allclose`
+(pytest + hypothesis sweeps live in `python/tests/test_kernels.py`).
+
+Shapes / conventions (shared with the rust side — see rust/src/runtime):
+  sig : (n, k) int32, entries in [0, 2**b)   — b-bit minwise signatures
+  w   : (k * 2**b,) float32                  — linear model over the
+        Theorem-2 one-hot expansion; logical layout w[j, v] = w[j*2**b + v]
+  scores[i] = sum_j w[j * 2**b + sig[i, j]]  — inner product <w, expand(sig_i)>
+"""
+
+import jax.numpy as jnp
+
+
+def expand_onehot(sig, b):
+    """Theorem-2 expansion: (n, k) int32 -> (n, k * 2**b) float32 one-hot.
+
+    Each row has exactly k ones — this is the linearized feature vector the
+    paper feeds to LIBLINEAR (paper §4, worked example with k=3, b=2).
+    """
+    n, k = sig.shape
+    width = 1 << b
+    eye = (sig[:, :, None] == jnp.arange(width, dtype=sig.dtype)[None, None, :])
+    return eye.astype(jnp.float32).reshape(n, k * width)
+
+
+def onehot_score_ref(sig, w, b):
+    """scores[i] = <w, expand(sig_i)> = sum_j w[j*2^b + sig[i,j]].
+
+    Reference implementation via explicit gather — the most literal
+    transcription of the paper's linear-SVM-on-expanded-features step.
+    """
+    n, k = sig.shape
+    width = 1 << b
+    idx = sig + (jnp.arange(k, dtype=sig.dtype) * width)[None, :]
+    return jnp.take(w, idx, axis=0).sum(axis=1)
+
+
+def match_count_ref(a, b_sig):
+    """K[i, j] = #{t : a[i, t] == b_sig[j, t]} as float32.
+
+    This is k * P̂_b between examples i and j (paper eq. (5) numerator) and
+    the Gram matrix entry (up to 1/k) of the b-bit minwise kernel
+    (Theorem 2, matrix M^(b) summed over permutations).
+    """
+    eq = a[:, None, :] == b_sig[None, :, :]
+    return eq.sum(axis=2).astype(jnp.float32)
+
+
+def logreg_value_and_grad_ref(w, sig, y, c, b):
+    """L2-regularized logistic regression objective (paper eq. (10)) and its
+    gradient over the one-hot-expanded batch.
+
+      f(w) = 0.5 w·w + C * sum_i log(1 + exp(-y_i w·x_i))
+    """
+    x = expand_onehot(sig, b)
+    scores = x @ w
+    margins = y * scores
+    loss = 0.5 * jnp.dot(w, w) + c * jnp.sum(jnp.logaddexp(0.0, -margins))
+    sigma = 1.0 / (1.0 + jnp.exp(margins))  # = sigmoid(-margin)
+    coef = -c * y * sigma                   # dloss/dscore
+    grad = w + x.T @ coef
+    return loss, grad
+
+
+def svm_sqhinge_value_and_grad_ref(w, sig, y, c, b):
+    """L2-regularized *squared*-hinge SVM (differentiable variant of paper
+    eq. (9); the LIBLINEAR -s 1/2 family) value and gradient.
+
+      f(w) = 0.5 w·w + C * sum_i max(0, 1 - y_i w·x_i)^2
+    """
+    x = expand_onehot(sig, b)
+    scores = x @ w
+    viol = jnp.maximum(0.0, 1.0 - y * scores)
+    loss = 0.5 * jnp.dot(w, w) + c * jnp.sum(viol * viol)
+    coef = -2.0 * c * y * viol
+    grad = w + x.T @ coef
+    return loss, grad

@@ -1,0 +1,75 @@
+"""L2 — the JAX compute graphs lowered AOT for the rust coordinator.
+
+Everything here is build-time only: `aot.py` lowers each entry point once to
+HLO text in `artifacts/`, and the rust runtime (rust/src/runtime) loads and
+executes them via PJRT.  Python is never on the request path.
+
+Entry points (shapes fixed at lowering time; the rust side pads batches):
+
+  predict_scores(sig, w)            -> (scores,)
+  logreg_step(w, sig, y, c, lr)     -> (w', loss)
+  svm_step(w, sig, y, c, lr)        -> (w', loss)
+  match_count_graph(a, b)           -> (K,)
+
+The scores always flow through the L1 Pallas kernel (`onehot_score`), so the
+kernel lowers into the same HLO module.  Gradients are written explicitly
+(scatter-add of the per-example coefficients back into the one-hot slots) —
+the transpose of the expansion is a segment-sum, which XLA fuses well; this
+avoids relying on autodiff through `pallas_call`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.onehot_score import onehot_score
+from compile.kernels.match_count import match_count
+
+
+def _flat_idx(sig, b):
+    """(n, k) b-bit values -> (n, k) flat indices into the k*2^b expansion."""
+    n, k = sig.shape
+    return sig + (jnp.arange(k, dtype=sig.dtype) * (1 << b))[None, :]
+
+
+def predict_scores(sig, w, *, b):
+    """Batched linear scores over the one-hot expansion (paper §4 run-time)."""
+    return onehot_score(sig, w, b)
+
+
+def _scatter_grad(w, sig, coef, b):
+    """grad = w + Σ_i coef[i] · expand(sig_i)  (explicit expansion transpose)."""
+    idx = _flat_idx(sig, b)                            # (n, k)
+    n, k = idx.shape
+    upd = jnp.broadcast_to(coef[:, None], (n, k))
+    return w + jnp.zeros_like(w).at[idx.reshape(-1)].add(upd.reshape(-1))
+
+
+def logreg_step(w, sig, y, c, lr, *, b):
+    """One gradient step on the L2-regularized logistic loss (paper eq. (10)).
+
+    Returns (w', loss).  `c` and `lr` are traced scalars so the same compiled
+    artifact serves the whole C-sweep of Figures 5–7.
+    """
+    scores = onehot_score(sig, w, b)
+    margins = y * scores
+    loss = 0.5 * jnp.dot(w, w) + c * jnp.sum(jnp.logaddexp(0.0, -margins))
+    sigma = 1.0 / (1.0 + jnp.exp(margins))
+    coef = -c * y * sigma
+    grad = _scatter_grad(w, sig, coef, b)
+    return w - lr * grad, loss
+
+
+def svm_step(w, sig, y, c, lr, *, b):
+    """One gradient step on the L2-regularized squared-hinge SVM objective
+    (differentiable form of paper eq. (9)).  Returns (w', loss)."""
+    scores = onehot_score(sig, w, b)
+    viol = jnp.maximum(0.0, 1.0 - y * scores)
+    loss = 0.5 * jnp.dot(w, w) + c * jnp.sum(viol * viol)
+    coef = -2.0 * c * y * viol
+    grad = _scatter_grad(w, sig, coef, b)
+    return w - lr * grad, loss
+
+
+def match_count_graph(a, b_sig):
+    """Signature match-count Gram block (kernel-SVM / estimator hot spot)."""
+    return match_count(a, b_sig)

@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels/ref.py.
+
+Hypothesis sweeps shapes, b-widths, tilings and value distributions; every
+case asserts allclose against the reference.  interpret=True makes each case
+cheap but not free, so example counts are bounded.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.onehot_score import onehot_score
+from compile.kernels.match_count import match_count
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _sig(rng, n, k, b):
+    return jnp.asarray(rng.integers(0, 1 << b, size=(n, k)), dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------- onehot_score
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    k=st.sampled_from([4, 8, 16, 24]),
+    b=st.sampled_from([1, 2, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_onehot_score_matches_ref(n, k, b, seed):
+    rng = np.random.default_rng(seed)
+    sig = _sig(rng, n, k, b)
+    w = jnp.asarray(rng.normal(size=(k * (1 << b),)), dtype=jnp.float32)
+    got = onehot_score(sig, w, b, tile_n=min(8, n), tile_k=min(4, k))
+    want = ref.onehot_score_ref(sig, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    tile_n=st.sampled_from([2, 4, 8, 16]),
+    tile_k=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_onehot_score_tiling_invariance(tile_n, tile_k, seed):
+    """The result must not depend on the block decomposition."""
+    n, k, b = 16, 8, 4
+    rng = np.random.default_rng(seed)
+    sig = _sig(rng, n, k, b)
+    w = jnp.asarray(rng.normal(size=(k * (1 << b),)), dtype=jnp.float32)
+    got = onehot_score(sig, w, b, tile_n=tile_n, tile_k=tile_k)
+    want = ref.onehot_score_ref(sig, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_onehot_score_rejects_bad_tiling():
+    sig = jnp.zeros((10, 6), jnp.int32)
+    w = jnp.zeros((6 * 16,), jnp.float32)
+    with pytest.raises(ValueError):
+        onehot_score(sig, w, 4, tile_n=4, tile_k=3)
+
+
+def test_onehot_score_production_shape():
+    """The exact operating point the AOT artifacts fix (k=200, b=8)."""
+    rng = np.random.default_rng(0)
+    sig = _sig(rng, 256, 200, 8)
+    w = jnp.asarray(rng.normal(size=(200 * 256,)), dtype=jnp.float32)
+    got = onehot_score(sig, w, 8)
+    want = ref.onehot_score_ref(sig, w, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_expansion_has_exactly_k_ones():
+    rng = np.random.default_rng(1)
+    sig = _sig(rng, 32, 16, 4)
+    x = ref.expand_onehot(sig, 4)
+    np.testing.assert_array_equal(np.asarray(x.sum(axis=1)), 16.0)
+
+
+# ---------------------------------------------------------------- match_count
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([4, 8, 16]),
+    n=st.sampled_from([4, 8, 16]),
+    k=st.sampled_from([4, 8, 16, 32]),
+    b=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_match_count_matches_ref(m, n, k, b, seed):
+    rng = np.random.default_rng(seed)
+    a = _sig(rng, m, k, b)
+    bb = _sig(rng, n, k, b)
+    got = match_count(a, bb, tile_m=min(4, m), tile_n=min(4, n), tile_k=min(4, k))
+    want = ref.match_count_ref(a, bb)
+    np.testing.assert_allclose(got, want)
+
+
+def test_match_count_self_is_k():
+    """K[i,i] of a self-comparison is exactly k (every position matches)."""
+    rng = np.random.default_rng(2)
+    a = _sig(rng, 8, 16, 4)
+    got = np.asarray(match_count(a, a))
+    np.testing.assert_array_equal(np.diag(got), 16.0)
+
+
+def test_match_count_symmetry():
+    rng = np.random.default_rng(3)
+    a = _sig(rng, 8, 16, 4)
+    got = np.asarray(match_count(a, a))
+    np.testing.assert_array_equal(got, got.T)
+
+
+def test_match_count_gram_is_psd():
+    """1/k · match_count is the Theorem-2 b-bit kernel — must be PSD."""
+    rng = np.random.default_rng(4)
+    a = _sig(rng, 16, 32, 2)
+    gram = np.asarray(match_count(a, a)) / 32.0
+    eig = np.linalg.eigvalsh(gram)
+    assert eig.min() >= -1e-6, f"negative eigenvalue {eig.min()}"
+
+
+def test_match_count_rejects_mismatched_k():
+    with pytest.raises(ValueError):
+        match_count(jnp.zeros((4, 8), jnp.int32), jnp.zeros((4, 16), jnp.int32))

@@ -1,0 +1,85 @@
+"""L2 correctness: train-step graphs vs reference value-and-grad, plus
+numerical-gradient spot checks and optimization sanity (loss decreases)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _batch(seed, n=8, k=8, b=4):
+    rng = np.random.default_rng(seed)
+    sig = jnp.asarray(rng.integers(0, 1 << b, size=(n, k)), dtype=jnp.int32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n), dtype=jnp.float32)
+    w = jnp.asarray(0.1 * rng.normal(size=(k * (1 << b),)), dtype=jnp.float32)
+    return w, sig, y
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), c=st.sampled_from([0.01, 0.1, 1.0, 10.0]))
+def test_logreg_step_matches_reference_grad(seed, c):
+    w, sig, y = _batch(seed)
+    lr = 0.05
+    w2, loss = model.logreg_step(w, sig, y, jnp.float32(c), jnp.float32(lr), b=4)
+    ref_loss, ref_grad = ref.logreg_value_and_grad_ref(w, sig, y, c, 4)
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+    np.testing.assert_allclose(w2, w - lr * ref_grad, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), c=st.sampled_from([0.01, 0.1, 1.0, 10.0]))
+def test_svm_step_matches_reference_grad(seed, c):
+    w, sig, y = _batch(seed)
+    lr = 0.05
+    w2, loss = model.svm_step(w, sig, y, jnp.float32(c), jnp.float32(lr), b=4)
+    ref_loss, ref_grad = ref.svm_sqhinge_value_and_grad_ref(w, sig, y, c, 4)
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+    np.testing.assert_allclose(w2, w - lr * ref_grad, rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_reference_grad_vs_numerical():
+    """Central finite differences on a handful of coordinates."""
+    w, sig, y = _batch(7, n=6, k=4, b=2)
+    c = 0.5
+    _, grad = ref.logreg_value_and_grad_ref(w, sig, y, c, 2)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for idx in rng.choice(w.shape[0], size=8, replace=False):
+        e = np.zeros(w.shape[0], dtype=np.float32)
+        e[idx] = eps
+        lp, _ = ref.logreg_value_and_grad_ref(w + e, sig, y, c, 2)
+        lm, _ = ref.logreg_value_and_grad_ref(w - e, sig, y, c, 2)
+        num = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(grad[idx], num, rtol=2e-2, atol=2e-3)
+
+
+def test_logreg_descent_reduces_loss():
+    w, sig, y = _batch(11, n=16, k=8, b=4)
+    c, lr = jnp.float32(1.0), jnp.float32(0.02)
+    losses = []
+    for _ in range(30):
+        w, loss = model.logreg_step(w, sig, y, c, lr, b=4)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_svm_descent_reduces_loss():
+    w, sig, y = _batch(13, n=16, k=8, b=4)
+    c, lr = jnp.float32(1.0), jnp.float32(0.01)
+    losses = []
+    for _ in range(30):
+        w, loss = model.svm_step(w, sig, y, c, lr, b=4)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_predict_scores_linear_in_w():
+    w, sig, _ = _batch(17)
+    s1 = model.predict_scores(sig, w, b=4)
+    s2 = model.predict_scores(sig, 2.0 * w, b=4)
+    np.testing.assert_allclose(np.asarray(s2), 2.0 * np.asarray(s1), rtol=1e-5)

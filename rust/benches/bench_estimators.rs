@@ -1,0 +1,67 @@
+//! Estimator evaluation cost: R̂_b / â_vw / â_rp per pair, the b-bit+VW
+//! combination of §8, and the Gram-row cost that gates kernel SVM (§5.1).
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::hashing::bbit::{pack_lowest_bits, BbitSignatureMatrix};
+use bbml::hashing::estimators::{estimate_r_bbit, estimate_r_bbit_vw};
+use bbml::hashing::minwise::MinwiseHasher;
+use bbml::hashing::projections::{ProjectionKind, RandomProjection};
+use bbml::hashing::vw::VwHasher;
+
+fn main() {
+    let mut bench = Bencher::new();
+    let d: u64 = 1 << 24;
+    let s1: Vec<u64> = (0..300u64).map(|i| i * 7919).collect();
+    let s2: Vec<u64> = (150..450u64).map(|i| i * 7919).collect();
+
+    for k in [200usize, 500] {
+        let h = MinwiseHasher::new(d, k, 1);
+        let z1_full = h.signature(&s1);
+        let z2_full = h.signature(&s2);
+        for b in [1u32, 8, 16] {
+            let z1 = pack_lowest_bits(&z1_full, b);
+            let z2 = pack_lowest_bits(&z2_full, b);
+            bench.bench(&format!("estimate/r_bbit k={k} b={b}"), || {
+                black_box(estimate_r_bbit(&z1, &z2, 300, 300, d, b))
+            });
+        }
+        // §8: VW on top of b=16 signatures.
+        let z1 = pack_lowest_bits(&z1_full, 16);
+        let z2 = pack_lowest_bits(&z2_full, 16);
+        let vw = VwHasher::new(256 * k, 9);
+        bench.bench(&format!("estimate/r_bbit_vw k={k} b=16 m=2^8k"), || {
+            black_box(estimate_r_bbit_vw(&z1, &z2, 16, &vw, 300, 300, d))
+        });
+    }
+
+    // Baselines at matched sample counts.
+    let vw = VwHasher::new(512, 3);
+    let g1 = vw.hash_binary(&s1);
+    let g2 = vw.hash_binary(&s2);
+    bench.bench("estimate/vw_inner k=512", || {
+        black_box(VwHasher::estimate_inner_product(&g1, &g2))
+    });
+    let rp = RandomProjection::new(512, ProjectionKind::Rademacher, 3);
+    let v1 = rp.project_binary(&s1);
+    let v2 = rp.project_binary(&s2);
+    bench.bench("estimate/rp_inner k=512", || {
+        black_box(RandomProjection::estimate_inner_product(&v1, &v2))
+    });
+
+    // Gram-row evaluation over a packed matrix (kernel SVM's unit of work).
+    let mut m = BbitSignatureMatrix::new(200, 8);
+    let h = MinwiseHasher::new(d, 200, 5);
+    for i in 0..512u64 {
+        let set: Vec<u64> = (i..i + 200).map(|x| x * 131).collect();
+        m.push_full_row(&h.signature(&set), 1.0);
+    }
+    bench.bench("gram/row512 match_count k=200 b=8", || {
+        let mut acc = 0usize;
+        for j in 0..m.n() {
+            acc += m.match_count(0, j);
+        }
+        black_box(acc)
+    });
+
+    bench.write_csv("results/bench_estimators.csv").ok();
+}

@@ -1,0 +1,67 @@
+//! Hashing/preprocessing throughput (paper §9: "the preprocessing step …
+//! requires only one scan of the data" and Figure 3/7's hashing-cost
+//! context). Covers minwise signatures across k, the sharded pipeline
+//! scaling across threads, and the VW/CM/projection baselines' transform
+//! cost.
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::minwise::MinwiseHasher;
+use bbml::hashing::projections::{ProjectionKind, RandomProjection};
+use bbml::hashing::vw::{CountMinSketch, VwHasher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = SynthConfig {
+        n_docs: 2_000,
+        dim: 1 << 24,
+        vocab: 30_000,
+        mean_len: 120,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let doc: Vec<u64> = ds.row(0).to_vec();
+    println!(
+        "workload: {} docs, avg nnz {:.0}, doc[0] nnz {}",
+        ds.n(),
+        ds.avg_nnz(),
+        doc.len()
+    );
+
+    // --- single-document signature cost across k --------------------------
+    for k in [30usize, 200, 500] {
+        let h = MinwiseHasher::new(cfg.dim, k, 1);
+        let mut buf = Vec::new();
+        b.bench(&format!("minwise/signature/k={k}"), || {
+            let s = h.signature_into(black_box(&doc), &mut buf);
+            let out = s.len();
+            buf = s;
+            out
+        });
+    }
+
+    // --- baselines' per-document transform cost ---------------------------
+    let vw = VwHasher::new(1 << 12, 3);
+    b.bench("vw/hash_binary/k=4096", || vw.hash_binary(black_box(&doc)));
+    b.bench("vw/hash_binary_sparse/k=4096", || {
+        vw.hash_binary_sparse(black_box(&doc))
+    });
+    let cm = CountMinSketch::new(1 << 12, 1, 3);
+    b.bench("cm/sketch_binary/k=4096", || cm.sketch_binary(black_box(&doc)));
+    let rp = RandomProjection::new(64, ProjectionKind::Rademacher, 3);
+    b.bench("rp/project_binary/k=64", || rp.project_binary(black_box(&doc)));
+
+    // --- pipeline scaling --------------------------------------------------
+    for threads in [1usize, 2, 4, 8] {
+        let opt = PipelineOptions {
+            threads,
+            ..Default::default()
+        };
+        b.bench_once(&format!("pipeline/hash_dataset/threads={threads}"), || {
+            hash_dataset(&ds, 200, 8, 7, &opt)
+        });
+    }
+
+    b.write_csv("results/bench_hashing.csv").ok();
+}

@@ -1,0 +1,42 @@
+//! §5.1: kernel SVM training cost — exact resemblance kernel on raw sets
+//! vs the b-bit estimated kernel across k (the paper's ">1 week vs minutes"
+//! contrast, scaled to this testbed).
+
+use bbml::benchkit::Bencher;
+use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::solvers::kernel_svm::{
+    train_kernel_svm, BbitKernel, KernelSvmOptions, ResemblanceKernel,
+};
+
+fn main() {
+    let mut bench = Bencher::new();
+    let cfg = SynthConfig {
+        n_docs: 800,
+        dim: 1 << 24,
+        vocab: 30_000,
+        mean_len: 120,
+        topic_mix: 0.25,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    println!("workload: n = {}, avg nnz {:.0}", ds.n(), ds.avg_nnz());
+    let opt = KernelSvmOptions {
+        max_updates: 20_000,
+        ..Default::default()
+    };
+
+    bench.bench_once("kernel_svm/exact resemblance", || {
+        train_kernel_svm(&ResemblanceKernel { data: &ds }, &opt)
+    });
+
+    let pipe = PipelineOptions::default();
+    for k in [30usize, 100, 200, 500] {
+        let (sigs, _) = hash_dataset(&ds, k, 8, 7, &pipe);
+        bench.bench_once(&format!("kernel_svm/bbit k={k} b=8"), || {
+            train_kernel_svm(&BbitKernel { sigs: &sigs }, &opt)
+        });
+    }
+
+    bench.write_csv("results/bench_kernel_svm.csv").ok();
+}

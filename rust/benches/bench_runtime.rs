@@ -1,0 +1,82 @@
+//! PJRT hot-path cost: compiled predict / train-step / match-count execute
+//! latency vs the equivalent pure-rust implementations — quantifies the
+//! L3↔runtime boundary overhead (per-batch, amortized).
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::hashing::bbit::BbitSignatureMatrix;
+use bbml::rng::Xoshiro256;
+use bbml::runtime::{ArtifactKind, Runtime};
+use bbml::solvers::{BinaryFeatures, ExpandedView};
+
+fn random_sigs(n: usize, k: usize, b: u32, seed: u64) -> BbitSignatureMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut m = BbitSignatureMatrix::new(k, b);
+    for i in 0..n {
+        let row: Vec<u16> = (0..k)
+            .map(|_| (rng.next_u32() & ((1u32 << b) - 1)) as u16)
+            .collect();
+        m.push_row(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    m
+}
+
+fn main() {
+    let Some(rt) = Runtime::try_default() else {
+        println!("no artifacts/ — run `make artifacts` to enable runtime benches");
+        return;
+    };
+    let mut bench = Bencher::new();
+    println!("platform: {}", rt.platform());
+
+    let sigs = random_sigs(256, 200, 8, 1);
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let w: Vec<f32> = (0..200 * 256).map(|_| rng.gen_f32() - 0.5).collect();
+
+    // Warm the executable cache (compilation excluded from steady-state).
+    rt.predict_scores(&sigs, &w).unwrap();
+
+    bench.bench("runtime/predict 256x200 (pjrt)", || {
+        black_box(rt.predict_scores(&sigs, &w).unwrap().len())
+    });
+    let view = ExpandedView::new(&sigs);
+    bench.bench("runtime/predict 256x200 (rust)", || {
+        let mut acc = 0.0;
+        for i in 0..sigs.n() {
+            acc += view.dot(i, &w);
+        }
+        black_box(acc)
+    });
+
+    let rows: Vec<usize> = (0..256).collect();
+    rt.train_step(ArtifactKind::LogregStep, &sigs, &rows, &w, 1.0, 1e-4)
+        .unwrap();
+    bench.bench("runtime/logreg_step 256x200 (pjrt)", || {
+        rt.train_step(ArtifactKind::LogregStep, &sigs, &rows, &w, 1.0, 1e-4)
+            .unwrap()
+            .loss
+    });
+    bench.bench("runtime/svm_step 256x200 (pjrt)", || {
+        rt.train_step(ArtifactKind::SvmStep, &sigs, &rows, &w, 1.0, 1e-4)
+            .unwrap()
+            .loss
+    });
+
+    let a = random_sigs(128, 200, 8, 3);
+    let b2 = random_sigs(128, 200, 8, 4);
+    let ar: Vec<usize> = (0..128).collect();
+    rt.match_count(&a, &ar, &b2, &ar).unwrap();
+    bench.bench("runtime/match_count 128x128 (pjrt)", || {
+        black_box(rt.match_count(&a, &ar, &b2, &ar).unwrap().len())
+    });
+    bench.bench("runtime/match_count 128x128 (rust)", || {
+        let mut acc = 0usize;
+        for i in 0..128 {
+            for j in 0..128 {
+                acc += a.match_count(i, j.min(b2.n() - 1));
+            }
+        }
+        black_box(acc)
+    });
+
+    bench.write_csv("results/bench_runtime.csv").ok();
+}

@@ -1,0 +1,67 @@
+//! Figure 4: testing (scoring) time — hashed expansion scoring vs original
+//! sparse scoring, plus the PJRT-compiled predict path when artifacts exist.
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::runtime::Runtime;
+use bbml::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
+use bbml::solvers::{BinaryFeatures, ExpandedView};
+
+fn main() {
+    let mut bench = Bencher::new();
+    let cfg = SynthConfig {
+        n_docs: 3_000,
+        dim: 1 << 24,
+        vocab: 30_000,
+        mean_len: 120,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let (train, test) = ds.train_test_split(0.25, 1);
+    let pipe = PipelineOptions::default();
+
+    // Original-data model + scoring.
+    let model_orig = train_svm(
+        &train,
+        &SvmOptions {
+            c: 1.0,
+            loss: SvmLoss::L2,
+            ..Default::default()
+        },
+    );
+    bench.bench(&format!("test/original/n={}", test.n()), || {
+        black_box(model_orig.accuracy(&test))
+    });
+
+    // Hashed models + scoring across (b, k).
+    for &(b, k) in &[(8u32, 200usize), (8, 500), (16, 200), (1, 200)] {
+        let (sig_tr, _) = hash_dataset(&train, k, b, 3, &pipe);
+        let (sig_te, _) = hash_dataset(&test, k, b, 3, &pipe);
+        let view_tr = ExpandedView::new(&sig_tr);
+        let model = train_svm(
+            &view_tr,
+            &SvmOptions {
+                c: 1.0,
+                loss: SvmLoss::L2,
+                ..Default::default()
+            },
+        );
+        let view_te = ExpandedView::new(&sig_te);
+        bench.bench(&format!("test/hashed b={b} k={k}/n={}", sig_te.n()), || {
+            black_box(model.accuracy(&view_te))
+        });
+        // PJRT predict path (k=200, b=8 artifact only).
+        if b == 8 && k == 200 {
+            if let Some(rt) = Runtime::try_default() {
+                bench.bench("test/pjrt predict b=8 k=200", || {
+                    rt.predict_scores(&sig_te, &model.w).unwrap().len()
+                });
+            } else {
+                println!("(skipping PJRT predict bench — run `make artifacts`)");
+            }
+        }
+    }
+
+    bench.write_csv("results/bench_testing.csv").ok();
+}

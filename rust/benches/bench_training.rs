@@ -1,0 +1,73 @@
+//! Figure 3 / Figure 7: training time — hashed (per b, k) vs original data,
+//! for both DCD linear SVM and DCD logistic regression.
+
+use bbml::benchkit::Bencher;
+use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
+use bbml::solvers::logreg::{train_logreg, LogRegOptions};
+use bbml::solvers::ExpandedView;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = SynthConfig {
+        n_docs: 3_000,
+        dim: 1 << 24,
+        vocab: 30_000,
+        mean_len: 120,
+        topic_mix: 0.25,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let (train, _) = ds.train_test_split(0.2, 1);
+    println!("workload: n_train = {}, avg nnz {:.0}", train.n(), train.avg_nnz());
+    let pipe = PipelineOptions::default();
+
+    // --- original-data training (the dashed red curve) --------------------
+    b.bench_once("train/svm/original", || {
+        train_svm(
+            &train,
+            &SvmOptions {
+                c: 1.0,
+                loss: SvmLoss::L2,
+                ..Default::default()
+            },
+        )
+    });
+    b.bench_once("train/logreg/original", || {
+        train_logreg(
+            &train,
+            &LogRegOptions {
+                c: 1.0,
+                ..Default::default()
+            },
+        )
+    });
+
+    // --- hashed training across (b, k) ------------------------------------
+    for &(bbits, k) in &[(1u32, 200usize), (4, 200), (8, 30), (8, 200), (8, 500), (16, 200)] {
+        let (sigs, _) = hash_dataset(&train, k, bbits, 11, &pipe);
+        let view = ExpandedView::new(&sigs);
+        b.bench_once(&format!("train/svm/hashed b={bbits} k={k}"), || {
+            train_svm(
+                &view,
+                &SvmOptions {
+                    c: 1.0,
+                    loss: SvmLoss::L2,
+                    ..Default::default()
+                },
+            )
+        });
+        b.bench_once(&format!("train/logreg/hashed b={bbits} k={k}"), || {
+            train_logreg(
+                &view,
+                &LogRegOptions {
+                    c: 1.0,
+                    ..Default::default()
+                },
+            )
+        });
+    }
+
+    b.write_csv("results/bench_training.csv").ok();
+}

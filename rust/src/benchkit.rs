@@ -1,0 +1,229 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with robust summary statistics, a
+//! `black_box` shim, and a tiny reporter that prints criterion-like lines:
+//!
+//! ```text
+//! hash/minwise/k=200      time: [ 1.21 ms  1.23 ms  1.27 ms ]  (median, p10..p90)
+//! ```
+//!
+//! Used by every target in `rust/benches/` (all `harness = false`, so
+//! `cargo bench` drives them) and by the experiment harness for the timing
+//! figures (Figs. 3, 4, 7 and §5.1).
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Summary statistics over a set of timed iterations.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub std_dev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        let pct = |q: f64| samples[((n - 1) as f64 * q).round() as usize];
+        Stats {
+            n,
+            mean,
+            median: pct(0.5),
+            p10: pct(0.1),
+            p90: pct(0.9),
+            min: samples[0],
+            max: samples[n - 1],
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A single benchmark runner with warmup and adaptive iteration counts.
+pub struct Bencher {
+    /// Target wall-clock spent measuring each benchmark.
+    pub measure_time: Duration,
+    /// Wall-clock spent warming up.
+    pub warmup_time: Duration,
+    /// Upper bound on measured iterations (keeps huge cases bounded).
+    pub max_iters: usize,
+    results: Vec<(String, Stats)>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // BBML_BENCH_FAST=1 shrinks budgets for CI-style smoke runs.
+        let fast = std::env::var("BBML_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            measure_time: Duration::from_millis(if fast { 200 } else { 1500 }),
+            warmup_time: Duration::from_millis(if fast { 50 } else { 300 }),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (one logical iteration per call) and print a summary line.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup, also used to estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed() / warm_iters as u32;
+        let target = (self.measure_time.as_secs_f64() / per_iter.as_secs_f64().max(1e-9))
+            .ceil() as usize;
+        let iters = target.clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "{:<48} time: [{} {} {}]  ({} iters)",
+            name,
+            fmt_dur(stats.p10),
+            fmt_dur(stats.median),
+            fmt_dur(stats.p90),
+            stats.n
+        );
+        self.results.push((name.to_string(), stats.clone()));
+        stats
+    }
+
+    /// Time a single execution of `f` (for long-running end-to-end cases).
+    pub fn bench_once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> Duration {
+        let t = Instant::now();
+        black_box(f());
+        let d = t.elapsed();
+        println!("{:<48} time: [{}]  (1 iter)", name, fmt_dur(d));
+        self.results
+            .push((name.to_string(), Stats::from_samples(vec![d])));
+        d
+    }
+
+    /// All recorded results, in execution order.
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+
+    /// Write results as CSV (`name,median_ns,mean_ns,p10_ns,p90_ns,n`).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,median_ns,mean_ns,p10_ns,p90_ns,iters")?;
+        for (name, s) in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                name,
+                s.median.as_nanos(),
+                s.mean.as_nanos(),
+                s.p10.as_nanos(),
+                s.p90.as_nanos(),
+                s.n
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Measure wall-clock of one closure invocation (no printing).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![Duration::from_millis(2); 10]);
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.min, s.max);
+        assert_eq!(s.std_dev, Duration::ZERO);
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = Stats::from_samples(samples);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+        assert!(s.min <= s.p10 && s.p90 <= s.max);
+    }
+
+    #[test]
+    fn bencher_runs_and_records() {
+        std::env::set_var("BBML_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.measure_time = Duration::from_millis(10);
+        b.warmup_time = Duration::from_millis(2);
+        let st = b.bench("test/noop", || 1 + 1);
+        assert!(st.n >= 5);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,315 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! bbml generate  [key=val ...]        write the synthetic corpus as LIBSVM
+//! bbml hash      [key=val ...]        corpus -> packed b-bit signatures
+//! bbml train     [key=val ...]        hash + train + report accuracy
+//! bbml experiment <id|all> [key=val]  regenerate a paper figure/table
+//! bbml config    [key=val ...]        print the effective configuration
+//! bbml info                           runtime + artifact inventory
+//! ```
+//!
+//! Every subcommand accepts `--config FILE` plus `key=value` overrides
+//! (see [`crate::coordinator::config::RunConfig`] for keys), and scalar
+//! flags `--backend`, `--k`, `--b`, `--c` where meaningful.
+
+use std::path::Path;
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::pipeline::{hash_corpus, PipelineOptions};
+use crate::coordinator::trainer::{evaluate, evaluate_pjrt, train_signatures, Backend};
+use crate::data::synth::CorpusSampler;
+use crate::runtime::Runtime;
+
+const USAGE: &str = "\
+bbml — b-bit minwise hashing for large-scale learning (NIPS 2011 reproduction)
+
+USAGE:
+    bbml <COMMAND> [--config FILE] [key=value ...]
+
+COMMANDS:
+    generate      write the synthetic corpus to LIBSVM (out: corpus.libsvm)
+    hash          run the streaming hashing pipeline, report throughput
+    train         hash + train + evaluate (flags: --backend svm|logreg|
+                  pegasos|pjrt_logreg|pjrt_svm, --k K, --b B, --c C)
+    experiment    regenerate a figure/table: fig1..fig10, tab51, gvw,
+                  lemma1, lemma2, or 'all'
+    config        print the effective configuration
+    info          PJRT platform + artifact inventory
+    help          this message
+
+CONFIG KEYS (key=value):
+    n_docs dim vocab shingle_w mean_len topic_mix test_fraction
+    k_list b_list c_list reps threads seed out_dir artifacts
+";
+
+/// Parsed command line.
+struct Args {
+    command: String,
+    config: RunConfig,
+    /// Positional arguments after the command (e.g. experiment id).
+    positional: Vec<String>,
+    /// Scalar flags.
+    backend: Backend,
+    k: usize,
+    b: u32,
+    c: f64,
+}
+
+fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
+    let mut config = RunConfig::default();
+    let mut command = String::new();
+    let mut positional = Vec::new();
+    let mut backend = Backend::SvmDcd;
+    let (mut k, mut b, mut c) = (200usize, 8u32, 1.0f64);
+
+    let mut it = argv.iter().peekable();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--config" => {
+                let path = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+                config.load_file(Path::new(path))?;
+            }
+            "--backend" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--backend needs a value"))?;
+                backend = Backend::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown backend '{v}'"))?;
+            }
+            "--k" => {
+                k = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--k needs a usize"))?;
+            }
+            "--b" => {
+                b = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--b needs a u32"))?;
+            }
+            "--c" => {
+                c = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--c needs a f64"))?;
+            }
+            other if other.contains('=') && !command.is_empty() => {
+                config.apply_overrides(&[other.to_string()])?;
+            }
+            other if command.is_empty() => command = other.to_string(),
+            other => positional.push(other.to_string()),
+        }
+    }
+    if command.is_empty() {
+        command = "help".into();
+    }
+    Ok(Args {
+        command,
+        config,
+        positional,
+        backend,
+        k,
+        b,
+        c,
+    })
+}
+
+/// CLI entry point.
+pub fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    run_with(&argv)
+}
+
+/// Testable entry point.
+pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
+    let args = parse_args(argv)?;
+    let cfg = &args.config;
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "config" => {
+            println!("{}", cfg.render());
+            Ok(())
+        }
+        "generate" => {
+            let ds = crate::data::synth::generate_corpus(&cfg.synth_config());
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            let path = Path::new(&cfg.out_dir).join("corpus.libsvm");
+            crate::data::libsvm::write_libsvm(&ds, &path)?;
+            println!(
+                "wrote {} ({} docs, dim {}, {:.1} avg nnz, {:.1} MB raw)",
+                path.display(),
+                ds.n(),
+                ds.dim(),
+                ds.avg_nnz(),
+                ds.storage_bytes() as f64 / 1e6
+            );
+            Ok(())
+        }
+        "hash" => {
+            let sampler = CorpusSampler::new(cfg.synth_config());
+            let opt = PipelineOptions {
+                threads: cfg.threads,
+                ..Default::default()
+            };
+            let (sigs, stats) =
+                hash_corpus(&sampler, cfg.n_docs, args.k, args.b, cfg.seed, &opt);
+            println!(
+                "hashed {} docs -> {}x{} signatures (b={}) in {:.2?} \
+                 ({:.0} docs/s, {} threads)",
+                stats.docs,
+                sigs.n(),
+                sigs.k(),
+                sigs.b(),
+                stats.wall,
+                stats.docs_per_sec,
+                cfg.threads
+            );
+            println!(
+                "storage: raw nnz {} (~{:.1} MB as u64 indices) -> packed {:.2} MB \
+                 ({}x reduction)",
+                stats.input_nnz,
+                stats.input_nnz as f64 * 8.0 / 1e6,
+                stats.output_bytes as f64 / 1e6,
+                (stats.input_nnz * 8) / stats.output_bytes.max(1)
+            );
+            Ok(())
+        }
+        "train" => {
+            let ds = crate::data::synth::generate_corpus(&cfg.synth_config());
+            let (train, test) = ds.train_test_split(cfg.test_fraction, cfg.seed ^ 0x59117000);
+            let opt = PipelineOptions {
+                threads: cfg.threads,
+                ..Default::default()
+            };
+            let (sig_tr, hstats) = crate::coordinator::pipeline::hash_dataset(
+                &train, args.k, args.b, cfg.seed, &opt,
+            );
+            let (sig_te, _) = crate::coordinator::pipeline::hash_dataset(
+                &test, args.k, args.b, cfg.seed, &opt,
+            );
+            println!(
+                "hashed: {:.0} docs/s; packed train set {:.2} MB",
+                hstats.docs_per_sec,
+                hstats.output_bytes as f64 / 1e6
+            );
+            let needs_rt = matches!(args.backend, Backend::PjrtLogReg | Backend::PjrtSvm);
+            let rt = if needs_rt {
+                Some(Runtime::new(Path::new(&cfg.artifacts))?)
+            } else {
+                None
+            };
+            let out = train_signatures(
+                &sig_tr,
+                args.backend,
+                args.c,
+                cfg.seed,
+                rt.as_ref(),
+                None,
+            )?;
+            let (acc_tr, _) = evaluate(&out.model, &sig_tr);
+            let (acc_te, test_time) = evaluate(&out.model, &sig_te);
+            println!(
+                "backend {:?}: C={} k={} b={} -> train acc {:.4}, test acc {:.4} \
+                 (train {:.2?}, test {:.2?}, obj {:.3})",
+                args.backend,
+                args.c,
+                args.k,
+                args.b,
+                acc_tr,
+                acc_te,
+                out.train_time,
+                test_time,
+                out.model.objective
+            );
+            if let Some(rt) = &rt {
+                let (acc_pjrt, t) = evaluate_pjrt(&out.model, &sig_te, rt)?;
+                println!("PJRT scorer cross-check: acc {acc_pjrt:.4} ({t:.2?})");
+            }
+            Ok(())
+        }
+        "experiment" => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            crate::experiments::run(id, cfg)
+        }
+        "info" => {
+            println!("bbml {} — paper: Li et al., NIPS 2011", crate::VERSION);
+            match Runtime::new(Path::new(&cfg.artifacts)) {
+                Ok(rt) => {
+                    println!("PJRT platform: {}", rt.platform());
+                    println!("artifacts ({}):", cfg.artifacts);
+                    for a in &rt.manifest().artifacts {
+                        println!(
+                            "  {:<32} kind={:?} n={} k={} b={} dim={}",
+                            a.name, a.kind, a.n, a.k, a.b, a.dim
+                        );
+                    }
+                }
+                Err(e) => println!("runtime unavailable ({e}); run `make artifacts`"),
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_command_flags_and_overrides() {
+        let a = parse_args(&strs(&[
+            "train",
+            "--backend",
+            "logreg",
+            "--k",
+            "64",
+            "--b",
+            "4",
+            "--c",
+            "0.5",
+            "n_docs=100",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.backend, Backend::LogRegDcd);
+        assert_eq!((a.k, a.b), (64, 4));
+        assert_eq!(a.c, 0.5);
+        assert_eq!(a.config.n_docs, 100);
+    }
+
+    #[test]
+    fn parse_rejects_bad_backend() {
+        assert!(parse_args(&strs(&["train", "--backend", "nope"])).is_err());
+    }
+
+    #[test]
+    fn help_and_config_run() {
+        run_with(&strs(&["help"])).unwrap();
+        run_with(&strs(&["config", "n_docs=5"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_with(&strs(&["frobnicate"])).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Typed run configuration with layered overrides.
+//!
+//! Sources, later wins: built-in defaults → config file (`key = value`
+//! lines, `#` comments) → command-line `key=value` pairs. This hand-rolled
+//! format exists because serde/toml are unavailable offline; it covers what
+//! the experiment harness needs (scalars and comma-separated lists).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Everything a run of the system can be told.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    // ----- corpus (synthetic webspam substitute; DESIGN.md §6) -----
+    /// Number of documents.
+    pub n_docs: usize,
+    /// Shingle space size D.
+    pub dim: u64,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Shingle width w.
+    pub shingle_w: usize,
+    /// Mean document length (tokens).
+    pub mean_len: usize,
+    /// Class-topic mixing weight.
+    pub topic_mix: f64,
+    /// Held-out fraction (paper: 20%).
+    pub test_fraction: f64,
+
+    // ----- hashing -----
+    /// Signature widths k to sweep.
+    pub k_list: Vec<usize>,
+    /// Bit widths b to sweep.
+    pub b_list: Vec<u32>,
+
+    // ----- training -----
+    /// SVM/logreg penalty values C to sweep.
+    pub c_list: Vec<f64>,
+    /// Repetitions per grid point (paper: 50).
+    pub reps: usize,
+    /// Worker threads for pipeline + sweep.
+    pub threads: usize,
+
+    // ----- misc -----
+    pub seed: u64,
+    /// Output directory for CSVs.
+    pub out_dir: String,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            n_docs: 10_000,
+            dim: 1 << 24,
+            vocab: 50_000,
+            shingle_w: 3,
+            mean_len: 120,
+            topic_mix: 0.35,
+            test_fraction: 0.2,
+            k_list: vec![30, 50, 100, 150, 200, 300, 500],
+            b_list: vec![1, 2, 4, 8, 16],
+            c_list: vec![0.001, 0.01, 0.1, 0.3, 1.0, 3.0, 10.0, 100.0],
+            reps: 10,
+            threads: default_threads(),
+            seed: 20110001,
+            out_dir: "results".into(),
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// A parse failure with the offending key.
+#[derive(Debug, thiserror::Error)]
+#[error("config key '{key}': {msg}")]
+pub struct ConfigError {
+    pub key: String,
+    pub msg: String,
+}
+
+impl RunConfig {
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let err = |msg: &str| ConfigError {
+            key: key.to_string(),
+            msg: msg.to_string(),
+        };
+        fn num<T: std::str::FromStr>(v: &str) -> Option<T> {
+            v.trim().parse().ok()
+        }
+        fn list<T: std::str::FromStr>(v: &str) -> Option<Vec<T>> {
+            v.split(',')
+                .map(|t| t.trim().parse().ok())
+                .collect::<Option<Vec<T>>>()
+                .filter(|l| !l.is_empty())
+        }
+        match key {
+            "n_docs" => self.n_docs = num(value).ok_or_else(|| err("want usize"))?,
+            "dim" => self.dim = num(value).ok_or_else(|| err("want u64"))?,
+            "vocab" => self.vocab = num(value).ok_or_else(|| err("want usize"))?,
+            "shingle_w" => self.shingle_w = num(value).ok_or_else(|| err("want usize"))?,
+            "mean_len" => self.mean_len = num(value).ok_or_else(|| err("want usize"))?,
+            "topic_mix" => self.topic_mix = num(value).ok_or_else(|| err("want f64"))?,
+            "test_fraction" => {
+                self.test_fraction = num(value).ok_or_else(|| err("want f64"))?
+            }
+            "k_list" => self.k_list = list(value).ok_or_else(|| err("want usize list"))?,
+            "b_list" => self.b_list = list(value).ok_or_else(|| err("want u32 list"))?,
+            "c_list" => self.c_list = list(value).ok_or_else(|| err("want f64 list"))?,
+            "reps" => self.reps = num(value).ok_or_else(|| err("want usize"))?,
+            "threads" => self.threads = num(value).ok_or_else(|| err("want usize"))?,
+            "seed" => self.seed = num(value).ok_or_else(|| err("want u64"))?,
+            "out_dir" => self.out_dir = value.trim().to_string(),
+            "artifacts" => self.artifacts = value.trim().to_string(),
+            _ => return Err(err("unknown key")),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key = value` lines.
+    pub fn load_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{}:{}: expected key = value", path.display(), lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply a list of `key=value` CLI overrides.
+    pub fn apply_overrides(&mut self, kvs: &[String]) -> anyhow::Result<()> {
+        for kv in kvs {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override '{kv}': expected key=value"))?;
+            self.set(k, v).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Render as sorted `key = value` lines (round-trips through
+    /// `load_file`; used by `bbml config` and test fixtures).
+    pub fn render(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("n_docs", self.n_docs.to_string());
+        m.insert("dim", self.dim.to_string());
+        m.insert("vocab", self.vocab.to_string());
+        m.insert("shingle_w", self.shingle_w.to_string());
+        m.insert("mean_len", self.mean_len.to_string());
+        m.insert("topic_mix", self.topic_mix.to_string());
+        m.insert("test_fraction", self.test_fraction.to_string());
+        m.insert(
+            "k_list",
+            self.k_list.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","),
+        );
+        m.insert(
+            "b_list",
+            self.b_list.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","),
+        );
+        m.insert(
+            "c_list",
+            self.c_list.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","),
+        );
+        m.insert("reps", self.reps.to_string());
+        m.insert("threads", self.threads.to_string());
+        m.insert("seed", self.seed.to_string());
+        m.insert("out_dir", self.out_dir.clone());
+        m.insert("artifacts", self.artifacts.clone());
+        m.iter()
+            .map(|(k, v)| format!("{k} = {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// The synthetic-corpus slice of this config.
+    pub fn synth_config(&self) -> crate::data::synth::SynthConfig {
+        crate::data::synth::SynthConfig {
+            n_docs: self.n_docs,
+            dim: self.dim,
+            vocab: self.vocab,
+            w: self.shingle_w,
+            mean_len: self.mean_len,
+            topic_mix: self.topic_mix,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = RunConfig::default();
+        c.apply_overrides(&[
+            "n_docs=500".into(),
+            "b_list=4,8".into(),
+            "c_list=0.1,1".into(),
+            "out_dir=/tmp/x".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.n_docs, 500);
+        assert_eq!(c.b_list, vec![4, 8]);
+        assert_eq!(c.c_list, vec![0.1, 1.0]);
+        assert_eq!(c.out_dir, "/tmp/x");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("n_docs", "not-a-number").is_err());
+        assert!(c.apply_overrides(&["no_equals_sign".into()]).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_through_file() {
+        let mut a = RunConfig::default();
+        a.set("n_docs", "1234").unwrap();
+        a.set("b_list", "2,8,16").unwrap();
+        let path = std::env::temp_dir().join("bbml_cfg_test.conf");
+        std::fs::write(&path, a.render()).unwrap();
+        let mut b = RunConfig::default();
+        b.load_file(&path).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_with_comments_parses() {
+        let path = std::env::temp_dir().join("bbml_cfg_test2.conf");
+        std::fs::write(&path, "# comment\n\nn_docs = 42\nseed=7\n").unwrap();
+        let mut c = RunConfig::default();
+        c.load_file(&path).unwrap();
+        assert_eq!(c.n_docs, 42);
+        assert_eq!(c.seed, 7);
+        std::fs::remove_file(&path).ok();
+    }
+}

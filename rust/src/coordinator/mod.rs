@@ -1,0 +1,28 @@
+//! The L3 coordinator: the system around the algorithm.
+//!
+//! The paper's contribution is a *data-reduction pipeline for learning*, so
+//! the coordinator is organized as:
+//!
+//! * [`config`] — typed experiment/run configuration with file + `KEY=VAL`
+//!   override parsing (no external config crates offline).
+//! * [`pipeline`] — the sharded streaming hashing pipeline: worker threads
+//!   turn documents into packed b-bit signatures under bounded-channel
+//!   backpressure, with order-preserving reassembly and throughput metrics.
+//!   This is the paper's §9 preprocessing pass ("trivially parallelizable",
+//!   "one scan of the data").
+//! * [`trainer`] — training orchestration over a signature store: pure-rust
+//!   solvers (LIBLINEAR-style) or the AOT-compiled PJRT step (JAX/Pallas),
+//!   plus timed evaluation.
+//! * [`sweep`] — the (b, k, C, repetition) grid driver behind Figures 1–9,
+//!   parallelized across worker threads.
+//! * [`report`] — CSV + console-table emission for `results/`.
+
+pub mod config;
+pub mod pipeline;
+pub mod report;
+pub mod sweep;
+pub mod trainer;
+
+pub use config::RunConfig;
+pub use pipeline::{hash_corpus, hash_dataset, PipelineOptions, PipelineStats};
+pub use trainer::{train_signatures, Backend, TrainOutcome};

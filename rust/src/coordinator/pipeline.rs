@@ -1,0 +1,303 @@
+//! The sharded streaming hashing pipeline (paper §9's preprocessing pass).
+//!
+//! Documents flow   producer → [bounded channel] → hash workers →
+//! [bounded channel] → collector   with explicit backpressure: when the
+//! collector lags, the bounded channels block the producer, keeping memory
+//! flat regardless of corpus size (the paper's "one scan of the data,
+//! trivially parallelizable" claim, realized).
+//!
+//! Work is sharded in contiguous chunks tagged with sequence numbers; the
+//! collector reassembles in order, so the output is **bit-identical to the
+//! single-threaded run** for any thread count (tested).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::sparse::SparseBinaryDataset;
+use crate::data::synth::CorpusSampler;
+use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::minwise::MinwiseHasher;
+
+/// Pipeline tuning knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineOptions {
+    /// Hash worker threads.
+    pub threads: usize,
+    /// Documents per work chunk.
+    pub chunk: usize,
+    /// Bounded-channel capacity, in chunks (the backpressure window).
+    pub queue: usize,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            chunk: 64,
+            queue: 8,
+        }
+    }
+}
+
+/// Throughput metrics from one pipeline run.
+#[derive(Clone, Debug)]
+pub struct PipelineStats {
+    pub docs: usize,
+    pub wall: std::time::Duration,
+    pub docs_per_sec: f64,
+    /// Packed output bytes (the paper's n·b·k/8).
+    pub output_bytes: usize,
+    /// Raw input non-zeros processed.
+    pub input_nnz: usize,
+}
+
+enum Shard {
+    Rows(usize, BbitSignatureMatrix, usize), // (seq, signatures, nnz)
+}
+
+/// Hash every row of a dataset into a packed b-bit signature matrix using
+/// `opt.threads` workers. Deterministic in content for any thread count.
+pub fn hash_dataset(
+    ds: &SparseBinaryDataset,
+    k: usize,
+    b: u32,
+    seed: u64,
+    opt: &PipelineOptions,
+) -> (BbitSignatureMatrix, PipelineStats) {
+    let t0 = Instant::now();
+    let n = ds.n();
+    let threads = opt.threads.clamp(1, 64);
+    let chunk = opt.chunk.max(1);
+    let n_chunks = n.div_ceil(chunk.max(1)).max(1);
+
+    let (out_tx, out_rx) = sync_channel::<Shard>(opt.queue.max(1));
+    let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+    let result = std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let out_tx = out_tx.clone();
+            let next = next.clone();
+            scope.spawn(move || {
+                // Each worker builds its own hasher (identical: same seed),
+                // so signatures do not depend on which worker ran the chunk.
+                let hasher = MinwiseHasher::new(ds.dim(), k, seed);
+                let mut sig_buf = Vec::new();
+                loop {
+                    let seq = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if seq >= n_chunks {
+                        break;
+                    }
+                    let lo = seq * chunk;
+                    let hi = (lo + chunk).min(n);
+                    let mut shard = BbitSignatureMatrix::with_capacity(k, b, hi - lo);
+                    let mut nnz = 0usize;
+                    for i in lo..hi {
+                        let row = ds.row(i);
+                        nnz += row.len();
+                        let full = hasher.signature_into(row, &mut sig_buf);
+                        shard.push_full_row(&full, ds.label(i));
+                        sig_buf = full; // reclaim the buffer
+                    }
+                    if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
+                        break; // collector gone
+                    }
+                }
+            });
+        }
+        drop(out_tx);
+        collect(out_rx, n_chunks, k, b)
+    });
+
+    let (matrix, input_nnz) = result;
+    let wall = t0.elapsed();
+    let stats = PipelineStats {
+        docs: n,
+        wall,
+        docs_per_sec: n as f64 / wall.as_secs_f64().max(1e-9),
+        output_bytes: matrix.storage_bytes(),
+        input_nnz,
+    };
+    (matrix, stats)
+}
+
+/// Generate + shingle + hash a synthetic corpus end-to-end (documents never
+/// materialize as a full dataset — the true streaming path).
+pub fn hash_corpus(
+    sampler: &CorpusSampler,
+    n_docs: usize,
+    k: usize,
+    b: u32,
+    hash_seed: u64,
+    opt: &PipelineOptions,
+) -> (BbitSignatureMatrix, PipelineStats) {
+    let t0 = Instant::now();
+    let threads = opt.threads.clamp(1, 64);
+    let chunk = opt.chunk.max(1);
+    let n_chunks = n_docs.div_ceil(chunk).max(1);
+    let dim = sampler.config().dim;
+
+    let (out_tx, out_rx) = sync_channel::<Shard>(opt.queue.max(1));
+    let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+    let result = std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let out_tx = out_tx.clone();
+            let next = next.clone();
+            scope.spawn(move || {
+                let hasher = MinwiseHasher::new(dim, k, hash_seed);
+                let mut sig_buf = Vec::new();
+                loop {
+                    let seq = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if seq >= n_chunks {
+                        break;
+                    }
+                    let lo = seq * chunk;
+                    let hi = (lo + chunk).min(n_docs);
+                    let mut shard = BbitSignatureMatrix::with_capacity(k, b, hi - lo);
+                    let mut nnz = 0usize;
+                    for doc_id in lo..hi {
+                        let (vec, label) = sampler.generate(doc_id as u64);
+                        nnz += vec.nnz();
+                        let full = hasher.signature_into(vec.indices(), &mut sig_buf);
+                        shard.push_full_row(&full, label);
+                        sig_buf = full;
+                    }
+                    if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(out_tx);
+        collect(out_rx, n_chunks, k, b)
+    });
+
+    let (matrix, input_nnz) = result;
+    let wall = t0.elapsed();
+    let stats = PipelineStats {
+        docs: n_docs,
+        wall,
+        docs_per_sec: n_docs as f64 / wall.as_secs_f64().max(1e-9),
+        output_bytes: matrix.storage_bytes(),
+        input_nnz,
+    };
+    (matrix, stats)
+}
+
+/// Reassemble shards in sequence order.
+fn collect(
+    rx: Receiver<Shard>,
+    n_chunks: usize,
+    k: usize,
+    b: u32,
+) -> (BbitSignatureMatrix, usize) {
+    let mut pending: std::collections::BTreeMap<usize, (BbitSignatureMatrix, usize)> =
+        std::collections::BTreeMap::new();
+    let mut out = BbitSignatureMatrix::new(k, b);
+    let mut nnz_total = 0usize;
+    let mut want = 0usize;
+    for shard in rx {
+        let Shard::Rows(seq, m, nnz) = shard;
+        pending.insert(seq, (m, nnz));
+        while let Some((m, nnz)) = pending.remove(&want) {
+            out.append(&m);
+            nnz_total += nnz;
+            want += 1;
+        }
+    }
+    assert_eq!(want, n_chunks, "pipeline lost shards: got {want}/{n_chunks}");
+    (out, nnz_total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, SynthConfig};
+
+    fn cfg() -> SynthConfig {
+        SynthConfig {
+            n_docs: 300,
+            dim: 1 << 20,
+            vocab: 5_000,
+            topic_size: 100,
+            mean_len: 50,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sharded_output_equals_single_threaded() {
+        let ds = generate_corpus(&cfg());
+        let (m1, _) = hash_dataset(
+            &ds,
+            16,
+            8,
+            7,
+            &PipelineOptions {
+                threads: 1,
+                chunk: 300,
+                queue: 2,
+            },
+        );
+        let (m8, _) = hash_dataset(
+            &ds,
+            16,
+            8,
+            7,
+            &PipelineOptions {
+                threads: 8,
+                chunk: 13, // deliberately ragged chunking
+                queue: 3,
+            },
+        );
+        assert_eq!(m1.n(), m8.n());
+        for i in 0..m1.n() {
+            assert_eq!(m1.row(i), m8.row(i), "row {i}");
+            assert_eq!(m1.label(i), m8.label(i));
+        }
+    }
+
+    #[test]
+    fn corpus_streaming_matches_dataset_path() {
+        let c = cfg();
+        let ds = generate_corpus(&c);
+        let sampler = CorpusSampler::new(c.clone());
+        let (via_ds, _) = hash_dataset(&ds, 8, 4, 3, &PipelineOptions::default());
+        let (via_stream, stats) =
+            hash_corpus(&sampler, c.n_docs, 8, 4, 3, &PipelineOptions::default());
+        assert_eq!(via_ds.n(), via_stream.n());
+        for i in 0..via_ds.n() {
+            assert_eq!(via_ds.row(i), via_stream.row(i), "row {i}");
+        }
+        assert_eq!(stats.docs, c.n_docs);
+        assert!(stats.docs_per_sec > 0.0);
+        assert!(stats.input_nnz > 0);
+    }
+
+    #[test]
+    fn output_bytes_match_nbk_bits() {
+        let ds = generate_corpus(&cfg());
+        let (m, stats) = hash_dataset(&ds, 32, 8, 1, &PipelineOptions::default());
+        let expect = (m.n() * 32 * 8).div_ceil(8);
+        assert!(stats.output_bytes >= expect && stats.output_bytes <= expect + 8);
+    }
+
+    #[test]
+    fn tiny_queue_still_completes() {
+        // Backpressure at queue=1 must not deadlock.
+        let ds = generate_corpus(&cfg());
+        let (m, _) = hash_dataset(
+            &ds,
+            8,
+            2,
+            9,
+            &PipelineOptions {
+                threads: 4,
+                chunk: 7,
+                queue: 1,
+            },
+        );
+        assert_eq!(m.n(), ds.n());
+    }
+}

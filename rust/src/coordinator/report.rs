@@ -1,0 +1,129 @@
+//! Result emission: CSV files under `results/` plus aligned console tables.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::sweep::{AggRecord, SweepRecord};
+
+/// Write raw sweep records as CSV.
+pub fn write_sweep_csv(records: &[SweepRecord], path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "b,k,c,rep,accuracy,train_secs,test_secs,hash_secs")?;
+    for r in records {
+        writeln!(
+            f,
+            "{},{},{},{},{:.6},{:.6},{:.6},{:.6}",
+            r.b, r.k, r.c, r.rep, r.accuracy, r.train_secs, r.test_secs, r.hash_secs
+        )?;
+    }
+    Ok(())
+}
+
+/// Write aggregated records as CSV.
+pub fn write_agg_csv(records: &[AggRecord], path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(
+        f,
+        "b,k,c,reps,acc_mean,acc_std,train_secs_mean,test_secs_mean"
+    )?;
+    for r in records {
+        writeln!(
+            f,
+            "{},{},{},{},{:.6},{:.6},{:.6},{:.6}",
+            r.b, r.k, r.c, r.reps, r.acc_mean, r.acc_std, r.train_secs_mean, r.test_secs_mean
+        )?;
+    }
+    Ok(())
+}
+
+/// Write any rows as CSV with a custom header (theory plots etc.).
+pub fn write_rows_csv(header: &str, rows: &[Vec<f64>], path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        let line = row
+            .iter()
+            .map(|v| {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{}", *v as i64)
+                } else {
+                    format!("{v:.6}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Console table: aligned columns from header + stringified rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_smoke() {
+        let recs = vec![SweepRecord {
+            b: 8,
+            k: 200,
+            c: 1.0,
+            rep: 0,
+            accuracy: 0.95,
+            train_secs: 1.5,
+            test_secs: 0.1,
+            hash_secs: 2.0,
+        }];
+        let path = std::env::temp_dir().join("bbml_report_test.csv");
+        write_sweep_csv(&recs, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("b,k,c,rep"));
+        assert!(text.contains("8,200,1,0,0.95"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rows_csv_formats_ints_and_floats() {
+        let path = std::env::temp_dir().join("bbml_rows_test.csv");
+        write_rows_csv("a,b", &[vec![1.0, 0.5]], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("1,0.500000"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,296 @@
+//! The (b, k, C, repetition) grid driver behind Figures 1–9.
+//!
+//! Each grid cell hashes the corpus with a repetition-specific seed (the
+//! paper repeats every experiment 50× because the method is randomized),
+//! trains with the requested backend, and measures test accuracy plus
+//! train/test wall-clock. Cells are independent, so the sweep fans out
+//! over a worker-thread pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use crate::coordinator::trainer::{evaluate, train_signatures, Backend};
+use crate::data::sparse::SparseBinaryDataset;
+
+/// One grid cell's result.
+#[derive(Clone, Debug)]
+pub struct SweepRecord {
+    pub b: u32,
+    pub k: usize,
+    pub c: f64,
+    pub rep: usize,
+    pub accuracy: f64,
+    pub train_secs: f64,
+    pub test_secs: f64,
+    pub hash_secs: f64,
+}
+
+/// Grid specification.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub b_list: Vec<u32>,
+    pub k_list: Vec<usize>,
+    pub c_list: Vec<f64>,
+    pub reps: usize,
+    pub backend: Backend,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Run the sweep over a fixed train/test split.
+///
+/// Signature hashing is shared across the C-dimension (the paper's point
+/// that the hashed data are computed once and reused for all
+/// cross-validation runs — §9), so the unit of parallel work is a
+/// (b, k, rep) triple.
+pub fn run_sweep(
+    train: &SparseBinaryDataset,
+    test: &SparseBinaryDataset,
+    spec: &SweepSpec,
+) -> Vec<SweepRecord> {
+    // Work items: all (b, k, rep).
+    let mut items = Vec::new();
+    for &b in &spec.b_list {
+        for &k in &spec.k_list {
+            for rep in 0..spec.reps {
+                items.push((b, k, rep));
+            }
+        }
+    }
+    let next = AtomicUsize::new(0);
+    let records = Mutex::new(Vec::<SweepRecord>::new());
+    let threads = spec.threads.clamp(1, 64);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                // Single-threaded hashing inside each worker: the sweep
+                // itself is the parallel dimension.
+                let pipe_opt = PipelineOptions {
+                    threads: 1,
+                    ..Default::default()
+                };
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= items.len() {
+                        break;
+                    }
+                    let (b, k, rep) = items[idx];
+                    let hash_seed = spec
+                        .seed
+                        .wrapping_add(rep as u64)
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ ((b as u64) << 32 | k as u64);
+                    let t_hash = std::time::Instant::now();
+                    let (sig_train, _) = hash_dataset(train, k, b, hash_seed, &pipe_opt);
+                    let (sig_test, _) = hash_dataset(test, k, b, hash_seed, &pipe_opt);
+                    let hash_secs = t_hash.elapsed().as_secs_f64();
+                    for &c in &spec.c_list {
+                        let out = train_signatures(
+                            &sig_train,
+                            spec.backend,
+                            c,
+                            spec.seed ^ rep as u64,
+                            None,
+                            None,
+                        )
+                        .expect("rust backends cannot fail");
+                        let (acc, test_time) = evaluate(&out.model, &sig_test);
+                        records.lock().unwrap().push(SweepRecord {
+                            b,
+                            k,
+                            c,
+                            rep,
+                            accuracy: acc,
+                            train_secs: out.train_time.as_secs_f64(),
+                            test_secs: test_time.as_secs_f64(),
+                            hash_secs,
+                        });
+                    }
+                }
+            });
+        }
+    });
+
+    let mut out = records.into_inner().unwrap();
+    out.sort_by(|a, b| {
+        (a.b, a.k, a.rep)
+            .cmp(&(b.b, b.k, b.rep))
+            .then(a.c.partial_cmp(&b.c).unwrap())
+    });
+    out
+}
+
+/// Baseline: train/test on the *original* (un-hashed) data for each C —
+/// the dashed red curves in every figure.
+pub fn run_baseline(
+    train: &SparseBinaryDataset,
+    test: &SparseBinaryDataset,
+    c_list: &[f64],
+    backend: Backend,
+    seed: u64,
+) -> Vec<SweepRecord> {
+    use crate::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
+    use crate::solvers::logreg::{train_logreg, LogRegOptions};
+    use crate::solvers::sgd::{train_pegasos, PegasosOptions};
+
+    let mut out = Vec::new();
+    for &c in c_list {
+        let t0 = std::time::Instant::now();
+        let model = match backend {
+            Backend::SvmDcd | Backend::PjrtSvm => train_svm(
+                train,
+                &SvmOptions {
+                    c,
+                    loss: SvmLoss::L2,
+                    seed,
+                    ..Default::default()
+                },
+            ),
+            Backend::LogRegDcd | Backend::PjrtLogReg => train_logreg(
+                train,
+                &LogRegOptions {
+                    c,
+                    seed,
+                    ..Default::default()
+                },
+            ),
+            Backend::Pegasos => train_pegasos(
+                train,
+                &PegasosOptions {
+                    c,
+                    steps: 50 * train.n().max(1),
+                    seed,
+                    ..Default::default()
+                },
+            ),
+        };
+        let train_secs = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let acc = model.accuracy(test);
+        out.push(SweepRecord {
+            b: 0, // marker: original data
+            k: 0,
+            c,
+            rep: 0,
+            accuracy: acc,
+            train_secs,
+            test_secs: t1.elapsed().as_secs_f64(),
+            hash_secs: 0.0,
+        });
+    }
+    out
+}
+
+/// Aggregate repetitions: (mean, std) accuracy per (b, k, C).
+pub fn aggregate(records: &[SweepRecord]) -> Vec<AggRecord> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(u32, usize, u64), Vec<&SweepRecord>> = BTreeMap::new();
+    for r in records {
+        groups
+            .entry((r.b, r.k, r.c.to_bits()))
+            .or_default()
+            .push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((b, k, cbits), rs)| {
+            let accs: Vec<f64> = rs.iter().map(|r| r.accuracy).collect();
+            let (acc_mean, acc_std) = crate::solvers::metrics::mean_std(&accs);
+            let t_train: Vec<f64> = rs.iter().map(|r| r.train_secs).collect();
+            let t_test: Vec<f64> = rs.iter().map(|r| r.test_secs).collect();
+            AggRecord {
+                b,
+                k,
+                c: f64::from_bits(cbits),
+                reps: rs.len(),
+                acc_mean,
+                acc_std,
+                train_secs_mean: crate::solvers::metrics::mean_std(&t_train).0,
+                test_secs_mean: crate::solvers::metrics::mean_std(&t_test).0,
+            }
+        })
+        .collect()
+}
+
+/// Aggregated (over repetitions) grid cell.
+#[derive(Clone, Debug)]
+pub struct AggRecord {
+    pub b: u32,
+    pub k: usize,
+    pub c: f64,
+    pub reps: usize,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub train_secs_mean: f64,
+    pub test_secs_mean: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_corpus, SynthConfig};
+
+    #[test]
+    fn small_sweep_produces_full_grid_sorted() {
+        let cfg = SynthConfig {
+            n_docs: 150,
+            dim: 1 << 18,
+            vocab: 3_000,
+            topic_size: 80,
+            mean_len: 40,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (train, test) = ds.train_test_split(0.3, 1);
+        let spec = SweepSpec {
+            b_list: vec![2, 8],
+            k_list: vec![16, 32],
+            c_list: vec![0.1, 1.0],
+            reps: 2,
+            backend: Backend::SvmDcd,
+            threads: 4,
+            seed: 9,
+        };
+        let recs = run_sweep(&train, &test, &spec);
+        assert_eq!(recs.len(), 2 * 2 * 2 * 2);
+        // Aggregation collapses reps.
+        let agg = aggregate(&recs);
+        assert_eq!(agg.len(), 2 * 2 * 2);
+        assert!(agg.iter().all(|a| a.reps == 2));
+        // Larger (b=8, k=32) should be at least as accurate as (b=2, k=16).
+        let acc_big = agg
+            .iter()
+            .filter(|a| a.b == 8 && a.k == 32)
+            .map(|a| a.acc_mean)
+            .fold(0.0, f64::max);
+        let acc_small = agg
+            .iter()
+            .filter(|a| a.b == 2 && a.k == 16)
+            .map(|a| a.acc_mean)
+            .fold(0.0, f64::max);
+        assert!(
+            acc_big + 0.05 >= acc_small,
+            "b=8/k=32 {acc_big} vs b=2/k=16 {acc_small}"
+        );
+    }
+
+    #[test]
+    fn baseline_runs_for_each_c() {
+        let cfg = SynthConfig {
+            n_docs: 100,
+            dim: 1 << 16,
+            vocab: 2_000,
+            topic_size: 50,
+            mean_len: 30,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (train, test) = ds.train_test_split(0.3, 2);
+        let recs = run_baseline(&train, &test, &[0.1, 1.0], Backend::SvmDcd, 3);
+        assert_eq!(recs.len(), 2);
+        assert!(recs.iter().all(|r| r.b == 0 && r.accuracy > 0.4));
+    }
+}

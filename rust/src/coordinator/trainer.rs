@@ -1,0 +1,265 @@
+//! Training orchestration over a signature store.
+//!
+//! One entry point, three interchangeable backends:
+//!
+//! * [`Backend::SvmDcd`] / [`Backend::LogRegDcd`] — the pure-rust
+//!   LIBLINEAR-style solvers over the *virtual* Theorem-2 expansion
+//!   ([`ExpandedView`]); this is the configuration the paper's §5.2/§5.3
+//!   figures measure.
+//! * [`Backend::Pegasos`] — SGD baseline.
+//! * [`Backend::PjrtLogReg`] / [`Backend::PjrtSvm`] — minibatch gradient
+//!   descent where every step executes the AOT-compiled JAX graph (with
+//!   the L1 Pallas scoring kernel inside) through the PJRT runtime; the
+//!   rust side only shuffles, pads and streams batches.
+
+use std::time::{Duration, Instant};
+
+use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::rng::Xoshiro256;
+use crate::runtime::{ArtifactKind, Runtime};
+use crate::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
+use crate::solvers::logreg::{train_logreg, LogRegOptions};
+use crate::solvers::sgd::{train_pegasos, PegasosOptions};
+use crate::solvers::{ExpandedView, LinearModel};
+
+/// Which trainer to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    SvmDcd,
+    LogRegDcd,
+    Pegasos,
+    PjrtLogReg,
+    PjrtSvm,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "svm" | "svm_dcd" => Some(Self::SvmDcd),
+            "logreg" | "logreg_dcd" => Some(Self::LogRegDcd),
+            "pegasos" | "sgd" => Some(Self::Pegasos),
+            "pjrt_logreg" => Some(Self::PjrtLogReg),
+            "pjrt_svm" => Some(Self::PjrtSvm),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a training run reports.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub model: LinearModel,
+    pub train_time: Duration,
+    pub backend: Backend,
+}
+
+/// PJRT minibatch-training options.
+#[derive(Clone, Debug)]
+pub struct PjrtTrainOptions {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Per-epoch multiplicative lr decay.
+    pub lr_decay: f32,
+    pub seed: u64,
+}
+
+impl Default for PjrtTrainOptions {
+    fn default() -> Self {
+        Self {
+            epochs: 20,
+            lr: 1e-3,
+            lr_decay: 0.95,
+            seed: 1,
+        }
+    }
+}
+
+/// Train a linear model on packed signatures with the chosen backend.
+///
+/// `runtime` is only consulted by the PJRT backends (pass `None` for the
+/// pure-rust ones).
+pub fn train_signatures(
+    sigs: &BbitSignatureMatrix,
+    backend: Backend,
+    c: f64,
+    seed: u64,
+    runtime: Option<&Runtime>,
+    pjrt_opt: Option<&PjrtTrainOptions>,
+) -> anyhow::Result<TrainOutcome> {
+    let view = ExpandedView::new(sigs);
+    let t0 = Instant::now();
+    let model = match backend {
+        Backend::SvmDcd => train_svm(
+            &view,
+            &SvmOptions {
+                c,
+                loss: SvmLoss::L2,
+                seed,
+                ..Default::default()
+            },
+        ),
+        Backend::LogRegDcd => train_logreg(
+            &view,
+            &LogRegOptions {
+                c,
+                seed,
+                ..Default::default()
+            },
+        ),
+        Backend::Pegasos => train_pegasos(
+            &view,
+            &PegasosOptions {
+                c,
+                steps: 200 * sigs.n().max(1),
+                seed,
+                ..Default::default()
+            },
+        ),
+        Backend::PjrtLogReg | Backend::PjrtSvm => {
+            let rt = runtime
+                .ok_or_else(|| anyhow::anyhow!("PJRT backend requires a Runtime"))?;
+            let kind = if backend == Backend::PjrtLogReg {
+                ArtifactKind::LogregStep
+            } else {
+                ArtifactKind::SvmStep
+            };
+            let default_opt = PjrtTrainOptions {
+                seed,
+                ..Default::default()
+            };
+            let opt = pjrt_opt.unwrap_or(&default_opt);
+            train_pjrt(sigs, kind, c, rt, opt)?
+        }
+    };
+    Ok(TrainOutcome {
+        model,
+        train_time: t0.elapsed(),
+        backend,
+    })
+}
+
+/// Minibatch gradient descent through the compiled train-step artifact.
+fn train_pjrt(
+    sigs: &BbitSignatureMatrix,
+    kind: ArtifactKind,
+    c: f64,
+    rt: &Runtime,
+    opt: &PjrtTrainOptions,
+) -> anyhow::Result<LinearModel> {
+    let meta = rt
+        .manifest()
+        .find(kind, sigs.k(), sigs.b(), usize::MAX)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no {kind:?} artifact for k={}, b={} — extend python/compile/aot.py",
+                sigs.k(),
+                sigs.b()
+            )
+        })?
+        .clone();
+    let batch = meta.n;
+    let dim = meta.dim;
+    let mut w = vec![0.0f32; dim];
+    let mut rng = Xoshiro256::seed_from_u64(opt.seed);
+    let mut order: Vec<usize> = (0..sigs.n()).collect();
+    // The compiled graph applies `C·Σ_batch(...)` per step; scale the
+    // learning rate by 1/batch to keep step sizes batch-size-invariant.
+    let mut lr = opt.lr / batch as f32;
+    let mut last_loss = f64::INFINITY;
+    let mut steps = 0usize;
+    for _epoch in 0..opt.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(batch) {
+            let out = rt.train_step(kind, sigs, chunk, &w, c as f32, lr)?;
+            w = out.w;
+            last_loss = out.loss;
+            steps += 1;
+        }
+        lr *= opt.lr_decay;
+    }
+    Ok(LinearModel {
+        w,
+        iters: steps,
+        objective: last_loss,
+    })
+}
+
+/// Timed evaluation: accuracy + wall-clock of scoring every test row
+/// (the paper's Figure 4 "testing time" is measured exactly here).
+pub fn evaluate(
+    model: &LinearModel,
+    sigs: &BbitSignatureMatrix,
+) -> (f64, Duration) {
+    let view = ExpandedView::new(sigs);
+    let t0 = Instant::now();
+    let acc = model.accuracy(&view);
+    (acc, t0.elapsed())
+}
+
+/// Same evaluation but scoring through the PJRT predict artifact (L1
+/// kernel on the inference path) — used to cross-check the two scorers.
+pub fn evaluate_pjrt(
+    model: &LinearModel,
+    sigs: &BbitSignatureMatrix,
+    rt: &Runtime,
+) -> anyhow::Result<(f64, Duration)> {
+    let t0 = Instant::now();
+    let scores = rt.predict_scores(sigs, &model.w)?;
+    let correct = scores
+        .iter()
+        .zip(0..sigs.n())
+        .filter(|(s, i)| (**s >= 0.0) == (sigs.label(*i) > 0.0))
+        .count();
+    Ok((correct as f64 / sigs.n() as f64, t0.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{hash_dataset, PipelineOptions};
+    use crate::data::synth::{generate_corpus, SynthConfig};
+
+    fn sigs() -> (BbitSignatureMatrix, BbitSignatureMatrix) {
+        let cfg = SynthConfig {
+            n_docs: 400,
+            dim: 1 << 20,
+            vocab: 5_000,
+            topic_size: 100,
+            mean_len: 60,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (train, test) = ds.train_test_split(0.25, 5);
+        let opt = PipelineOptions::default();
+        (
+            hash_dataset(&train, 64, 8, 11, &opt).0,
+            hash_dataset(&test, 64, 8, 11, &opt).0,
+        )
+    }
+
+    #[test]
+    fn rust_backends_learn_from_signatures() {
+        let (train, test) = sigs();
+        for backend in [Backend::SvmDcd, Backend::LogRegDcd, Backend::Pegasos] {
+            let out = train_signatures(&train, backend, 1.0, 3, None, None).unwrap();
+            let (acc, _) = evaluate(&out.model, &test);
+            assert!(acc > 0.8, "{backend:?}: test acc {acc}");
+        }
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("svm"), Some(Backend::SvmDcd));
+        assert_eq!(Backend::parse("logreg"), Some(Backend::LogRegDcd));
+        assert_eq!(Backend::parse("pjrt_logreg"), Some(Backend::PjrtLogReg));
+        assert_eq!(Backend::parse("nope"), None);
+    }
+
+    #[test]
+    fn pjrt_backend_without_runtime_errors() {
+        let (train, _) = sigs();
+        let err = train_signatures(&train, Backend::PjrtLogReg, 1.0, 1, None, None);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! LIBSVM text format I/O (the interchange format of the paper's webspam
+//! experiments), with transparent gzip support.
+//!
+//! Format, one example per line:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based in files and converted to 0-based internally. The
+//! paper's data are binary, so on read any non-zero value becomes a set
+//! member, and on write every member is emitted as `idx:1`.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+
+use super::sparse::{SparseBinaryDataset, SparseBinaryVec};
+
+/// Errors from LIBSVM parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+fn parse_line(line: &str, lineno: usize) -> Result<Option<(f32, Vec<u64>)>, LibsvmError> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+        line: lineno,
+        msg: "missing label".into(),
+    })?;
+    let label: f32 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+        line: lineno,
+        msg: format!("bad label '{label_tok}'"),
+    })?;
+    let label = if label > 0.0 { 1.0 } else { -1.0 };
+    let mut idxs = Vec::new();
+    for tok in parts {
+        let (i_str, v_str) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad feature token '{tok}'"),
+        })?;
+        let idx: u64 = i_str.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad index '{i_str}'"),
+        })?;
+        if idx == 0 {
+            return Err(LibsvmError::Parse {
+                line: lineno,
+                msg: "LIBSVM indices are 1-based; got 0".into(),
+            });
+        }
+        let val: f64 = v_str.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad value '{v_str}'"),
+        })?;
+        if val != 0.0 {
+            idxs.push(idx - 1); // 0-based internally
+        }
+    }
+    Ok(Some((label, idxs)))
+}
+
+/// Read a LIBSVM file (gzip if the path ends in `.gz`). `dim` of the result
+/// is `max_index + 1` unless `dim_hint` is larger.
+pub fn read_libsvm(path: &Path, dim_hint: Option<u64>) -> Result<SparseBinaryDataset, LibsvmError> {
+    let file = File::open(path)?;
+    let reader: Box<dyn BufRead> = if path.extension().is_some_and(|e| e == "gz") {
+        Box::new(BufReader::new(GzDecoder::new(file)))
+    } else {
+        Box::new(BufReader::new(file))
+    };
+    read_libsvm_from(reader, dim_hint)
+}
+
+/// Read from any buffered reader (for tests and in-memory use).
+pub fn read_libsvm_from<R: BufRead>(
+    reader: R,
+    dim_hint: Option<u64>,
+) -> Result<SparseBinaryDataset, LibsvmError> {
+    let mut rows: Vec<(f32, Vec<u64>)> = Vec::new();
+    let mut max_idx: u64 = 0;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if let Some((label, idxs)) = parse_line(&line, lineno + 1)? {
+            if let Some(&m) = idxs.iter().max() {
+                max_idx = max_idx.max(m);
+            }
+            rows.push((label, idxs));
+        }
+    }
+    let dim = dim_hint.unwrap_or(0).max(max_idx + 1);
+    let mut ds = SparseBinaryDataset::new(dim);
+    for (label, idxs) in rows {
+        ds.push(SparseBinaryVec::from_indices(idxs), label);
+    }
+    Ok(ds)
+}
+
+/// Write a dataset in LIBSVM format (gzip if the path ends in `.gz`).
+pub fn write_libsvm(ds: &SparseBinaryDataset, path: &Path) -> Result<(), LibsvmError> {
+    let file = File::create(path)?;
+    if path.extension().is_some_and(|e| e == "gz") {
+        let mut w = BufWriter::new(GzEncoder::new(file, flate2::Compression::fast()));
+        write_libsvm_to(ds, &mut w)?;
+        w.flush()?;
+    } else {
+        let mut w = BufWriter::new(file);
+        write_libsvm_to(ds, &mut w)?;
+        w.flush()?;
+    }
+    Ok(())
+}
+
+fn write_libsvm_to<W: Write>(ds: &SparseBinaryDataset, w: &mut W) -> io::Result<()> {
+    for (row, label) in ds.iter() {
+        if label > 0.0 {
+            write!(w, "+1")?;
+        } else {
+            write!(w, "-1")?;
+        }
+        for &idx in row {
+            write!(w, " {}:1", idx + 1)?; // 1-based on disk
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic_lines() {
+        let text = "+1 3:1 7:1 10:1\n-1 1:1\n\n# comment\n+1 2:0 4:1\n";
+        let ds = read_libsvm_from(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.row(0), &[2, 6, 9]); // 0-based
+        assert_eq!(ds.label(0), 1.0);
+        assert_eq!(ds.row(1), &[0]);
+        assert_eq!(ds.label(1), -1.0);
+        // zero value dropped (binary semantics)
+        assert_eq!(ds.row(2), &[3]);
+        assert_eq!(ds.dim(), 10);
+    }
+
+    #[test]
+    fn dim_hint_respected() {
+        let ds = read_libsvm_from(Cursor::new("+1 1:1\n"), Some(1000)).unwrap();
+        assert_eq!(ds.dim(), 1000);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let err = read_libsvm_from(Cursor::new("+1 0:1\n"), None).unwrap_err();
+        assert!(matches!(err, LibsvmError::Parse { line: 1, .. }));
+    }
+
+    #[test]
+    fn rejects_malformed_token() {
+        assert!(read_libsvm_from(Cursor::new("+1 3-1\n"), None).is_err());
+        assert!(read_libsvm_from(Cursor::new("abc 3:1\n"), None).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let mut ds = SparseBinaryDataset::new(64);
+        ds.push(SparseBinaryVec::from_indices(vec![0, 5, 63]), 1.0);
+        ds.push(SparseBinaryVec::from_indices(vec![7]), -1.0);
+        let dir = std::env::temp_dir();
+        for name in ["bbml_rt.libsvm", "bbml_rt.libsvm.gz"] {
+            let path = dir.join(name);
+            write_libsvm(&ds, &path).unwrap();
+            let back = read_libsvm(&path, Some(64)).unwrap();
+            assert_eq!(back.n(), 2);
+            assert_eq!(back.row(0), ds.row(0));
+            assert_eq!(back.row(1), ds.row(1));
+            assert_eq!(back.label(1), -1.0);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn labels_normalized_to_pm1() {
+        let ds = read_libsvm_from(Cursor::new("2 1:1\n0 2:1\n"), None).unwrap();
+        assert_eq!(ds.label(0), 1.0);
+        assert_eq!(ds.label(1), -1.0);
+    }
+}

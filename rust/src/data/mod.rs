@@ -1,0 +1,20 @@
+//! Datasets: sparse binary storage, LIBSVM I/O, shingling and the synthetic
+//! webspam-like corpus generator.
+//!
+//! The paper's workload is massive, sparse, *binary*, ultra-high-dimensional
+//! data (w-shingled documents over a dictionary of up to 2^64 — paper §1.1).
+//! [`sparse`] holds the CSR-style in-memory representation used everywhere
+//! downstream; [`libsvm`] reads/writes the interchange format the paper's
+//! experiments used (webspam was distributed in LIBSVM format); [`shingle`]
+//! turns raw text into w-shingle feature sets; [`synth`] generates the
+//! webspam-scale-down substitute corpus (see DESIGN.md §6).
+
+pub mod libsvm;
+pub mod real;
+pub mod shingle;
+pub mod sparse;
+pub mod synth;
+
+pub use real::SparseRealDataset;
+pub use sparse::{SparseBinaryDataset, SparseBinaryVec};
+pub use synth::{SynthConfig, generate_corpus};

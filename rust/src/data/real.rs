@@ -1,0 +1,123 @@
+//! Sparse *real-valued* dataset (CSR) — the output format of VW feature
+//! hashing and random projections (paper §6–§8). The binary substrate in
+//! [`super::sparse`] covers the paper's main path; this covers the
+//! baselines, whose hashed samples are signed sums.
+
+/// Labeled sparse real-valued dataset; row entries are (index, value).
+#[derive(Clone, Debug, Default)]
+pub struct SparseRealDataset {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    labels: Vec<f32>,
+    dim: usize,
+}
+
+impl SparseRealDataset {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            labels: Vec::new(),
+            dim,
+        }
+    }
+
+    /// Append a row of (index, value) pairs (must be index-sorted).
+    pub fn push(&mut self, row: &[(u32, f32)], label: f32) {
+        debug_assert!(row.windows(2).all(|w| w[0].0 < w[1].0));
+        for &(i, v) in row {
+            assert!((i as usize) < self.dim, "index {i} out of dim {}", self.dim);
+            self.indices.push(i);
+            self.values.push(v);
+        }
+        self.indptr.push(self.indices.len());
+        self.labels.push(label);
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    /// Row i as parallel (indices, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// ‖x_i‖².
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        self.row(i).1.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// w·x_i.
+    pub fn dot(&self, i: usize, w: &[f32]) -> f64 {
+        let (idx, val) = self.row(i);
+        idx.iter()
+            .zip(val)
+            .map(|(&j, &v)| w[j as usize] as f64 * v as f64)
+            .sum()
+    }
+
+    /// w += scale·x_i.
+    pub fn axpy(&self, i: usize, scale: f64, w: &mut [f32]) {
+        let (idx, val) = self.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            w[j as usize] += (scale * v as f64) as f32;
+        }
+    }
+
+    /// Total stored non-zeros.
+    pub fn total_nnz(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_row_roundtrip() {
+        let mut ds = SparseRealDataset::new(10);
+        ds.push(&[(1, 0.5), (4, -2.0)], 1.0);
+        ds.push(&[], -1.0);
+        assert_eq!(ds.n(), 2);
+        let (idx, val) = ds.row(0);
+        assert_eq!(idx, &[1, 4]);
+        assert_eq!(val, &[0.5, -2.0]);
+        assert_eq!(ds.row(1).0.len(), 0);
+        assert!((ds.row_norm_sq(0) - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_axpy_consistent() {
+        let mut ds = SparseRealDataset::new(6);
+        ds.push(&[(0, 1.0), (2, 3.0)], 1.0);
+        let mut w = vec![0.0f32; 6];
+        ds.axpy(0, 0.5, &mut w);
+        assert_eq!(w[0], 0.5);
+        assert_eq!(w[2], 1.5);
+        assert!((ds.dot(0, &w) - (0.5 + 4.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of dim")]
+    fn rejects_out_of_range() {
+        let mut ds = SparseRealDataset::new(3);
+        ds.push(&[(3, 1.0)], 1.0);
+    }
+}

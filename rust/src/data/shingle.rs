@@ -1,0 +1,172 @@
+//! w-shingling: turn token streams into binary feature sets (paper §1.1).
+//!
+//! A *w-shingle* is w contiguous words; the standard search-industry
+//! representation hashes each shingle into a dictionary Ω of size D (up to
+//! 2^64) and keeps only presence/absence — word-frequency power laws make a
+//! shingle very unlikely to repeat within one document, so the binary
+//! quantization loses almost nothing (paper §1.1).
+
+use super::sparse::SparseBinaryVec;
+
+/// 64-bit FNV-1a — stable, fast string hashing for shingles.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Shingler configuration.
+#[derive(Clone, Debug)]
+pub struct Shingler {
+    /// Shingle width w (the paper uses w = 3 for webspam, up to 5–7).
+    pub w: usize,
+    /// Dictionary size D; shingle hashes are reduced mod D.
+    pub dim: u64,
+}
+
+impl Shingler {
+    pub fn new(w: usize, dim: u64) -> Self {
+        assert!(w >= 1, "shingle width must be >= 1");
+        assert!(dim >= 1);
+        Self { w, dim }
+    }
+
+    /// Shingle a pre-tokenized document into a sparse binary vector.
+    ///
+    /// Documents shorter than w yield a single shingle over all tokens.
+    pub fn shingle_tokens(&self, tokens: &[&str]) -> SparseBinaryVec {
+        if tokens.is_empty() {
+            return SparseBinaryVec::from_indices(vec![]);
+        }
+        let mut idxs = Vec::with_capacity(tokens.len().saturating_sub(self.w) + 1);
+        if tokens.len() < self.w {
+            idxs.push(self.hash_shingle(tokens));
+        } else {
+            for win in tokens.windows(self.w) {
+                idxs.push(self.hash_shingle(win));
+            }
+        }
+        SparseBinaryVec::from_indices(idxs)
+    }
+
+    /// Shingle raw text (ASCII-whitespace tokenization, lowercased).
+    pub fn shingle_text(&self, text: &str) -> SparseBinaryVec {
+        let lower = text.to_lowercase();
+        let tokens: Vec<&str> = lower.split_ascii_whitespace().collect();
+        self.shingle_tokens(&tokens)
+    }
+
+    /// Shingle a document given as token ids (the synthetic corpus path —
+    /// avoids string formatting in the hot loop).
+    pub fn shingle_token_ids(&self, ids: &[u64]) -> SparseBinaryVec {
+        if ids.is_empty() {
+            return SparseBinaryVec::from_indices(vec![]);
+        }
+        let hash_window = |win: &[u64]| -> u64 {
+            // Mix the ids with a running multiply-xor; cheap and stable.
+            let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+            for &id in win {
+                h ^= id.wrapping_add(0x2545_F491_4F6C_DD1D);
+                h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+                h ^= h >> 33;
+            }
+            h % self.dim
+        };
+        let mut idxs = Vec::with_capacity(ids.len().saturating_sub(self.w) + 1);
+        if ids.len() < self.w {
+            idxs.push(hash_window(ids));
+        } else {
+            for win in ids.windows(self.w) {
+                idxs.push(hash_window(win));
+            }
+        }
+        SparseBinaryVec::from_indices(idxs)
+    }
+
+    fn hash_shingle(&self, tokens: &[&str]) -> u64 {
+        let mut buf = Vec::with_capacity(tokens.iter().map(|t| t.len() + 1).sum());
+        for (i, t) in tokens.iter().enumerate() {
+            if i > 0 {
+                buf.push(0x1f); // unit separator — unambiguous joining
+            }
+            buf.extend_from_slice(t.as_bytes());
+        }
+        fnv1a64(&buf) % self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_values() {
+        // FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn shingle_count_matches_window_count() {
+        let s = Shingler::new(3, u64::MAX);
+        let v = s.shingle_text("the quick brown fox jumps");
+        // 5 tokens, w=3 -> 3 windows, all distinct with high probability.
+        assert_eq!(v.nnz(), 3);
+    }
+
+    #[test]
+    fn short_documents_yield_one_shingle() {
+        let s = Shingler::new(5, u64::MAX);
+        let v = s.shingle_text("hello world");
+        assert_eq!(v.nnz(), 1);
+        let e = s.shingle_text("");
+        assert_eq!(e.nnz(), 0);
+    }
+
+    #[test]
+    fn identical_texts_shingle_identically() {
+        let s = Shingler::new(3, 1 << 24);
+        let a = s.shingle_text("a b c d e f");
+        let b = s.shingle_text("A  B C d E f"); // case/whitespace-insensitive
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn near_duplicates_have_high_resemblance() {
+        let s = Shingler::new(3, 1 << 30);
+        let base = "lorem ipsum dolor sit amet consectetur adipiscing elit sed do \
+                    eiusmod tempor incididunt ut labore et dolore magna aliqua";
+        let edited = "lorem ipsum dolor sit amet consectetur adipiscing elit sed do \
+                      eiusmod tempor incididunt ut labore et dolore magna MUTATED";
+        let a = s.shingle_text(base);
+        let b = s.shingle_text(edited);
+        let r = a.resemblance(&b);
+        assert!(r > 0.7, "resemblance {r}");
+        let unrelated = s.shingle_text("completely different text with other words \
+                                        entirely nothing shared at all here");
+        assert!(a.resemblance(&unrelated) < 0.05);
+    }
+
+    #[test]
+    fn token_ids_deterministic_and_separating() {
+        let s = Shingler::new(3, 1 << 24);
+        let a = s.shingle_token_ids(&[1, 2, 3, 4, 5]);
+        let b = s.shingle_token_ids(&[1, 2, 3, 4, 5]);
+        let c = s.shingle_token_ids(&[5, 4, 3, 2, 1]);
+        assert_eq!(a, b);
+        assert!(a.resemblance(&c) < 0.5);
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn dim_bounds_indices() {
+        let s = Shingler::new(2, 97);
+        let v = s.shingle_text("one two three four five six seven eight");
+        assert!(v.indices().iter().all(|&i| i < 97));
+    }
+}

@@ -1,0 +1,303 @@
+//! Sparse binary vectors and datasets (CSR layout).
+//!
+//! The paper's data model: each example is a *set* S ⊆ Ω = {0, …, D−1}
+//! (equivalently a 0/1 vector of dimension D with |S| non-zeros). We store
+//! sorted `u64` feature indices so D can be as large as 2^64 (paper §1.1).
+
+use std::fmt;
+
+/// A single sparse binary example: sorted, deduplicated feature indices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SparseBinaryVec {
+    indices: Vec<u64>,
+}
+
+impl SparseBinaryVec {
+    /// Build from arbitrary indices (sorts and deduplicates).
+    pub fn from_indices(mut indices: Vec<u64>) -> Self {
+        indices.sort_unstable();
+        indices.dedup();
+        Self { indices }
+    }
+
+    /// Build from indices already sorted and unique (checked in debug).
+    pub fn from_sorted_unique(indices: Vec<u64>) -> Self {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        Self { indices }
+    }
+
+    /// Sorted feature indices.
+    #[inline]
+    pub fn indices(&self) -> &[u64] {
+        &self.indices
+    }
+
+    /// Number of non-zeros, f = |S|.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// |S1 ∩ S2| via linear merge (both sides sorted).
+    pub fn intersection_size(&self, other: &Self) -> usize {
+        let (mut i, mut j, mut a) = (0, 0, 0);
+        let (x, y) = (&self.indices, &other.indices);
+        while i < x.len() && j < y.len() {
+            match x[i].cmp(&y[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    a += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        a
+    }
+
+    /// |S1 ∪ S2| = f1 + f2 − a.
+    pub fn union_size(&self, other: &Self) -> usize {
+        self.nnz() + other.nnz() - self.intersection_size(other)
+    }
+
+    /// Resemblance R = |S1 ∩ S2| / |S1 ∪ S2| (paper §2). Empty∪empty → 0.
+    pub fn resemblance(&self, other: &Self) -> f64 {
+        let u = self.union_size(other);
+        if u == 0 {
+            0.0
+        } else {
+            self.intersection_size(other) as f64 / u as f64
+        }
+    }
+
+    /// Binary inner product a = Σ u1_i·u2_i = |S1 ∩ S2|.
+    pub fn dot_binary(&self, other: &Self) -> usize {
+        self.intersection_size(other)
+    }
+}
+
+/// A labeled sparse binary dataset in CSR layout.
+///
+/// Row i occupies `indices[indptr[i]..indptr[i+1]]`; `labels[i] ∈ {−1,+1}`.
+#[derive(Clone, Debug, Default)]
+pub struct SparseBinaryDataset {
+    indptr: Vec<usize>,
+    indices: Vec<u64>,
+    labels: Vec<f32>,
+    dim: u64,
+}
+
+impl SparseBinaryDataset {
+    pub fn new(dim: u64) -> Self {
+        Self {
+            indptr: vec![0],
+            indices: Vec::new(),
+            labels: Vec::new(),
+            dim,
+        }
+    }
+
+    /// Construct from rows (each row is sorted+deduped on insert).
+    pub fn from_rows(rows: Vec<(SparseBinaryVec, f32)>, dim: u64) -> Self {
+        let mut ds = Self::new(dim);
+        for (v, y) in rows {
+            ds.push(v, y);
+        }
+        ds
+    }
+
+    /// Append an example.
+    pub fn push(&mut self, v: SparseBinaryVec, label: f32) {
+        debug_assert!(label == 1.0 || label == -1.0, "labels are ±1");
+        if let Some(&max) = v.indices().last() {
+            assert!(max < self.dim, "index {max} out of dim {}", self.dim);
+        }
+        self.indices.extend_from_slice(v.indices());
+        self.indptr.push(self.indices.len());
+        self.labels.push(label);
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> u64 {
+        self.dim
+    }
+
+    /// Total non-zeros across all rows.
+    pub fn total_nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Average non-zeros per row (the paper's `c`).
+    pub fn avg_nnz(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.total_nnz() as f64 / self.n() as f64
+        }
+    }
+
+    /// Row i's sorted feature indices (zero-copy).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Row i as an owned vector.
+    pub fn row_vec(&self, i: usize) -> SparseBinaryVec {
+        SparseBinaryVec::from_sorted_unique(self.row(i).to_vec())
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    /// Iterate `(row_indices, label)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&[u64], f32)> + '_ {
+        (0..self.n()).map(move |i| (self.row(i), self.labels[i]))
+    }
+
+    /// Split into (train, test) by a deterministic shuffled index set;
+    /// `test_fraction` of rows go to test (the paper uses 20%).
+    pub fn train_test_split(&self, test_fraction: f64, seed: u64) -> (Self, Self) {
+        assert!((0.0..1.0).contains(&test_fraction));
+        let mut order: Vec<usize> = (0..self.n()).collect();
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(seed);
+        rng.shuffle(&mut order);
+        let n_test = (self.n() as f64 * test_fraction).round() as usize;
+        let mut train = Self::new(self.dim);
+        let mut test = Self::new(self.dim);
+        for (pos, &i) in order.iter().enumerate() {
+            let target = if pos < n_test { &mut test } else { &mut train };
+            target.push(self.row_vec(i), self.labels[i]);
+        }
+        (train, test)
+    }
+
+    /// Subset by row indices.
+    pub fn subset(&self, rows: &[usize]) -> Self {
+        let mut out = Self::new(self.dim);
+        for &i in rows {
+            out.push(self.row_vec(i), self.labels[i]);
+        }
+        out
+    }
+
+    /// In-memory size of the raw representation in bytes (indices + ptrs).
+    pub fn storage_bytes(&self) -> usize {
+        self.indices.len() * 8 + self.indptr.len() * 8 + self.labels.len() * 4
+    }
+}
+
+impl fmt::Display for SparseBinaryDataset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "SparseBinaryDataset(n={}, dim={}, nnz={}, avg_nnz={:.1})",
+            self.n(),
+            self.dim(),
+            self.total_nnz(),
+            self.avg_nnz()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(idx: &[u64]) -> SparseBinaryVec {
+        SparseBinaryVec::from_indices(idx.to_vec())
+    }
+
+    #[test]
+    fn from_indices_sorts_and_dedups() {
+        let x = v(&[5, 1, 3, 1, 5]);
+        assert_eq!(x.indices(), &[1, 3, 5]);
+        assert_eq!(x.nnz(), 3);
+    }
+
+    #[test]
+    fn intersection_union_resemblance() {
+        let a = v(&[1, 2, 3, 4]);
+        let b = v(&[3, 4, 5]);
+        assert_eq!(a.intersection_size(&b), 2);
+        assert_eq!(a.union_size(&b), 5);
+        assert!((a.resemblance(&b) - 0.4).abs() < 1e-12);
+        assert_eq!(a.dot_binary(&b), 2);
+    }
+
+    #[test]
+    fn resemblance_identical_and_disjoint() {
+        let a = v(&[10, 20, 30]);
+        assert_eq!(a.resemblance(&a), 1.0);
+        let b = v(&[40, 50]);
+        assert_eq!(a.resemblance(&b), 0.0);
+        let e = v(&[]);
+        assert_eq!(e.resemblance(&e), 0.0);
+    }
+
+    #[test]
+    fn dataset_rows_roundtrip() {
+        let mut ds = SparseBinaryDataset::new(100);
+        ds.push(v(&[1, 5, 9]), 1.0);
+        ds.push(v(&[2]), -1.0);
+        ds.push(v(&[]), 1.0);
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.row(0), &[1, 5, 9]);
+        assert_eq!(ds.row(1), &[2]);
+        assert_eq!(ds.row(2), &[] as &[u64]);
+        assert_eq!(ds.label(1), -1.0);
+        assert_eq!(ds.total_nnz(), 4);
+        assert!((ds.avg_nnz() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of dim")]
+    fn push_rejects_out_of_range() {
+        let mut ds = SparseBinaryDataset::new(10);
+        ds.push(v(&[10]), 1.0);
+    }
+
+    #[test]
+    fn split_partitions_all_rows() {
+        let mut ds = SparseBinaryDataset::new(1000);
+        for i in 0..100u64 {
+            ds.push(v(&[i, i + 100]), if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let (tr, te) = ds.train_test_split(0.2, 42);
+        assert_eq!(tr.n(), 80);
+        assert_eq!(te.n(), 20);
+        assert_eq!(tr.total_nnz() + te.total_nnz(), ds.total_nnz());
+        // Determinism.
+        let (tr2, te2) = ds.train_test_split(0.2, 42);
+        assert_eq!(tr.row(0), tr2.row(0));
+        assert_eq!(te.row(0), te2.row(0));
+    }
+
+    #[test]
+    fn subset_selects_rows() {
+        let mut ds = SparseBinaryDataset::new(50);
+        ds.push(v(&[1]), 1.0);
+        ds.push(v(&[2]), -1.0);
+        ds.push(v(&[3]), 1.0);
+        let s = ds.subset(&[2, 0]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.row(0), &[3]);
+        assert_eq!(s.row(1), &[1]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Synthetic webspam-like corpus generator.
+//!
+//! The paper's experiments use the *webspam* dataset (n = 350 000,
+//! D = 16 609 143, 24 GB in LIBSVM format — not redistributable here), so
+//! this module builds the closest synthetic equivalent exercising the same
+//! code paths (DESIGN.md §6):
+//!
+//! * a **power-law (Zipf) vocabulary** — the paper's §1.1 justification for
+//!   binary shingles rests on word-frequency power laws;
+//! * **two document classes** ("spam" vs "ham") built from class-specific
+//!   **phrase books** blended with background Zipf tokens. Phrases are
+//!   multi-token runs, so same-class documents share *contiguous* token
+//!   windows — i.e. shared w-shingles — exactly how template reuse makes
+//!   real spam pages resemble each other. Isolated class-token mixtures do
+//!   NOT work here: w-shingling destroys unigram signal, and the resulting
+//!   corpus has chance-level resemblance structure (we verified this —
+//!   see `same_class_documents_are_more_similar`).
+//! * **w-shingling** of each token stream into a D-dimensional binary set
+//!   (default w = 3, matching webspam's 3-shingles).
+//!
+//! Document generation is seeded per document, so corpora are identical
+//! regardless of sharding/threading in the pipeline (L3 determinism test).
+
+use super::shingle::Shingler;
+use super::sparse::{SparseBinaryDataset, SparseBinaryVec};
+use crate::rng::Xoshiro256;
+
+/// Corpus generator configuration.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    /// Number of documents.
+    pub n_docs: usize,
+    /// Shingle space size D.
+    pub dim: u64,
+    /// Vocabulary size (token universe before shingling).
+    pub vocab: usize,
+    /// Zipf exponent of the background distribution (~1.1 for natural text).
+    pub zipf_s: f64,
+    /// Shingle width w.
+    pub w: usize,
+    /// Mean document length in tokens (lengths ~ shifted geometric).
+    pub mean_len: usize,
+    /// Fraction of emitted segments drawn from the class phrase book
+    /// (0..1). Higher = more separable classes.
+    pub topic_mix: f64,
+    /// Number of phrases per class phrase book.
+    pub topic_size: usize,
+    /// Tokens per phrase (>= shingle width w for full shared shingles).
+    pub phrase_len: usize,
+    /// Fraction of positive-class documents.
+    pub pos_fraction: f64,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            n_docs: 10_000,
+            dim: 1 << 24,
+            vocab: 50_000,
+            zipf_s: 1.1,
+            w: 3,
+            mean_len: 120,
+            topic_mix: 0.35,
+            topic_size: 150,
+            phrase_len: 5,
+            pos_fraction: 0.5,
+            seed: 20110001,
+        }
+    }
+}
+
+/// Precomputed sampling tables for one corpus.
+pub struct CorpusSampler {
+    cfg: SynthConfig,
+    /// Cumulative background Zipf distribution over the vocabulary.
+    zipf_cdf: Vec<f64>,
+    /// Phrase books per class (index 0 = negative, 1 = positive): each
+    /// phrase is a fixed token run; reuse across documents of the same
+    /// class creates the shared shingles that carry the class signal.
+    phrases: [Vec<Vec<u64>>; 2],
+    shingler: Shingler,
+}
+
+impl CorpusSampler {
+    pub fn new(cfg: SynthConfig) -> Self {
+        assert!(cfg.vocab >= 100, "vocab too small");
+        assert!((0.0..=1.0).contains(&cfg.topic_mix));
+        assert!(cfg.phrase_len >= 1);
+        // Background Zipf CDF: p(rank r) ∝ 1 / r^s.
+        let mut cdf = Vec::with_capacity(cfg.vocab);
+        let mut acc = 0.0;
+        for r in 1..=cfg.vocab {
+            acc += 1.0 / (r as f64).powf(cfg.zipf_s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        // Phrase books: deterministic from the corpus seed; tokens drawn
+        // from the mid-frequency band [vocab/10, vocab/2) — out of both the
+        // stop-word head (shared by everything) and the ultra-rare tail.
+        let band_lo = (cfg.vocab / 10) as u64;
+        let band_hi = (cfg.vocab / 2).max(cfg.vocab / 10 + 100) as u64;
+        let mut book_rng = Xoshiro256::seed_from_u64(cfg.seed ^ 0xB00C_B00C);
+        let mut make_book = || -> Vec<Vec<u64>> {
+            (0..cfg.topic_size)
+                .map(|_| {
+                    (0..cfg.phrase_len)
+                        .map(|_| band_lo + book_rng.gen_range(band_hi - band_lo))
+                        .collect()
+                })
+                .collect()
+        };
+        let p0 = make_book();
+        let p1 = make_book();
+        let shingler = Shingler::new(cfg.w, cfg.dim);
+        Self {
+            cfg,
+            zipf_cdf: cdf,
+            phrases: [p0, p1],
+            shingler,
+        }
+    }
+
+    pub fn config(&self) -> &SynthConfig {
+        &self.cfg
+    }
+
+    fn sample_background(&self, rng: &mut Xoshiro256) -> u64 {
+        let u = rng.gen_f64();
+        // Binary search the CDF.
+        let mut lo = 0usize;
+        let mut hi = self.zipf_cdf.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.zipf_cdf[mid] < u {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u64
+    }
+
+    /// Generate document `doc_id` deterministically: token stream + label.
+    pub fn generate_tokens(&self, doc_id: u64) -> (Vec<u64>, f32) {
+        let mut rng = Xoshiro256::seed_from_u64(
+            self.cfg.seed ^ doc_id.wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        let positive = rng.gen_f64() < self.cfg.pos_fraction;
+        let class = positive as usize;
+        // Shifted-geometric length with mean ~ mean_len (min length 2w).
+        let p = 1.0 / self.cfg.mean_len as f64;
+        let mut len = 0usize;
+        while rng.gen_f64() > p {
+            len += 1;
+            if len >= 8 * self.cfg.mean_len {
+                break;
+            }
+        }
+        let len = len.max(2 * self.cfg.w.max(self.cfg.phrase_len));
+        let book = &self.phrases[class];
+        let mut tokens: Vec<u64> = Vec::with_capacity(len + self.cfg.phrase_len);
+        while tokens.len() < len {
+            if rng.gen_f64() < self.cfg.topic_mix {
+                // Emit a whole class phrase: contiguous tokens ⇒ the
+                // phrase-internal w-shingles are shared across documents.
+                let p = &book[rng.gen_range(book.len() as u64) as usize];
+                tokens.extend_from_slice(p);
+            } else {
+                tokens.push(self.sample_background(&mut rng));
+            }
+        }
+        (tokens, if positive { 1.0 } else { -1.0 })
+    }
+
+    /// Generate the shingled sparse vector for document `doc_id`.
+    pub fn generate(&self, doc_id: u64) -> (SparseBinaryVec, f32) {
+        let (tokens, label) = self.generate_tokens(doc_id);
+        (self.shingler.shingle_token_ids(&tokens), label)
+    }
+}
+
+/// Generate a full corpus into a [`SparseBinaryDataset`] (single-threaded;
+/// the L3 pipeline in `coordinator::pipeline` does the same sharded).
+pub fn generate_corpus(cfg: &SynthConfig) -> SparseBinaryDataset {
+    let sampler = CorpusSampler::new(cfg.clone());
+    let mut ds = SparseBinaryDataset::new(cfg.dim);
+    for doc_id in 0..cfg.n_docs as u64 {
+        let (v, y) = sampler.generate(doc_id);
+        ds.push(v, y);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SynthConfig {
+        SynthConfig {
+            n_docs: 200,
+            dim: 1 << 20,
+            vocab: 5_000,
+            topic_size: 100,
+            mean_len: 60,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let cfg = small_cfg();
+        let a = generate_corpus(&cfg);
+        let b = generate_corpus(&cfg);
+        assert_eq!(a.n(), b.n());
+        for i in 0..a.n() {
+            assert_eq!(a.row(i), b.row(i));
+            assert_eq!(a.label(i), b.label(i));
+        }
+    }
+
+    #[test]
+    fn corpus_has_both_classes_roughly_balanced() {
+        let ds = generate_corpus(&small_cfg());
+        let pos = ds.labels().iter().filter(|&&y| y > 0.0).count();
+        let frac = pos as f64 / ds.n() as f64;
+        assert!((0.35..0.65).contains(&frac), "pos fraction {frac}");
+    }
+
+    #[test]
+    fn documents_are_sparse_and_in_range() {
+        let cfg = small_cfg();
+        let ds = generate_corpus(&cfg);
+        assert!(ds.avg_nnz() > 10.0, "avg nnz {}", ds.avg_nnz());
+        assert!(ds.avg_nnz() < 4.0 * cfg.mean_len as f64);
+        for i in 0..ds.n() {
+            assert!(ds.row(i).iter().all(|&x| x < cfg.dim));
+        }
+    }
+
+    #[test]
+    fn same_class_documents_are_more_similar() {
+        // The resemblance signal the classifiers must exploit: average
+        // within-class resemblance exceeds between-class resemblance.
+        let ds = generate_corpus(&small_cfg());
+        let mut within = (0.0, 0usize);
+        let mut between = (0.0, 0usize);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let r = ds.row_vec(i).resemblance(&ds.row_vec(j));
+                if ds.label(i) == ds.label(j) {
+                    within.0 += r;
+                    within.1 += 1;
+                } else {
+                    between.0 += r;
+                    between.1 += 1;
+                }
+            }
+        }
+        let w = within.0 / within.1 as f64;
+        let b = between.0 / between.1 as f64;
+        assert!(w > b, "within {w} <= between {b}");
+    }
+
+    #[test]
+    fn generate_tokens_is_per_doc_deterministic() {
+        let sampler = CorpusSampler::new(small_cfg());
+        let (t1, y1) = sampler.generate_tokens(17);
+        let (t2, y2) = sampler.generate_tokens(17);
+        assert_eq!(t1, t2);
+        assert_eq!(y1, y2);
+        // Different docs differ.
+        let (t3, _) = sampler.generate_tokens(18);
+        assert_ne!(t1, t3);
+    }
+
+    #[test]
+    fn zipf_head_is_heavier_than_tail() {
+        let sampler = CorpusSampler::new(small_cfg());
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            if sampler.sample_background(&mut rng) < 50 {
+                head += 1;
+            }
+        }
+        // Top-50 of a Zipf(1.1) over 5000 words carries a large share.
+        assert!(head as f64 / n as f64 > 0.25, "head mass {}", head as f64 / n as f64);
+    }
+}

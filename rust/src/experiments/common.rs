@@ -1,0 +1,53 @@
+//! Shared experiment plumbing: corpus construction + train/test split.
+
+use std::path::PathBuf;
+
+use crate::coordinator::config::RunConfig;
+use crate::data::sparse::SparseBinaryDataset;
+use crate::data::synth::generate_corpus;
+
+/// Fixed marker xor'd into the split seed, kept apart from the corpus seed
+/// so changing the corpus does not silently change the split pattern.
+const SPLIT_SEED_MARKER: u64 = 0x5911_7000;
+
+/// Build the synthetic webspam substitute and split it 80/20 (paper §5).
+pub fn corpus_split(cfg: &RunConfig) -> (SparseBinaryDataset, SparseBinaryDataset) {
+    let ds = generate_corpus(&cfg.synth_config());
+    ds.train_test_split(cfg.test_fraction, cfg.seed ^ SPLIT_SEED_MARKER)
+}
+
+/// Output path under `cfg.out_dir`.
+pub fn out_path(cfg: &RunConfig, name: &str) -> PathBuf {
+    PathBuf::from(&cfg.out_dir).join(name)
+}
+
+/// Pretty seconds.
+pub fn secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_split_fractions() {
+        let mut cfg = RunConfig::default();
+        cfg.n_docs = 200;
+        cfg.dim = 1 << 18;
+        cfg.vocab = 3000;
+        let (tr, te) = corpus_split(&cfg);
+        assert_eq!(tr.n() + te.n(), 200);
+        assert_eq!(te.n(), 40);
+    }
+
+    #[test]
+    fn out_path_joins() {
+        let cfg = RunConfig::default();
+        assert!(out_path(&cfg, "x.csv").ends_with("results/x.csv"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Figure 9: VW hashing applied *on top of* 16-bit minwise hashing.
+//!
+//! At b = 16 the expanded feature vectors are 2^16·k-dimensional and
+//! training slows down (Figures 3/7). The paper's §8 remedy: VW-hash the
+//! expanded vectors down to m buckets. Lemma 2 predicts m = 2^8·k keeps
+//! accuracy intact while shrinking the training dimension 256-fold. We
+//! sweep m = 2^0·k … 2^8·k and record accuracy + training time against the
+//! direct b = 16 run.
+
+use std::time::Instant;
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use crate::coordinator::report::{print_table, write_rows_csv};
+use crate::coordinator::trainer::{evaluate, train_signatures, Backend};
+use crate::data::real::SparseRealDataset;
+use crate::experiments::common::{corpus_split, out_path, secs};
+use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::expand::expand_signature;
+use crate::hashing::vw::VwHasher;
+use crate::solvers::linear_svm::{accuracy_real, train_svm_real, SvmLoss, SvmOptions};
+
+/// VW-hash the virtual expansion of every signature row into m buckets.
+pub fn vw_on_signatures(
+    sigs: &BbitSignatureMatrix,
+    m: usize,
+    seed: u64,
+) -> SparseRealDataset {
+    let h = VwHasher::new(m, seed);
+    let mut out = SparseRealDataset::new(m);
+    let mut row = vec![0u16; sigs.k()];
+    for i in 0..sigs.n() {
+        sigs.unpack_row_into(i, &mut row);
+        let expanded = expand_signature(&row, sigs.b());
+        out.push(&h.hash_binary_sparse(&expanded), sigs.label(i));
+    }
+    out
+}
+
+pub fn run(cfg: &RunConfig) -> anyhow::Result<()> {
+    let (train, test) = corpus_split(cfg);
+    let b = 16u32;
+    let k = *cfg.k_list.iter().find(|&&k| k >= 100).unwrap_or(&200);
+    let c_list: Vec<f64> = vec![0.1, 1.0, 10.0];
+
+    let pipe = PipelineOptions {
+        threads: cfg.threads,
+        ..Default::default()
+    };
+    let (sig_tr, _) = hash_dataset(&train, k, b, cfg.seed ^ 0xF19, &pipe);
+    let (sig_te, _) = hash_dataset(&test, k, b, cfg.seed ^ 0xF19, &pipe);
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+
+    // ---- direct b = 16 reference (the dashed curves) --------------------
+    for &c in &c_list {
+        let out = train_signatures(&sig_tr, Backend::SvmDcd, c, cfg.seed, None, None)?;
+        let (acc, _) = evaluate(&out.model, &sig_te);
+        rows.push(vec![-1.0, (1usize << b) as f64 * k as f64, c, acc, out.train_time.as_secs_f64()]);
+        if (c - 1.0).abs() < 1e-9 {
+            table.push(vec![
+                "direct b=16".into(),
+                format!("{}", (1usize << b) * k),
+                format!("{acc:.4}"),
+                secs(out.train_time.as_secs_f64()),
+            ]);
+        }
+    }
+
+    // ---- VW on top: m = 2^e · k -----------------------------------------
+    for &e in &[0u32, 1, 2, 3, 8] {
+        let m = (1usize << e) * k;
+        let vw_tr = vw_on_signatures(&sig_tr, m, cfg.seed ^ 0xAB);
+        let vw_te = vw_on_signatures(&sig_te, m, cfg.seed ^ 0xAB);
+        for &c in &c_list {
+            let t0 = Instant::now();
+            let model = train_svm_real(
+                &vw_tr,
+                &SvmOptions {
+                    c,
+                    loss: SvmLoss::L2,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+            );
+            let train_time = t0.elapsed();
+            let acc = accuracy_real(&model, &vw_te);
+            rows.push(vec![e as f64, m as f64, c, acc, train_time.as_secs_f64()]);
+            if (c - 1.0).abs() < 1e-9 {
+                table.push(vec![
+                    format!("m=2^{e}·k"),
+                    m.to_string(),
+                    format!("{acc:.4}"),
+                    secs(train_time.as_secs_f64()),
+                ]);
+            }
+        }
+    }
+
+    write_rows_csv(
+        "exponent(-1=direct),dim,c,accuracy,train_secs",
+        &rows,
+        &out_path(cfg, "fig9_vw_on_bbit.csv"),
+    )?;
+    print_table(
+        &format!("fig9 @ C=1: VW on top of b=16 hashing (k={k})"),
+        &["series", "train dim", "acc", "train"],
+        &table,
+    );
+    println!("\npaper §8: the m = 2^8·k row should match the direct-b=16 accuracy.");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vw_on_signatures_shapes() {
+        let mut sigs = BbitSignatureMatrix::new(8, 16);
+        sigs.push_row(&[0, 1, 2, 3, 4, 5, 6, 65535], 1.0);
+        sigs.push_row(&[7, 7, 7, 7, 7, 7, 7, 7], -1.0);
+        let out = vw_on_signatures(&sigs, 64, 3);
+        assert_eq!(out.n(), 2);
+        assert_eq!(out.dim(), 64);
+        // <= k nonzeros per row (expansion has exactly k ones).
+        let (idx, _) = out.row(0);
+        assert!(idx.len() <= 8);
+    }
+}

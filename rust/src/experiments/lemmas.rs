@@ -1,0 +1,131 @@
+//! Monte-Carlo validation of Lemma 1 (eq. 17) and Lemma 2 (eq. 19) —
+//! the paper's two derived variance results, checked against the actual
+//! implementations.
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::report::{print_table, write_rows_csv};
+use crate::experiments::common::out_path;
+use crate::hashing::bbit::pack_lowest_bits;
+use crate::hashing::estimators::estimate_r_bbit_vw;
+use crate::hashing::minwise::MinwiseHasher;
+use crate::hashing::vw::VwHasher;
+use crate::theory::pb::BbitConstants;
+use crate::theory::variance::{var_bbit_vw, var_vw, PairMoments};
+
+/// Lemma 1: Var(â_vw,s) for s ∈ {1, 2, 3} across k — the (s−1)Σu²u² term
+/// must appear for s > 1 and vanish for s = 1.
+pub fn run_lemma1(cfg: &RunConfig) -> anyhow::Result<()> {
+    let s1: Vec<u64> = (0..200).collect();
+    let s2: Vec<u64> = (100..300).collect(); // f1=f2=200, a=100
+    let m = PairMoments::binary(200, 200, 100);
+    let reps = (400 * cfg.reps.max(1)).min(8000);
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for &s in &[1.0f64, 2.0, 3.0] {
+        for &k in &[32usize, 128, 512] {
+            let mut est = Vec::with_capacity(reps);
+            for rep in 0..reps {
+                let h = VwHasher::with_s(k, s, cfg.seed ^ (rep as u64 * 7919 + k as u64));
+                let a_hat = VwHasher::estimate_inner_product(
+                    &h.hash_binary(&s1),
+                    &h.hash_binary(&s2),
+                );
+                est.push(a_hat);
+            }
+            let (mean, std) = crate::solvers::metrics::mean_std(&est);
+            let emp_var = std * std;
+            let theory = var_vw(&m, s, k);
+            rows.push(vec![s, k as f64, mean, emp_var, theory]);
+            table.push(vec![
+                format!("{s}"),
+                k.to_string(),
+                format!("{mean:.2}"),
+                format!("{emp_var:.1}"),
+                format!("{theory:.1}"),
+                format!("{:.2}", emp_var / theory),
+            ]);
+        }
+    }
+    write_rows_csv(
+        "s,k,mean,emp_var,theory_var",
+        &rows,
+        &out_path(cfg, "lemma1_vw_variance.csv"),
+    )?;
+    print_table(
+        "Lemma 1: VW estimator variance (true a = 100)",
+        &["s", "k", "mean", "emp var", "eq.(17)", "ratio"],
+        &table,
+    );
+    Ok(())
+}
+
+/// Lemma 2: Var(R̂_{b,vw}) across m — the m = 2^8·k sweet spot (paper §8).
+pub fn run_lemma2(cfg: &RunConfig) -> anyhow::Result<()> {
+    let d: u64 = 1 << 20;
+    let s1: Vec<u64> = (0..400).collect();
+    let s2: Vec<u64> = (200..600).collect(); // R = 200/600 = 1/3
+    let (f1, f2) = (400u64, 400u64);
+    let r = 1.0 / 3.0;
+    let (k, b) = (64usize, 8u32);
+    let reps = (200 * cfg.reps.max(1)).min(4000);
+    let c = BbitConstants::from_cardinalities(f1, f2, d, b);
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for &mult in &[1usize, 2, 4, 8, 64, 256] {
+        let m = mult * k;
+        let mut est = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let h = MinwiseHasher::new(d, k, cfg.seed ^ (rep as u64 + 13));
+            let z1 = pack_lowest_bits(&h.signature(&s1), b);
+            let z2 = pack_lowest_bits(&h.signature(&s2), b);
+            let vw = VwHasher::new(m, cfg.seed ^ (rep as u64 * 104_729));
+            est.push(estimate_r_bbit_vw(&z1, &z2, b, &vw, f1, f2, d));
+        }
+        let (mean, std) = crate::solvers::metrics::mean_std(&est);
+        let emp_var = std * std;
+        let theory = var_bbit_vw(&c, r, k, m);
+        rows.push(vec![mult as f64, m as f64, mean, emp_var, theory]);
+        table.push(vec![
+            format!("2^{}·k", (mult as f64).log2() as u32),
+            m.to_string(),
+            format!("{mean:.4}"),
+            format!("{emp_var:.5}"),
+            format!("{theory:.5}"),
+            format!("{:.2}", emp_var / theory),
+        ]);
+    }
+    write_rows_csv(
+        "mult,m,mean,emp_var,theory_var",
+        &rows,
+        &out_path(cfg, "lemma2_bbit_vw_variance.csv"),
+    )?;
+    print_table(
+        &format!("Lemma 2: R̂_b,vw variance (R = {r:.3}, k = {k}, b = {b})"),
+        &["m", "buckets", "mean", "emp var", "eq.(19)", "ratio"],
+        &table,
+    );
+    println!("\npaper §8: variance at m = 2^8·k should be ≈ the m → ∞ (pure b-bit) level.");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma1_small_run() {
+        let mut cfg = RunConfig::default();
+        cfg.reps = 1;
+        cfg.out_dir = std::env::temp_dir()
+            .join("bbml_lemma1_test")
+            .to_string_lossy()
+            .into_owned();
+        run_lemma1(&cfg).unwrap();
+        let text =
+            std::fs::read_to_string(out_path(&cfg, "lemma1_vw_variance.csv")).unwrap();
+        assert_eq!(text.lines().count(), 1 + 9);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

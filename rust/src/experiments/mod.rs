@@ -1,0 +1,58 @@
+//! One runner per figure/table in the paper's evaluation (DESIGN.md §4).
+//!
+//! | id        | paper          | runner                     |
+//! |-----------|----------------|----------------------------|
+//! | `fig1`…`fig4`  | Figs. 1–4 (linear SVM acc/std/train/test) | [`fig1_7::run_svm`] |
+//! | `fig5`…`fig7`  | Figs. 5–7 (logistic regression)           | [`fig1_7::run_logreg`] |
+//! | `tab51`   | §5.1 kernel SVM table | [`tab51::run`]      |
+//! | `fig8`    | Fig. 8 (b-bit vs VW)  | [`fig8::run`]       |
+//! | `fig9`    | Fig. 9 (VW on top of 16-bit) | [`fig9::run`] |
+//! | `fig10`   | Fig. 10 / App. A approx-vs-exact | [`fig10::run`] |
+//! | `gvw`     | Figs. 11–14 / App. C G_vw ratios | [`gvw::run`] |
+//! | `lemma1`, `lemma2` | Lemma 1/2 variance checks | [`lemmas`] |
+//!
+//! Every runner writes CSV series into `cfg.out_dir` and prints a console
+//! summary; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod common;
+pub mod fig1_7;
+pub mod fig10;
+pub mod fig8;
+pub mod fig9;
+pub mod gvw;
+pub mod lemmas;
+pub mod tab51;
+
+use crate::coordinator::config::RunConfig;
+
+/// All experiment ids, in the order `experiment all` runs them.
+pub const ALL: &[&str] = &[
+    "fig10", "gvw", "lemma1", "lemma2", "fig1", "fig5", "tab51", "fig8", "fig9",
+];
+
+/// Dispatch one experiment id.
+pub fn run(id: &str, cfg: &RunConfig) -> anyhow::Result<()> {
+    match id {
+        // fig1 produces figs 1-4's series in one sweep; aliases accepted.
+        "fig1" | "fig2" | "fig3" | "fig4" => fig1_7::run_svm(cfg),
+        "fig5" | "fig6" | "fig7" => fig1_7::run_logreg(cfg),
+        "tab51" => tab51::run(cfg),
+        "fig8" => fig8::run(cfg),
+        "fig9" => fig9::run(cfg),
+        "fig10" => fig10::run(cfg),
+        "gvw" | "fig11" | "fig12" | "fig13" | "fig14" => gvw::run(cfg),
+        "lemma1" => lemmas::run_lemma1(cfg),
+        "lemma2" => lemmas::run_lemma2(cfg),
+        "all" => {
+            for id in ALL {
+                println!("\n################ experiment {id} ################");
+                run(id, cfg)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (known: {}, all)",
+            ALL.join(", ")
+        ),
+    }
+}

@@ -1,0 +1,162 @@
+//! §5.1: nonlinear (kernel) SVM with the resemblance kernel.
+//!
+//! The paper reports that LIBSVM with the exact resemblance kernel on raw
+//! webspam never finished (>1 week), while the *b-bit estimated kernel*
+//! trains in minutes, with accuracy matching linear-on-original once
+//! k ≥ 200. We reproduce the shape:
+//!
+//! * exact resemblance-kernel SVM on raw sets — per-update cost grows with
+//!   document size (O(nnz) per kernel evaluation);
+//! * b-bit estimated kernel (match counts / k) — per-update cost O(k);
+//! * accuracy of both vs the k sweep at C = 1, b = 8.
+
+use std::time::Instant;
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use crate::coordinator::report::{print_table, write_rows_csv};
+use crate::experiments::common::{corpus_split, out_path, secs};
+use crate::solvers::kernel_svm::{
+    train_kernel_svm, BbitKernel, KernelSvmOptions, ResemblanceKernel,
+};
+
+pub fn run(cfg: &RunConfig) -> anyhow::Result<()> {
+    let (train, test) = corpus_split(cfg);
+    // Kernel SVM is O(n²)-ish; cap the sample for the table.
+    let n_cap = train.n().min(1500);
+    let train_rows: Vec<usize> = (0..n_cap).collect();
+    let train_small = train.subset(&train_rows);
+    let test_rows: Vec<usize> = (0..test.n().min(500)).collect();
+    let test_small = test.subset(&test_rows);
+    let b = 8u32;
+    let k_list: Vec<usize> = cfg
+        .k_list
+        .iter()
+        .copied()
+        .filter(|&k| k <= 500)
+        .collect();
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+
+    // ---- exact resemblance kernel (the ">1 week" configuration) ---------
+    let t0 = Instant::now();
+    let kernel = ResemblanceKernel { data: &train_small };
+    let model = train_kernel_svm(&kernel, &KernelSvmOptions::default());
+    let exact_train_time = t0.elapsed();
+    let acc_exact = {
+        let mut correct = 0usize;
+        for t in 0..test_small.n() {
+            let tv = test_small.row_vec(t);
+            let s = model.score_with(|j| tv.resemblance(&train_small.row_vec(j)));
+            if (s >= 0.0) == (test_small.label(t) > 0.0) {
+                correct += 1;
+            }
+        }
+        correct as f64 / test_small.n() as f64
+    };
+    rows.push(vec![
+        0.0,
+        0.0,
+        acc_exact,
+        exact_train_time.as_secs_f64(),
+        model.n_support() as f64,
+    ]);
+    table.push(vec![
+        "exact resemblance".into(),
+        "-".into(),
+        format!("{acc_exact:.4}"),
+        secs(exact_train_time.as_secs_f64()),
+        model.n_support().to_string(),
+    ]);
+
+    // ---- b-bit estimated kernel across k ---------------------------------
+    let pipe = PipelineOptions {
+        threads: cfg.threads,
+        ..Default::default()
+    };
+    for &k in &k_list {
+        let (sig_tr, _) = hash_dataset(&train_small, k, b, cfg.seed ^ 0x51, &pipe);
+        let (sig_te, _) = hash_dataset(&test_small, k, b, cfg.seed ^ 0x51, &pipe);
+        let t0 = Instant::now();
+        let kernel = BbitKernel { sigs: &sig_tr };
+        let model = train_kernel_svm(&kernel, &KernelSvmOptions::default());
+        let train_time = t0.elapsed();
+        // Cross-kernel: match counts between test and train signatures
+        // (train rows unpacked once — this is the O(k) evaluation that
+        // makes the estimated kernel tractable).
+        let tr_rows: Vec<Vec<u16>> = (0..sig_tr.n()).map(|j| sig_tr.row(j)).collect();
+        let mut correct = 0usize;
+        let mut te_row = vec![0u16; k];
+        for t in 0..sig_te.n() {
+            sig_te.unpack_row_into(t, &mut te_row);
+            let s = model.score_with(|j| {
+                te_row
+                    .iter()
+                    .zip(&tr_rows[j])
+                    .filter(|(a, b)| a == b)
+                    .count() as f64
+                    / k as f64
+            });
+            if (s >= 0.0) == (sig_te.label(t) > 0.0) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / sig_te.n() as f64;
+        rows.push(vec![
+            1.0,
+            k as f64,
+            acc,
+            train_time.as_secs_f64(),
+            model.n_support() as f64,
+        ]);
+        table.push(vec![
+            format!("b-bit kernel k={k}"),
+            k.to_string(),
+            format!("{acc:.4}"),
+            secs(train_time.as_secs_f64()),
+            model.n_support().to_string(),
+        ]);
+    }
+
+    write_rows_csv(
+        "method(0=exact;1=bbit),k,accuracy,train_secs,n_support",
+        &rows,
+        &out_path(cfg, "tab51_kernel_svm.csv"),
+    )?;
+    print_table(
+        &format!(
+            "§5.1: kernel SVM, n_train = {} (C = 1, b = {b})",
+            train_small.n()
+        ),
+        &["kernel", "k", "acc", "train", "#SV"],
+        &table,
+    );
+    println!(
+        "\npaper shape: b-bit kernel at k>=200 ≈ exact-kernel accuracy; exact kernel \
+         cost scales with raw nnz (≈{:.0}/doc here) vs k for the estimated kernel.",
+        train_small.avg_nnz()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab51_tiny_run() {
+        let mut cfg = RunConfig::default();
+        cfg.n_docs = 120;
+        cfg.dim = 1 << 18;
+        cfg.vocab = 3_000;
+        cfg.k_list = vec![32];
+        cfg.out_dir = std::env::temp_dir()
+            .join("bbml_tab51_test")
+            .to_string_lossy()
+            .into_owned();
+        run(&cfg).unwrap();
+        assert!(out_path(&cfg, "tab51_kernel_svm.csv").exists());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

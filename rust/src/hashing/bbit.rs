@@ -1,0 +1,358 @@
+//! b-bit minwise hashing: keep only the lowest b bits of each hashed value
+//! (paper §2), and the bit-packed signature store.
+//!
+//! The whole point of the paper: storing b ∈ {1,2,4,8,16} bits instead of 64
+//! shrinks the dataset to `n·b·k` bits while Theorem 1 still lets you
+//! recover R — and Theorem 2 makes the truncated signatures a PD kernel so
+//! they can feed a *linear* learner directly.
+
+/// Extract the lowest `b` bits of each full hash value.
+#[inline]
+pub fn pack_lowest_bits(full: &[u64], b: u32) -> Vec<u16> {
+    assert!((1..=16).contains(&b), "b must be in 1..=16");
+    let mask = ((1u32 << b) - 1) as u64;
+    full.iter().map(|&z| (z & mask) as u16).collect()
+}
+
+/// A bit-packed matrix of n b-bit signatures of width k.
+///
+/// Storage is exactly `ceil(n*k*b/8)` bytes plus labels — the paper's
+/// `n·b·k` bits claim, realized. Values are packed little-endian within a
+/// contiguous bitstream; row i starts at bit `i*k*b`.
+#[derive(Clone, Debug)]
+pub struct BbitSignatureMatrix {
+    bits: Vec<u8>,
+    n: usize,
+    k: usize,
+    b: u32,
+    labels: Vec<f32>,
+}
+
+impl BbitSignatureMatrix {
+    pub fn new(k: usize, b: u32) -> Self {
+        assert!((1..=16).contains(&b));
+        assert!(k >= 1);
+        Self {
+            bits: Vec::new(),
+            n: 0,
+            k,
+            b,
+            labels: Vec::new(),
+        }
+    }
+
+    /// Pre-allocate for `n` rows.
+    pub fn with_capacity(k: usize, b: u32, n: usize) -> Self {
+        let mut m = Self::new(k, b);
+        m.bits.reserve((n * k * b as usize + 7) / 8 + 1);
+        m.labels.reserve(n);
+        m
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+    #[inline]
+    pub fn b(&self) -> u32 {
+        self.b
+    }
+    #[inline]
+    pub fn width(&self) -> u32 {
+        1 << self.b
+    }
+
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    /// Exact storage size of the packed signatures, in bytes.
+    pub fn storage_bytes(&self) -> usize {
+        self.bits.len()
+    }
+
+    #[inline]
+    fn get_bits(&self, bit_off: usize, nbits: u32) -> u16 {
+        let byte = bit_off / 8;
+        let shift = bit_off % 8;
+        // Fast paths (§Perf): b = 8 and b = 16 are always byte-aligned —
+        // they cover the paper's recommended operating points and are the
+        // hot path of DCD training, match counting and PJRT marshalling.
+        if shift == 0 {
+            if nbits == 8 {
+                return self.bits[byte] as u16;
+            }
+            if nbits == 16 {
+                return u16::from_le_bytes([self.bits[byte], self.bits[byte + 1]]);
+            }
+        }
+        // Generic path: read up to 16 bits little-endian at any alignment
+        // (a 4-byte window always covers nbits <= 16).
+        let mut word = 0u32;
+        for i in 0..4 {
+            if byte + i < self.bits.len() {
+                word |= (self.bits[byte + i] as u32) << (8 * i);
+            }
+        }
+        ((word >> shift) & ((1u32 << nbits) - 1)) as u16
+    }
+
+    #[inline]
+    fn put_bits(&mut self, bit_off: usize, nbits: u32, val: u16) {
+        let end_byte = (bit_off + nbits as usize + 7) / 8;
+        if self.bits.len() < end_byte {
+            self.bits.resize(end_byte, 0);
+        }
+        let byte = bit_off / 8;
+        let shift = bit_off % 8;
+        let mut word = 0u32;
+        for i in 0..4 {
+            if byte + i < self.bits.len() {
+                word |= (self.bits[byte + i] as u32) << (8 * i);
+            }
+        }
+        let mask = ((1u32 << nbits) - 1) << shift;
+        word = (word & !mask) | ((val as u32) << shift);
+        for i in 0..4 {
+            if byte + i < self.bits.len() {
+                self.bits[byte + i] = (word >> (8 * i)) as u8;
+            }
+        }
+    }
+
+    /// Append a row of already-truncated b-bit values.
+    pub fn push_row(&mut self, row: &[u16], label: f32) {
+        assert_eq!(row.len(), self.k, "row width {} != k {}", row.len(), self.k);
+        let width_mask = ((1u32 << self.b) - 1) as u16;
+        let base = self.n * self.k * self.b as usize;
+        for (j, &v) in row.iter().enumerate() {
+            debug_assert_eq!(v & !width_mask, 0, "value {v} exceeds b={} bits", self.b);
+            self.put_bits(base + j * self.b as usize, self.b, v & width_mask);
+        }
+        self.labels.push(label);
+        self.n += 1;
+    }
+
+    /// Append a row from full 64-bit minwise values (truncates to b bits).
+    pub fn push_full_row(&mut self, full: &[u64], label: f32) {
+        let mask = ((1u32 << self.b) - 1) as u64;
+        assert_eq!(full.len(), self.k);
+        let base = self.n * self.k * self.b as usize;
+        for (j, &z) in full.iter().enumerate() {
+            self.put_bits(base + j * self.b as usize, self.b, (z & mask) as u16);
+        }
+        self.labels.push(label);
+        self.n += 1;
+    }
+
+    /// Value at (row, position).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> u16 {
+        debug_assert!(i < self.n && j < self.k);
+        self.get_bits((i * self.k + j) * self.b as usize, self.b)
+    }
+
+    /// Visit row `i`'s values as `(position, value)` without allocating.
+    /// This is the training hot loop (`ExpandedView::for_each_index`);
+    /// b = 8/16 take contiguous-slice fast paths (§Perf).
+    #[inline]
+    pub fn for_each_value<F: FnMut(usize, u16)>(&self, i: usize, mut f: F) {
+        debug_assert!(i < self.n);
+        if self.b == 8 {
+            let base = i * self.k;
+            for (j, &v) in self.bits[base..base + self.k].iter().enumerate() {
+                f(j, v as u16);
+            }
+            return;
+        }
+        if self.b == 16 {
+            let base = i * self.k * 2;
+            for (j, c) in self.bits[base..base + 2 * self.k].chunks_exact(2).enumerate() {
+                f(j, u16::from_le_bytes([c[0], c[1]]));
+            }
+            return;
+        }
+        let base = i * self.k * self.b as usize;
+        for j in 0..self.k {
+            f(j, self.get_bits(base + j * self.b as usize, self.b));
+        }
+    }
+
+    /// Unpack row `i` into `out` (len k).
+    pub fn unpack_row_into(&self, i: usize, out: &mut [u16]) {
+        debug_assert_eq!(out.len(), self.k);
+        self.for_each_value(i, |j, v| out[j] = v);
+    }
+
+    /// Unpack row `i`.
+    pub fn row(&self, i: usize) -> Vec<u16> {
+        let mut out = vec![0u16; self.k];
+        self.unpack_row_into(i, &mut out);
+        out
+    }
+
+    /// Count matching positions between rows i and j — the Gram entry
+    /// `k·P̂_b` (Theorem 2 / eq. (5) numerator).
+    pub fn match_count(&self, i: usize, j: usize) -> usize {
+        // Fast path (§Perf): b = 8 rows are contiguous byte slices — a
+        // direct zip-compare vectorizes and runs ~5x the generic path
+        // (this gates the kernel-SVM Gram row cost, paper §5.1).
+        if self.b == 8 {
+            let (bi, bj) = (i * self.k, j * self.k);
+            return self.bits[bi..bi + self.k]
+                .iter()
+                .zip(&self.bits[bj..bj + self.k])
+                .filter(|(a, b)| a == b)
+                .count();
+        }
+        if self.b == 16 {
+            let (bi, bj) = (i * self.k * 2, j * self.k * 2);
+            let ra = &self.bits[bi..bi + 2 * self.k];
+            let rb = &self.bits[bj..bj + 2 * self.k];
+            return ra
+                .chunks_exact(2)
+                .zip(rb.chunks_exact(2))
+                .filter(|(a, b)| a == b)
+                .count();
+        }
+        let (mut m, bi, bj) = (
+            0usize,
+            i * self.k * self.b as usize,
+            j * self.k * self.b as usize,
+        );
+        for t in 0..self.k {
+            let a = self.get_bits(bi + t * self.b as usize, self.b);
+            let b = self.get_bits(bj + t * self.b as usize, self.b);
+            m += (a == b) as usize;
+        }
+        m
+    }
+
+    /// Unpack the whole matrix as i32s (row-major) — the PJRT input layout.
+    pub fn to_i32_rows(&self, rows: &[usize]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(rows.len() * self.k);
+        let mut buf = vec![0u16; self.k];
+        for &i in rows {
+            self.unpack_row_into(i, &mut buf);
+            out.extend(buf.iter().map(|&v| v as i32));
+        }
+        out
+    }
+
+    /// Merge another matrix with identical (k, b) — used by the sharded
+    /// pipeline to combine worker outputs in order.
+    pub fn append(&mut self, other: &BbitSignatureMatrix) {
+        assert_eq!(self.k, other.k);
+        assert_eq!(self.b, other.b);
+        let mut buf = vec![0u16; self.k];
+        for i in 0..other.n {
+            other.unpack_row_into(i, &mut buf);
+            self.push_row(&buf, other.labels[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn pack_lowest_bits_examples_from_paper() {
+        // Paper §4 worked example: hashed values {12013, 25964, 20191},
+        // b = 2 keeps {01, 00, 11} = {1, 0, 3}.
+        let packed = pack_lowest_bits(&[12013, 25964, 20191], 2);
+        assert_eq!(packed, vec![1, 0, 3]);
+    }
+
+    #[test]
+    fn roundtrip_all_b_values() {
+        for b in [1u32, 2, 3, 4, 7, 8, 12, 16] {
+            let k = 13; // deliberately odd width
+            let mut m = BbitSignatureMatrix::new(k, b);
+            let mut rng = Xoshiro256::seed_from_u64(b as u64);
+            let mut rows = Vec::new();
+            for _ in 0..37 {
+                let row: Vec<u16> = (0..k)
+                    .map(|_| (rng.next_u32() & ((1u32 << b) - 1)) as u16)
+                    .collect();
+                m.push_row(&row, 1.0);
+                rows.push(row);
+            }
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(&m.row(i), row, "b={b} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_nbk_bits() {
+        let (n, k, b) = (100usize, 200usize, 8u32);
+        let mut m = BbitSignatureMatrix::with_capacity(k, b, n);
+        let row = vec![0u16; k];
+        for _ in 0..n {
+            m.push_row(&row, -1.0);
+        }
+        let expect_bytes = (n * k * b as usize + 7) / 8;
+        assert!(
+            m.storage_bytes() <= expect_bytes + 4,
+            "{} vs {}",
+            m.storage_bytes(),
+            expect_bytes
+        );
+    }
+
+    #[test]
+    fn push_full_row_truncates() {
+        let mut m = BbitSignatureMatrix::new(3, 2);
+        m.push_full_row(&[12013, 25964, 20191], 1.0);
+        assert_eq!(m.row(0), vec![1, 0, 3]);
+    }
+
+    #[test]
+    fn match_count_counts_equal_positions() {
+        let mut m = BbitSignatureMatrix::new(4, 4);
+        m.push_row(&[1, 2, 3, 4], 1.0);
+        m.push_row(&[1, 9, 3, 7], -1.0);
+        assert_eq!(m.match_count(0, 1), 2);
+        assert_eq!(m.match_count(0, 0), 4);
+    }
+
+    #[test]
+    fn to_i32_rows_layout() {
+        let mut m = BbitSignatureMatrix::new(2, 8);
+        m.push_row(&[10, 20], 1.0);
+        m.push_row(&[30, 40], -1.0);
+        assert_eq!(m.to_i32_rows(&[1, 0]), vec![30, 40, 10, 20]);
+    }
+
+    #[test]
+    fn append_preserves_rows_and_labels() {
+        let mut a = BbitSignatureMatrix::new(3, 5);
+        a.push_row(&[1, 2, 3], 1.0);
+        let mut b = BbitSignatureMatrix::new(3, 5);
+        b.push_row(&[4, 5, 6], -1.0);
+        b.push_row(&[7, 8, 9], 1.0);
+        a.append(&b);
+        assert_eq!(a.n(), 3);
+        assert_eq!(a.row(1), vec![4, 5, 6]);
+        assert_eq!(a.row(2), vec![7, 8, 9]);
+        assert_eq!(a.labels(), &[1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_row_rejects_wrong_width() {
+        let mut m = BbitSignatureMatrix::new(4, 4);
+        m.push_row(&[1, 2], 1.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Statistical estimators over the hashing substrates.
+//!
+//! * [`estimate_r_bbit`] — R̂_b from b-bit signatures (eq. 5) with the
+//!   Theorem-1 bias correction.
+//! * [`estimate_a_from_r`] — â = R̂/(1+R̂)·(f₁+f₂) (Appendix C).
+//! * [`estimate_r_bbit_vw`] — R̂_{b,vw}: VW applied on top of the expanded
+//!   b-bit vectors (paper §8 / Lemma 2), the trick that cuts training time
+//!   for b = 16.
+
+use super::bbit::BbitSignatureMatrix;
+use super::expand::expand_signature;
+use super::vw::VwHasher;
+use crate::theory::pb::BbitConstants;
+
+/// P̂_b: fraction of matching positions between two b-bit signature rows.
+pub fn p_hat(sig1: &[u16], sig2: &[u16]) -> f64 {
+    assert_eq!(sig1.len(), sig2.len());
+    assert!(!sig1.is_empty());
+    let m = sig1.iter().zip(sig2).filter(|(a, b)| a == b).count();
+    m as f64 / sig1.len() as f64
+}
+
+/// R̂_b = (P̂_b − C₁,b)/(1 − C₂,b) (eq. 5). Requires the set cardinalities
+/// (f₁, f₂) and universe size D for the Theorem-1 constants.
+pub fn estimate_r_bbit(
+    sig1: &[u16],
+    sig2: &[u16],
+    f1: u64,
+    f2: u64,
+    d: u64,
+    b: u32,
+) -> f64 {
+    let c = BbitConstants::from_cardinalities(f1, f2, d, b);
+    c.r_from_pb(p_hat(sig1, sig2))
+}
+
+/// â = R̂/(1 + R̂) · (f₁ + f₂) — inner-product recovery (Appendix C).
+pub fn estimate_a_from_r(r_hat: f64, f1: u64, f2: u64) -> f64 {
+    r_hat / (1.0 + r_hat) * (f1 + f2) as f64
+}
+
+/// R̂_{b,vw} (paper §8): instead of counting matches T exactly, expand both
+/// signatures to 2^b·k-dim binary vectors, VW-hash them to size m, and
+/// estimate T as the VW inner product. Unbiased (Lemma 2, eq. 18) with the
+/// eq. (19) variance. Worthwhile when m ≪ 2^b·k (i.e. large b).
+pub fn estimate_r_bbit_vw(
+    sig1: &[u16],
+    sig2: &[u16],
+    b: u32,
+    vw: &VwHasher,
+    f1: u64,
+    f2: u64,
+    d: u64,
+) -> f64 {
+    assert_eq!(sig1.len(), sig2.len());
+    let k = sig1.len();
+    let e1 = expand_signature(sig1, b);
+    let e2 = expand_signature(sig2, b);
+    let g1 = vw.hash_binary(&e1);
+    let g2 = vw.hash_binary(&e2);
+    let t_hat = VwHasher::estimate_inner_product(&g1, &g2);
+    let p_hat = t_hat / k as f64;
+    BbitConstants::from_cardinalities(f1, f2, d, b).r_from_pb(p_hat)
+}
+
+/// All-pairs resemblance estimates within a signature matrix (upper
+/// triangle, row-major) — used by the near-duplicate example and tests.
+pub fn pairwise_r_bbit(
+    m: &BbitSignatureMatrix,
+    cardinalities: &[u64],
+    d: u64,
+) -> Vec<(usize, usize, f64)> {
+    assert_eq!(cardinalities.len(), m.n());
+    let mut out = Vec::new();
+    let mut ri = vec![0u16; m.k()];
+    let mut rj = vec![0u16; m.k()];
+    for i in 0..m.n() {
+        m.unpack_row_into(i, &mut ri);
+        for j in (i + 1)..m.n() {
+            m.unpack_row_into(j, &mut rj);
+            let r = estimate_r_bbit(&ri, &rj, cardinalities[i], cardinalities[j], d, m.b());
+            out.push((i, j, r));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::bbit::pack_lowest_bits;
+    use crate::hashing::minwise::MinwiseHasher;
+    use crate::theory::variance::{var_bbit, var_bbit_vw};
+
+    /// Helper: average R̂_b over `reps` independent hashers.
+    fn mc_bbit(
+        s1: &[u64],
+        s2: &[u64],
+        d: u64,
+        k: usize,
+        b: u32,
+        reps: u64,
+    ) -> (f64, f64) {
+        let (f1, f2) = (s1.len() as u64, s2.len() as u64);
+        let mut est = Vec::with_capacity(reps as usize);
+        for seed in 0..reps {
+            let h = MinwiseHasher::new(d, k, 100 + seed);
+            let z1 = pack_lowest_bits(&h.signature(s1), b);
+            let z2 = pack_lowest_bits(&h.signature(s2), b);
+            est.push(estimate_r_bbit(&z1, &z2, f1, f2, d, b));
+        }
+        let mean: f64 = est.iter().sum::<f64>() / est.len() as f64;
+        let var: f64 =
+            est.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / est.len() as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn p_hat_counts_matches() {
+        assert_eq!(p_hat(&[1, 2, 3, 4], &[1, 9, 3, 8]), 0.5);
+        assert_eq!(p_hat(&[5], &[5]), 1.0);
+    }
+
+    #[test]
+    fn r_bbit_is_consistent_across_b() {
+        // R = 1/2 example; all b give (roughly) unbiased estimates.
+        let d = 1 << 18;
+        let s1: Vec<u64> = (0..120).collect();
+        let s2: Vec<u64> = (40..160).collect(); // a=80, u=160, R=0.5
+        for b in [1u32, 2, 4, 8] {
+            let (mean, _) = mc_bbit(&s1, &s2, d, 128, b, 150);
+            assert!((mean - 0.5).abs() < 0.05, "b={b}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn r_bbit_variance_matches_eq6() {
+        let d = 1 << 18;
+        let s1: Vec<u64> = (0..120).collect();
+        let s2: Vec<u64> = (40..160).collect();
+        let r = 0.5;
+        let k = 64;
+        for b in [1u32, 2, 4] {
+            let (_, var) = mc_bbit(&s1, &s2, d, k, b, 1500);
+            let c = BbitConstants::from_cardinalities(120, 120, d, b);
+            let theory = var_bbit(&c, r, k);
+            assert!(
+                (var - theory).abs() < 0.2 * theory,
+                "b={b}: var {var} vs {theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_ordering_matches_paper() {
+        // Var(R̂_1) > Var(R̂_2) > Var(R̂_4) at equal k (Fig. 2's mechanism).
+        let d = 1 << 18;
+        let s1: Vec<u64> = (0..120).collect();
+        let s2: Vec<u64> = (40..160).collect();
+        let v1 = mc_bbit(&s1, &s2, d, 64, 1, 800).1;
+        let v4 = mc_bbit(&s1, &s2, d, 64, 4, 800).1;
+        assert!(v1 > v4, "var b=1 {v1} !> var b=4 {v4}");
+    }
+
+    #[test]
+    fn a_from_r_recovers_intersection() {
+        // R = a/(f1+f2-a) ⇒ a = R/(1+R)(f1+f2).
+        let (f1, f2, a) = (300u64, 200u64, 100u64);
+        let r = a as f64 / (f1 + f2 - a) as f64;
+        let a_hat = estimate_a_from_r(r, f1, f2);
+        assert!((a_hat - a as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bbit_vw_is_unbiased_and_lemma2_variance_holds() {
+        // §8: apply VW (size m) on top of b-bit hashing; mean stays R and
+        // the variance follows eq. (19).
+        let d = 1 << 18;
+        let s1: Vec<u64> = (0..120).collect();
+        let s2: Vec<u64> = (40..160).collect();
+        let (f1, f2) = (120u64, 120u64);
+        let r = 0.5;
+        let (k, b) = (32usize, 8u32);
+        let m = 8 * k; // m = 2^3 k
+        let reps = 1200;
+        let mut est = Vec::with_capacity(reps as usize);
+        for seed in 0..reps {
+            let h = MinwiseHasher::new(d, k, 300 + seed);
+            let z1 = pack_lowest_bits(&h.signature(&s1), b);
+            let z2 = pack_lowest_bits(&h.signature(&s2), b);
+            let vw = VwHasher::new(m, 900_000 + seed);
+            est.push(estimate_r_bbit_vw(&z1, &z2, b, &vw, f1, f2, d));
+        }
+        let mean: f64 = est.iter().sum::<f64>() / est.len() as f64;
+        let var: f64 =
+            est.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / est.len() as f64;
+        let c = BbitConstants::from_cardinalities(f1, f2, d, b);
+        let theory = var_bbit_vw(&c, r, k, m);
+        assert!((mean - r).abs() < 0.06, "mean {mean}");
+        assert!(
+            (var - theory).abs() < 0.25 * theory,
+            "var {var} vs theory {theory}"
+        );
+    }
+
+    #[test]
+    fn pairwise_finds_the_similar_pair() {
+        let d = 1 << 18;
+        let a: Vec<u64> = (0..100).collect();
+        let b_set: Vec<u64> = (10..110).collect(); // R(a,b) ≈ 0.82
+        let c_set: Vec<u64> = (5000..5100).collect(); // unrelated
+        let h = MinwiseHasher::new(d, 128, 5);
+        let mut m = BbitSignatureMatrix::new(128, 8);
+        for s in [&a, &b_set, &c_set] {
+            m.push_full_row(&h.signature(s), 1.0);
+        }
+        let cards = vec![100u64, 100, 100];
+        let pairs = pairwise_r_bbit(&m, &cards, d);
+        let get = |i, j| {
+            pairs
+                .iter()
+                .find(|&&(x, y, _)| (x, y) == (i, j))
+                .unwrap()
+                .2
+        };
+        assert!(get(0, 1) > 0.6, "R(a,b) = {}", get(0, 1));
+        assert!(get(0, 2) < 0.2, "R(a,c) = {}", get(0, 2));
+        assert!(get(1, 2) < 0.2);
+    }
+}

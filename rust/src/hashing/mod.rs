@@ -1,0 +1,25 @@
+//! Hashing substrates: the paper's method and every compared baseline.
+//!
+//! * [`perm`] — random permutations of Ω (exact Fisher–Yates for small D,
+//!   universal-hash simulation for D up to 2^64 — paper §9).
+//! * [`minwise`] — classic minwise hashing signatures (paper §2).
+//! * [`bbit`] — b-bit truncation + packed signature storage (nbk bits).
+//! * [`expand`] — the Theorem-2 one-hot expansion into 2^b·k-dim features.
+//! * [`vw`] — VW feature hashing (Weinberger et al., the algorithm the
+//!   paper calls "VW") and the Count-Min sketch, incl. the unbiased CM
+//!   variant of eq. (22).
+//! * [`projections`] — dense and sparse random projections (paper §6.1).
+//! * [`estimators`] — the statistical estimators built on all of the above.
+
+pub mod bbit;
+pub mod estimators;
+pub mod expand;
+pub mod minwise;
+pub mod perm;
+pub mod projections;
+pub mod vw;
+
+pub use bbit::{BbitSignatureMatrix, pack_lowest_bits};
+pub use expand::expand_signature;
+pub use minwise::MinwiseHasher;
+pub use perm::Permutation;

@@ -1,0 +1,215 @@
+//! Random permutations π : Ω → Ω.
+//!
+//! Minwise hashing needs k independent permutations of the feature space
+//! (paper §2). For the exact-probability studies (Appendix A, small D) we
+//! use true Fisher–Yates permutations; for production-scale D (2^24…2^64)
+//! materializing a permutation is impossible, so we *simulate* one with an
+//! invertible mixing function — "it is well-understood in practice that we
+//! can use (good) hashing functions to very efficiently simulate
+//! permutations" (paper §9).
+//!
+//! The simulated permutation is a bijection on [0, 2^64): a fixed-key
+//! variant of the SplitMix64 finalizer (invertible multiply-xorshift
+//! rounds), salted per permutation index. For D < 2^64 we use *cycle
+//! walking*: apply the 2^64-bijection until the value lands in [0, D).
+//! This yields an exact bijection on [0, D) with expected <2 applications
+//! for D ≥ 2^63, and for D ≪ 2^64 we instead mix within the smallest
+//! power-of-two ≥ D, which needs an expected <2 steps always.
+
+use crate::rng::Xoshiro256;
+
+/// A permutation of `[0, d)`.
+pub trait Permuter {
+    fn apply(&self, x: u64) -> u64;
+    fn d(&self) -> u64;
+}
+
+/// Exact permutation (Fisher–Yates table) — small D only (Appendix A).
+#[derive(Clone, Debug)]
+pub struct ExactPermutation {
+    table: Vec<u64>,
+}
+
+impl ExactPermutation {
+    pub fn new(d: u64, seed: u64) -> Self {
+        assert!(d <= 1 << 24, "ExactPermutation is for small D");
+        let mut table: Vec<u64> = (0..d).collect();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        rng.shuffle(&mut table);
+        Self { table }
+    }
+}
+
+impl Permuter for ExactPermutation {
+    #[inline]
+    fn apply(&self, x: u64) -> u64 {
+        self.table[x as usize]
+    }
+    fn d(&self) -> u64 {
+        self.table.len() as u64
+    }
+}
+
+/// Simulated permutation via invertible mixing + cycle walking (paper §9).
+#[derive(Clone, Debug)]
+pub struct Permutation {
+    d: u64,
+    /// Power-of-two modulus ≥ d for the walking domain.
+    mask: u64,
+    /// Domain bit-width (precomputed — §Perf: `trailing_ones` per apply
+    /// showed up in the signature hot loop).
+    half_bits: u32,
+    /// Per-permutation odd multipliers / xor keys derived from the seed.
+    keys: [u64; 4],
+}
+
+impl Permutation {
+    /// Create the permutation with index `perm_idx` from a master `seed`.
+    pub fn new(d: u64, seed: u64, perm_idx: u64) -> Self {
+        assert!(d >= 1);
+        let mut rng = Xoshiro256::seed_from_u64(
+            seed ^ perm_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1),
+        );
+        // Walking domain: smallest power of two >= d (all-ones mask).
+        // d > 2^63 would overflow next_power_of_two(), so saturate to 2^64.
+        let mask = if d.is_power_of_two() {
+            d - 1
+        } else if d > (1u64 << 63) {
+            u64::MAX
+        } else {
+            d.next_power_of_two() - 1
+        };
+        let keys = [
+            rng.next_u64() | 1, // odd multiplier
+            rng.next_u64(),
+            rng.next_u64() | 1, // odd multiplier
+            rng.next_u64(),
+        ];
+        let half_bits = (mask.trailing_ones() / 2).max(1);
+        Self {
+            d,
+            mask,
+            half_bits,
+            keys,
+        }
+    }
+
+    /// One invertible mixing round on the power-of-two domain `mask+1`.
+    /// Each step (xor-shift, odd multiply mod 2^m, xor) is a bijection on
+    /// [0, 2^m), so the composition is too.
+    #[inline]
+    fn mix(&self, mut x: u64) -> u64 {
+        x ^= self.keys[1] & self.mask;
+        x = x.wrapping_mul(self.keys[0]) & self.mask;
+        x ^= (x >> self.half_bits) & self.mask;
+        x = x.wrapping_mul(self.keys[2]) & self.mask;
+        x ^= self.keys[3] & self.mask;
+        x &= self.mask;
+        x ^= x >> self.half_bits;
+        x = x.wrapping_mul(self.keys[0]) & self.mask;
+        x & self.mask
+    }
+}
+
+impl Permuter for Permutation {
+    /// Apply π(x). Cycle-walks until the image lands in [0, d).
+    #[inline]
+    fn apply(&self, x: u64) -> u64 {
+        debug_assert!(x < self.d);
+        let mut y = self.mix(x);
+        while y >= self.d {
+            y = self.mix(y);
+        }
+        y
+    }
+
+    fn d(&self) -> u64 {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn exact_permutation_is_bijective() {
+        let p = ExactPermutation::new(1000, 7);
+        let images: HashSet<u64> = (0..1000).map(|x| p.apply(x)).collect();
+        assert_eq!(images.len(), 1000);
+        assert!(images.iter().all(|&y| y < 1000));
+    }
+
+    #[test]
+    fn simulated_permutation_is_bijective_small() {
+        for d in [1u64, 2, 3, 17, 100, 1024, 4099] {
+            let p = Permutation::new(d, 42, 0);
+            let images: HashSet<u64> = (0..d).map(|x| p.apply(x)).collect();
+            assert_eq!(images.len() as u64, d, "d={d}");
+            assert!(images.iter().all(|&y| y < d));
+        }
+    }
+
+    #[test]
+    fn different_indices_give_different_permutations() {
+        let d = 1000;
+        let p0 = Permutation::new(d, 42, 0);
+        let p1 = Permutation::new(d, 42, 1);
+        let same = (0..d).filter(|&x| p0.apply(x) == p1.apply(x)).count();
+        // Two random permutations agree on ~1 point in expectation.
+        assert!(same < 10, "agree on {same} points");
+    }
+
+    #[test]
+    fn permutation_is_deterministic() {
+        let p1 = Permutation::new(1 << 20, 9, 3);
+        let p2 = Permutation::new(1 << 20, 9, 3);
+        for x in [0u64, 1, 999, 1 << 19] {
+            assert_eq!(p1.apply(x), p2.apply(x));
+        }
+    }
+
+    #[test]
+    fn min_of_permuted_set_is_roughly_uniform() {
+        // Pr(min over a random f-subset) sanity: the minimum of π(S) for
+        // |S| = f should be ~ D/(f+1) in expectation.
+        let d = 1 << 16;
+        let f = 63;
+        let mut acc = 0.0;
+        let trials = 300;
+        for t in 0..trials {
+            let p = Permutation::new(d, 1234, t);
+            let m = (0..f).map(|i| p.apply(i * 997 % d)).min().unwrap();
+            acc += m as f64;
+        }
+        let mean = acc / trials as f64;
+        let expect = d as f64 / (f as f64 + 1.0);
+        assert!(
+            (mean - expect).abs() < 0.3 * expect,
+            "mean {mean} vs expect {expect}"
+        );
+    }
+
+    #[test]
+    fn collision_probability_estimates_resemblance() {
+        // Core minwise property (paper eq. (1)): Pr(min π(S1) = min π(S2)) = R.
+        let d: u64 = 1 << 14;
+        let s1: Vec<u64> = (0..80).collect();
+        let s2: Vec<u64> = (40..120).collect(); // R = 40/120 = 1/3
+        let trials = 3000;
+        let mut coll = 0;
+        for t in 0..trials {
+            let p = Permutation::new(d, 777, t);
+            let m1 = s1.iter().map(|&x| p.apply(x)).min().unwrap();
+            let m2 = s2.iter().map(|&x| p.apply(x)).min().unwrap();
+            if m1 == m2 {
+                coll += 1;
+            }
+        }
+        let r_hat = coll as f64 / trials as f64;
+        let r = 1.0 / 3.0;
+        // std ≈ sqrt(R(1-R)/trials) ≈ 0.0086; allow 4σ.
+        assert!((r_hat - r).abs() < 0.035, "R̂ = {r_hat}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Random projections (paper §6.1): dense Gaussian (s = 3), Rademacher
+//! (s = 1) and the sparse family of eq. (12) for general s ≥ 1.
+//!
+//! v_j = Σ_i u_i · r_ij with r_ij i.i.d. satisfying eq. (11); the estimator
+//! â_rp = (1/k) Σ_j v1_j v2_j is unbiased with the variance of eq. (14).
+//! The entries r_ij are generated deterministically per (i, j) so two
+//! vectors can be projected independently yet consistently (no D×k matrix
+//! is ever materialized — D can be 2^64).
+
+use crate::rng::Xoshiro256;
+
+/// Which distribution the projection entries are drawn from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProjectionKind {
+    /// N(0, 1): s = E r⁴ = 3.
+    Gaussian,
+    /// ±1 equiprobable: s = 1 (minimum variance, eq. 14).
+    Rademacher,
+    /// The sparse distribution of eq. (12) with parameter s ≥ 1
+    /// ("very sparse random projections" for large s).
+    Sparse(f64),
+}
+
+impl ProjectionKind {
+    /// The fourth moment s = E r⁴ of this distribution.
+    pub fn s(&self) -> f64 {
+        match self {
+            ProjectionKind::Gaussian => 3.0,
+            ProjectionKind::Rademacher => 1.0,
+            ProjectionKind::Sparse(s) => *s,
+        }
+    }
+}
+
+/// Deterministic random-projection transform into k dimensions.
+#[derive(Clone, Debug)]
+pub struct RandomProjection {
+    pub k: usize,
+    pub kind: ProjectionKind,
+    seed: u64,
+}
+
+impl RandomProjection {
+    pub fn new(k: usize, kind: ProjectionKind, seed: u64) -> Self {
+        assert!(k >= 1);
+        if let ProjectionKind::Sparse(s) = kind {
+            assert!(s >= 1.0, "eq. (11) requires s >= 1");
+        }
+        Self { k, kind, seed }
+    }
+
+    /// Projection entry r_ij, deterministic per (i, j).
+    #[inline]
+    pub fn entry(&self, i: u64, j: usize) -> f64 {
+        let mut rng = Xoshiro256::seed_from_u64(
+            self.seed
+                ^ i.wrapping_mul(0xD6E8_FEB8_6659_FD93)
+                ^ (j as u64).wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        match self.kind {
+            ProjectionKind::Gaussian => rng.gen_normal(),
+            ProjectionKind::Rademacher => rng.gen_sign(),
+            ProjectionKind::Sparse(s) => {
+                let u = rng.gen_f64();
+                let p = 1.0 / (2.0 * s);
+                if u < p {
+                    s.sqrt()
+                } else if u < 2.0 * p {
+                    -s.sqrt()
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Project a sparse binary vector (sorted indices).
+    pub fn project_binary(&self, set: &[u64]) -> Vec<f64> {
+        let mut v = vec![0.0; self.k];
+        for &i in set {
+            for (j, vj) in v.iter_mut().enumerate() {
+                *vj += self.entry(i, j);
+            }
+        }
+        v
+    }
+
+    /// Project a dense real vector.
+    pub fn project_dense(&self, u: &[f64]) -> Vec<f64> {
+        let mut v = vec![0.0; self.k];
+        for (i, &ui) in u.iter().enumerate() {
+            if ui != 0.0 {
+                for (j, vj) in v.iter_mut().enumerate() {
+                    *vj += ui * self.entry(i as u64, j);
+                }
+            }
+        }
+        v
+    }
+
+    /// Unbiased inner-product estimator â_rp = (1/k)·Σ_j v1_j v2_j (eq. 13).
+    pub fn estimate_inner_product(v1: &[f64], v2: &[f64]) -> f64 {
+        assert_eq!(v1.len(), v2.len());
+        assert!(!v1.is_empty());
+        v1.iter().zip(v2).map(|(a, b)| a * b).sum::<f64>() / v1.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical_var(
+        kind: ProjectionKind,
+        s1: &[u64],
+        s2: &[u64],
+        k: usize,
+        reps: u64,
+    ) -> (f64, f64) {
+        let mut est = Vec::with_capacity(reps as usize);
+        for seed in 0..reps {
+            let rp = RandomProjection::new(k, kind, 31_000 + seed);
+            est.push(RandomProjection::estimate_inner_product(
+                &rp.project_binary(s1),
+                &rp.project_binary(s2),
+            ));
+        }
+        let mean: f64 = est.iter().sum::<f64>() / est.len() as f64;
+        let var: f64 =
+            est.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / est.len() as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn unbiased_all_kinds() {
+        // a = 15 for these sets.
+        let s1: Vec<u64> = (0..30).collect();
+        let s2: Vec<u64> = (15..45).collect();
+        for kind in [
+            ProjectionKind::Rademacher,
+            ProjectionKind::Gaussian,
+            ProjectionKind::Sparse(4.0),
+        ] {
+            let (mean, _) = empirical_var(kind, &s1, &s2, 64, 800);
+            assert!((mean - 15.0).abs() < 1.2, "{kind:?} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn variance_matches_eq14_binary() {
+        // Binary data: Σu² = f, Σ u1²u2² = a. eq. (14):
+        // Var = [f1·f2 + a² + (s−3)·a] / k.
+        let s1: Vec<u64> = (0..40).collect();
+        let s2: Vec<u64> = (20..60).collect(); // a = 20
+        let (f1, f2, a) = (40.0, 40.0, 20.0);
+        let k = 32;
+        for (kind, s) in [
+            (ProjectionKind::Rademacher, 1.0),
+            (ProjectionKind::Gaussian, 3.0),
+        ] {
+            let (_, var) = empirical_var(kind, &s1, &s2, k, 3000);
+            let theory = (f1 * f2 + a * a + (s - 3.0) * a) / k as f64;
+            assert!(
+                (var - theory).abs() < 0.15 * theory,
+                "{kind:?}: var {var} vs theory {theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn s1_has_smallest_variance() {
+        // The paper: s = 1 minimizes eq. (14). On binary data the
+        // (s−3)·Σu1²u2² term is small relative to f1·f2, so we use spiky
+        // *dense* vectors (Σu1²u2² ≈ Σu1²·Σu2²) where the separation
+        // between s = 1 and s = 3 is ~2× rather than ~2%.
+        let u: Vec<f64> = (0..8).map(|i| if i == 0 { 10.0 } else { 0.5 }).collect();
+        let k = 16;
+        let reps = 3000u64;
+        let mut var = |kind: ProjectionKind| {
+            let mut est = Vec::new();
+            for seed in 0..reps {
+                let rp = RandomProjection::new(k, kind, 61_000 + seed);
+                let v = rp.project_dense(&u);
+                est.push(RandomProjection::estimate_inner_product(&v, &v));
+            }
+            let mean: f64 = est.iter().sum::<f64>() / est.len() as f64;
+            est.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / est.len() as f64
+        };
+        let var_rad = var(ProjectionKind::Rademacher);
+        let var_gau = var(ProjectionKind::Gaussian);
+        assert!(
+            var_rad < 0.7 * var_gau,
+            "rad {var_rad} vs gauss {var_gau}"
+        );
+    }
+
+    #[test]
+    fn sparse_entries_have_right_moments() {
+        let rp = RandomProjection::new(1, ProjectionKind::Sparse(16.0), 99);
+        let n = 100_000u64;
+        let (mut zero, mut m2, mut m4) = (0usize, 0.0, 0.0);
+        for i in 0..n {
+            let r = rp.entry(i, 0);
+            if r == 0.0 {
+                zero += 1;
+            }
+            m2 += r * r;
+            m4 += r * r * r * r;
+        }
+        let nf = n as f64;
+        assert!((zero as f64 / nf - (1.0 - 1.0 / 16.0)).abs() < 0.01);
+        assert!((m2 / nf - 1.0).abs() < 0.05);
+        assert!((m4 / nf - 16.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn projection_is_deterministic() {
+        let rp = RandomProjection::new(16, ProjectionKind::Gaussian, 5);
+        let set: Vec<u64> = vec![1, 100, 10_000];
+        assert_eq!(rp.project_binary(&set), rp.project_binary(&set));
+    }
+
+    #[test]
+    fn dense_and_binary_agree_on_indicator_vectors() {
+        let rp = RandomProjection::new(8, ProjectionKind::Rademacher, 21);
+        let set: Vec<u64> = vec![2, 5, 7];
+        let mut dense = vec![0.0; 10];
+        for &i in &set {
+            dense[i as usize] = 1.0;
+        }
+        let a = rp.project_binary(&set);
+        let b = rp.project_dense(&dense);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

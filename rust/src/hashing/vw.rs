@@ -1,0 +1,362 @@
+//! The VW algorithm (Weinberger et al. [34]) and the Count-Min sketch [12].
+//!
+//! "VW" throughout this crate means exactly what the paper means in §6.2:
+//! pre-multiply the data vector element-wise by random signs r_i, then hash
+//! each coordinate uniformly into one of k buckets and sum:
+//!
+//!   g_j = Σ_i u_i · r_i · 1{h(i) = j}
+//!
+//! The inner-product estimator â_vw = Σ_j g1_j·g2_j is unbiased (Lemma 1).
+//! We implement the paper's generalization to any sub-Gaussian r with
+//! E r = 0, E r² = 1, E r³ = 0, E r⁴ = s via the sparse distribution of
+//! eq. (12) — s = 1 recovers VW's Rademacher signs, and Lemma 1's variance
+//! shows why s = 1 is "essentially the only option".
+//!
+//! The Count-Min sketch is the same bucketing *without* the sign
+//! pre-multiplication; â_cm is biased (eq. 20), the classic count-min
+//! estimate takes a minimum over rows, and eq. (22) gives the simple
+//! unbiased correction â_cm,nb.
+
+
+/// Mix an index with a seed into a 64-bit hash (SplitMix64 finalizer).
+#[inline]
+fn mix_index(i: u64, seed: u64) -> u64 {
+    let mut z = i ^ seed;
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// VW feature hashing with the generalized pre-multiplier of paper §6.2.
+#[derive(Clone, Debug)]
+pub struct VwHasher {
+    /// Number of buckets k (the sample size).
+    pub k: usize,
+    /// Fourth-moment parameter s ≥ 1 of the pre-multiplier (s = 1 is VW).
+    pub s: f64,
+    seed: u64,
+}
+
+impl VwHasher {
+    /// Standard VW (s = 1, Rademacher signs).
+    pub fn new(k: usize, seed: u64) -> Self {
+        Self::with_s(k, 1.0, seed)
+    }
+
+    /// Generalized variant with E r⁴ = s (sparse distribution, eq. 12).
+    pub fn with_s(k: usize, s: f64, seed: u64) -> Self {
+        assert!(k >= 1);
+        assert!(s >= 1.0, "eq. (11) requires s >= 1");
+        Self { k, s, seed }
+    }
+
+    /// Bucket h(i) ∈ [0, k).
+    #[inline]
+    pub fn bucket(&self, i: u64) -> usize {
+        (mix_index(i, self.seed) % self.k as u64) as usize
+    }
+
+    /// Pre-multiplier r_i (deterministic per index): the eq. (12) sparse
+    /// distribution — ±√s w.p. 1/(2s) each, 0 w.p. 1 − 1/s.
+    #[inline]
+    pub fn r(&self, i: u64) -> f64 {
+        let h = mix_index(i, self.seed ^ 0xDEAD_BEEF_CAFE_F00D);
+        if self.s == 1.0 {
+            // Fast path: pure sign.
+            return if h & 1 == 0 { 1.0 } else { -1.0 };
+        }
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let p = 1.0 / (2.0 * self.s);
+        if u < p {
+            self.s.sqrt()
+        } else if u < 2.0 * p {
+            -self.s.sqrt()
+        } else {
+            0.0
+        }
+    }
+
+    /// Hash a *sparse binary* vector (sorted indices) into the k-dim sample.
+    pub fn hash_binary(&self, set: &[u64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.k];
+        for &i in set {
+            g[self.bucket(i)] += self.r(i);
+        }
+        g
+    }
+
+    /// Hash a dense real vector.
+    pub fn hash_dense(&self, u: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.k];
+        for (i, &v) in u.iter().enumerate() {
+            if v != 0.0 {
+                g[self.bucket(i as u64)] += v * self.r(i as u64);
+            }
+        }
+        g
+    }
+
+    /// Sparse output of `hash_binary`: (bucket, value) pairs, zeros skipped.
+    /// VW is *sparsity-preserving* (paper §7): nnz(out) ≤ nnz(in).
+    pub fn hash_binary_sparse(&self, set: &[u64]) -> Vec<(u32, f32)> {
+        let mut dense = std::collections::HashMap::<u32, f64>::new();
+        for &i in set {
+            *dense.entry(self.bucket(i) as u32).or_insert(0.0) += self.r(i);
+        }
+        let mut out: Vec<(u32, f32)> = dense
+            .into_iter()
+            .filter(|&(_, v)| v != 0.0)
+            .map(|(j, v)| (j, v as f32))
+            .collect();
+        out.sort_unstable_by_key(|&(j, _)| j);
+        out
+    }
+
+    /// Unbiased inner-product estimator â_vw (eq. 16).
+    pub fn estimate_inner_product(g1: &[f64], g2: &[f64]) -> f64 {
+        assert_eq!(g1.len(), g2.len());
+        g1.iter().zip(g2).map(|(a, b)| a * b).sum()
+    }
+}
+
+/// Count-Min sketch with `rows` independent hash rows of width `k`.
+#[derive(Clone, Debug)]
+pub struct CountMinSketch {
+    pub k: usize,
+    pub rows: usize,
+    seed: u64,
+}
+
+impl CountMinSketch {
+    pub fn new(k: usize, rows: usize, seed: u64) -> Self {
+        assert!(k >= 1 && rows >= 1);
+        Self { k, rows, seed }
+    }
+
+    #[inline]
+    fn bucket(&self, row: usize, i: u64) -> usize {
+        (mix_index(i, self.seed ^ (row as u64).wrapping_mul(0x5851_F42D_4C95_7F2D))
+            % self.k as u64) as usize
+    }
+
+    /// Sketch a dense vector: `rows × k` counters (row-major).
+    pub fn sketch_dense(&self, u: &[f64]) -> Vec<f64> {
+        let mut w = vec![0.0; self.rows * self.k];
+        for (i, &v) in u.iter().enumerate() {
+            if v != 0.0 {
+                for row in 0..self.rows {
+                    w[row * self.k + self.bucket(row, i as u64)] += v;
+                }
+            }
+        }
+        w
+    }
+
+    /// Sketch a sparse binary vector.
+    pub fn sketch_binary(&self, set: &[u64]) -> Vec<f64> {
+        let mut w = vec![0.0; self.rows * self.k];
+        for &i in set {
+            for row in 0..self.rows {
+                w[row * self.k + self.bucket(row, i)] += 1.0;
+            }
+        }
+        w
+    }
+
+    /// Per-row inner-product estimates â_cm (biased — eq. 20).
+    pub fn inner_product_rows(w1: &[f64], w2: &[f64], k: usize) -> Vec<f64> {
+        assert_eq!(w1.len(), w2.len());
+        assert_eq!(w1.len() % k, 0);
+        w1.chunks(k)
+            .zip(w2.chunks(k))
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x * y).sum())
+            .collect()
+    }
+
+    /// The classic count-min estimate: min over rows (for positive data).
+    pub fn estimate_inner_product_min(w1: &[f64], w2: &[f64], k: usize) -> f64 {
+        Self::inner_product_rows(w1, w2, k)
+            .into_iter()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The paper's unbiased correction (eq. 22), applied per row and
+    /// averaged: â_cm,nb = k/(k−1) · (â_cm − sum1·sum2/k).
+    pub fn estimate_inner_product_unbiased(
+        w1: &[f64],
+        w2: &[f64],
+        k: usize,
+        sum1: f64,
+        sum2: f64,
+    ) -> f64 {
+        let kf = k as f64;
+        let rows = Self::inner_product_rows(w1, w2, k);
+        let n = rows.len() as f64;
+        rows.into_iter()
+            .map(|a| kf / (kf - 1.0) * (a - sum1 * sum2 / kf))
+            .sum::<f64>()
+            / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_mini::{check, gen};
+
+    #[test]
+    fn buckets_and_signs_are_deterministic_and_spread() {
+        let h = VwHasher::new(64, 11);
+        let mut counts = vec![0usize; 64];
+        for i in 0..64_000u64 {
+            assert_eq!(h.bucket(i), h.bucket(i));
+            counts[h.bucket(i)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 1000).abs() < 250, "bucket count {c}");
+        }
+        let signs: f64 = (0..10_000u64).map(|i| h.r(i)).sum();
+        assert!(signs.abs() < 400.0);
+    }
+
+    #[test]
+    fn vw_estimator_is_unbiased_on_binary_data() {
+        // f1=60, f2=50, a=25 → true inner product 25.
+        let s1: Vec<u64> = (0..60).collect();
+        let s2: Vec<u64> = (35..85).collect();
+        let reps = 600;
+        let k = 128;
+        let mut acc = 0.0;
+        for seed in 0..reps {
+            let h = VwHasher::new(k, 40 + seed);
+            let a_hat = VwHasher::estimate_inner_product(
+                &h.hash_binary(&s1),
+                &h.hash_binary(&s2),
+            );
+            acc += a_hat;
+        }
+        let mean = acc / reps as f64;
+        // Var(â)/rep ≈ (f1 f2 + a² − 2a)/k ≈ 28.3 ⇒ std of mean ≈ 0.22.
+        assert!((mean - 25.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn vw_variance_matches_lemma1_for_s1() {
+        // Lemma 1 with s=1 on binary data: Var = (f1 f2 + a² − 2a)/k.
+        let s1: Vec<u64> = (0..40).collect();
+        let s2: Vec<u64> = (20..60).collect(); // a = 20
+        let (f1, f2, a) = (40.0, 40.0, 20.0);
+        let k = 64;
+        let reps = 4000;
+        let mut est = Vec::with_capacity(reps);
+        for seed in 0..reps {
+            let h = VwHasher::new(k, 7000 + seed as u64);
+            est.push(VwHasher::estimate_inner_product(
+                &h.hash_binary(&s1),
+                &h.hash_binary(&s2),
+            ));
+        }
+        let mean: f64 = est.iter().sum::<f64>() / reps as f64;
+        let var: f64 = est.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / reps as f64;
+        let theory = (f1 * f2 + a * a - 2.0 * a) / k as f64; // eq. (17), s=1
+        assert!((mean - a).abs() < 0.3, "mean {mean}");
+        assert!(
+            (var - theory).abs() < 0.15 * theory,
+            "var {var} vs theory {theory}"
+        );
+    }
+
+    #[test]
+    fn sparsity_preservation() {
+        // Paper §7: nnz of the VW output ≤ nnz of the input; and with
+        // k ≫ c the output stays sparse.
+        let h = VwHasher::new(4096, 3);
+        let set: Vec<u64> = (0..100).map(|i| i * 31).collect();
+        let sparse = h.hash_binary_sparse(&set);
+        assert!(sparse.len() <= set.len());
+        assert!(sparse.len() > 80); // few collisions at k=4096, c=100
+    }
+
+    #[test]
+    fn cm_bias_matches_eq20() {
+        // E â_cm = a + (Σu1 Σu2 − a)/k — the severe bias the paper notes.
+        let s1: Vec<u64> = (0..50).collect();
+        let s2: Vec<u64> = (25..75).collect(); // a=25, sums 50·50
+        let k = 32;
+        let reps = 4000;
+        let mut acc = 0.0;
+        for seed in 0..reps {
+            let cm = CountMinSketch::new(k, 1, 90_000 + seed as u64);
+            let w1 = cm.sketch_binary(&s1);
+            let w2 = cm.sketch_binary(&s2);
+            acc += CountMinSketch::inner_product_rows(&w1, &w2, k)[0];
+        }
+        let mean = acc / reps as f64;
+        let expect = 25.0 + (50.0 * 50.0 - 25.0) / k as f64; // eq. (20)
+        assert!((mean - expect).abs() < 2.0, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn cm_unbiased_correction_removes_bias() {
+        let s1: Vec<u64> = (0..50).collect();
+        let s2: Vec<u64> = (25..75).collect();
+        let k = 32;
+        let reps = 4000;
+        let mut acc = 0.0;
+        for seed in 0..reps {
+            let cm = CountMinSketch::new(k, 1, 50_000 + seed as u64);
+            let w1 = cm.sketch_binary(&s1);
+            let w2 = cm.sketch_binary(&s2);
+            acc += CountMinSketch::estimate_inner_product_unbiased(&w1, &w2, k, 50.0, 50.0);
+        }
+        let mean = acc / reps as f64;
+        assert!((mean - 25.0).abs() < 1.5, "mean {mean}");
+    }
+
+    #[test]
+    fn count_min_estimate_overestimates_on_positive_data() {
+        let s1: Vec<u64> = (0..50).collect();
+        let s2: Vec<u64> = (25..75).collect();
+        let cm = CountMinSketch::new(64, 4, 5);
+        let w1 = cm.sketch_binary(&s1);
+        let w2 = cm.sketch_binary(&s2);
+        let est = CountMinSketch::estimate_inner_product_min(&w1, &w2, 64);
+        assert!(est >= 25.0 - 1e-9, "min-estimate {est} below true a");
+    }
+
+    #[test]
+    fn general_s_moments() {
+        // eq. (12): E r = 0, E r² = 1, E r⁴ = s.
+        for s in [1.0, 2.0, 3.0] {
+            let h = VwHasher::with_s(8, s, 77);
+            let n = 200_000u64;
+            let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+            for i in 0..n {
+                let r = h.r(i);
+                m1 += r;
+                m2 += r * r;
+                m4 += r * r * r * r;
+            }
+            let nf = n as f64;
+            assert!((m1 / nf).abs() < 0.02, "s={s} mean {}", m1 / nf);
+            assert!((m2 / nf - 1.0).abs() < 0.02, "s={s} E r² {}", m2 / nf);
+            assert!((m4 / nf - s).abs() < 0.1 * s, "s={s} E r⁴ {}", m4 / nf);
+        }
+    }
+
+    #[test]
+    fn prop_vw_self_product_close_to_f() {
+        // â_vw(u,u) estimates Σ u_i² = f for binary data.
+        check("vw self product", 30, |rng| {
+            let set = gen::sparse_set(rng, 1 << 20, 50, 150);
+            let f = set.len() as f64;
+            let h = VwHasher::new(512, rng.next_u64());
+            let g = h.hash_binary(&set);
+            let est = VwHasher::estimate_inner_product(&g, &g);
+            // Var ≈ (f² + f² − 2f)/k ⇒ std ≈ f·sqrt(2/k); allow 5σ.
+            let std = f * (2.0 / 512.0_f64).sqrt();
+            assert!((est - f).abs() < 5.0 * std + 5.0, "est {est} vs f {f}");
+        });
+    }
+}

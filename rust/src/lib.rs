@@ -1,0 +1,45 @@
+//! # bbml — b-bit minwise hashing for large-scale learning
+//!
+//! A full reproduction of **"Hashing Algorithms for Large-Scale Learning"**
+//! (Ping Li, Anshumali Shrivastava, Joshua Moore, Arnd Christian König —
+//! NIPS 2011) as a production-shaped library:
+//!
+//! * [`data`] — sparse binary datasets, LIBSVM I/O, a synthetic
+//!   webspam-like corpus generator and w-shingling (the paper's workload).
+//! * [`hashing`] — minwise hashing, b-bit packing, the Theorem-2 one-hot
+//!   expansion, plus every baseline the paper compares against: VW feature
+//!   hashing, the Count-Min sketch, and (sparse) random projections.
+//! * [`theory`] — the paper's closed forms: the collision probability
+//!   P_b (eq. 4) and its exact small-D counterpart (Appendix A), all
+//!   variance formulas (eqs. 3/6/14/17/19/21/23) and the storage-normalized
+//!   accuracy ratio G_vw (eq. 24, Appendix C).
+//! * [`solvers`] — LIBLINEAR-style dual coordinate descent for linear SVM
+//!   and logistic regression, Pegasos SGD, and an SMO kernel SVM with the
+//!   resemblance kernel (paper §5.1).
+//! * [`coordinator`] — the L3 system: a sharded streaming hashing pipeline
+//!   with backpressure, a trainer/sweep orchestrator and a config system.
+//! * [`runtime`] — the PJRT bridge: loads the AOT HLO-text artifacts
+//!   lowered from JAX/Pallas (see `python/compile/`) and executes them on
+//!   the CPU PJRT client from the rust hot path.
+//! * [`experiments`] — one runner per figure/table of the paper's
+//!   evaluation; regenerates every plot series as CSV.
+//! * [`benchkit`] — a minimal timing-statistics harness used by the cargo
+//!   benches (criterion is unavailable in this offline environment).
+//!
+//! See `DESIGN.md` for the per-experiment index and substitutions, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hashing;
+pub mod proptest_mini;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+pub mod theory;
+
+/// Library version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,5 @@
+//! `bbml` — leader binary: CLI over the coordinator (see `cli.rs`).
+
+fn main() -> anyhow::Result<()> {
+    bbml::cli::run()
+}

@@ -1,0 +1,119 @@
+//! A miniature property-testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property closure against `cases` independently seeded
+//! RNGs and, on failure, reports the failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla_extension rpath in this
+//! // offline image; the identical pattern is exercised by unit tests.)
+//! use bbml::proptest_mini::check;
+//! check("addition commutes", 100, |rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! There is no shrinking — properties here are numeric invariants where the
+//! failing seed plus the assertion message is diagnostic enough.
+
+use crate::rng::Xoshiro256;
+
+/// Run `prop` for `cases` random cases. Panics (with the seed) on failure.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Xoshiro256)) {
+    // A fixed base seed keeps CI deterministic; override with BBML_PROP_SEED.
+    let base: u64 = std::env::var("BBML_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 BBML_PROP_SEED={base} — failing seed {seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Sampling helpers shared by property tests.
+pub mod gen {
+    use crate::rng::Xoshiro256;
+
+    /// Random sparse binary set: `len` distinct indices in `[0, d)`.
+    pub fn sparse_set(rng: &mut Xoshiro256, d: u64, min_len: usize, max_len: usize) -> Vec<u64> {
+        let len = min_len + rng.gen_range((max_len - min_len + 1) as u64) as usize;
+        let mut v = rng.sample_distinct(d, len.min(d as usize).max(1));
+        v.sort_unstable();
+        v
+    }
+
+    /// Two sets with a controlled overlap, returning (s1, s2).
+    pub fn overlapping_sets(
+        rng: &mut Xoshiro256,
+        d: u64,
+        f1: usize,
+        f2: usize,
+        a: usize,
+    ) -> (Vec<u64>, Vec<u64>) {
+        assert!(a <= f1.min(f2) && f1 + f2 - a <= d as usize);
+        let union = rng.sample_distinct(d, f1 + f2 - a);
+        let s1: Vec<u64> = union[..f1].to_vec();
+        let mut s2: Vec<u64> = union[f1 - a..f1 + f2 - a].to_vec();
+        let mut s1s = s1;
+        s1s.sort_unstable();
+        s2.sort_unstable();
+        (s1s, s2)
+    }
+
+    /// Dense real vector with entries ~ N(0, 1).
+    pub fn dense_vec(rng: &mut Xoshiro256, d: usize) -> Vec<f64> {
+        (0..d).map(|_| rng.gen_normal()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.gen_range(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_reports_seed() {
+        check("falsum", 10, |rng| {
+            let x = rng.gen_range(10);
+            assert!(x < 5, "x = {x}");
+        });
+    }
+
+    #[test]
+    fn overlapping_sets_have_requested_cardinalities() {
+        check("overlap cardinalities", 100, |rng| {
+            let (f1, f2, a) = (20, 15, 7);
+            let (s1, s2) = gen::overlapping_sets(rng, 10_000, f1, f2, a);
+            assert_eq!(s1.len(), f1);
+            assert_eq!(s2.len(), f2);
+            let set1: std::collections::HashSet<_> = s1.iter().collect();
+            let inter = s2.iter().filter(|x| set1.contains(x)).count();
+            assert_eq!(inter, a);
+        });
+    }
+}

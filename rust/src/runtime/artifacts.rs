@@ -1,0 +1,177 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is whitespace-separated `key=value` records,
+//! one artifact per line (written by `python/compile/aot.py`; no JSON
+//! dependency needed on either side):
+//!
+//! ```text
+//! name=predict_n256_k200_b8 file=predict_n256_k200_b8.hlo.txt kind=predict n=256 k=200 b=8 dim=51200
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(sig, w) -> (scores,)`
+    Predict,
+    /// `(w, sig, y, c, lr) -> (w', loss)` — logistic regression step.
+    LogregStep,
+    /// `(w, sig, y, c, lr) -> (w', loss)` — squared-hinge SVM step.
+    SvmStep,
+    /// `(a, b) -> (K,)` — signature match counts.
+    MatchCount,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "predict" => Some(Self::Predict),
+            "logreg_step" => Some(Self::LogregStep),
+            "svm_step" => Some(Self::SvmStep),
+            "match_count" => Some(Self::MatchCount),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata (shapes are the compile-time contract).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    /// Batch rows (n for predict/steps, m for match_count's left input).
+    pub n: usize,
+    /// Signature width k.
+    pub k: usize,
+    /// Bits per value (0 for match_count, which is b-agnostic).
+    pub b: u32,
+    /// Weight dimension k·2^b (0 for match_count).
+    pub dim: usize,
+    /// match_count right-input rows (0 otherwise).
+    pub n2: usize,
+}
+
+/// The parsed artifact directory.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| anyhow::anyhow!("reading {}/manifest.txt: {e}", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact paths resolve relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let kv: HashMap<&str, &str> = line
+                .split_ascii_whitespace()
+                .filter_map(|tok| tok.split_once('='))
+                .collect();
+            let get = |key: &str| -> anyhow::Result<&str> {
+                kv.get(key)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing {key}", lineno + 1))
+            };
+            let num = |key: &str| -> usize {
+                kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(0)
+            };
+            let kind_str = get("kind")?;
+            let kind = ArtifactKind::parse(kind_str)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact kind '{kind_str}'"))?;
+            artifacts.push(ArtifactMeta {
+                name: get("name")?.to_string(),
+                path: dir.join(get("file")?),
+                kind,
+                n: if kind == ArtifactKind::MatchCount {
+                    num("m")
+                } else {
+                    num("n")
+                },
+                k: num("k"),
+                b: num("b") as u32,
+                dim: num("dim"),
+                n2: num("n"),
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Find an artifact by kind with matching (k, b); prefers the largest
+    /// batch ≤ `max_batch` (or the smallest overall if none fit).
+    pub fn find(&self, kind: ArtifactKind, k: usize, b: u32, max_batch: usize) -> Option<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.k == k && (a.b == b || kind == ArtifactKind::MatchCount))
+            .collect();
+        candidates.sort_by_key(|a| a.n);
+        candidates
+            .iter()
+            .rev()
+            .find(|a| a.n <= max_batch)
+            .copied()
+            .or_else(|| candidates.first().copied())
+    }
+
+    /// Find by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=predict_n256_k200_b8 file=p.hlo.txt kind=predict n=256 k=200 b=8 dim=51200
+name=logreg_step_n256_k200_b8 file=l.hlo.txt kind=logreg_step n=256 k=200 b=8 dim=51200
+name=match_count_m128_n128_k200 file=m.hlo.txt kind=match_count m=128 n=128 k=200
+
+# comment line
+name=predict_n8_k16_b4 file=p8.hlo.txt kind=predict n=8 k=16 b=4 dim=256
+";
+
+    #[test]
+    fn parses_all_records() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        let p = m.by_name("predict_n256_k200_b8").unwrap();
+        assert_eq!(p.kind, ArtifactKind::Predict);
+        assert_eq!((p.n, p.k, p.b, p.dim), (256, 200, 8, 51200));
+        assert_eq!(p.path, Path::new("/art/p.hlo.txt"));
+        let mc = m.by_name("match_count_m128_n128_k200").unwrap();
+        assert_eq!(mc.kind, ArtifactKind::MatchCount);
+        assert_eq!((mc.n, mc.n2, mc.k), (128, 128, 200));
+    }
+
+    #[test]
+    fn find_prefers_largest_fitting_batch() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let got = m.find(ArtifactKind::Predict, 200, 8, 1024).unwrap();
+        assert_eq!(got.n, 256);
+        // No predict with k=200 fits batch 100 → falls back to smallest.
+        let got = m.find(ArtifactKind::Predict, 200, 8, 100).unwrap();
+        assert_eq!(got.n, 256);
+        assert!(m.find(ArtifactKind::Predict, 999, 8, 1024).is_none());
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("name=x kind=predict", Path::new(".")).is_err());
+        assert!(Manifest::parse("name=x file=f kind=bogus", Path::new(".")).is_err());
+    }
+}

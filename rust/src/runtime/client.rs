@@ -1,0 +1,259 @@
+//! Typed PJRT execution over the AOT artifacts.
+//!
+//! [`Runtime`] owns one CPU PJRT client plus a cache of compiled
+//! executables keyed by artifact name. All entry points pad inputs to the
+//! artifact's compiled batch size, loop over chunks, and strip the padding
+//! — the L2 graphs were lowered at fixed shapes (`aot.py`), which is also
+//! how a real TPU deployment would run them.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactKind, ArtifactMeta, Manifest};
+use crate::hashing::bbit::BbitSignatureMatrix;
+
+/// Output of one compiled train step.
+#[derive(Clone, Debug)]
+pub struct TrainStepOutput {
+    pub w: Vec<f32>,
+    pub loss: f64,
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (looks for `manifest.txt`).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    fn executable(&self, meta: &ArtifactMeta) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&meta.name) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = meta
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn find(&self, kind: ArtifactKind, k: usize, b: u32, batch: usize) -> Result<ArtifactMeta> {
+        self.manifest
+            .find(kind, k, b, batch)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!("no artifact of kind {kind:?} with k={k}, b={b} in manifest — re-run `make artifacts`")
+            })
+    }
+
+    /// Batched linear scores via the compiled predict graph (which embeds
+    /// the L1 `onehot_score` Pallas kernel). Signatures come straight from
+    /// the packed store; rows beyond `sigs.n()` are never fabricated.
+    pub fn predict_scores(&self, sigs: &BbitSignatureMatrix, w: &[f32]) -> Result<Vec<f64>> {
+        let meta = self.find(ArtifactKind::Predict, sigs.k(), sigs.b(), sigs.n())?;
+        anyhow::ensure!(
+            w.len() == meta.dim,
+            "weight dim {} != artifact dim {}",
+            w.len(),
+            meta.dim
+        );
+        let exe = self.executable(&meta)?;
+        let w_lit = xla::Literal::vec1(w);
+        let mut scores = Vec::with_capacity(sigs.n());
+        let rows_all: Vec<usize> = (0..sigs.n()).collect();
+        for chunk in rows_all.chunks(meta.n) {
+            // Pad the final chunk by repeating row 0 (discarded below).
+            let mut rows: Vec<usize> = chunk.to_vec();
+            while rows.len() < meta.n {
+                rows.push(chunk[0]);
+            }
+            let sig_data = sigs.to_i32_rows(&rows);
+            let sig_lit = xla::Literal::vec1(&sig_data)
+                .reshape(&[meta.n as i64, meta.k as i64])
+                .map_err(|e| anyhow!("reshape sig: {e:?}"))?;
+            let result = exe
+                .execute::<xla::Literal>(&[sig_lit, w_lit.clone()])
+                .map_err(|e| anyhow!("execute predict: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let vals: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            scores.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok(scores)
+    }
+
+    /// One compiled minibatch train step (logistic or squared-hinge SVM).
+    ///
+    /// `rows` selects the minibatch from `sigs` (padded by cycling if
+    /// shorter than the artifact batch; padded rows get weight-neutral
+    /// handling by duplicating real examples — callers that need exact
+    /// semantics should pass full batches, which the trainer does).
+    pub fn train_step(
+        &self,
+        kind: ArtifactKind,
+        sigs: &BbitSignatureMatrix,
+        rows: &[usize],
+        w: &[f32],
+        c: f32,
+        lr: f32,
+    ) -> Result<TrainStepOutput> {
+        anyhow::ensure!(
+            kind == ArtifactKind::LogregStep || kind == ArtifactKind::SvmStep,
+            "train_step wants a step artifact"
+        );
+        anyhow::ensure!(!rows.is_empty(), "empty minibatch");
+        let meta = self.find(kind, sigs.k(), sigs.b(), rows.len())?;
+        anyhow::ensure!(w.len() == meta.dim, "weight dim mismatch");
+        let exe = self.executable(&meta)?;
+
+        let mut padded: Vec<usize> = rows.to_vec();
+        while padded.len() < meta.n {
+            padded.push(rows[padded.len() % rows.len()]);
+        }
+        anyhow::ensure!(
+            padded.len() == meta.n,
+            "minibatch {} exceeds artifact batch {}",
+            rows.len(),
+            meta.n
+        );
+        let sig_data = sigs.to_i32_rows(&padded);
+        let y: Vec<f32> = padded.iter().map(|&i| sigs.label(i)).collect();
+
+        let w_lit = xla::Literal::vec1(w);
+        let sig_lit = xla::Literal::vec1(&sig_data)
+            .reshape(&[meta.n as i64, meta.k as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let y_lit = xla::Literal::vec1(&y);
+        let c_lit = xla::Literal::scalar(c);
+        let lr_lit = xla::Literal::scalar(lr);
+
+        let result = exe
+            .execute::<xla::Literal>(&[w_lit, sig_lit, y_lit, c_lit, lr_lit])
+            .map_err(|e| anyhow!("execute step: {e:?}"))?;
+        let (w_out, loss_out) = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?
+            .to_tuple2()
+            .map_err(|e| anyhow!("untuple2: {e:?}"))?;
+        let w_new: Vec<f32> = w_out.to_vec().map_err(|e| anyhow!("w to_vec: {e:?}"))?;
+        let loss: f32 = loss_out
+            .get_first_element()
+            .map_err(|e| anyhow!("loss fetch: {e:?}"))?;
+        Ok(TrainStepOutput {
+            w: w_new,
+            loss: loss as f64,
+        })
+    }
+
+    /// Signature match-count Gram block via the compiled graph (L1
+    /// `match_count` kernel): K[i][j] = #matches between a-row i, b-row j.
+    pub fn match_count(
+        &self,
+        a: &BbitSignatureMatrix,
+        a_rows: &[usize],
+        b: &BbitSignatureMatrix,
+        b_rows: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(a.k() == b.k(), "signature widths differ");
+        let meta = self.find(ArtifactKind::MatchCount, a.k(), 0, a_rows.len().max(b_rows.len()))?;
+        let exe = self.executable(&meta)?;
+        let (m, n) = (meta.n, meta.n2);
+
+        let mut out = vec![vec![0.0f32; b_rows.len()]; a_rows.len()];
+        for (ci, a_chunk) in a_rows.chunks(m).enumerate() {
+            let mut ar: Vec<usize> = a_chunk.to_vec();
+            while ar.len() < m {
+                ar.push(a_chunk[0]);
+            }
+            let a_lit = xla::Literal::vec1(&a.to_i32_rows(&ar))
+                .reshape(&[m as i64, meta.k as i64])
+                .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+            for (cj, b_chunk) in b_rows.chunks(n).enumerate() {
+                let mut br: Vec<usize> = b_chunk.to_vec();
+                while br.len() < n {
+                    br.push(b_chunk[0]);
+                }
+                let b_lit = xla::Literal::vec1(&b.to_i32_rows(&br))
+                    .reshape(&[n as i64, meta.k as i64])
+                    .map_err(|e| anyhow!("reshape b: {e:?}"))?;
+                let result = exe
+                    .execute::<xla::Literal>(&[a_lit.clone(), b_lit])
+                    .map_err(|e| anyhow!("execute match: {e:?}"))?;
+                let k_lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("fetch: {e:?}"))?
+                    .to_tuple1()
+                    .map_err(|e| anyhow!("untuple: {e:?}"))?;
+                let vals: Vec<f32> = k_lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                for (ii, _) in a_chunk.iter().enumerate() {
+                    for (jj, _) in b_chunk.iter().enumerate() {
+                        out[ci * m + ii][cj * n + jj] = vals[ii * n + jj];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Best-effort runtime construction for tests/examples: `None` when the
+    /// artifact directory is missing (so CI without `make artifacts` skips).
+    pub fn try_default() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.txt").exists() {
+            Runtime::new(&dir)
+                .context("loading default artifacts")
+                .ok()
+        } else {
+            None
+        }
+    }
+}
+
+/// `BBML_ARTIFACTS` env var or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("BBML_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

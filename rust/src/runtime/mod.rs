@@ -1,0 +1,17 @@
+//! PJRT runtime: the L3 ↔ L2 bridge.
+//!
+//! Loads the HLO-text artifacts that `python/compile/aot.py` lowered from
+//! the JAX model (which itself calls the L1 Pallas kernels), compiles them
+//! once on the CPU PJRT client, and exposes typed `execute` wrappers to the
+//! coordinator hot path. Python never runs at request time — after
+//! `make artifacts` the rust binary is self-contained.
+//!
+//! Interchange is HLO **text** (see `aot.py` / DESIGN.md): the xla crate's
+//! xla_extension 0.5.1 rejects the 64-bit instruction ids in jax ≥ 0.5
+//! serialized protos, while the text parser reassigns ids.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
+pub use client::{Runtime, TrainStepOutput};

@@ -1,0 +1,229 @@
+//! Pegasos-style stochastic subgradient SVM (Shalev-Shwartz et al., ICML
+//! 2007) — the SGD representative of the solver families the paper cites
+//! in §4, and the rust twin of the AOT-compiled JAX train step (L2).
+//!
+//! Pegasos minimizes  λ/2·‖w‖² + (1/n)·Σ hinge(y_i w·x_i)  with step
+//! η_t = 1/(λt) and the optional ‖w‖ ≤ 1/√λ projection. The paper's C maps
+//! to λ = 1/(C·n).
+
+use super::{BinaryFeatures, LinearModel};
+use crate::rng::Xoshiro256;
+
+/// Pegasos options.
+#[derive(Clone, Debug)]
+pub struct PegasosOptions {
+    /// The paper's C; λ = 1/(C·n).
+    pub c: f64,
+    /// Total SGD steps.
+    pub steps: usize,
+    /// Apply the ball projection ‖w‖ ≤ 1/√λ after each step. Off by
+    /// default: the Pegasos authors' later analysis showed it unnecessary,
+    /// and with lazy scaling it costs numeric head-room.
+    pub project: bool,
+    /// Average the trailing half of iterates (suffix averaging).
+    pub average: bool,
+    pub seed: u64,
+}
+
+impl Default for PegasosOptions {
+    fn default() -> Self {
+        Self {
+            c: 1.0,
+            steps: 100_000,
+            project: false,
+            average: true,
+            seed: 1,
+        }
+    }
+}
+
+/// Train by Pegasos SGD.
+pub fn train_pegasos<Ft: BinaryFeatures>(feats: &Ft, opt: &PegasosOptions) -> LinearModel {
+    let n = feats.n();
+    let dim = feats.dim();
+    assert!(n > 0);
+    let lambda = 1.0 / (opt.c * n as f64);
+    let mut w = vec![0.0f32; dim];
+    let mut w_scale = 1.0f64; // lazy scaling: actual weights are w·w_scale
+    let mut avg = if opt.average {
+        Some(vec![0.0f64; dim])
+    } else {
+        None
+    };
+    let mut avg_count = 0usize;
+    let mut rng = Xoshiro256::seed_from_u64(opt.seed);
+    let mut norm_sq = 0.0f64; // ‖w_scale·w‖², maintained incrementally
+
+    for t in 1..=opt.steps {
+        let i = rng.gen_range(n as u64) as usize;
+        let eta = 1.0 / (lambda * t as f64);
+        let y = feats.label(i) as f64;
+        let margin = y * feats.dot(i, &w) * w_scale;
+
+        // w ← (1 − η λ) w  [+ η y x_i if margin < 1]
+        let shrink = 1.0 - eta * lambda;
+        // shrink = 1 − 1/t; at t = 1 this zeroes w (Pegasos does exactly this).
+        if shrink <= 0.0 {
+            w.iter_mut().for_each(|x| *x = 0.0);
+            w_scale = 1.0;
+            norm_sq = 0.0;
+        } else {
+            w_scale *= shrink;
+            norm_sq *= shrink * shrink;
+        }
+        if margin < 1.0 {
+            let add = eta * y / w_scale; // store unscaled
+            // norm update: ‖v + s·x‖² = ‖v‖² + 2 s Σ v_j + s²·nnz (binary x)
+            let mut dot_before = 0.0f64;
+            feats.for_each_index(i, |idx| dot_before += w[idx] as f64);
+            feats.axpy(i, add, &mut w);
+            let s = eta * y;
+            norm_sq += 2.0 * s * dot_before * w_scale + s * s * feats.row_nnz(i) as f64;
+        }
+        if opt.project && norm_sq > 0.0 {
+            let bound = 1.0 / lambda; // ‖w‖² ≤ 1/λ
+            if norm_sq > bound {
+                let f = (bound / norm_sq).sqrt();
+                w_scale *= f;
+                norm_sq = bound;
+            }
+        }
+        // Re-materialize the lazy scale before f32 head-room runs out:
+        // unscaled entries grow like 1/w_scale and lose precision.
+        if w_scale < 1e-4 {
+            for x in w.iter_mut() {
+                *x = (*x as f64 * w_scale) as f32;
+            }
+            w_scale = 1.0;
+        }
+        // Suffix averaging over the second half.
+        if let Some(ref mut a) = avg {
+            if t > opt.steps / 2 {
+                for (aj, &wj) in a.iter_mut().zip(&w) {
+                    *aj += wj as f64 * w_scale;
+                }
+                avg_count += 1;
+            }
+        }
+    }
+
+    let w_final: Vec<f32> = match avg {
+        Some(a) if avg_count > 0 => a.iter().map(|&x| (x / avg_count as f64) as f32).collect(),
+        _ => w.iter().map(|&x| (x as f64 * w_scale) as f32).collect(),
+    };
+    let objective = pegasos_objective(feats, &w_final, lambda);
+    LinearModel {
+        w: w_final,
+        iters: opt.steps,
+        objective,
+    }
+}
+
+/// λ/2 ‖w‖² + (1/n) Σ hinge.
+pub fn pegasos_objective<Ft: BinaryFeatures>(feats: &Ft, w: &[f32], lambda: f64) -> f64 {
+    let reg = 0.5 * lambda * w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>();
+    let mut loss = 0.0;
+    for i in 0..feats.n() {
+        let m = 1.0 - feats.label(i) as f64 * feats.dot(i, w);
+        if m > 0.0 {
+            loss += m;
+        }
+    }
+    reg + loss / feats.n() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::{SparseBinaryDataset, SparseBinaryVec};
+    use crate::rng::Xoshiro256;
+
+    fn toy(n: usize, dim: u64, seed: u64) -> SparseBinaryDataset {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut ds = SparseBinaryDataset::new(dim);
+        for i in 0..n {
+            let pos = i % 2 == 0;
+            let mut idx = vec![if pos { 0u64 } else { 1u64 }];
+            for _ in 0..4 {
+                idx.push(2 + rng.gen_range(dim - 2));
+            }
+            ds.push(
+                SparseBinaryVec::from_indices(idx),
+                if pos { 1.0 } else { -1.0 },
+            );
+        }
+        ds
+    }
+
+    #[test]
+    fn pegasos_learns_separable_data() {
+        let ds = toy(200, 100, 3);
+        let model = train_pegasos(
+            &ds,
+            &PegasosOptions {
+                steps: 50_000,
+                ..Default::default()
+            },
+        );
+        assert!(model.accuracy(&ds) > 0.97, "acc {}", model.accuracy(&ds));
+    }
+
+    #[test]
+    fn pegasos_objective_close_to_dcd_optimum() {
+        // Both optimize (up to loss scaling) the same problem; Pegasos
+        // should land near the DCD L1-SVM optimum.
+        use crate::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
+        let ds = toy(150, 60, 5);
+        let c = 1.0;
+        let dcd = train_svm(
+            &ds,
+            &SvmOptions {
+                c,
+                loss: SvmLoss::L1,
+                max_iter: 300,
+                tol: 1e-6,
+                ..Default::default()
+            },
+        );
+        let lambda = 1.0 / (c * ds.n() as f64);
+        let dcd_obj = pegasos_objective(&ds, &dcd.w, lambda);
+        let peg = train_pegasos(
+            &ds,
+            &PegasosOptions {
+                c,
+                steps: 400_000,
+                ..Default::default()
+            },
+        );
+        assert!(
+            peg.objective < dcd_obj * 1.10 + 1e-6,
+            "pegasos {} vs dcd {}",
+            peg.objective,
+            dcd_obj
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = toy(50, 30, 1);
+        let a = train_pegasos(&ds, &PegasosOptions::default());
+        let b = train_pegasos(&ds, &PegasosOptions::default());
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn weights_finite_across_c_range() {
+        let ds = toy(80, 40, 9);
+        for c in [1e-3, 0.1, 10.0] {
+            let m = train_pegasos(
+                &ds,
+                &PegasosOptions {
+                    c,
+                    steps: 20_000,
+                    ..Default::default()
+                },
+            );
+            assert!(m.w.iter().all(|x| x.is_finite()), "C={c}");
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Appendix C: the storage-normalized accuracy ratio G_vw (eq. 24).
+//!
+//!   G_vw = (Var(â_vw,s=1) · 32) / (Var(â_b) · b)
+//!
+//! b-bit minwise hashing stores b bits per sample; VW/random projections
+//! store (assumed) 32 bits per sample. G_vw > 1 means b-bit minwise hashing
+//! is more accurate *at the same storage budget*; the paper's Figures 11–14
+//! show G_vw ≈ 10–100 across realistic (f₁, f₂, a) ranges.
+
+use super::pb::BbitConstants;
+use super::variance::{var_a_from_bbit, var_vw, PairMoments};
+
+/// Eq. (24) for binary data with |S₁| = f₁, |S₂| = f₂, |S₁∩S₂| = a in a
+/// universe of size D. `bits_per_vw_sample` is 32 in the paper's main
+/// analysis (16 in the footnote variant).
+pub fn g_vw(d: u64, f1: u64, f2: u64, a: u64, b: u32, bits_per_vw_sample: f64) -> f64 {
+    assert!(a <= f1.min(f2));
+    assert!(f1 + f2 - a <= d);
+    let r = a as f64 / (f1 + f2 - a) as f64;
+    let m = PairMoments::binary(f1, f2, a);
+    // k cancels in the ratio; evaluate both at k = 1.
+    let v_vw = var_vw(&m, 1.0, 1);
+    let c = BbitConstants::from_cardinalities(f1, f2, d, b);
+    let v_b = var_a_from_bbit(&c, r, f1, f2, 1);
+    if v_b == 0.0 {
+        return f64::INFINITY;
+    }
+    (v_vw * bits_per_vw_sample) / (v_b * b as f64)
+}
+
+/// The (f₂/f₁, a/f₂) grid used by Figures 11–14, as (fractions, values).
+pub fn g_vw_grid(
+    d: u64,
+    f1: u64,
+    b: u32,
+    f2_fracs: &[f64],
+    a_fracs: &[f64],
+) -> Vec<(f64, f64, f64)> {
+    let mut out = Vec::new();
+    for &ff in f2_fracs {
+        let f2 = ((f1 as f64 * ff).round() as u64).max(1);
+        for &af in a_fracs {
+            let a = (f2 as f64 * af).round() as u64;
+            if f1 + f2 - a > d {
+                continue;
+            }
+            out.push((ff, af, g_vw(d, f1, f2.min(f1), a.min(f2), b, 32.0)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gvw_is_large_in_the_paper_regime() {
+        // Paper: "G_vw is much larger than one (usually 10 to 100)".
+        // Sparse regime f1/D = 1e-4, moderate overlap.
+        let d = 1_000_000u64;
+        let f1 = 100u64;
+        for b in [1u32, 2, 4, 8] {
+            for (f2, a) in [(100u64, 50u64), (50, 25), (80, 40)] {
+                let g = g_vw(d, f1, f2, a, b, 32.0);
+                assert!(g > 1.0, "b={b} f2={f2} a={a}: G = {g}");
+            }
+        }
+        // At b=8 with strong similarity the gain is 10x+.
+        let g = g_vw(d, f1, 100, 80, 8, 32.0);
+        assert!(g > 10.0, "G = {g}");
+    }
+
+    #[test]
+    fn gvw_scales_inversely_with_b_storage() {
+        // Doubling b halves the storage-normalized credit, all else equal —
+        // but Var(R̂_b) also falls with b, so the net must be computed;
+        // here we only check the explicit 32/b factor moves as expected
+        // when variance is pinned (same b, different assumed VW width).
+        let g32 = g_vw(1_000_000, 200, 150, 60, 8, 32.0);
+        let g16 = g_vw(1_000_000, 200, 150, 60, 8, 16.0);
+        assert!((g32 / g16 - 2.0).abs() < 1e-9);
+        // Paper: even at 16 bits/sample the improvement remains large.
+        assert!(g16 > 1.0);
+    }
+
+    #[test]
+    fn gvw_essentially_independent_of_d_when_sparse() {
+        // Appendix C: "the comparisons are essentially independent of D".
+        let g_a = g_vw(1_000_000, 100, 80, 40, 4, 32.0);
+        let g_b = g_vw(100_000_000, 100, 80, 40, 4, 32.0);
+        assert!((g_a - g_b).abs() / g_a < 0.05, "{g_a} vs {g_b}");
+    }
+
+    #[test]
+    fn grid_covers_requested_points() {
+        let pts = g_vw_grid(1_000_000, 100, 8, &[0.1, 0.5, 1.0], &[0.0, 0.5, 1.0]);
+        assert_eq!(pts.len(), 9);
+        assert!(pts.iter().all(|&(_, _, g)| g.is_finite() || g > 0.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's closed-form theory, used three ways:
+//!
+//! 1. by the estimators (`hashing::estimators`) — the eq. (5) bias
+//!    correction needs C₁,b and C₂,b from Theorem 1;
+//! 2. by the experiment harness — Figs. 10–14 are *pure theory plots*
+//!    (approximation error of eq. (4); the G_vw storage-normalized ratio);
+//! 3. by the test suite — empirical variances of every estimator are
+//!    checked against eqs. (3)/(6)/(14)/(17)/(19)/(21)/(23).
+
+pub mod exact;
+pub mod gvw;
+pub mod pb;
+pub mod variance;
+
+pub use exact::exact_pb;
+pub use gvw::g_vw;
+pub use pb::{BbitConstants, p_b};

@@ -1,0 +1,153 @@
+//! Theorem 1 (paper eq. 4): the b-bit collision probability
+//!
+//!   P_b = Pr(∏ 1{e1,i = e2,i}) = C₁,b + (1 − C₂,b)·R
+//!
+//! with
+//!
+//!   r₁ = f₁/D,  r₂ = f₂/D,
+//!   A₁,b = r₁(1−r₁)^(2^b−1) / (1 − (1−r₁)^(2^b)),
+//!   A₂,b = r₂(1−r₂)^(2^b−1) / (1 − (1−r₂)^(2^b)),
+//!   C₁,b = A₁,b·r₂/(r₁+r₂) + A₂,b·r₁/(r₁+r₂),
+//!   C₂,b = A₁,b·r₁/(r₁+r₂) + A₂,b·r₂/(r₁+r₂).
+//!
+//! The formula assumes D is large; Appendix A (our [`super::exact`])
+//! quantifies the (tiny) approximation error for small D.
+
+/// The Theorem-1 constants for a pair of sets with densities r₁, r₂.
+#[derive(Clone, Copy, Debug)]
+pub struct BbitConstants {
+    pub a1: f64,
+    pub a2: f64,
+    pub c1: f64,
+    pub c2: f64,
+    pub b: u32,
+}
+
+/// A_{j,b} = r(1−r)^(2^b−1) / (1 − (1−r)^(2^b)).
+///
+/// Limits: r → 0 gives A → 1/2^b (by L'Hôpital); r = 1 gives A = 0.
+pub fn a_b(r: f64, b: u32) -> f64 {
+    assert!((0.0..=1.0).contains(&r), "density r={r} outside [0,1]");
+    let w = (1u64 << b) as f64; // 2^b
+    if r == 0.0 {
+        return 1.0 / w;
+    }
+    if r == 1.0 {
+        return 0.0;
+    }
+    // Numerically stable: 1 − (1−r)^w = −expm1(w·ln1p(−r)) avoids the
+    // catastrophic cancellation of the naive form for tiny r.
+    let l = (-r).ln_1p(); // ln(1−r) < 0
+    let numer = r * ((w - 1.0) * l).exp();
+    let denom = -(w * l).exp_m1();
+    if denom == 0.0 {
+        return 1.0 / w; // r so small that even expm1 underflows
+    }
+    numer / denom
+}
+
+impl BbitConstants {
+    /// Compute the constants from set densities r₁ = f₁/D, r₂ = f₂/D.
+    pub fn new(r1: f64, r2: f64, b: u32) -> Self {
+        assert!((1..=32).contains(&b));
+        assert!(r1 >= 0.0 && r2 >= 0.0 && r1 <= 1.0 && r2 <= 1.0);
+        assert!(r1 + r2 > 0.0, "both sets empty");
+        let a1 = a_b(r1, b);
+        let a2 = a_b(r2, b);
+        let denom = r1 + r2;
+        let c1 = a1 * r2 / denom + a2 * r1 / denom;
+        let c2 = a1 * r1 / denom + a2 * r2 / denom;
+        Self { a1, a2, c1, c2, b }
+    }
+
+    /// From cardinalities: f₁ = |S₁|, f₂ = |S₂| in a universe of size D.
+    pub fn from_cardinalities(f1: u64, f2: u64, d: u64, b: u32) -> Self {
+        Self::new(f1 as f64 / d as f64, f2 as f64 / d as f64, b)
+    }
+
+    /// The forward map P_b(R) = C₁ + (1 − C₂)·R (eq. 4).
+    pub fn p_b(&self, r: f64) -> f64 {
+        self.c1 + (1.0 - self.c2) * r
+    }
+
+    /// The inverse map R̂ = (P̂_b − C₁)/(1 − C₂) (eq. 5).
+    pub fn r_from_pb(&self, p_hat: f64) -> f64 {
+        (p_hat - self.c1) / (1.0 - self.c2)
+    }
+}
+
+/// Convenience: P_b for sets with cardinalities (f₁, f₂), resemblance R.
+pub fn p_b(f1: u64, f2: u64, d: u64, b: u32, r: f64) -> f64 {
+    BbitConstants::from_cardinalities(f1, f2, d, b).p_b(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_b_limits() {
+        // r -> 0: A -> 2^-b.
+        assert!((a_b(0.0, 8) - 1.0 / 256.0).abs() < 1e-12);
+        assert!((a_b(1e-12, 4) - 1.0 / 16.0).abs() < 1e-6);
+        // r = 1: numerator has (1-r)^(2^b -1) = 0.
+        assert_eq!(a_b(1.0, 4), 0.0);
+        // Monotone decreasing in r (more dense -> lower-bit collisions rarer
+        // to be "accidental").
+        assert!(a_b(0.1, 8) > a_b(0.5, 8));
+    }
+
+    #[test]
+    fn pb_is_affine_in_r_with_correct_endpoints() {
+        let c = BbitConstants::new(0.01, 0.02, 8);
+        // R = 1 requires f1 = f2; then A1 = A2 so C1 = C2 and P_b(1) = 1.
+        let ceq = BbitConstants::new(0.015, 0.015, 8);
+        assert!((ceq.p_b(1.0) - 1.0).abs() < 1e-12);
+        // R = 0: P_b = C1 (pure accidental collision mass).
+        assert!((c.p_b(0.0) - c.c1).abs() < 1e-15);
+        // P_b within [0, 1] over the *feasible* R range. With r1 ≠ r2 the
+        // largest consistent resemblance is min(f1,f2)/(f1+f2−min) — eq. (4)
+        // is only meaningful there (outside it the affine form can exceed 1).
+        let r_max = 0.01 / (0.01 + 0.02 - 0.01);
+        for t in 0..=10 {
+            let r = r_max * t as f64 / 10.0;
+            let p = c.p_b(r);
+            assert!((0.0..=1.0).contains(&p), "P_b({r}) = {p}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let c = BbitConstants::new(0.003, 0.001, 4);
+        for r in [0.0, 0.25, 0.5, 0.9] {
+            let p = c.p_b(r);
+            assert!((c.r_from_pb(p) - r).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn b1_approaches_half_plus_half_r_for_sparse_sets() {
+        // b=1, r1=r2→0: A→1/2, C1=C2→1/2 ⇒ P₁ = 1/2 + R/2 — the classic
+        // 1-bit result from the b-bit minwise hashing paper.
+        let c = BbitConstants::new(1e-9, 1e-9, 1);
+        assert!((c.c1 - 0.5).abs() < 1e-6);
+        assert!((c.p_b(0.4) - (0.5 + 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn large_b_converges_to_r() {
+        // As b grows, accidental low-bit collisions vanish: P_b → R.
+        let c = BbitConstants::new(0.001, 0.002, 24);
+        for r in [0.1, 0.5, 0.9] {
+            assert!((c.p_b(r) - r).abs() < 1e-3, "b=24 P vs R at {r}");
+        }
+    }
+
+    #[test]
+    fn constants_symmetric_in_r1_r2() {
+        let a = BbitConstants::new(0.01, 0.05, 8);
+        let b = BbitConstants::new(0.05, 0.01, 8);
+        assert!((a.c1 - b.c1).abs() < 1e-15);
+        assert!((a.c2 - b.c2).abs() < 1e-15);
+    }
+}

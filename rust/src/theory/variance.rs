@@ -1,0 +1,241 @@
+//! Every variance formula in the paper, as checkable closed forms.
+//!
+//! | eq.  | estimator                         | function                |
+//! |------|-----------------------------------|-------------------------|
+//! | (3)  | R̂_M (minwise)                     | [`var_minwise`]         |
+//! | (6)  | R̂_b (b-bit minwise)               | [`var_bbit`]            |
+//! | (14) | â_rp (random projections)         | [`var_rp`]              |
+//! | (17) | â_vw,s (generalized VW, Lemma 1)  | [`var_vw`]              |
+//! | (19) | R̂_{b,vw} (VW on top, Lemma 2)     | [`var_bbit_vw`]         |
+//! | (21) | â_cm (Count-Min, single row)      | [`var_cm`]              |
+//! | (23) | â_cm,nb (unbiased CM, eq. 22)     | [`var_cm_nb`]           |
+//!
+//! The test suite validates each against Monte-Carlo runs of the actual
+//! implementations in [`crate::hashing`].
+
+use super::pb::BbitConstants;
+
+/// Eq. (3): Var(R̂_M) = R(1−R)/k.
+pub fn var_minwise(r: f64, k: usize) -> f64 {
+    r * (1.0 - r) / k as f64
+}
+
+/// Eq. (6): Var(R̂_b) = P_b(1 − P_b) / (k · (1 − C₂,b)²).
+pub fn var_bbit(c: &BbitConstants, r: f64, k: usize) -> f64 {
+    let pb = c.p_b(r);
+    pb * (1.0 - pb) / (k as f64 * (1.0 - c.c2).powi(2))
+}
+
+/// Moment sums of a pair of data vectors, the building blocks of
+/// eqs. (14)/(17)/(21)/(23).
+#[derive(Clone, Copy, Debug)]
+pub struct PairMoments {
+    /// Σ u1_i²
+    pub sq1: f64,
+    /// Σ u2_i²
+    pub sq2: f64,
+    /// a = Σ u1_i u2_i
+    pub a: f64,
+    /// Σ u1_i² u2_i²
+    pub sqsq: f64,
+    /// Σ u1_i
+    pub sum1: f64,
+    /// Σ u2_i
+    pub sum2: f64,
+}
+
+impl PairMoments {
+    pub fn from_dense(u1: &[f64], u2: &[f64]) -> Self {
+        assert_eq!(u1.len(), u2.len());
+        let mut m = PairMoments {
+            sq1: 0.0,
+            sq2: 0.0,
+            a: 0.0,
+            sqsq: 0.0,
+            sum1: 0.0,
+            sum2: 0.0,
+        };
+        for (&x, &y) in u1.iter().zip(u2) {
+            m.sq1 += x * x;
+            m.sq2 += y * y;
+            m.a += x * y;
+            m.sqsq += x * x * y * y;
+            m.sum1 += x;
+            m.sum2 += y;
+        }
+        m
+    }
+
+    /// Binary-data moments: Σu² = f, Σu1²u2² = Σu1u2 = a, Σu = f.
+    pub fn binary(f1: u64, f2: u64, a: u64) -> Self {
+        PairMoments {
+            sq1: f1 as f64,
+            sq2: f2 as f64,
+            a: a as f64,
+            sqsq: a as f64,
+            sum1: f1 as f64,
+            sum2: f2 as f64,
+        }
+    }
+}
+
+/// Eq. (14): Var(â_rp,s) = [Σu1²·Σu2² + a² + (s−3)·Σu1²u2²] / k.
+pub fn var_rp(m: &PairMoments, s: f64, k: usize) -> f64 {
+    (m.sq1 * m.sq2 + m.a * m.a + (s - 3.0) * m.sqsq) / k as f64
+}
+
+/// Eq. (17) / Lemma 1:
+/// Var(â_vw,s) = (s−1)·Σu1²u2² + [Σu1²·Σu2² + a² − 2Σu1²u2²] / k.
+pub fn var_vw(m: &PairMoments, s: f64, k: usize) -> f64 {
+    (s - 1.0) * m.sqsq + (m.sq1 * m.sq2 + m.a * m.a - 2.0 * m.sqsq) / k as f64
+}
+
+/// Eq. (21): Var(â_cm) = (1/k)(1 − 1/k)·[Σu1²·Σu2² + a² − 2Σu1²u2²].
+pub fn var_cm(m: &PairMoments, k: usize) -> f64 {
+    let kf = k as f64;
+    (1.0 / kf) * (1.0 - 1.0 / kf) * (m.sq1 * m.sq2 + m.a * m.a - 2.0 * m.sqsq)
+}
+
+/// Eq. (23): Var(â_cm,nb) = [Σu1²·Σu2² + a² − 2Σu1²u2²] / (k−1).
+pub fn var_cm_nb(m: &PairMoments, k: usize) -> f64 {
+    (m.sq1 * m.sq2 + m.a * m.a - 2.0 * m.sqsq) / (k as f64 - 1.0)
+}
+
+/// Eq. (19) / Lemma 2: variance of R̂_{b,vw} — b-bit hashing (size k)
+/// followed by VW hashing (size m) of the expanded 2^b·k vector:
+///
+///   Var = P_b(1−P_b)/(k(1−C₂)²) + (1+P_b²)/(m(1−C₂)²)
+///         − P_b(1+P_b)/(m·k·(1−C₂)²).
+pub fn var_bbit_vw(c: &BbitConstants, r: f64, k: usize, m: usize) -> f64 {
+    let pb = c.p_b(r);
+    let denom = (1.0 - c.c2).powi(2);
+    let kf = k as f64;
+    let mf = m as f64;
+    pb * (1.0 - pb) / (kf * denom) + (1.0 + pb * pb) / (mf * denom)
+        - pb * (1.0 + pb) / (mf * kf * denom)
+}
+
+/// Variance of the inner-product estimate derived from R̂_b via
+/// a = R/(1+R)·(f₁+f₂) (Appendix C, delta method):
+///
+///   Var(â_b) = [ (f₁+f₂) / (1+R)² ]² · Var(R̂_b).
+pub fn var_a_from_bbit(c: &BbitConstants, r: f64, f1: u64, f2: u64, k: usize) -> f64 {
+    let deriv = (f1 + f2) as f64 / (1.0 + r).powi(2);
+    deriv * deriv * var_bbit(c, r, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minwise_variance_peaks_at_half() {
+        assert!(var_minwise(0.5, 10) > var_minwise(0.1, 10));
+        assert!(var_minwise(0.5, 10) > var_minwise(0.9, 10));
+        assert_eq!(var_minwise(0.0, 10), 0.0);
+        assert_eq!(var_minwise(1.0, 10), 0.0);
+        // 1/k scaling.
+        assert!((var_minwise(0.3, 20) * 2.0 - var_minwise(0.3, 10)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bbit_variance_decreases_with_b() {
+        // More bits ⇒ smaller (1−C₂)⁻² inflation ⇒ smaller variance.
+        let r = 0.4;
+        let k = 100;
+        let mut prev = f64::INFINITY;
+        for b in [1u32, 2, 4, 8, 16] {
+            let c = BbitConstants::new(0.001, 0.001, b);
+            let v = var_bbit(&c, r, k);
+            assert!(v < prev, "b={b}: {v} !< {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn bbit_variance_approaches_minwise_for_large_b() {
+        let r = 0.4;
+        let k = 50;
+        let c = BbitConstants::new(0.0005, 0.0005, 24);
+        let vb = var_bbit(&c, r, k);
+        let vm = var_minwise(r, k);
+        assert!((vb - vm).abs() / vm < 0.01, "{vb} vs {vm}");
+    }
+
+    #[test]
+    fn vw_equals_rp_at_s1_up_to_k_terms() {
+        // The paper's §6.2 punchline: at s = 1, eq. (17) = eq. (14).
+        let m = PairMoments::binary(300, 200, 100);
+        for k in [16usize, 64, 256] {
+            let v_vw = var_vw(&m, 1.0, k);
+            let v_rp = var_rp(&m, 1.0, k);
+            // eq14 at s=1: (sq1·sq2 + a² − 2sqsq)/k  vs eq17: identical.
+            assert!((v_vw - v_rp).abs() < 1e-9, "k={k}: {v_vw} vs {v_rp}");
+        }
+    }
+
+    #[test]
+    fn vw_s_gt_1_has_non_vanishing_term() {
+        // The (s−1)Σu1²u2² term survives k → ∞ (why VW must use s = 1).
+        let m = PairMoments::binary(300, 200, 100);
+        let v = var_vw(&m, 3.0, 1_000_000);
+        assert!(v > 2.0 * 100.0 - 1.0, "non-vanishing term missing: {v}");
+    }
+
+    #[test]
+    fn cm_nb_close_to_vw_variance() {
+        // Appendix B.3: â_cm,nb variance "essentially the same" as VW's.
+        let m = PairMoments::binary(500, 400, 150);
+        let k = 100;
+        let v_nb = var_cm_nb(&m, k);
+        let v_vw = var_vw(&m, 1.0, k);
+        assert!((v_nb - v_vw).abs() / v_vw < 0.05, "{v_nb} vs {v_vw}");
+    }
+
+    #[test]
+    fn lemma2_reduces_to_bbit_as_m_grows() {
+        let c = BbitConstants::new(0.001, 0.002, 16);
+        let r = 0.5;
+        let k = 200;
+        let v_inf = var_bbit(&c, r, k);
+        let v_m = var_bbit_vw(&c, r, k, 1 << 30);
+        assert!((v_m - v_inf).abs() / v_inf < 1e-3, "{v_m} vs {v_inf}");
+        // And is strictly larger for finite m.
+        assert!(var_bbit_vw(&c, r, k, 4 * k) > v_inf);
+    }
+
+    #[test]
+    fn lemma2_m_256k_tradeoff() {
+        // The paper's §8 guidance: at b = 16, m = 2^8·k adds little variance.
+        let c = BbitConstants::new(0.001, 0.001, 16);
+        let r = 0.5;
+        let k = 200;
+        let base = var_bbit(&c, r, k);
+        let with_vw = var_bbit_vw(&c, r, k, 256 * k);
+        assert!(
+            with_vw < 1.10 * base,
+            "m=2^8k should add <10% variance: {with_vw} vs {base}"
+        );
+        // While m = k is catastrophic.
+        assert!(var_bbit_vw(&c, r, k, k) > 3.0 * base);
+    }
+
+    #[test]
+    fn moments_from_dense_match_binary() {
+        // Dense 0/1 vectors must produce the binary() moments.
+        let mut u1 = vec![0.0; 100];
+        let mut u2 = vec![0.0; 100];
+        for i in 0..40 {
+            u1[i] = 1.0;
+        }
+        for i in 20..70 {
+            u2[i] = 1.0;
+        }
+        let md = PairMoments::from_dense(&u1, &u2);
+        let mb = PairMoments::binary(40, 50, 20);
+        assert_eq!(md.sq1, mb.sq1);
+        assert_eq!(md.sq2, mb.sq2);
+        assert_eq!(md.a, mb.a);
+        assert_eq!(md.sqsq, mb.sqsq);
+    }
+}

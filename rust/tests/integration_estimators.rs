@@ -1,0 +1,167 @@
+//! Statistical integration: every estimator family on one shared workload,
+//! validated against the paper's closed-form means and variances.
+
+use bbml::hashing::bbit::pack_lowest_bits;
+use bbml::hashing::estimators::{estimate_a_from_r, estimate_r_bbit, p_hat};
+use bbml::hashing::minwise::MinwiseHasher;
+use bbml::hashing::projections::{ProjectionKind, RandomProjection};
+use bbml::hashing::vw::VwHasher;
+use bbml::proptest_mini::{check, gen};
+use bbml::theory::pb::BbitConstants;
+use bbml::theory::variance::{var_bbit, var_minwise, var_rp, var_vw, PairMoments};
+
+/// One pair of sets with known statistics, shared by all the tests.
+struct Pair {
+    s1: Vec<u64>,
+    s2: Vec<u64>,
+    f1: u64,
+    f2: u64,
+    a: u64,
+    r: f64,
+    d: u64,
+}
+
+fn the_pair() -> Pair {
+    let d = 1 << 20;
+    let s1: Vec<u64> = (0..300).collect();
+    let s2: Vec<u64> = (150..450).collect();
+    Pair {
+        f1: 300,
+        f2: 300,
+        a: 150,
+        r: 150.0 / 450.0,
+        d,
+        s1,
+        s2,
+    }
+}
+
+#[test]
+fn every_estimator_is_consistent_on_the_same_pair() {
+    let p = the_pair();
+    // --- minwise (eq. 2/3) ---
+    let k = 256;
+    let h = MinwiseHasher::new(p.d, k, 1);
+    let r_mw = MinwiseHasher::estimate_resemblance(&h.signature(&p.s1), &h.signature(&p.s2));
+    let std_mw = var_minwise(p.r, k).sqrt();
+    assert!((r_mw - p.r).abs() < 5.0 * std_mw, "minwise {r_mw} vs {}", p.r);
+
+    // --- b-bit (eq. 5/6) ---
+    for b in [1u32, 4, 8] {
+        let z1 = pack_lowest_bits(&h.signature(&p.s1), b);
+        let z2 = pack_lowest_bits(&h.signature(&p.s2), b);
+        let r_b = estimate_r_bbit(&z1, &z2, p.f1, p.f2, p.d, b);
+        let c = BbitConstants::from_cardinalities(p.f1, p.f2, p.d, b);
+        let std_b = var_bbit(&c, p.r, k).sqrt();
+        assert!(
+            (r_b - p.r).abs() < 5.0 * std_b,
+            "b={b}: {r_b} vs {} (std {std_b})",
+            p.r
+        );
+        // Inner product recovery (Appendix C).
+        let a_hat = estimate_a_from_r(r_b, p.f1, p.f2);
+        assert!((a_hat - p.a as f64).abs() < 60.0, "â = {a_hat}");
+    }
+
+    // --- VW (Lemma 1) ---
+    let vw = VwHasher::new(512, 7);
+    let a_vw = VwHasher::estimate_inner_product(
+        &vw.hash_binary(&p.s1),
+        &vw.hash_binary(&p.s2),
+    );
+    let m = PairMoments::binary(p.f1, p.f2, p.a);
+    let std_vw = var_vw(&m, 1.0, 512).sqrt();
+    assert!(
+        (a_vw - p.a as f64).abs() < 5.0 * std_vw,
+        "vw {a_vw} vs {} (std {std_vw})",
+        p.a
+    );
+
+    // --- random projections (eq. 13/14) ---
+    let rp = RandomProjection::new(512, ProjectionKind::Rademacher, 9);
+    let a_rp = RandomProjection::estimate_inner_product(
+        &rp.project_binary(&p.s1),
+        &rp.project_binary(&p.s2),
+    );
+    let std_rp = var_rp(&m, 1.0, 512).sqrt();
+    assert!((a_rp - p.a as f64).abs() < 5.0 * std_rp, "rp {a_rp}");
+}
+
+#[test]
+fn bbit_beats_vw_at_equal_storage_empirically() {
+    // The G_vw story end-to-end: at the same *bit* budget, b-bit hashing
+    // estimates a with lower squared error than VW.
+    let p = the_pair();
+    let budget_bits = 8 * 256; // 2048 bits per example
+    let b = 8u32;
+    let k_bbit = (budget_bits / b as usize).min(256); // 256 samples × 8 bits
+    let k_vw = budget_bits / 32; // 64 samples × 32 bits
+    let reps = 300;
+    let (mut se_b, mut se_vw) = (0.0, 0.0);
+    for seed in 0..reps {
+        let h = MinwiseHasher::new(p.d, k_bbit, 100 + seed);
+        let z1 = pack_lowest_bits(&h.signature(&p.s1), b);
+        let z2 = pack_lowest_bits(&h.signature(&p.s2), b);
+        let r_b = estimate_r_bbit(&z1, &z2, p.f1, p.f2, p.d, b);
+        let a_b = estimate_a_from_r(r_b, p.f1, p.f2);
+        se_b += (a_b - p.a as f64).powi(2);
+
+        let vw = VwHasher::new(k_vw, 500_000 + seed);
+        let a_v = VwHasher::estimate_inner_product(
+            &vw.hash_binary(&p.s1),
+            &vw.hash_binary(&p.s2),
+        );
+        se_vw += (a_v - p.a as f64).powi(2);
+    }
+    let (mse_b, mse_vw) = (se_b / reps as f64, se_vw / reps as f64);
+    assert!(
+        mse_vw > 3.0 * mse_b,
+        "expected b-bit ≫ VW at equal storage: MSE {mse_b:.2} vs {mse_vw:.2}"
+    );
+}
+
+#[test]
+fn prop_bbit_estimator_is_calibrated_across_random_pairs() {
+    check("R̂_b calibration", 15, |rng| {
+        let d = 1 << 18;
+        let f1 = 100 + rng.gen_range(200) as usize;
+        let f2 = 100 + rng.gen_range(200) as usize;
+        let a = rng.gen_range(f1.min(f2) as u64 + 1) as usize;
+        let (s1, s2) = gen::overlapping_sets(rng, d, f1, f2, a);
+        let r = a as f64 / (f1 + f2 - a) as f64;
+        let k = 200;
+        let b = 8;
+        let h = MinwiseHasher::new(d, k, rng.next_u64());
+        let z1 = pack_lowest_bits(&h.signature(&s1), b);
+        let z2 = pack_lowest_bits(&h.signature(&s2), b);
+        let r_hat = estimate_r_bbit(&z1, &z2, f1 as u64, f2 as u64, d, b);
+        let c = BbitConstants::from_cardinalities(f1 as u64, f2 as u64, d, b);
+        let std = var_bbit(&c, r, k).sqrt();
+        assert!(
+            (r_hat - r).abs() < 6.0 * std + 0.02,
+            "R={r:.3} R̂={r_hat:.3} std={std:.4} (f1={f1} f2={f2} a={a})"
+        );
+    });
+}
+
+#[test]
+fn prop_p_hat_matches_expected_collision_rate() {
+    check("P̂_b vs theory", 10, |rng| {
+        let d = 1 << 16;
+        let (s1, s2) = gen::overlapping_sets(rng, d, 150, 150, 75);
+        let r = 75.0 / 225.0;
+        let b = 2u32;
+        let k = 400;
+        let h = MinwiseHasher::new(d, k, rng.next_u64());
+        let z1 = pack_lowest_bits(&h.signature(&s1), b);
+        let z2 = pack_lowest_bits(&h.signature(&s2), b);
+        let observed = p_hat(&z1, &z2);
+        let expect = BbitConstants::from_cardinalities(150, 150, d, b).p_b(r);
+        // Binomial std for k samples.
+        let std = (expect * (1.0 - expect) / k as f64).sqrt();
+        assert!(
+            (observed - expect).abs() < 6.0 * std,
+            "P̂ {observed:.4} vs P {expect:.4}"
+        );
+    });
+}

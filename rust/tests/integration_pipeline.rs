@@ -1,0 +1,116 @@
+//! End-to-end pipeline integration: corpus → shingles → sharded hashing →
+//! signatures → training → evaluation, all through the public API.
+
+use bbml::coordinator::pipeline::{hash_corpus, hash_dataset, PipelineOptions};
+use bbml::coordinator::trainer::{evaluate, train_signatures, Backend};
+use bbml::data::libsvm;
+use bbml::data::synth::{generate_corpus, CorpusSampler, SynthConfig};
+
+fn corpus_cfg(n: usize) -> SynthConfig {
+    SynthConfig {
+        n_docs: n,
+        dim: 1 << 22,
+        vocab: 10_000,
+        mean_len: 80,
+        topic_mix: 0.3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_path_corpus_to_accuracy() {
+    let cfg = corpus_cfg(600);
+    let ds = generate_corpus(&cfg);
+    let (train, test) = ds.train_test_split(0.2, 7);
+    let opt = PipelineOptions::default();
+    let (sig_tr, stats) = hash_dataset(&train, 128, 8, 42, &opt);
+    let (sig_te, _) = hash_dataset(&test, 128, 8, 42, &opt);
+
+    // The paper's storage claim: packed data is n·b·k bits.
+    let expect_bytes = (sig_tr.n() * 128 * 8).div_ceil(8);
+    assert!(stats.output_bytes <= expect_bytes + 8);
+    // ...which is a real reduction vs the raw representation.
+    assert!(stats.output_bytes * 4 < train.storage_bytes());
+
+    let out = train_signatures(&sig_tr, Backend::SvmDcd, 1.0, 3, None, None).unwrap();
+    let (acc, _) = evaluate(&out.model, &sig_te);
+    assert!(acc > 0.9, "test accuracy {acc}");
+}
+
+#[test]
+fn streaming_and_materialized_paths_agree() {
+    let cfg = corpus_cfg(200);
+    let sampler = CorpusSampler::new(cfg.clone());
+    let ds = generate_corpus(&cfg);
+    let opt = PipelineOptions {
+        threads: 4,
+        chunk: 17,
+        queue: 2,
+    };
+    let (a, _) = hash_corpus(&sampler, cfg.n_docs, 32, 4, 9, &opt);
+    let (b, _) = hash_dataset(&ds, 32, 4, 9, &opt);
+    assert_eq!(a.n(), b.n());
+    for i in 0..a.n() {
+        assert_eq!(a.row(i), b.row(i), "row {i}");
+        assert_eq!(a.label(i), b.label(i));
+    }
+}
+
+#[test]
+fn libsvm_roundtrip_preserves_learning_behaviour() {
+    let cfg = corpus_cfg(300);
+    let ds = generate_corpus(&cfg);
+    let dir = std::env::temp_dir().join("bbml_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corpus.libsvm.gz");
+    libsvm::write_libsvm(&ds, &path).unwrap();
+    let back = libsvm::read_libsvm(&path, Some(ds.dim())).unwrap();
+    assert_eq!(back.n(), ds.n());
+    assert_eq!(back.total_nnz(), ds.total_nnz());
+    // Hash both and compare signatures — identical input must hash identically.
+    let opt = PipelineOptions::default();
+    let (s1, _) = hash_dataset(&ds, 16, 8, 5, &opt);
+    let (s2, _) = hash_dataset(&back, 16, 8, 5, &opt);
+    for i in 0..s1.n() {
+        assert_eq!(s1.row(i), s2.row(i));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn accuracy_improves_with_b_and_k() {
+    // The central shape of Figures 1/5: more bits and more permutations
+    // move hashed-data accuracy toward original-data accuracy.
+    let cfg = corpus_cfg(500);
+    let ds = generate_corpus(&cfg);
+    let (train, test) = ds.train_test_split(0.2, 11);
+    let opt = PipelineOptions::default();
+    let acc_of = |k: usize, b: u32| {
+        let (tr, _) = hash_dataset(&train, k, b, 77, &opt);
+        let (te, _) = hash_dataset(&test, k, b, 77, &opt);
+        let out = train_signatures(&tr, Backend::SvmDcd, 1.0, 3, None, None).unwrap();
+        evaluate(&out.model, &te).0
+    };
+    let lo = acc_of(16, 1);
+    let hi = acc_of(128, 8);
+    assert!(
+        hi >= lo + 0.02 || hi > 0.97,
+        "k=128/b=8 ({hi}) should beat k=16/b=1 ({lo})"
+    );
+}
+
+#[test]
+fn cli_hash_and_config_commands_run() {
+    bbml::cli::run_with(&[
+        "hash".to_string(),
+        "--k".to_string(),
+        "16".to_string(),
+        "--b".to_string(),
+        "4".to_string(),
+        "n_docs=100".to_string(),
+        "dim=1048576".to_string(),
+        "vocab=2000".to_string(),
+    ])
+    .unwrap();
+    bbml::cli::run_with(&["config".to_string()]).unwrap();
+}

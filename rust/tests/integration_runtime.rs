@@ -1,0 +1,130 @@
+//! PJRT runtime integration: load real AOT artifacts, execute, and
+//! cross-check numerics against the pure-rust implementations.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially, with a note) when `artifacts/manifest.txt` is absent so
+//! `cargo test` works in a fresh checkout.
+
+use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use bbml::coordinator::trainer::{evaluate, evaluate_pjrt, train_signatures, Backend};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::bbit::BbitSignatureMatrix;
+use bbml::rng::Xoshiro256;
+use bbml::runtime::Runtime;
+use bbml::solvers::{BinaryFeatures, ExpandedView};
+
+fn runtime() -> Option<Runtime> {
+    let rt = Runtime::try_default();
+    if rt.is_none() {
+        eprintln!("skipping: no artifacts/ — run `make artifacts` first");
+    }
+    rt
+}
+
+fn random_sigs(n: usize, k: usize, b: u32, seed: u64) -> BbitSignatureMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut m = BbitSignatureMatrix::new(k, b);
+    for i in 0..n {
+        let row: Vec<u16> = (0..k)
+            .map(|_| (rng.next_u32() & ((1u32 << b) - 1)) as u16)
+            .collect();
+        m.push_row(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    m
+}
+
+#[test]
+fn pjrt_predict_matches_rust_scorer() {
+    let Some(rt) = runtime() else { return };
+    // Production shape: k=200, b=8 (the compiled artifact's contract).
+    let sigs = random_sigs(300, 200, 8, 1); // non-multiple of 256: pads
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let w: Vec<f32> = (0..200 * 256).map(|_| rng.gen_f32() - 0.5).collect();
+    let scores = rt.predict_scores(&sigs, &w).unwrap();
+    assert_eq!(scores.len(), sigs.n());
+    let view = ExpandedView::new(&sigs);
+    for i in 0..sigs.n() {
+        let expect = view.dot(i, &w);
+        assert!(
+            (scores[i] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+            "row {i}: pjrt {} vs rust {}",
+            scores[i],
+            expect
+        );
+    }
+}
+
+#[test]
+fn pjrt_match_count_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let a = random_sigs(130, 200, 8, 3);
+    let b = random_sigs(140, 200, 8, 4);
+    let a_rows: Vec<usize> = (0..a.n()).collect();
+    let b_rows: Vec<usize> = (0..b.n()).collect();
+    let k = rt.match_count(&a, &a_rows, &b, &b_rows).unwrap();
+    assert_eq!(k.len(), a.n());
+    assert_eq!(k[0].len(), b.n());
+    let mut ra = vec![0u16; 200];
+    let mut rb = vec![0u16; 200];
+    for (i, &ia) in a_rows.iter().enumerate().step_by(17) {
+        a.unpack_row_into(ia, &mut ra);
+        for (j, &jb) in b_rows.iter().enumerate().step_by(13) {
+            b.unpack_row_into(jb, &mut rb);
+            let expect = ra.iter().zip(&rb).filter(|(x, y)| x == y).count() as f32;
+            assert_eq!(k[i][j], expect, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn pjrt_training_learns_and_scorers_agree() {
+    let Some(rt) = runtime() else { return };
+    let cfg = SynthConfig {
+        n_docs: 700,
+        dim: 1 << 22,
+        vocab: 10_000,
+        mean_len: 80,
+        topic_mix: 0.3,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let (train, test) = ds.train_test_split(0.25, 5);
+    let opt = PipelineOptions::default();
+    let (sig_tr, _) = hash_dataset(&train, 200, 8, 21, &opt);
+    let (sig_te, _) = hash_dataset(&test, 200, 8, 21, &opt);
+
+    let out =
+        train_signatures(&sig_tr, Backend::PjrtLogReg, 1.0, 3, Some(&rt), None).unwrap();
+    let (acc_rust, _) = evaluate(&out.model, &sig_te);
+    let (acc_pjrt, _) = evaluate_pjrt(&out.model, &sig_te, &rt).unwrap();
+    assert!(acc_rust > 0.85, "pjrt-trained model accuracy {acc_rust}");
+    assert!(
+        (acc_rust - acc_pjrt).abs() < 1e-9,
+        "scorers disagree: rust {acc_rust} vs pjrt {acc_pjrt}"
+    );
+}
+
+#[test]
+fn pjrt_small_artifacts_run_too() {
+    let Some(rt) = runtime() else { return };
+    // The n=8/k=16/b=4 variants exist for fast tests.
+    let sigs = random_sigs(8, 16, 4, 9);
+    let w = vec![0.1f32; 16 * 16];
+    let scores = rt.predict_scores(&sigs, &w).unwrap();
+    // Every expanded row has exactly k ones ⇒ score = 0.1·16 = 1.6.
+    for s in scores {
+        assert!((s - 1.6).abs() < 1e-5, "{s}");
+    }
+    let out = rt
+        .train_step(
+            bbml::runtime::ArtifactKind::SvmStep,
+            &sigs,
+            &(0..8).collect::<Vec<_>>(),
+            &w,
+            1.0,
+            0.01,
+        )
+        .unwrap();
+    assert_eq!(out.w.len(), 256);
+    assert!(out.loss.is_finite());
+}

@@ -1,0 +1,145 @@
+//! Cross-solver integration: all solvers on the same hashed workload must
+//! broadly agree; the kernel SVM path must match the linear path on the
+//! expanded features (Theorem 2 says they optimize over the same kernel).
+
+use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::solvers::kernel_svm::{train_kernel_svm, BbitKernel, KernelSvmOptions};
+use bbml::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
+use bbml::solvers::logreg::train_logreg;
+use bbml::solvers::logreg::LogRegOptions;
+use bbml::solvers::{BinaryFeatures, ExpandedView};
+
+fn workload() -> (
+    bbml::hashing::bbit::BbitSignatureMatrix,
+    bbml::hashing::bbit::BbitSignatureMatrix,
+) {
+    let cfg = SynthConfig {
+        n_docs: 500,
+        dim: 1 << 22,
+        vocab: 10_000,
+        mean_len: 80,
+        topic_mix: 0.3,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let (train, test) = ds.train_test_split(0.25, 3);
+    let opt = PipelineOptions::default();
+    (
+        hash_dataset(&train, 96, 8, 13, &opt).0,
+        hash_dataset(&test, 96, 8, 13, &opt).0,
+    )
+}
+
+#[test]
+fn all_solvers_agree_on_easy_workload() {
+    let (tr, te) = workload();
+    let view_tr = ExpandedView::new(&tr);
+    let view_te = ExpandedView::new(&te);
+
+    let svm = train_svm(
+        &view_tr,
+        &SvmOptions {
+            c: 1.0,
+            loss: SvmLoss::L2,
+            ..Default::default()
+        },
+    );
+    let lr = train_logreg(
+        &view_tr,
+        &LogRegOptions {
+            c: 1.0,
+            ..Default::default()
+        },
+    );
+    let acc_svm = svm.accuracy(&view_te);
+    let acc_lr = lr.accuracy(&view_te);
+    assert!(acc_svm > 0.9, "svm {acc_svm}");
+    assert!(acc_lr > 0.9, "logreg {acc_lr}");
+    assert!((acc_svm - acc_lr).abs() < 0.08, "{acc_svm} vs {acc_lr}");
+}
+
+#[test]
+fn kernel_svm_on_bbit_kernel_matches_linear_on_expansion() {
+    // Theorem 2: the b-bit kernel IS the inner product of the expansion
+    // (up to the 1/k scale). Both solvers should classify alike.
+    let (tr, te) = workload();
+    let view_tr = ExpandedView::new(&tr);
+    let linear = train_svm(
+        &view_tr,
+        &SvmOptions {
+            c: 1.0,
+            loss: SvmLoss::L1,
+            ..Default::default()
+        },
+    );
+    let kernel = BbitKernel { sigs: &tr };
+    let kmodel = train_kernel_svm(
+        &kernel,
+        &KernelSvmOptions {
+            // K = match/k rescales the kernel by 1/k; compensate in C so
+            // the two solve the same optimization problem.
+            c: 96.0,
+            ..Default::default()
+        },
+    );
+    // Evaluate the kernel model on test rows via cross match counts.
+    let tr_rows: Vec<Vec<u16>> = (0..tr.n()).map(|j| tr.row(j)).collect();
+    let mut te_row = vec![0u16; te.k()];
+    let mut agree = 0usize;
+    let mut kernel_correct = 0usize;
+    let view_te = ExpandedView::new(&te);
+    for t in 0..te.n() {
+        te.unpack_row_into(t, &mut te_row);
+        let s_kernel = kmodel.score_with(|j| {
+            te_row.iter().zip(&tr_rows[j]).filter(|(a, b)| a == b).count() as f64 / 96.0
+        });
+        let pred_kernel = s_kernel >= 0.0;
+        let pred_linear = linear.score(&view_te, t) >= 0.0;
+        if pred_kernel == pred_linear {
+            agree += 1;
+        }
+        if pred_kernel == (te.label(t) > 0.0) {
+            kernel_correct += 1;
+        }
+    }
+    let agreement = agree as f64 / te.n() as f64;
+    let acc = kernel_correct as f64 / te.n() as f64;
+    assert!(acc > 0.9, "kernel-svm accuracy {acc}");
+    assert!(agreement > 0.9, "linear/kernel agreement {agreement}");
+}
+
+#[test]
+fn c_sweep_shows_regularization_path() {
+    // Tiny C shrinks the model (‖w‖ → 0) and must never *beat* a
+    // well-tuned C; the paper's "best performance usually at C >= 1".
+    let (tr, te) = workload();
+    let view_tr = ExpandedView::new(&tr);
+    let view_te = ExpandedView::new(&te);
+    let model_at = |c: f64| {
+        train_svm(
+            &view_tr,
+            &SvmOptions {
+                c,
+                loss: SvmLoss::L2,
+                ..Default::default()
+            },
+        )
+    };
+    let tiny = model_at(1e-5);
+    let good = model_at(1.0);
+    let norm = |m: &bbml::solvers::LinearModel| -> f64 {
+        m.w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    };
+    assert!(
+        norm(&tiny) < 0.2 * norm(&good),
+        "C=1e-5 ‖w‖ {} should be far smaller than C=1 ‖w‖ {}",
+        norm(&tiny),
+        norm(&good)
+    );
+    let (acc_tiny, acc_good) = (tiny.accuracy(&view_te), good.accuracy(&view_te));
+    assert!(
+        acc_good >= acc_tiny - 0.01,
+        "C=1 ({acc_good}) must not lose to C=1e-5 ({acc_tiny})"
+    );
+}

@@ -1,0 +1,180 @@
+//! Property-based invariants across the whole library (proptest_mini).
+
+use bbml::data::shingle::Shingler;
+use bbml::data::sparse::SparseBinaryVec;
+use bbml::hashing::bbit::{pack_lowest_bits, BbitSignatureMatrix};
+use bbml::hashing::expand::{expand_signature, expanded_dot};
+use bbml::hashing::minwise::MinwiseHasher;
+use bbml::hashing::perm::{Permutation, Permuter};
+use bbml::hashing::vw::VwHasher;
+use bbml::proptest_mini::{check, gen};
+
+#[test]
+fn prop_resemblance_is_a_bounded_symmetric_similarity() {
+    check("resemblance bounds/symmetry", 100, |rng| {
+        let a = SparseBinaryVec::from_indices(gen::sparse_set(rng, 10_000, 1, 100));
+        let b = SparseBinaryVec::from_indices(gen::sparse_set(rng, 10_000, 1, 100));
+        let r_ab = a.resemblance(&b);
+        let r_ba = b.resemblance(&a);
+        assert!((0.0..=1.0).contains(&r_ab));
+        assert_eq!(r_ab, r_ba);
+        assert_eq!(a.resemblance(&a), 1.0);
+    });
+}
+
+#[test]
+fn prop_simulated_permutations_are_bijections() {
+    check("permutation bijectivity", 20, |rng| {
+        let d = 2 + rng.gen_range(3000);
+        let p = Permutation::new(d, rng.next_u64(), rng.gen_range(16));
+        let mut seen = vec![false; d as usize];
+        for x in 0..d {
+            let y = p.apply(x);
+            assert!(y < d, "image out of range");
+            assert!(!seen[y as usize], "collision at {y}");
+            seen[y as usize] = true;
+        }
+    });
+}
+
+#[test]
+fn prop_signature_of_subset_shares_minima() {
+    // If S2 ⊆ S1 then min π(S1) ≤ min π(S2) pointwise, and equal whenever
+    // the overall min lands inside S2.
+    check("subset minima", 50, |rng| {
+        let d = 1 << 16;
+        let s1 = gen::sparse_set(rng, d, 20, 100);
+        let take = 1 + rng.gen_range(s1.len() as u64 / 2) as usize;
+        let s2: Vec<u64> = s1[..take].to_vec();
+        let h = MinwiseHasher::new(d, 32, rng.next_u64());
+        let sig1 = h.signature(&s1);
+        let sig2 = h.signature(&s2);
+        for (a, b) in sig1.iter().zip(&sig2) {
+            assert!(a <= b, "subset min must dominate");
+        }
+    });
+}
+
+#[test]
+fn prop_packing_roundtrip_and_expansion_count() {
+    check("pack/expand invariants", 100, |rng| {
+        let k = 1 + rng.gen_range(64) as usize;
+        let b = 1 + rng.gen_range(16) as u32;
+        let full: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+        let packed = pack_lowest_bits(&full, b);
+        // Truncation honours the mask.
+        for (&z, &p) in full.iter().zip(&packed) {
+            assert_eq!((z & ((1 << b) - 1)) as u16, p);
+        }
+        // Round-trip through the bit-packed matrix.
+        let mut m = BbitSignatureMatrix::new(k, b);
+        m.push_row(&packed, 1.0);
+        assert_eq!(m.row(0), packed);
+        // Theorem-2 expansion: exactly k ones, self-dot = k.
+        let e = expand_signature(&packed, b);
+        assert_eq!(e.len(), k);
+        assert_eq!(expanded_dot(&packed, &packed), k);
+        // Distinct blocks: index j lives in [j·2^b, (j+1)·2^b).
+        for (j, &idx) in e.iter().enumerate() {
+            let w = 1u64 << b;
+            assert!(idx >= j as u64 * w && idx < (j as u64 + 1) * w);
+        }
+    });
+}
+
+#[test]
+fn prop_match_count_triangle_consistency() {
+    // match(i,j) + match(j,l) − k ≤ match(i,l) (equality-pattern overlap).
+    check("match-count triangle", 50, |rng| {
+        let k = 32;
+        let b = 4;
+        let mut m = BbitSignatureMatrix::new(k, b);
+        for _ in 0..3 {
+            let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & 15) as u16).collect();
+            m.push_row(&row, 1.0);
+        }
+        let (ij, jl, il) = (m.match_count(0, 1), m.match_count(1, 2), m.match_count(0, 2));
+        assert!(il + k >= ij + jl, "triangle violated: {ij}+{jl} vs {il}+{k}");
+    });
+}
+
+#[test]
+fn prop_vw_is_sparsity_preserving_and_linear() {
+    check("vw sparsity + linearity", 50, |rng| {
+        let set = gen::sparse_set(rng, 1 << 30, 10, 200);
+        let k = 64 + rng.gen_range(1024) as usize;
+        let h = VwHasher::new(k, rng.next_u64());
+        let sparse = h.hash_binary_sparse(&set);
+        assert!(sparse.len() <= set.len(), "sparsity preservation");
+        // Linearity: hashing the union of disjoint halves = sum of hashes.
+        let mid = set.len() / 2;
+        let g_full = h.hash_binary(&set);
+        let g_a = h.hash_binary(&set[..mid]);
+        let g_b = h.hash_binary(&set[mid..]);
+        for i in 0..k {
+            assert!((g_full[i] - (g_a[i] + g_b[i])).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_shingles_bounded_and_deterministic() {
+    check("shingling", 50, |rng| {
+        let w = 1 + rng.gen_range(5) as usize;
+        let dim = 100 + rng.gen_range(1 << 20);
+        let s = Shingler::new(w, dim);
+        let len = rng.gen_range(200) as usize;
+        let ids: Vec<u64> = (0..len).map(|_| rng.gen_range(5_000)).collect();
+        let v1 = s.shingle_token_ids(&ids);
+        let v2 = s.shingle_token_ids(&ids);
+        assert_eq!(v1, v2);
+        assert!(v1.indices().iter().all(|&i| i < dim));
+        if len >= w {
+            assert!(v1.nnz() <= len - w + 1);
+        }
+    });
+}
+
+#[test]
+fn prop_bbit_gram_matrices_are_positive_semidefinite() {
+    // Theorem 2, verified numerically: the match-count Gram matrix of any
+    // signature set has no negative eigenvalues (checked via Cholesky-with-
+    // jitter on random instances).
+    check("PSD Gram", 25, |rng| {
+        let n = 4 + rng.gen_range(8) as usize;
+        let k = 16;
+        let b = 1 + rng.gen_range(8) as u32;
+        let mut m = BbitSignatureMatrix::new(k, b);
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k)
+                .map(|_| (rng.next_u32() & ((1u32 << b) - 1)) as u16)
+                .collect();
+            m.push_row(&row, 1.0);
+        }
+        // Gram matrix G[i][j] = match/k.
+        let mut g = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                g[i][j] = m.match_count(i, j) as f64 / k as f64;
+            }
+        }
+        // Cholesky with tiny jitter must succeed for a PSD matrix.
+        let jitter = 1e-9;
+        let mut l = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = g[i][j];
+                for t in 0..j {
+                    sum -= l[i][t] * l[j][t];
+                }
+                if i == j {
+                    let v = sum + jitter;
+                    assert!(v > 0.0, "negative pivot {v} at {i} — not PSD");
+                    l[i][i] = v.sqrt();
+                } else {
+                    l[i][j] = sum / l[j][j];
+                }
+            }
+        }
+    });
+}
