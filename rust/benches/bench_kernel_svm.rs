@@ -1,16 +1,72 @@
 //! §5.1: kernel SVM training cost — exact resemblance kernel on raw sets
 //! vs the b-bit estimated kernel across k (the paper's ">1 week vs minutes"
-//! contrast, scaled to this testbed).
+//! contrast, scaled to this testbed) — plus the `match_count` kernel
+//! micro-benchmark that gates it all.
+//!
+//! The micro-benchmark measures, at k = 256 across every b, one Gram row
+//! (512 row pairs) through three paths:
+//!   * `swar`   — the word-aligned SWAR kernel (`match_count`)
+//!   * `scalar` — the seed's generic path (`match_count_scalar`,
+//!     one `get_bits` pair per position): the "before" reference
+//!   * `block`  — the blocked tile primitive (`match_count_block`)
+//! and records everything to `results/BENCH_kernel.json` via benchkit, so
+//! the ≥5× SWAR-vs-seed acceptance gate for b ∈ {1, 2, 4} is checked from
+//! the recorded medians.
 
-use bbml::benchkit::Bencher;
+use bbml::benchkit::{black_box, Bencher};
 use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
 use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::bbit::BbitSignatureMatrix;
+use bbml::rng::Xoshiro256;
 use bbml::solvers::kernel_svm::{
     train_kernel_svm, BbitKernel, KernelSvmOptions, ResemblanceKernel,
 };
 
 fn main() {
     let mut bench = Bencher::new();
+
+    // --- match_count micro-benchmark (the tentpole's acceptance gate) ---
+    let k_sig = 256usize;
+    let n_rows = 512usize;
+    let gram_rows: Vec<usize> = (0..n_rows).collect();
+    for b in [1u32, 2, 4, 8, 16] {
+        let mask = (1u32 << b) - 1;
+        let mut rng = Xoshiro256::seed_from_u64(90 + b as u64);
+        let mut m = BbitSignatureMatrix::with_capacity(k_sig, b, n_rows);
+        for i in 0..n_rows {
+            let row: Vec<u16> = (0..k_sig).map(|_| (rng.next_u32() & mask) as u16).collect();
+            m.push_row(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        bench.bench(&format!("match_count/swar k={k_sig} b={b}"), || {
+            let mut acc = 0usize;
+            for j in 0..n_rows {
+                acc += m.match_count(0, j);
+            }
+            black_box(acc)
+        });
+        bench.bench(&format!("match_count/scalar(seed) k={k_sig} b={b}"), || {
+            let mut acc = 0usize;
+            for j in 0..n_rows {
+                acc += m.match_count_scalar(0, j);
+            }
+            black_box(acc)
+        });
+        bench.bench(&format!("match_count/block {n_rows}x{n_rows} b={b}"), || {
+            black_box(m.match_count_block(&gram_rows, &gram_rows).len())
+        });
+        bench.bench(
+            &format!("match_count/block_par(8) {n_rows}x{n_rows} b={b}"),
+            || black_box(m.match_count_block_par(&gram_rows, &gram_rows, 8).len()),
+        );
+    }
+    // The acceptance-gate artifact holds exactly the micro-benchmark
+    // records; the e2e results below go to the CSV only. A silent write
+    // failure would leave the ≥5× gate with nothing to read, so fail loud.
+    bench
+        .write_json("results/BENCH_kernel.json")
+        .expect("write results/BENCH_kernel.json");
+
+    // --- end-to-end §5.1 contrast ---
     let cfg = SynthConfig {
         n_docs: 800,
         dim: 1 << 24,

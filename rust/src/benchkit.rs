@@ -179,6 +179,42 @@ impl Bencher {
         }
         Ok(())
     }
+
+    /// Write results as a JSON array (hand-rolled; serde is unavailable
+    /// offline) — the machine-readable record the perf acceptance gates
+    /// read, e.g. `results/BENCH_kernel.json`:
+    ///
+    /// ```text
+    /// [
+    ///   {"name": "match_count/swar k=256 b=1", "median_ns": 512, ...},
+    ///   ...
+    /// ]
+    /// ```
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "[")?;
+        for (idx, (name, s)) in self.results.iter().enumerate() {
+            let sep = if idx + 1 == self.results.len() { "" } else { "," };
+            writeln!(
+                f,
+                "  {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \
+                 \"p10_ns\": {}, \"p90_ns\": {}, \"iters\": {}}}{}",
+                name.replace('\\', "\\\\").replace('"', "\\\""),
+                s.median.as_nanos(),
+                s.mean.as_nanos(),
+                s.p10.as_nanos(),
+                s.p90.as_nanos(),
+                s.n,
+                sep
+            )?;
+        }
+        writeln!(f, "]")?;
+        Ok(())
+    }
 }
 
 /// Measure wall-clock of one closure invocation (no printing).
@@ -218,6 +254,25 @@ mod tests {
         let st = b.bench("test/noop", || 1 + 1);
         assert!(st.n >= 5);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_records() {
+        std::env::set_var("BBML_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.measure_time = Duration::from_millis(5);
+        b.warmup_time = Duration::from_millis(1);
+        b.bench("json/a", || 1 + 1);
+        b.bench("json/\"quoted\"", || 2 + 2);
+        let path = std::env::temp_dir().join("bbml_benchkit_test.json");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('['));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"name\": \"json/a\""));
+        assert!(text.contains("\\\"quoted\\\""));
+        assert!(text.contains("\"median_ns\""));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

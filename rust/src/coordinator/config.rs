@@ -78,12 +78,19 @@ fn default_threads() -> usize {
 }
 
 /// A parse failure with the offending key.
-#[derive(Debug, thiserror::Error)]
-#[error("config key '{key}': {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub key: String,
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config key '{}': {}", self.key, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl RunConfig {
     /// Apply one `key=value` override.

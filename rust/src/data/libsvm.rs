@@ -21,12 +21,34 @@ use flate2::write::GzEncoder;
 use super::sparse::{SparseBinaryDataset, SparseBinaryVec};
 
 /// Errors from LIBSVM parsing.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("line {line}: {msg}")]
+    Io(io::Error),
     Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io: {e}"),
+            LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            LibsvmError::Parse { .. } => None,
+        }
+    }
+}
+
+impl From<io::Error> for LibsvmError {
+    fn from(e: io::Error) -> Self {
+        LibsvmError::Io(e)
+    }
 }
 
 fn parse_line(line: &str, lineno: usize) -> Result<Option<(f32, Vec<u64>)>, LibsvmError> {

@@ -113,13 +113,28 @@ impl SparseBinaryDataset {
 
     /// Append an example.
     pub fn push(&mut self, v: SparseBinaryVec, label: f32) {
+        self.push_sorted_slice(v.indices(), label);
+    }
+
+    /// Append an example from already-sorted, unique indices without
+    /// building an owned [`SparseBinaryVec`] — the bulk-ingest path
+    /// (checked in debug builds).
+    pub fn push_sorted_slice(&mut self, indices: &[u64], label: f32) {
         debug_assert!(label == 1.0 || label == -1.0, "labels are ±1");
-        if let Some(&max) = v.indices().last() {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        if let Some(&max) = indices.last() {
             assert!(max < self.dim, "index {max} out of dim {}", self.dim);
         }
-        self.indices.extend_from_slice(v.indices());
+        self.indices.extend_from_slice(indices);
         self.indptr.push(self.indices.len());
         self.labels.push(label);
+    }
+
+    /// Pre-allocate for `rows` more rows totalling `nnz` more non-zeros.
+    pub fn reserve(&mut self, rows: usize, nnz: usize) {
+        self.indptr.reserve(rows);
+        self.indices.reserve(nnz);
+        self.labels.reserve(rows);
     }
 
     #[inline]

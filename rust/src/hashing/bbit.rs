@@ -5,6 +5,39 @@
 //! shrinks the dataset to `n·b·k` bits while Theorem 1 still lets you
 //! recover R — and Theorem 2 makes the truncated signatures a PD kernel so
 //! they can feed a *linear* learner directly.
+//!
+//! # Packed-row memory layout (§Perf)
+//!
+//! Rows are stored **word-aligned**: each row's `k·b` bits are padded up to
+//! a 64-bit boundary (`stride_words = ceil(k·b / 64)`), so row `i` is the
+//! contiguous `u64` slice `words[i·stride .. (i+1)·stride]`, values are
+//! packed little-endian within the row, and the padding bits at the end of
+//! every row are always zero. The alignment buys three things:
+//!
+//! * **SWAR match counting** — for every b that divides 64 (the paper's
+//!   operating points b ∈ {1, 2, 4, 8, 16}) a single `xor` of two row words
+//!   compares 64/b signature positions at once. OR-folding each lane of the
+//!   xor onto its lowest bit and popcounting yields the number of
+//!   *mismatching* lanes, so `match_count = k − Σ popcount(fold(xᵢ ^ yᵢ))`
+//!   over the row pair: zeroed padding lanes xor to zero and never
+//!   contribute. One word op replaces up to 64 `get_bits` pairs of the old
+//!   byte-packed layout — this gates the kernel-SVM Gram cost (§5.1) and
+//!   every estimator sweep.
+//! * **Zero-copy shard merge** — rows start at word boundaries, so the
+//!   sharded pipeline appends whole shards with `extend_from_slice`
+//!   ([`BbitSignatureMatrix::append`]) or places them out-of-order at
+//!   `seq·chunk·stride` ([`BbitSignatureMatrix::copy_rows_from`]) with no
+//!   unpack/re-pack per value.
+//! * **Bulk unpack** — [`BbitSignatureMatrix::to_i32_rows_into`] and
+//!   [`BbitSignatureMatrix::unpack_block_into`] walk whole words
+//!   (shift/mask per lane) into a caller-owned buffer, so PJRT marshalling
+//!   and the Theorem-2 expansion stop allocating per row.
+//!
+//! Widths that do not divide 64 (b ∈ {3, 5, 6, 7, …}) are still supported:
+//! their values may straddle a word boundary inside the row and take the
+//! scalar `get_bits` path. [`BbitSignatureMatrix::match_count_scalar`]
+//! keeps that path callable for every b as the property-test reference for
+//! the SWAR kernels.
 
 /// Extract the lowest `b` bits of each full hash value.
 #[inline]
@@ -14,14 +47,76 @@ pub fn pack_lowest_bits(full: &[u64], b: u32) -> Vec<u16> {
     full.iter().map(|&z| (z & mask) as u16).collect()
 }
 
+/// Bit at the LSB of every 2-bit lane.
+const LANE_LSB_2: u64 = 0x5555_5555_5555_5555;
+/// Bit at the LSB of every 4-bit lane.
+const LANE_LSB_4: u64 = 0x1111_1111_1111_1111;
+/// Bit at the LSB of every 8-bit lane.
+const LANE_LSB_8: u64 = 0x0101_0101_0101_0101;
+/// Bit at the LSB of every 16-bit lane.
+const LANE_LSB_16: u64 = 0x0001_0001_0001_0001;
+
+/// Number of nonzero `b`-bit lanes of `a[i] ^ b[i]` across two equal-length
+/// word slices — i.e. the mismatching signature positions of two aligned
+/// rows. Zero-padded tail lanes xor to zero, so they never count. Requires
+/// `64 % b == 0`; the per-width dispatch happens once, each arm's inner
+/// loop is branch-free.
+#[inline]
+fn mismatched_lanes(wa: &[u64], wb: &[u64], b: u32) -> usize {
+    debug_assert_eq!(wa.len(), wb.len());
+    let mut nz = 0u32;
+    match b {
+        1 => {
+            for (&x, &y) in wa.iter().zip(wb) {
+                nz += (x ^ y).count_ones();
+            }
+        }
+        2 => {
+            for (&x, &y) in wa.iter().zip(wb) {
+                let z = x ^ y;
+                nz += ((z | (z >> 1)) & LANE_LSB_2).count_ones();
+            }
+        }
+        4 => {
+            for (&x, &y) in wa.iter().zip(wb) {
+                let z = x ^ y;
+                let f = z | (z >> 2);
+                nz += ((f | (f >> 1)) & LANE_LSB_4).count_ones();
+            }
+        }
+        8 => {
+            for (&x, &y) in wa.iter().zip(wb) {
+                let z = x ^ y;
+                let mut f = z | (z >> 4);
+                f |= f >> 2;
+                nz += ((f | (f >> 1)) & LANE_LSB_8).count_ones();
+            }
+        }
+        16 => {
+            for (&x, &y) in wa.iter().zip(wb) {
+                let z = x ^ y;
+                let mut f = z | (z >> 8);
+                f |= f >> 4;
+                f |= f >> 2;
+                nz += ((f | (f >> 1)) & LANE_LSB_16).count_ones();
+            }
+        }
+        _ => unreachable!("SWAR lane count requires b | 64, got b={b}"),
+    }
+    nz as usize
+}
+
 /// A bit-packed matrix of n b-bit signatures of width k.
 ///
-/// Storage is exactly `ceil(n*k*b/8)` bytes plus labels — the paper's
-/// `n·b·k` bits claim, realized. Values are packed little-endian within a
-/// contiguous bitstream; row i starts at bit `i*k*b`.
+/// Storage is `n · stride_words` 64-bit words where
+/// `stride_words = ceil(k·b/64)` — the paper's `n·b·k` bits claim, rounded
+/// up to word alignment per row (at most 63 pad bits per row, zeroed). See
+/// the module docs for why the alignment pays for itself.
 #[derive(Clone, Debug)]
 pub struct BbitSignatureMatrix {
-    bits: Vec<u8>,
+    words: Vec<u64>,
+    /// Words per row.
+    stride: usize,
     n: usize,
     k: usize,
     b: u32,
@@ -33,7 +128,8 @@ impl BbitSignatureMatrix {
         assert!((1..=16).contains(&b));
         assert!(k >= 1);
         Self {
-            bits: Vec::new(),
+            words: Vec::new(),
+            stride: (k * b as usize).div_ceil(64),
             n: 0,
             k,
             b,
@@ -44,8 +140,18 @@ impl BbitSignatureMatrix {
     /// Pre-allocate for `n` rows.
     pub fn with_capacity(k: usize, b: u32, n: usize) -> Self {
         let mut m = Self::new(k, b);
-        m.bits.reserve((n * k * b as usize + 7) / 8 + 1);
+        m.words.reserve(n * m.stride);
         m.labels.reserve(n);
+        m
+    }
+
+    /// A pre-sized matrix of `n` all-zero rows (labels 0.0) — the target of
+    /// out-of-order shard placement via [`Self::copy_rows_from`].
+    pub fn with_rows(k: usize, b: u32, n: usize) -> Self {
+        let mut m = Self::new(k, b);
+        m.words = vec![0u64; n * m.stride];
+        m.labels = vec![0.0f32; n];
+        m.n = n;
         m
     }
 
@@ -66,6 +172,18 @@ impl BbitSignatureMatrix {
         1 << self.b
     }
 
+    /// Words per row of the aligned layout.
+    #[inline]
+    pub fn stride_words(&self) -> usize {
+        self.stride
+    }
+
+    /// Row `i` as its contiguous word slice (pad bits beyond `k·b` zero).
+    #[inline]
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
     pub fn labels(&self) -> &[f32] {
         &self.labels
     }
@@ -75,57 +193,39 @@ impl BbitSignatureMatrix {
         self.labels[i]
     }
 
-    /// Exact storage size of the packed signatures, in bytes.
+    /// Allocated storage of the word-aligned signatures, in bytes —
+    /// includes the ≤ 63 zeroed pad bits per row that buy the SWAR layout.
     pub fn storage_bytes(&self) -> usize {
-        self.bits.len()
+        self.words.len() * 8
     }
 
-    #[inline]
-    fn get_bits(&self, bit_off: usize, nbits: u32) -> u16 {
-        let byte = bit_off / 8;
-        let shift = bit_off % 8;
-        // Fast paths (§Perf): b = 8 and b = 16 are always byte-aligned —
-        // they cover the paper's recommended operating points and are the
-        // hot path of DCD training, match counting and PJRT marshalling.
-        if shift == 0 {
-            if nbits == 8 {
-                return self.bits[byte] as u16;
-            }
-            if nbits == 16 {
-                return u16::from_le_bytes([self.bits[byte], self.bits[byte + 1]]);
-            }
-        }
-        // Generic path: read up to 16 bits little-endian at any alignment
-        // (a 4-byte window always covers nbits <= 16).
-        let mut word = 0u32;
-        for i in 0..4 {
-            if byte + i < self.bits.len() {
-                word |= (self.bits[byte + i] as u32) << (8 * i);
-            }
-        }
-        ((word >> shift) & ((1u32 << nbits) - 1)) as u16
+    /// The paper's tight `n·b·k` bits figure in bytes, ignoring the
+    /// per-row word padding — what compression reports should quote.
+    pub fn packed_bytes(&self) -> usize {
+        (self.n * self.k * self.b as usize).div_ceil(8)
     }
 
+    /// Read the `b`-bit value at absolute bit offset `bit_off`. A value can
+    /// straddle at most one word boundary (b ≤ 16 < 64), and only within a
+    /// row, so `w + 1` stays in bounds whenever a straddle occurs.
     #[inline]
-    fn put_bits(&mut self, bit_off: usize, nbits: u32, val: u16) {
-        let end_byte = (bit_off + nbits as usize + 7) / 8;
-        if self.bits.len() < end_byte {
-            self.bits.resize(end_byte, 0);
+    fn get_bits(&self, bit_off: usize) -> u16 {
+        let (w, s) = (bit_off >> 6, bit_off & 63);
+        let mut v = self.words[w] >> s;
+        if s + self.b as usize > 64 {
+            v |= self.words[w + 1] << (64 - s);
         }
-        let byte = bit_off / 8;
-        let shift = bit_off % 8;
-        let mut word = 0u32;
-        for i in 0..4 {
-            if byte + i < self.bits.len() {
-                word |= (self.bits[byte + i] as u32) << (8 * i);
-            }
-        }
-        let mask = ((1u32 << nbits) - 1) << shift;
-        word = (word & !mask) | ((val as u32) << shift);
-        for i in 0..4 {
-            if byte + i < self.bits.len() {
-                self.bits[byte + i] = (word >> (8 * i)) as u8;
-            }
+        (v & ((1u64 << self.b) - 1)) as u16
+    }
+
+    /// Write the `b`-bit value at absolute bit offset `bit_off`. Rows are
+    /// written exactly once into zeroed words, so OR suffices.
+    #[inline]
+    fn put_bits(&mut self, bit_off: usize, val: u16) {
+        let (w, s) = (bit_off >> 6, bit_off & 63);
+        self.words[w] |= (val as u64) << s;
+        if s + self.b as usize > 64 {
+            self.words[w + 1] |= (val as u64) >> (64 - s);
         }
     }
 
@@ -133,10 +233,11 @@ impl BbitSignatureMatrix {
     pub fn push_row(&mut self, row: &[u16], label: f32) {
         assert_eq!(row.len(), self.k, "row width {} != k {}", row.len(), self.k);
         let width_mask = ((1u32 << self.b) - 1) as u16;
-        let base = self.n * self.k * self.b as usize;
+        let base = self.n * self.stride * 64;
+        self.words.resize((self.n + 1) * self.stride, 0);
         for (j, &v) in row.iter().enumerate() {
             debug_assert_eq!(v & !width_mask, 0, "value {v} exceeds b={} bits", self.b);
-            self.put_bits(base + j * self.b as usize, self.b, v & width_mask);
+            self.put_bits(base + j * self.b as usize, v & width_mask);
         }
         self.labels.push(label);
         self.n += 1;
@@ -146,9 +247,10 @@ impl BbitSignatureMatrix {
     pub fn push_full_row(&mut self, full: &[u64], label: f32) {
         let mask = ((1u32 << self.b) - 1) as u64;
         assert_eq!(full.len(), self.k);
-        let base = self.n * self.k * self.b as usize;
+        let base = self.n * self.stride * 64;
+        self.words.resize((self.n + 1) * self.stride, 0);
         for (j, &z) in full.iter().enumerate() {
-            self.put_bits(base + j * self.b as usize, self.b, (z & mask) as u16);
+            self.put_bits(base + j * self.b as usize, (z & mask) as u16);
         }
         self.labels.push(label);
         self.n += 1;
@@ -158,32 +260,36 @@ impl BbitSignatureMatrix {
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> u16 {
         debug_assert!(i < self.n && j < self.k);
-        self.get_bits((i * self.k + j) * self.b as usize, self.b)
+        self.get_bits(i * self.stride * 64 + j * self.b as usize)
     }
 
     /// Visit row `i`'s values as `(position, value)` without allocating.
-    /// This is the training hot loop (`ExpandedView::for_each_index`);
-    /// b = 8/16 take contiguous-slice fast paths (§Perf).
+    /// This is the training hot loop (`ExpandedView::for_each_index`); when
+    /// b divides 64 the row is walked word-at-a-time (§Perf).
     #[inline]
     pub fn for_each_value<F: FnMut(usize, u16)>(&self, i: usize, mut f: F) {
         debug_assert!(i < self.n);
-        if self.b == 8 {
-            let base = i * self.k;
-            for (j, &v) in self.bits[base..base + self.k].iter().enumerate() {
-                f(j, v as u16);
+        let b = self.b;
+        if 64 % b == 0 {
+            let mask = (1u64 << b) - 1;
+            let lanes = (64 / b) as usize;
+            let mut j = 0usize;
+            'rows: for &word in self.row_words(i) {
+                let mut w = word;
+                for _ in 0..lanes {
+                    if j == self.k {
+                        break 'rows;
+                    }
+                    f(j, (w & mask) as u16);
+                    w >>= b;
+                    j += 1;
+                }
             }
-            return;
-        }
-        if self.b == 16 {
-            let base = i * self.k * 2;
-            for (j, c) in self.bits[base..base + 2 * self.k].chunks_exact(2).enumerate() {
-                f(j, u16::from_le_bytes([c[0], c[1]]));
+        } else {
+            let base = i * self.stride * 64;
+            for j in 0..self.k {
+                f(j, self.get_bits(base + j * b as usize));
             }
-            return;
-        }
-        let base = i * self.k * self.b as usize;
-        for j in 0..self.k {
-            f(j, self.get_bits(base + j * self.b as usize, self.b));
         }
     }
 
@@ -200,64 +306,189 @@ impl BbitSignatureMatrix {
         out
     }
 
+    /// Unpack `rows` concatenated row-major into `out` (cleared first) —
+    /// the bulk feeder for expansion and marshalling; one reservation, no
+    /// per-row allocation.
+    pub fn unpack_block_into(&self, rows: &[usize], out: &mut Vec<u16>) {
+        out.clear();
+        out.reserve(rows.len() * self.k);
+        for &i in rows {
+            self.for_each_value(i, |_, v| out.push(v));
+        }
+    }
+
     /// Count matching positions between rows i and j — the Gram entry
-    /// `k·P̂_b` (Theorem 2 / eq. (5) numerator).
+    /// `k·P̂_b` (Theorem 2 / eq. (5) numerator). SWAR whenever b divides 64
+    /// (see module docs): 64/b positions per xor+fold+popcount.
     pub fn match_count(&self, i: usize, j: usize) -> usize {
-        // Fast path (§Perf): b = 8 rows are contiguous byte slices — a
-        // direct zip-compare vectorizes and runs ~5x the generic path
-        // (this gates the kernel-SVM Gram row cost, paper §5.1).
-        if self.b == 8 {
-            let (bi, bj) = (i * self.k, j * self.k);
-            return self.bits[bi..bi + self.k]
-                .iter()
-                .zip(&self.bits[bj..bj + self.k])
-                .filter(|(a, b)| a == b)
-                .count();
+        if 64 % self.b == 0 {
+            self.k - mismatched_lanes(self.row_words(i), self.row_words(j), self.b)
+        } else {
+            self.match_count_scalar(i, j)
         }
-        if self.b == 16 {
-            let (bi, bj) = (i * self.k * 2, j * self.k * 2);
-            let ra = &self.bits[bi..bi + 2 * self.k];
-            let rb = &self.bits[bj..bj + 2 * self.k];
-            return ra
-                .chunks_exact(2)
-                .zip(rb.chunks_exact(2))
-                .filter(|(a, b)| a == b)
-                .count();
-        }
-        let (mut m, bi, bj) = (
-            0usize,
-            i * self.k * self.b as usize,
-            j * self.k * self.b as usize,
-        );
+    }
+
+    /// Scalar reference for [`Self::match_count`]: one `get_bits` pair per
+    /// position, valid for every b. Property tests assert SWAR == scalar.
+    pub fn match_count_scalar(&self, i: usize, j: usize) -> usize {
+        let b = self.b as usize;
+        let (bi, bj) = (i * self.stride * 64, j * self.stride * 64);
+        let mut m = 0usize;
         for t in 0..self.k {
-            let a = self.get_bits(bi + t * self.b as usize, self.b);
-            let b = self.get_bits(bj + t * self.b as usize, self.b);
-            m += (a == b) as usize;
+            m += (self.get_bits(bi + t * b) == self.get_bits(bj + t * b)) as usize;
         }
         m
     }
 
-    /// Unpack the whole matrix as i32s (row-major) — the PJRT input layout.
-    pub fn to_i32_rows(&self, rows: &[usize]) -> Vec<i32> {
-        let mut out = Vec::with_capacity(rows.len() * self.k);
-        let mut buf = vec![0u16; self.k];
-        for &i in rows {
-            self.unpack_row_into(i, &mut buf);
-            out.extend(buf.iter().map(|&v| v as i32));
+    /// Match counts of row `i` against every row of the matrix — a full
+    /// Gram row, the kernel-SVM row-cache fill unit (§5.1).
+    pub fn match_count_row_into(&self, i: usize, out: &mut Vec<u32>) {
+        self.match_count_row_range_into(i, 0, out);
+    }
+
+    /// Gram row of row `i` as `match_count(i, j) / divisor` for all j,
+    /// written straight into `out` — no intermediate counts buffer (this
+    /// is the kernel-SVM row-cache fill, so the second pass matters).
+    pub fn match_count_row_div_into(&self, i: usize, divisor: f64, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.n);
+        if 64 % self.b == 0 {
+            let wi = self.row_words(i);
+            for j in 0..self.n {
+                let c = self.k - mismatched_lanes(wi, self.row_words(j), self.b);
+                out.push(c as f64 / divisor);
+            }
+        } else {
+            for j in 0..self.n {
+                out.push(self.match_count_scalar(i, j) as f64 / divisor);
+            }
         }
+    }
+
+    /// Match counts of row `i` against rows `start..n` only — the
+    /// upper-triangle fill unit for all-pairs sweeps (half the work of a
+    /// full Gram row when callers discard `j ≤ i`).
+    pub fn match_count_row_range_into(&self, i: usize, start: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.n.saturating_sub(start));
+        if 64 % self.b == 0 {
+            let wi = self.row_words(i);
+            for j in start..self.n {
+                out.push((self.k - mismatched_lanes(wi, self.row_words(j), self.b)) as u32);
+            }
+        } else {
+            for j in start..self.n {
+                out.push(self.match_count_scalar(i, j) as u32);
+            }
+        }
+    }
+
+    /// Blocked match-count tile: `out[ia · rows_b.len() + jb]` = matches
+    /// between rows `rows_a[ia]` and `rows_b[jb]`. B-tiles stay cache-hot
+    /// while a small A-block streams over them.
+    pub fn match_count_block(&self, rows_a: &[usize], rows_b: &[usize]) -> Vec<u32> {
+        let mut out = vec![0u32; rows_a.len() * rows_b.len()];
+        self.match_count_block_into(rows_a, rows_b, &mut out);
         out
     }
 
-    /// Merge another matrix with identical (k, b) — used by the sharded
-    /// pipeline to combine worker outputs in order.
+    /// [`Self::match_count_block`] into a caller-owned tile buffer.
+    pub fn match_count_block_into(&self, rows_a: &[usize], rows_b: &[usize], out: &mut [u32]) {
+        assert_eq!(out.len(), rows_a.len() * rows_b.len(), "tile size mismatch");
+        const TILE_A: usize = 8;
+        const TILE_B: usize = 64;
+        let nb = rows_b.len();
+        let swar = 64 % self.b == 0;
+        for (ta, a_tile) in rows_a.chunks(TILE_A).enumerate() {
+            for (tb, b_tile) in rows_b.chunks(TILE_B).enumerate() {
+                for (ia, &ra) in a_tile.iter().enumerate() {
+                    let base = (ta * TILE_A + ia) * nb + tb * TILE_B;
+                    if swar {
+                        let wa = self.row_words(ra);
+                        for (jb, &rb) in b_tile.iter().enumerate() {
+                            out[base + jb] =
+                                (self.k - mismatched_lanes(wa, self.row_words(rb), self.b)) as u32;
+                        }
+                    } else {
+                        for (jb, &rb) in b_tile.iter().enumerate() {
+                            out[base + jb] = self.match_count_scalar(ra, rb) as u32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Multi-threaded [`Self::match_count_block`]: shards `rows_a` across
+    /// scoped workers (the hashing pipeline's idiom), each filling a
+    /// disjoint horizontal band of the tile.
+    pub fn match_count_block_par(
+        &self,
+        rows_a: &[usize],
+        rows_b: &[usize],
+        threads: usize,
+    ) -> Vec<u32> {
+        let threads = threads.clamp(1, 64);
+        let mut out = vec![0u32; rows_a.len() * rows_b.len()];
+        if threads == 1 || rows_b.is_empty() || rows_a.len() < 2 * threads {
+            self.match_count_block_into(rows_a, rows_b, &mut out);
+            return out;
+        }
+        let shard = rows_a.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (a_shard, out_band) in rows_a
+                .chunks(shard)
+                .zip(out.chunks_mut(shard * rows_b.len()))
+            {
+                scope.spawn(move || self.match_count_block_into(a_shard, rows_b, out_band));
+            }
+        });
+        out
+    }
+
+    /// Unpack the whole matrix as i32s (row-major) — the PJRT input layout.
+    pub fn to_i32_rows(&self, rows: &[usize]) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.to_i32_rows_into(rows, &mut out);
+        out
+    }
+
+    /// [`Self::to_i32_rows`] into a caller-owned buffer (cleared first), so
+    /// chunked marshalling loops reuse one allocation.
+    pub fn to_i32_rows_into(&self, rows: &[usize], out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(rows.len() * self.k);
+        for &i in rows {
+            self.for_each_value(i, |_, v| out.push(v as i32));
+        }
+    }
+
+    /// Merge another matrix with identical (k, b) — a single word copy:
+    /// aligned rows concatenate without any unpack/re-pack.
     pub fn append(&mut self, other: &BbitSignatureMatrix) {
         assert_eq!(self.k, other.k);
         assert_eq!(self.b, other.b);
-        let mut buf = vec![0u16; self.k];
-        for i in 0..other.n {
-            other.unpack_row_into(i, &mut buf);
-            self.push_row(&buf, other.labels[i]);
-        }
+        self.words.extend_from_slice(&other.words);
+        self.labels.extend_from_slice(&other.labels);
+        self.n += other.n;
+    }
+
+    /// Overwrite rows `[dst_row, dst_row + other.n())` with `other`'s rows
+    /// — out-of-order shard placement for the pipeline collector, which
+    /// writes each shard at `seq·chunk` the moment it arrives.
+    pub fn copy_rows_from(&mut self, other: &BbitSignatureMatrix, dst_row: usize) {
+        assert_eq!(self.k, other.k);
+        assert_eq!(self.b, other.b);
+        assert!(
+            dst_row + other.n <= self.n,
+            "shard [{dst_row}, {}) exceeds {} rows",
+            dst_row + other.n,
+            self.n
+        );
+        let s = self.stride;
+        self.words[dst_row * s..dst_row * s + other.words.len()]
+            .copy_from_slice(&other.words);
+        self.labels[dst_row..dst_row + other.n].copy_from_slice(&other.labels);
     }
 }
 
@@ -295,20 +526,23 @@ mod tests {
     }
 
     #[test]
-    fn storage_is_nbk_bits() {
+    fn storage_is_nbk_bits_word_aligned() {
+        // k·b = 1600 bits = exactly 25 words: zero padding, exact n·b·k.
         let (n, k, b) = (100usize, 200usize, 8u32);
         let mut m = BbitSignatureMatrix::with_capacity(k, b, n);
         let row = vec![0u16; k];
         for _ in 0..n {
             m.push_row(&row, -1.0);
         }
-        let expect_bytes = (n * k * b as usize + 7) / 8;
-        assert!(
-            m.storage_bytes() <= expect_bytes + 4,
-            "{} vs {}",
-            m.storage_bytes(),
-            expect_bytes
-        );
+        assert_eq!(m.stride_words(), 25);
+        assert_eq!(m.storage_bytes(), n * k * b as usize / 8);
+        assert_eq!(m.packed_bytes(), m.storage_bytes()); // exact fit: no pad
+        // Odd shapes pad each row to the next word boundary; the tight
+        // paper figure stays pad-free.
+        let m2 = BbitSignatureMatrix::with_rows(13, 4, 3);
+        assert_eq!(m2.stride_words(), 1); // 52 bits -> 1 word
+        assert_eq!(m2.storage_bytes(), 3 * 8);
+        assert_eq!(m2.packed_bytes(), (3 * 13 * 4 + 7) / 8); // 20 bytes
     }
 
     #[test]
@@ -325,6 +559,72 @@ mod tests {
         m.push_row(&[1, 9, 3, 7], -1.0);
         assert_eq!(m.match_count(0, 1), 2);
         assert_eq!(m.match_count(0, 0), 4);
+        assert_eq!(m.match_count_scalar(0, 1), 2);
+    }
+
+    #[test]
+    fn swar_equals_scalar_across_b_and_ragged_k() {
+        for b in [1u32, 2, 4, 8, 16] {
+            // k·b deliberately not a multiple of 64 for most b.
+            for k in [1usize, 5, 63, 64, 65, 100] {
+                let mask = (1u32 << b) - 1;
+                let mut rng = Xoshiro256::seed_from_u64(b as u64 * 1000 + k as u64);
+                let mut m = BbitSignatureMatrix::new(k, b);
+                for _ in 0..4 {
+                    let row: Vec<u16> =
+                        (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+                    m.push_row(&row, 1.0);
+                }
+                for i in 0..4 {
+                    for j in 0..4 {
+                        assert_eq!(
+                            m.match_count(i, j),
+                            m.match_count_scalar(i, j),
+                            "b={b} k={k} ({i},{j})"
+                        );
+                    }
+                }
+                assert_eq!(m.match_count(1, 1), k, "self-match is k (b={b} k={k})");
+            }
+        }
+    }
+
+    #[test]
+    fn match_count_block_matches_pairwise_and_par() {
+        let (n, k, b) = (37usize, 41usize, 4u32);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut m = BbitSignatureMatrix::new(k, b);
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & 15) as u16).collect();
+            m.push_row(&row, 1.0);
+        }
+        let rows: Vec<usize> = (0..n).collect();
+        let some: Vec<usize> = (0..n).step_by(3).collect();
+        let tile = m.match_count_block(&some, &rows);
+        for (ia, &ra) in some.iter().enumerate() {
+            for (jb, &rb) in rows.iter().enumerate() {
+                assert_eq!(tile[ia * n + jb] as usize, m.match_count(ra, rb));
+            }
+        }
+        for threads in [1usize, 2, 5, 8] {
+            assert_eq!(m.match_count_block_par(&some, &rows, threads), tile);
+        }
+        let mut gram_row = Vec::new();
+        m.match_count_row_into(5, &mut gram_row);
+        assert_eq!(gram_row.len(), n);
+        for j in 0..n {
+            assert_eq!(gram_row[j] as usize, m.match_count(5, j));
+        }
+        // Suffix variant (upper-triangle fill) agrees, including the
+        // empty range at start == n.
+        let mut suffix = Vec::new();
+        m.match_count_row_range_into(5, 9, &mut suffix);
+        assert_eq!(suffix.len(), n - 9);
+        for (off, j) in (9..n).enumerate() {
+            assert_eq!(suffix[off] as usize, m.match_count(5, j));
+        }
+        m.match_count_row_range_into(5, n, &mut suffix);
+        assert!(suffix.is_empty());
     }
 
     #[test]
@@ -333,6 +633,21 @@ mod tests {
         m.push_row(&[10, 20], 1.0);
         m.push_row(&[30, 40], -1.0);
         assert_eq!(m.to_i32_rows(&[1, 0]), vec![30, 40, 10, 20]);
+        let mut buf = Vec::new();
+        m.to_i32_rows_into(&[0], &mut buf);
+        assert_eq!(buf, vec![10, 20]);
+        m.to_i32_rows_into(&[1], &mut buf); // reuse clears
+        assert_eq!(buf, vec![30, 40]);
+    }
+
+    #[test]
+    fn unpack_block_concatenates_rows() {
+        let mut m = BbitSignatureMatrix::new(3, 5);
+        m.push_row(&[1, 2, 3], 1.0);
+        m.push_row(&[4, 5, 6], -1.0);
+        let mut out = Vec::new();
+        m.unpack_block_into(&[1, 0, 1], &mut out);
+        assert_eq!(out, vec![4, 5, 6, 1, 2, 3, 4, 5, 6]);
     }
 
     #[test]
@@ -347,6 +662,49 @@ mod tests {
         assert_eq!(a.row(1), vec![4, 5, 6]);
         assert_eq!(a.row(2), vec![7, 8, 9]);
         assert_eq!(a.labels(), &[1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn copy_rows_from_places_shards_out_of_order() {
+        let (k, b) = (11usize, 3u32);
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let rows: Vec<Vec<u16>> = (0..7)
+            .map(|_| (0..k).map(|_| (rng.next_u32() & 7) as u16).collect())
+            .collect();
+        // Reference: rows pushed in order.
+        let mut want = BbitSignatureMatrix::new(k, b);
+        for (i, r) in rows.iter().enumerate() {
+            want.push_row(r, i as f32);
+        }
+        // Shards [0..3), [3..7) placed in reverse arrival order.
+        let mut s0 = BbitSignatureMatrix::new(k, b);
+        for (i, r) in rows[..3].iter().enumerate() {
+            s0.push_row(r, i as f32);
+        }
+        let mut s1 = BbitSignatureMatrix::new(k, b);
+        for (i, r) in rows[3..].iter().enumerate() {
+            s1.push_row(r, (3 + i) as f32);
+        }
+        let mut got = BbitSignatureMatrix::with_rows(k, b, 7);
+        got.copy_rows_from(&s1, 3);
+        got.copy_rows_from(&s0, 0);
+        for i in 0..7 {
+            assert_eq!(got.row(i), want.row(i), "row {i}");
+            assert_eq!(got.label(i), want.label(i));
+            assert_eq!(got.row_words(i), want.row_words(i), "words row {i}");
+        }
+    }
+
+    #[test]
+    fn row_words_are_contiguous_and_padded_with_zeros() {
+        let (k, b) = (5usize, 4u32); // 20 bits -> 1 word, 44 pad bits
+        let mut m = BbitSignatureMatrix::new(k, b);
+        m.push_row(&[0xF, 1, 2, 3, 0xF], 1.0);
+        assert_eq!(m.stride_words(), 1);
+        let w = m.row_words(0)[0];
+        assert_eq!(w >> 20, 0, "pad bits must stay zero");
+        assert_eq!(w & 0xF, 0xF);
+        assert_eq!((w >> 16) & 0xF, 0xF);
     }
 
     #[test]

@@ -7,28 +7,41 @@
 //! LIBLINEAR-style solvers apply unchanged — the paper's central move.
 
 use super::bbit::BbitSignatureMatrix;
-use crate::data::sparse::{SparseBinaryDataset, SparseBinaryVec};
+use crate::data::sparse::SparseBinaryDataset;
 
 /// Expand one signature row into sorted sparse indices (exactly k entries).
 #[inline]
 pub fn expand_signature(row: &[u16], b: u32) -> Vec<u64> {
+    let mut out = Vec::with_capacity(row.len());
+    expand_signature_into(row, b, &mut out);
+    out
+}
+
+/// [`expand_signature`] into a caller-owned buffer (cleared first) — the
+/// allocation-free path for bulk loops.
+#[inline]
+pub fn expand_signature_into(row: &[u16], b: u32, out: &mut Vec<u64>) {
     let width = 1u64 << b;
-    row.iter()
-        .enumerate()
-        .map(|(j, &v)| j as u64 * width + v as u64)
-        .collect() // strictly increasing by construction — already sorted
+    out.clear();
+    out.reserve(row.len());
+    // Strictly increasing by construction — already sorted.
+    out.extend(row.iter().enumerate().map(|(j, &v)| j as u64 * width + v as u64));
 }
 
 /// Expand the whole signature matrix into a sparse binary dataset of
 /// dimension `2^b · k` (the exact input the paper feeds to LIBLINEAR).
+/// One scratch buffer serves every row and the CSR output is reserved up
+/// front (n rows × exactly k ones each) — no per-row allocation.
 pub fn expand_matrix(m: &BbitSignatureMatrix) -> SparseBinaryDataset {
     let dim = (m.k() as u64) << m.b();
     let mut ds = SparseBinaryDataset::new(dim);
+    ds.reserve(m.n(), m.n() * m.k());
     let mut buf = vec![0u16; m.k()];
+    let mut idxs = Vec::with_capacity(m.k());
     for i in 0..m.n() {
         m.unpack_row_into(i, &mut buf);
-        let idxs = expand_signature(&buf, m.b());
-        ds.push(SparseBinaryVec::from_sorted_unique(idxs), m.label(i));
+        expand_signature_into(&buf, m.b(), &mut idxs);
+        ds.push_sorted_slice(&idxs, m.label(i));
     }
     ds
 }

@@ -47,6 +47,12 @@ impl MinwiseHasher {
     pub fn signature_into(&self, set: &[u64], buf: &mut Vec<u64>) -> Vec<u64> {
         buf.clear();
         buf.reserve(self.perms.len());
+        // The empty-set sentinel is decided once up front, not re-checked
+        // inside the per-permutation loop.
+        if set.is_empty() {
+            buf.resize(self.perms.len(), self.d);
+            return std::mem::take(buf);
+        }
         for p in &self.perms {
             let mut chunks = set.chunks_exact(4);
             let (mut m0, mut m1, mut m2, mut m3) =
@@ -61,7 +67,7 @@ impl MinwiseHasher {
             for &x in chunks.remainder() {
                 m = m.min(p.apply(x));
             }
-            buf.push(if set.is_empty() { self.d } else { m });
+            buf.push(m);
         }
         std::mem::take(buf)
     }

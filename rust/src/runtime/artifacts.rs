@@ -7,6 +7,12 @@
 //! ```text
 //! name=predict_n256_k200_b8 file=predict_n256_k200_b8.hlo.txt kind=predict n=256 k=200 b=8 dim=51200
 //! ```
+//!
+//! Marshalling contract: every artifact takes signatures as a row-major
+//! `[batch, k]` i32 tensor of *unpacked* b-bit values. The packed store's
+//! word-aligned rows feed this via `BbitSignatureMatrix::to_i32_rows_into`
+//! (bulk word-walk unpack into a reused buffer); `match_count` artifacts
+//! are b-agnostic because they only compare unpacked lanes for equality.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

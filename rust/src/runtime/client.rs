@@ -100,13 +100,17 @@ impl Runtime {
         let w_lit = xla::Literal::vec1(w);
         let mut scores = Vec::with_capacity(sigs.n());
         let rows_all: Vec<usize> = (0..sigs.n()).collect();
+        // One marshalling buffer for every chunk (bulk word-walk unpack).
+        let mut rows: Vec<usize> = Vec::with_capacity(meta.n);
+        let mut sig_data: Vec<i32> = Vec::new();
         for chunk in rows_all.chunks(meta.n) {
             // Pad the final chunk by repeating row 0 (discarded below).
-            let mut rows: Vec<usize> = chunk.to_vec();
+            rows.clear();
+            rows.extend_from_slice(chunk);
             while rows.len() < meta.n {
                 rows.push(chunk[0]);
             }
-            let sig_data = sigs.to_i32_rows(&rows);
+            sigs.to_i32_rows_into(&rows, &mut sig_data);
             let sig_lit = xla::Literal::vec1(&sig_data)
                 .reshape(&[meta.n as i64, meta.k as i64])
                 .map_err(|e| anyhow!("reshape sig: {e:?}"))?;
@@ -202,20 +206,27 @@ impl Runtime {
         let (m, n) = (meta.n, meta.n2);
 
         let mut out = vec![vec![0.0f32; b_rows.len()]; a_rows.len()];
+        // Reused marshalling buffers across the tile loop.
+        let (mut ar, mut br): (Vec<usize>, Vec<usize>) = (Vec::new(), Vec::new());
+        let (mut a_data, mut b_data): (Vec<i32>, Vec<i32>) = (Vec::new(), Vec::new());
         for (ci, a_chunk) in a_rows.chunks(m).enumerate() {
-            let mut ar: Vec<usize> = a_chunk.to_vec();
+            ar.clear();
+            ar.extend_from_slice(a_chunk);
             while ar.len() < m {
                 ar.push(a_chunk[0]);
             }
-            let a_lit = xla::Literal::vec1(&a.to_i32_rows(&ar))
+            a.to_i32_rows_into(&ar, &mut a_data);
+            let a_lit = xla::Literal::vec1(&a_data)
                 .reshape(&[m as i64, meta.k as i64])
                 .map_err(|e| anyhow!("reshape a: {e:?}"))?;
             for (cj, b_chunk) in b_rows.chunks(n).enumerate() {
-                let mut br: Vec<usize> = b_chunk.to_vec();
+                br.clear();
+                br.extend_from_slice(b_chunk);
                 while br.len() < n {
                     br.push(b_chunk[0]);
                 }
-                let b_lit = xla::Literal::vec1(&b.to_i32_rows(&br))
+                b.to_i32_rows_into(&br, &mut b_data);
+                let b_lit = xla::Literal::vec1(&b_data)
                     .reshape(&[n as i64, meta.k as i64])
                     .map_err(|e| anyhow!("reshape b: {e:?}"))?;
                 let result = exe

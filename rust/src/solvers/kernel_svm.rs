@@ -19,6 +19,19 @@ pub trait Kernel: Sync {
     fn n(&self) -> usize;
     fn label(&self, i: usize) -> f32;
     fn eval(&self, i: usize, j: usize) -> f64;
+
+    /// Fill `out` with the full Gram row K(i, ·). The default evaluates
+    /// pointwise; kernels with a batched path override it — [`BbitKernel`]
+    /// fills the row with the packed store's SWAR Gram-row primitive
+    /// (`match_count_row_div_into`), which is what makes the lazy
+    /// row-cache fills cheap (§5.1).
+    fn fill_row(&self, i: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.n());
+        for j in 0..self.n() {
+            out.push(self.eval(i, j));
+        }
+    }
 }
 
 /// Resemblance kernel over raw sparse sets: K(i,j) = R(S_i, S_j) (PD by
@@ -55,6 +68,10 @@ impl Kernel for BbitKernel<'_> {
     }
     fn eval(&self, i: usize, j: usize) -> f64 {
         self.sigs.match_count(i, j) as f64 / self.sigs.k() as f64
+    }
+
+    fn fill_row(&self, i: usize, out: &mut Vec<f64>) {
+        self.sigs.match_count_row_div_into(i, self.sigs.k() as f64, out);
     }
 }
 
@@ -106,7 +123,8 @@ impl RowCache {
                     self.rows.remove(&victim);
                 }
             }
-            let row: Vec<f64> = (0..k.n()).map(|j| k.eval(i, j)).collect();
+            let mut row = Vec::new();
+            k.fill_row(i, &mut row);
             self.rows.insert(i, row);
         }
         &self.rows[&i]
@@ -289,6 +307,25 @@ mod tests {
             }
         }
         assert!(correct as f64 / ds.n() as f64 > 0.95, "acc {correct}/60");
+    }
+
+    #[test]
+    fn bbit_fill_row_matches_pointwise_eval() {
+        let ds = cluster_data(24, 21);
+        let h = MinwiseHasher::new(100_000, 33, 2); // ragged k·b
+        for b in [1u32, 2, 4, 8] {
+            let mut sigs = BbitSignatureMatrix::new(33, b);
+            for i in 0..ds.n() {
+                sigs.push_full_row(&h.signature(ds.row(i)), ds.label(i));
+            }
+            let kernel = BbitKernel { sigs: &sigs };
+            let mut row = Vec::new();
+            kernel.fill_row(7, &mut row);
+            assert_eq!(row.len(), kernel.n());
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(v, kernel.eval(7, j), "b={b} j={j}");
+            }
+        }
     }
 
     #[test]

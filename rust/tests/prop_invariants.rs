@@ -83,6 +83,121 @@ fn prop_packing_roundtrip_and_expansion_count() {
 }
 
 #[test]
+fn prop_swar_match_count_equals_scalar_reference() {
+    // The tentpole invariant: the word-parallel kernel must agree with the
+    // scalar get_bits reference for every supported width, including
+    // widths that straddle word boundaries (b ∤ 64) and row shapes where
+    // k·b is not a multiple of 64.
+    check("swar == scalar match_count", 60, |rng| {
+        for &b in &[1u32, 2, 3, 4, 7, 8, 12, 16] {
+            let k = 1 + rng.gen_range(300) as usize;
+            let mask = (1u32 << b) - 1;
+            let r1: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+            // Share ~half the positions with r1 so counts are nontrivial.
+            let r2: Vec<u16> = r1
+                .iter()
+                .map(|&v| {
+                    if rng.next_u64() & 1 == 0 {
+                        v
+                    } else {
+                        (rng.next_u32() & mask) as u16
+                    }
+                })
+                .collect();
+            let mut m = BbitSignatureMatrix::new(k, b);
+            m.push_row(&r1, 1.0);
+            m.push_row(&r2, -1.0);
+            let expect = r1.iter().zip(&r2).filter(|(a, c)| a == c).count();
+            assert_eq!(m.match_count(0, 1), expect, "b={b} k={k}");
+            for (i, j) in [(0, 1), (1, 0), (0, 0), (1, 1)] {
+                assert_eq!(
+                    m.match_count(i, j),
+                    m.match_count_scalar(i, j),
+                    "b={b} k={k} ({i},{j})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_block_tiles_match_pairwise_and_parallel() {
+    check("match_count tiles == pairwise", 20, |rng| {
+        let b = [1u32, 2, 4, 8, 16][rng.gen_range(5) as usize];
+        let k = 1 + rng.gen_range(200) as usize;
+        let n = 3 + rng.gen_range(40) as usize;
+        let mask = (1u32 << b) - 1;
+        let mut m = BbitSignatureMatrix::new(k, b);
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+            m.push_row(&row, 1.0);
+        }
+        let rows: Vec<usize> = (0..n).collect();
+        let tile = m.match_count_block(&rows, &rows);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    tile[i * n + j] as usize,
+                    m.match_count(i, j),
+                    "b={b} k={k} ({i},{j})"
+                );
+            }
+        }
+        for threads in [2usize, 4, 7] {
+            assert_eq!(
+                m.match_count_block_par(&rows, &rows, threads),
+                tile,
+                "b={b} threads={threads}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_zero_copy_merge_equals_row_pushes() {
+    // Shards appended word-for-word (or placed out of order) must be
+    // bit-identical to pushing the same rows one by one.
+    check("zero-copy shard merge", 30, |rng| {
+        let b = 1 + rng.gen_range(16) as u32;
+        let k = 1 + rng.gen_range(50) as usize;
+        let n = 2 + rng.gen_range(30) as usize;
+        let mask = (1u32 << b) - 1;
+        let rows: Vec<Vec<u16>> = (0..n)
+            .map(|_| (0..k).map(|_| (rng.next_u32() & mask) as u16).collect())
+            .collect();
+        let mut want = BbitSignatureMatrix::new(k, b);
+        for (i, r) in rows.iter().enumerate() {
+            want.push_row(r, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        // Split into shards at a random boundary.
+        let cut = 1 + rng.gen_range((n - 1) as u64) as usize;
+        let mut s0 = BbitSignatureMatrix::new(k, b);
+        for (i, r) in rows[..cut].iter().enumerate() {
+            s0.push_row(r, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let mut s1 = BbitSignatureMatrix::new(k, b);
+        for (i, r) in rows[cut..].iter().enumerate() {
+            s1.push_row(r, if (cut + i) % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        // Path 1: in-order append.
+        let mut merged = BbitSignatureMatrix::new(k, b);
+        merged.append(&s0);
+        merged.append(&s1);
+        // Path 2: out-of-order placement into a pre-sized target.
+        let mut placed = BbitSignatureMatrix::with_rows(k, b, n);
+        placed.copy_rows_from(&s1, cut);
+        placed.copy_rows_from(&s0, 0);
+        assert_eq!(merged.n(), n);
+        for i in 0..n {
+            assert_eq!(merged.row_words(i), want.row_words(i), "append row {i}");
+            assert_eq!(placed.row_words(i), want.row_words(i), "placed row {i}");
+            assert_eq!(merged.label(i), want.label(i));
+            assert_eq!(placed.label(i), want.label(i));
+        }
+    });
+}
+
+#[test]
 fn prop_match_count_triangle_consistency() {
     // match(i,j) + match(j,l) − k ≤ match(i,l) (equality-pattern overlap).
     check("match-count triangle", 50, |rng| {

@@ -1,0 +1,150 @@
+//! Vendored, dependency-free subset of the `anyhow` API (the real crate is
+//! unavailable in this offline environment). Covers exactly what this
+//! repository uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, `?`-conversion from any `std::error::Error`, and
+//! [`Context::context`] / [`Context::with_context`] on results.
+
+use std::fmt;
+
+/// A flattened error: the message plus any context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prefix the error with context (newest first, like anyhow's chain).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Self {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket conversion (and
+// therefore `?` on io/parse/... errors) coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a result defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible computation.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path/7a3f")?;
+        Ok(())
+    }
+
+    fn ensure_fn(x: usize) -> Result<usize> {
+        ensure!(x < 10, "x too big: {x}");
+        Ok(x)
+    }
+
+    fn bail_fn() -> Result<()> {
+        bail!("nope: {}", 42)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "), "{e}");
+        let e2 = io_fail().with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert!(e2.to_string().starts_with("pass 2: "), "{e2}");
+    }
+
+    #[test]
+    fn macros_format() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x = {}", 7).to_string(), "x = 7");
+        let y = 3;
+        assert_eq!(anyhow!("y = {y}").to_string(), "y = 3");
+        assert_eq!(ensure_fn(3).unwrap(), 3);
+        assert_eq!(ensure_fn(30).unwrap_err().to_string(), "x too big: 30");
+        assert_eq!(bail_fn().unwrap_err().to_string(), "nope: 42");
+    }
+}

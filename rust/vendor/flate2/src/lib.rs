@@ -1,0 +1,309 @@
+//! Vendored subset of the `flate2` gzip API (the real crate and its zlib
+//! backend are unavailable in this offline environment).
+//!
+//! [`write::GzEncoder`] emits **valid gzip**: a standard header, DEFLATE
+//! *stored* (uncompressed) blocks, and the CRC32 + ISIZE trailer — any
+//! gzip reader accepts the output (`gzip -d`, Python's `gzip`, the real
+//! flate2). [`read::GzDecoder`] parses gzip limited to stored blocks (what
+//! this encoder and `gzip -0`-style writers produce) and reports
+//! `InvalidData` for Huffman-compressed members; swap this path dependency
+//! for the real flate2 to read arbitrary gzip.
+
+use std::io::{self, Read, Write};
+
+/// Compression level knob — accepted for API parity; the stored-block
+/// encoder has exactly one "level".
+#[derive(Clone, Copy, Debug)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Self {
+        Compression(level)
+    }
+    pub fn fast() -> Self {
+        Compression(1)
+    }
+    pub fn best() -> Self {
+        Compression(9)
+    }
+    pub fn none() -> Self {
+        Compression(0)
+    }
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Self {
+        Compression(6)
+    }
+}
+
+/// CRC-32 (reflected, poly 0xEDB88320) — the gzip trailer checksum.
+fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &byte in data {
+        c ^= byte as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 {
+                (c >> 1) ^ 0xEDB8_8320
+            } else {
+                c >> 1
+            };
+        }
+    }
+    !c
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("gzip: {msg}"))
+}
+
+fn take(raw: &[u8], pos: usize, n: usize) -> io::Result<&[u8]> {
+    raw.get(pos..pos + n).ok_or_else(|| bad("truncated stream"))
+}
+
+/// Decode a complete gzip member made of stored deflate blocks.
+fn decode_gzip(raw: &[u8]) -> io::Result<Vec<u8>> {
+    let hdr = take(raw, 0, 10)?;
+    if hdr[0] != 0x1f || hdr[1] != 0x8b {
+        return Err(bad("missing magic bytes"));
+    }
+    if hdr[2] != 8 {
+        return Err(bad("unknown compression method"));
+    }
+    let flg = hdr[3];
+    let mut pos = 10usize;
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        let xlen = u16::from_le_bytes(take(raw, pos, 2)?.try_into().unwrap()) as usize;
+        pos += 2 + xlen;
+    }
+    for mask in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: zero-terminated strings
+        if flg & mask != 0 {
+            while take(raw, pos, 1)?[0] != 0 {
+                pos += 1;
+            }
+            pos += 1;
+        }
+    }
+    if flg & 0x02 != 0 {
+        // FHCRC
+        pos += 2;
+    }
+    let mut out = Vec::new();
+    loop {
+        let block_hdr = take(raw, pos, 1)?[0];
+        pos += 1;
+        let bfinal = block_hdr & 1 != 0;
+        match (block_hdr >> 1) & 3 {
+            0 => {
+                let len = u16::from_le_bytes(take(raw, pos, 2)?.try_into().unwrap());
+                let nlen = u16::from_le_bytes(take(raw, pos + 2, 2)?.try_into().unwrap());
+                if len != !nlen {
+                    return Err(bad("stored block LEN/NLEN mismatch"));
+                }
+                pos += 4;
+                out.extend_from_slice(take(raw, pos, len as usize)?);
+                pos += len as usize;
+            }
+            _ => {
+                return Err(bad(
+                    "Huffman-compressed member: the vendored flate2 stub reads \
+                     stored blocks only (swap in the real flate2)",
+                ))
+            }
+        }
+        if bfinal {
+            break;
+        }
+    }
+    let crc = u32::from_le_bytes(take(raw, pos, 4)?.try_into().unwrap());
+    let trailer_len = u32::from_le_bytes(take(raw, pos + 4, 4)?.try_into().unwrap());
+    if crc != crc32(&out) {
+        return Err(bad("CRC32 mismatch"));
+    }
+    if trailer_len != out.len() as u32 {
+        return Err(bad("ISIZE mismatch"));
+    }
+    Ok(out)
+}
+
+pub mod write {
+    use super::*;
+
+    /// Streaming gzip writer: buffers the payload, then emits header +
+    /// stored blocks + trailer on [`GzEncoder::finish`] (or on drop, like
+    /// the real flate2).
+    pub struct GzEncoder<W: Write> {
+        inner: Option<W>,
+        buf: Vec<u8>,
+        done: bool,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(w: W, _level: Compression) -> Self {
+            Self {
+                inner: Some(w),
+                buf: Vec::new(),
+                done: false,
+            }
+        }
+
+        fn write_stream(&mut self) -> io::Result<()> {
+            if self.done {
+                return Ok(());
+            }
+            self.done = true;
+            let Some(w) = self.inner.as_mut() else {
+                return Ok(());
+            };
+            // Header: magic, deflate, no flags, mtime 0, XFL 0, OS unknown.
+            w.write_all(&[0x1f, 0x8b, 8, 0, 0, 0, 0, 0, 0, 255])?;
+            // Non-final stored blocks, ≤ 65535 bytes each.
+            for chunk in self.buf.chunks(65_535) {
+                let len = chunk.len() as u16;
+                w.write_all(&[0x00])?;
+                w.write_all(&len.to_le_bytes())?;
+                w.write_all(&(!len).to_le_bytes())?;
+                w.write_all(chunk)?;
+            }
+            // Final empty stored block, then CRC32 + ISIZE.
+            w.write_all(&[0x01, 0x00, 0x00, 0xFF, 0xFF])?;
+            w.write_all(&crc32(&self.buf).to_le_bytes())?;
+            w.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            w.flush()
+        }
+
+        /// Write the gzip stream and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            self.write_stream()?;
+            Ok(self.inner.take().expect("finish called twice"))
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl<W: Write> Drop for GzEncoder<W> {
+        fn drop(&mut self) {
+            let _ = self.write_stream();
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    /// Gzip reader (stored blocks only): decodes the whole member on first
+    /// read, then serves from memory.
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        out: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(r: R) -> Self {
+            Self {
+                inner: Some(r),
+                out: Vec::new(),
+                pos: 0,
+            }
+        }
+
+        fn load(&mut self) -> io::Result<()> {
+            if let Some(mut r) = self.inner.take() {
+                let mut raw = Vec::new();
+                r.read_to_end(&mut raw)?;
+                self.out = decode_gzip(&raw)?;
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.load()?;
+            let n = buf.len().min(self.out.len() - self.pos);
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Cursor, Read, Write};
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let gz = enc.finish().unwrap();
+        let mut dec = read::GzDecoder::new(Cursor::new(gz));
+        let mut back = Vec::new();
+        dec.read_to_end(&mut back).unwrap();
+        back
+    }
+
+    #[test]
+    fn roundtrips_various_sizes() {
+        for size in [0usize, 1, 100, 65_535, 65_536, 200_000] {
+            let data: Vec<u8> = (0..size).map(|i| (i * 31 % 251) as u8).collect();
+            assert_eq!(roundtrip(&data), data, "size {size}");
+        }
+    }
+
+    #[test]
+    fn emits_gzip_magic_and_valid_trailer() {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(b"hello").unwrap();
+        let gz = enc.finish().unwrap();
+        assert_eq!(&gz[..3], &[0x1f, 0x8b, 8]);
+        let n = gz.len();
+        assert_eq!(&gz[n - 4..], &5u32.to_le_bytes()); // ISIZE
+    }
+
+    #[test]
+    fn drop_finishes_the_stream() {
+        let mut sink: Vec<u8> = Vec::new();
+        {
+            let mut enc = write::GzEncoder::new(&mut sink, Compression::fast());
+            enc.write_all(b"dropped").unwrap();
+        } // drop writes the stream
+        let mut dec = read::GzDecoder::new(Cursor::new(sink));
+        let mut back = String::new();
+        dec.read_to_string(&mut back).unwrap();
+        assert_eq!(back, "dropped");
+    }
+
+    #[test]
+    fn rejects_compressed_blocks_and_garbage() {
+        // BTYPE=01 (fixed Huffman) after a valid header.
+        let mut fake = vec![0x1f, 0x8b, 8, 0, 0, 0, 0, 0, 0, 255, 0x03];
+        fake.extend_from_slice(&[0u8; 8]);
+        let mut dec = read::GzDecoder::new(Cursor::new(fake));
+        let mut out = Vec::new();
+        assert!(dec.read_to_end(&mut out).is_err());
+        let mut dec = read::GzDecoder::new(Cursor::new(b"not gzip".to_vec()));
+        assert!(dec.read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn crc_reference_value() {
+        // Known CRC-32 of "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}
