@@ -49,11 +49,14 @@ fn main() {
     });
 
     // Gram-row evaluation over a packed matrix (kernel SVM's unit of work).
+    // Rows are built through the batched engine with one reused buffer.
     let mut m = BbitSignatureMatrix::new(200, 8);
     let h = MinwiseHasher::new(d, 200, 5);
+    let mut sig_buf = Vec::new();
     for i in 0..512u64 {
         let set: Vec<u64> = (i..i + 200).map(|x| x * 131).collect();
-        m.push_full_row(&h.signature(&set), 1.0);
+        h.signature_batch_into(&set, &mut sig_buf);
+        m.push_full_row(&sig_buf, 1.0);
     }
     bench.bench("gram/row512 match_count k=200 b=8", || {
         let mut acc = 0usize;

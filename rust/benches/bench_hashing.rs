@@ -30,14 +30,19 @@ fn main() {
     );
 
     // --- single-document signature cost across k --------------------------
+    // `batched` = the one-pass k-lane engine (the production path);
+    // `scalar(seed)` = the per-permutation reference scan, kept for the
+    // before/after contrast.
     for k in [30usize, 200, 500] {
         let h = MinwiseHasher::new(cfg.dim, k, 1);
         let mut buf = Vec::new();
-        b.bench(&format!("minwise/signature/k={k}"), || {
-            let s = h.signature_into(black_box(&doc), &mut buf);
-            let out = s.len();
-            buf = s;
-            out
+        b.bench(&format!("minwise/signature_batched/k={k}"), || {
+            h.signature_batch_into(black_box(&doc), &mut buf);
+            buf.len()
+        });
+        b.bench(&format!("minwise/signature_scalar(seed)/k={k}"), || {
+            h.signature_scalar_into(black_box(&doc), &mut buf);
+            buf.len()
         });
     }
 

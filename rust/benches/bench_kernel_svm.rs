@@ -3,8 +3,8 @@
 //! contrast, scaled to this testbed) — plus the `match_count` kernel
 //! micro-benchmark that gates it all.
 //!
-//! The micro-benchmark measures, at k = 256 across every b, one Gram row
-//! (512 row pairs) through three paths:
+//! The `match_count` micro-benchmark measures, at k = 256 across every b,
+//! one Gram row (512 row pairs) through three paths:
 //!   * `swar`   — the word-aligned SWAR kernel (`match_count`)
 //!   * `scalar` — the seed's generic path (`match_count_scalar`,
 //!     one `get_bits` pair per position): the "before" reference
@@ -12,17 +12,63 @@
 //! and records everything to `results/BENCH_kernel.json` via benchkit, so
 //! the ≥5× SWAR-vs-seed acceptance gate for b ∈ {1, 2, 4} is checked from
 //! the recorded medians.
+//!
+//! The signature micro-benchmark (PR 2) measures the minwise engine that
+//! feeds all of the above: the batched one-pass k-lane path
+//! (`signature_batch_into`) against the seed's per-permutation scan
+//! (`signature_scalar_into`) at fixed element·permutation work, printing
+//! the throughput in M elem·perm/s and recording the raw timings to
+//! `results/BENCH_signature.json`.
 
 use bbml::benchkit::{black_box, Bencher};
 use bbml::coordinator::pipeline::{hash_dataset, PipelineOptions};
 use bbml::data::synth::{generate_corpus, SynthConfig};
 use bbml::hashing::bbit::BbitSignatureMatrix;
+use bbml::hashing::minwise::MinwiseHasher;
 use bbml::rng::Xoshiro256;
 use bbml::solvers::kernel_svm::{
     train_kernel_svm, BbitKernel, KernelSvmOptions, ResemblanceKernel,
 };
 
 fn main() {
+    // --- signature engine micro-benchmark (one-pass k-lane vs seed) -----
+    // Separate Bencher: results/BENCH_signature.json must hold exactly
+    // these records, like BENCH_kernel.json holds the match_count ones.
+    let mut sig_bench = Bencher::new();
+    let dim = 1u64 << 24;
+    let mut rng = Xoshiro256::seed_from_u64(4242);
+    let doc: Vec<u64> = (0..256).map(|_| rng.gen_range(dim)).collect();
+    let mut sig_buf = Vec::new();
+    for k in [30usize, 64, 256] {
+        let h = MinwiseHasher::new(dim, k, 7);
+        let work = (doc.len() * k) as f64;
+        let st = sig_bench.bench(
+            &format!("signature/batched k={k} nnz={}", doc.len()),
+            || {
+                h.signature_batch_into(black_box(&doc), &mut sig_buf);
+                sig_buf.len()
+            },
+        );
+        let batched_meps = work / st.median.as_secs_f64() / 1e6;
+        let st = sig_bench.bench(
+            &format!("signature/scalar(seed) k={k} nnz={}", doc.len()),
+            || {
+                h.signature_scalar_into(black_box(&doc), &mut sig_buf);
+                sig_buf.len()
+            },
+        );
+        let scalar_meps = work / st.median.as_secs_f64() / 1e6;
+        println!(
+            "    signature throughput k={k}: batched {batched_meps:.1} \
+             M elem·perm/s vs scalar(seed) {scalar_meps:.1} M elem·perm/s \
+             ({:.2}x)",
+            batched_meps / scalar_meps
+        );
+    }
+    sig_bench
+        .write_json("results/BENCH_signature.json")
+        .expect("write results/BENCH_signature.json");
+
     let mut bench = Bencher::new();
 
     // --- match_count micro-benchmark (the tentpole's acceptance gate) ---

@@ -99,9 +99,10 @@ pub fn hash_dataset(
                     for i in lo..hi {
                         let row = ds.row(i);
                         nnz += row.len();
-                        let full = hasher.signature_into(row, &mut sig_buf);
-                        shard.push_full_row(&full, ds.label(i));
-                        sig_buf = full; // reclaim the buffer
+                        // One-pass k-lane engine, one buffer per worker:
+                        // zero allocations per row after the first fill.
+                        hasher.signature_batch_into(row, &mut sig_buf);
+                        shard.push_full_row(&sig_buf, ds.label(i));
                     }
                     if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
                         break; // collector gone
@@ -163,9 +164,8 @@ pub fn hash_corpus(
                     for doc_id in lo..hi {
                         let (vec, label) = sampler.generate(doc_id as u64);
                         nnz += vec.nnz();
-                        let full = hasher.signature_into(vec.indices(), &mut sig_buf);
-                        shard.push_full_row(&full, label);
-                        sig_buf = full;
+                        hasher.signature_batch_into(vec.indices(), &mut sig_buf);
+                        shard.push_full_row(&sig_buf, label);
                     }
                     if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
                         break;

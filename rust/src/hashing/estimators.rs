@@ -223,10 +223,8 @@ mod tests {
         let sets: Vec<Vec<u64>> = (0..5u64)
             .map(|t| (t * 30..t * 30 + 100).collect())
             .collect();
-        let mut m = BbitSignatureMatrix::new(37, 4);
-        for s in &sets {
-            m.push_full_row(&h.signature(s), 1.0);
-        }
+        // Batched one-pass builds with one shared buffer (no per-row Vec).
+        let m = h.signature_matrix(4, &sets, &[1.0; 5]);
         let cards = vec![100u64; 5];
         let pairs = pairwise_r_bbit(&m, &cards, d);
         assert_eq!(pairs.len(), 10);
@@ -243,10 +241,7 @@ mod tests {
         let b_set: Vec<u64> = (10..110).collect(); // R(a,b) ≈ 0.82
         let c_set: Vec<u64> = (5000..5100).collect(); // unrelated
         let h = MinwiseHasher::new(d, 128, 5);
-        let mut m = BbitSignatureMatrix::new(128, 8);
-        for s in [&a, &b_set, &c_set] {
-            m.push_full_row(&h.signature(s), 1.0);
-        }
+        let m = h.signature_matrix(8, &[&a[..], &b_set[..], &c_set[..]], &[1.0; 3]);
         let cards = vec![100u64, 100, 100];
         let pairs = pairwise_r_bbit(&m, &cards, d);
         let get = |i, j| {

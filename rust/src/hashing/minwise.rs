@@ -4,13 +4,40 @@
 //! `z_j = min(π_j(S))`. Collision of z_j across two sets happens with
 //! probability exactly R (eq. 1), giving the unbiased estimator R̂_M
 //! (eq. 2) with variance R(1−R)/k (eq. 3).
+//!
+//! # The one-pass k-lane engine (§Perf)
+//!
+//! [`MinwiseHasher::signature_batch_into`] computes all k lane minima in a
+//! **single scan of the set**: elements stream through in small L1-resident
+//! blocks, and each block is mixed through the [`PermutationBank`]'s lanes
+//! four at a time with the running minima held in registers
+//! ([`PermutationBank::fold_min_into`]). The per-element cost is unchanged
+//! (k mixes either way), but the *data* is fetched from memory once instead
+//! of k times — the paper's "one scan of the data" preprocessing claim
+//! (§9), realized at the kernel level rather than per permutation. The old
+//! per-permutation scan survives as
+//! [`MinwiseHasher::signature_scalar_into`]: it is the reference oracle the
+//! property tests pin the batched engine against, bit for bit.
+//!
+//! # Buffer ownership
+//!
+//! Every `*_into` method **fills the caller's buffer in place** (clear +
+//! resize to k) and returns nothing: the buffer's capacity survives the
+//! call, so hot loops hash n rows with zero allocations after the first.
+//! (An earlier revision returned `std::mem::take(buf)`, which stole the
+//! caller's allocation and silently re-allocated on every call despite its
+//! "reuse" doc — the buffer-reuse test now pins the contract.)
 
-use super::perm::{Permutation, Permuter};
+use super::bbit::BbitSignatureMatrix;
+use super::perm::{Permutation, PermutationBank, Permuter};
 
 /// Produces full (64-bit) minwise signatures with k simulated permutations.
 #[derive(Clone, Debug)]
 pub struct MinwiseHasher {
+    /// Per-permutation path — the reference oracle for the batched engine.
     perms: Vec<Permutation>,
+    /// Struct-of-arrays key bank — the one-pass k-lane hot path.
+    bank: PermutationBank,
     d: u64,
 }
 
@@ -18,7 +45,11 @@ impl MinwiseHasher {
     /// k independent permutations of `[0, d)`, derived from `seed`.
     pub fn new(d: u64, k: usize, seed: u64) -> Self {
         let perms = (0..k as u64).map(|j| Permutation::new(d, seed, j)).collect();
-        Self { perms, d }
+        Self {
+            perms,
+            bank: PermutationBank::new(d, seed, k),
+            d,
+        }
     }
 
     #[inline]
@@ -36,22 +67,45 @@ impl MinwiseHasher {
     /// shingles). For robustness, an empty set maps to the all-`d` signature
     /// (an otherwise-unreachable sentinel, since images are < d).
     pub fn signature(&self, set: &[u64]) -> Vec<u64> {
-        self.signature_into(set, &mut Vec::new())
+        let mut out = Vec::with_capacity(self.k());
+        self.signature_batch_into(set, &mut out);
+        out
     }
 
-    /// Signature, reusing `buf` (cleared) to avoid allocation in hot loops.
-    ///
-    /// §Perf: the inner loop is unrolled ×4 so the four independent
-    /// mix-chains overlap in the pipeline (the mix itself is a serial
-    /// dependency chain; ILP across elements is the only parallelism).
-    pub fn signature_into(&self, set: &[u64], buf: &mut Vec<u64>) -> Vec<u64> {
-        buf.clear();
-        buf.reserve(self.perms.len());
+    /// Signature into `out`, reusing its capacity (see the module's buffer-
+    /// ownership contract). Delegates to the batched one-pass engine.
+    #[inline]
+    pub fn signature_into(&self, set: &[u64], out: &mut Vec<u64>) {
+        self.signature_batch_into(set, out);
+    }
+
+    /// The one-pass k-lane signature engine: `out` is cleared, resized to
+    /// k, and filled with `z_j = min π_j(S)` for every lane in a single
+    /// scan of `set` (module docs). `out`'s capacity is reused, never
+    /// stolen. Bit-identical to [`Self::signature_scalar_into`].
+    pub fn signature_batch_into(&self, set: &[u64], out: &mut Vec<u64>) {
+        out.clear();
+        if set.is_empty() {
+            out.resize(self.k(), self.d);
+            return;
+        }
+        out.resize(self.k(), u64::MAX);
+        self.bank.fold_min_into(set, out);
+    }
+
+    /// Reference oracle: the per-permutation scan (k passes over the set,
+    /// each ×4 element-unrolled so four independent mix chains overlap in
+    /// the pipeline). Kept callable for the equivalence property tests and
+    /// the old-vs-batched micro-benchmark; fills `out` in place like every
+    /// other `*_into`.
+    pub fn signature_scalar_into(&self, set: &[u64], out: &mut Vec<u64>) {
+        out.clear();
+        out.reserve(self.k());
         // The empty-set sentinel is decided once up front, not re-checked
         // inside the per-permutation loop.
         if set.is_empty() {
-            buf.resize(self.perms.len(), self.d);
-            return std::mem::take(buf);
+            out.resize(self.k(), self.d);
+            return;
         }
         for p in &self.perms {
             let mut chunks = set.chunks_exact(4);
@@ -67,9 +121,34 @@ impl MinwiseHasher {
             for &x in chunks.remainder() {
                 m = m.min(p.apply(x));
             }
-            buf.push(m);
+            out.push(m);
         }
-        std::mem::take(buf)
+    }
+
+    /// Allocating convenience for the reference oracle.
+    pub fn signature_scalar(&self, set: &[u64]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.k());
+        self.signature_scalar_into(set, &mut out);
+        out
+    }
+
+    /// Hash every set through the batched engine and truncate into a packed
+    /// b-bit matrix — one shared signature buffer across all rows, so the
+    /// n-row build allocates nothing per row.
+    pub fn signature_matrix<S: AsRef<[u64]>>(
+        &self,
+        b: u32,
+        sets: &[S],
+        labels: &[f32],
+    ) -> BbitSignatureMatrix {
+        assert_eq!(sets.len(), labels.len(), "one label per set");
+        let mut m = BbitSignatureMatrix::with_capacity(self.k(), b, sets.len());
+        let mut buf = Vec::with_capacity(self.k());
+        for (s, &y) in sets.iter().zip(labels) {
+            self.signature_batch_into(s.as_ref(), &mut buf);
+            m.push_full_row(&buf, y);
+        }
+        m
     }
 
     /// Estimate resemblance between two full signatures (eq. 2):
@@ -152,15 +231,85 @@ mod tests {
         let h = MinwiseHasher::new(1024, 4, 1);
         let sig = h.signature(&[]);
         assert!(sig.iter().all(|&z| z == 1024));
+        // Batched and scalar paths agree on the sentinel too.
+        let mut batch = Vec::new();
+        h.signature_batch_into(&[], &mut batch);
+        assert_eq!(batch, h.signature_scalar(&[]));
+        assert_eq!(batch, vec![1024u64; 4]);
     }
 
     #[test]
-    fn signature_into_reuses_buffer() {
+    fn signature_into_fills_in_place_and_keeps_capacity() {
+        // The headline bugfix: signature_into must NOT steal the caller's
+        // buffer (the old `std::mem::take(buf)` re-allocated every call).
+        // The same allocation — same capacity, same base pointer — must
+        // survive arbitrarily many calls, including empty-set calls.
         let h = MinwiseHasher::new(1 << 12, 8, 2);
         let mut buf = Vec::new();
-        let s1 = h.signature_into(&[1, 2, 3], &mut buf);
-        assert_eq!(s1.len(), 8);
-        let s2 = h.signature_into(&[1, 2, 3], &mut buf);
-        assert_eq!(s1, s2);
+        h.signature_into(&[1, 2, 3], &mut buf);
+        assert_eq!(buf.len(), 8);
+        let want = buf.clone();
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        for _ in 0..32 {
+            h.signature_into(&[1, 2, 3], &mut buf);
+            assert_eq!(buf, want, "determinism through the reused buffer");
+            h.signature_batch_into(&[9, 10], &mut buf);
+            h.signature_scalar_into(&[9, 10], &mut buf);
+            h.signature_batch_into(&[], &mut buf);
+        }
+        h.signature_into(&[1, 2, 3], &mut buf);
+        assert_eq!(buf.capacity(), cap, "capacity must survive reuse");
+        assert_eq!(buf.as_ptr(), ptr, "no re-allocation may occur");
+    }
+
+    #[test]
+    fn batched_engine_matches_scalar_reference() {
+        // Unit-level spot check of the tentpole invariant (the full grid
+        // lives in the property tests): ragged set lengths around the
+        // element block and lane widths around the 4-lane group.
+        let d = 1 << 20;
+        for k in [1usize, 3, 4, 7, 8, 64] {
+            let h = MinwiseHasher::new(d, k, 17);
+            for len in [1usize, 2, 4, 5, 31, 32, 33, 100] {
+                let set: Vec<u64> = (0..len as u64).map(|t| (t * 7919) % d).collect();
+                let mut batch = Vec::new();
+                h.signature_batch_into(&set, &mut batch);
+                assert_eq!(batch, h.signature_scalar(&set), "k={k} len={len}");
+                assert_eq!(batch, h.signature(&set));
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_domain_signatures() {
+        // d = 1: the only non-empty set is {0} and every lane image is 0.
+        let h1 = MinwiseHasher::new(1, 8, 5);
+        assert_eq!(h1.signature(&[0]), vec![0u64; 8]);
+        assert_eq!(h1.signature(&[]), vec![1u64; 8]); // sentinel = d
+        // d = 2: lanes stay in range, batch == scalar, and hashing the
+        // full domain {0, 1} pins every lane's min at 0.
+        let h2 = MinwiseHasher::new(2, 16, 5);
+        for set in [vec![0u64], vec![1], vec![0, 1]] {
+            let sig = h2.signature(&set);
+            assert!(sig.iter().all(|&z| z < 2), "set {set:?} out of range");
+            assert_eq!(sig, h2.signature_scalar(&set), "set {set:?}");
+        }
+        assert_eq!(h2.signature(&[0, 1]), vec![0u64; 16]);
+    }
+
+    #[test]
+    fn signature_matrix_packs_batched_rows() {
+        let h = MinwiseHasher::new(1 << 16, 12, 4);
+        let sets: Vec<Vec<u64>> = (0..5u64).map(|t| (t * 10..t * 10 + 40).collect()).collect();
+        let labels = [1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let m = h.signature_matrix(8, &sets, &labels);
+        assert_eq!(m.n(), 5);
+        assert_eq!(m.labels(), &labels);
+        for (i, s) in sets.iter().enumerate() {
+            let full = h.signature(s);
+            let want: Vec<u16> = full.iter().map(|&z| (z & 0xFF) as u16).collect();
+            assert_eq!(m.row(i), want, "row {i}");
+        }
     }
 }

@@ -22,4 +22,4 @@ pub mod vw;
 pub use bbit::{BbitSignatureMatrix, pack_lowest_bits};
 pub use expand::expand_signature;
 pub use minwise::MinwiseHasher;
-pub use perm::Permutation;
+pub use perm::{Permutation, PermutationBank};

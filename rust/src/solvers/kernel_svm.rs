@@ -32,6 +32,23 @@ pub trait Kernel: Sync {
             out.push(self.eval(i, j));
         }
     }
+
+    /// Fill one Gram row per index of `is` into `out` (cleared first;
+    /// `out[r]` is K(is[r], ·)). The default loops [`Kernel::fill_row`];
+    /// kernels with a blocked path override it — [`BbitKernel`] computes
+    /// all requested rows in one parallel SWAR tile
+    /// (`match_count_block_par`), which is what makes the SMO row-cache's
+    /// multi-row prefetch pay on cache misses. Values must be identical to
+    /// the pointwise path (the solver's results may not depend on which
+    /// fill path ran).
+    fn fill_rows(&self, is: &[usize], out: &mut Vec<Vec<f64>>) {
+        out.clear();
+        for &i in is {
+            let mut row = Vec::new();
+            self.fill_row(i, &mut row);
+            out.push(row);
+        }
+    }
 }
 
 /// Resemblance kernel over raw sparse sets: K(i,j) = R(S_i, S_j) (PD by
@@ -72,6 +89,33 @@ impl Kernel for BbitKernel<'_> {
 
     fn fill_row(&self, i: usize, out: &mut Vec<f64>) {
         self.sigs.match_count_row_div_into(i, self.sigs.k() as f64, out);
+    }
+
+    /// Blocked multi-row fill: one `match_count_block_par` tile covers all
+    /// requested Gram rows, sharding them across scoped threads so a
+    /// row-cache miss prefetch streams the packed store once instead of
+    /// once per row. Counts are divided by k exactly like
+    /// [`Kernel::eval`], so the values are bit-identical to the pointwise
+    /// path.
+    fn fill_rows(&self, is: &[usize], out: &mut Vec<Vec<f64>>) {
+        out.clear();
+        let n = self.sigs.n();
+        if is.is_empty() || n == 0 {
+            return;
+        }
+        let k = self.sigs.k() as f64;
+        let all: Vec<usize> = (0..n).collect();
+        // match_count_block_par goes serial below 2 rows per thread; cap
+        // the thread count so small prefetch blocks still fan out.
+        let threads = std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .min(is.len() / 2)
+            .max(1);
+        let tile = self.sigs.match_count_block_par(is, &all, threads);
+        for band in tile.chunks(n) {
+            out.push(band.iter().map(|&c| c as f64 / k).collect());
+        }
     }
 }
 
@@ -129,6 +173,40 @@ impl RowCache {
         }
         &self.rows[&i]
     }
+
+    #[inline]
+    fn contains(&self, i: usize) -> bool {
+        self.rows.contains_key(&i)
+    }
+
+    /// Multi-row prefetch: fill every uncached row of `idxs` with ONE
+    /// batched kernel call ([`Kernel::fill_rows`] — for [`BbitKernel`] a
+    /// parallel SWAR tile) and insert them, evicting non-prefetched
+    /// entries as needed. `scratch` is drained into the cache, so its row
+    /// allocations are handed over rather than copied.
+    fn prefetch<K: Kernel>(&mut self, k: &K, idxs: &[usize], scratch: &mut Vec<Vec<f64>>) {
+        let missing: Vec<usize> = idxs
+            .iter()
+            .copied()
+            .filter(|i| !self.rows.contains_key(i))
+            .collect();
+        if missing.is_empty() {
+            return;
+        }
+        k.fill_rows(&missing, scratch);
+        for (&i, row) in missing.iter().zip(scratch.drain(..)) {
+            if self.rows.len() >= self.cap {
+                // Never evict a row from this prefetch batch (it is about
+                // to be read); missing is tiny, so the scan is cheap.
+                if let Some(&victim) =
+                    self.rows.keys().find(|&&v| !missing.contains(&v))
+                {
+                    self.rows.remove(&victim);
+                }
+            }
+            self.rows.insert(i, row);
+        }
+    }
 }
 
 /// A trained kernel SVM model: support-vector coefficients.
@@ -157,8 +235,20 @@ impl KernelModel {
     }
 }
 
+/// Rows fetched per cache-miss prefetch block (the selected coordinate
+/// plus the next-most-violating ones, the likeliest future fills).
+const PREFETCH_ROWS: usize = 8;
+
 /// Train the dual SVM by greedy coordinate ascent (single-coordinate SMO
 /// without bias, valid because we solve the no-offset formulation).
+///
+/// Row-cache misses are served in blocks: the selection scan already ranks
+/// every coordinate by KKT violation, so a miss prefetches the selected
+/// row together with the next [`PREFETCH_ROWS`]−1 top violators through
+/// [`Kernel::fill_rows`] — for [`BbitKernel`] one parallel SWAR tile
+/// (`match_count_block_par`) instead of per-row passes over the packed
+/// store. The fill path never changes the values (tested), only their
+/// cost.
 pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> KernelModel {
     let n = kernel.n();
     assert!(n > 0);
@@ -168,11 +258,18 @@ pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> Kernel
     let mut cache = RowCache::new(opt.cache_rows);
     let diag: Vec<f64> = (0..n).map(|i| kernel.eval(i, i).max(1e-12)).collect();
 
+    let prefetch = PREFETCH_ROWS.min(opt.cache_rows.max(1));
+    // Top violators of the current scan, sorted by violation descending —
+    // the prefetch candidates for a cache miss.
+    let mut top: Vec<(f64, usize)> = Vec::with_capacity(prefetch + 1);
+    let mut block: Vec<usize> = Vec::with_capacity(prefetch);
+    let mut scratch: Vec<Vec<f64>> = Vec::new();
+
     let mut updates = 0usize;
     while updates < opt.max_updates {
-        // Maximal violating coordinate under the box 0 ≤ α ≤ C.
-        let mut best = None;
-        let mut best_v = opt.tol;
+        // Maximal violating coordinate under the box 0 ≤ α ≤ C, tracking
+        // the runner-up violators for the miss-path prefetch.
+        top.clear();
         for i in 0..n {
             let v = if alpha[i] <= 0.0 {
                 grad[i].max(0.0)
@@ -181,12 +278,15 @@ pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> Kernel
             } else {
                 grad[i].abs()
             };
-            if v > best_v {
-                best_v = v;
-                best = Some(i);
+            if v > opt.tol {
+                let pos = top.partition_point(|&(tv, _)| tv >= v);
+                if pos < prefetch {
+                    top.insert(pos, (v, i));
+                    top.truncate(prefetch);
+                }
             }
         }
-        let Some(i) = best else { break };
+        let Some(&(_, i)) = top.first() else { break };
         let old = alpha[i];
         let a_new = (old + grad[i] / diag[i]).clamp(0.0, opt.c);
         let delta = a_new - old;
@@ -195,6 +295,12 @@ pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> Kernel
         }
         alpha[i] = a_new;
         let yi = kernel.label(i) as f64;
+        if !cache.contains(i) {
+            // Miss: fetch the whole violator block in one tile sweep.
+            block.clear();
+            block.extend(top.iter().map(|&(_, j)| j));
+            cache.prefetch(kernel, &block, &mut scratch);
+        }
         let row = cache.get(kernel, i);
         for j in 0..n {
             let yj = kernel.label(j) as f64;
@@ -288,15 +394,21 @@ mod tests {
         assert!(model.n_support() > 0);
     }
 
+    /// Allocation-free n-row signature build: one shared buffer through
+    /// the batched engine (`MinwiseHasher::signature_matrix`), not one
+    /// `Vec` per row.
+    fn sig_matrix(ds: &SparseBinaryDataset, h: &MinwiseHasher, b: u32) -> BbitSignatureMatrix {
+        let rows: Vec<&[u64]> = (0..ds.n()).map(|i| ds.row(i)).collect();
+        let labels: Vec<f32> = (0..ds.n()).map(|i| ds.label(i)).collect();
+        h.signature_matrix(b, &rows, &labels)
+    }
+
     #[test]
     fn bbit_kernel_matches_resemblance_kernel_accuracy() {
         // §5.1's point: the estimated kernel is as good as the exact one.
         let ds = cluster_data(60, 7);
         let h = MinwiseHasher::new(100_000, 128, 11);
-        let mut sigs = BbitSignatureMatrix::new(128, 8);
-        for i in 0..ds.n() {
-            sigs.push_full_row(&h.signature(ds.row(i)), ds.label(i));
-        }
+        let sigs = sig_matrix(&ds, &h, 8);
         let kernel = BbitKernel { sigs: &sigs };
         let model = train_kernel_svm(&kernel, &KernelSvmOptions::default());
         let mut correct = 0;
@@ -314,16 +426,75 @@ mod tests {
         let ds = cluster_data(24, 21);
         let h = MinwiseHasher::new(100_000, 33, 2); // ragged k·b
         for b in [1u32, 2, 4, 8] {
-            let mut sigs = BbitSignatureMatrix::new(33, b);
-            for i in 0..ds.n() {
-                sigs.push_full_row(&h.signature(ds.row(i)), ds.label(i));
-            }
+            let sigs = sig_matrix(&ds, &h, b);
             let kernel = BbitKernel { sigs: &sigs };
             let mut row = Vec::new();
             kernel.fill_row(7, &mut row);
             assert_eq!(row.len(), kernel.n());
             for (j, &v) in row.iter().enumerate() {
                 assert_eq!(v, kernel.eval(7, j), "b={b} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn bbit_fill_rows_matches_fill_row() {
+        // The blocked multi-row fill (parallel SWAR tile) must be value-
+        // identical to the per-row path for any index subset, including
+        // a single row (serial fallback) and repeated calls (out reuse).
+        let ds = cluster_data(30, 33);
+        let h = MinwiseHasher::new(100_000, 40, 6);
+        for b in [1u32, 4, 8] {
+            let sigs = sig_matrix(&ds, &h, b);
+            let kernel = BbitKernel { sigs: &sigs };
+            let mut rows = Vec::new();
+            for is in [vec![5usize], vec![3, 0, 7, 29], (0..30).collect::<Vec<_>>()] {
+                kernel.fill_rows(&is, &mut rows);
+                assert_eq!(rows.len(), is.len(), "b={b}");
+                let mut want = Vec::new();
+                for (r, &i) in is.iter().enumerate() {
+                    kernel.fill_row(i, &mut want);
+                    assert_eq!(rows[r], want, "b={b} block row {r} (i={i})");
+                }
+            }
+        }
+    }
+
+    /// A BbitKernel stripped of its batched overrides: eval only, so
+    /// fill_row/fill_rows take the pointwise defaults. Training through it
+    /// must be bit-identical to the blocked prefetch path.
+    struct PointwiseBbit<'a> {
+        sigs: &'a BbitSignatureMatrix,
+    }
+
+    impl Kernel for PointwiseBbit<'_> {
+        fn n(&self) -> usize {
+            self.sigs.n()
+        }
+        fn label(&self, i: usize) -> f32 {
+            self.sigs.label(i)
+        }
+        fn eval(&self, i: usize, j: usize) -> f64 {
+            self.sigs.match_count(i, j) as f64 / self.sigs.k() as f64
+        }
+    }
+
+    #[test]
+    fn prefetched_training_is_bit_identical_to_pointwise() {
+        let ds = cluster_data(60, 17);
+        let h = MinwiseHasher::new(100_000, 64, 3);
+        let sigs = sig_matrix(&ds, &h, 8);
+        // Tiny cache forces misses (and thus block prefetches) constantly.
+        for cache_rows in [2usize, 8, 512] {
+            let opt = KernelSvmOptions {
+                cache_rows,
+                ..Default::default()
+            };
+            let blocked = train_kernel_svm(&BbitKernel { sigs: &sigs }, &opt);
+            let pointwise = train_kernel_svm(&PointwiseBbit { sigs: &sigs }, &opt);
+            assert_eq!(blocked.updates, pointwise.updates, "cache={cache_rows}");
+            for (a, b) in blocked.coef.iter().zip(&pointwise.coef) {
+                assert!((a - b).abs() < 1e-12, "cache={cache_rows}: {a} vs {b}");
             }
         }
     }

@@ -56,6 +56,38 @@ fn prop_signature_of_subset_shares_minima() {
 }
 
 #[test]
+fn prop_batched_signature_equals_scalar_reference() {
+    // The PR-2 tentpole invariant: the one-pass k-lane engine
+    // (`signature_batch_into`) must be bit-identical to the per-permutation
+    // scalar oracle (`signature_scalar_into`) across the full grid — lane
+    // counts around and beyond the 4-lane group width (incl. k = 200, far
+    // past the unroll), ragged set lengths that are no multiple of the
+    // element block or the ×4 element unroll, and the empty-set sentinel.
+    check("batched == scalar signatures", 25, |rng| {
+        for &k in &[1usize, 4, 7, 64, 200] {
+            let d = 2 + rng.gen_range(1 << 20);
+            let h = MinwiseHasher::new(d, k, rng.next_u64());
+            // Lengths 1..=70 cover 31/32/33-style block boundaries; allow
+            // duplicate elements (min is idempotent, but the engine must
+            // not care either way).
+            let len = 1 + rng.gen_range(70) as usize;
+            let set: Vec<u64> = (0..len).map(|_| rng.gen_range(d)).collect();
+            let mut batch = Vec::new();
+            let mut scalar = Vec::new();
+            h.signature_batch_into(&set, &mut batch);
+            h.signature_scalar_into(&set, &mut scalar);
+            assert_eq!(batch, scalar, "k={k} d={d} len={len}");
+            assert!(batch.iter().all(|&z| z < d), "k={k}: image out of range");
+            // Empty-set sentinel: all-d from both paths.
+            h.signature_batch_into(&[], &mut batch);
+            h.signature_scalar_into(&[], &mut scalar);
+            assert_eq!(batch, scalar, "k={k} empty-set");
+            assert!(batch.iter().all(|&z| z == d) && batch.len() == k);
+        }
+    });
+}
+
+#[test]
 fn prop_packing_roundtrip_and_expansion_count() {
     check("pack/expand invariants", 100, |rng| {
         let k = 1 + rng.gen_range(64) as usize;
