@@ -1,0 +1,88 @@
+//! End-to-end out-of-core benchmark: hash a synthetic corpus into an
+//! on-disk shard store (raw and gzip framing) and train a linear model
+//! from the shard stream, against the in-memory pipeline as the baseline.
+//!
+//! Records `results/BENCH_store.json` (via `benchkit::write_json`) — the
+//! machine-readable evidence that spilling to disk costs a bounded factor
+//! over the in-memory hash pass while memory stays flat.
+//!
+//! Run with `BBML_BENCH_FAST=1` for a CI-sized smoke pass.
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::coordinator::pipeline::{hash_corpus, hash_corpus_to_store, PipelineOptions};
+use bbml::coordinator::stream_train::{
+    evaluate_stream, train_stream, StreamAlgo, StreamTrainOptions,
+};
+use bbml::data::synth::{CorpusSampler, SynthConfig};
+use bbml::store::SigShardStore;
+
+fn main() {
+    let fast = std::env::var("BBML_BENCH_FAST").ok().as_deref() == Some("1");
+    let n_docs = if fast { 400 } else { 4_000 };
+    let cfg = SynthConfig {
+        n_docs,
+        dim: 1 << 22,
+        vocab: 10_000,
+        mean_len: 80,
+        topic_mix: 0.4,
+        ..Default::default()
+    };
+    let sampler = CorpusSampler::new(cfg);
+    let (k, b, seed) = (64usize, 8u32, 7u64);
+    let opt = PipelineOptions {
+        chunk: 256,
+        ..Default::default()
+    };
+    let base = std::env::temp_dir().join(format!("bbml_bench_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+
+    let mut bench = Bencher::new();
+
+    // Baseline: the in-memory pipeline sink.
+    bench.bench_once(&format!("store/hash_in_memory n={n_docs}"), || {
+        black_box(hash_corpus(&sampler, n_docs, k, b, seed, &opt))
+    });
+
+    // The spill sinks: raw framing vs gzip framing.
+    for gzip in [false, true] {
+        let label = if gzip { "gzip" } else { "raw" };
+        let dir = base.join(label);
+        bench.bench_once(&format!("store/hash_to_store/{label} n={n_docs}"), || {
+            hash_corpus_to_store(&sampler, n_docs, k, b, seed, &opt, &dir, gzip).unwrap()
+        });
+    }
+
+    // Out-of-core training over the raw store.
+    let store = SigShardStore::open(&base.join("raw")).unwrap();
+    println!(
+        "store: {} shards, {} rows, {:.2} MB packed / {:.2} MB on disk",
+        store.n_shards(),
+        store.n_rows(),
+        store.packed_bytes() as f64 / 1e6,
+        store.stored_bytes() as f64 / 1e6
+    );
+    for algo in [StreamAlgo::Pegasos, StreamAlgo::LogRegSgd] {
+        let topt = StreamTrainOptions {
+            algo,
+            epochs: if fast { 2 } else { 5 },
+            ..Default::default()
+        };
+        let mut report = None;
+        bench.bench_once(
+            &format!("store/train_stream/{} epochs={}", algo.name(), topt.epochs),
+            || report = Some(train_stream(&store, &topt).unwrap()),
+        );
+        let report = report.unwrap();
+        let (acc, _) = evaluate_stream(&report.model, &store, topt.prefetch).unwrap();
+        println!(
+            "  {}: acc {:.4}, peak resident {} of {} rows",
+            algo.name(),
+            acc,
+            report.peak_resident_rows,
+            store.n_rows()
+        );
+    }
+
+    bench.write_json("results/BENCH_store.json").unwrap();
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -1,25 +1,36 @@
 //! Command-line interface (hand-rolled; clap is unavailable offline).
 //!
 //! ```text
-//! bbml generate  [key=val ...]        write the synthetic corpus as LIBSVM
-//! bbml hash      [key=val ...]        corpus -> packed b-bit signatures
-//! bbml train     [key=val ...]        hash + train + report accuracy
-//! bbml experiment <id|all> [key=val]  regenerate a paper figure/table
-//! bbml config    [key=val ...]        print the effective configuration
-//! bbml info                           runtime + artifact inventory
+//! bbml generate     [key=val ...]       write the synthetic corpus as LIBSVM
+//! bbml hash         [key=val ...]       corpus -> packed b-bit signatures
+//! bbml hash-store   [key=val ...]       corpus -> on-disk signature shards
+//! bbml train        [key=val ...]       hash + train + report accuracy
+//! bbml train-stream [key=val ...]       out-of-core train from a shard store
+//! bbml experiment <id|all> [key=val]    regenerate a paper figure/table
+//! bbml config       [key=val ...]       print the effective configuration
+//! bbml info                             runtime + artifact inventory
 //! ```
 //!
 //! Every subcommand accepts `--config FILE` plus `key=value` overrides
 //! (see [`crate::coordinator::config::RunConfig`] for keys), and scalar
-//! flags `--backend`, `--k`, `--b`, `--c` where meaningful.
+//! flags `--backend`, `--k`, `--b`, `--c`, `--store`, `--epochs`, … where
+//! meaningful. `hash-store` + `train-stream` is the paper's out-of-core
+//! path: the corpus is hashed once into a [`crate::store`] shard store and
+//! models train from the stream without the signature matrix ever being
+//! resident.
 
 use std::path::Path;
 
 use crate::coordinator::config::RunConfig;
-use crate::coordinator::pipeline::{hash_corpus, PipelineOptions};
+use crate::coordinator::pipeline::{hash_corpus, hash_corpus_to_store, PipelineOptions};
+use crate::coordinator::report;
+use crate::coordinator::stream_train::{
+    evaluate_stream, train_stream, StreamAlgo, StreamTrainOptions,
+};
 use crate::coordinator::trainer::{evaluate, evaluate_pjrt, train_signatures, Backend};
 use crate::data::synth::CorpusSampler;
 use crate::runtime::Runtime;
+use crate::store::SigShardStore;
 
 const USAGE: &str = "\
 bbml — b-bit minwise hashing for large-scale learning (NIPS 2011 reproduction)
@@ -30,8 +41,14 @@ USAGE:
 COMMANDS:
     generate      write the synthetic corpus to LIBSVM (out: corpus.libsvm)
     hash          run the streaming hashing pipeline, report throughput
+    hash-store    hash the corpus into an on-disk shard store (flags:
+                  --store DIR, --gzip, --chunk N, --k K, --b B)
     train         hash + train + evaluate (flags: --backend svm|logreg|
                   pegasos|pjrt_logreg|pjrt_svm, --k K, --b B, --c C)
+    train-stream  out-of-core training over a shard store (flags:
+                  --store DIR, --backend pegasos|logreg, --c C,
+                  --epochs N, --prefetch N, --no-shuffle); writes
+                  <out_dir>/stream_report.json
     experiment    regenerate a figure/table: fig1..fig10, tab51, gvw,
                   lemma1, lemma2, or 'all'
     config        print the effective configuration
@@ -54,6 +71,13 @@ struct Args {
     k: usize,
     b: u32,
     c: f64,
+    /// Shard-store flags (hash-store / train-stream).
+    store: Option<String>,
+    gzip: bool,
+    chunk: Option<usize>,
+    epochs: usize,
+    prefetch: usize,
+    no_shuffle: bool,
 }
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
@@ -62,6 +86,12 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut positional = Vec::new();
     let mut backend = Backend::SvmDcd;
     let (mut k, mut b, mut c) = (200usize, 8u32, 1.0f64);
+    let mut store: Option<String> = None;
+    let mut gzip = false;
+    let mut chunk: Option<usize> = None;
+    let mut epochs = 5usize;
+    let mut prefetch = 4usize;
+    let mut no_shuffle = false;
 
     let mut it = argv.iter().peekable();
     while let Some(arg) = it.next() {
@@ -97,6 +127,34 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
                     .and_then(|v| v.parse().ok())
                     .ok_or_else(|| anyhow::anyhow!("--c needs a f64"))?;
             }
+            "--store" => {
+                store = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--store needs a path"))?
+                        .to_string(),
+                );
+            }
+            "--gzip" => gzip = true,
+            "--chunk" => {
+                chunk = Some(
+                    it.next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("--chunk needs a usize"))?,
+                );
+            }
+            "--epochs" => {
+                epochs = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--epochs needs a usize"))?;
+            }
+            "--prefetch" => {
+                prefetch = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--prefetch needs a usize"))?;
+            }
+            "--no-shuffle" => no_shuffle = true,
             other if other.contains('=') && !command.is_empty() => {
                 config.apply_overrides(&[other.to_string()])?;
             }
@@ -115,7 +173,22 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
         k,
         b,
         c,
+        store,
+        gzip,
+        chunk,
+        epochs,
+        prefetch,
+        no_shuffle,
     })
+}
+
+impl Args {
+    /// The shard-store directory: `--store` or `<out_dir>/sigstore`.
+    fn store_dir(&self) -> String {
+        self.store
+            .clone()
+            .unwrap_or_else(|| format!("{}/sigstore", self.config.out_dir))
+    }
 }
 
 /// CLI entry point.
@@ -179,6 +252,107 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 stats.output_bytes as f64 / 1e6,
                 (stats.input_nnz * 8) / stats.output_bytes.max(1)
             );
+            report::print_pipeline_stats("pipeline", &stats);
+            Ok(())
+        }
+        "hash-store" => {
+            let sampler = CorpusSampler::new(cfg.synth_config());
+            let mut opt = PipelineOptions {
+                threads: cfg.threads,
+                ..Default::default()
+            };
+            if let Some(chunk) = args.chunk {
+                opt.chunk = chunk;
+            }
+            let dir = args.store_dir();
+            let (summary, stats) = hash_corpus_to_store(
+                &sampler,
+                cfg.n_docs,
+                args.k,
+                args.b,
+                cfg.seed,
+                &opt,
+                Path::new(&dir),
+                args.gzip,
+            )?;
+            println!(
+                "spilled {} docs -> {} shards at {} (k={}, b={}, gzip={}) \
+                 in {:.2?} ({:.0} docs/s)",
+                summary.n_rows,
+                summary.n_shards,
+                summary.dir.display(),
+                args.k,
+                args.b,
+                args.gzip,
+                stats.wall,
+                stats.docs_per_sec
+            );
+            report::print_pipeline_stats("hash-store", &stats);
+            Ok(())
+        }
+        "train-stream" => {
+            let algo = match args.backend {
+                Backend::Pegasos => StreamAlgo::Pegasos,
+                // The default backend (svm) maps to Pegasos: same hinge-loss
+                // SVM objective, but the streaming path optimizes it by SGD
+                // epochs rather than dual coordinate descent — say so out
+                // loud rather than silently swapping solvers.
+                Backend::SvmDcd => {
+                    println!(
+                        "note: out-of-core SVM trains via Pegasos SGD epochs \
+                         (dual coordinate descent needs resident data)"
+                    );
+                    StreamAlgo::Pegasos
+                }
+                Backend::LogRegDcd => StreamAlgo::LogRegSgd,
+                other => anyhow::bail!(
+                    "train-stream supports --backend pegasos|logreg, got {other:?}"
+                ),
+            };
+            let dir = args.store_dir();
+            let store = SigShardStore::open(Path::new(&dir))?;
+            let opt = StreamTrainOptions {
+                algo,
+                c: args.c,
+                epochs: args.epochs,
+                seed: cfg.seed,
+                shuffle: !args.no_shuffle,
+                prefetch: args.prefetch,
+                average: true,
+            };
+            let out = train_stream(&store, &opt)?;
+            let (acc, rows) = evaluate_stream(&out.model, &store, opt.prefetch)?;
+            println!(
+                "streamed {} epochs over {} shards ({} rows/epoch, peak {} rows \
+                 resident of {}): train acc {:.4}, obj {:.4} in {:.2?}",
+                out.epochs,
+                out.shards,
+                store.n_rows(),
+                out.peak_resident_rows,
+                store.n_rows(),
+                acc,
+                out.model.objective,
+                out.train_time
+            );
+            let report_path = Path::new(&cfg.out_dir).join("stream_report.json");
+            report::write_json_object(
+                &report_path,
+                &[
+                    ("backend", report::json_string(algo.name())),
+                    ("store", report::json_string(&dir)),
+                    ("epochs", out.epochs.to_string()),
+                    ("shards", out.shards.to_string()),
+                    ("rows", rows.to_string()),
+                    ("rows_seen", out.rows_seen.to_string()),
+                    ("peak_resident_rows", out.peak_resident_rows.to_string()),
+                    ("c", format!("{}", args.c)),
+                    ("shuffle", (!args.no_shuffle).to_string()),
+                    ("acc", format!("{acc:.6}")),
+                    ("objective", format!("{:.6}", out.model.objective)),
+                    ("train_secs", format!("{:.6}", out.train_time.as_secs_f64())),
+                ],
+            )?;
+            println!("report: {}", report_path.display());
             Ok(())
         }
         "train" => {
@@ -300,6 +474,56 @@ mod tests {
     #[test]
     fn parse_rejects_bad_backend() {
         assert!(parse_args(&strs(&["train", "--backend", "nope"])).is_err());
+    }
+
+    #[test]
+    fn parse_store_flags() {
+        let a = parse_args(&strs(&[
+            "hash-store",
+            "--store",
+            "/tmp/sig",
+            "--gzip",
+            "--chunk",
+            "512",
+            "--epochs",
+            "3",
+            "--prefetch",
+            "2",
+            "--no-shuffle",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "hash-store");
+        assert_eq!(a.store_dir(), "/tmp/sig");
+        assert!(a.gzip);
+        assert_eq!(a.chunk, Some(512));
+        assert_eq!(a.epochs, 3);
+        assert_eq!(a.prefetch, 2);
+        assert!(a.no_shuffle);
+        // Defaults: store dir falls back under out_dir.
+        let d = parse_args(&strs(&["train-stream"])).unwrap();
+        assert_eq!(d.store_dir(), "results/sigstore");
+        assert!(!d.gzip && !d.no_shuffle);
+        assert_eq!((d.epochs, d.prefetch), (5, 4));
+    }
+
+    #[test]
+    fn train_stream_rejects_pjrt_backend_and_missing_store() {
+        // PJRT backends have no streaming twin.
+        let err = run_with(&strs(&[
+            "train-stream",
+            "--backend",
+            "pjrt_logreg",
+            "--store",
+            "/definitely/not/a/store",
+        ]));
+        assert!(err.is_err());
+        // A pure-rust backend with a missing store fails at open, not panic.
+        let err = run_with(&strs(&[
+            "train-stream",
+            "--store",
+            "/definitely/not/a/store",
+        ]));
+        assert!(err.is_err());
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * [`trainer`] — training orchestration over a signature store: pure-rust
 //!   solvers (LIBLINEAR-style) or the AOT-compiled PJRT step (JAX/Pallas),
 //!   plus timed evaluation.
+//! * [`stream_train`] — the out-of-core training loop: multi-epoch SGD
+//!   (Pegasos / logreg) over an on-disk [`crate::store`] shard stream with
+//!   per-epoch seeded shard shuffling; bit-identical to the in-memory path
+//!   when shuffling is off (the "200 GB" regime of arXiv:1108.3072).
 //! * [`sweep`] — the (b, k, C, repetition) grid driver behind Figures 1–9,
 //!   parallelized across worker threads.
 //! * [`report`] — CSV + console-table emission for `results/`.
@@ -20,9 +24,17 @@
 pub mod config;
 pub mod pipeline;
 pub mod report;
+pub mod stream_train;
 pub mod sweep;
 pub mod trainer;
 
 pub use config::RunConfig;
-pub use pipeline::{hash_corpus, hash_dataset, PipelineOptions, PipelineStats};
+pub use pipeline::{
+    hash_corpus, hash_corpus_to_store, hash_dataset, hash_dataset_to_store, PipelineOptions,
+    PipelineStats,
+};
+pub use stream_train::{
+    evaluate_stream, train_epochs_in_memory, train_stream, StreamAlgo, StreamTrainOptions,
+    StreamTrainReport,
+};
 pub use trainer::{train_signatures, Backend, TrainOutcome};

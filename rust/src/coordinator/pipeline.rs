@@ -12,8 +12,23 @@
 //! `seq·chunk` the moment it arrives — no reordering buffer, no per-value
 //! re-pack — and the output is **bit-identical to the single-threaded
 //! run** for any thread count (tested).
+//!
+//! The worker/collector core ([`run_pipeline`]'s shape) is shared by two
+//! sinks:
+//!
+//! * **in-memory merge** ([`hash_dataset`] / [`hash_corpus`]) — shards land
+//!   in a pre-sized [`BbitSignatureMatrix`];
+//! * **disk spill** ([`hash_dataset_to_store`] / [`hash_corpus_to_store`])
+//!   — each arriving shard is written straight to its own file in a
+//!   [`crate::store`] shard store (file name = sequence number, so
+//!   out-of-order arrival needs no reordering buffer) and the full matrix
+//!   is **never resident**: peak memory is the backpressure window,
+//!   `(queue + threads) · chunk` rows, independent of corpus size. This is
+//!   the paper's out-of-core regime (arXiv:1108.3072) — train afterwards
+//!   with [`crate::coordinator::stream_train`].
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::path::Path;
+use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -21,13 +36,15 @@ use crate::data::sparse::SparseBinaryDataset;
 use crate::data::synth::CorpusSampler;
 use crate::hashing::bbit::BbitSignatureMatrix;
 use crate::hashing::minwise::MinwiseHasher;
+use crate::store::{ShardWriter, StoreSummary};
 
 /// Pipeline tuning knobs.
 #[derive(Clone, Debug)]
 pub struct PipelineOptions {
     /// Hash worker threads.
     pub threads: usize,
-    /// Documents per work chunk.
+    /// Documents per work chunk (= rows per spilled shard on the store
+    /// path).
     pub chunk: usize,
     /// Bounded-channel capacity, in chunks (the backpressure window).
     pub queue: usize,
@@ -49,15 +66,120 @@ pub struct PipelineStats {
     pub docs: usize,
     pub wall: std::time::Duration,
     pub docs_per_sec: f64,
-    /// Packed output bytes (the paper's tight n·b·k/8, pad bits excluded;
-    /// allocated memory is the word-aligned `storage_bytes`).
+    /// Packed output bytes (the paper's tight n·b·k/8, pad bits excluded).
     pub output_bytes: usize,
+    /// Bytes the output actually occupies: the word-aligned allocation for
+    /// the in-memory sinks, on-disk bytes (headers + payloads, post-gzip)
+    /// for the store sinks. The delta vs [`Self::output_bytes`] is the
+    /// alignment/framing overhead that buys SWAR rows and shard recovery.
+    pub storage_bytes: usize,
+    /// Shards merged (in-memory sinks) or spilled to disk (store sinks).
+    pub shards: usize,
     /// Raw input non-zeros processed.
     pub input_nnz: usize,
 }
 
 enum Shard {
     Rows(usize, BbitSignatureMatrix, usize), // (seq, signatures, nnz)
+}
+
+/// The shared worker/collector core. `hash_row` fills `sig_buf` with row
+/// `i`'s full 64-bit signature and returns `(label, nnz)`; `on_shard` runs
+/// on the collector thread for every arriving `(seq, shard, nnz)` — in
+/// arrival order, which is NOT sequence order — and returns `false` to
+/// abort the run (a failing sink must not make the workers hash the rest
+/// of an out-of-core corpus for nothing): workers stop claiming chunks,
+/// the channel drains, and the all-shards-placed invariant is only
+/// asserted for runs that were not aborted.
+#[allow(clippy::too_many_arguments)]
+fn run_pipeline<F>(
+    n: usize,
+    dim: u64,
+    k: usize,
+    b: u32,
+    seed: u64,
+    opt: &PipelineOptions,
+    hash_row: &F,
+    mut on_shard: impl FnMut(usize, BbitSignatureMatrix, usize) -> bool,
+) where
+    F: Fn(usize, &MinwiseHasher, &mut Vec<u64>) -> (f32, usize) + Sync,
+{
+    let threads = opt.threads.clamp(1, 64);
+    let chunk = opt.chunk.max(1);
+    let n_chunks = n.div_ceil(chunk).max(1);
+
+    let (out_tx, out_rx) = sync_channel::<Shard>(opt.queue.max(1));
+    let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let out_tx = out_tx.clone();
+            let next = next.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                // Each worker builds its own hasher (identical: same seed),
+                // so signatures do not depend on which worker ran the chunk.
+                let hasher = MinwiseHasher::new(dim, k, seed);
+                let mut sig_buf = Vec::new();
+                loop {
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        break; // sink failed: stop claiming work
+                    }
+                    let seq = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if seq >= n_chunks {
+                        break;
+                    }
+                    let lo = seq * chunk;
+                    let hi = (lo + chunk).min(n);
+                    let mut shard = BbitSignatureMatrix::with_capacity(k, b, hi - lo);
+                    let mut nnz = 0usize;
+                    for i in lo..hi {
+                        // One-pass k-lane engine, one buffer per worker:
+                        // zero allocations per row after the first fill.
+                        let (label, row_nnz) = hash_row(i, &hasher, &mut sig_buf);
+                        nnz += row_nnz;
+                        shard.push_full_row(&sig_buf, label);
+                    }
+                    if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
+                        break; // collector gone
+                    }
+                }
+            });
+        }
+        drop(out_tx);
+        let mut placed = 0usize;
+        for shard in out_rx {
+            let Shard::Rows(seq, m, nnz) = shard;
+            if !on_shard(seq, m, nnz) {
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            }
+            placed += 1;
+        }
+        if !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            assert_eq!(placed, n_chunks, "pipeline lost shards: got {placed}/{n_chunks}");
+        }
+    });
+}
+
+fn finish_stats(
+    t0: Instant,
+    docs: usize,
+    output_bytes: usize,
+    storage_bytes: usize,
+    shards: usize,
+    input_nnz: usize,
+) -> PipelineStats {
+    let wall = t0.elapsed();
+    PipelineStats {
+        docs,
+        wall,
+        docs_per_sec: docs as f64 / wall.as_secs_f64().max(1e-9),
+        output_bytes,
+        storage_bytes,
+        shards,
+        input_nnz,
+    }
 }
 
 /// Hash every row of a dataset into a packed b-bit signature matrix using
@@ -71,59 +193,34 @@ pub fn hash_dataset(
 ) -> (BbitSignatureMatrix, PipelineStats) {
     let t0 = Instant::now();
     let n = ds.n();
-    let threads = opt.threads.clamp(1, 64);
     let chunk = opt.chunk.max(1);
-    let n_chunks = n.div_ceil(chunk.max(1)).max(1);
-
-    let (out_tx, out_rx) = sync_channel::<Shard>(opt.queue.max(1));
-    let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-
-    let result = std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let out_tx = out_tx.clone();
-            let next = next.clone();
-            scope.spawn(move || {
-                // Each worker builds its own hasher (identical: same seed),
-                // so signatures do not depend on which worker ran the chunk.
-                let hasher = MinwiseHasher::new(ds.dim(), k, seed);
-                let mut sig_buf = Vec::new();
-                loop {
-                    let seq = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if seq >= n_chunks {
-                        break;
-                    }
-                    let lo = seq * chunk;
-                    let hi = (lo + chunk).min(n);
-                    let mut shard = BbitSignatureMatrix::with_capacity(k, b, hi - lo);
-                    let mut nnz = 0usize;
-                    for i in lo..hi {
-                        let row = ds.row(i);
-                        nnz += row.len();
-                        // One-pass k-lane engine, one buffer per worker:
-                        // zero allocations per row after the first fill.
-                        hasher.signature_batch_into(row, &mut sig_buf);
-                        shard.push_full_row(&sig_buf, ds.label(i));
-                    }
-                    if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
-                        break; // collector gone
-                    }
-                }
-            });
-        }
-        drop(out_tx);
-        collect(out_rx, n_chunks, chunk, n, k, b)
-    });
-
-    let (matrix, input_nnz) = result;
-    let wall = t0.elapsed();
-    let stats = PipelineStats {
-        docs: n,
-        wall,
-        docs_per_sec: n as f64 / wall.as_secs_f64().max(1e-9),
-        output_bytes: matrix.packed_bytes(),
-        input_nnz,
-    };
-    (matrix, stats)
+    // Place shards zero-copy as they arrive. Chunking is contiguous, so
+    // shard `seq` owns rows `[seq·chunk, seq·chunk + shard.n())` of the
+    // pre-sized output; word-aligned rows make placement two
+    // `copy_from_slice` calls (words + labels) regardless of arrival order.
+    let mut out = BbitSignatureMatrix::with_rows(k, b, n);
+    let (mut nnz_total, mut shards) = (0usize, 0usize);
+    run_pipeline(
+        n,
+        ds.dim(),
+        k,
+        b,
+        seed,
+        opt,
+        &|i, hasher, buf| {
+            let row = ds.row(i);
+            hasher.signature_batch_into(row, buf);
+            (ds.label(i), row.len())
+        },
+        |seq, m, nnz| {
+            out.copy_rows_from(&m, seq * chunk);
+            nnz_total += nnz;
+            shards += 1;
+            true
+        },
+    );
+    let stats = finish_stats(t0, n, out.packed_bytes(), out.storage_bytes(), shards, nnz_total);
+    (out, stats)
 }
 
 /// Generate + shingle + hash a synthetic corpus end-to-end (documents never
@@ -137,88 +234,163 @@ pub fn hash_corpus(
     opt: &PipelineOptions,
 ) -> (BbitSignatureMatrix, PipelineStats) {
     let t0 = Instant::now();
-    let threads = opt.threads.clamp(1, 64);
     let chunk = opt.chunk.max(1);
-    let n_chunks = n_docs.div_ceil(chunk).max(1);
     let dim = sampler.config().dim;
-
-    let (out_tx, out_rx) = sync_channel::<Shard>(opt.queue.max(1));
-    let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-
-    let result = std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let out_tx = out_tx.clone();
-            let next = next.clone();
-            scope.spawn(move || {
-                let hasher = MinwiseHasher::new(dim, k, hash_seed);
-                let mut sig_buf = Vec::new();
-                loop {
-                    let seq = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if seq >= n_chunks {
-                        break;
-                    }
-                    let lo = seq * chunk;
-                    let hi = (lo + chunk).min(n_docs);
-                    let mut shard = BbitSignatureMatrix::with_capacity(k, b, hi - lo);
-                    let mut nnz = 0usize;
-                    for doc_id in lo..hi {
-                        let (vec, label) = sampler.generate(doc_id as u64);
-                        nnz += vec.nnz();
-                        hasher.signature_batch_into(vec.indices(), &mut sig_buf);
-                        shard.push_full_row(&sig_buf, label);
-                    }
-                    if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(out_tx);
-        collect(out_rx, n_chunks, chunk, n_docs, k, b)
-    });
-
-    let (matrix, input_nnz) = result;
-    let wall = t0.elapsed();
-    let stats = PipelineStats {
-        docs: n_docs,
-        wall,
-        docs_per_sec: n_docs as f64 / wall.as_secs_f64().max(1e-9),
-        output_bytes: matrix.packed_bytes(),
-        input_nnz,
-    };
-    (matrix, stats)
+    let mut out = BbitSignatureMatrix::with_rows(k, b, n_docs);
+    let (mut nnz_total, mut shards) = (0usize, 0usize);
+    run_pipeline(
+        n_docs,
+        dim,
+        k,
+        b,
+        hash_seed,
+        opt,
+        &|doc_id, hasher, buf| {
+            let (vec, label) = sampler.generate(doc_id as u64);
+            hasher.signature_batch_into(vec.indices(), buf);
+            (label, vec.nnz())
+        },
+        |seq, m, nnz| {
+            out.copy_rows_from(&m, seq * chunk);
+            nnz_total += nnz;
+            shards += 1;
+            true
+        },
+    );
+    let stats =
+        finish_stats(t0, n_docs, out.packed_bytes(), out.storage_bytes(), shards, nnz_total);
+    (out, stats)
 }
 
-/// Place shards zero-copy as they arrive. Chunking is contiguous, so shard
-/// `seq` owns rows `[seq·chunk, seq·chunk + shard.n())` of the pre-sized
-/// output; word-aligned rows make placement two `copy_from_slice` calls
-/// (words + labels) regardless of arrival order — no reordering buffer,
-/// no unpack/re-pack, and the collector never stalls on a slow worker.
-fn collect(
-    rx: Receiver<Shard>,
-    n_chunks: usize,
-    chunk: usize,
-    n_rows: usize,
+/// The store-spill collector shared by the two `*_to_store` entry points:
+/// every arriving shard goes straight to its own file, so peak memory is
+/// the backpressure window, never the corpus.
+#[allow(clippy::too_many_arguments)]
+fn spill_pipeline<F>(
+    n: usize,
+    dim: u64,
     k: usize,
     b: u32,
-) -> (BbitSignatureMatrix, usize) {
-    let mut out = BbitSignatureMatrix::with_rows(k, b, n_rows);
+    seed: u64,
+    opt: &PipelineOptions,
+    hash_row: &F,
+    dir: &Path,
+    gzip: bool,
+) -> anyhow::Result<(StoreSummary, usize)>
+where
+    F: Fn(usize, &MinwiseHasher, &mut Vec<u64>) -> (f32, usize) + Sync,
+{
+    let mut writer = ShardWriter::create(dir, k, b, gzip)?;
     let mut nnz_total = 0usize;
-    let mut placed = 0usize;
-    for shard in rx {
-        let Shard::Rows(seq, m, nnz) = shard;
-        out.copy_rows_from(&m, seq * chunk);
+    let mut io_err: Option<std::io::Error> = None;
+    run_pipeline(n, dim, k, b, seed, opt, hash_row, |seq, m, nnz| {
         nnz_total += nnz;
-        placed += 1;
+        if io_err.is_none() {
+            if let Err(e) = writer.write_shard(seq, &m) {
+                io_err = Some(e);
+            }
+        }
+        // On the first write failure (disk full, permissions) return
+        // false: run_pipeline stops the workers from hashing the rest of
+        // the corpus and drains the in-flight window; the error surfaces
+        // below.
+        io_err.is_none()
+    });
+    if let Some(e) = io_err {
+        return Err(e.into());
     }
-    assert_eq!(placed, n_chunks, "pipeline lost shards: got {placed}/{n_chunks}");
-    (out, nnz_total)
+    let summary = writer.finish()?;
+    Ok((summary, nnz_total))
+}
+
+/// [`hash_dataset`], spilling shards to a [`crate::store`] directory
+/// instead of merging in memory. The full signature matrix is never
+/// resident.
+pub fn hash_dataset_to_store(
+    ds: &SparseBinaryDataset,
+    k: usize,
+    b: u32,
+    seed: u64,
+    opt: &PipelineOptions,
+    dir: &Path,
+    gzip: bool,
+) -> anyhow::Result<(StoreSummary, PipelineStats)> {
+    let t0 = Instant::now();
+    let n = ds.n();
+    let (summary, nnz_total) = spill_pipeline(
+        n,
+        ds.dim(),
+        k,
+        b,
+        seed,
+        opt,
+        &|i, hasher, buf| {
+            let row = ds.row(i);
+            hasher.signature_batch_into(row, buf);
+            (ds.label(i), row.len())
+        },
+        dir,
+        gzip,
+    )?;
+    let stats = finish_stats(
+        t0,
+        n,
+        summary.packed_bytes,
+        summary.stored_bytes,
+        summary.n_shards,
+        nnz_total,
+    );
+    Ok((summary, stats))
+}
+
+/// [`hash_corpus`], spilling shards to a [`crate::store`] directory: the
+/// end-to-end out-of-core preprocessing pass — documents are generated on
+/// the fly and signatures go to disk, so neither the corpus nor the full
+/// signature matrix is ever resident.
+#[allow(clippy::too_many_arguments)]
+pub fn hash_corpus_to_store(
+    sampler: &CorpusSampler,
+    n_docs: usize,
+    k: usize,
+    b: u32,
+    hash_seed: u64,
+    opt: &PipelineOptions,
+    dir: &Path,
+    gzip: bool,
+) -> anyhow::Result<(StoreSummary, PipelineStats)> {
+    let t0 = Instant::now();
+    let dim = sampler.config().dim;
+    let (summary, nnz_total) = spill_pipeline(
+        n_docs,
+        dim,
+        k,
+        b,
+        hash_seed,
+        opt,
+        &|doc_id, hasher, buf| {
+            let (vec, label) = sampler.generate(doc_id as u64);
+            hasher.signature_batch_into(vec.indices(), buf);
+            (label, vec.nnz())
+        },
+        dir,
+        gzip,
+    )?;
+    let stats = finish_stats(
+        t0,
+        n_docs,
+        summary.packed_bytes,
+        summary.stored_bytes,
+        summary.n_shards,
+        nnz_total,
+    );
+    Ok((summary, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{generate_corpus, SynthConfig};
+    use crate::store::SigShardStore;
 
     fn cfg() -> SynthConfig {
         SynthConfig {
@@ -278,6 +450,10 @@ mod tests {
         assert_eq!(stats.docs, c.n_docs);
         assert!(stats.docs_per_sec > 0.0);
         assert!(stats.input_nnz > 0);
+        // The new stats surface: aligned storage ≥ packed, shard count is
+        // the chunk count.
+        assert!(stats.storage_bytes >= stats.output_bytes);
+        assert_eq!(stats.shards, c.n_docs.div_ceil(PipelineOptions::default().chunk));
     }
 
     #[test]
@@ -329,6 +505,7 @@ mod tests {
         let (m, stats) = hash_dataset(&ds, 32, 8, 1, &PipelineOptions::default());
         let expect = (m.n() * 32 * 8).div_ceil(8);
         assert!(stats.output_bytes >= expect && stats.output_bytes <= expect + 8);
+        assert_eq!(stats.storage_bytes, m.storage_bytes());
     }
 
     #[test]
@@ -347,5 +524,63 @@ mod tests {
             },
         );
         assert_eq!(m.n(), ds.n());
+    }
+
+    #[test]
+    fn store_spill_matches_in_memory_sink() {
+        let ds = generate_corpus(&cfg());
+        let opt = PipelineOptions {
+            threads: 4,
+            chunk: 23, // ragged: 300 = 13·23 + 1
+            queue: 2,
+        };
+        let (mem, _) = hash_dataset(&ds, 16, 4, 7, &opt);
+        let dir = std::env::temp_dir()
+            .join(format!("bbml_pipe_spill_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let (summary, stats) = hash_dataset_to_store(&ds, 16, 4, 7, &opt, &dir, false).unwrap();
+        assert_eq!(summary.n_rows, ds.n());
+        assert_eq!(summary.n_shards, ds.n().div_ceil(23));
+        assert_eq!(stats.shards, summary.n_shards);
+        assert_eq!(stats.output_bytes, mem.packed_bytes());
+        assert!(stats.storage_bytes > stats.output_bytes, "headers add bytes");
+        let store = SigShardStore::open(&dir).unwrap();
+        let mut back = crate::hashing::bbit::BbitSignatureMatrix::new(16, 4);
+        for s in 0..store.n_shards() {
+            back.append(&store.read_shard(s).unwrap());
+        }
+        assert_eq!(back.n(), mem.n());
+        assert_eq!(back.words(), mem.words(), "spilled store must be bit-identical");
+        assert_eq!(back.labels(), mem.labels());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_spill_write_failure_aborts_without_hanging() {
+        // Poison the path of shard 1 with a *directory*: File::create
+        // fails there, the sink reports it, and the pipeline must abort
+        // promptly (workers stop claiming chunks) and surface the error —
+        // not deadlock, not hash the whole corpus, not panic on the
+        // placed-shards invariant.
+        let ds = generate_corpus(&cfg());
+        let dir = std::env::temp_dir()
+            .join(format!("bbml_pipe_spill_err_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("shard-00001.bbs")).unwrap();
+        let res = hash_dataset_to_store(
+            &ds,
+            8,
+            2,
+            1,
+            &PipelineOptions {
+                threads: 4,
+                chunk: 50, // 6 shards; seq 1 is poisoned
+                queue: 2,
+            },
+            &dir,
+            false,
+        );
+        assert!(res.is_err(), "write failure must surface as an error");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,8 +1,11 @@
-//! Result emission: CSV files under `results/` plus aligned console tables.
+//! Result emission: CSV files under `results/` plus aligned console tables
+//! and the machine-readable JSON run reports (hand-rolled; serde is
+//! unavailable offline).
 
 use std::io::Write;
 use std::path::Path;
 
+use super::pipeline::PipelineStats;
 use super::sweep::{AggRecord, SweepRecord};
 
 /// Write raw sweep records as CSV.
@@ -66,6 +69,82 @@ pub fn write_rows_csv(header: &str, rows: &[Vec<f64>], path: &Path) -> std::io::
     Ok(())
 }
 
+/// One pipeline run as table cells: throughput plus the full §9 storage
+/// story — the paper-tight packed bytes (`n·b·k/8`), the bytes actually
+/// occupied (word-aligned allocation in memory, or headers + payloads on
+/// disk for store spills), the alignment/framing overhead between the two,
+/// and the shard count that flowed through the collector.
+pub fn pipeline_stats_row(stats: &PipelineStats) -> Vec<String> {
+    let overhead = stats.storage_bytes.saturating_sub(stats.output_bytes);
+    let pct = if stats.output_bytes > 0 {
+        100.0 * overhead as f64 / stats.output_bytes as f64
+    } else {
+        0.0
+    };
+    vec![
+        stats.docs.to_string(),
+        format!("{:.0}", stats.docs_per_sec),
+        stats.input_nnz.to_string(),
+        format!("{:.3}", stats.output_bytes as f64 / 1e6),
+        format!("{:.3}", stats.storage_bytes as f64 / 1e6),
+        format!("{pct:.1}%"),
+        stats.shards.to_string(),
+    ]
+}
+
+/// Column headers matching [`pipeline_stats_row`].
+pub const PIPELINE_STATS_HEADER: [&str; 7] = [
+    "docs",
+    "docs/s",
+    "input_nnz",
+    "packed_mb",
+    "stored_mb",
+    "overhead",
+    "shards",
+];
+
+/// Print one pipeline run as an aligned console table.
+pub fn print_pipeline_stats(title: &str, stats: &PipelineStats) {
+    print_table(title, &PIPELINE_STATS_HEADER, &[pipeline_stats_row(stats)]);
+}
+
+/// Write a flat JSON object `{"key": value, ...}`. Values must already be
+/// rendered as JSON (numbers/booleans verbatim, strings pre-quoted via
+/// [`json_string`]) — the writer only does the framing.
+pub fn write_json_object(path: &Path, entries: &[(&str, String)]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    for (idx, (key, value)) in entries.iter().enumerate() {
+        let sep = if idx + 1 == entries.len() { "" } else { "," };
+        writeln!(f, "  \"{key}\": {value}{sep}")?;
+    }
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
+/// Render a JSON string literal (escapes quotes, backslashes and — per
+/// RFC 8259 — every control character below U+0020).
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Console table: aligned columns from header + stringified rows.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n=== {title} ===");
@@ -116,6 +195,55 @@ mod tests {
         assert!(text.starts_with("b,k,c,rep"));
         assert!(text.contains("8,200,1,0,0.95"));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pipeline_stats_row_surfaces_packed_stored_and_shards() {
+        let stats = PipelineStats {
+            docs: 1000,
+            wall: std::time::Duration::from_secs(2),
+            docs_per_sec: 500.0,
+            output_bytes: 200_000,  // paper-tight n·b·k/8
+            storage_bytes: 210_000, // aligned/framed
+            shards: 16,
+            input_nnz: 123_456,
+        };
+        let row = pipeline_stats_row(&stats);
+        assert_eq!(row.len(), PIPELINE_STATS_HEADER.len());
+        assert_eq!(row[0], "1000");
+        assert_eq!(row[3], "0.200"); // packed MB
+        assert_eq!(row[4], "0.210"); // stored MB
+        assert_eq!(row[5], "5.0%"); // overhead
+        assert_eq!(row[6], "16"); // shard spill count
+        print_pipeline_stats("smoke", &stats); // must not panic
+    }
+
+    #[test]
+    fn json_object_writes_parseable_fields() {
+        let path = std::env::temp_dir().join("bbml_report_json_test.json");
+        write_json_object(
+            &path,
+            &[
+                ("backend", json_string("pegasos")),
+                ("rows", "700".to_string()),
+                ("acc", "0.9525".to_string()),
+            ],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('{'));
+        assert!(text.trim_end().ends_with('}'));
+        assert!(text.contains("\"backend\": \"pegasos\","));
+        assert!(text.contains("\"acc\": 0.9525\n"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        // Control characters must be escaped, not emitted raw (RFC 8259).
+        assert_eq!(json_string("a\nb\tc"), "\"a\\nb\\tc\"");
+        assert_eq!(json_string("x\u{1}y"), "\"x\\u0001y\"");
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Out-of-core training over an on-disk signature shard store — the
+//! paper's "data do not fit in memory" regime (Li & Shrivastava,
+//! arXiv:1108.3072: Pegasos/logreg SGD epochs over batches read from disk).
+//!
+//! [`train_stream`] runs multi-epoch SGD over a [`SigShardStore`]: each
+//! epoch re-reads the shards through the prefetching [`ShardStream`] (at
+//! most `prefetch · chunk` rows resident, prefetch clamped to ≥ 3 — the
+//! full matrix never is) and visits rows shard by shard. Epoch order is either sequential
+//! (shard 0, 1, …, i.e. corpus row order) or a **seeded permutation of
+//! shard indices** re-drawn every epoch (`shuffle: true`, the default) —
+//! the out-of-core stand-in for per-example shuffling, exactly as the
+//! 200 GB follow-up trains from disk.
+//!
+//! # Bit-identity contract
+//!
+//! With `shuffle: false` the visit order is corpus row order, and
+//! [`train_epochs_in_memory`] — the same [`SgdCore`] driven over an
+//! in-memory matrix, which it treats as a single resident shard — performs
+//! the *identical* sequence of floating-point operations. Streaming from
+//! disk is therefore **bit-identical** to in-memory training on the same
+//! seed (asserted in `tests/integration_store.rs`), which is what makes the
+//! store trustworthy: spilling is a memory decision, never a model change.
+//!
+//! The SGD itself is the cyclic-epoch variant of the Pegasos update (step
+//! `η_t = 1/(λt)`, λ = 1/(C·n), lazy scaling, optional suffix averaging —
+//! the same machinery as [`crate::solvers::sgd`], which samples rows
+//! randomly instead and is *not* expected to match bit-for-bit), with the
+//! hinge subgradient swapped for the logistic gradient when
+//! [`StreamAlgo::LogRegSgd`] is selected.
+
+use std::io;
+use std::time::{Duration, Instant};
+
+use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::rng::Xoshiro256;
+use crate::solvers::{BinaryFeatures, ExpandedView, LinearModel};
+use crate::store::SigShardStore;
+
+/// Which streaming update to run per visited row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamAlgo {
+    /// Pegasos hinge-loss SVM (cyclic epochs).
+    Pegasos,
+    /// Primal logistic regression by SGD on the same η_t = 1/(λt) schedule.
+    LogRegSgd,
+}
+
+impl StreamAlgo {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pegasos" | "sgd" | "svm" => Some(Self::Pegasos),
+            "logreg" | "logreg_sgd" => Some(Self::LogRegSgd),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pegasos => "pegasos",
+            Self::LogRegSgd => "logreg_sgd",
+        }
+    }
+}
+
+/// Out-of-core training options.
+#[derive(Clone, Debug)]
+pub struct StreamTrainOptions {
+    pub algo: StreamAlgo,
+    /// The paper's C; λ = 1/(C·n).
+    pub c: f64,
+    /// Full passes over the store.
+    pub epochs: usize,
+    pub seed: u64,
+    /// Re-draw a seeded permutation of shard indices every epoch. Off ⇒
+    /// corpus row order ⇒ bit-identical to [`train_epochs_in_memory`].
+    pub shuffle: bool,
+    /// Reader residency budget in shards ([`SigShardStore::stream`]'s
+    /// `queue`): at most `max(prefetch, 3) · chunk` rows decoded at once.
+    pub prefetch: usize,
+    /// Average the trailing half of iterates (suffix averaging).
+    pub average: bool,
+}
+
+impl Default for StreamTrainOptions {
+    fn default() -> Self {
+        Self {
+            algo: StreamAlgo::Pegasos,
+            c: 1.0,
+            epochs: 5,
+            seed: 1,
+            shuffle: true,
+            prefetch: 4,
+            average: true,
+        }
+    }
+}
+
+/// Everything one out-of-core run reports.
+#[derive(Clone, Debug)]
+pub struct StreamTrainReport {
+    pub model: LinearModel,
+    /// Rows visited across all training epochs.
+    pub rows_seen: usize,
+    pub shards: usize,
+    pub epochs: usize,
+    pub train_time: Duration,
+    /// High-water mark of decoded rows resident in the reader at once —
+    /// the out-of-core claim, measurable (bounded by
+    /// `max(prefetch, 3) · chunk`, asserted in tests).
+    pub peak_resident_rows: usize,
+}
+
+/// The epoch-SGD state machine shared verbatim by the disk and in-memory
+/// drivers (bit-identity depends on there being exactly one `step`).
+struct SgdCore {
+    algo: StreamAlgo,
+    lambda: f64,
+    w: Vec<f32>,
+    /// Lazy scaling: actual weights are `w · w_scale`.
+    w_scale: f64,
+    t: usize,
+    total_steps: usize,
+    avg: Option<Vec<f64>>,
+    avg_count: usize,
+}
+
+impl SgdCore {
+    fn new(algo: StreamAlgo, dim: usize, lambda: f64, total_steps: usize, average: bool) -> Self {
+        Self {
+            algo,
+            lambda,
+            w: vec![0.0f32; dim],
+            w_scale: 1.0,
+            t: 0,
+            total_steps,
+            avg: if average { Some(vec![0.0f64; dim]) } else { None },
+            avg_count: 0,
+        }
+    }
+
+    /// One SGD step on row `i` of `feats` (mirrors
+    /// `crate::solvers::sgd::train_pegasos`'s inner loop, minus the random
+    /// row sampling and the ball projection — and with it the incremental
+    /// ‖w‖² bookkeeping, so each update is one dot + one axpy pass).
+    fn step<Ft: BinaryFeatures>(&mut self, feats: &Ft, i: usize) {
+        self.t += 1;
+        let eta = 1.0 / (self.lambda * self.t as f64);
+        let y = feats.label(i) as f64;
+        let margin = y * feats.dot(i, &self.w) * self.w_scale;
+
+        // w ← (1 − η λ) w  [+ s·x_i];  shrink = 1 − 1/t zeroes w at t = 1.
+        let shrink = 1.0 - eta * self.lambda;
+        if shrink <= 0.0 {
+            self.w.iter_mut().for_each(|x| *x = 0.0);
+            self.w_scale = 1.0;
+        } else {
+            self.w_scale *= shrink;
+        }
+        let s = match self.algo {
+            StreamAlgo::Pegasos => {
+                if margin < 1.0 {
+                    eta * y
+                } else {
+                    0.0
+                }
+            }
+            // η·y·σ(−margin); exp overflow saturates s to 0, which is the
+            // correct limit for confidently-classified rows.
+            StreamAlgo::LogRegSgd => eta * y / (1.0 + margin.exp()),
+        };
+        if s != 0.0 {
+            feats.axpy(i, s / self.w_scale, &mut self.w);
+        }
+        // Re-materialize the lazy scale before f32 head-room runs out.
+        if self.w_scale < 1e-4 {
+            for x in self.w.iter_mut() {
+                *x = (*x as f64 * self.w_scale) as f32;
+            }
+            self.w_scale = 1.0;
+        }
+        // Suffix averaging over the second half of all steps.
+        if let Some(a) = self.avg.as_mut() {
+            if self.t > self.total_steps / 2 {
+                for (aj, &wj) in a.iter_mut().zip(&self.w) {
+                    *aj += wj as f64 * self.w_scale;
+                }
+                self.avg_count += 1;
+            }
+        }
+    }
+
+    /// Final dense weights (averaged iterate when enabled).
+    fn into_weights(self) -> Vec<f32> {
+        match self.avg {
+            Some(a) if self.avg_count > 0 => {
+                a.iter().map(|&x| (x / self.avg_count as f64) as f32).collect()
+            }
+            _ => self.w.iter().map(|&x| (x as f64 * self.w_scale) as f32).collect(),
+        }
+    }
+}
+
+/// Per-row loss term of the streamed objective (hinge or stable log-loss).
+fn row_loss<Ft: BinaryFeatures>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
+    let m = feats.label(i) as f64 * feats.dot(i, w);
+    match algo {
+        StreamAlgo::Pegasos => (1.0 - m).max(0.0),
+        StreamAlgo::LogRegSgd => {
+            if m > 0.0 {
+                (-m).exp().ln_1p()
+            } else {
+                -m + m.exp().ln_1p()
+            }
+        }
+    }
+}
+
+/// `λ/2·‖w‖² + loss_sum/n` — the streamed objective assembled from one
+/// extra data pass.
+fn objective(algo_independent_reg: f64, loss_sum: f64, n: usize) -> f64 {
+    algo_independent_reg + loss_sum / n as f64
+}
+
+fn reg_term(lambda: f64, w: &[f32]) -> f64 {
+    0.5 * lambda * w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+}
+
+/// Per-epoch shard visit order: `0..n_shards`, permuted through the shared
+/// seeded RNG when shuffling. A single-shard store (and the in-memory
+/// driver, which models the matrix as one shard) is a fixed point of every
+/// permutation, so the two paths stay aligned for any `shuffle`.
+fn epoch_order(n_shards: usize, shuffle: bool, rng: &mut Xoshiro256) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n_shards).collect();
+    if shuffle {
+        rng.shuffle(&mut order);
+    }
+    order
+}
+
+/// Train a linear model over the store without ever materializing the full
+/// signature matrix (multi-epoch via re-read; see module docs).
+pub fn train_stream(
+    store: &SigShardStore,
+    opt: &StreamTrainOptions,
+) -> io::Result<StreamTrainReport> {
+    let t0 = Instant::now();
+    let n = store.n_rows();
+    if n == 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("store at {} is empty", store.dir().display()),
+        ));
+    }
+    let dim = store.expanded_dim();
+    let lambda = 1.0 / (opt.c * n as f64);
+    let total_steps = opt.epochs * n;
+    let mut core = SgdCore::new(opt.algo, dim, lambda, total_steps, opt.average);
+    let mut order_rng = Xoshiro256::seed_from_u64(opt.seed ^ 0x0DD_BA11);
+    let mut peak_rows = 0usize;
+    let mut rows_seen = 0usize;
+
+    for _epoch in 0..opt.epochs {
+        let order = epoch_order(store.n_shards(), opt.shuffle, &mut order_rng);
+        let mut stream = store.stream(&order, opt.prefetch);
+        for item in &mut stream {
+            let shard = item?;
+            let view = ExpandedView::new(&shard);
+            for i in 0..shard.n() {
+                core.step(&view, i);
+            }
+            rows_seen += shard.n();
+        }
+        peak_rows = peak_rows.max(stream.peak_resident_rows());
+    }
+
+    let w = core.into_weights();
+    // Objective pass: one more sequential read (corpus row order, matching
+    // the in-memory driver's accumulation order exactly).
+    let mut loss_sum = 0.0f64;
+    let mut stream = store.stream(&store.seq_order(), opt.prefetch);
+    for item in &mut stream {
+        let shard = item?;
+        let view = ExpandedView::new(&shard);
+        for i in 0..shard.n() {
+            loss_sum += row_loss(opt.algo, &view, i, &w);
+        }
+    }
+    peak_rows = peak_rows.max(stream.peak_resident_rows());
+    let obj = objective(reg_term(lambda, &w), loss_sum, n);
+
+    Ok(StreamTrainReport {
+        model: LinearModel {
+            w,
+            iters: total_steps,
+            objective: obj,
+        },
+        rows_seen,
+        shards: store.n_shards(),
+        epochs: opt.epochs,
+        train_time: t0.elapsed(),
+        peak_resident_rows: peak_rows,
+    })
+}
+
+/// The in-memory twin of [`train_stream`]: the same [`SgdCore`] driven
+/// over a resident matrix, treated as a single shard. With
+/// `shuffle: false` (or a single-shard store) this performs the identical
+/// floating-point operation sequence as the disk path — the bit-identity
+/// oracle for the out-of-core tests.
+pub fn train_epochs_in_memory(
+    sigs: &BbitSignatureMatrix,
+    opt: &StreamTrainOptions,
+) -> LinearModel {
+    let n = sigs.n();
+    assert!(n > 0, "empty training set");
+    let view = ExpandedView::new(sigs);
+    let dim = sigs.k() << sigs.b();
+    let lambda = 1.0 / (opt.c * n as f64);
+    let total_steps = opt.epochs * n;
+    let mut core = SgdCore::new(opt.algo, dim, lambda, total_steps, opt.average);
+    let mut order_rng = Xoshiro256::seed_from_u64(opt.seed ^ 0x0DD_BA11);
+    for _epoch in 0..opt.epochs {
+        // One shard: the permutation is the identity, but consume the RNG
+        // exactly like the disk driver would.
+        let order = epoch_order(1, opt.shuffle, &mut order_rng);
+        debug_assert_eq!(order, [0]);
+        for i in 0..n {
+            core.step(&view, i);
+        }
+    }
+    let w = core.into_weights();
+    let mut loss_sum = 0.0f64;
+    for i in 0..n {
+        loss_sum += row_loss(opt.algo, &view, i, &w);
+    }
+    let obj = objective(reg_term(lambda, &w), loss_sum, n);
+    LinearModel {
+        w,
+        iters: total_steps,
+        objective: obj,
+    }
+}
+
+/// Streamed accuracy of a model over every row of the store (one pass,
+/// bounded memory). Returns `(accuracy, rows_scored)`.
+pub fn evaluate_stream(
+    model: &LinearModel,
+    store: &SigShardStore,
+    prefetch: usize,
+) -> io::Result<(f64, usize)> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for item in store.stream(&store.seq_order(), prefetch) {
+        let shard = item?;
+        let view = ExpandedView::new(&shard);
+        for i in 0..shard.n() {
+            if model.predict(&view, i) == view.label(i) {
+                correct += 1;
+            }
+        }
+        total += shard.n();
+    }
+    Ok((
+        if total == 0 { 0.0 } else { correct as f64 / total as f64 },
+        total,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parse_and_names() {
+        assert_eq!(StreamAlgo::parse("pegasos"), Some(StreamAlgo::Pegasos));
+        assert_eq!(StreamAlgo::parse("svm"), Some(StreamAlgo::Pegasos));
+        assert_eq!(StreamAlgo::parse("logreg"), Some(StreamAlgo::LogRegSgd));
+        assert_eq!(StreamAlgo::parse("nope"), None);
+        assert_eq!(StreamAlgo::Pegasos.name(), "pegasos");
+        assert_eq!(StreamAlgo::LogRegSgd.name(), "logreg_sgd");
+    }
+
+    #[test]
+    fn epoch_order_is_identity_without_shuffle_and_permutes_with() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        assert_eq!(epoch_order(5, false, &mut rng), vec![0, 1, 2, 3, 4]);
+        let shuffled = epoch_order(50, true, &mut rng);
+        let mut sorted = shuffled.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(shuffled, (0..50).collect::<Vec<_>>());
+        // Single shard: shuffling is the identity AND consumes no RNG
+        // draws (Fisher–Yates over len 1 makes no swaps) — the invariant
+        // the in-memory driver leans on.
+        let mut a = Xoshiro256::seed_from_u64(7);
+        let mut b = Xoshiro256::seed_from_u64(7);
+        assert_eq!(epoch_order(1, true, &mut a), vec![0]);
+        epoch_order(1, false, &mut b);
+        assert_eq!(a.next_u64(), b.next_u64(), "rng state must stay in sync");
+    }
+
+    #[test]
+    fn in_memory_epochs_learn_separable_data() {
+        use crate::coordinator::pipeline::{hash_dataset, PipelineOptions};
+        use crate::data::synth::{generate_corpus, SynthConfig};
+        let cfg = SynthConfig {
+            n_docs: 300,
+            dim: 1 << 20,
+            vocab: 5_000,
+            topic_size: 100,
+            mean_len: 60,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (sigs, _) = hash_dataset(&ds, 64, 8, 11, &PipelineOptions::default());
+        for algo in [StreamAlgo::Pegasos, StreamAlgo::LogRegSgd] {
+            let model = train_epochs_in_memory(
+                &sigs,
+                &StreamTrainOptions {
+                    algo,
+                    epochs: 100,
+                    shuffle: false,
+                    ..Default::default()
+                },
+            );
+            let view = ExpandedView::new(&sigs);
+            let acc = model.accuracy(&view);
+            assert!(acc > 0.8, "{algo:?}: train acc {acc}");
+            assert!(model.w.iter().all(|x| x.is_finite()));
+            assert!(model.objective.is_finite());
+        }
+    }
+}

@@ -155,6 +155,36 @@ impl BbitSignatureMatrix {
         m
     }
 
+    /// Reassemble a matrix from its aligned word store and label block —
+    /// the shard-store deserialization path ([`crate::store`]). `words`
+    /// must be exactly `labels.len() · stride_words` words laid out as
+    /// [`Self::words`] describes (pad bits zero; the store's CRC guards
+    /// corruption, this constructor only checks the shape).
+    pub fn from_raw_parts(k: usize, b: u32, words: Vec<u64>, labels: Vec<f32>) -> Self {
+        let mut m = Self::new(k, b);
+        let n = labels.len();
+        assert_eq!(
+            words.len(),
+            n * m.stride,
+            "word store is {} words, want {} ({} rows × stride {})",
+            words.len(),
+            n * m.stride,
+            n,
+            m.stride
+        );
+        m.words = words;
+        m.labels = labels;
+        m.n = n;
+        m
+    }
+
+    /// The whole aligned word store, rows concatenated (`n · stride_words`
+    /// words) — what the shard store serializes verbatim.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n
@@ -693,6 +723,39 @@ mod tests {
             assert_eq!(got.label(i), want.label(i));
             assert_eq!(got.row_words(i), want.row_words(i), "words row {i}");
         }
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_is_bit_identical() {
+        for b in [1u32, 3, 8, 16] {
+            let k = 9;
+            let mask = (1u32 << b) - 1;
+            let mut rng = Xoshiro256::seed_from_u64(b as u64 + 77);
+            let mut m = BbitSignatureMatrix::new(k, b);
+            for i in 0..11 {
+                let row: Vec<u16> =
+                    (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+                m.push_row(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+            }
+            let back = BbitSignatureMatrix::from_raw_parts(
+                k,
+                b,
+                m.words().to_vec(),
+                m.labels().to_vec(),
+            );
+            assert_eq!(back.n(), m.n());
+            assert_eq!(back.words(), m.words(), "b={b}");
+            assert_eq!(back.labels(), m.labels());
+            for i in 0..m.n() {
+                assert_eq!(back.row(i), m.row(i), "b={b} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "word store")]
+    fn raw_parts_rejects_wrong_word_count() {
+        BbitSignatureMatrix::from_raw_parts(4, 4, vec![0u64; 3], vec![0.0f32; 2]);
     }
 
     #[test]

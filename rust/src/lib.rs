@@ -17,7 +17,12 @@
 //!   and logistic regression, Pegasos SGD, and an SMO kernel SVM with the
 //!   resemblance kernel (paper §5.1).
 //! * [`coordinator`] — the L3 system: a sharded streaming hashing pipeline
-//!   with backpressure, a trainer/sweep orchestrator and a config system.
+//!   with backpressure, a trainer/sweep orchestrator, an out-of-core
+//!   stream trainer over the shard store, and a config system.
+//! * [`store`] — the on-disk signature shard store: a versioned binary
+//!   shard format (optionally gzip), a pipeline spill writer and a
+//!   prefetching bounded-memory shard stream — the paper's "data do not
+//!   fit in memory" regime (arXiv:1108.3072).
 //! * [`runtime`] — the PJRT bridge: loads the AOT HLO-text artifacts
 //!   lowered from JAX/Pallas (see `python/compile/`) and executes them on
 //!   the CPU PJRT client from the rust hot path.
@@ -39,6 +44,7 @@ pub mod proptest_mini;
 pub mod rng;
 pub mod runtime;
 pub mod solvers;
+pub mod store;
 pub mod theory;
 
 /// Library version (mirrors Cargo.toml).

@@ -142,9 +142,17 @@ impl Default for KernelSvmOptions {
     }
 }
 
-/// LRU-ish kernel row cache (random eviction — cheap and effective here).
+/// Kernel row cache with **true LRU eviction**: every access stamps its
+/// entry with a monotone tick, and eviction removes the entry with the
+/// smallest stamp (an O(len) argmin scan — the cap is a few hundred rows
+/// and every miss already pays a full Gram-row fill, so the scan is
+/// noise). The old arbitrary HashMap-order eviction could throw out the
+/// hottest row; SMO's working set (the top KKT violators) re-touches the
+/// same rows for long stretches, which is exactly the access pattern LRU
+/// keeps. Adaptive prefetch block sizing remains a ROADMAP open item.
 struct RowCache {
-    rows: HashMap<usize, Vec<f64>>,
+    /// row index → (last-access tick, Gram row).
+    rows: HashMap<usize, (u64, Vec<f64>)>,
     cap: usize,
     tick: u64,
 }
@@ -153,25 +161,45 @@ impl RowCache {
     fn new(cap: usize) -> Self {
         Self {
             rows: HashMap::with_capacity(cap),
-            cap,
+            cap: cap.max(1),
             tick: 0,
         }
     }
 
+    /// Next access stamp (monotone; u64 cannot realistically wrap).
+    #[inline]
+    fn stamp(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Evict the least-recently-used entry, never one of `keep` (a
+    /// prefetch batch about to be read).
+    fn evict_lru(&mut self, keep: &[usize]) {
+        let victim = self
+            .rows
+            .iter()
+            .filter(|(i, _)| !keep.contains(*i))
+            .min_by_key(|(_, entry)| entry.0)
+            .map(|(&i, _)| i);
+        if let Some(v) = victim {
+            self.rows.remove(&v);
+        }
+    }
+
     fn get<K: Kernel>(&mut self, k: &K, i: usize) -> &Vec<f64> {
-        self.tick = self.tick.wrapping_add(0x9E37_79B9);
-        if !self.rows.contains_key(&i) {
+        let stamp = self.stamp();
+        if let Some(entry) = self.rows.get_mut(&i) {
+            entry.0 = stamp; // refresh recency on hit
+        } else {
             if self.rows.len() >= self.cap {
-                // Evict an arbitrary entry (HashMap iteration order).
-                if let Some(&victim) = self.rows.keys().next() {
-                    self.rows.remove(&victim);
-                }
+                self.evict_lru(&[]);
             }
             let mut row = Vec::new();
             k.fill_row(i, &mut row);
-            self.rows.insert(i, row);
+            self.rows.insert(i, (stamp, row));
         }
-        &self.rows[&i]
+        &self.rows[&i].1
     }
 
     #[inline]
@@ -181,30 +209,31 @@ impl RowCache {
 
     /// Multi-row prefetch: fill every uncached row of `idxs` with ONE
     /// batched kernel call ([`Kernel::fill_rows`] — for [`BbitKernel`] a
-    /// parallel SWAR tile) and insert them, evicting non-prefetched
-    /// entries as needed. `scratch` is drained into the cache, so its row
-    /// allocations are handed over rather than copied.
+    /// parallel SWAR tile) and insert them, evicting LRU entries outside
+    /// the *whole* batch as needed — already-cached batch rows get their
+    /// stamps refreshed first, so no row about to be read can become the
+    /// victim. `scratch` is drained into the cache, so its row allocations
+    /// are handed over rather than copied.
     fn prefetch<K: Kernel>(&mut self, k: &K, idxs: &[usize], scratch: &mut Vec<Vec<f64>>) {
-        let missing: Vec<usize> = idxs
-            .iter()
-            .copied()
-            .filter(|i| !self.rows.contains_key(i))
-            .collect();
+        let mut missing = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            let stamp = self.stamp();
+            if let Some(entry) = self.rows.get_mut(&i) {
+                entry.0 = stamp; // batch rows are hot: refresh recency
+            } else {
+                missing.push(i);
+            }
+        }
         if missing.is_empty() {
             return;
         }
         k.fill_rows(&missing, scratch);
         for (&i, row) in missing.iter().zip(scratch.drain(..)) {
             if self.rows.len() >= self.cap {
-                // Never evict a row from this prefetch batch (it is about
-                // to be read); missing is tiny, so the scan is cheap.
-                if let Some(&victim) =
-                    self.rows.keys().find(|&&v| !missing.contains(&v))
-                {
-                    self.rows.remove(&victim);
-                }
+                self.evict_lru(idxs);
             }
-            self.rows.insert(i, row);
+            let stamp = self.stamp();
+            self.rows.insert(i, (stamp, row));
         }
     }
 }
@@ -538,6 +567,81 @@ mod tests {
             let a = coef * kernel.label(i) as f64; // recover α_i ≥ 0
             assert!(a >= -1e-12 && a <= c + 1e-12, "α_{i} = {a}");
         }
+    }
+
+    /// Trivial kernel that counts row fills — exercises the cache policy
+    /// in isolation.
+    struct FillCountingKernel {
+        n: usize,
+        fills: std::sync::Mutex<Vec<usize>>,
+    }
+
+    impl Kernel for FillCountingKernel {
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn label(&self, _i: usize) -> f32 {
+            1.0
+        }
+        fn eval(&self, i: usize, j: usize) -> f64 {
+            (i * self.n + j) as f64
+        }
+        fn fill_row(&self, i: usize, out: &mut Vec<f64>) {
+            self.fills.lock().unwrap().push(i);
+            out.clear();
+            for j in 0..self.n {
+                out.push(self.eval(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn row_cache_evicts_least_recently_used() {
+        let k = FillCountingKernel {
+            n: 8,
+            fills: std::sync::Mutex::new(Vec::new()),
+        };
+        let mut cache = RowCache::new(2);
+        cache.get(&k, 0); // cache: {0}
+        cache.get(&k, 1); // cache: {0, 1}
+        cache.get(&k, 0); // refresh 0 — now 1 is the LRU
+        cache.get(&k, 2); // evicts 1, NOT 0
+        assert!(cache.contains(0), "recently-touched row must survive");
+        assert!(!cache.contains(1), "LRU row must be the victim");
+        assert!(cache.contains(2));
+        // A hit refreshes without refilling.
+        let row0 = cache.get(&k, 0).clone();
+        assert_eq!(row0[3], k.eval(0, 3));
+        assert_eq!(*k.fills.lock().unwrap(), vec![0, 1, 2], "exactly one fill per miss");
+    }
+
+    #[test]
+    fn row_cache_prefetch_never_evicts_its_own_batch() {
+        let k = FillCountingKernel {
+            n: 6,
+            fills: std::sync::Mutex::new(Vec::new()),
+        };
+        let mut cache = RowCache::new(3);
+        cache.get(&k, 1); // oldest stamp, but part of the upcoming batch
+        cache.get(&k, 0); // fresher stamp, NOT in the batch
+        let mut scratch = Vec::new();
+        // Batch [1, 2, 3]: 1 is already cached (stamp refreshed, fill
+        // skipped), 2 and 3 are fetched; inserting 3 overflows the cap.
+        // Under unshielded LRU the victim would be 1 (the globally oldest
+        // entry) — the shield + refresh make it 0 instead.
+        cache.prefetch(&k, &[1, 2, 3], &mut scratch);
+        assert!(!cache.contains(0), "non-batch LRU row is the victim");
+        assert!(cache.contains(1), "cached batch row must not be evicted");
+        assert!(cache.contains(2) && cache.contains(3), "prefetched rows resident");
+        assert_eq!(
+            *k.fills.lock().unwrap(),
+            vec![1, 0, 2, 3],
+            "cached batch rows are not refilled"
+        );
+        // Prefetching fully-cached batches is a no-op (no refill).
+        let fills_before = k.fills.lock().unwrap().len();
+        cache.prefetch(&k, &[2, 3], &mut scratch);
+        assert_eq!(k.fills.lock().unwrap().len(), fills_before);
     }
 
     #[test]

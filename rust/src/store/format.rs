@@ -1,0 +1,376 @@
+//! The versioned binary shard format (see the module docs in
+//! [`crate::store`] for the byte-by-byte layout).
+//!
+//! One shard file = one fixed 64-byte header + one payload. The payload is
+//! the shard's aligned word store followed by its label block, optionally
+//! wrapped in a single gzip member (the vendored `flate2`). The header
+//! carries a CRC-32 of the *uncompressed* payload, so corruption is caught
+//! on read for both the raw and the gzip path (gzip's own trailer CRC is
+//! additionally checked by the decoder).
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use crate::hashing::bbit::BbitSignatureMatrix;
+
+/// File magic: identifies a b-bit signature shard.
+pub const MAGIC: [u8; 8] = *b"BBSHARD\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 64;
+/// Flags bit 0: payload is one gzip member.
+pub const FLAG_GZIP: u32 = 1;
+
+/// Per-byte CRC-32 lookup table (reflected, poly 0xEDB88320), built at
+/// compile time.
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ 0xEDB8_8320 } else { c >> 1 };
+            bit += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC-32 (reflected, poly 0xEDB88320) over the uncompressed payload —
+/// same polynomial as the gzip trailer, table-driven (one lookup per byte)
+/// because every shard read of every training epoch re-verifies it.
+/// Computed here because the vendored flate2 keeps its implementation
+/// private.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &byte in data {
+        c = (c >> 8) ^ CRC_TABLE[((c ^ byte as u32) & 0xFF) as usize];
+    }
+    !c
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("shard: {msg}"))
+}
+
+/// Decoded fixed header of one shard file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub version: u32,
+    pub flags: u32,
+    /// Signature width (permutations per row).
+    pub k: usize,
+    /// Bits kept per value.
+    pub b: u32,
+    /// Words per row of the aligned payload (= ceil(k·b/64)).
+    pub stride_words: usize,
+    /// Rows in this shard.
+    pub n_rows: usize,
+    /// Byte length of the payload *as stored* (after optional gzip).
+    pub payload_len: usize,
+    /// CRC-32 of the uncompressed payload.
+    pub payload_crc32: u32,
+}
+
+impl ShardHeader {
+    /// Whether the payload is gzip-wrapped.
+    pub fn gzip(&self) -> bool {
+        self.flags & FLAG_GZIP != 0
+    }
+
+    /// Serialize to the fixed 64-byte layout (reserved bytes zero).
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[0..8].copy_from_slice(&MAGIC);
+        out[8..12].copy_from_slice(&self.version.to_le_bytes());
+        out[12..16].copy_from_slice(&self.flags.to_le_bytes());
+        out[16..24].copy_from_slice(&(self.k as u64).to_le_bytes());
+        out[24..28].copy_from_slice(&self.b.to_le_bytes());
+        out[28..32].copy_from_slice(&(self.stride_words as u32).to_le_bytes());
+        out[32..40].copy_from_slice(&(self.n_rows as u64).to_le_bytes());
+        out[40..48].copy_from_slice(&(self.payload_len as u64).to_le_bytes());
+        out[48..52].copy_from_slice(&self.payload_crc32.to_le_bytes());
+        // bytes 52..64 reserved (zero)
+        out
+    }
+
+    /// Parse and validate the fixed header.
+    pub fn decode(buf: &[u8]) -> io::Result<Self> {
+        if buf.len() < HEADER_LEN {
+            return Err(bad(format!(
+                "truncated header: {} bytes, want {HEADER_LEN}",
+                buf.len()
+            )));
+        }
+        if buf[0..8] != MAGIC {
+            return Err(bad("bad magic (not a BBSHARD file)".into()));
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+        let version = u32_at(8);
+        if version != VERSION {
+            return Err(bad(format!("unsupported version {version} (want {VERSION})")));
+        }
+        let hdr = ShardHeader {
+            version,
+            flags: u32_at(12),
+            k: u64_at(16) as usize,
+            b: u32_at(24),
+            stride_words: u32_at(28) as usize,
+            n_rows: u64_at(32) as usize,
+            payload_len: u64_at(40) as usize,
+            payload_crc32: u32_at(48),
+        };
+        if hdr.k == 0 || !(1..=16).contains(&hdr.b) {
+            return Err(bad(format!("invalid shape k={} b={}", hdr.k, hdr.b)));
+        }
+        let want_stride = (hdr.k * hdr.b as usize).div_ceil(64);
+        if hdr.stride_words != want_stride {
+            return Err(bad(format!(
+                "stride_words {} inconsistent with k={} b={} (want {want_stride})",
+                hdr.stride_words, hdr.k, hdr.b
+            )));
+        }
+        Ok(hdr)
+    }
+}
+
+/// Uncompressed payload of a shard: rows' words (LE u64) then labels
+/// (LE f32 bit patterns), in row order.
+fn encode_payload(m: &BbitSignatureMatrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(m.words().len() * 8 + m.labels().len() * 4);
+    for &w in m.words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for &l in m.labels() {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_payload`] for a validated header. All size
+/// arithmetic is checked: a corrupt `n_rows` must surface as
+/// `InvalidData`, never as an arithmetic panic.
+fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<BbitSignatureMatrix> {
+    let (n_words, want) = hdr
+        .n_rows
+        .checked_mul(hdr.stride_words)
+        .and_then(|nw| {
+            let bytes = nw.checked_mul(8)?.checked_add(hdr.n_rows.checked_mul(4)?)?;
+            Some((nw, bytes))
+        })
+        .ok_or_else(|| {
+            bad(format!(
+                "implausible shard shape: {} rows × stride {} overflows",
+                hdr.n_rows, hdr.stride_words
+            ))
+        })?;
+    if raw.len() != want {
+        return Err(bad(format!(
+            "payload is {} bytes, want {want} ({} rows × stride {})",
+            raw.len(),
+            hdr.n_rows,
+            hdr.stride_words
+        )));
+    }
+    let (word_bytes, label_bytes) = raw.split_at(n_words * 8);
+    let words: Vec<u64> = word_bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let labels: Vec<f32> = label_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(BbitSignatureMatrix::from_raw_parts(hdr.k, hdr.b, words, labels))
+}
+
+/// Write one shard file (header + optionally gzip-wrapped payload).
+/// Returns the total bytes written.
+pub fn write_shard_file(
+    path: &Path,
+    m: &BbitSignatureMatrix,
+    gzip: bool,
+) -> io::Result<usize> {
+    let raw = encode_payload(m);
+    let crc = crc32(&raw);
+    let stored = if gzip {
+        let mut enc =
+            flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::fast());
+        enc.write_all(&raw)?;
+        enc.finish()?
+    } else {
+        raw
+    };
+    let hdr = ShardHeader {
+        version: VERSION,
+        flags: if gzip { FLAG_GZIP } else { 0 },
+        k: m.k(),
+        b: m.b(),
+        stride_words: m.stride_words(),
+        n_rows: m.n(),
+        payload_len: stored.len(),
+        payload_crc32: crc,
+    };
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&hdr.encode())?;
+    f.write_all(&stored)?;
+    f.flush()?;
+    Ok(HEADER_LEN + stored.len())
+}
+
+/// Read one shard file back, verifying header shape, payload length and
+/// the payload CRC.
+pub fn read_shard_file(path: &Path) -> io::Result<(ShardHeader, BbitSignatureMatrix)> {
+    let bytes = std::fs::read(path)?;
+    let hdr = ShardHeader::decode(&bytes)?;
+    let stored = &bytes[HEADER_LEN..];
+    if stored.len() != hdr.payload_len {
+        return Err(bad(format!(
+            "{}: stored payload is {} bytes, header says {}",
+            path.display(),
+            stored.len(),
+            hdr.payload_len
+        )));
+    }
+    // Raw payloads are verified and decoded in place (no copy); only the
+    // gzip path materializes an uncompressed buffer.
+    let raw: std::borrow::Cow<[u8]> = if hdr.gzip() {
+        let mut dec = flate2::read::GzDecoder::new(stored);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out)?;
+        std::borrow::Cow::Owned(out)
+    } else {
+        std::borrow::Cow::Borrowed(stored)
+    };
+    if crc32(&raw) != hdr.payload_crc32 {
+        return Err(bad(format!("{}: payload CRC mismatch", path.display())));
+    }
+    let m = decode_payload(&hdr, &raw)?;
+    Ok((hdr, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn sample_matrix(k: usize, b: u32, n: usize, seed: u64) -> BbitSignatureMatrix {
+        let mask = (1u32 << b) - 1;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut m = BbitSignatureMatrix::new(k, b);
+        for i in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+            m.push_row(&row, if i % 3 == 0 { 1.0 } else { -1.0 });
+        }
+        m
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bbml_fmt_{}_{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn header_encode_decode_roundtrip() {
+        let hdr = ShardHeader {
+            version: VERSION,
+            flags: FLAG_GZIP,
+            k: 200,
+            b: 8,
+            stride_words: 25,
+            n_rows: 4096,
+            payload_len: 123_456,
+            payload_crc32: 0xDEAD_BEEF,
+        };
+        let bytes = hdr.encode();
+        assert_eq!(bytes.len(), HEADER_LEN);
+        assert_eq!(ShardHeader::decode(&bytes).unwrap(), hdr);
+        assert!(ShardHeader::decode(&bytes[..HEADER_LEN]).unwrap().gzip());
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_version_and_shape() {
+        let mut ok = ShardHeader {
+            version: VERSION,
+            flags: 0,
+            k: 16,
+            b: 4,
+            stride_words: 1,
+            n_rows: 10,
+            payload_len: 120,
+            payload_crc32: 0,
+        }
+        .encode();
+        assert!(ShardHeader::decode(&ok[..HEADER_LEN - 1]).is_err()); // truncated
+        let mut bad_magic = ok;
+        bad_magic[0] = b'X';
+        assert!(ShardHeader::decode(&bad_magic).is_err());
+        let mut bad_ver = ok;
+        bad_ver[8] = 99;
+        assert!(ShardHeader::decode(&bad_ver).is_err());
+        // stride inconsistent with k·b
+        ok[28] = 7;
+        assert!(ShardHeader::decode(&ok).is_err());
+    }
+
+    #[test]
+    fn shard_file_roundtrips_raw_and_gzip() {
+        for (b, gzip) in [(1u32, false), (3, false), (8, true), (16, true)] {
+            let m = sample_matrix(13, b, 29, b as u64);
+            let path = tmp(&format!("rt_{b}_{gzip}"));
+            let bytes = write_shard_file(&path, &m, gzip).unwrap();
+            assert_eq!(
+                bytes as u64,
+                std::fs::metadata(&path).unwrap().len(),
+                "reported size matches the file"
+            );
+            let (hdr, back) = read_shard_file(&path).unwrap();
+            assert_eq!(hdr.gzip(), gzip);
+            assert_eq!((hdr.k, hdr.b, hdr.n_rows), (13, b, 29));
+            assert_eq!(back.words(), m.words(), "b={b} gzip={gzip}");
+            assert_eq!(back.labels(), m.labels());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn empty_shard_roundtrips() {
+        let m = BbitSignatureMatrix::new(5, 4);
+        let path = tmp("empty");
+        write_shard_file(&path, &m, false).unwrap();
+        let (hdr, back) = read_shard_file(&path).unwrap();
+        assert_eq!(hdr.n_rows, 0);
+        assert_eq!(back.n(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_payload_is_detected() {
+        let m = sample_matrix(16, 8, 8, 5);
+        let path = tmp("corrupt");
+        write_shard_file(&path, &m, false).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // flip a payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_shard_file(&path).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        // Truncation is also caught (length check before CRC).
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_shard_file(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc_reference_value() {
+        // Known CRC-32 of "123456789" — pins the polynomial/reflection.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,88 @@
+//! On-disk signature shard store — the persistence layer for the paper's
+//! out-of-core regime.
+//!
+//! The headline claim of b-bit minwise hashing is that it makes large-scale
+//! learning practical *"especially when data do not fit in memory"*, and
+//! the follow-up work (Li & Shrivastava, arXiv:1108.3072 — training on
+//! 200 GB; "b-Bit Minwise Hashing in Practice", arXiv:1205.2958) runs
+//! exactly this batch regime: hash once, spill packed signatures to disk,
+//! then train in epochs over the stream. This module is that layer:
+//!
+//! * [`format`] — the versioned binary shard format (layout below);
+//! * [`writer`] / [`ShardWriter`] — the spill sink the hashing pipeline's
+//!   collector writes arriving shards through (`hash_corpus_to_store` /
+//!   `hash_dataset_to_store` in [`crate::coordinator::pipeline`]), one file
+//!   per pipeline chunk so out-of-order arrival needs no reordering buffer
+//!   and resident memory stays bounded by the pipeline's backpressure
+//!   window;
+//! * [`reader`] / [`SigShardStore`] / [`ShardStream`] — manifest-driven
+//!   store opening plus a prefetching shard iterator whose resident-row
+//!   ceiling is `queue · chunk_rows` (queue clamped to ≥ 3), measured by
+//!   [`ShardStream::peak_resident_rows`];
+//! * the out-of-core trainer itself lives in
+//!   [`crate::coordinator::stream_train`].
+//!
+//! # Store layout
+//!
+//! A store is a directory:
+//!
+//! ```text
+//! store/
+//!   manifest.txt      # key = value: version, k, b, stride_words, gzip,
+//!                     # n_shards, n_rows, packed_bytes, stored_bytes
+//!   shard-00000.bbs   # rows [0, c)          (c = pipeline chunk rows)
+//!   shard-00001.bbs   # rows [c, 2c)
+//!   ...               # final shard may be ragged (fewer rows)
+//! ```
+//!
+//! Shard `s` owns the contiguous corpus rows `[s·c, s·c + n_rows(s))`, so
+//! sequential shard order is exactly corpus row order — which is what makes
+//! shuffle-off streaming training bit-identical to the in-memory path.
+//!
+//! # Shard file layout (version 1)
+//!
+//! Fixed 64-byte little-endian header, then the payload:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------------
+//!      0     8  magic            b"BBSHARD\0"
+//!      8     4  version          u32, = 1
+//!     12     4  flags            u32, bit 0 = payload is one gzip member
+//!     16     8  k                u64, signature width (values per row)
+//!     24     4  b                u32, bits per value (1..=16)
+//!     28     4  stride_words     u32, words per row = ceil(k·b/64); stored
+//!                                redundantly and validated against k·b
+//!     32     8  n_rows           u64, rows in this shard
+//!     40     8  payload_len      u64, payload bytes AS STORED (post-gzip)
+//!     48     4  payload_crc32    u32, CRC-32 (poly 0xEDB88320, reflected)
+//!                                of the UNCOMPRESSED payload
+//!     52    12  reserved         zero
+//!     64     …  payload
+//! ```
+//!
+//! The uncompressed payload is the shard's word-aligned signature block
+//! followed by its label block, both little-endian:
+//!
+//! ```text
+//! n_rows · stride_words  u64   row words, row-major (pad bits zero —
+//!                              exactly `BbitSignatureMatrix::words()`)
+//! n_rows                 f32   labels (±1.0), IEEE-754 bit patterns
+//! ```
+//!
+//! With `flags` bit 0 set the whole payload is wrapped in a single gzip
+//! member (the vendored `flate2` emits stored blocks, so this trades bytes
+//! for a second integrity check until the real flate2 is swapped in; the
+//! header CRC is always over the uncompressed bytes). Rows deserialize via
+//! `BbitSignatureMatrix::from_raw_parts` — no unpack/re-pack, so a
+//! write→read roundtrip is bit-identical to the in-memory matrix (property
+//! tested in `tests/integration_store.rs` across b, chunking, threads and
+//! gzip).
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::ShardHeader;
+pub use reader::{ShardStream, SigShardStore, StreamedShard};
+pub use writer::{shard_path, ShardWriter, StoreSummary};

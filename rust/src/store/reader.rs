@@ -1,0 +1,381 @@
+//! [`SigShardStore`] + [`ShardStream`]: open a store and iterate its
+//! shards without ever materializing the full signature matrix.
+//!
+//! The stream decodes shards on a background reader thread and hands them
+//! through a **bounded** channel, so the out-of-core trainer overlaps disk
+//! I/O + decode with SGD while memory stays flat: with a residency budget
+//! of `queue` shards (clamped to ≥ 3), at most `queue − 2` decoded shards
+//! sit in the channel, one more is in the reader's hands (blocked on
+//! `send` when the channel is full), and one is held by the consumer — a
+//! hard ceiling of **`queue · chunk_rows` resident rows**, which
+//! [`ShardStream::peak_resident_rows`] measures exactly (every
+//! [`StreamedShard`] counts its rows in on decode and out on drop). The
+//! bound is asserted in `tests/integration_store.rs`.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+
+use crate::hashing::bbit::BbitSignatureMatrix;
+
+use super::format;
+use super::writer::{shard_path, MANIFEST_NAME};
+
+/// An opened signature shard store (read side).
+#[derive(Clone, Debug)]
+pub struct SigShardStore {
+    dir: PathBuf,
+    k: usize,
+    b: u32,
+    gzip: bool,
+    n_shards: usize,
+    n_rows: usize,
+    packed_bytes: usize,
+    stored_bytes: usize,
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+impl SigShardStore {
+    /// Open a store by parsing its manifest.
+    pub fn open(dir: &Path) -> io::Result<Self> {
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            io::Error::new(
+                e.kind(),
+                format!("no signature store at {} ({e})", dir.display()),
+            )
+        })?;
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| bad(format!("manifest line '{line}': want key = value")))?;
+            kv.insert(key.trim().to_string(), val.trim().to_string());
+        }
+        let get = |key: &str| -> io::Result<usize> {
+            kv.get(key)
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| bad(format!("manifest: missing/invalid '{key}'")))
+        };
+        let version = get("version")?;
+        if version != format::VERSION as usize {
+            return Err(bad(format!("unsupported store version {version}")));
+        }
+        let store = Self {
+            dir: dir.to_path_buf(),
+            k: get("k")?,
+            b: get("b")? as u32,
+            gzip: get("gzip")? != 0,
+            n_shards: get("n_shards")?,
+            n_rows: get("n_rows")?,
+            packed_bytes: get("packed_bytes")?,
+            stored_bytes: get("stored_bytes")?,
+        };
+        if store.k == 0 || !(1..=16).contains(&store.b) {
+            return Err(bad(format!(
+                "manifest: invalid shape k={} b={}",
+                store.k, store.b
+            )));
+        }
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+    pub fn k(&self) -> usize {
+        self.k
+    }
+    pub fn b(&self) -> u32 {
+        self.b
+    }
+    pub fn gzip(&self) -> bool {
+        self.gzip
+    }
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+    /// Total rows across all shards.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    /// Paper-tight packed bytes across the store (`n·b·k/8`).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed_bytes
+    }
+    /// Bytes on disk, headers included.
+    pub fn stored_bytes(&self) -> usize {
+        self.stored_bytes
+    }
+
+    /// The Theorem-2 expanded feature dimension (`k · 2^b`) a linear model
+    /// over this store's signatures needs.
+    pub fn expanded_dim(&self) -> usize {
+        self.k << self.b
+    }
+
+    /// Decode shard `i` eagerly (no prefetch thread) — the random-access
+    /// path for tests and tools; training goes through [`Self::stream`].
+    pub fn read_shard(&self, i: usize) -> io::Result<BbitSignatureMatrix> {
+        assert!(i < self.n_shards, "shard {i} out of {}", self.n_shards);
+        let (hdr, m) = format::read_shard_file(&shard_path(&self.dir, i))?;
+        if hdr.k != self.k || hdr.b != self.b {
+            return Err(bad(format!(
+                "shard {i} shape (k={}, b={}) disagrees with manifest (k={}, b={})",
+                hdr.k, hdr.b, self.k, self.b
+            )));
+        }
+        Ok(m)
+    }
+
+    /// Stream shards in the given order holding at most `queue` decoded
+    /// shards (= `queue · chunk` rows) resident at once; `queue` is
+    /// clamped to ≥ 3 (one in the channel + one decoding + one with the
+    /// consumer is the floor of a working pipeline). See the module docs.
+    pub fn stream(&self, order: &[usize], queue: usize) -> ShardStream {
+        for &i in order {
+            assert!(i < self.n_shards, "shard {i} out of {}", self.n_shards);
+        }
+        let paths: Vec<PathBuf> = order.iter().map(|&i| shard_path(&self.dir, i)).collect();
+        ShardStream::spawn(paths, self.k, self.b, queue)
+    }
+
+    /// Sequential shard order `0..n_shards` (row order of the corpus).
+    pub fn seq_order(&self) -> Vec<usize> {
+        (0..self.n_shards).collect()
+    }
+}
+
+/// One decoded shard handed out by [`ShardStream`]. Derefs to the packed
+/// matrix; counts its rows out of the stream's residency gauge on drop.
+pub struct StreamedShard {
+    m: BbitSignatureMatrix,
+    live_rows: Arc<AtomicUsize>,
+}
+
+impl std::ops::Deref for StreamedShard {
+    type Target = BbitSignatureMatrix;
+    fn deref(&self) -> &BbitSignatureMatrix {
+        &self.m
+    }
+}
+
+impl Drop for StreamedShard {
+    fn drop(&mut self) {
+        self.live_rows.fetch_sub(self.m.n(), Ordering::SeqCst);
+    }
+}
+
+/// Prefetching shard iterator (see module docs). Yields
+/// `io::Result<StreamedShard>`; a decode error is yielded once, then the
+/// stream ends.
+pub struct ShardStream {
+    rx: Option<Receiver<io::Result<StreamedShard>>>,
+    live_rows: Arc<AtomicUsize>,
+    peak_rows: Arc<AtomicUsize>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardStream {
+    fn spawn(paths: Vec<PathBuf>, k: usize, b: u32, queue: usize) -> Self {
+        // Residency budget: `queue` shards total = (queue − 2) in the
+        // channel + 1 decoded-in-hand (blocked on send) + 1 consumer-held.
+        let (tx, rx) = sync_channel::<io::Result<StreamedShard>>(queue.max(3) - 2);
+        let live_rows = Arc::new(AtomicUsize::new(0));
+        let peak_rows = Arc::new(AtomicUsize::new(0));
+        let (live, peak) = (live_rows.clone(), peak_rows.clone());
+        let reader = std::thread::spawn(move || {
+            for path in paths {
+                let item = format::read_shard_file(&path).and_then(|(hdr, m)| {
+                    if hdr.k != k || hdr.b != b {
+                        return Err(bad(format!(
+                            "{}: shape (k={}, b={}) disagrees with manifest \
+                             (k={k}, b={b})",
+                            path.display(),
+                            hdr.k,
+                            hdr.b
+                        )));
+                    }
+                    let resident = live.fetch_add(m.n(), Ordering::SeqCst) + m.n();
+                    peak.fetch_max(resident, Ordering::SeqCst);
+                    Ok(StreamedShard {
+                        m,
+                        live_rows: live.clone(),
+                    })
+                });
+                let stop = item.is_err();
+                if tx.send(item).is_err() || stop {
+                    break; // consumer hung up, or the store is unreadable
+                }
+            }
+        });
+        Self {
+            rx: Some(rx),
+            live_rows,
+            peak_rows,
+            reader: Some(reader),
+        }
+    }
+
+    /// High-water mark of decoded rows resident in the stream at once
+    /// (channel + reader-in-hand + consumer-held). Bounded by
+    /// `max(queue, 3) · max_shard_rows`.
+    pub fn peak_resident_rows(&self) -> usize {
+        self.peak_rows.load(Ordering::SeqCst)
+    }
+
+    /// Rows currently resident (decoded, not yet dropped by the consumer).
+    pub fn resident_rows(&self) -> usize {
+        self.live_rows.load(Ordering::SeqCst)
+    }
+}
+
+impl Iterator for ShardStream {
+    type Item = io::Result<StreamedShard>;
+    fn next(&mut self) -> Option<Self::Item> {
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+}
+
+impl Drop for ShardStream {
+    fn drop(&mut self) {
+        // Unblock the reader (its sends start failing), then join it.
+        drop(self.rx.take());
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::store::writer::ShardWriter;
+
+    fn build_store(dir: &Path, k: usize, b: u32, shard_rows: &[usize], gzip: bool) {
+        let mask = (1u32 << b) - 1;
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut w = ShardWriter::create(dir, k, b, gzip).unwrap();
+        for (seq, &rows) in shard_rows.iter().enumerate() {
+            let mut m = BbitSignatureMatrix::new(k, b);
+            for _ in 0..rows {
+                let row: Vec<u16> =
+                    (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+                m.push_row(&row, if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 });
+            }
+            w.write_shard(seq, &m).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("bbml_reader_{}_{}", name, std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn open_reads_manifest_and_shards() {
+        let dir = tmp("open");
+        build_store(&dir, 16, 4, &[10, 10, 3], true);
+        let store = SigShardStore::open(&dir).unwrap();
+        assert_eq!((store.k(), store.b()), (16, 4));
+        assert!(store.gzip());
+        assert_eq!(store.n_shards(), 3);
+        assert_eq!(store.n_rows(), 23);
+        assert_eq!(store.expanded_dim(), 16 << 4);
+        let m = store.read_shard(2).unwrap();
+        assert_eq!(m.n(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(SigShardStore::open(Path::new("/definitely/not/a/store")).is_err());
+    }
+
+    #[test]
+    fn stream_yields_shards_in_requested_order() {
+        let dir = tmp("order");
+        build_store(&dir, 8, 2, &[4, 4, 4, 2], false);
+        let store = SigShardStore::open(&dir).unwrap();
+        // Reversed order: row counts identify which shard arrived.
+        let sizes: Vec<usize> = store
+            .stream(&[3, 2, 1, 0], 2)
+            .map(|r| r.unwrap().n())
+            .collect();
+        assert_eq!(sizes, vec![2, 4, 4, 4]);
+        // Repeats are allowed (an epoch may revisit shards).
+        let total: usize = store
+            .stream(&[0, 0, 3], 1)
+            .map(|r| r.unwrap().n())
+            .sum();
+        assert_eq!(total, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn residency_gauge_rises_and_falls() {
+        let dir = tmp("gauge");
+        build_store(&dir, 8, 2, &[5, 5, 5, 5, 5, 5], false);
+        let store = SigShardStore::open(&dir).unwrap();
+        let mut stream = store.stream(&store.seq_order(), 1);
+        let mut seen = 0usize;
+        for item in &mut stream {
+            let shard = item.unwrap();
+            seen += shard.n();
+            assert!(stream.resident_rows() >= shard.n());
+            drop(shard);
+        }
+        assert_eq!(seen, 30);
+        assert_eq!(stream.resident_rows(), 0, "all shards returned to the gauge");
+        // queue=1 clamps to 3: ≤ 3 shards × 5 rows ever resident.
+        assert!(
+            stream.peak_resident_rows() <= 15,
+            "peak {} exceeds the queue·chunk ceiling",
+            stream.peak_resident_rows()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dropping_stream_midway_joins_reader() {
+        let dir = tmp("drop");
+        build_store(&dir, 8, 2, &[3; 10], false);
+        let store = SigShardStore::open(&dir).unwrap();
+        let mut stream = store.stream(&store.seq_order(), 1);
+        let first = stream.next().unwrap().unwrap();
+        assert_eq!(first.n(), 3);
+        drop(first);
+        drop(stream); // must not hang on the blocked reader
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_surfaces_as_stream_error() {
+        let dir = tmp("corrupt");
+        build_store(&dir, 8, 2, &[3, 3, 3], false);
+        // Truncate shard 1.
+        let victim = shard_path(&dir, 1);
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 2]).unwrap();
+        let store = SigShardStore::open(&dir).unwrap();
+        let results: Vec<io::Result<StreamedShard>> =
+            store.stream(&store.seq_order(), 2).collect();
+        assert_eq!(results.len(), 2, "shard 0 then the error, then the stream ends");
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

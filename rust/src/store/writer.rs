@@ -1,0 +1,212 @@
+//! [`ShardWriter`]: spills packed signature shards to disk as they arrive
+//! from the hashing pipeline.
+//!
+//! Shards may arrive **out of order** (the pipeline's workers race through
+//! chunks), which is why each shard goes to its own file named by sequence
+//! number — placement is order-independent and the writer never buffers
+//! more than the one shard it is currently writing. [`ShardWriter::finish`]
+//! verifies the sequence numbers form a dense `0..n_shards` range (a lost
+//! shard is an error, not a silent gap) and writes the store manifest.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::hashing::bbit::BbitSignatureMatrix;
+
+use super::format;
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST_NAME: &str = "manifest.txt";
+
+/// Path of shard `seq` inside `dir`.
+pub fn shard_path(dir: &Path, seq: usize) -> PathBuf {
+    dir.join(format!("shard-{seq:05}.bbs"))
+}
+
+/// What a finished store looks like on disk.
+#[derive(Clone, Debug)]
+pub struct StoreSummary {
+    pub dir: PathBuf,
+    pub n_shards: usize,
+    pub n_rows: usize,
+    /// Sum of the paper-tight `n·b·k/8` packed bytes across shards.
+    pub packed_bytes: usize,
+    /// Bytes actually on disk (headers + payloads, after optional gzip).
+    pub stored_bytes: usize,
+}
+
+/// Writes one store: shard files plus, on [`ShardWriter::finish`], the
+/// manifest that [`super::SigShardStore::open`] reads back.
+pub struct ShardWriter {
+    dir: PathBuf,
+    k: usize,
+    b: u32,
+    gzip: bool,
+    /// (seq, rows) per written shard, in arrival order.
+    shards: Vec<(usize, usize)>,
+    packed_bytes: usize,
+    stored_bytes: usize,
+}
+
+impl ShardWriter {
+    /// Create a store at `dir` (created if missing). Refuses to overwrite
+    /// an existing store: delete the directory first to rebuild it.
+    pub fn create(dir: &Path, k: usize, b: u32, gzip: bool) -> io::Result<Self> {
+        assert!(k >= 1 && (1..=16).contains(&b), "invalid shape k={k} b={b}");
+        std::fs::create_dir_all(dir)?;
+        let manifest = dir.join(MANIFEST_NAME);
+        if manifest.exists() {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                format!(
+                    "refusing to overwrite existing signature store at {} \
+                     (remove the directory to rebuild)",
+                    dir.display()
+                ),
+            ));
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            k,
+            b,
+            gzip,
+            shards: Vec::new(),
+            packed_bytes: 0,
+            stored_bytes: 0,
+        })
+    }
+
+    /// Spill one shard. `seq` is the pipeline chunk sequence number; shard
+    /// `seq` owns rows `[seq·chunk, seq·chunk + shard.n())` of the corpus.
+    pub fn write_shard(&mut self, seq: usize, shard: &BbitSignatureMatrix) -> io::Result<()> {
+        assert_eq!(shard.k(), self.k, "shard k {} != store k {}", shard.k(), self.k);
+        assert_eq!(shard.b(), self.b, "shard b {} != store b {}", shard.b(), self.b);
+        let bytes = format::write_shard_file(&shard_path(&self.dir, seq), shard, self.gzip)?;
+        self.shards.push((seq, shard.n()));
+        self.packed_bytes += shard.packed_bytes();
+        self.stored_bytes += bytes;
+        Ok(())
+    }
+
+    /// Rows written so far (any order).
+    pub fn rows_written(&self) -> usize {
+        self.shards.iter().map(|&(_, rows)| rows).sum()
+    }
+
+    /// Validate shard completeness and write the manifest.
+    pub fn finish(mut self) -> io::Result<StoreSummary> {
+        self.shards.sort_unstable_by_key(|&(seq, _)| seq);
+        for (want, &(seq, _)) in self.shards.iter().enumerate() {
+            if seq != want {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("store is missing shard {want} (next present: {seq})"),
+                ));
+            }
+        }
+        let n_rows = self.rows_written();
+        let stride = (self.k * self.b as usize).div_ceil(64);
+        let manifest = format!(
+            "# bbml signature shard store\n\
+             version = {}\n\
+             k = {}\n\
+             b = {}\n\
+             stride_words = {}\n\
+             gzip = {}\n\
+             n_shards = {}\n\
+             n_rows = {}\n\
+             packed_bytes = {}\n\
+             stored_bytes = {}\n",
+            format::VERSION,
+            self.k,
+            self.b,
+            stride,
+            self.gzip as u32,
+            self.shards.len(),
+            n_rows,
+            self.packed_bytes,
+            self.stored_bytes,
+        );
+        std::fs::write(self.dir.join(MANIFEST_NAME), manifest)?;
+        Ok(StoreSummary {
+            dir: self.dir,
+            n_shards: self.shards.len(),
+            n_rows,
+            packed_bytes: self.packed_bytes,
+            stored_bytes: self.stored_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn sample(k: usize, b: u32, n: usize, seed: u64) -> BbitSignatureMatrix {
+        let mask = (1u32 << b) - 1;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut m = BbitSignatureMatrix::new(k, b);
+        for _ in 0..n {
+            let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+            m.push_row(&row, 1.0);
+        }
+        m
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("bbml_writer_{}_{}", name, std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn out_of_order_shards_finish_cleanly() {
+        let dir = tmp("ooo");
+        let mut w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        // Arrival order 2, 0, 1 — placement is by seq, not arrival.
+        w.write_shard(2, &sample(8, 4, 3, 1)).unwrap();
+        w.write_shard(0, &sample(8, 4, 5, 2)).unwrap();
+        w.write_shard(1, &sample(8, 4, 5, 3)).unwrap();
+        assert_eq!(w.rows_written(), 13);
+        let s = w.finish().unwrap();
+        assert_eq!(s.n_shards, 3);
+        assert_eq!(s.n_rows, 13);
+        assert!(s.stored_bytes > s.packed_bytes, "headers add overhead");
+        assert!(dir.join(MANIFEST_NAME).exists());
+        for seq in 0..3 {
+            assert!(shard_path(&dir, seq).exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_shard_is_an_error() {
+        let dir = tmp("gap");
+        let mut w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        w.write_shard(0, &sample(8, 4, 2, 1)).unwrap();
+        w.write_shard(2, &sample(8, 4, 2, 2)).unwrap(); // seq 1 never arrives
+        let err = w.finish().unwrap_err();
+        assert!(err.to_string().contains("missing shard 1"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn refuses_to_overwrite_existing_store() {
+        let dir = tmp("clobber");
+        let w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        w.finish().unwrap();
+        let err = ShardWriter::create(&dir, 8, 4, false).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::AlreadyExists);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "shard k")]
+    fn mismatched_shape_panics() {
+        let dir = tmp("shape");
+        let mut w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        let _ = w.write_shard(0, &sample(9, 4, 2, 1));
+    }
+}

@@ -1,0 +1,288 @@
+//! Shard-store integration: write→read bit-identity across the full
+//! operating grid, bounded reader memory, and the out-of-core training
+//! equivalence contract (streaming with shuffling off ≡ in-memory, bit for
+//! bit).
+
+use std::path::PathBuf;
+
+use bbml::coordinator::pipeline::{
+    hash_dataset, hash_dataset_to_store, PipelineOptions,
+};
+use bbml::coordinator::stream_train::{
+    evaluate_stream, train_epochs_in_memory, train_stream, StreamAlgo, StreamTrainOptions,
+};
+use bbml::data::sparse::{SparseBinaryDataset, SparseBinaryVec};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::bbit::BbitSignatureMatrix;
+use bbml::proptest_mini::{check, gen};
+use bbml::store::SigShardStore;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bbml_istore_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn corpus_cfg(n: usize) -> SynthConfig {
+    SynthConfig {
+        n_docs: n,
+        dim: 1 << 20,
+        vocab: 5_000,
+        topic_size: 100,
+        mean_len: 50,
+        topic_mix: 0.5,
+        ..Default::default()
+    }
+}
+
+/// Read a whole store back into one matrix (sequential shard order).
+fn read_all(store: &SigShardStore) -> BbitSignatureMatrix {
+    let mut all = BbitSignatureMatrix::new(store.k(), store.b());
+    for s in 0..store.n_shards() {
+        all.append(&store.read_shard(s).unwrap());
+    }
+    all
+}
+
+#[test]
+fn roundtrip_bit_identical_across_b_chunks_threads_gzip() {
+    // Satellite: write→read must be bit-identical to the in-memory matrix
+    // for every paper operating point b, with ragged final shards, odd
+    // chunk sizes, any thread count, gzip on and off.
+    let ds = generate_corpus(&corpus_cfg(300));
+    for (b, chunk, threads, gzip) in [
+        (1u32, 17usize, 4usize, false), // 300 = 17·17 + 11: ragged tail
+        (2, 64, 1, true),
+        (4, 23, 8, false), // 300 = 13·23 + 1: 1-row tail shard
+        (8, 300, 2, true), // single shard
+        (16, 7, 4, true),  // many tiny shards
+    ] {
+        let opt = PipelineOptions {
+            threads,
+            chunk,
+            queue: 2,
+        };
+        let (mem, _) = hash_dataset(&ds, 24, b, 5, &opt);
+        let dir = tmp_dir(&format!("rt_{b}_{chunk}_{threads}_{gzip}"));
+        let (summary, _) = hash_dataset_to_store(&ds, 24, b, 5, &opt, &dir, gzip).unwrap();
+        assert_eq!(summary.n_rows, 300);
+        assert_eq!(summary.n_shards, 300usize.div_ceil(chunk));
+        let store = SigShardStore::open(&dir).unwrap();
+        assert_eq!(store.gzip(), gzip);
+        let back = read_all(&store);
+        assert_eq!(back.n(), mem.n(), "b={b} chunk={chunk}");
+        assert_eq!(
+            back.words(),
+            mem.words(),
+            "b={b} chunk={chunk} threads={threads} gzip={gzip}: words differ"
+        );
+        assert_eq!(back.labels(), mem.labels());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn prop_roundtrip_on_random_shapes() {
+    // Random (k, b, chunk, threads, gzip, n) — the store must never bend
+    // a bit, including the non-SWAR widths b ∈ {3, 5, ...}.
+    let case = std::sync::atomic::AtomicUsize::new(0);
+    check("store roundtrip", 8, |rng| {
+        let k = 1 + rng.gen_range(40) as usize;
+        let b = 1 + rng.gen_range(16) as u32;
+        let chunk = 1 + rng.gen_range(50) as usize;
+        let threads = 1 + rng.gen_range(8) as usize;
+        let gzip = rng.gen_range(2) == 1;
+        let n = 1 + rng.gen_range(120) as usize;
+        let dim = 1u64 << 16;
+        let mut ds = SparseBinaryDataset::new(dim);
+        for i in 0..n {
+            let set = gen::sparse_set(rng, dim, 1, 40);
+            ds.push(
+                SparseBinaryVec::from_indices(set),
+                if i % 2 == 0 { 1.0 } else { -1.0 },
+            );
+        }
+        let opt = PipelineOptions {
+            threads,
+            chunk,
+            queue: 2,
+        };
+        let (mem, _) = hash_dataset(&ds, k, b, 11, &opt);
+        let id = case.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = tmp_dir(&format!("prop_{id}"));
+        let (summary, _) =
+            hash_dataset_to_store(&ds, k, b, 11, &opt, &dir, gzip).unwrap();
+        assert_eq!(summary.n_shards, n.div_ceil(chunk));
+        let store = SigShardStore::open(&dir).unwrap();
+        let back = read_all(&store);
+        assert_eq!(back.words(), mem.words(), "k={k} b={b} chunk={chunk} n={n}");
+        assert_eq!(back.labels(), mem.labels());
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn streaming_training_is_bit_identical_to_in_memory() {
+    // THE acceptance criterion: with shuffling off, training from the
+    // shard stream produces the exact same model as training in memory —
+    // same seed, same floating-point op sequence, bit-for-bit weights.
+    let ds = generate_corpus(&corpus_cfg(400));
+    let opt = PipelineOptions {
+        threads: 4,
+        chunk: 37, // ragged: 400 = 10·37 + 30
+        queue: 2,
+    };
+    let (mem, _) = hash_dataset(&ds, 32, 4, 9, &opt);
+    let dir = tmp_dir("equiv");
+    hash_dataset_to_store(&ds, 32, 4, 9, &opt, &dir, false).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+
+    for algo in [StreamAlgo::Pegasos, StreamAlgo::LogRegSgd] {
+        for average in [true, false] {
+            let topt = StreamTrainOptions {
+                algo,
+                c: 1.0,
+                epochs: 3,
+                seed: 21,
+                shuffle: false,
+                prefetch: 3,
+                average,
+            };
+            let streamed = train_stream(&store, &topt).unwrap();
+            let resident = train_epochs_in_memory(&mem, &topt);
+            assert_eq!(
+                streamed.model.w, resident.w,
+                "{algo:?} average={average}: weights must be bit-identical"
+            );
+            assert_eq!(
+                streamed.model.objective.to_bits(),
+                resident.objective.to_bits(),
+                "{algo:?} average={average}: objective must be bit-identical"
+            );
+            assert_eq!(streamed.rows_seen, 3 * 400);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reader_memory_stays_bounded() {
+    // The out-of-core acceptance criterion, measured: the reader holds at
+    // most queue · chunk rows at any instant (queue = prefetch clamped to
+    // ≥ 3) — a fraction of the corpus — while training still sees every
+    // row of every epoch.
+    let ds = generate_corpus(&corpus_cfg(400));
+    let (chunk, prefetch) = (16usize, 2usize);
+    let opt = PipelineOptions {
+        threads: 4,
+        chunk,
+        queue: 2,
+    };
+    let dir = tmp_dir("bounded");
+    hash_dataset_to_store(&ds, 16, 4, 3, &opt, &dir, false).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+    assert_eq!(store.n_shards(), 25);
+    let report = train_stream(
+        &store,
+        &StreamTrainOptions {
+            epochs: 2,
+            shuffle: true,
+            prefetch,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.rows_seen, 2 * 400, "every row of every epoch visited");
+    assert!(report.peak_resident_rows > 0);
+    let ceiling = prefetch.max(3) * chunk;
+    assert!(
+        report.peak_resident_rows <= ceiling,
+        "peak {} rows exceeds the queue·chunk = {ceiling} ceiling",
+        report.peak_resident_rows
+    );
+    assert!(
+        report.peak_resident_rows < store.n_rows(),
+        "the full matrix must never be resident"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shuffled_streaming_is_deterministic_and_learns() {
+    let ds = generate_corpus(&corpus_cfg(300));
+    let opt = PipelineOptions {
+        threads: 4,
+        chunk: 32,
+        queue: 2,
+    };
+    let dir = tmp_dir("shuffle");
+    hash_dataset_to_store(&ds, 64, 8, 11, &opt, &dir, false).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+    let topt = StreamTrainOptions {
+        algo: StreamAlgo::Pegasos,
+        epochs: 100,
+        seed: 5,
+        shuffle: true,
+        ..Default::default()
+    };
+    let a = train_stream(&store, &topt).unwrap();
+    let b = train_stream(&store, &topt).unwrap();
+    assert_eq!(a.model.w, b.model.w, "seeded shard shuffling is deterministic");
+    // A different seed permutes shards differently and lands elsewhere.
+    let c = train_stream(
+        &store,
+        &StreamTrainOptions {
+            seed: 6,
+            ..topt.clone()
+        },
+    )
+    .unwrap();
+    assert_ne!(a.model.w, c.model.w, "seed must drive the shard permutation");
+    let (acc, rows) = evaluate_stream(&a.model, &store, 4).unwrap();
+    assert_eq!(rows, 300);
+    assert!(acc > 0.8, "streamed training should learn: acc {acc}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_hash_store_then_train_stream_writes_parseable_report() {
+    // The CI smoke path, exercised in-process: hash-to-disk, train from
+    // disk, and the JSON report exists with the fields CI asserts on.
+    let base = tmp_dir("cli");
+    let store_dir = base.join("sig");
+    let out_dir = base.join("results");
+    let strs = |v: &[&str]| -> Vec<String> { v.iter().map(|s| s.to_string()).collect() };
+    bbml::cli::run_with(&strs(&[
+        "hash-store",
+        "--k",
+        "16",
+        "--b",
+        "4",
+        "--chunk",
+        "48",
+        "--store",
+        store_dir.to_str().unwrap(),
+        "n_docs=200",
+        "dim=1048576",
+        "vocab=2000",
+        "mean_len=40",
+    ]))
+    .unwrap();
+    bbml::cli::run_with(&strs(&[
+        "train-stream",
+        "--backend",
+        "pegasos",
+        "--epochs",
+        "2",
+        "--store",
+        store_dir.to_str().unwrap(),
+        &format!("out_dir={}", out_dir.to_str().unwrap()),
+    ]))
+    .unwrap();
+    let text = std::fs::read_to_string(out_dir.join("stream_report.json")).unwrap();
+    for key in ["\"backend\"", "\"rows\"", "\"acc\"", "\"peak_resident_rows\""] {
+        assert!(text.contains(key), "report missing {key}: {text}");
+    }
+    assert!(text.contains("\"rows\": 200"), "{text}");
+    std::fs::remove_dir_all(&base).ok();
+}
