@@ -1,0 +1,105 @@
+//! The paper's headline experiment as a benchmark: every hashing scheme at
+//! matched storage, accuracy vs storage bits, through the unified
+//! pipeline + trainer.
+//!
+//! Records `results/BENCH_schemes.json` — one flat object with, per
+//! scheme × storage point, the storage bits, sample width, test accuracy
+//! and hash/train wall-clock — the machine-readable evidence behind the
+//! §6–§8 comparison (b-bit minwise dominating at equal storage, VW
+//! beating the projections, bbit_vw trading accuracy for a small dense
+//! model).
+//!
+//! Run with `BBML_BENCH_FAST=1` for a CI-sized smoke pass.
+
+use std::time::Instant;
+
+use bbml::benchkit::Bencher;
+use bbml::coordinator::pipeline::{sketch_dataset, PipelineOptions};
+use bbml::coordinator::report;
+use bbml::coordinator::trainer::{evaluate_sketch, train_sketch, Backend};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::feature_map::{matched_dense_k, FeatureMapSpec, Scheme};
+
+fn main() {
+    let fast = std::env::var("BBML_BENCH_FAST").ok().as_deref() == Some("1");
+    let n_docs = if fast { 400 } else { 2_000 };
+    let cfg = SynthConfig {
+        n_docs,
+        dim: 1 << 22,
+        vocab: 10_000,
+        mean_len: 60,
+        topic_mix: 0.5,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let (train, test) = ds.train_test_split(0.25, 5);
+    let opt = PipelineOptions::default();
+    let b = 8u32;
+    // Storage points: bbit (k, 8) bits = k·8; dense schemes matched.
+    let k_points: &[usize] = if fast { &[64] } else { &[64, 128, 256] };
+
+    let mut bench = Bencher::new();
+    let mut entries: Vec<(String, String)> = Vec::new();
+    entries.push(("n_train".into(), train.n().to_string()));
+    entries.push(("n_test".into(), test.n().to_string()));
+    entries.push(("backend".into(), report::json_string("svm")));
+
+    for &k in k_points {
+        let storage_bits = k * b as usize;
+        for scheme in Scheme::ALL {
+            let spec = match scheme {
+                Scheme::Bbit | Scheme::BbitVw => {
+                    FeatureMapSpec::new(scheme, ds.dim(), k, b, 11)
+                }
+                _ => FeatureMapSpec::new(scheme, ds.dim(), matched_dense_k(k, b), 0, 11),
+            };
+            let map = spec.build();
+            assert_eq!(map.layout().storage_bits_per_example(), storage_bits);
+
+            let label = format!("{}@{}b", scheme.name(), storage_bits);
+            let t_hash = Instant::now();
+            let mut hashed = None;
+            bench.bench_once(&format!("schemes/hash/{label}"), || {
+                hashed = Some((
+                    sketch_dataset(&train, map.as_ref(), &opt).0,
+                    sketch_dataset(&test, map.as_ref(), &opt).0,
+                ));
+            });
+            let hash_secs = t_hash.elapsed().as_secs_f64();
+            let (sk_tr, sk_te) = hashed.unwrap();
+
+            let mut out = None;
+            bench.bench_once(&format!("schemes/train/{label}"), || {
+                out = Some(
+                    train_sketch(&sk_tr, Backend::SvmDcd, 1.0, 3, None, None).unwrap(),
+                );
+            });
+            let out = out.unwrap();
+            let (acc, _) = evaluate_sketch(&out.model, &sk_te);
+            println!(
+                "{label:>24}: acc {acc:.4} (k={}, hash {hash_secs:.2}s, train {:.2}s)",
+                map.layout().k(),
+                out.train_time.as_secs_f64()
+            );
+            let key = format!("{}_{storage_bits}", scheme.name());
+            entries.push((format!("{key}_bits"), storage_bits.to_string()));
+            entries.push((format!("{key}_k"), map.layout().k().to_string()));
+            entries.push((format!("{key}_acc"), format!("{acc:.6}")));
+            entries.push((format!("{key}_hash_secs"), format!("{hash_secs:.6}")));
+            entries.push((
+                format!("{key}_train_secs"),
+                format!("{:.6}", out.train_time.as_secs_f64()),
+            ));
+        }
+    }
+
+    // Accuracy-vs-storage record (the figure data) + timing stats.
+    let refs: Vec<(&str, String)> = entries
+        .iter()
+        .map(|(key, value)| (key.as_str(), value.clone()))
+        .collect();
+    report::write_json_object(std::path::Path::new("results/BENCH_schemes.json"), &refs)
+        .unwrap();
+    bench.write_json("results/BENCH_schemes_timing.json").unwrap();
+    println!("wrote results/BENCH_schemes.json");
+}

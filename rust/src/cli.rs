@@ -22,13 +22,16 @@
 use std::path::Path;
 
 use crate::coordinator::config::RunConfig;
-use crate::coordinator::pipeline::{hash_corpus, hash_corpus_to_store, PipelineOptions};
+use crate::coordinator::pipeline::{
+    sketch_corpus, sketch_corpus_to_store, sketch_dataset, PipelineOptions,
+};
 use crate::coordinator::report;
 use crate::coordinator::stream_train::{
     evaluate_stream, train_stream, StreamAlgo, StreamTrainOptions,
 };
-use crate::coordinator::trainer::{evaluate, evaluate_pjrt, train_signatures, Backend};
+use crate::coordinator::trainer::{evaluate_pjrt, evaluate_sketch, train_sketch, Backend};
 use crate::data::synth::CorpusSampler;
+use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
 use crate::runtime::Runtime;
 use crate::store::SigShardStore;
 
@@ -42,18 +45,28 @@ COMMANDS:
     generate      write the synthetic corpus to LIBSVM (out: corpus.libsvm)
     hash          run the streaming hashing pipeline, report throughput
     hash-store    hash the corpus into an on-disk shard store (flags:
-                  --store DIR, --gzip, --chunk N, --k K, --b B)
-    train         hash + train + evaluate (flags: --backend svm|logreg|
-                  pegasos|pjrt_logreg|pjrt_svm, --k K, --b B, --c C)
-    train-stream  out-of-core training over a shard store (flags:
-                  --store DIR, --backend pegasos|logreg, --c C,
-                  --epochs N, --prefetch N, --no-shuffle); writes
+                  --scheme S, --store DIR, --gzip, --chunk N, --k K, --b B)
+    train         hash + train + evaluate (flags: --scheme S, --backend
+                  svm|logreg|pegasos|pjrt_logreg|pjrt_svm, --k K, --b B,
+                  --c C)
+    train-stream  out-of-core training over a shard store of any scheme
+                  (flags: --store DIR, --backend pegasos|logreg, --c C,
+                  --epochs N, --prefetch N, --no-shuffle, --scheme S to
+                  assert the store's scheme); writes
                   <out_dir>/stream_report.json
     experiment    regenerate a figure/table: fig1..fig10, tab51, gvw,
                   lemma1, lemma2, or 'all'
     config        print the effective configuration
     info          PJRT platform + artifact inventory
     help          this message
+
+SCHEMES (--scheme, default bbit):
+    bbit          b-bit minwise hashing (paper §2-§5); --k perms, --b bits
+    vw            VW feature hashing (§6.2); --k buckets
+    proj_normal   dense Gaussian random projections (§6.1); --k projections
+    proj_sparse   sparse random projections (§6.1); --k projections
+    bbit_vw       §7: VW over the expanded b-bit features; --k perms,
+                  --b bits, --buckets M (default k*b/32, matched storage)
 
 CONFIG KEYS (key=value):
     n_docs dim vocab shingle_w mean_len topic_mix test_fraction
@@ -71,6 +84,11 @@ struct Args {
     k: usize,
     b: u32,
     c: f64,
+    /// Hashing scheme (`--scheme`); None means "not given" so commands
+    /// can default to bbit or to the store's recorded scheme.
+    scheme: Option<Scheme>,
+    /// `bbit_vw` output width (`--buckets`); 0 = matched storage.
+    buckets: usize,
     /// Shard-store flags (hash-store / train-stream).
     store: Option<String>,
     gzip: bool,
@@ -86,6 +104,8 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut positional = Vec::new();
     let mut backend = Backend::SvmDcd;
     let (mut k, mut b, mut c) = (200usize, 8u32, 1.0f64);
+    let mut scheme: Option<Scheme> = None;
+    let mut buckets = 0usize;
     let mut store: Option<String> = None;
     let mut gzip = false;
     let mut chunk: Option<usize> = None;
@@ -108,6 +128,22 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
                     .ok_or_else(|| anyhow::anyhow!("--backend needs a value"))?;
                 backend = Backend::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown backend '{v}'"))?;
+            }
+            "--scheme" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--scheme needs a value"))?;
+                scheme = Some(Scheme::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scheme '{v}' (want bbit|vw|proj_normal|proj_sparse|bbit_vw)"
+                    )
+                })?);
+            }
+            "--buckets" => {
+                buckets = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--buckets needs a usize"))?;
             }
             "--k" => {
                 k = it
@@ -173,6 +209,8 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
         k,
         b,
         c,
+        scheme,
+        buckets,
         store,
         gzip,
         chunk,
@@ -188,6 +226,24 @@ impl Args {
         self.store
             .clone()
             .unwrap_or_else(|| format!("{}/sigstore", self.config.out_dir))
+    }
+
+    /// The effective scheme (default bbit) and its encoder spec.
+    fn scheme(&self) -> Scheme {
+        self.scheme.unwrap_or(Scheme::Bbit)
+    }
+
+    fn map_spec(&self) -> FeatureMapSpec {
+        FeatureMapSpec {
+            buckets: self.buckets,
+            ..FeatureMapSpec::new(
+                self.scheme(),
+                self.config.dim,
+                self.k,
+                self.b,
+                self.config.seed,
+            )
+        }
     }
 }
 
@@ -231,15 +287,17 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 threads: cfg.threads,
                 ..Default::default()
             };
-            let (sigs, stats) =
-                hash_corpus(&sampler, cfg.n_docs, args.k, args.b, cfg.seed, &opt);
+            let map = args.map_spec().build();
+            let layout = map.layout();
+            let (sk, stats) = sketch_corpus(&sampler, cfg.n_docs, map.as_ref(), &opt);
             println!(
-                "hashed {} docs -> {}x{} signatures (b={}) in {:.2?} \
+                "hashed {} docs -> {}x{} {} rows ({} bits/example) in {:.2?} \
                  ({:.0} docs/s, {} threads)",
                 stats.docs,
-                sigs.n(),
-                sigs.k(),
-                sigs.b(),
+                sk.n(),
+                layout.k(),
+                args.scheme(),
+                layout.storage_bits_per_example(),
                 stats.wall,
                 stats.docs_per_sec,
                 cfg.threads
@@ -265,24 +323,26 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 opt.chunk = chunk;
             }
             let dir = args.store_dir();
-            let (summary, stats) = hash_corpus_to_store(
+            let scheme = args.scheme();
+            let map = args.map_spec().build();
+            let (summary, stats) = sketch_corpus_to_store(
                 &sampler,
                 cfg.n_docs,
-                args.k,
-                args.b,
-                cfg.seed,
+                map.as_ref(),
+                scheme,
                 &opt,
                 Path::new(&dir),
                 args.gzip,
             )?;
             println!(
-                "spilled {} docs -> {} shards at {} (k={}, b={}, gzip={}) \
-                 in {:.2?} ({:.0} docs/s)",
+                "spilled {} docs -> {} shards at {} (scheme={}, k={}, b={}, \
+                 gzip={}) in {:.2?} ({:.0} docs/s)",
                 summary.n_rows,
                 summary.n_shards,
                 summary.dir.display(),
-                args.k,
-                args.b,
+                scheme,
+                map.layout().k(),
+                if scheme.is_dense() { 0 } else { args.b },
                 args.gzip,
                 stats.wall,
                 stats.docs_per_sec
@@ -311,6 +371,15 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
             };
             let dir = args.store_dir();
             let store = SigShardStore::open(Path::new(&dir))?;
+            if let Some(want) = args.scheme {
+                if want != store.scheme() {
+                    anyhow::bail!(
+                        "store at {dir} holds scheme '{}', but --scheme {} was requested",
+                        store.scheme(),
+                        want
+                    );
+                }
+            }
             let opt = StreamTrainOptions {
                 algo,
                 c: args.c,
@@ -323,10 +392,11 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
             let out = train_stream(&store, &opt)?;
             let (acc, rows) = evaluate_stream(&out.model, &store, opt.prefetch)?;
             println!(
-                "streamed {} epochs over {} shards ({} rows/epoch, peak {} rows \
+                "streamed {} epochs over {} {} shards ({} rows/epoch, peak {} rows \
                  resident of {}): train acc {:.4}, obj {:.4} in {:.2?}",
                 out.epochs,
                 out.shards,
+                store.scheme(),
                 store.n_rows(),
                 out.peak_resident_rows,
                 store.n_rows(),
@@ -339,6 +409,7 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 &report_path,
                 &[
                     ("backend", report::json_string(algo.name())),
+                    ("scheme", report::json_string(store.scheme().name())),
                     ("store", report::json_string(&dir)),
                     ("epochs", out.epochs.to_string()),
                     ("shards", out.shards.to_string()),
@@ -362,16 +433,17 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 threads: cfg.threads,
                 ..Default::default()
             };
-            let (sig_tr, hstats) = crate::coordinator::pipeline::hash_dataset(
-                &train, args.k, args.b, cfg.seed, &opt,
-            );
-            let (sig_te, _) = crate::coordinator::pipeline::hash_dataset(
-                &test, args.k, args.b, cfg.seed, &opt,
-            );
+            let scheme = args.scheme();
+            let map = args.map_spec().build();
+            let (sk_tr, hstats) = sketch_dataset(&train, map.as_ref(), &opt);
+            let (sk_te, _) = sketch_dataset(&test, map.as_ref(), &opt);
             println!(
-                "hashed: {:.0} docs/s; packed train set {:.2} MB",
+                "hashed ({}): {:.0} docs/s; packed train set {:.2} MB \
+                 ({} bits/example)",
+                scheme,
                 hstats.docs_per_sec,
-                hstats.output_bytes as f64 / 1e6
+                hstats.output_bytes as f64 / 1e6,
+                map.layout().storage_bits_per_example()
             );
             let needs_rt = matches!(args.backend, Backend::PjrtLogReg | Backend::PjrtSvm);
             let rt = if needs_rt {
@@ -379,23 +451,24 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
             } else {
                 None
             };
-            let out = train_signatures(
-                &sig_tr,
+            let out = train_sketch(
+                &sk_tr,
                 args.backend,
                 args.c,
                 cfg.seed,
                 rt.as_ref(),
                 None,
             )?;
-            let (acc_tr, _) = evaluate(&out.model, &sig_tr);
-            let (acc_te, test_time) = evaluate(&out.model, &sig_te);
+            let (acc_tr, _) = evaluate_sketch(&out.model, &sk_tr);
+            let (acc_te, test_time) = evaluate_sketch(&out.model, &sk_te);
             println!(
-                "backend {:?}: C={} k={} b={} -> train acc {:.4}, test acc {:.4} \
-                 (train {:.2?}, test {:.2?}, obj {:.3})",
+                "backend {:?}: scheme={} C={} k={} b={} -> train acc {:.4}, \
+                 test acc {:.4} (train {:.2?}, test {:.2?}, obj {:.3})",
                 args.backend,
+                scheme,
                 args.c,
-                args.k,
-                args.b,
+                map.layout().k(),
+                if scheme.is_dense() { 0 } else { args.b },
                 acc_tr,
                 acc_te,
                 out.train_time,
@@ -403,8 +476,12 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 out.model.objective
             );
             if let Some(rt) = &rt {
-                let (acc_pjrt, t) = evaluate_pjrt(&out.model, &sig_te, rt)?;
-                println!("PJRT scorer cross-check: acc {acc_pjrt:.4} ({t:.2?})");
+                // PJRT artifacts exist for packed signatures only; the
+                // dense path already failed in train_sketch if requested.
+                if let Some(sig_te) = sk_te.as_bbit() {
+                    let (acc_pjrt, t) = evaluate_pjrt(&out.model, sig_te, rt)?;
+                    println!("PJRT scorer cross-check: acc {acc_pjrt:.4} ({t:.2?})");
+                }
             }
             Ok(())
         }
@@ -474,6 +551,34 @@ mod tests {
     #[test]
     fn parse_rejects_bad_backend() {
         assert!(parse_args(&strs(&["train", "--backend", "nope"])).is_err());
+    }
+
+    #[test]
+    fn parse_scheme_and_buckets() {
+        let a = parse_args(&strs(&[
+            "train",
+            "--scheme",
+            "bbit_vw",
+            "--k",
+            "128",
+            "--b",
+            "8",
+            "--buckets",
+            "40",
+        ]))
+        .unwrap();
+        assert_eq!(a.scheme, Some(Scheme::BbitVw));
+        assert_eq!(a.scheme(), Scheme::BbitVw);
+        assert_eq!(a.buckets, 40);
+        let spec = a.map_spec();
+        assert_eq!(spec.vw_buckets(), 40);
+        // Default: no --scheme means bbit; no --buckets means matched.
+        let d = parse_args(&strs(&["train", "--k", "128", "--b", "8"])).unwrap();
+        assert_eq!(d.scheme, None);
+        assert_eq!(d.scheme(), Scheme::Bbit);
+        assert_eq!(d.map_spec().vw_buckets(), 32);
+        // Unknown scheme names are rejected at parse time.
+        assert!(parse_args(&strs(&["train", "--scheme", "quantum"])).is_err());
     }
 
     #[test]

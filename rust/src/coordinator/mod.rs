@@ -30,11 +30,15 @@ pub mod trainer;
 
 pub use config::RunConfig;
 pub use pipeline::{
-    hash_corpus, hash_corpus_to_store, hash_dataset, hash_dataset_to_store, PipelineOptions,
+    hash_corpus, hash_corpus_to_store, hash_dataset, hash_dataset_to_store, sketch_corpus,
+    sketch_corpus_to_store, sketch_dataset, sketch_dataset_to_store, PipelineOptions,
     PipelineStats,
 };
 pub use stream_train::{
-    evaluate_stream, train_epochs_in_memory, train_stream, StreamAlgo, StreamTrainOptions,
-    StreamTrainReport,
+    evaluate_stream, train_epochs_in_memory, train_epochs_sketch, train_stream, StreamAlgo,
+    StreamTrainOptions, StreamTrainReport,
 };
-pub use trainer::{train_signatures, Backend, TrainOutcome};
+pub use sweep::{run_scheme_sweep, SchemeRecord, SchemeSweepSpec};
+pub use trainer::{
+    evaluate_sketch, train_signatures, train_sketch, Backend, TrainOutcome,
+};

@@ -1,31 +1,38 @@
-//! The sharded streaming hashing pipeline (paper §9's preprocessing pass).
+//! The sharded streaming hashing pipeline (paper §9's preprocessing pass),
+//! generic over every hashing scheme.
 //!
-//! Documents flow   producer → [bounded channel] → hash workers →
+//! Documents flow   producer → [bounded channel] → encode workers →
 //! [bounded channel] → collector   with explicit backpressure: when the
 //! collector lags, the bounded channels block the producer, keeping memory
 //! flat regardless of corpus size (the paper's "one scan of the data,
 //! trivially parallelizable" claim, realized).
 //!
-//! Work is sharded in contiguous chunks tagged with sequence numbers.
-//! Rows are word-aligned in the packed store, so the collector pre-sizes
-//! the output and places each shard **zero-copy** at row offset
-//! `seq·chunk` the moment it arrives — no reordering buffer, no per-value
-//! re-pack — and the output is **bit-identical to the single-threaded
-//! run** for any thread count (tested).
+//! The worker/collector core ([`run_pipeline`]) is generic over a
+//! [`FeatureMap`]: workers share one encoder by reference and fill a
+//! per-worker [`SketchRow`] scratch, so the same machinery emits packed
+//! b-bit signatures, VW samples, random projections or the §7 bbit+VW
+//! combination — the paper's equal-storage comparison runs through one
+//! pipeline. Work is sharded in contiguous chunks tagged with sequence
+//! numbers; the collector pre-sizes the output and places each shard
+//! **zero-copy** at row offset `seq·chunk` the moment it arrives — no
+//! reordering buffer, no per-value re-pack — and the output is
+//! **bit-identical to the single-threaded run** for any thread count
+//! (tested).
 //!
-//! The worker/collector core ([`run_pipeline`]'s shape) is shared by two
-//! sinks:
+//! Two sinks share the core:
 //!
-//! * **in-memory merge** ([`hash_dataset`] / [`hash_corpus`]) — shards land
-//!   in a pre-sized [`BbitSignatureMatrix`];
-//! * **disk spill** ([`hash_dataset_to_store`] / [`hash_corpus_to_store`])
-//!   — each arriving shard is written straight to its own file in a
-//!   [`crate::store`] shard store (file name = sequence number, so
-//!   out-of-order arrival needs no reordering buffer) and the full matrix
-//!   is **never resident**: peak memory is the backpressure window,
-//!   `(queue + threads) · chunk` rows, independent of corpus size. This is
-//!   the paper's out-of-core regime (arXiv:1108.3072) — train afterwards
-//!   with [`crate::coordinator::stream_train`].
+//! * **in-memory merge** ([`sketch_dataset`] / [`sketch_corpus`], plus the
+//!   bbit-typed wrappers [`hash_dataset`] / [`hash_corpus`]) — shards land
+//!   in a pre-sized [`SketchMatrix`];
+//! * **disk spill** ([`sketch_dataset_to_store`] /
+//!   [`sketch_corpus_to_store`] and their bbit wrappers) — each arriving
+//!   shard is written straight to its own file in a [`crate::store`] shard
+//!   store (file name = sequence number, so out-of-order arrival needs no
+//!   reordering buffer) and the full matrix is **never resident**: peak
+//!   memory is the backpressure window, `(queue + threads) · chunk` rows,
+//!   independent of corpus size. This is the paper's out-of-core regime
+//!   (arXiv:1108.3072) — train afterwards with
+//!   [`crate::coordinator::stream_train`].
 
 use std::path::Path;
 use std::sync::mpsc::sync_channel;
@@ -35,13 +42,14 @@ use std::time::Instant;
 use crate::data::sparse::SparseBinaryDataset;
 use crate::data::synth::CorpusSampler;
 use crate::hashing::bbit::BbitSignatureMatrix;
-use crate::hashing::minwise::MinwiseHasher;
+use crate::hashing::feature_map::{BbitMinwiseMap, FeatureMap, Scheme, SketchLayout};
+use crate::hashing::sketch::{SketchMatrix, SketchRow};
 use crate::store::{ShardWriter, StoreSummary};
 
 /// Pipeline tuning knobs.
 #[derive(Clone, Debug)]
 pub struct PipelineOptions {
-    /// Hash worker threads.
+    /// Encode worker threads.
     pub threads: usize,
     /// Documents per work chunk (= rows per spilled shard on the store
     /// path).
@@ -66,7 +74,8 @@ pub struct PipelineStats {
     pub docs: usize,
     pub wall: std::time::Duration,
     pub docs_per_sec: f64,
-    /// Packed output bytes (the paper's tight n·b·k/8, pad bits excluded).
+    /// Packed output bytes (the paper's tight n·b·k/8 for bbit, 4·n·k for
+    /// dense schemes; pad bits excluded).
     pub output_bytes: usize,
     /// Bytes the output actually occupies: the word-aligned allocation for
     /// the in-memory sinks, on-disk bytes (headers + payloads, post-gzip)
@@ -80,29 +89,26 @@ pub struct PipelineStats {
 }
 
 enum Shard {
-    Rows(usize, BbitSignatureMatrix, usize), // (seq, signatures, nnz)
+    Rows(usize, SketchMatrix, usize), // (seq, encoded rows, nnz)
 }
 
-/// The shared worker/collector core. `hash_row` fills `sig_buf` with row
-/// `i`'s full 64-bit signature and returns `(label, nnz)`; `on_shard` runs
-/// on the collector thread for every arriving `(seq, shard, nnz)` — in
-/// arrival order, which is NOT sequence order — and returns `false` to
-/// abort the run (a failing sink must not make the workers hash the rest
-/// of an out-of-core corpus for nothing): workers stop claiming chunks,
-/// the channel drains, and the all-shards-placed invariant is only
-/// asserted for runs that were not aborted.
-#[allow(clippy::too_many_arguments)]
+/// The shared worker/collector core. `encode_row` fills the worker's
+/// [`SketchRow`] scratch with row `i`'s encoding and returns
+/// `(label, nnz)`; `on_shard` runs on the collector thread for every
+/// arriving `(seq, shard, nnz)` — in arrival order, which is NOT sequence
+/// order — and returns `false` to abort the run (a failing sink must not
+/// make the workers encode the rest of an out-of-core corpus for
+/// nothing): workers stop claiming chunks, the channel drains, and the
+/// all-shards-placed invariant is only asserted for runs that were not
+/// aborted.
 fn run_pipeline<F>(
     n: usize,
-    dim: u64,
-    k: usize,
-    b: u32,
-    seed: u64,
+    layout: SketchLayout,
     opt: &PipelineOptions,
-    hash_row: &F,
-    mut on_shard: impl FnMut(usize, BbitSignatureMatrix, usize) -> bool,
+    encode_row: &F,
+    mut on_shard: impl FnMut(usize, SketchMatrix, usize) -> bool,
 ) where
-    F: Fn(usize, &MinwiseHasher, &mut Vec<u64>) -> (f32, usize) + Sync,
+    F: Fn(usize, &mut SketchRow) -> (f32, usize) + Sync,
 {
     let threads = opt.threads.clamp(1, 64);
     let chunk = opt.chunk.max(1);
@@ -118,10 +124,11 @@ fn run_pipeline<F>(
             let next = next.clone();
             let stop = stop.clone();
             scope.spawn(move || {
-                // Each worker builds its own hasher (identical: same seed),
-                // so signatures do not depend on which worker ran the chunk.
-                let hasher = MinwiseHasher::new(dim, k, seed);
-                let mut sig_buf = Vec::new();
+                // One scratch per worker: zero allocations per row after
+                // the first fill. Encoders are deterministic and shared by
+                // reference, so output does not depend on which worker ran
+                // the chunk.
+                let mut scratch = SketchRow::new(&layout);
                 loop {
                     if stop.load(std::sync::atomic::Ordering::Relaxed) {
                         break; // sink failed: stop claiming work
@@ -132,14 +139,12 @@ fn run_pipeline<F>(
                     }
                     let lo = seq * chunk;
                     let hi = (lo + chunk).min(n);
-                    let mut shard = BbitSignatureMatrix::with_capacity(k, b, hi - lo);
+                    let mut shard = SketchMatrix::with_capacity(layout, hi - lo);
                     let mut nnz = 0usize;
                     for i in lo..hi {
-                        // One-pass k-lane engine, one buffer per worker:
-                        // zero allocations per row after the first fill.
-                        let (label, row_nnz) = hash_row(i, &hasher, &mut sig_buf);
+                        let (label, row_nnz) = encode_row(i, &mut scratch);
                         nnz += row_nnz;
-                        shard.push_full_row(&sig_buf, label);
+                        shard.push_encoded(&scratch, label);
                     }
                     if out_tx.send(Shard::Rows(seq, shard, nnz)).is_err() {
                         break; // collector gone
@@ -182,34 +187,31 @@ fn finish_stats(
     }
 }
 
-/// Hash every row of a dataset into a packed b-bit signature matrix using
-/// `opt.threads` workers. Deterministic in content for any thread count.
-pub fn hash_dataset(
+/// Encode every row of a dataset into a sketch matrix using any
+/// [`FeatureMap`] and `opt.threads` workers. Deterministic in content for
+/// any thread count.
+pub fn sketch_dataset(
     ds: &SparseBinaryDataset,
-    k: usize,
-    b: u32,
-    seed: u64,
+    map: &dyn FeatureMap,
     opt: &PipelineOptions,
-) -> (BbitSignatureMatrix, PipelineStats) {
+) -> (SketchMatrix, PipelineStats) {
     let t0 = Instant::now();
     let n = ds.n();
+    let layout = map.layout();
     let chunk = opt.chunk.max(1);
     // Place shards zero-copy as they arrive. Chunking is contiguous, so
     // shard `seq` owns rows `[seq·chunk, seq·chunk + shard.n())` of the
-    // pre-sized output; word-aligned rows make placement two
-    // `copy_from_slice` calls (words + labels) regardless of arrival order.
-    let mut out = BbitSignatureMatrix::with_rows(k, b, n);
+    // pre-sized output; placement is a pair of slice copies (rows +
+    // labels) regardless of arrival order.
+    let mut out = SketchMatrix::with_rows(layout, n);
     let (mut nnz_total, mut shards) = (0usize, 0usize);
     run_pipeline(
         n,
-        ds.dim(),
-        k,
-        b,
-        seed,
+        layout,
         opt,
-        &|i, hasher, buf| {
+        &|i, scratch| {
             let row = ds.row(i);
-            hasher.signature_batch_into(row, buf);
+            map.encode_into(row, scratch.row_mut());
             (ds.label(i), row.len())
         },
         |seq, m, nnz| {
@@ -223,31 +225,26 @@ pub fn hash_dataset(
     (out, stats)
 }
 
-/// Generate + shingle + hash a synthetic corpus end-to-end (documents never
-/// materialize as a full dataset — the true streaming path).
-pub fn hash_corpus(
+/// Generate + shingle + encode a synthetic corpus end-to-end (documents
+/// never materialize as a full dataset — the true streaming path).
+pub fn sketch_corpus(
     sampler: &CorpusSampler,
     n_docs: usize,
-    k: usize,
-    b: u32,
-    hash_seed: u64,
+    map: &dyn FeatureMap,
     opt: &PipelineOptions,
-) -> (BbitSignatureMatrix, PipelineStats) {
+) -> (SketchMatrix, PipelineStats) {
     let t0 = Instant::now();
+    let layout = map.layout();
     let chunk = opt.chunk.max(1);
-    let dim = sampler.config().dim;
-    let mut out = BbitSignatureMatrix::with_rows(k, b, n_docs);
+    let mut out = SketchMatrix::with_rows(layout, n_docs);
     let (mut nnz_total, mut shards) = (0usize, 0usize);
     run_pipeline(
         n_docs,
-        dim,
-        k,
-        b,
-        hash_seed,
+        layout,
         opt,
-        &|doc_id, hasher, buf| {
+        &|doc_id, scratch| {
             let (vec, label) = sampler.generate(doc_id as u64);
-            hasher.signature_batch_into(vec.indices(), buf);
+            map.encode_into(vec.indices(), scratch.row_mut());
             (label, vec.nnz())
         },
         |seq, m, nnz| {
@@ -262,28 +259,56 @@ pub fn hash_corpus(
     (out, stats)
 }
 
-/// The store-spill collector shared by the two `*_to_store` entry points:
-/// every arriving shard goes straight to its own file, so peak memory is
-/// the backpressure window, never the corpus.
-#[allow(clippy::too_many_arguments)]
-fn spill_pipeline<F>(
-    n: usize,
-    dim: u64,
+/// Hash every row of a dataset into a packed b-bit signature matrix —
+/// the bbit-typed wrapper over [`sketch_dataset`] (identical output, bit
+/// for bit, to the pre-`FeatureMap` pipeline).
+pub fn hash_dataset(
+    ds: &SparseBinaryDataset,
     k: usize,
     b: u32,
     seed: u64,
     opt: &PipelineOptions,
-    hash_row: &F,
+) -> (BbitSignatureMatrix, PipelineStats) {
+    let map = BbitMinwiseMap::new(ds.dim(), k, b, seed);
+    let (out, stats) = sketch_dataset(ds, &map, opt);
+    (out.into_bbit().expect("bbit map emits packed rows"), stats)
+}
+
+/// Generate + shingle + hash a synthetic corpus into packed b-bit
+/// signatures — the bbit-typed wrapper over [`sketch_corpus`].
+pub fn hash_corpus(
+    sampler: &CorpusSampler,
+    n_docs: usize,
+    k: usize,
+    b: u32,
+    hash_seed: u64,
+    opt: &PipelineOptions,
+) -> (BbitSignatureMatrix, PipelineStats) {
+    let map = BbitMinwiseMap::new(sampler.config().dim, k, b, hash_seed);
+    let (out, stats) = sketch_corpus(sampler, n_docs, &map, opt);
+    (out.into_bbit().expect("bbit map emits packed rows"), stats)
+}
+
+/// The store-spill collector shared by the `*_to_store` entry points:
+/// every arriving shard goes straight to its own file, so peak memory is
+/// the backpressure window, never the corpus.
+fn spill_pipeline<F>(
+    n: usize,
+    map: &dyn FeatureMap,
+    scheme: Scheme,
+    opt: &PipelineOptions,
+    encode_row: &F,
     dir: &Path,
     gzip: bool,
 ) -> anyhow::Result<(StoreSummary, usize)>
 where
-    F: Fn(usize, &MinwiseHasher, &mut Vec<u64>) -> (f32, usize) + Sync,
+    F: Fn(usize, &mut SketchRow) -> (f32, usize) + Sync,
 {
-    let mut writer = ShardWriter::create(dir, k, b, gzip)?;
+    let layout = map.layout();
+    let mut writer = ShardWriter::create(dir, scheme, layout, gzip)?;
     let mut nnz_total = 0usize;
     let mut io_err: Option<std::io::Error> = None;
-    run_pipeline(n, dim, k, b, seed, opt, hash_row, |seq, m, nnz| {
+    run_pipeline(n, layout, opt, encode_row, |seq, m, nnz| {
         nnz_total += nnz;
         if io_err.is_none() {
             if let Err(e) = writer.write_shard(seq, &m) {
@@ -291,7 +316,7 @@ where
             }
         }
         // On the first write failure (disk full, permissions) return
-        // false: run_pipeline stops the workers from hashing the rest of
+        // false: run_pipeline stops the workers from encoding the rest of
         // the corpus and drains the in-flight window; the error surfaces
         // below.
         io_err.is_none()
@@ -303,14 +328,14 @@ where
     Ok((summary, nnz_total))
 }
 
-/// [`hash_dataset`], spilling shards to a [`crate::store`] directory
-/// instead of merging in memory. The full signature matrix is never
-/// resident.
-pub fn hash_dataset_to_store(
+/// [`sketch_dataset`], spilling shards to a [`crate::store`] directory
+/// instead of merging in memory. The full sketch matrix is never
+/// resident. `scheme` is recorded in the store header so readers know
+/// what the rows are.
+pub fn sketch_dataset_to_store(
     ds: &SparseBinaryDataset,
-    k: usize,
-    b: u32,
-    seed: u64,
+    map: &dyn FeatureMap,
+    scheme: Scheme,
     opt: &PipelineOptions,
     dir: &Path,
     gzip: bool,
@@ -319,14 +344,12 @@ pub fn hash_dataset_to_store(
     let n = ds.n();
     let (summary, nnz_total) = spill_pipeline(
         n,
-        ds.dim(),
-        k,
-        b,
-        seed,
+        map,
+        scheme,
         opt,
-        &|i, hasher, buf| {
+        &|i, scratch| {
             let row = ds.row(i);
-            hasher.signature_batch_into(row, buf);
+            map.encode_into(row, scratch.row_mut());
             (ds.label(i), row.len())
         },
         dir,
@@ -343,33 +366,28 @@ pub fn hash_dataset_to_store(
     Ok((summary, stats))
 }
 
-/// [`hash_corpus`], spilling shards to a [`crate::store`] directory: the
+/// [`sketch_corpus`], spilling shards to a [`crate::store`] directory: the
 /// end-to-end out-of-core preprocessing pass — documents are generated on
-/// the fly and signatures go to disk, so neither the corpus nor the full
-/// signature matrix is ever resident.
-#[allow(clippy::too_many_arguments)]
-pub fn hash_corpus_to_store(
+/// the fly and sketches go to disk, so neither the corpus nor the full
+/// matrix is ever resident.
+pub fn sketch_corpus_to_store(
     sampler: &CorpusSampler,
     n_docs: usize,
-    k: usize,
-    b: u32,
-    hash_seed: u64,
+    map: &dyn FeatureMap,
+    scheme: Scheme,
     opt: &PipelineOptions,
     dir: &Path,
     gzip: bool,
 ) -> anyhow::Result<(StoreSummary, PipelineStats)> {
     let t0 = Instant::now();
-    let dim = sampler.config().dim;
     let (summary, nnz_total) = spill_pipeline(
         n_docs,
-        dim,
-        k,
-        b,
-        hash_seed,
+        map,
+        scheme,
         opt,
-        &|doc_id, hasher, buf| {
+        &|doc_id, scratch| {
             let (vec, label) = sampler.generate(doc_id as u64);
-            hasher.signature_batch_into(vec.indices(), buf);
+            map.encode_into(vec.indices(), scratch.row_mut());
             (label, vec.nnz())
         },
         dir,
@@ -386,10 +404,42 @@ pub fn hash_corpus_to_store(
     Ok((summary, stats))
 }
 
+/// [`sketch_dataset_to_store`] with the bbit map — the historical
+/// signature, kept because it is the b-bit fast path callers reach for.
+pub fn hash_dataset_to_store(
+    ds: &SparseBinaryDataset,
+    k: usize,
+    b: u32,
+    seed: u64,
+    opt: &PipelineOptions,
+    dir: &Path,
+    gzip: bool,
+) -> anyhow::Result<(StoreSummary, PipelineStats)> {
+    let map = BbitMinwiseMap::new(ds.dim(), k, b, seed);
+    sketch_dataset_to_store(ds, &map, Scheme::Bbit, opt, dir, gzip)
+}
+
+/// [`sketch_corpus_to_store`] with the bbit map.
+#[allow(clippy::too_many_arguments)]
+pub fn hash_corpus_to_store(
+    sampler: &CorpusSampler,
+    n_docs: usize,
+    k: usize,
+    b: u32,
+    hash_seed: u64,
+    opt: &PipelineOptions,
+    dir: &Path,
+    gzip: bool,
+) -> anyhow::Result<(StoreSummary, PipelineStats)> {
+    let map = BbitMinwiseMap::new(sampler.config().dim, k, b, hash_seed);
+    sketch_corpus_to_store(sampler, n_docs, &map, Scheme::Bbit, opt, dir, gzip)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{generate_corpus, SynthConfig};
+    use crate::hashing::feature_map::FeatureMapSpec;
     use crate::store::SigShardStore;
 
     fn cfg() -> SynthConfig {
@@ -436,6 +486,41 @@ mod tests {
     }
 
     #[test]
+    fn dense_scheme_sharding_is_thread_count_invariant() {
+        // The generic pipeline's tentpole invariant, on a dense scheme:
+        // out-of-order f32 shard placement must be bit-identical to the
+        // single-threaded run.
+        let ds = generate_corpus(&cfg());
+        for scheme in [Scheme::Vw, Scheme::BbitVw] {
+            let map = FeatureMapSpec::new(scheme, ds.dim(), 32, 4, 9).build();
+            let (m1, _) = sketch_dataset(
+                &ds,
+                map.as_ref(),
+                &PipelineOptions {
+                    threads: 1,
+                    chunk: 300,
+                    queue: 2,
+                },
+            );
+            let (m8, stats) = sketch_dataset(
+                &ds,
+                map.as_ref(),
+                &PipelineOptions {
+                    threads: 8,
+                    chunk: 13,
+                    queue: 3,
+                },
+            );
+            let (d1, d8) = (m1.as_dense().unwrap(), m8.as_dense().unwrap());
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(d1.values()), bits(d8.values()), "{scheme}");
+            assert_eq!(m1.labels(), m8.labels());
+            assert_eq!(stats.shards, 300usize.div_ceil(13));
+            assert_eq!(stats.output_bytes, d8.packed_bytes());
+        }
+    }
+
+    #[test]
     fn corpus_streaming_matches_dataset_path() {
         let c = cfg();
         let ds = generate_corpus(&c);
@@ -450,8 +535,8 @@ mod tests {
         assert_eq!(stats.docs, c.n_docs);
         assert!(stats.docs_per_sec > 0.0);
         assert!(stats.input_nnz > 0);
-        // The new stats surface: aligned storage ≥ packed, shard count is
-        // the chunk count.
+        // The stats surface: aligned storage ≥ packed, shard count is the
+        // chunk count.
         assert!(stats.storage_bytes >= stats.output_bytes);
         assert_eq!(stats.shards, c.n_docs.div_ceil(PipelineOptions::default().chunk));
     }
@@ -545,9 +630,11 @@ mod tests {
         assert_eq!(stats.output_bytes, mem.packed_bytes());
         assert!(stats.storage_bytes > stats.output_bytes, "headers add bytes");
         let store = SigShardStore::open(&dir).unwrap();
+        assert_eq!(store.scheme(), Scheme::Bbit);
         let mut back = crate::hashing::bbit::BbitSignatureMatrix::new(16, 4);
         for s in 0..store.n_shards() {
-            back.append(&store.read_shard(s).unwrap());
+            let shard = store.read_shard(s).unwrap();
+            back.append(shard.as_bbit().unwrap());
         }
         assert_eq!(back.n(), mem.n());
         assert_eq!(back.words(), mem.words(), "spilled store must be bit-identical");

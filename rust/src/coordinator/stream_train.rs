@@ -32,8 +32,10 @@ use std::io;
 use std::time::{Duration, Instant};
 
 use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::feature_map::SketchLayout;
+use crate::hashing::sketch::SketchMatrix;
 use crate::rng::Xoshiro256;
-use crate::solvers::{BinaryFeatures, ExpandedView, LinearModel};
+use crate::solvers::{ExpandedView, Features, LinearModel, SketchView};
 use crate::store::SigShardStore;
 
 /// Which streaming update to run per visited row.
@@ -142,7 +144,9 @@ impl SgdCore {
     /// `crate::solvers::sgd::train_pegasos`'s inner loop, minus the random
     /// row sampling and the ball projection — and with it the incremental
     /// ‖w‖² bookkeeping, so each update is one dot + one axpy pass).
-    fn step<Ft: BinaryFeatures>(&mut self, feats: &Ft, i: usize) {
+    /// Generic over [`Features`]: packed stores step through the virtual
+    /// expansion exactly as before, dense stores through their f32 rows.
+    fn step<Ft: Features>(&mut self, feats: &Ft, i: usize) {
         self.t += 1;
         let eta = 1.0 / (self.lambda * self.t as f64);
         let y = feats.label(i) as f64;
@@ -201,7 +205,7 @@ impl SgdCore {
 }
 
 /// Per-row loss term of the streamed objective (hinge or stable log-loss).
-fn row_loss<Ft: BinaryFeatures>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
+fn row_loss<Ft: Features>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
     let m = feats.label(i) as f64 * feats.dot(i, w);
     match algo {
         StreamAlgo::Pegasos => (1.0 - m).max(0.0),
@@ -251,7 +255,7 @@ pub fn train_stream(
             format!("store at {} is empty", store.dir().display()),
         ));
     }
-    let dim = store.expanded_dim();
+    let dim = store.train_dim();
     let lambda = 1.0 / (opt.c * n as f64);
     let total_steps = opt.epochs * n;
     let mut core = SgdCore::new(opt.algo, dim, lambda, total_steps, opt.average);
@@ -264,7 +268,7 @@ pub fn train_stream(
         let mut stream = store.stream(&order, opt.prefetch);
         for item in &mut stream {
             let shard = item?;
-            let view = ExpandedView::new(&shard);
+            let view = SketchView::new(&shard);
             for i in 0..shard.n() {
                 core.step(&view, i);
             }
@@ -280,7 +284,7 @@ pub fn train_stream(
     let mut stream = store.stream(&store.seq_order(), opt.prefetch);
     for item in &mut stream {
         let shard = item?;
-        let view = ExpandedView::new(&shard);
+        let view = SketchView::new(&shard);
         for i in 0..shard.n() {
             loss_sum += row_loss(opt.algo, &view, i, &w);
         }
@@ -302,19 +306,15 @@ pub fn train_stream(
     })
 }
 
-/// The in-memory twin of [`train_stream`]: the same [`SgdCore`] driven
-/// over a resident matrix, treated as a single shard. With
-/// `shuffle: false` (or a single-shard store) this performs the identical
-/// floating-point operation sequence as the disk path — the bit-identity
-/// oracle for the out-of-core tests.
-pub fn train_epochs_in_memory(
-    sigs: &BbitSignatureMatrix,
+/// The shared in-memory epoch driver: the same [`SgdCore`] as the disk
+/// path, over any [`Features`] view modeled as a single resident shard.
+fn train_epochs_core<Ft: Features>(
+    view: &Ft,
+    dim: usize,
     opt: &StreamTrainOptions,
 ) -> LinearModel {
-    let n = sigs.n();
+    let n = view.n();
     assert!(n > 0, "empty training set");
-    let view = ExpandedView::new(sigs);
-    let dim = sigs.k() << sigs.b();
     let lambda = 1.0 / (opt.c * n as f64);
     let total_steps = opt.epochs * n;
     let mut core = SgdCore::new(opt.algo, dim, lambda, total_steps, opt.average);
@@ -325,19 +325,51 @@ pub fn train_epochs_in_memory(
         let order = epoch_order(1, opt.shuffle, &mut order_rng);
         debug_assert_eq!(order, [0]);
         for i in 0..n {
-            core.step(&view, i);
+            core.step(view, i);
         }
     }
     let w = core.into_weights();
     let mut loss_sum = 0.0f64;
     for i in 0..n {
-        loss_sum += row_loss(opt.algo, &view, i, &w);
+        loss_sum += row_loss(opt.algo, view, i, &w);
     }
     let obj = objective(reg_term(lambda, &w), loss_sum, n);
     LinearModel {
         w,
         iters: total_steps,
         objective: obj,
+    }
+}
+
+/// The in-memory twin of [`train_stream`]: the same [`SgdCore`] driven
+/// over a resident matrix, treated as a single shard. With
+/// `shuffle: false` (or a single-shard store) this performs the identical
+/// floating-point operation sequence as the disk path — the bit-identity
+/// oracle for the out-of-core tests.
+pub fn train_epochs_in_memory(
+    sigs: &BbitSignatureMatrix,
+    opt: &StreamTrainOptions,
+) -> LinearModel {
+    let view = ExpandedView::new(sigs);
+    let layout = SketchLayout::PackedBbit {
+        k: sigs.k(),
+        b: sigs.b(),
+    };
+    train_epochs_core(&view, layout.train_dim(), opt)
+}
+
+/// [`train_epochs_in_memory`] over any scheme's sketch output — the
+/// bit-identity oracle for dense out-of-core stores, and the unified
+/// entry point the multi-scheme callers use.
+pub fn train_epochs_sketch(sk: &SketchMatrix, opt: &StreamTrainOptions) -> LinearModel {
+    match sk {
+        // Route through the packed driver so the bbit path is literally
+        // the same code (and therefore the same bits) as before.
+        SketchMatrix::Bbit(m) => train_epochs_in_memory(m, opt),
+        SketchMatrix::Dense(_) => {
+            let view = SketchView::new(sk);
+            train_epochs_core(&view, sk.train_dim(), opt)
+        }
     }
 }
 
@@ -352,9 +384,9 @@ pub fn evaluate_stream(
     let mut total = 0usize;
     for item in store.stream(&store.seq_order(), prefetch) {
         let shard = item?;
-        let view = ExpandedView::new(&shard);
+        let view = SketchView::new(&shard);
         for i in 0..shard.n() {
-            if model.predict(&view, i) == view.label(i) {
+            if model.predict(&view, i) == Features::label(&view, i) {
                 correct += 1;
             }
         }

@@ -9,9 +9,10 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::pipeline::{hash_dataset, PipelineOptions};
-use crate::coordinator::trainer::{evaluate, train_signatures, Backend};
+use crate::coordinator::pipeline::{hash_dataset, sketch_dataset, PipelineOptions};
+use crate::coordinator::trainer::{evaluate, evaluate_sketch, train_signatures, train_sketch, Backend};
 use crate::data::sparse::SparseBinaryDataset;
+use crate::hashing::feature_map::{matched_dense_k, FeatureMapSpec, Scheme};
 
 /// One grid cell's result.
 #[derive(Clone, Debug)]
@@ -214,6 +215,139 @@ pub fn aggregate(records: &[SweepRecord]) -> Vec<AggRecord> {
         .collect()
 }
 
+/// One cell of the multi-scheme equal-storage sweep.
+#[derive(Clone, Debug)]
+pub struct SchemeRecord {
+    pub scheme: Scheme,
+    /// Sample width actually used by this scheme at this storage point
+    /// (permutations for bbit/bbit_vw, buckets/projections for dense).
+    pub k: usize,
+    /// Bits per value (bbit/bbit_vw; 0 for dense schemes).
+    pub b: u32,
+    /// Storage bits per example — the shared x-axis of the comparison.
+    pub storage_bits: usize,
+    pub rep: usize,
+    pub accuracy: f64,
+    pub train_secs: f64,
+    pub test_secs: f64,
+    pub hash_secs: f64,
+}
+
+/// Multi-scheme sweep specification: one storage point per `(k, b)` pair
+/// of the bbit grid, every scheme evaluated at that matched storage.
+#[derive(Clone, Debug)]
+pub struct SchemeSweepSpec {
+    pub schemes: Vec<Scheme>,
+    /// bbit signature widths k; each defines the storage point `k·b` bits.
+    pub k_list: Vec<usize>,
+    /// bbit bits per value at every storage point.
+    pub b: u32,
+    pub c: f64,
+    pub reps: usize,
+    pub backend: Backend,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// The scheme's spec at the storage point defined by bbit `(k, b)`:
+/// packed schemes keep `(k, b)`; dense schemes get
+/// `k_dense = max(1, k·b/32)` so `32·k_dense` bits ≈ `k·b` bits;
+/// `bbit_vw` keeps the signature `(k, b)` and hashes into `k_dense`
+/// buckets (its *stored* output is the bucket vector).
+fn scheme_spec(scheme: Scheme, dim: u64, k: usize, b: u32, seed: u64) -> FeatureMapSpec {
+    let k_dense = matched_dense_k(k, b);
+    match scheme {
+        Scheme::Bbit => FeatureMapSpec::new(scheme, dim, k, b, seed),
+        Scheme::Vw | Scheme::ProjNormal | Scheme::ProjSparse => {
+            FeatureMapSpec::new(scheme, dim, k_dense, 0, seed)
+        }
+        Scheme::BbitVw => FeatureMapSpec {
+            buckets: k_dense,
+            ..FeatureMapSpec::new(scheme, dim, k, b, seed)
+        },
+    }
+}
+
+/// Run the paper's headline comparison: every scheme at matched storage,
+/// over the bbit `(k, b)` grid × repetitions. Records are the per-scheme
+/// accuracy-vs-storage curve the §6–§8 figures plot. The unit of parallel
+/// work is a `(scheme, k, rep)` triple (hashing dominates, and each cell
+/// re-hashes with a repetition-specific seed).
+pub fn run_scheme_sweep(
+    train: &SparseBinaryDataset,
+    test: &SparseBinaryDataset,
+    spec: &SchemeSweepSpec,
+) -> Vec<SchemeRecord> {
+    let mut items = Vec::new();
+    for &scheme in &spec.schemes {
+        for &k in &spec.k_list {
+            for rep in 0..spec.reps {
+                items.push((scheme, k, rep));
+            }
+        }
+    }
+    let next = AtomicUsize::new(0);
+    let records = Mutex::new(Vec::<SchemeRecord>::new());
+    let threads = spec.threads.clamp(1, 64);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let pipe_opt = PipelineOptions {
+                    threads: 1,
+                    ..Default::default()
+                };
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= items.len() {
+                        break;
+                    }
+                    let (scheme, k, rep) = items[idx];
+                    let hash_seed = spec
+                        .seed
+                        .wrapping_add(rep as u64)
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ ((spec.b as u64) << 32 | k as u64);
+                    let mspec = scheme_spec(scheme, train.dim(), k, spec.b, hash_seed);
+                    let map = mspec.build();
+                    let t_hash = std::time::Instant::now();
+                    let (sk_train, _) = sketch_dataset(train, map.as_ref(), &pipe_opt);
+                    let (sk_test, _) = sketch_dataset(test, map.as_ref(), &pipe_opt);
+                    let hash_secs = t_hash.elapsed().as_secs_f64();
+                    let out = train_sketch(
+                        &sk_train,
+                        spec.backend,
+                        spec.c,
+                        spec.seed ^ rep as u64,
+                        None,
+                        None,
+                    )
+                    .expect("rust backends cannot fail");
+                    let (acc, test_time) = evaluate_sketch(&out.model, &sk_test);
+                    let layout = map.layout();
+                    records.lock().unwrap().push(SchemeRecord {
+                        scheme,
+                        k: layout.k(),
+                        b: if scheme.is_dense() { 0 } else { spec.b },
+                        storage_bits: layout.storage_bits_per_example(),
+                        rep,
+                        accuracy: acc,
+                        train_secs: out.train_time.as_secs_f64(),
+                        test_secs: test_time.as_secs_f64(),
+                        hash_secs,
+                    });
+                }
+            });
+        }
+    });
+
+    let mut out = records.into_inner().unwrap();
+    out.sort_by(|a, b| {
+        (a.scheme, a.storage_bits, a.k, a.rep).cmp(&(b.scheme, b.storage_bits, b.k, b.rep))
+    });
+    out
+}
+
 /// Aggregated (over repetitions) grid cell.
 #[derive(Clone, Debug)]
 pub struct AggRecord {
@@ -275,6 +409,53 @@ mod tests {
             acc_big + 0.05 >= acc_small,
             "b=8/k=32 {acc_big} vs b=2/k=16 {acc_small}"
         );
+    }
+
+    #[test]
+    fn scheme_sweep_covers_grid_at_matched_storage() {
+        let cfg = SynthConfig {
+            n_docs: 120,
+            dim: 1 << 18,
+            vocab: 3_000,
+            topic_size: 80,
+            mean_len: 40,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (train, test) = ds.train_test_split(0.3, 1);
+        let spec = SchemeSweepSpec {
+            schemes: vec![Scheme::Bbit, Scheme::Vw, Scheme::BbitVw],
+            k_list: vec![64, 128],
+            b: 8,
+            c: 1.0,
+            reps: 1,
+            backend: Backend::SvmDcd,
+            threads: 4,
+            seed: 9,
+        };
+        let recs = run_scheme_sweep(&train, &test, &spec);
+        assert_eq!(recs.len(), 3 * 2);
+        for r in &recs {
+            assert!(r.accuracy > 0.4, "{}: acc {}", r.scheme, r.accuracy);
+            assert!(r.storage_bits > 0);
+        }
+        // Matched storage: every scheme at bbit point (k, b) reports the
+        // same storage bits (k·b = 32·k_dense, exact for these k).
+        for &k in &spec.k_list {
+            let bits: Vec<usize> = recs
+                .iter()
+                .filter(|r| r.storage_bits == k * 8)
+                .map(|r| r.storage_bits)
+                .collect();
+            assert_eq!(bits.len(), 3, "k={k}: all schemes at {} bits", k * 8);
+        }
+        // Dense rows report their dense width: k_dense = k·8/32.
+        let vw: Vec<&SchemeRecord> =
+            recs.iter().filter(|r| r.scheme == Scheme::Vw).collect();
+        assert_eq!(vw.len(), 2);
+        assert!(vw.iter().any(|r| r.k == 16) && vw.iter().any(|r| r.k == 32));
+        assert!(vw.iter().all(|r| r.b == 0));
     }
 
     #[test]

@@ -15,12 +15,13 @@
 use std::time::{Duration, Instant};
 
 use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::sketch::SketchMatrix;
 use crate::rng::Xoshiro256;
 use crate::runtime::{ArtifactKind, Runtime};
 use crate::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
 use crate::solvers::logreg::{train_logreg, LogRegOptions};
 use crate::solvers::sgd::{train_pegasos, PegasosOptions};
-use crate::solvers::{ExpandedView, LinearModel};
+use crate::solvers::{DenseView, ExpandedView, LinearModel, SketchView};
 
 /// Which trainer to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +75,51 @@ impl Default for PjrtTrainOptions {
     }
 }
 
+/// The pure-rust linear backends over any [`Features`] view — the one
+/// copy of the option construction the packed AND dense paths share, so
+/// the two schemes can never drift onto different hyperparameters.
+/// Returns `None` for the PJRT backends (the caller decides how to handle
+/// them).
+///
+/// [`Features`]: crate::solvers::Features
+fn train_rust_backend<Ft: crate::solvers::Features>(
+    view: &Ft,
+    n: usize,
+    backend: Backend,
+    c: f64,
+    seed: u64,
+) -> Option<LinearModel> {
+    Some(match backend {
+        Backend::SvmDcd => train_svm(
+            view,
+            &SvmOptions {
+                c,
+                loss: SvmLoss::L2,
+                seed,
+                ..Default::default()
+            },
+        ),
+        Backend::LogRegDcd => train_logreg(
+            view,
+            &LogRegOptions {
+                c,
+                seed,
+                ..Default::default()
+            },
+        ),
+        Backend::Pegasos => train_pegasos(
+            view,
+            &PegasosOptions {
+                c,
+                steps: 200 * n.max(1),
+                seed,
+                ..Default::default()
+            },
+        ),
+        Backend::PjrtLogReg | Backend::PjrtSvm => return None,
+    })
+}
+
 /// Train a linear model on packed signatures with the chosen backend.
 ///
 /// `runtime` is only consulted by the PJRT backends (pass `None` for the
@@ -88,34 +134,9 @@ pub fn train_signatures(
 ) -> anyhow::Result<TrainOutcome> {
     let view = ExpandedView::new(sigs);
     let t0 = Instant::now();
-    let model = match backend {
-        Backend::SvmDcd => train_svm(
-            &view,
-            &SvmOptions {
-                c,
-                loss: SvmLoss::L2,
-                seed,
-                ..Default::default()
-            },
-        ),
-        Backend::LogRegDcd => train_logreg(
-            &view,
-            &LogRegOptions {
-                c,
-                seed,
-                ..Default::default()
-            },
-        ),
-        Backend::Pegasos => train_pegasos(
-            &view,
-            &PegasosOptions {
-                c,
-                steps: 200 * sigs.n().max(1),
-                seed,
-                ..Default::default()
-            },
-        ),
-        Backend::PjrtLogReg | Backend::PjrtSvm => {
+    let model = match train_rust_backend(&view, sigs.n(), backend, c, seed) {
+        Some(model) => model,
+        None => {
             let rt = runtime
                 .ok_or_else(|| anyhow::anyhow!("PJRT backend requires a Runtime"))?;
             let kind = if backend == Backend::PjrtLogReg {
@@ -136,6 +157,48 @@ pub fn train_signatures(
         train_time: t0.elapsed(),
         backend,
     })
+}
+
+/// Train a linear model on any scheme's sketch output. Packed b-bit
+/// matrices take the exact [`train_signatures`] path (virtual Theorem-2
+/// expansion — bit-identical to the pre-`FeatureMap` behavior); dense f32
+/// samples (VW / projections / bbit+VW) feed the same solvers through a
+/// [`DenseView`]. PJRT backends exist only for packed signatures (the AOT
+/// artifacts bake in the expansion), so they error on dense input.
+pub fn train_sketch(
+    sk: &SketchMatrix,
+    backend: Backend,
+    c: f64,
+    seed: u64,
+    runtime: Option<&Runtime>,
+    pjrt_opt: Option<&PjrtTrainOptions>,
+) -> anyhow::Result<TrainOutcome> {
+    match sk {
+        SketchMatrix::Bbit(m) => train_signatures(m, backend, c, seed, runtime, pjrt_opt),
+        SketchMatrix::Dense(m) => {
+            let view = DenseView::new(m);
+            let t0 = Instant::now();
+            let model = train_rust_backend(&view, m.n(), backend, c, seed).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "PJRT artifacts cover packed b-bit signatures only — \
+                     train dense schemes with --backend svm|logreg|pegasos"
+                )
+            })?;
+            Ok(TrainOutcome {
+                model,
+                train_time: t0.elapsed(),
+                backend,
+            })
+        }
+    }
+}
+
+/// Timed evaluation over any scheme's sketch output (see [`evaluate`]).
+pub fn evaluate_sketch(model: &LinearModel, sk: &SketchMatrix) -> (f64, Duration) {
+    let view = SketchView::new(sk);
+    let t0 = Instant::now();
+    let acc = model.accuracy(&view);
+    (acc, t0.elapsed())
 }
 
 /// Minibatch gradient descent through the compiled train-step artifact.
@@ -261,5 +324,52 @@ mod tests {
         let (train, _) = sigs();
         let err = train_signatures(&train, Backend::PjrtLogReg, 1.0, 1, None, None);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn train_sketch_bbit_is_bit_identical_to_train_signatures() {
+        // The acceptance criterion: routing scheme=bbit through the new
+        // unified entry point must not change a single weight bit.
+        let (train, test) = sigs();
+        let sk = crate::hashing::sketch::SketchMatrix::Bbit(train.clone());
+        let sk_test = crate::hashing::sketch::SketchMatrix::Bbit(test.clone());
+        for backend in [Backend::SvmDcd, Backend::LogRegDcd, Backend::Pegasos] {
+            let old = train_signatures(&train, backend, 1.0, 3, None, None).unwrap();
+            let new = train_sketch(&sk, backend, 1.0, 3, None, None).unwrap();
+            let old_bits: Vec<u32> = old.model.w.iter().map(|x| x.to_bits()).collect();
+            let new_bits: Vec<u32> = new.model.w.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(old_bits, new_bits, "{backend:?}: weights must be bit-identical");
+            let (acc_old, _) = evaluate(&old.model, &test);
+            let (acc_new, _) = evaluate_sketch(&new.model, &sk_test);
+            assert_eq!(acc_old.to_bits(), acc_new.to_bits(), "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn train_sketch_dense_learns_and_rejects_pjrt() {
+        use crate::coordinator::pipeline::sketch_dataset;
+        use crate::data::synth::{generate_corpus, SynthConfig};
+        use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
+        let cfg = SynthConfig {
+            n_docs: 400,
+            dim: 1 << 20,
+            vocab: 5_000,
+            topic_size: 100,
+            mean_len: 60,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (tr, te) = ds.train_test_split(0.25, 5);
+        let map = FeatureMapSpec::new(Scheme::Vw, ds.dim(), 256, 0, 11).build();
+        let opt = PipelineOptions::default();
+        let (sk_tr, _) = sketch_dataset(&tr, map.as_ref(), &opt);
+        let (sk_te, _) = sketch_dataset(&te, map.as_ref(), &opt);
+        for backend in [Backend::SvmDcd, Backend::LogRegDcd, Backend::Pegasos] {
+            let out = train_sketch(&sk_tr, backend, 1.0, 3, None, None).unwrap();
+            let (acc, _) = evaluate_sketch(&out.model, &sk_te);
+            assert!(acc > 0.8, "{backend:?}: vw test acc {acc}");
+        }
+        assert!(train_sketch(&sk_tr, Backend::PjrtLogReg, 1.0, 1, None, None).is_err());
     }
 }

@@ -1,0 +1,618 @@
+//! The unified encoder API over every hashing scheme the paper compares.
+//!
+//! A [`FeatureMap`] turns one sparse binary document (sorted shingle
+//! indices) into one sketch row; its [`SketchLayout`] says what that row
+//! physically is. The pipeline, shard store and trainers are generic over
+//! this trait, so the paper's headline *comparison at equal storage*
+//! (§6–§8) runs through the same fast, out-of-core machinery for every
+//! scheme:
+//!
+//! | scheme        | map                 | layout                | paper |
+//! |---------------|---------------------|-----------------------|-------|
+//! | `bbit`        | [`BbitMinwiseMap`]  | `PackedBbit{k,b}`     | §2–§5 |
+//! | `vw`          | [`VwFeatureMap`]    | `SparseF32{k}`        | §6.2  |
+//! | `proj_normal` | [`ProjectionMap`]   | `DenseF32{k}`         | §6.1  |
+//! | `proj_sparse` | [`ProjectionMap`]   | `DenseF32{k}`         | §6.1  |
+//! | `bbit_vw`     | [`BbitVwMap`]       | `DenseF32{buckets}`   | §7    |
+//!
+//! `bbit_vw` is the paper's §7 combination: VW-hash the (virtual)
+//! Theorem-2 expansion of the b-bit signatures down to `buckets`
+//! dimensions, trading a little variance for a much smaller dense model
+//! when `2^b·k` is large.
+//!
+//! [`Scheme`] is the registry: config/CLI strings parse into it, it builds
+//! maps through [`FeatureMapSpec`], and its byte code is what the shard
+//! store's v2 header records.
+
+use super::minwise::MinwiseHasher;
+use super::projections::{ProjectionKind, RandomProjection};
+use super::sketch::{SketchMatrix, SketchRow};
+use super::vw::VwHasher;
+
+/// What one encoded row physically is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchLayout {
+    /// `k` values of `b` bits each, word-aligned packed
+    /// ([`crate::hashing::bbit::BbitSignatureMatrix`] rows).
+    PackedBbit { k: usize, b: u32 },
+    /// `k` dense f32 values ([`crate::hashing::sketch::F32Matrix`] rows).
+    DenseF32 { k: usize },
+    /// Same physical row as [`Self::DenseF32`], but the scheme is
+    /// sparsity-preserving (paper §7: VW's nnz(out) ≤ nnz(in)) — reported
+    /// separately so storage accounting can exploit it later.
+    SparseF32 { k: usize },
+}
+
+impl SketchLayout {
+    /// Values per row (permutations, buckets or projections).
+    pub fn k(&self) -> usize {
+        match *self {
+            Self::PackedBbit { k, .. } | Self::DenseF32 { k } | Self::SparseF32 { k } => k,
+        }
+    }
+
+    /// Storage cost of one example in bits — the paper's equal-storage
+    /// axis: `k·b` packed, `32·k` dense.
+    pub fn storage_bits_per_example(&self) -> usize {
+        match *self {
+            Self::PackedBbit { k, b } => k * b as usize,
+            Self::DenseF32 { k } | Self::SparseF32 { k } => 32 * k,
+        }
+    }
+
+    /// The feature dimension a linear model trains in: the Theorem-2
+    /// expansion `k·2^b` for packed signatures, `k` for dense samples.
+    pub fn train_dim(&self) -> usize {
+        match *self {
+            Self::PackedBbit { k, b } => k << b,
+            Self::DenseF32 { k } | Self::SparseF32 { k } => k,
+        }
+    }
+
+    /// Whether rows are packed b-bit signatures.
+    pub fn is_packed(&self) -> bool {
+        matches!(self, Self::PackedBbit { .. })
+    }
+}
+
+/// A mutable destination row handed to [`FeatureMap::encode_into`]. The
+/// variant matches the map's [`SketchLayout`]; buffers are caller-owned
+/// and reused across rows (capacity survives, nothing is stolen — the
+/// PR-2 buffer contract).
+pub enum RowMut<'a> {
+    /// Packed layouts: the full 64-bit minwise lanes (cleared and resized
+    /// to k by the encoder; the matrix packs the low b bits on push).
+    Lanes(&'a mut Vec<u64>),
+    /// Dense layouts: the f32 output row (cleared and zero-resized to k by
+    /// the encoder), plus a 64-bit lane scratch for composite schemes
+    /// (`bbit_vw` signs its intermediate signature through it).
+    Dense {
+        out: &'a mut Vec<f32>,
+        lanes: &'a mut Vec<u64>,
+    },
+}
+
+/// One hashing scheme as an encoder: sparse binary document in, one sketch
+/// row out. Implementations are deterministic (seed-derived) and `Sync`,
+/// so pipeline workers share one map by reference.
+pub trait FeatureMap: Sync {
+    /// The physical layout every encoded row has.
+    fn layout(&self) -> SketchLayout;
+
+    /// Encode one document (sorted shingle indices) into `row`. The `row`
+    /// variant matches [`Self::layout`]; encoders clear/resize the buffer
+    /// themselves, so callers just keep handing the same scratch back in.
+    fn encode_into(&self, set: &[u64], row: RowMut<'_>);
+
+    /// Chunk variant: encode many documents into a matrix with one shared
+    /// scratch buffer (no per-row allocation). The default loops
+    /// [`Self::encode_into`]; maps with a batched kernel may override.
+    fn encode_chunk_into(&self, sets: &[&[u64]], labels: &[f32], out: &mut SketchMatrix) {
+        assert_eq!(sets.len(), labels.len(), "one label per document");
+        let mut scratch = SketchRow::new(&self.layout());
+        for (set, &y) in sets.iter().zip(labels) {
+            self.encode_into(set, scratch.row_mut());
+            out.push_encoded(&scratch, y);
+        }
+    }
+}
+
+/// The scheme registry: every hashing scheme the system can run, parsed
+/// from config/CLI strings and recorded (as [`Scheme::code`]) in the shard
+/// store header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Scheme {
+    /// b-bit minwise hashing (the paper's method, §2–§5).
+    Bbit,
+    /// VW feature hashing (§6.2).
+    Vw,
+    /// Dense Gaussian random projections (§6.1, s = 3).
+    ProjNormal,
+    /// Sparse random projections (§6.1 / eq. 12, s > 1).
+    ProjSparse,
+    /// §7: VW applied to the expanded b-bit features.
+    BbitVw,
+}
+
+impl Scheme {
+    /// Every scheme, in registry order.
+    pub const ALL: [Scheme; 5] = [
+        Scheme::Bbit,
+        Scheme::Vw,
+        Scheme::ProjNormal,
+        Scheme::ProjSparse,
+        Scheme::BbitVw,
+    ];
+
+    /// Parse a config/CLI scheme name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "bbit" | "b-bit" | "minwise" => Some(Self::Bbit),
+            "vw" => Some(Self::Vw),
+            "proj_normal" | "proj" | "rp" => Some(Self::ProjNormal),
+            "proj_sparse" | "srp" => Some(Self::ProjSparse),
+            "bbit_vw" | "bbit+vw" => Some(Self::BbitVw),
+            _ => None,
+        }
+    }
+
+    /// The canonical config/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Bbit => "bbit",
+            Self::Vw => "vw",
+            Self::ProjNormal => "proj_normal",
+            Self::ProjSparse => "proj_sparse",
+            Self::BbitVw => "bbit_vw",
+        }
+    }
+
+    /// The byte the shard-store v2 header records.
+    pub fn code(&self) -> u8 {
+        match self {
+            Self::Bbit => 0,
+            Self::Vw => 1,
+            Self::ProjNormal => 2,
+            Self::ProjSparse => 3,
+            Self::BbitVw => 4,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown bytes (readers turn
+    /// that into `InvalidData`, never a guess).
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(Self::Bbit),
+            1 => Some(Self::Vw),
+            2 => Some(Self::ProjNormal),
+            3 => Some(Self::ProjSparse),
+            4 => Some(Self::BbitVw),
+            _ => None,
+        }
+    }
+
+    /// Whether the scheme emits dense f32 rows (everything but `bbit`).
+    pub fn is_dense(&self) -> bool {
+        !matches!(self, Self::Bbit)
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything needed to build a [`FeatureMap`] — the config surface of the
+/// scheme registry.
+#[derive(Clone, Debug)]
+pub struct FeatureMapSpec {
+    pub scheme: Scheme,
+    /// Input domain size Ω (the shingle space).
+    pub dim: u64,
+    /// Sample width: permutations (`bbit`, `bbit_vw`) or buckets /
+    /// projections (`vw`, `proj_*`).
+    pub k: usize,
+    /// Bits kept per minwise value (`bbit`, `bbit_vw`); ignored by the
+    /// dense schemes.
+    pub b: u32,
+    /// `bbit_vw` only: VW buckets the expanded features hash into.
+    /// 0 ⇒ matched storage with the packed signatures: `max(1, k·b/32)`.
+    pub buckets: usize,
+    /// Fourth moment s of the sparse-projection entries (`proj_sparse`).
+    pub s: f64,
+    pub seed: u64,
+}
+
+impl FeatureMapSpec {
+    /// A spec with the registry defaults (`buckets` matched-storage,
+    /// `s = 3` — the √3-sparse Achlioptas point).
+    pub fn new(scheme: Scheme, dim: u64, k: usize, b: u32, seed: u64) -> Self {
+        Self {
+            scheme,
+            dim,
+            k,
+            b,
+            buckets: 0,
+            s: 3.0,
+            seed,
+        }
+    }
+
+    /// The `bbit_vw` output width: explicit `buckets`, or matched storage
+    /// with the packed signatures (`32·m` bits = `k·b` bits).
+    pub fn vw_buckets(&self) -> usize {
+        if self.buckets > 0 {
+            self.buckets
+        } else {
+            ((self.k * self.b as usize) / 32).max(1)
+        }
+    }
+
+    /// Build the encoder this spec describes.
+    pub fn build(&self) -> Box<dyn FeatureMap> {
+        assert!(self.k >= 1, "k must be >= 1");
+        match self.scheme {
+            Scheme::Bbit => Box::new(BbitMinwiseMap::new(self.dim, self.k, self.b, self.seed)),
+            Scheme::Vw => Box::new(VwFeatureMap::new(self.k, self.seed)),
+            Scheme::ProjNormal => Box::new(ProjectionMap::new(
+                self.k,
+                ProjectionKind::Gaussian,
+                self.seed,
+            )),
+            Scheme::ProjSparse => Box::new(ProjectionMap::new(
+                self.k,
+                ProjectionKind::Sparse(self.s),
+                self.seed,
+            )),
+            Scheme::BbitVw => Box::new(BbitVwMap::new(
+                self.dim,
+                self.k,
+                self.b,
+                self.vw_buckets(),
+                self.seed,
+            )),
+        }
+    }
+}
+
+/// `scheme = bbit`: k-permutation minwise signatures truncated to b bits —
+/// the paper's method, encoded through the one-pass k-lane engine.
+pub struct BbitMinwiseMap {
+    hasher: MinwiseHasher,
+    b: u32,
+}
+
+impl BbitMinwiseMap {
+    pub fn new(dim: u64, k: usize, b: u32, seed: u64) -> Self {
+        assert!((1..=16).contains(&b), "b must be in 1..=16");
+        Self {
+            hasher: MinwiseHasher::new(dim, k, seed),
+            b,
+        }
+    }
+
+    pub fn hasher(&self) -> &MinwiseHasher {
+        &self.hasher
+    }
+}
+
+impl FeatureMap for BbitMinwiseMap {
+    fn layout(&self) -> SketchLayout {
+        SketchLayout::PackedBbit {
+            k: self.hasher.k(),
+            b: self.b,
+        }
+    }
+
+    fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
+        let RowMut::Lanes(out) = row else {
+            panic!("PackedBbit scheme encodes into a 64-bit lane buffer");
+        };
+        self.hasher.signature_batch_into(set, out);
+    }
+}
+
+/// `scheme = vw`: VW feature hashing (paper §6.2, s = 1 Rademacher signs).
+/// Sparsity-preserving, hence the `SparseF32` layout.
+pub struct VwFeatureMap {
+    hasher: VwHasher,
+}
+
+impl VwFeatureMap {
+    pub fn new(k: usize, seed: u64) -> Self {
+        Self {
+            hasher: VwHasher::new(k, seed),
+        }
+    }
+
+    pub fn hasher(&self) -> &VwHasher {
+        &self.hasher
+    }
+}
+
+impl FeatureMap for VwFeatureMap {
+    fn layout(&self) -> SketchLayout {
+        SketchLayout::SparseF32 { k: self.hasher.k }
+    }
+
+    fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
+        let RowMut::Dense { out, .. } = row else {
+            panic!("VW encodes into a dense f32 row");
+        };
+        out.clear();
+        out.resize(self.hasher.k, 0.0);
+        // Sums of ±1 signs stay small integers: f32 accumulation is exact.
+        for &i in set {
+            out[self.hasher.bucket(i)] += self.hasher.r(i) as f32;
+        }
+    }
+}
+
+/// `scheme = proj_normal | proj_sparse`: dense / sparse random projections
+/// (paper §6.1). Entries are generated deterministically per (i, j) — no
+/// D×k matrix is ever materialized.
+pub struct ProjectionMap {
+    proj: RandomProjection,
+}
+
+impl ProjectionMap {
+    pub fn new(k: usize, kind: ProjectionKind, seed: u64) -> Self {
+        Self {
+            proj: RandomProjection::new(k, kind, seed),
+        }
+    }
+
+    pub fn projection(&self) -> &RandomProjection {
+        &self.proj
+    }
+}
+
+impl FeatureMap for ProjectionMap {
+    fn layout(&self) -> SketchLayout {
+        SketchLayout::DenseF32 { k: self.proj.k }
+    }
+
+    fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
+        let RowMut::Dense { out, .. } = row else {
+            panic!("random projections encode into a dense f32 row");
+        };
+        out.clear();
+        out.reserve(self.proj.k);
+        // Accumulate each output value in f64 (the same per-j op sequence
+        // as `project_binary_into`, loop order swapped) and round ONCE to
+        // f32 — a running f32 sum would drift from the estimator-tested
+        // f64 reference as documents grow.
+        for j in 0..self.proj.k {
+            let mut vj = 0.0f64;
+            for &i in set {
+                vj += self.proj.entry(i, j);
+            }
+            out.push(vj as f32);
+        }
+    }
+}
+
+/// `scheme = bbit_vw` — the paper's §7 combination: minwise-hash to a
+/// b-bit signature, then VW-hash the (virtual) Theorem-2 expansion down to
+/// `buckets` dense dimensions. By construction identical to running
+/// [`VwHasher::hash_binary`] on [`expand_signature`] of the truncated
+/// signature (property-tested), but with the `2^b·k`-dim expansion never
+/// materialized.
+///
+/// [`expand_signature`]: crate::hashing::expand::expand_signature
+pub struct BbitVwMap {
+    minwise: MinwiseHasher,
+    b: u32,
+    vw: VwHasher,
+}
+
+/// Seed split between the two stages of [`BbitVwMap`], so the signature
+/// permutations and the VW bucketing are independent streams.
+const BBIT_VW_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+impl BbitVwMap {
+    pub fn new(dim: u64, sig_k: usize, b: u32, buckets: usize, seed: u64) -> Self {
+        assert!((1..=16).contains(&b), "b must be in 1..=16");
+        assert!(buckets >= 1);
+        Self {
+            minwise: MinwiseHasher::new(dim, sig_k, seed),
+            b,
+            vw: VwHasher::new(buckets, seed ^ BBIT_VW_SEED_MIX),
+        }
+    }
+
+    /// The inner VW stage (the bucketing the §7 equivalence test mirrors).
+    pub fn vw(&self) -> &VwHasher {
+        &self.vw
+    }
+
+    /// The inner minwise stage.
+    pub fn minwise(&self) -> &MinwiseHasher {
+        &self.minwise
+    }
+
+    pub fn b(&self) -> u32 {
+        self.b
+    }
+}
+
+impl FeatureMap for BbitVwMap {
+    fn layout(&self) -> SketchLayout {
+        SketchLayout::DenseF32 { k: self.vw.k }
+    }
+
+    fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
+        let RowMut::Dense { out, lanes } = row else {
+            panic!("bbit_vw encodes into a dense f32 row (with lane scratch)");
+        };
+        self.minwise.signature_batch_into(set, lanes);
+        out.clear();
+        out.resize(self.vw.k, 0.0);
+        let width = 1u64 << self.b;
+        let mask = width - 1;
+        // Expanded one-hot index of slot j is j·2^b + (z_j mod 2^b) —
+        // exactly expand_signature of the truncated row, streamed.
+        for (j, &z) in lanes.iter().enumerate() {
+            let idx = j as u64 * width + (z & mask);
+            out[self.vw.bucket(idx)] += self.vw.r(idx) as f32;
+        }
+    }
+}
+
+/// The dense sample width whose storage matches packed `(k, b)` signatures:
+/// `32·k_dense` bits = `k·b` bits (floored, at least 1) — the x-axis of
+/// the paper's equal-storage comparison.
+pub fn matched_dense_k(k: usize, b: u32) -> usize {
+    ((k * b as usize) / 32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::bbit::pack_lowest_bits;
+    use crate::hashing::expand::expand_signature_into;
+
+    fn doc(seed: u64, len: usize) -> Vec<u64> {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(seed);
+        let mut set: Vec<u64> = (0..len).map(|_| rng.gen_range(1 << 20)).collect();
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    #[test]
+    fn scheme_registry_roundtrips() {
+        for scheme in Scheme::ALL {
+            assert_eq!(Scheme::parse(scheme.name()), Some(scheme), "{scheme}");
+            assert_eq!(Scheme::from_code(scheme.code()), Some(scheme));
+        }
+        assert_eq!(Scheme::parse("nope"), None);
+        assert_eq!(Scheme::from_code(9), None);
+        assert!(!Scheme::Bbit.is_dense());
+        assert!(Scheme::Vw.is_dense() && Scheme::BbitVw.is_dense());
+    }
+
+    #[test]
+    fn layout_storage_and_train_dims() {
+        let p = SketchLayout::PackedBbit { k: 200, b: 8 };
+        assert_eq!(p.k(), 200);
+        assert_eq!(p.storage_bits_per_example(), 1600);
+        assert_eq!(p.train_dim(), 200 * 256);
+        assert!(p.is_packed());
+        let d = SketchLayout::DenseF32 { k: 50 };
+        assert_eq!(d.storage_bits_per_example(), 1600);
+        assert_eq!(d.train_dim(), 50);
+        assert!(!d.is_packed());
+        // Matched storage: 32·k_dense = k·b.
+        assert_eq!(matched_dense_k(200, 8), 50);
+        assert_eq!(matched_dense_k(1, 1), 1, "floors at 1");
+    }
+
+    #[test]
+    fn bbit_map_matches_raw_hasher() {
+        let spec = FeatureMapSpec::new(Scheme::Bbit, 1 << 20, 16, 4, 7);
+        let map = spec.build();
+        assert_eq!(map.layout(), SketchLayout::PackedBbit { k: 16, b: 4 });
+        let set = doc(3, 60);
+        let mut scratch = SketchRow::new(&map.layout());
+        map.encode_into(&set, scratch.row_mut());
+        let h = MinwiseHasher::new(1 << 20, 16, 7);
+        assert_eq!(scratch.lanes(), h.signature(&set).as_slice());
+    }
+
+    #[test]
+    fn vw_map_matches_hash_binary() {
+        let spec = FeatureMapSpec::new(Scheme::Vw, 1 << 20, 64, 0, 11);
+        let map = spec.build();
+        assert_eq!(map.layout(), SketchLayout::SparseF32 { k: 64 });
+        let set = doc(5, 80);
+        let mut scratch = SketchRow::new(&map.layout());
+        map.encode_into(&set, scratch.row_mut());
+        let h = VwHasher::new(64, 11);
+        let want: Vec<f32> = h.hash_binary(&set).iter().map(|&v| v as f32).collect();
+        // s = 1 signs sum to small integers: exact in f32 either way.
+        assert_eq!(scratch.dense(), want.as_slice());
+    }
+
+    #[test]
+    fn projection_maps_match_project_binary() {
+        let set = doc(9, 40);
+        for (scheme, kind) in [
+            (Scheme::ProjNormal, ProjectionKind::Gaussian),
+            (Scheme::ProjSparse, ProjectionKind::Sparse(3.0)),
+        ] {
+            let spec = FeatureMapSpec::new(scheme, 1 << 20, 24, 0, 21);
+            let map = spec.build();
+            assert_eq!(map.layout(), SketchLayout::DenseF32 { k: 24 });
+            let mut scratch = SketchRow::new(&map.layout());
+            map.encode_into(&set, scratch.row_mut());
+            let rp = RandomProjection::new(24, kind, 21);
+            let want: Vec<f32> = rp.project_binary(&set).iter().map(|&v| v as f32).collect();
+            // The map accumulates in f64 and rounds once, so it is
+            // bit-identical to the f64 reference cast to f32.
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(scratch.dense()), bits(&want), "{scheme}");
+        }
+    }
+
+    #[test]
+    fn bbit_vw_equals_vw_of_expansion() {
+        // The §7 contract: the fused encoder ≡ VW over expand_signature of
+        // the truncated signature. s = 1 signs make both sides exact.
+        let spec = FeatureMapSpec {
+            buckets: 16,
+            ..FeatureMapSpec::new(Scheme::BbitVw, 1 << 20, 32, 4, 13)
+        };
+        let map_box = spec.build();
+        let set = doc(17, 70);
+        let mut scratch = SketchRow::new(&map_box.layout());
+        map_box.encode_into(&set, scratch.row_mut());
+
+        let concrete = BbitVwMap::new(1 << 20, 32, 4, 16, 13);
+        let full = concrete.minwise().signature(&set);
+        let truncated = pack_lowest_bits(&full, 4);
+        let mut expanded = Vec::new();
+        expand_signature_into(&truncated, 4, &mut expanded);
+        let want: Vec<f32> = concrete
+            .vw()
+            .hash_binary(&expanded)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        assert_eq!(scratch.dense(), want.as_slice());
+    }
+
+    #[test]
+    fn matched_storage_buckets_default() {
+        let spec = FeatureMapSpec::new(Scheme::BbitVw, 1 << 16, 128, 8, 1);
+        assert_eq!(spec.vw_buckets(), 32); // 128·8 / 32
+        let spec2 = FeatureMapSpec {
+            buckets: 100,
+            ..spec
+        };
+        assert_eq!(spec2.vw_buckets(), 100);
+    }
+
+    #[test]
+    fn encode_chunk_matches_per_row() {
+        let spec = FeatureMapSpec::new(Scheme::Vw, 1 << 20, 16, 0, 3);
+        let map = spec.build();
+        let docs: Vec<Vec<u64>> = (0..5).map(|s| doc(100 + s, 30)).collect();
+        let sets: Vec<&[u64]> = docs.iter().map(|d| d.as_slice()).collect();
+        let labels = [1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let mut chunked = SketchMatrix::for_layout(map.layout());
+        map.encode_chunk_into(&sets, &labels, &mut chunked);
+        assert_eq!(chunked.n(), 5);
+        assert_eq!(chunked.labels(), &labels);
+        let mut scratch = SketchRow::new(&map.layout());
+        for (i, set) in sets.iter().enumerate() {
+            map.encode_into(set, scratch.row_mut());
+            assert_eq!(
+                chunked.as_dense().unwrap().row(i),
+                scratch.dense(),
+                "row {i}"
+            );
+        }
+    }
+}

@@ -1,4 +1,29 @@
-//! Hashing substrates: the paper's method and every compared baseline.
+//! Hashing substrates: the paper's method and every compared baseline,
+//! unified behind the [`feature_map::FeatureMap`] encoder API.
+//!
+//! # Choosing a scheme
+//!
+//! Every scheme encodes a sparse binary document into one sketch row; the
+//! pipeline, shard store and trainers are generic over the encoder, so the
+//! paper's *comparison at equal storage* runs end to end for all of them:
+//!
+//! | `scheme`      | estimator (unbiased)    | variance (paper)           | storage bits / example |
+//! |---------------|-------------------------|----------------------------|------------------------|
+//! | `bbit`        | R̂_b, eq. (5)            | Thm 1 / eq. (6)            | `k·b`                  |
+//! | `vw`          | â_vw, eq. (16)          | Lemma 1 / eq. (17), s = 1  | `32·k`                 |
+//! | `proj_normal` | â_rp, eq. (13)          | eq. (14), s = 3            | `32·k`                 |
+//! | `proj_sparse` | â_rp, eq. (13)          | eq. (14), s > 1            | `32·k`                 |
+//! | `bbit_vw`     | §7 (VW ∘ expansion)     | §7 (adds collision noise)  | `32·buckets`           |
+//!
+//! Rules of thumb, straight from the paper: `bbit` dominates at equal
+//! storage on resemblance-like data (§8's G_vw ≫ 1); `vw` beats the
+//! projections (s = 1 is the variance minimum of eq. (14) and it preserves
+//! sparsity); `bbit_vw` trades a little accuracy for a small dense model
+//! when the `2^b·k` expansion is too wide to train comfortably (§7). The
+//! Count-Min sketch ([`vw::CountMinSketch`]) is kept as the biased
+//! reference baseline (eq. 20/22) and is not a registry scheme.
+//!
+//! # Modules
 //!
 //! * [`perm`] — random permutations of Ω (exact Fisher–Yates for small D,
 //!   universal-hash simulation for D up to 2^64 — paper §9).
@@ -9,17 +34,29 @@
 //!   paper calls "VW") and the Count-Min sketch, incl. the unbiased CM
 //!   variant of eq. (22).
 //! * [`projections`] — dense and sparse random projections (paper §6.1).
+//! * [`feature_map`] — the scheme registry: [`feature_map::Scheme`],
+//!   the [`feature_map::FeatureMap`] encoder trait and one map per row of
+//!   the table above.
+//! * [`sketch`] — the unified output currency: [`sketch::SketchMatrix`]
+//!   (packed or dense rows) and the [`sketch::SketchRow`] encode buffer.
 //! * [`estimators`] — the statistical estimators built on all of the above.
 
 pub mod bbit;
 pub mod estimators;
 pub mod expand;
+pub mod feature_map;
 pub mod minwise;
 pub mod perm;
 pub mod projections;
+pub mod sketch;
 pub mod vw;
 
 pub use bbit::{BbitSignatureMatrix, pack_lowest_bits};
 pub use expand::expand_signature;
+pub use feature_map::{
+    matched_dense_k, BbitMinwiseMap, BbitVwMap, FeatureMap, FeatureMapSpec, ProjectionMap,
+    RowMut, Scheme, SketchLayout, VwFeatureMap,
+};
 pub use minwise::MinwiseHasher;
 pub use perm::{Permutation, PermutationBank};
+pub use sketch::{F32Matrix, SketchMatrix, SketchRow};

@@ -76,26 +76,43 @@ impl RandomProjection {
 
     /// Project a sparse binary vector (sorted indices).
     pub fn project_binary(&self, set: &[u64]) -> Vec<f64> {
-        let mut v = vec![0.0; self.k];
+        let mut v = Vec::new();
+        self.project_binary_into(set, &mut v);
+        v
+    }
+
+    /// [`Self::project_binary`] into a caller-owned buffer (cleared and
+    /// zero-resized to k; capacity reused, never stolen — the PR-2 buffer
+    /// contract), so bulk projection loops allocate nothing per vector.
+    pub fn project_binary_into(&self, set: &[u64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.k, 0.0);
         for &i in set {
-            for (j, vj) in v.iter_mut().enumerate() {
+            for (j, vj) in out.iter_mut().enumerate() {
                 *vj += self.entry(i, j);
             }
         }
-        v
     }
 
     /// Project a dense real vector.
     pub fn project_dense(&self, u: &[f64]) -> Vec<f64> {
-        let mut v = vec![0.0; self.k];
+        let mut v = Vec::new();
+        self.project_dense_into(u, &mut v);
+        v
+    }
+
+    /// [`Self::project_dense`] into a caller-owned buffer (same contract
+    /// as [`Self::project_binary_into`]).
+    pub fn project_dense_into(&self, u: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.k, 0.0);
         for (i, &ui) in u.iter().enumerate() {
             if ui != 0.0 {
-                for (j, vj) in v.iter_mut().enumerate() {
+                for (j, vj) in out.iter_mut().enumerate() {
                     *vj += ui * self.entry(i as u64, j);
                 }
             }
         }
-        v
     }
 
     /// Unbiased inner-product estimator â_rp = (1/k)·Σ_j v1_j v2_j (eq. 13).
@@ -211,6 +228,24 @@ mod tests {
         assert!((zero as f64 / nf - (1.0 - 1.0 / 16.0)).abs() < 0.01);
         assert!((m2 / nf - 1.0).abs() < 0.05);
         assert!((m4 / nf - 16.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn into_variants_fill_in_place_and_keep_capacity() {
+        let rp = RandomProjection::new(24, ProjectionKind::Gaussian, 7);
+        let set: Vec<u64> = vec![1, 50, 999, 12_345];
+        let dense: Vec<f64> = (0..10).map(|i| (i as f64) * 0.5 - 2.0).collect();
+        let mut v = Vec::new();
+        rp.project_binary_into(&set, &mut v);
+        assert_eq!(v, rp.project_binary(&set));
+        let (cap, ptr) = (v.capacity(), v.as_ptr());
+        for _ in 0..8 {
+            rp.project_binary_into(&set, &mut v);
+            rp.project_dense_into(&dense, &mut v);
+        }
+        assert_eq!(v, rp.project_dense(&dense));
+        assert_eq!(v.capacity(), cap, "capacity must survive reuse");
+        assert_eq!(v.as_ptr(), ptr, "no re-allocation may occur");
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! The unified sketch currency: every hashing scheme's output, one type.
+//!
+//! The paper's headline experiment compares *different hashing schemes at
+//! equal storage* — packed b-bit minwise signatures against the dense
+//! real-valued samples of VW / random projections (§6–§8). The production
+//! machinery (pipeline, shard store, trainers) therefore flows
+//! [`SketchMatrix`] values, which unify the two physical layouts:
+//!
+//! * [`SketchMatrix::Bbit`] — the word-aligned packed store
+//!   ([`BbitSignatureMatrix`], `k·b` bits per row);
+//! * [`SketchMatrix::Dense`] — the row-major f32 store ([`F32Matrix`],
+//!   `32·k` bits per row) that VW, the random projections and the §7
+//!   bbit+VW combination produce.
+//!
+//! [`SketchRow`] is the reusable per-worker encode buffer: it owns both a
+//! 64-bit lane buffer (minwise signatures) and a dense f32 row, hands the
+//! active one to a [`FeatureMap`](super::feature_map::FeatureMap) as a
+//! [`RowMut`](super::feature_map::RowMut), and is pushed into a
+//! [`SketchMatrix`] without any per-row allocation.
+
+use super::bbit::BbitSignatureMatrix;
+use super::feature_map::{RowMut, SketchLayout};
+
+/// A dense row-major f32 matrix with ±1 labels — the storage for every
+/// real-valued hashing scheme (VW, projections, bbit+VW). The dense twin
+/// of [`BbitSignatureMatrix`]: same constructor/merge surface, so the
+/// pipeline collector and the shard store treat both uniformly.
+#[derive(Clone, Debug, Default)]
+pub struct F32Matrix {
+    values: Vec<f32>,
+    k: usize,
+    n: usize,
+    labels: Vec<f32>,
+}
+
+impl F32Matrix {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self {
+            values: Vec::new(),
+            k,
+            n: 0,
+            labels: Vec::new(),
+        }
+    }
+
+    /// Pre-allocate for `n` rows.
+    pub fn with_capacity(k: usize, n: usize) -> Self {
+        let mut m = Self::new(k);
+        m.values.reserve(n * k);
+        m.labels.reserve(n);
+        m
+    }
+
+    /// A pre-sized matrix of `n` all-zero rows (labels 0.0) — the target of
+    /// out-of-order shard placement via [`Self::copy_rows_from`].
+    pub fn with_rows(k: usize, n: usize) -> Self {
+        let mut m = Self::new(k);
+        m.values = vec![0.0f32; n * k];
+        m.labels = vec![0.0f32; n];
+        m.n = n;
+        m
+    }
+
+    /// Reassemble a matrix from its value store and label block — the
+    /// shard-store deserialization path. `values` must be exactly
+    /// `labels.len() · k` entries, row-major.
+    pub fn from_raw_parts(k: usize, values: Vec<f32>, labels: Vec<f32>) -> Self {
+        let mut m = Self::new(k);
+        let n = labels.len();
+        assert_eq!(
+            values.len(),
+            n * k,
+            "value store is {} entries, want {} ({} rows × k {})",
+            values.len(),
+            n * k,
+            n,
+            k
+        );
+        m.values = values;
+        m.labels = labels;
+        m.n = n;
+        m
+    }
+
+    /// The whole value store, rows concatenated (`n · k` f32s) — what the
+    /// shard store serializes verbatim.
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Row `i` as its contiguous f32 slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.k..(i + 1) * self.k]
+    }
+
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    /// Append a row of `k` values.
+    pub fn push_row(&mut self, row: &[f32], label: f32) {
+        assert_eq!(row.len(), self.k, "row width {} != k {}", row.len(), self.k);
+        self.values.extend_from_slice(row);
+        self.labels.push(label);
+        self.n += 1;
+    }
+
+    /// Bytes the values occupy (f32 rows have no padding: stored = packed).
+    pub fn storage_bytes(&self) -> usize {
+        self.values.len() * 4
+    }
+
+    /// Same as [`Self::storage_bytes`] — the dense layout is already tight.
+    pub fn packed_bytes(&self) -> usize {
+        self.storage_bytes()
+    }
+
+    /// Merge another matrix with identical k — a single slice copy.
+    pub fn append(&mut self, other: &F32Matrix) {
+        assert_eq!(self.k, other.k);
+        self.values.extend_from_slice(&other.values);
+        self.labels.extend_from_slice(&other.labels);
+        self.n += other.n;
+    }
+
+    /// Overwrite rows `[dst_row, dst_row + other.n())` with `other`'s rows
+    /// — out-of-order shard placement for the pipeline collector.
+    pub fn copy_rows_from(&mut self, other: &F32Matrix, dst_row: usize) {
+        assert_eq!(self.k, other.k);
+        assert!(
+            dst_row + other.n <= self.n,
+            "shard [{dst_row}, {}) exceeds {} rows",
+            dst_row + other.n,
+            self.n
+        );
+        self.values[dst_row * self.k..dst_row * self.k + other.values.len()]
+            .copy_from_slice(&other.values);
+        self.labels[dst_row..dst_row + other.n].copy_from_slice(&other.labels);
+    }
+}
+
+/// The output of any hashing scheme: a packed b-bit signature matrix or a
+/// dense f32 sample matrix — the currency of the pipeline, the shard store
+/// and the trainers.
+#[derive(Clone, Debug)]
+pub enum SketchMatrix {
+    /// Packed b-bit minwise signatures (`scheme = bbit`).
+    Bbit(BbitSignatureMatrix),
+    /// Dense real-valued samples (`scheme = vw | proj_* | bbit_vw`).
+    Dense(F32Matrix),
+}
+
+impl SketchMatrix {
+    /// An empty matrix of the layout a [`FeatureMap`] emits.
+    ///
+    /// [`FeatureMap`]: super::feature_map::FeatureMap
+    pub fn for_layout(layout: SketchLayout) -> Self {
+        match layout {
+            SketchLayout::PackedBbit { k, b } => Self::Bbit(BbitSignatureMatrix::new(k, b)),
+            SketchLayout::DenseF32 { k } | SketchLayout::SparseF32 { k } => {
+                Self::Dense(F32Matrix::new(k))
+            }
+        }
+    }
+
+    /// [`Self::for_layout`] with capacity for `n` rows.
+    pub fn with_capacity(layout: SketchLayout, n: usize) -> Self {
+        match layout {
+            SketchLayout::PackedBbit { k, b } => {
+                Self::Bbit(BbitSignatureMatrix::with_capacity(k, b, n))
+            }
+            SketchLayout::DenseF32 { k } | SketchLayout::SparseF32 { k } => {
+                Self::Dense(F32Matrix::with_capacity(k, n))
+            }
+        }
+    }
+
+    /// A pre-sized all-zero matrix of `n` rows — the out-of-order shard
+    /// placement target.
+    pub fn with_rows(layout: SketchLayout, n: usize) -> Self {
+        match layout {
+            SketchLayout::PackedBbit { k, b } => {
+                Self::Bbit(BbitSignatureMatrix::with_rows(k, b, n))
+            }
+            SketchLayout::DenseF32 { k } | SketchLayout::SparseF32 { k } => {
+                Self::Dense(F32Matrix::with_rows(k, n))
+            }
+        }
+    }
+
+    /// The physical layout of this matrix. Dense matrices report
+    /// [`SketchLayout::DenseF32`] — the sparse/dense distinction is a
+    /// property of the *scheme*, not of the stored rows.
+    pub fn layout(&self) -> SketchLayout {
+        match self {
+            Self::Bbit(m) => SketchLayout::PackedBbit { k: m.k(), b: m.b() },
+            Self::Dense(m) => SketchLayout::DenseF32 { k: m.k() },
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        match self {
+            Self::Bbit(m) => m.n(),
+            Self::Dense(m) => m.n(),
+        }
+    }
+
+    /// Values per row (permutations or buckets/projections).
+    #[inline]
+    pub fn k(&self) -> usize {
+        match self {
+            Self::Bbit(m) => m.k(),
+            Self::Dense(m) => m.k(),
+        }
+    }
+
+    pub fn labels(&self) -> &[f32] {
+        match self {
+            Self::Bbit(m) => m.labels(),
+            Self::Dense(m) => m.labels(),
+        }
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        match self {
+            Self::Bbit(m) => m.label(i),
+            Self::Dense(m) => m.label(i),
+        }
+    }
+
+    /// The feature dimension a linear model over this matrix trains in —
+    /// delegates to [`SketchLayout::train_dim`], the one copy of the rule
+    /// (Theorem-2 expansion `k·2^b` packed, `k` dense).
+    pub fn train_dim(&self) -> usize {
+        self.layout().train_dim()
+    }
+
+    /// Append one encoded row from a worker's scratch buffer (the buffer
+    /// variant must match the matrix variant).
+    pub fn push_encoded(&mut self, row: &SketchRow, label: f32) {
+        match self {
+            Self::Bbit(m) => m.push_full_row(&row.lanes, label),
+            Self::Dense(m) => m.push_row(&row.dense, label),
+        }
+    }
+
+    /// Merge another matrix of the same layout (zero-copy slice extends).
+    pub fn append(&mut self, other: &SketchMatrix) {
+        match (self, other) {
+            (Self::Bbit(a), Self::Bbit(b)) => a.append(b),
+            (Self::Dense(a), Self::Dense(b)) => a.append(b),
+            _ => panic!("cannot merge sketches of different layouts"),
+        }
+    }
+
+    /// Overwrite rows `[dst_row, ..)` with `other`'s rows — out-of-order
+    /// shard placement.
+    pub fn copy_rows_from(&mut self, other: &SketchMatrix, dst_row: usize) {
+        match (self, other) {
+            (Self::Bbit(a), Self::Bbit(b)) => a.copy_rows_from(b, dst_row),
+            (Self::Dense(a), Self::Dense(b)) => a.copy_rows_from(b, dst_row),
+            _ => panic!("cannot place a shard of a different layout"),
+        }
+    }
+
+    /// The paper-tight storage figure in bytes (`n·b·k/8` packed, `4·n·k`
+    /// dense).
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            Self::Bbit(m) => m.packed_bytes(),
+            Self::Dense(m) => m.packed_bytes(),
+        }
+    }
+
+    /// Bytes the rows actually occupy in memory (word alignment included).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Self::Bbit(m) => m.storage_bytes(),
+            Self::Dense(m) => m.storage_bytes(),
+        }
+    }
+
+    /// The packed variant, if this is one.
+    pub fn as_bbit(&self) -> Option<&BbitSignatureMatrix> {
+        match self {
+            Self::Bbit(m) => Some(m),
+            Self::Dense(_) => None,
+        }
+    }
+
+    /// The dense variant, if this is one.
+    pub fn as_dense(&self) -> Option<&F32Matrix> {
+        match self {
+            Self::Dense(m) => Some(m),
+            Self::Bbit(_) => None,
+        }
+    }
+
+    /// Unwrap into the packed variant.
+    pub fn into_bbit(self) -> Option<BbitSignatureMatrix> {
+        match self {
+            Self::Bbit(m) => Some(m),
+            Self::Dense(_) => None,
+        }
+    }
+
+    /// Unwrap into the dense variant.
+    pub fn into_dense(self) -> Option<F32Matrix> {
+        match self {
+            Self::Dense(m) => Some(m),
+            Self::Bbit(_) => None,
+        }
+    }
+}
+
+/// A reusable one-row encode buffer: owns both the 64-bit lane buffer
+/// (minwise signatures; also the intermediate of the §7 bbit+VW
+/// combination) and the dense f32 row. One `SketchRow` per pipeline worker
+/// serves every row it hashes — zero allocations after the first fill.
+pub struct SketchRow {
+    pub(crate) lanes: Vec<u64>,
+    pub(crate) dense: Vec<f32>,
+    packed: bool,
+}
+
+impl SketchRow {
+    pub fn new(layout: &SketchLayout) -> Self {
+        Self {
+            lanes: Vec::new(),
+            dense: Vec::new(),
+            packed: layout.is_packed(),
+        }
+    }
+
+    /// The mutable destination a [`FeatureMap`] encodes into — the variant
+    /// matches the layout this row was created for.
+    ///
+    /// [`FeatureMap`]: super::feature_map::FeatureMap
+    pub fn row_mut(&mut self) -> RowMut<'_> {
+        if self.packed {
+            RowMut::Lanes(&mut self.lanes)
+        } else {
+            RowMut::Dense {
+                out: &mut self.dense,
+                lanes: &mut self.lanes,
+            }
+        }
+    }
+
+    /// The encoded 64-bit lanes (packed layouts).
+    pub fn lanes(&self) -> &[u64] {
+        &self.lanes
+    }
+
+    /// The encoded dense row (dense layouts).
+    pub fn dense(&self) -> &[f32] {
+        &self.dense
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_matrix_push_row_roundtrip() {
+        let mut m = F32Matrix::new(3);
+        m.push_row(&[1.0, -2.0, 0.5], 1.0);
+        m.push_row(&[0.0, 4.0, -1.0], -1.0);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.k(), 3);
+        assert_eq!(m.row(0), &[1.0, -2.0, 0.5]);
+        assert_eq!(m.row(1), &[0.0, 4.0, -1.0]);
+        assert_eq!(m.labels(), &[1.0, -1.0]);
+        assert_eq!(m.storage_bytes(), 24);
+        assert_eq!(m.packed_bytes(), 24);
+    }
+
+    #[test]
+    fn f32_matrix_append_and_out_of_order_placement() {
+        let mut want = F32Matrix::new(2);
+        for i in 0..5 {
+            want.push_row(&[i as f32, -(i as f32)], i as f32);
+        }
+        let mut s0 = F32Matrix::new(2);
+        for i in 0..2 {
+            s0.push_row(&[i as f32, -(i as f32)], i as f32);
+        }
+        let mut s1 = F32Matrix::new(2);
+        for i in 2..5 {
+            s1.push_row(&[i as f32, -(i as f32)], i as f32);
+        }
+        // append path
+        let mut merged = F32Matrix::new(2);
+        merged.append(&s0);
+        merged.append(&s1);
+        assert_eq!(merged.values(), want.values());
+        assert_eq!(merged.labels(), want.labels());
+        // out-of-order placement path
+        let mut placed = F32Matrix::with_rows(2, 5);
+        placed.copy_rows_from(&s1, 2);
+        placed.copy_rows_from(&s0, 0);
+        assert_eq!(placed.values(), want.values());
+        assert_eq!(placed.labels(), want.labels());
+    }
+
+    #[test]
+    fn f32_raw_parts_roundtrip() {
+        let mut m = F32Matrix::new(4);
+        m.push_row(&[1.0, 2.0, 3.0, 4.0], -1.0);
+        let back = F32Matrix::from_raw_parts(4, m.values().to_vec(), m.labels().to_vec());
+        assert_eq!(back.values(), m.values());
+        assert_eq!(back.labels(), m.labels());
+        assert_eq!(back.n(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "value store")]
+    fn f32_raw_parts_rejects_wrong_count() {
+        F32Matrix::from_raw_parts(3, vec![0.0; 5], vec![0.0; 2]);
+    }
+
+    #[test]
+    fn sketch_matrix_dispatch() {
+        let packed = SketchLayout::PackedBbit { k: 8, b: 4 };
+        let dense = SketchLayout::DenseF32 { k: 8 };
+        let mut a = SketchMatrix::with_rows(packed, 3);
+        let mut d = SketchMatrix::with_rows(dense, 3);
+        assert_eq!(a.n(), 3);
+        assert_eq!(d.n(), 3);
+        assert_eq!(a.train_dim(), 8 << 4);
+        assert_eq!(d.train_dim(), 8);
+        assert_eq!(a.layout(), packed);
+        assert_eq!(d.layout(), dense);
+        assert!(a.as_bbit().is_some() && a.as_dense().is_none());
+        assert!(d.as_dense().is_some() && d.as_bbit().is_none());
+        // push_encoded routes by variant.
+        let mut row = SketchRow::new(&packed);
+        row.lanes = vec![3u64; 8];
+        let mut a2 = SketchMatrix::for_layout(packed);
+        a2.push_encoded(&row, 1.0);
+        assert_eq!(a2.n(), 1);
+        assert_eq!(a2.as_bbit().unwrap().row(0), vec![3u16; 8]);
+        let mut row_d = SketchRow::new(&dense);
+        row_d.dense = vec![0.5f32; 8];
+        let mut d2 = SketchMatrix::for_layout(dense);
+        d2.push_encoded(&row_d, -1.0);
+        assert_eq!(d2.as_dense().unwrap().row(0), &[0.5f32; 8]);
+        a.copy_rows_from(&a2, 1);
+        d.copy_rows_from(&d2, 2);
+        assert_eq!(a.as_bbit().unwrap().row(1), vec![3u16; 8]);
+        assert_eq!(d.label(2), -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different layouts")]
+    fn sketch_matrix_rejects_mixed_merge() {
+        let mut a = SketchMatrix::for_layout(SketchLayout::PackedBbit { k: 4, b: 2 });
+        let d = SketchMatrix::for_layout(SketchLayout::DenseF32 { k: 4 });
+        a.append(&d);
+    }
+}

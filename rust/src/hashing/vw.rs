@@ -79,38 +79,73 @@ impl VwHasher {
 
     /// Hash a *sparse binary* vector (sorted indices) into the k-dim sample.
     pub fn hash_binary(&self, set: &[u64]) -> Vec<f64> {
-        let mut g = vec![0.0; self.k];
-        for &i in set {
-            g[self.bucket(i)] += self.r(i);
-        }
+        let mut g = Vec::new();
+        self.hash_binary_into(set, &mut g);
         g
+    }
+
+    /// [`Self::hash_binary`] into a caller-owned buffer (cleared and
+    /// zero-resized to k; capacity reused, never stolen — the PR-2 buffer
+    /// contract), so hot loops hash n documents with zero allocations
+    /// after the first.
+    pub fn hash_binary_into(&self, set: &[u64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.k, 0.0);
+        for &i in set {
+            out[self.bucket(i)] += self.r(i);
+        }
     }
 
     /// Hash a dense real vector.
     pub fn hash_dense(&self, u: &[f64]) -> Vec<f64> {
-        let mut g = vec![0.0; self.k];
+        let mut g = Vec::new();
+        self.hash_dense_into(u, &mut g);
+        g
+    }
+
+    /// [`Self::hash_dense`] into a caller-owned buffer (same contract as
+    /// [`Self::hash_binary_into`]).
+    pub fn hash_dense_into(&self, u: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.k, 0.0);
         for (i, &v) in u.iter().enumerate() {
             if v != 0.0 {
-                g[self.bucket(i as u64)] += v * self.r(i as u64);
+                out[self.bucket(i as u64)] += v * self.r(i as u64);
             }
         }
-        g
     }
 
     /// Sparse output of `hash_binary`: (bucket, value) pairs, zeros skipped.
     /// VW is *sparsity-preserving* (paper §7): nnz(out) ≤ nnz(in).
     pub fn hash_binary_sparse(&self, set: &[u64]) -> Vec<(u32, f32)> {
-        let mut dense = std::collections::HashMap::<u32, f64>::new();
-        for &i in set {
-            *dense.entry(self.bucket(i) as u32).or_insert(0.0) += self.r(i);
-        }
-        let mut out: Vec<(u32, f32)> = dense
-            .into_iter()
-            .filter(|&(_, v)| v != 0.0)
-            .map(|(j, v)| (j, v as f32))
-            .collect();
-        out.sort_unstable_by_key(|&(j, _)| j);
+        let mut out = Vec::new();
+        self.hash_binary_sparse_into(set, &mut out);
         out
+    }
+
+    /// [`Self::hash_binary_sparse`] into a caller-owned buffer. No
+    /// intermediate map: (bucket, sign) pairs land in `out`, are sorted by
+    /// bucket, merged in place and zero-filtered — so the buffer's
+    /// capacity is the only allocation, reused across calls.
+    pub fn hash_binary_sparse_into(&self, set: &[u64], out: &mut Vec<(u32, f32)>) {
+        out.clear();
+        out.reserve(set.len());
+        for &i in set {
+            out.push((self.bucket(i) as u32, self.r(i) as f32));
+        }
+        out.sort_unstable_by_key(|&(j, _)| j);
+        let mut w = 0usize;
+        for r in 0..out.len() {
+            let cur = out[r];
+            if w > 0 && out[w - 1].0 == cur.0 {
+                out[w - 1].1 += cur.1;
+            } else {
+                out[w] = cur;
+                w += 1;
+            }
+        }
+        out.truncate(w);
+        out.retain(|&(_, v)| v != 0.0);
     }
 
     /// Unbiased inner-product estimator â_vw (eq. 16).
@@ -142,26 +177,42 @@ impl CountMinSketch {
 
     /// Sketch a dense vector: `rows × k` counters (row-major).
     pub fn sketch_dense(&self, u: &[f64]) -> Vec<f64> {
-        let mut w = vec![0.0; self.rows * self.k];
+        let mut w = Vec::new();
+        self.sketch_dense_into(u, &mut w);
+        w
+    }
+
+    /// [`Self::sketch_dense`] into a caller-owned buffer (cleared and
+    /// zero-resized to `rows·k`; capacity reused across calls).
+    pub fn sketch_dense_into(&self, u: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.rows * self.k, 0.0);
         for (i, &v) in u.iter().enumerate() {
             if v != 0.0 {
                 for row in 0..self.rows {
-                    w[row * self.k + self.bucket(row, i as u64)] += v;
+                    out[row * self.k + self.bucket(row, i as u64)] += v;
                 }
             }
         }
-        w
     }
 
     /// Sketch a sparse binary vector.
     pub fn sketch_binary(&self, set: &[u64]) -> Vec<f64> {
-        let mut w = vec![0.0; self.rows * self.k];
+        let mut w = Vec::new();
+        self.sketch_binary_into(set, &mut w);
+        w
+    }
+
+    /// [`Self::sketch_binary`] into a caller-owned buffer (same contract
+    /// as [`Self::sketch_dense_into`]).
+    pub fn sketch_binary_into(&self, set: &[u64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.rows * self.k, 0.0);
         for &i in set {
             for row in 0..self.rows {
-                w[row * self.k + self.bucket(row, i)] += 1.0;
+                out[row * self.k + self.bucket(row, i)] += 1.0;
             }
         }
-        w
     }
 
     /// Per-row inner-product estimates â_cm (biased — eq. 20).
@@ -343,6 +394,63 @@ mod tests {
             assert!((m2 / nf - 1.0).abs() < 0.02, "s={s} E r² {}", m2 / nf);
             assert!((m4 / nf - s).abs() < 0.1 * s, "s={s} E r⁴ {}", m4 / nf);
         }
+    }
+
+    #[test]
+    fn into_variants_fill_in_place_and_keep_capacity() {
+        // The PR-2 buffer contract, extended to the VW / CM encoders: the
+        // caller's allocation (capacity AND base pointer) must survive
+        // arbitrarily many calls, and values must equal the allocating
+        // versions.
+        let h = VwHasher::new(32, 5);
+        let set: Vec<u64> = (0..50).map(|i| i * 13).collect();
+        let dense_u: Vec<f64> = (0..40).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut g = Vec::new();
+        h.hash_binary_into(&set, &mut g);
+        assert_eq!(g, h.hash_binary(&set));
+        let (cap, ptr) = (g.capacity(), g.as_ptr());
+        let mut sp = Vec::new();
+        let mut d = Vec::new();
+        for _ in 0..16 {
+            h.hash_binary_into(&set, &mut g);
+            h.hash_dense_into(&dense_u, &mut d);
+            h.hash_binary_sparse_into(&set, &mut sp);
+        }
+        assert_eq!(g.capacity(), cap, "capacity must survive reuse");
+        assert_eq!(g.as_ptr(), ptr, "no re-allocation may occur");
+        assert_eq!(d, h.hash_dense(&dense_u));
+        assert_eq!(sp, h.hash_binary_sparse(&set));
+
+        let cm = CountMinSketch::new(16, 3, 9);
+        let mut w = Vec::new();
+        cm.sketch_binary_into(&set, &mut w);
+        assert_eq!(w, cm.sketch_binary(&set));
+        let wp = w.as_ptr();
+        cm.sketch_dense_into(&dense_u, &mut w);
+        assert_eq!(w, cm.sketch_dense(&dense_u));
+        cm.sketch_binary_into(&set, &mut w);
+        assert_eq!(w.as_ptr(), wp, "CM buffer reused in place");
+    }
+
+    #[test]
+    fn prop_sparse_hash_equals_dense_hash() {
+        // Satellite property test: hash_binary_sparse ≡ dense hash_binary
+        // — same buckets, same values (s = 1 signs sum to exact small
+        // integers, so f32 vs f64 accumulation cannot diverge).
+        check("vw sparse == dense", 40, |rng| {
+            let k = 1 + (rng.next_u64() % 256) as usize;
+            let set = gen::sparse_set(rng, 1 << 24, 1, 120);
+            let h = VwHasher::new(k, rng.next_u64());
+            let dense = h.hash_binary(&set);
+            let sparse = h.hash_binary_sparse(&set);
+            assert!(sparse.len() <= set.len(), "sparsity preservation");
+            assert!(sparse.windows(2).all(|w| w[0].0 < w[1].0), "sorted");
+            let mut rebuilt = vec![0.0f64; k];
+            for &(j, v) in &sparse {
+                rebuilt[j as usize] = v as f64;
+            }
+            assert_eq!(rebuilt, dense, "k={k}");
+        });
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!   webspam-like corpus generator and w-shingling (the paper's workload).
 //! * [`hashing`] — minwise hashing, b-bit packing, the Theorem-2 one-hot
 //!   expansion, plus every baseline the paper compares against: VW feature
-//!   hashing, the Count-Min sketch, and (sparse) random projections.
+//!   hashing, the Count-Min sketch, and (sparse) random projections — all
+//!   unified behind the [`hashing::feature_map::FeatureMap`] encoder API
+//!   and the [`hashing::sketch::SketchMatrix`] currency, so the paper's
+//!   equal-storage comparison runs through one pipeline/store/trainer
+//!   stack (`--scheme bbit|vw|proj_normal|proj_sparse|bbit_vw`).
 //! * [`theory`] — the paper's closed forms: the collision probability
 //!   P_b (eq. 4) and its exact small-D counterpart (Appendix A), all
 //!   variance formulas (eqs. 3/6/14/17/19/21/23) and the storage-normalized

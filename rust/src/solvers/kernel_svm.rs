@@ -149,7 +149,7 @@ impl Default for KernelSvmOptions {
 /// noise). The old arbitrary HashMap-order eviction could throw out the
 /// hottest row; SMO's working set (the top KKT violators) re-touches the
 /// same rows for long stretches, which is exactly the access pattern LRU
-/// keeps. Adaptive prefetch block sizing remains a ROADMAP open item.
+/// keeps. Prefetch block sizing is adaptive — see [`PrefetchPolicy`].
 struct RowCache {
     /// row index → (last-access tick, Gram row).
     rows: HashMap<usize, (u64, Vec<f64>)>,
@@ -264,20 +264,72 @@ impl KernelModel {
     }
 }
 
-/// Rows fetched per cache-miss prefetch block (the selected coordinate
-/// plus the next-most-violating ones, the likeliest future fills).
-const PREFETCH_ROWS: usize = 8;
+/// Smallest prefetch block the adaptive policy may shrink to.
+const PREFETCH_MIN: usize = 4;
+/// Largest prefetch block the adaptive policy may grow to.
+const PREFETCH_MAX: usize = 32;
+/// Selections per adaptation window.
+const PREFETCH_WINDOW: u32 = 32;
+/// Starting block size (the old fixed value).
+const PREFETCH_START: usize = 8;
+
+/// Adapts the rows-per-prefetch block to the observed row-cache miss rate
+/// (closes the ROADMAP "smarter row-cache policy" item). The reasoning:
+/// a high miss rate means the working set outruns the cache, so each miss
+/// should haul more of the upcoming violators in one tile sweep; a hitting
+/// cache wants small blocks so prefetch inserts stop evicting hot rows.
+///
+/// The pinned policy: over every [`PREFETCH_WINDOW`] selections, a miss
+/// rate ≥ 1/2 doubles the block and ≤ 1/8 halves it, always clamped to
+/// `PREFETCH_MIN..=PREFETCH_MAX`; in between, the block holds. Block size
+/// only changes *which rows are cached*, never any kernel value, so
+/// training results are independent of the policy (tested).
+struct PrefetchPolicy {
+    block: usize,
+    misses: u32,
+    seen: u32,
+}
+
+impl PrefetchPolicy {
+    fn new() -> Self {
+        Self {
+            block: PREFETCH_START,
+            misses: 0,
+            seen: 0,
+        }
+    }
+
+    /// Record one selection's cache outcome; adapt at window boundaries.
+    fn record(&mut self, miss: bool) {
+        self.seen += 1;
+        self.misses += miss as u32;
+        if self.seen == PREFETCH_WINDOW {
+            if 2 * self.misses >= PREFETCH_WINDOW {
+                self.block = (self.block * 2).min(PREFETCH_MAX);
+            } else if 8 * self.misses <= PREFETCH_WINDOW {
+                self.block = (self.block / 2).max(PREFETCH_MIN);
+            }
+            self.seen = 0;
+            self.misses = 0;
+        }
+    }
+
+    /// Current block size (rows per miss-path prefetch).
+    fn block(&self) -> usize {
+        self.block
+    }
+}
 
 /// Train the dual SVM by greedy coordinate ascent (single-coordinate SMO
 /// without bias, valid because we solve the no-offset formulation).
 ///
 /// Row-cache misses are served in blocks: the selection scan already ranks
 /// every coordinate by KKT violation, so a miss prefetches the selected
-/// row together with the next [`PREFETCH_ROWS`]−1 top violators through
-/// [`Kernel::fill_rows`] — for [`BbitKernel`] one parallel SWAR tile
-/// (`match_count_block_par`) instead of per-row passes over the packed
-/// store. The fill path never changes the values (tested), only their
-/// cost.
+/// row together with the next top violators through [`Kernel::fill_rows`]
+/// — for [`BbitKernel`] one parallel SWAR tile (`match_count_block_par`)
+/// instead of per-row passes over the packed store. The block size adapts
+/// to the observed miss rate ([`PrefetchPolicy`]). The fill path never
+/// changes the values (tested), only their cost.
 pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> KernelModel {
     let n = kernel.n();
     assert!(n > 0);
@@ -287,15 +339,16 @@ pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> Kernel
     let mut cache = RowCache::new(opt.cache_rows);
     let diag: Vec<f64> = (0..n).map(|i| kernel.eval(i, i).max(1e-12)).collect();
 
-    let prefetch = PREFETCH_ROWS.min(opt.cache_rows.max(1));
+    let mut policy = PrefetchPolicy::new();
     // Top violators of the current scan, sorted by violation descending —
     // the prefetch candidates for a cache miss.
-    let mut top: Vec<(f64, usize)> = Vec::with_capacity(prefetch + 1);
-    let mut block: Vec<usize> = Vec::with_capacity(prefetch);
+    let mut top: Vec<(f64, usize)> = Vec::with_capacity(PREFETCH_MAX + 1);
+    let mut block: Vec<usize> = Vec::with_capacity(PREFETCH_MAX);
     let mut scratch: Vec<Vec<f64>> = Vec::new();
 
     let mut updates = 0usize;
     while updates < opt.max_updates {
+        let prefetch = policy.block().min(opt.cache_rows.max(1));
         // Maximal violating coordinate under the box 0 ≤ α ≤ C, tracking
         // the runner-up violators for the miss-path prefetch.
         top.clear();
@@ -324,7 +377,9 @@ pub fn train_kernel_svm<K: Kernel>(kernel: &K, opt: &KernelSvmOptions) -> Kernel
         }
         alpha[i] = a_new;
         let yi = kernel.label(i) as f64;
-        if !cache.contains(i) {
+        let miss = !cache.contains(i);
+        policy.record(miss);
+        if miss {
             // Miss: fetch the whole violator block in one tile sweep.
             block.clear();
             block.extend(top.iter().map(|&(_, j)| j));
@@ -642,6 +697,41 @@ mod tests {
         let fills_before = k.fills.lock().unwrap().len();
         cache.prefetch(&k, &[2, 3], &mut scratch);
         assert_eq!(k.fills.lock().unwrap().len(), fills_before);
+    }
+
+    /// Drive the policy through one full window with `misses` misses (the
+    /// rest hits) and return the block size after adaptation.
+    fn window(policy: &mut PrefetchPolicy, misses: u32) -> usize {
+        for t in 0..PREFETCH_WINDOW {
+            policy.record(t < misses);
+        }
+        policy.block()
+    }
+
+    #[test]
+    fn prefetch_policy_adapts_and_stays_bounded() {
+        // Pins the adaptation policy: start at 8; miss rate ≥ 1/2 doubles,
+        // ≤ 1/8 halves, in between holds; always within [MIN, MAX].
+        let mut p = PrefetchPolicy::new();
+        assert_eq!(p.block(), PREFETCH_START);
+        // Mid-window observations never change the block.
+        p.record(true);
+        assert_eq!(p.block(), PREFETCH_START);
+        for _ in 0..PREFETCH_WINDOW - 1 {
+            p.record(true);
+        }
+        assert_eq!(p.block(), 16, "all-miss window doubles");
+        assert_eq!(window(&mut p, PREFETCH_WINDOW / 2), 32, "rate 1/2 doubles");
+        assert_eq!(window(&mut p, PREFETCH_WINDOW), 32, "clamped at MAX");
+        // A mid rate (between 1/8 and 1/2) holds steady.
+        assert_eq!(window(&mut p, PREFETCH_WINDOW / 4), 32, "rate 1/4 holds");
+        // Low-miss windows shrink back down to the floor.
+        assert_eq!(window(&mut p, PREFETCH_WINDOW / 8), 16, "rate 1/8 halves");
+        assert_eq!(window(&mut p, 0), 8);
+        assert_eq!(window(&mut p, 0), 4);
+        assert_eq!(window(&mut p, 0), 4, "clamped at MIN");
+        // And grows again when the workload turns miss-heavy.
+        assert_eq!(window(&mut p, PREFETCH_WINDOW), 8);
     }
 
     #[test]

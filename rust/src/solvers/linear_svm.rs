@@ -11,7 +11,7 @@
 //! update is O(nnz(x_i)) through the maintained primal vector
 //! w = Σ α_i y_i x_i.
 
-use super::{BinaryFeatures, LinearModel};
+use super::{Features, LinearModel};
 use crate::rng::Xoshiro256;
 
 /// Which SVM loss to optimize.
@@ -47,8 +47,11 @@ impl Default for SvmOptions {
     }
 }
 
-/// Train a linear SVM by dual coordinate descent.
-pub fn train_svm<Ft: BinaryFeatures>(feats: &Ft, opt: &SvmOptions) -> LinearModel {
+/// Train a linear SVM by dual coordinate descent. Generic over
+/// [`Features`], so it consumes binary substrates (raw shingles, the
+/// virtual Theorem-2 expansion) and the dense f32 samples of the VW /
+/// projection schemes alike.
+pub fn train_svm<Ft: Features>(feats: &Ft, opt: &SvmOptions) -> LinearModel {
     let n = feats.n();
     let dim = feats.dim();
     assert!(n > 0, "empty training set");
@@ -59,8 +62,8 @@ pub fn train_svm<Ft: BinaryFeatures>(feats: &Ft, opt: &SvmOptions) -> LinearMode
 
     let mut w = vec![0.0f32; dim];
     let mut alpha = vec![0.0f64; n];
-    // Q_ii = x_i·x_i + D_ii; binary data ⇒ x_i·x_i = nnz(i).
-    let qd: Vec<f64> = (0..n).map(|i| feats.row_nnz(i) as f64 + diag).collect();
+    // Q_ii = x_i·x_i + D_ii (= nnz(i) + D_ii on binary data).
+    let qd: Vec<f64> = (0..n).map(|i| feats.row_norm_sq(i) + diag).collect();
     let mut order: Vec<usize> = (0..n).collect();
     let mut rng = Xoshiro256::seed_from_u64(opt.seed);
 
@@ -70,7 +73,7 @@ pub fn train_svm<Ft: BinaryFeatures>(feats: &Ft, opt: &SvmOptions) -> LinearMode
         rng.shuffle(&mut order);
         let mut max_pg: f64 = 0.0;
         for &i in &order {
-            if qd[i] == diag {
+            if qd[i] <= diag {
                 continue; // empty row: nothing to update
             }
             let y = feats.label(i) as f64;
@@ -194,7 +197,7 @@ pub fn accuracy_real(model: &LinearModel, data: &crate::data::real::SparseRealDa
 }
 
 /// Primal objective value of eq. (9) at w.
-pub fn primal_objective<Ft: BinaryFeatures>(feats: &Ft, w: &[f32], opt: &SvmOptions) -> f64 {
+pub fn primal_objective<Ft: Features>(feats: &Ft, w: &[f32], opt: &SvmOptions) -> f64 {
     let reg: f64 = 0.5 * w.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
     let mut loss = 0.0;
     for i in 0..feats.n() {

@@ -10,7 +10,7 @@
 //!
 //!   g(α) = y_i·w·x_i + log(α/(C−α)),   g'(α) = Q_ii + C/(α(C−α)).
 
-use super::{BinaryFeatures, LinearModel};
+use super::{Features, LinearModel};
 use crate::rng::Xoshiro256;
 
 /// Solver options.
@@ -38,7 +38,8 @@ impl Default for LogRegOptions {
 }
 
 /// Train L2-regularized logistic regression by dual coordinate descent.
-pub fn train_logreg<Ft: BinaryFeatures>(feats: &Ft, opt: &LogRegOptions) -> LinearModel {
+/// Generic over [`Features`] — any hashing scheme's output trains here.
+pub fn train_logreg<Ft: Features>(feats: &Ft, opt: &LogRegOptions) -> LinearModel {
     let n = feats.n();
     let dim = feats.dim();
     assert!(n > 0, "empty training set");
@@ -53,7 +54,7 @@ pub fn train_logreg<Ft: BinaryFeatures>(feats: &Ft, opt: &LogRegOptions) -> Line
     for i in 0..n {
         feats.axpy(i, alpha[i] * feats.label(i) as f64, &mut w);
     }
-    let qd: Vec<f64> = (0..n).map(|i| feats.row_nnz(i) as f64).collect();
+    let qd: Vec<f64> = (0..n).map(|i| feats.row_norm_sq(i)).collect();
     let mut order: Vec<usize> = (0..n).collect();
     let mut rng = Xoshiro256::seed_from_u64(opt.seed);
 
@@ -119,7 +120,7 @@ pub fn train_logreg<Ft: BinaryFeatures>(feats: &Ft, opt: &LogRegOptions) -> Line
 }
 
 /// Primal objective of eq. (10) at w.
-pub fn primal_objective<Ft: BinaryFeatures>(feats: &Ft, w: &[f32], c: f64) -> f64 {
+pub fn primal_objective<Ft: Features>(feats: &Ft, w: &[f32], c: f64) -> f64 {
     let reg: f64 = 0.5 * w.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
     let mut loss = 0.0;
     for i in 0..feats.n() {

@@ -12,10 +12,16 @@
 //!   the paper's §5.1 nonlinear experiments.
 //! * [`metrics`] — accuracy and confusion summaries shared by the harness.
 //!
-//! All linear solvers run over [`BinaryFeatures`], a zero-copy abstraction
-//! that serves both raw shingle datasets and the *virtual* Theorem-2
-//! expansion of a packed signature matrix ([`ExpandedView`]) — the 2^b·k
-//! one-hot features are never materialized during training.
+//! All linear solvers run over [`Features`], the minimal real-valued
+//! access they need (dot, axpy, ‖x‖², label). Binary substrates implement
+//! the richer [`BinaryFeatures`] and get [`Features`] by delegation — so
+//! the raw shingle datasets and the *virtual* Theorem-2 expansion of a
+//! packed signature matrix ([`ExpandedView`]) train exactly as before
+//! (same float-op sequence, bit for bit) — while the dense f32 sketches
+//! of the VW / projection / bbit+VW schemes plug in through
+//! [`DenseView`]. [`SketchView`] dispatches over a
+//! [`SketchMatrix`](crate::hashing::sketch::SketchMatrix), so every
+//! trainer consumes any hashing scheme's output.
 
 pub mod kernel_svm;
 pub mod linear_svm;
@@ -25,6 +31,7 @@ pub mod sgd;
 
 use crate::data::sparse::SparseBinaryDataset;
 use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::sketch::{F32Matrix, SketchMatrix};
 
 /// Row-iterable binary feature matrix with ±1 labels.
 ///
@@ -49,6 +56,59 @@ pub trait BinaryFeatures: Sync {
         self.for_each_index(i, |idx| w[idx] += scale as f32);
     }
 }
+
+/// The real-valued feature access the linear solvers actually need.
+/// Binary substrates ([`SparseBinaryDataset`], [`ExpandedView`]) get it
+/// through `binary_features_impl!` delegating impls that run the
+/// *identical* float-op sequence the solvers ran before the trait split —
+/// preserving bit-for-bit training results — while dense f32 sketch rows
+/// implement it directly ([`DenseView`]). (A blanket impl over
+/// [`BinaryFeatures`] would conflict with the direct dense impls under
+/// Rust's coherence rules, hence the macro.)
+pub trait Features: Sync {
+    fn n(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn label(&self, i: usize) -> f32;
+
+    /// ‖x_i‖² — the DCD diagonal Q_ii (= nnz for binary rows).
+    fn row_norm_sq(&self, i: usize) -> f64;
+
+    /// w·x_i over a dense weight vector.
+    fn dot(&self, i: usize, w: &[f32]) -> f64;
+
+    /// w += scale · x_i.
+    fn axpy(&self, i: usize, scale: f64, w: &mut [f32]);
+}
+
+/// Implement [`Features`] for a [`BinaryFeatures`] type by delegation —
+/// the same default-method float ops, so training results cannot drift.
+macro_rules! binary_features_impl {
+    ($ty:ty) => {
+        impl Features for $ty {
+            fn n(&self) -> usize {
+                BinaryFeatures::n(self)
+            }
+            fn dim(&self) -> usize {
+                BinaryFeatures::dim(self)
+            }
+            fn label(&self, i: usize) -> f32 {
+                BinaryFeatures::label(self, i)
+            }
+            fn row_norm_sq(&self, i: usize) -> f64 {
+                self.row_nnz(i) as f64
+            }
+            fn dot(&self, i: usize, w: &[f32]) -> f64 {
+                BinaryFeatures::dot(self, i, w)
+            }
+            fn axpy(&self, i: usize, scale: f64, w: &mut [f32]) {
+                BinaryFeatures::axpy(self, i, scale, w)
+            }
+        }
+    };
+}
+
+binary_features_impl!(SparseBinaryDataset);
+binary_features_impl!(ExpandedView<'_>);
 
 impl BinaryFeatures for SparseBinaryDataset {
     fn n(&self) -> usize {
@@ -108,6 +168,111 @@ impl BinaryFeatures for ExpandedView<'_> {
     }
 }
 
+/// Dense f32 sketch rows as trainable features: row i of an [`F32Matrix`]
+/// *is* the feature vector (the VW / projection samples are already the
+/// k-dim representation — no expansion involved).
+pub struct DenseView<'a> {
+    m: &'a F32Matrix,
+}
+
+impl<'a> DenseView<'a> {
+    pub fn new(m: &'a F32Matrix) -> Self {
+        Self { m }
+    }
+
+    pub fn matrix(&self) -> &F32Matrix {
+        self.m
+    }
+}
+
+impl Features for DenseView<'_> {
+    fn n(&self) -> usize {
+        self.m.n()
+    }
+    fn dim(&self) -> usize {
+        self.m.k()
+    }
+    fn label(&self, i: usize) -> f32 {
+        self.m.label(i)
+    }
+    fn row_norm_sq(&self, i: usize) -> f64 {
+        self.m
+            .row(i)
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum()
+    }
+    fn dot(&self, i: usize, w: &[f32]) -> f64 {
+        self.m
+            .row(i)
+            .iter()
+            .zip(w)
+            .map(|(&v, &wj)| v as f64 * wj as f64)
+            .sum()
+    }
+    fn axpy(&self, i: usize, scale: f64, w: &mut [f32]) {
+        for (wj, &v) in w.iter_mut().zip(self.m.row(i)) {
+            *wj += (scale * v as f64) as f32;
+        }
+    }
+}
+
+/// Trainable view over any [`SketchMatrix`]: the virtual Theorem-2
+/// expansion for packed signatures, the rows themselves for dense samples.
+/// This is what makes every linear backend consume any hashing scheme.
+pub enum SketchView<'a> {
+    Expanded(ExpandedView<'a>),
+    Dense(DenseView<'a>),
+}
+
+impl<'a> SketchView<'a> {
+    pub fn new(m: &'a SketchMatrix) -> Self {
+        match m {
+            SketchMatrix::Bbit(b) => Self::Expanded(ExpandedView::new(b)),
+            SketchMatrix::Dense(d) => Self::Dense(DenseView::new(d)),
+        }
+    }
+}
+
+impl Features for SketchView<'_> {
+    fn n(&self) -> usize {
+        match self {
+            Self::Expanded(v) => Features::n(v),
+            Self::Dense(v) => Features::n(v),
+        }
+    }
+    fn dim(&self) -> usize {
+        match self {
+            Self::Expanded(v) => Features::dim(v),
+            Self::Dense(v) => Features::dim(v),
+        }
+    }
+    fn label(&self, i: usize) -> f32 {
+        match self {
+            Self::Expanded(v) => Features::label(v, i),
+            Self::Dense(v) => Features::label(v, i),
+        }
+    }
+    fn row_norm_sq(&self, i: usize) -> f64 {
+        match self {
+            Self::Expanded(v) => Features::row_norm_sq(v, i),
+            Self::Dense(v) => Features::row_norm_sq(v, i),
+        }
+    }
+    fn dot(&self, i: usize, w: &[f32]) -> f64 {
+        match self {
+            Self::Expanded(v) => Features::dot(v, i, w),
+            Self::Dense(v) => Features::dot(v, i, w),
+        }
+    }
+    fn axpy(&self, i: usize, scale: f64, w: &mut [f32]) {
+        match self {
+            Self::Expanded(v) => Features::axpy(v, i, scale, w),
+            Self::Dense(v) => Features::axpy(v, i, scale, w),
+        }
+    }
+}
+
 /// A trained linear model (dense weights over the feature dimension).
 #[derive(Clone, Debug)]
 pub struct LinearModel {
@@ -120,12 +285,12 @@ pub struct LinearModel {
 
 impl LinearModel {
     /// Decision value w·x for a feature row.
-    pub fn score<Ft: BinaryFeatures>(&self, feats: &Ft, i: usize) -> f64 {
+    pub fn score<Ft: Features>(&self, feats: &Ft, i: usize) -> f64 {
         feats.dot(i, &self.w)
     }
 
     /// Predicted label ∈ {−1, +1}.
-    pub fn predict<Ft: BinaryFeatures>(&self, feats: &Ft, i: usize) -> f32 {
+    pub fn predict<Ft: Features>(&self, feats: &Ft, i: usize) -> f32 {
         if self.score(feats, i) >= 0.0 {
             1.0
         } else {
@@ -134,7 +299,7 @@ impl LinearModel {
     }
 
     /// Accuracy over a feature set.
-    pub fn accuracy<Ft: BinaryFeatures>(&self, feats: &Ft) -> f64 {
+    pub fn accuracy<Ft: Features>(&self, feats: &Ft) -> f64 {
         if feats.n() == 0 {
             return 0.0;
         }
@@ -156,8 +321,8 @@ mod tests {
         m.push_row(&[1, 0, 3], 1.0);
         m.push_row(&[2, 2, 2], -1.0);
         let view = ExpandedView::new(&m);
-        assert_eq!(view.n(), 2);
-        assert_eq!(view.dim(), 12);
+        assert_eq!(BinaryFeatures::n(&view), 2);
+        assert_eq!(BinaryFeatures::dim(&view), 12);
         assert_eq!(view.row_nnz(0), 3);
         let mut got = Vec::new();
         view.for_each_index(0, |i| got.push(i));
@@ -173,11 +338,59 @@ mod tests {
         let mut ds = SparseBinaryDataset::new(8);
         ds.push(SparseBinaryVec::from_indices(vec![1, 3, 5]), 1.0);
         let mut w = vec![0.0f32; 8];
-        ds.axpy(0, 2.0, &mut w);
+        BinaryFeatures::axpy(&ds, 0, 2.0, &mut w);
         assert_eq!(w[1], 2.0);
         assert_eq!(w[3], 2.0);
         assert_eq!(w[0], 0.0);
-        assert!((ds.dot(0, &w) - 6.0).abs() < 1e-9);
+        assert!((BinaryFeatures::dot(&ds, 0, &w) - 6.0).abs() < 1e-9);
+        // The blanket Features impl is the same ops, bit for bit.
+        assert_eq!(
+            Features::dot(&ds, 0, &w).to_bits(),
+            BinaryFeatures::dot(&ds, 0, &w).to_bits()
+        );
+        assert_eq!(Features::row_norm_sq(&ds, 0), 3.0);
+    }
+
+    #[test]
+    fn dense_view_dot_axpy_and_norm() {
+        let mut m = F32Matrix::new(3);
+        m.push_row(&[1.0, -2.0, 0.0], 1.0);
+        m.push_row(&[0.5, 0.5, 2.0], -1.0);
+        let v = DenseView::new(&m);
+        assert_eq!(Features::n(&v), 2);
+        assert_eq!(Features::dim(&v), 3);
+        assert_eq!(Features::label(&v, 1), -1.0);
+        assert!((Features::row_norm_sq(&v, 0) - 5.0).abs() < 1e-12);
+        let mut w = vec![0.0f32; 3];
+        Features::axpy(&v, 0, 2.0, &mut w);
+        assert_eq!(w, vec![2.0, -4.0, 0.0]);
+        assert!((Features::dot(&v, 0, &w) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sketch_view_dispatches_to_both_variants() {
+        // Packed variant: same values as the direct ExpandedView.
+        let mut b = BbitSignatureMatrix::new(3, 2);
+        b.push_row(&[1, 0, 3], 1.0);
+        let sk = SketchMatrix::Bbit(b.clone());
+        let view = SketchView::new(&sk);
+        let direct = ExpandedView::new(&b);
+        assert_eq!(Features::n(&view), 1);
+        assert_eq!(Features::dim(&view), 12);
+        let w: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(
+            Features::dot(&view, 0, &w).to_bits(),
+            Features::dot(&direct, 0, &w).to_bits(),
+            "packed dispatch must be the identical op sequence"
+        );
+        // Dense variant.
+        let mut d = F32Matrix::new(2);
+        d.push_row(&[2.0, -1.0], -1.0);
+        let skd = SketchMatrix::Dense(d);
+        let vd = SketchView::new(&skd);
+        assert_eq!(Features::dim(&vd), 2);
+        assert_eq!(Features::dot(&vd, 0, &[1.0, 1.0]), 1.0);
+        assert_eq!(Features::row_norm_sq(&vd, 0), 5.0);
     }
 
     #[test]

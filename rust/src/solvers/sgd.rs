@@ -6,7 +6,7 @@
 //! η_t = 1/(λt) and the optional ‖w‖ ≤ 1/√λ projection. The paper's C maps
 //! to λ = 1/(C·n).
 
-use super::{BinaryFeatures, LinearModel};
+use super::{Features, LinearModel};
 use crate::rng::Xoshiro256;
 
 /// Pegasos options.
@@ -37,8 +37,11 @@ impl Default for PegasosOptions {
     }
 }
 
-/// Train by Pegasos SGD.
-pub fn train_pegasos<Ft: BinaryFeatures>(feats: &Ft, opt: &PegasosOptions) -> LinearModel {
+/// Train by Pegasos SGD. Generic over [`Features`] — binary substrates
+/// run the identical float-op sequence as before the trait split (the
+/// blanket impl delegates to the same defaults), dense f32 sketches plug
+/// straight in.
+pub fn train_pegasos<Ft: Features>(feats: &Ft, opt: &PegasosOptions) -> LinearModel {
     let n = feats.n();
     let dim = feats.dim();
     assert!(n > 0);
@@ -73,12 +76,12 @@ pub fn train_pegasos<Ft: BinaryFeatures>(feats: &Ft, opt: &PegasosOptions) -> Li
         }
         if margin < 1.0 {
             let add = eta * y / w_scale; // store unscaled
-            // norm update: ‖v + s·x‖² = ‖v‖² + 2 s Σ v_j + s²·nnz (binary x)
-            let mut dot_before = 0.0f64;
-            feats.for_each_index(i, |idx| dot_before += w[idx] as f64);
+            // norm update: ‖v + s·x‖² = ‖v‖² + 2 s ⟨v, x⟩ + s²·‖x‖²
+            // (‖x‖² = nnz on binary rows).
+            let dot_before = feats.dot(i, &w);
             feats.axpy(i, add, &mut w);
             let s = eta * y;
-            norm_sq += 2.0 * s * dot_before * w_scale + s * s * feats.row_nnz(i) as f64;
+            norm_sq += 2.0 * s * dot_before * w_scale + s * s * feats.row_norm_sq(i);
         }
         if opt.project && norm_sq > 0.0 {
             let bound = 1.0 / lambda; // ‖w‖² ≤ 1/λ
@@ -120,7 +123,7 @@ pub fn train_pegasos<Ft: BinaryFeatures>(feats: &Ft, opt: &PegasosOptions) -> Li
 }
 
 /// λ/2 ‖w‖² + (1/n) Σ hinge.
-pub fn pegasos_objective<Ft: BinaryFeatures>(feats: &Ft, w: &[f32], lambda: f64) -> f64 {
+pub fn pegasos_objective<Ft: Features>(feats: &Ft, w: &[f32], lambda: f64) -> f64 {
     let reg = 0.5 * lambda * w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>();
     let mut loss = 0.0;
     for i in 0..feats.n() {

@@ -1,26 +1,65 @@
 //! The versioned binary shard format (see the module docs in
 //! [`crate::store`] for the byte-by-byte layout).
 //!
-//! One shard file = one fixed 64-byte header + one payload. The payload is
-//! the shard's aligned word store followed by its label block, optionally
-//! wrapped in a single gzip member (the vendored `flate2`). The header
-//! carries a CRC-32 of the *uncompressed* payload, so corruption is caught
-//! on read for both the raw and the gzip path (gzip's own trailer CRC is
-//! additionally checked by the decoder).
+//! One shard file = one fixed 64-byte header + one payload. Version 2
+//! extends version 1 with a **scheme byte** (offset 52, one of
+//! [`Scheme::code`]) and a **dtype byte** (offset 53: 0 = packed u64 row
+//! words, 1 = f32 rows), so the store carries any hashing scheme's output.
+//! A version-1 file is exactly a version-2 file with scheme = dtype = 0
+//! (those offsets were reserved-zero), which is the whole migration:
+//!
+//! * **writers** emit version-1 framing for pure-bbit shards — existing
+//!   stores and their byte-identity guarantees are untouched — and
+//!   version-2 framing whenever the scheme field is load-bearing;
+//! * **readers** accept both versions; a version-1 file with a nonzero
+//!   scheme/dtype byte, or a version-2 file with an unknown scheme byte,
+//!   is rejected as `InvalidData` (never guessed at).
+//!
+//! The payload is the shard's row block followed by its label block,
+//! optionally wrapped in a single gzip member (the vendored `flate2`). The
+//! header carries a CRC-32 of the *uncompressed* payload, so corruption is
+//! caught on read for both the raw and the gzip path.
 
 use std::io::{self, Read, Write};
 use std::path::Path;
 
 use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::feature_map::Scheme;
+use crate::hashing::sketch::{F32Matrix, SketchMatrix};
 
-/// File magic: identifies a b-bit signature shard.
+/// File magic: identifies a signature/sketch shard.
 pub const MAGIC: [u8; 8] = *b"BBSHARD\0";
-/// Current format version.
-pub const VERSION: u32 = 1;
+/// Current format version (readers also accept version 1 — see module
+/// docs for the migration contract).
+pub const VERSION: u32 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 64;
 /// Flags bit 0: payload is one gzip member.
 pub const FLAG_GZIP: u32 = 1;
+
+/// dtype byte: rows are packed u64 words ([`BbitSignatureMatrix`]).
+pub const DTYPE_PACKED_U64: u8 = 0;
+/// dtype byte: rows are f32 values ([`F32Matrix`]).
+pub const DTYPE_F32: u8 = 1;
+
+/// The wire version a shard of `scheme` is framed with: version 1 for
+/// bbit (byte-identical to every pre-v2 store), version 2 otherwise.
+pub fn wire_version(scheme: Scheme) -> u32 {
+    if scheme == Scheme::Bbit {
+        1
+    } else {
+        VERSION
+    }
+}
+
+/// The dtype byte a scheme's rows serialize as.
+pub fn scheme_dtype(scheme: Scheme) -> u8 {
+    if scheme.is_dense() {
+        DTYPE_F32
+    } else {
+        DTYPE_PACKED_U64
+    }
+}
 
 /// Per-byte CRC-32 lookup table (reflected, poly 0xEDB88320), built at
 /// compile time.
@@ -64,11 +103,14 @@ fn bad(msg: String) -> io::Error {
 pub struct ShardHeader {
     pub version: u32,
     pub flags: u32,
-    /// Signature width (permutations per row).
+    /// Hashing scheme the rows came from (drives the payload dtype).
+    pub scheme: Scheme,
+    /// Sample width: values per row (permutations, buckets, projections).
     pub k: usize,
-    /// Bits kept per value.
+    /// Bits kept per value (bbit scheme; 0 for dense schemes).
     pub b: u32,
-    /// Words per row of the aligned payload (= ceil(k·b/64)).
+    /// Words per row of an aligned packed payload (= ceil(k·b/64); 0 for
+    /// dense schemes).
     pub stride_words: usize,
     /// Rows in this shard.
     pub n_rows: usize,
@@ -84,7 +126,14 @@ impl ShardHeader {
         self.flags & FLAG_GZIP != 0
     }
 
-    /// Serialize to the fixed 64-byte layout (reserved bytes zero).
+    /// The dtype byte this header's rows serialize as.
+    pub fn dtype(&self) -> u8 {
+        scheme_dtype(self.scheme)
+    }
+
+    /// Serialize to the fixed 64-byte layout. For scheme `bbit` the
+    /// scheme/dtype bytes are zero and `version` is 1, so the encoding is
+    /// byte-identical to the version-1 format.
     pub fn encode(&self) -> [u8; HEADER_LEN] {
         let mut out = [0u8; HEADER_LEN];
         out[0..8].copy_from_slice(&MAGIC);
@@ -96,11 +145,13 @@ impl ShardHeader {
         out[32..40].copy_from_slice(&(self.n_rows as u64).to_le_bytes());
         out[40..48].copy_from_slice(&(self.payload_len as u64).to_le_bytes());
         out[48..52].copy_from_slice(&self.payload_crc32.to_le_bytes());
-        // bytes 52..64 reserved (zero)
+        out[52] = self.scheme.code();
+        out[53] = self.dtype();
+        // bytes 54..64 reserved (zero)
         out
     }
 
-    /// Parse and validate the fixed header.
+    /// Parse and validate the fixed header (either wire version).
     pub fn decode(buf: &[u8]) -> io::Result<Self> {
         if buf.len() < HEADER_LEN {
             return Err(bad(format!(
@@ -114,12 +165,31 @@ impl ShardHeader {
         let u32_at = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
         let u64_at = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
         let version = u32_at(8);
-        if version != VERSION {
-            return Err(bad(format!("unsupported version {version} (want {VERSION})")));
+        if !(1..=VERSION).contains(&version) {
+            return Err(bad(format!(
+                "unsupported version {version} (want 1..={VERSION})"
+            )));
+        }
+        let (scheme_byte, dtype_byte) = (buf[52], buf[53]);
+        if version == 1 && (scheme_byte != 0 || dtype_byte != 0) {
+            // Genuine v1 files have these reserved bytes zero.
+            return Err(bad(format!(
+                "version 1 header with nonzero scheme/dtype bytes \
+                 ({scheme_byte}/{dtype_byte})"
+            )));
+        }
+        let scheme = Scheme::from_code(scheme_byte).ok_or_else(|| {
+            bad(format!("unknown scheme byte {scheme_byte} — newer writer?"))
+        })?;
+        if dtype_byte != scheme_dtype(scheme) {
+            return Err(bad(format!(
+                "dtype byte {dtype_byte} inconsistent with scheme {scheme}"
+            )));
         }
         let hdr = ShardHeader {
             version,
             flags: u32_at(12),
+            scheme,
             k: u64_at(16) as usize,
             b: u32_at(24),
             stride_words: u32_at(28) as usize,
@@ -127,37 +197,99 @@ impl ShardHeader {
             payload_len: u64_at(40) as usize,
             payload_crc32: u32_at(48),
         };
-        if hdr.k == 0 || !(1..=16).contains(&hdr.b) {
-            return Err(bad(format!("invalid shape k={} b={}", hdr.k, hdr.b)));
+        if hdr.k == 0 {
+            return Err(bad(format!("invalid shape k={}", hdr.k)));
         }
-        let want_stride = (hdr.k * hdr.b as usize).div_ceil(64);
-        if hdr.stride_words != want_stride {
-            return Err(bad(format!(
-                "stride_words {} inconsistent with k={} b={} (want {want_stride})",
-                hdr.stride_words, hdr.k, hdr.b
-            )));
+        if scheme.is_dense() {
+            if hdr.b != 0 || hdr.stride_words != 0 {
+                return Err(bad(format!(
+                    "dense scheme {scheme} with b={} stride_words={} (want 0/0)",
+                    hdr.b, hdr.stride_words
+                )));
+            }
+        } else {
+            if !(1..=16).contains(&hdr.b) {
+                return Err(bad(format!("invalid shape k={} b={}", hdr.k, hdr.b)));
+            }
+            let want_stride = (hdr.k * hdr.b as usize).div_ceil(64);
+            if hdr.stride_words != want_stride {
+                return Err(bad(format!(
+                    "stride_words {} inconsistent with k={} b={} (want {want_stride})",
+                    hdr.stride_words, hdr.k, hdr.b
+                )));
+            }
         }
         Ok(hdr)
     }
 }
 
-/// Uncompressed payload of a shard: rows' words (LE u64) then labels
-/// (LE f32 bit patterns), in row order.
-fn encode_payload(m: &BbitSignatureMatrix) -> Vec<u8> {
-    let mut out = Vec::with_capacity(m.words().len() * 8 + m.labels().len() * 4);
-    for &w in m.words() {
-        out.extend_from_slice(&w.to_le_bytes());
+/// Uncompressed payload of a shard: the row block then the label block
+/// (LE f32 bit patterns), in row order. Packed rows serialize their
+/// aligned u64 words; dense rows their f32 values.
+fn encode_payload(m: &SketchMatrix) -> Vec<u8> {
+    match m {
+        SketchMatrix::Bbit(m) => {
+            let mut out = Vec::with_capacity(m.words().len() * 8 + m.labels().len() * 4);
+            for &w in m.words() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            for &l in m.labels() {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+            out
+        }
+        SketchMatrix::Dense(m) => {
+            let mut out = Vec::with_capacity((m.values().len() + m.labels().len()) * 4);
+            for &v in m.values() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for &l in m.labels() {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+            out
+        }
     }
-    for &l in m.labels() {
-        out.extend_from_slice(&l.to_le_bytes());
-    }
-    out
 }
 
 /// Inverse of [`encode_payload`] for a validated header. All size
 /// arithmetic is checked: a corrupt `n_rows` must surface as
 /// `InvalidData`, never as an arithmetic panic.
-fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<BbitSignatureMatrix> {
+fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<SketchMatrix> {
+    if hdr.dtype() == DTYPE_F32 {
+        let (n_vals, want) = hdr
+            .n_rows
+            .checked_mul(hdr.k)
+            .and_then(|nv| {
+                let bytes = nv.checked_mul(4)?.checked_add(hdr.n_rows.checked_mul(4)?)?;
+                Some((nv, bytes))
+            })
+            .ok_or_else(|| {
+                bad(format!(
+                    "implausible shard shape: {} rows × k {} overflows",
+                    hdr.n_rows, hdr.k
+                ))
+            })?;
+        if raw.len() != want {
+            return Err(bad(format!(
+                "payload is {} bytes, want {want} ({} rows × k {})",
+                raw.len(),
+                hdr.n_rows,
+                hdr.k
+            )));
+        }
+        let (val_bytes, label_bytes) = raw.split_at(n_vals * 4);
+        let values: Vec<f32> = val_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let labels: Vec<f32> = label_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        return Ok(SketchMatrix::Dense(F32Matrix::from_raw_parts(
+            hdr.k, values, labels,
+        )));
+    }
     let (n_words, want) = hdr
         .n_rows
         .checked_mul(hdr.stride_words)
@@ -188,16 +320,36 @@ fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<BbitSignatureMatr
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    Ok(BbitSignatureMatrix::from_raw_parts(hdr.k, hdr.b, words, labels))
+    Ok(SketchMatrix::Bbit(BbitSignatureMatrix::from_raw_parts(
+        hdr.k, hdr.b, words, labels,
+    )))
 }
 
 /// Write one shard file (header + optionally gzip-wrapped payload).
-/// Returns the total bytes written.
+/// Returns the total bytes written. Bbit shards are framed as version 1 —
+/// byte-identical to every pre-v2 store.
 pub fn write_shard_file(
     path: &Path,
-    m: &BbitSignatureMatrix,
+    m: &SketchMatrix,
+    scheme: Scheme,
     gzip: bool,
 ) -> io::Result<usize> {
+    let (k, b, stride) = match m {
+        SketchMatrix::Bbit(p) => {
+            assert!(
+                !scheme.is_dense(),
+                "scheme {scheme} stores dense rows, got a packed matrix"
+            );
+            (p.k(), p.b(), p.stride_words())
+        }
+        SketchMatrix::Dense(d) => {
+            assert!(
+                scheme.is_dense(),
+                "scheme {scheme} stores packed rows, got a dense matrix"
+            );
+            (d.k(), 0, 0)
+        }
+    };
     let raw = encode_payload(m);
     let crc = crc32(&raw);
     let stored = if gzip {
@@ -209,11 +361,12 @@ pub fn write_shard_file(
         raw
     };
     let hdr = ShardHeader {
-        version: VERSION,
+        version: wire_version(scheme),
         flags: if gzip { FLAG_GZIP } else { 0 },
-        k: m.k(),
-        b: m.b(),
-        stride_words: m.stride_words(),
+        scheme,
+        k,
+        b,
+        stride_words: stride,
         n_rows: m.n(),
         payload_len: stored.len(),
         payload_crc32: crc,
@@ -227,7 +380,7 @@ pub fn write_shard_file(
 
 /// Read one shard file back, verifying header shape, payload length and
 /// the payload CRC.
-pub fn read_shard_file(path: &Path) -> io::Result<(ShardHeader, BbitSignatureMatrix)> {
+pub fn read_shard_file(path: &Path) -> io::Result<(ShardHeader, SketchMatrix)> {
     let bytes = std::fs::read(path)?;
     let hdr = ShardHeader::decode(&bytes)?;
     let stored = &bytes[HEADER_LEN..];
@@ -272,6 +425,16 @@ mod tests {
         m
     }
 
+    fn sample_dense(k: usize, n: usize, seed: u64) -> F32Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut m = F32Matrix::new(k);
+        for i in 0..n {
+            let row: Vec<f32> = (0..k).map(|_| rng.gen_f32() * 4.0 - 2.0).collect();
+            m.push_row(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        m
+    }
+
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("bbml_fmt_{}_{}", name, std::process::id()))
     }
@@ -279,8 +442,9 @@ mod tests {
     #[test]
     fn header_encode_decode_roundtrip() {
         let hdr = ShardHeader {
-            version: VERSION,
+            version: 1,
             flags: FLAG_GZIP,
+            scheme: Scheme::Bbit,
             k: 200,
             b: 8,
             stride_words: 25,
@@ -292,13 +456,27 @@ mod tests {
         assert_eq!(bytes.len(), HEADER_LEN);
         assert_eq!(ShardHeader::decode(&bytes).unwrap(), hdr);
         assert!(ShardHeader::decode(&bytes[..HEADER_LEN]).unwrap().gzip());
+        // A dense v2 header roundtrips too.
+        let dense = ShardHeader {
+            version: VERSION,
+            flags: 0,
+            scheme: Scheme::Vw,
+            k: 64,
+            b: 0,
+            stride_words: 0,
+            n_rows: 100,
+            payload_len: 64 * 100 * 4 + 400,
+            payload_crc32: 7,
+        };
+        assert_eq!(ShardHeader::decode(&dense.encode()).unwrap(), dense);
     }
 
     #[test]
     fn header_rejects_bad_magic_version_and_shape() {
         let mut ok = ShardHeader {
-            version: VERSION,
+            version: 1,
             flags: 0,
+            scheme: Scheme::Bbit,
             k: 16,
             b: 4,
             stride_words: 1,
@@ -320,11 +498,76 @@ mod tests {
     }
 
     #[test]
+    fn header_rejects_unknown_and_inconsistent_scheme_bytes() {
+        let base = ShardHeader {
+            version: VERSION,
+            flags: 0,
+            scheme: Scheme::Vw,
+            k: 8,
+            b: 0,
+            stride_words: 0,
+            n_rows: 4,
+            payload_len: 8 * 4 * 4 + 16,
+            payload_crc32: 0,
+        }
+        .encode();
+        // Unknown scheme byte in a v2 header → InvalidData, not a guess.
+        let mut unknown = base;
+        unknown[52] = 9;
+        let err = ShardHeader::decode(&unknown).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("unknown scheme"), "{err}");
+        // dtype contradicting the scheme → InvalidData.
+        let mut bad_dtype = base;
+        bad_dtype[53] = DTYPE_PACKED_U64;
+        assert!(ShardHeader::decode(&bad_dtype).is_err());
+        // A v1 header must have reserved-zero scheme/dtype bytes.
+        let mut v1 = sample_v1_header();
+        v1[52] = Scheme::Vw.code();
+        assert!(ShardHeader::decode(&v1).is_err());
+    }
+
+    fn sample_v1_header() -> [u8; HEADER_LEN] {
+        ShardHeader {
+            version: 1,
+            flags: 0,
+            scheme: Scheme::Bbit,
+            k: 16,
+            b: 4,
+            stride_words: 1,
+            n_rows: 10,
+            payload_len: 120,
+            payload_crc32: 0,
+        }
+        .encode()
+    }
+
+    #[test]
+    fn bbit_framing_is_version1_and_byte_stable() {
+        // The migration contract: a bbit shard written today is framed as
+        // version 1 with zeroed scheme/dtype bytes — byte-identical to a
+        // pre-v2 store.
+        let m = sample_matrix(13, 4, 7, 3);
+        let path = tmp("v1_frame");
+        write_shard_file(&path, &SketchMatrix::Bbit(m), Scheme::Bbit, false).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 1);
+        assert_eq!(bytes[52], 0, "scheme byte stays reserved-zero");
+        assert_eq!(bytes[53], 0, "dtype byte stays reserved-zero");
+        let (hdr, _) = read_shard_file(&path).unwrap();
+        assert_eq!(hdr.scheme, Scheme::Bbit);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn shard_file_roundtrips_raw_and_gzip() {
         for (b, gzip) in [(1u32, false), (3, false), (8, true), (16, true)] {
             let m = sample_matrix(13, b, 29, b as u64);
+            let want_words = m.words().to_vec();
+            let want_labels = m.labels().to_vec();
             let path = tmp(&format!("rt_{b}_{gzip}"));
-            let bytes = write_shard_file(&path, &m, gzip).unwrap();
+            let bytes =
+                write_shard_file(&path, &SketchMatrix::Bbit(m), Scheme::Bbit, gzip).unwrap();
             assert_eq!(
                 bytes as u64,
                 std::fs::metadata(&path).unwrap().len(),
@@ -333,8 +576,35 @@ mod tests {
             let (hdr, back) = read_shard_file(&path).unwrap();
             assert_eq!(hdr.gzip(), gzip);
             assert_eq!((hdr.k, hdr.b, hdr.n_rows), (13, b, 29));
-            assert_eq!(back.words(), m.words(), "b={b} gzip={gzip}");
-            assert_eq!(back.labels(), m.labels());
+            let back = back.into_bbit().expect("bbit shard decodes packed");
+            assert_eq!(back.words(), want_words.as_slice(), "b={b} gzip={gzip}");
+            assert_eq!(back.labels(), want_labels.as_slice());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn dense_shard_roundtrips_bit_identical() {
+        for (scheme, gzip) in [
+            (Scheme::Vw, false),
+            (Scheme::ProjNormal, true),
+            (Scheme::ProjSparse, false),
+            (Scheme::BbitVw, true),
+        ] {
+            let m = sample_dense(9, 23, scheme.code() as u64 + 50);
+            let want_vals = m.values().to_vec();
+            let want_labels = m.labels().to_vec();
+            let path = tmp(&format!("dense_{}_{gzip}", scheme.name()));
+            write_shard_file(&path, &SketchMatrix::Dense(m), scheme, gzip).unwrap();
+            let (hdr, back) = read_shard_file(&path).unwrap();
+            assert_eq!(hdr.version, VERSION);
+            assert_eq!(hdr.scheme, scheme);
+            assert_eq!((hdr.k, hdr.b, hdr.stride_words), (9, 0, 0));
+            let back = back.into_dense().expect("dense shard decodes dense");
+            // f32 bit patterns must survive exactly.
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(back.values()), bits(&want_vals), "{scheme}");
+            assert_eq!(bits(back.labels()), bits(&want_labels));
             std::fs::remove_file(&path).ok();
         }
     }
@@ -343,7 +613,7 @@ mod tests {
     fn empty_shard_roundtrips() {
         let m = BbitSignatureMatrix::new(5, 4);
         let path = tmp("empty");
-        write_shard_file(&path, &m, false).unwrap();
+        write_shard_file(&path, &SketchMatrix::Bbit(m), Scheme::Bbit, false).unwrap();
         let (hdr, back) = read_shard_file(&path).unwrap();
         assert_eq!(hdr.n_rows, 0);
         assert_eq!(back.n(), 0);
@@ -354,7 +624,7 @@ mod tests {
     fn corrupted_payload_is_detected() {
         let m = sample_matrix(16, 8, 8, 5);
         let path = tmp("corrupt");
-        write_shard_file(&path, &m, false).unwrap();
+        write_shard_file(&path, &SketchMatrix::Bbit(m), Scheme::Bbit, false).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         let last = bytes.len() - 1;
         bytes[last] ^= 0x40; // flip a payload bit

@@ -1,17 +1,21 @@
-//! On-disk signature shard store — the persistence layer for the paper's
-//! out-of-core regime.
+//! On-disk sketch shard store — the persistence layer for the paper's
+//! out-of-core regime, scheme-agnostic since format version 2.
 //!
 //! The headline claim of b-bit minwise hashing is that it makes large-scale
 //! learning practical *"especially when data do not fit in memory"*, and
 //! the follow-up work (Li & Shrivastava, arXiv:1108.3072 — training on
 //! 200 GB; "b-Bit Minwise Hashing in Practice", arXiv:1205.2958) runs
-//! exactly this batch regime: hash once, spill packed signatures to disk,
-//! then train in epochs over the stream. This module is that layer:
+//! exactly this batch regime: hash once, spill packed sketches to disk,
+//! then train in epochs over the stream. Since the `FeatureMap` redesign
+//! the store carries **any scheme's output** — packed b-bit signatures or
+//! the dense f32 samples of VW / projections / bbit+VW — so the paper's
+//! equal-storage comparison runs out of core too. This module is that
+//! layer:
 //!
 //! * [`format`] — the versioned binary shard format (layout below);
 //! * [`writer`] / [`ShardWriter`] — the spill sink the hashing pipeline's
-//!   collector writes arriving shards through (`hash_corpus_to_store` /
-//!   `hash_dataset_to_store` in [`crate::coordinator::pipeline`]), one file
+//!   collector writes arriving shards through (`sketch_*_to_store` /
+//!   `hash_*_to_store` in [`crate::coordinator::pipeline`]), one file
 //!   per pipeline chunk so out-of-order arrival needs no reordering buffer
 //!   and resident memory stays bounded by the pipeline's backpressure
 //!   window;
@@ -28,8 +32,8 @@
 //!
 //! ```text
 //! store/
-//!   manifest.txt      # key = value: version, k, b, stride_words, gzip,
-//!                     # n_shards, n_rows, packed_bytes, stored_bytes
+//!   manifest.txt      # key = value: version, [scheme,] k, b, stride_words,
+//!                     # gzip, n_shards, n_rows, packed_bytes, stored_bytes
 //!   shard-00000.bbs   # rows [0, c)          (c = pipeline chunk rows)
 //!   shard-00001.bbs   # rows [c, 2c)
 //!   ...               # final shard may be ragged (fewer rows)
@@ -39,7 +43,7 @@
 //! sequential shard order is exactly corpus row order — which is what makes
 //! shuffle-off streaming training bit-identical to the in-memory path.
 //!
-//! # Shard file layout (version 1)
+//! # Shard file layout (version 2)
 //!
 //! Fixed 64-byte little-endian header, then the payload:
 //!
@@ -47,37 +51,60 @@
 //! offset  size  field
 //! ------  ----  -----------------------------------------------------------
 //!      0     8  magic            b"BBSHARD\0"
-//!      8     4  version          u32, = 1
+//!      8     4  version          u32, 1 or 2 (see Versioning below)
 //!     12     4  flags            u32, bit 0 = payload is one gzip member
-//!     16     8  k                u64, signature width (values per row)
-//!     24     4  b                u32, bits per value (1..=16)
-//!     28     4  stride_words     u32, words per row = ceil(k·b/64); stored
-//!                                redundantly and validated against k·b
+//!     16     8  k                u64, sample width (values per row)
+//!     24     4  b                u32, bits per value (1..=16; 0 for dense
+//!                                schemes)
+//!     28     4  stride_words     u32, words per row = ceil(k·b/64) for the
+//!                                packed dtype (validated against k·b);
+//!                                0 for dense schemes
 //!     32     8  n_rows           u64, rows in this shard
 //!     40     8  payload_len      u64, payload bytes AS STORED (post-gzip)
 //!     48     4  payload_crc32    u32, CRC-32 (poly 0xEDB88320, reflected)
 //!                                of the UNCOMPRESSED payload
-//!     52    12  reserved         zero
+//!     52     1  scheme           u8: 0=bbit 1=vw 2=proj_normal
+//!                                3=proj_sparse 4=bbit_vw; unknown bytes
+//!                                are rejected as InvalidData
+//!     53     1  dtype            u8: 0=packed u64 row words, 1=f32 rows;
+//!                                must agree with the scheme
+//!     54    10  reserved         zero
 //!     64     …  payload
 //! ```
 //!
-//! The uncompressed payload is the shard's word-aligned signature block
-//! followed by its label block, both little-endian:
+//! The uncompressed payload is the shard's row block followed by its label
+//! block, both little-endian:
 //!
 //! ```text
-//! n_rows · stride_words  u64   row words, row-major (pad bits zero —
-//!                              exactly `BbitSignatureMatrix::words()`)
-//! n_rows                 f32   labels (±1.0), IEEE-754 bit patterns
+//! dtype 0 (packed):  n_rows · stride_words  u64  row words, row-major
+//!                    (pad bits zero — exactly
+//!                    `BbitSignatureMatrix::words()`)
+//! dtype 1 (f32):     n_rows · k             f32  row values, row-major
+//!                    (exactly `F32Matrix::values()`)
+//! then:              n_rows                 f32  labels (±1.0), IEEE-754
+//!                    bit patterns
 //! ```
+//!
+//! # Versioning & migration
+//!
+//! Version 2 only *adds* the scheme/dtype bytes at offsets 52–53, which
+//! version 1 kept reserved-zero — so **a version-1 file is exactly a
+//! version-2 file with scheme 0 (bbit) and dtype 0 (packed)**. Writers
+//! therefore frame pure-bbit shards (and their manifests) as version 1:
+//! pre-existing stores keep opening, and new bbit stores stay
+//! byte-identical to what the pre-v2 code wrote. Dense schemes get
+//! version-2 framing and a `scheme = <name>` manifest line. Readers accept
+//! both versions and reject: unknown version numbers, unknown scheme
+//! bytes, a version-1 header with nonzero scheme/dtype bytes, and
+//! dtype/scheme disagreement — all as `InvalidData`.
 //!
 //! With `flags` bit 0 set the whole payload is wrapped in a single gzip
 //! member (the vendored `flate2` emits stored blocks, so this trades bytes
 //! for a second integrity check until the real flate2 is swapped in; the
 //! header CRC is always over the uncompressed bytes). Rows deserialize via
-//! `BbitSignatureMatrix::from_raw_parts` — no unpack/re-pack, so a
-//! write→read roundtrip is bit-identical to the in-memory matrix (property
-//! tested in `tests/integration_store.rs` across b, chunking, threads and
-//! gzip).
+//! `from_raw_parts` — no unpack/re-pack, so a write→read roundtrip is
+//! bit-identical to the in-memory matrix for every scheme (property tested
+//! in `tests/integration_store.rs` and `tests/integration_schemes.rs`).
 
 pub mod format;
 pub mod reader;

@@ -1,5 +1,5 @@
 //! [`SigShardStore`] + [`ShardStream`]: open a store and iterate its
-//! shards without ever materializing the full signature matrix.
+//! shards without ever materializing the full sketch matrix.
 //!
 //! The stream decodes shards on a background reader thread and hands them
 //! through a **bounded** channel, so the out-of-core trainer overlaps disk
@@ -18,15 +18,17 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 
-use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::feature_map::{Scheme, SketchLayout};
+use crate::hashing::sketch::SketchMatrix;
 
 use super::format;
 use super::writer::{shard_path, MANIFEST_NAME};
 
-/// An opened signature shard store (read side).
+/// An opened sketch shard store (read side).
 #[derive(Clone, Debug)]
 pub struct SigShardStore {
     dir: PathBuf,
+    scheme: Scheme,
     k: usize,
     b: u32,
     gzip: bool,
@@ -41,7 +43,9 @@ fn bad(msg: String) -> io::Error {
 }
 
 impl SigShardStore {
-    /// Open a store by parsing its manifest.
+    /// Open a store by parsing its manifest. Version-1 manifests (no
+    /// `scheme` line) are bbit stores; version-2 manifests name their
+    /// scheme, and unknown names are rejected as `InvalidData`.
     pub fn open(dir: &Path) -> io::Result<Self> {
         let manifest_path = dir.join(MANIFEST_NAME);
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
@@ -67,11 +71,22 @@ impl SigShardStore {
                 .ok_or_else(|| bad(format!("manifest: missing/invalid '{key}'")))
         };
         let version = get("version")?;
-        if version != format::VERSION as usize {
+        if !(1..=format::VERSION as usize).contains(&version) {
             return Err(bad(format!("unsupported store version {version}")));
+        }
+        let scheme = match kv.get("scheme") {
+            None => Scheme::Bbit,
+            Some(name) => Scheme::parse(name)
+                .ok_or_else(|| bad(format!("manifest: unknown scheme '{name}'")))?,
+        };
+        if version == 1 && scheme != Scheme::Bbit {
+            return Err(bad(format!(
+                "version 1 store cannot carry scheme '{scheme}'"
+            )));
         }
         let store = Self {
             dir: dir.to_path_buf(),
+            scheme,
             k: get("k")?,
             b: get("b")? as u32,
             gzip: get("gzip")? != 0,
@@ -80,7 +95,17 @@ impl SigShardStore {
             packed_bytes: get("packed_bytes")?,
             stored_bytes: get("stored_bytes")?,
         };
-        if store.k == 0 || !(1..=16).contains(&store.b) {
+        if store.k == 0 {
+            return Err(bad(format!("manifest: invalid shape k={}", store.k)));
+        }
+        if scheme.is_dense() {
+            if store.b != 0 {
+                return Err(bad(format!(
+                    "manifest: dense scheme {scheme} with b={}",
+                    store.b
+                )));
+            }
+        } else if !(1..=16).contains(&store.b) {
             return Err(bad(format!(
                 "manifest: invalid shape k={} b={}",
                 store.k, store.b
@@ -91,6 +116,10 @@ impl SigShardStore {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+    /// The hashing scheme whose output this store holds.
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
     }
     pub fn k(&self) -> usize {
         self.k
@@ -108,7 +137,8 @@ impl SigShardStore {
     pub fn n_rows(&self) -> usize {
         self.n_rows
     }
-    /// Paper-tight packed bytes across the store (`n·b·k/8`).
+    /// Paper-tight packed bytes across the store (`n·b·k/8` packed,
+    /// `4·n·k` dense).
     pub fn packed_bytes(&self) -> usize {
         self.packed_bytes
     }
@@ -117,21 +147,38 @@ impl SigShardStore {
         self.stored_bytes
     }
 
-    /// The Theorem-2 expanded feature dimension (`k · 2^b`) a linear model
-    /// over this store's signatures needs.
+    /// The physical layout of this store's rows.
+    pub fn layout(&self) -> SketchLayout {
+        if self.scheme.is_dense() {
+            SketchLayout::DenseF32 { k: self.k }
+        } else {
+            SketchLayout::PackedBbit { k: self.k, b: self.b }
+        }
+    }
+
+    /// The feature dimension a linear model over this store trains in —
+    /// delegates to [`SketchLayout::train_dim`], the one copy of the rule
+    /// (Theorem-2 expansion `k·2^b` for bbit stores, `k` for dense).
+    pub fn train_dim(&self) -> usize {
+        self.layout().train_dim()
+    }
+
+    /// Back-compat alias of [`Self::train_dim`] (the historical name from
+    /// the bbit-only store).
     pub fn expanded_dim(&self) -> usize {
-        self.k << self.b
+        self.train_dim()
     }
 
     /// Decode shard `i` eagerly (no prefetch thread) — the random-access
     /// path for tests and tools; training goes through [`Self::stream`].
-    pub fn read_shard(&self, i: usize) -> io::Result<BbitSignatureMatrix> {
+    pub fn read_shard(&self, i: usize) -> io::Result<SketchMatrix> {
         assert!(i < self.n_shards, "shard {i} out of {}", self.n_shards);
         let (hdr, m) = format::read_shard_file(&shard_path(&self.dir, i))?;
-        if hdr.k != self.k || hdr.b != self.b {
+        if hdr.scheme != self.scheme || hdr.k != self.k || hdr.b != self.b {
             return Err(bad(format!(
-                "shard {i} shape (k={}, b={}) disagrees with manifest (k={}, b={})",
-                hdr.k, hdr.b, self.k, self.b
+                "shard {i} shape ({}, k={}, b={}) disagrees with manifest \
+                 ({}, k={}, b={})",
+                hdr.scheme, hdr.k, hdr.b, self.scheme, self.k, self.b
             )));
         }
         Ok(m)
@@ -146,7 +193,7 @@ impl SigShardStore {
             assert!(i < self.n_shards, "shard {i} out of {}", self.n_shards);
         }
         let paths: Vec<PathBuf> = order.iter().map(|&i| shard_path(&self.dir, i)).collect();
-        ShardStream::spawn(paths, self.k, self.b, queue)
+        ShardStream::spawn(paths, self.scheme, self.k, self.b, queue)
     }
 
     /// Sequential shard order `0..n_shards` (row order of the corpus).
@@ -155,16 +202,16 @@ impl SigShardStore {
     }
 }
 
-/// One decoded shard handed out by [`ShardStream`]. Derefs to the packed
+/// One decoded shard handed out by [`ShardStream`]. Derefs to the sketch
 /// matrix; counts its rows out of the stream's residency gauge on drop.
 pub struct StreamedShard {
-    m: BbitSignatureMatrix,
+    m: SketchMatrix,
     live_rows: Arc<AtomicUsize>,
 }
 
 impl std::ops::Deref for StreamedShard {
-    type Target = BbitSignatureMatrix;
-    fn deref(&self) -> &BbitSignatureMatrix {
+    type Target = SketchMatrix;
+    fn deref(&self) -> &SketchMatrix {
         &self.m
     }
 }
@@ -186,7 +233,7 @@ pub struct ShardStream {
 }
 
 impl ShardStream {
-    fn spawn(paths: Vec<PathBuf>, k: usize, b: u32, queue: usize) -> Self {
+    fn spawn(paths: Vec<PathBuf>, scheme: Scheme, k: usize, b: u32, queue: usize) -> Self {
         // Residency budget: `queue` shards total = (queue − 2) in the
         // channel + 1 decoded-in-hand (blocked on send) + 1 consumer-held.
         let (tx, rx) = sync_channel::<io::Result<StreamedShard>>(queue.max(3) - 2);
@@ -196,11 +243,12 @@ impl ShardStream {
         let reader = std::thread::spawn(move || {
             for path in paths {
                 let item = format::read_shard_file(&path).and_then(|(hdr, m)| {
-                    if hdr.k != k || hdr.b != b {
+                    if hdr.scheme != scheme || hdr.k != k || hdr.b != b {
                         return Err(bad(format!(
-                            "{}: shape (k={}, b={}) disagrees with manifest \
-                             (k={k}, b={b})",
+                            "{}: shape ({}, k={}, b={}) disagrees with manifest \
+                             ({scheme}, k={k}, b={b})",
                             path.display(),
+                            hdr.scheme,
                             hdr.k,
                             hdr.b
                         )));
@@ -259,13 +307,17 @@ impl Drop for ShardStream {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hashing::bbit::BbitSignatureMatrix;
+    use crate::hashing::feature_map::SketchLayout;
+    use crate::hashing::sketch::F32Matrix;
     use crate::rng::Xoshiro256;
     use crate::store::writer::ShardWriter;
 
     fn build_store(dir: &Path, k: usize, b: u32, shard_rows: &[usize], gzip: bool) {
         let mask = (1u32 << b) - 1;
         let mut rng = Xoshiro256::seed_from_u64(99);
-        let mut w = ShardWriter::create(dir, k, b, gzip).unwrap();
+        let layout = SketchLayout::PackedBbit { k, b };
+        let mut w = ShardWriter::create(dir, Scheme::Bbit, layout, gzip).unwrap();
         for (seq, &rows) in shard_rows.iter().enumerate() {
             let mut m = BbitSignatureMatrix::new(k, b);
             for _ in 0..rows {
@@ -273,7 +325,22 @@ mod tests {
                     (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
                 m.push_row(&row, if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 });
             }
-            w.write_shard(seq, &m).unwrap();
+            w.write_shard(seq, &SketchMatrix::Bbit(m)).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    fn build_dense_store(dir: &Path, scheme: Scheme, k: usize, shard_rows: &[usize]) {
+        let mut rng = Xoshiro256::seed_from_u64(44);
+        let layout = SketchLayout::DenseF32 { k };
+        let mut w = ShardWriter::create(dir, scheme, layout, false).unwrap();
+        for (seq, &rows) in shard_rows.iter().enumerate() {
+            let mut m = F32Matrix::new(k);
+            for _ in 0..rows {
+                let row: Vec<f32> = (0..k).map(|_| rng.gen_f32() - 0.5).collect();
+                m.push_row(&row, if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 });
+            }
+            w.write_shard(seq, &SketchMatrix::Dense(m)).unwrap();
         }
         w.finish().unwrap();
     }
@@ -291,12 +358,51 @@ mod tests {
         build_store(&dir, 16, 4, &[10, 10, 3], true);
         let store = SigShardStore::open(&dir).unwrap();
         assert_eq!((store.k(), store.b()), (16, 4));
+        assert_eq!(store.scheme(), Scheme::Bbit);
         assert!(store.gzip());
         assert_eq!(store.n_shards(), 3);
         assert_eq!(store.n_rows(), 23);
+        assert_eq!(store.train_dim(), 16 << 4);
         assert_eq!(store.expanded_dim(), 16 << 4);
         let m = store.read_shard(2).unwrap();
         assert_eq!(m.n(), 3);
+        assert!(m.as_bbit().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_dense_store_reads_scheme() {
+        let dir = tmp("dense_open");
+        build_dense_store(&dir, Scheme::Vw, 12, &[5, 2]);
+        let store = SigShardStore::open(&dir).unwrap();
+        assert_eq!(store.scheme(), Scheme::Vw);
+        assert_eq!((store.k(), store.b()), (12, 0));
+        assert_eq!(store.train_dim(), 12);
+        assert_eq!(store.n_rows(), 7);
+        let m = store.read_shard(0).unwrap();
+        assert_eq!(m.n(), 5);
+        assert!(m.as_dense().is_some());
+        // Streaming a dense store works identically.
+        let total: usize = store
+            .stream(&store.seq_order(), 2)
+            .map(|r| r.unwrap().n())
+            .sum();
+        assert_eq!(total, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_rejects_unknown_scheme_name() {
+        let dir = tmp("badscheme");
+        build_dense_store(&dir, Scheme::Vw, 4, &[2]);
+        let manifest = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&manifest)
+            .unwrap()
+            .replace("scheme = vw", "scheme = quantum");
+        std::fs::write(&manifest, text).unwrap();
+        let err = SigShardStore::open(&dir).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("unknown scheme"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

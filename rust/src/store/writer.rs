@@ -1,5 +1,5 @@
-//! [`ShardWriter`]: spills packed signature shards to disk as they arrive
-//! from the hashing pipeline.
+//! [`ShardWriter`]: spills sketch shards to disk as they arrive from the
+//! hashing pipeline — any scheme, one writer.
 //!
 //! Shards may arrive **out of order** (the pipeline's workers race through
 //! chunks), which is why each shard goes to its own file named by sequence
@@ -7,11 +7,16 @@
 //! more than the one shard it is currently writing. [`ShardWriter::finish`]
 //! verifies the sequence numbers form a dense `0..n_shards` range (a lost
 //! shard is an error, not a silent gap) and writes the store manifest.
+//!
+//! Bbit stores are written with version-1 framing (shard files AND
+//! manifest), byte-identical to every pre-v2 store; dense schemes get the
+//! version-2 framing with the `scheme` field.
 
 use std::io;
 use std::path::{Path, PathBuf};
 
-use crate::hashing::bbit::BbitSignatureMatrix;
+use crate::hashing::feature_map::{Scheme, SketchLayout};
+use crate::hashing::sketch::SketchMatrix;
 
 use super::format;
 
@@ -29,7 +34,8 @@ pub struct StoreSummary {
     pub dir: PathBuf,
     pub n_shards: usize,
     pub n_rows: usize,
-    /// Sum of the paper-tight `n·b·k/8` packed bytes across shards.
+    /// Sum of the paper-tight packed bytes across shards (`n·b·k/8` for
+    /// bbit, `4·n·k` for dense schemes).
     pub packed_bytes: usize,
     /// Bytes actually on disk (headers + payloads, after optional gzip).
     pub stored_bytes: usize,
@@ -39,6 +45,7 @@ pub struct StoreSummary {
 /// manifest that [`super::SigShardStore::open`] reads back.
 pub struct ShardWriter {
     dir: PathBuf,
+    scheme: Scheme,
     k: usize,
     b: u32,
     gzip: bool,
@@ -49,10 +56,33 @@ pub struct ShardWriter {
 }
 
 impl ShardWriter {
-    /// Create a store at `dir` (created if missing). Refuses to overwrite
-    /// an existing store: delete the directory first to rebuild it.
-    pub fn create(dir: &Path, k: usize, b: u32, gzip: bool) -> io::Result<Self> {
-        assert!(k >= 1 && (1..=16).contains(&b), "invalid shape k={k} b={b}");
+    /// Create a store at `dir` (created if missing) for shards of the
+    /// given scheme and layout. Refuses to overwrite an existing store:
+    /// delete the directory first to rebuild it.
+    pub fn create(
+        dir: &Path,
+        scheme: Scheme,
+        layout: SketchLayout,
+        gzip: bool,
+    ) -> io::Result<Self> {
+        let (k, b) = match layout {
+            SketchLayout::PackedBbit { k, b } => {
+                assert!(
+                    !scheme.is_dense(),
+                    "scheme {scheme} stores dense rows, got a packed layout"
+                );
+                assert!(k >= 1 && (1..=16).contains(&b), "invalid shape k={k} b={b}");
+                (k, b)
+            }
+            SketchLayout::DenseF32 { k } | SketchLayout::SparseF32 { k } => {
+                assert!(
+                    scheme.is_dense(),
+                    "scheme {scheme} stores packed rows, got a dense layout"
+                );
+                assert!(k >= 1, "invalid shape k={k}");
+                (k, 0)
+            }
+        };
         std::fs::create_dir_all(dir)?;
         let manifest = dir.join(MANIFEST_NAME);
         if manifest.exists() {
@@ -67,6 +97,7 @@ impl ShardWriter {
         }
         Ok(Self {
             dir: dir.to_path_buf(),
+            scheme,
             k,
             b,
             gzip,
@@ -78,10 +109,24 @@ impl ShardWriter {
 
     /// Spill one shard. `seq` is the pipeline chunk sequence number; shard
     /// `seq` owns rows `[seq·chunk, seq·chunk + shard.n())` of the corpus.
-    pub fn write_shard(&mut self, seq: usize, shard: &BbitSignatureMatrix) -> io::Result<()> {
-        assert_eq!(shard.k(), self.k, "shard k {} != store k {}", shard.k(), self.k);
-        assert_eq!(shard.b(), self.b, "shard b {} != store b {}", shard.b(), self.b);
-        let bytes = format::write_shard_file(&shard_path(&self.dir, seq), shard, self.gzip)?;
+    pub fn write_shard(&mut self, seq: usize, shard: &SketchMatrix) -> io::Result<()> {
+        match shard {
+            SketchMatrix::Bbit(m) => {
+                assert!(!self.scheme.is_dense(), "store scheme {} is dense", self.scheme);
+                assert_eq!(m.k(), self.k, "shard k {} != store k {}", m.k(), self.k);
+                assert_eq!(m.b(), self.b, "shard b {} != store b {}", m.b(), self.b);
+            }
+            SketchMatrix::Dense(m) => {
+                assert!(self.scheme.is_dense(), "store scheme {} is packed", self.scheme);
+                assert_eq!(m.k(), self.k, "shard k {} != store k {}", m.k(), self.k);
+            }
+        }
+        let bytes = format::write_shard_file(
+            &shard_path(&self.dir, seq),
+            shard,
+            self.scheme,
+            self.gzip,
+        )?;
         self.shards.push((seq, shard.n()));
         self.packed_bytes += shard.packed_bytes();
         self.stored_bytes += bytes;
@@ -105,11 +150,24 @@ impl ShardWriter {
             }
         }
         let n_rows = self.rows_written();
-        let stride = (self.k * self.b as usize).div_ceil(64);
+        let version = format::wire_version(self.scheme);
+        // Bbit manifests stay byte-identical to version-1 stores: the
+        // scheme line only appears for dense schemes, and readers default
+        // a missing scheme to bbit.
+        let scheme_line = if self.scheme == Scheme::Bbit {
+            String::new()
+        } else {
+            format!("scheme = {}\n", self.scheme.name())
+        };
+        let stride = if self.scheme.is_dense() {
+            0
+        } else {
+            (self.k * self.b as usize).div_ceil(64)
+        };
         let manifest = format!(
             "# bbml signature shard store\n\
              version = {}\n\
-             k = {}\n\
+             {}k = {}\n\
              b = {}\n\
              stride_words = {}\n\
              gzip = {}\n\
@@ -117,7 +175,8 @@ impl ShardWriter {
              n_rows = {}\n\
              packed_bytes = {}\n\
              stored_bytes = {}\n",
-            format::VERSION,
+            version,
+            scheme_line,
             self.k,
             self.b,
             stride,
@@ -141,9 +200,11 @@ impl ShardWriter {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hashing::bbit::BbitSignatureMatrix;
+    use crate::hashing::sketch::F32Matrix;
     use crate::rng::Xoshiro256;
 
-    fn sample(k: usize, b: u32, n: usize, seed: u64) -> BbitSignatureMatrix {
+    fn sample(k: usize, b: u32, n: usize, seed: u64) -> SketchMatrix {
         let mask = (1u32 << b) - 1;
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let mut m = BbitSignatureMatrix::new(k, b);
@@ -151,7 +212,17 @@ mod tests {
             let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
             m.push_row(&row, 1.0);
         }
-        m
+        SketchMatrix::Bbit(m)
+    }
+
+    fn sample_dense(k: usize, n: usize, seed: u64) -> SketchMatrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut m = F32Matrix::new(k);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..k).map(|_| rng.gen_f32() - 0.5).collect();
+            m.push_row(&row, -1.0);
+        }
+        SketchMatrix::Dense(m)
     }
 
     fn tmp(name: &str) -> PathBuf {
@@ -161,10 +232,14 @@ mod tests {
         d
     }
 
+    fn packed_layout(k: usize, b: u32) -> SketchLayout {
+        SketchLayout::PackedBbit { k, b }
+    }
+
     #[test]
     fn out_of_order_shards_finish_cleanly() {
         let dir = tmp("ooo");
-        let mut w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        let mut w = ShardWriter::create(&dir, Scheme::Bbit, packed_layout(8, 4), false).unwrap();
         // Arrival order 2, 0, 1 — placement is by seq, not arrival.
         w.write_shard(2, &sample(8, 4, 3, 1)).unwrap();
         w.write_shard(0, &sample(8, 4, 5, 2)).unwrap();
@@ -178,13 +253,38 @@ mod tests {
         for seq in 0..3 {
             assert!(shard_path(&dir, seq).exists());
         }
+        // Bbit manifests carry no scheme line (byte-stable v1 framing).
+        let text = std::fs::read_to_string(dir.join(MANIFEST_NAME)).unwrap();
+        assert!(text.contains("version = 1"), "{text}");
+        assert!(!text.contains("scheme"), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dense_store_writes_scheme_manifest() {
+        let dir = tmp("dense");
+        let mut w = ShardWriter::create(
+            &dir,
+            Scheme::Vw,
+            SketchLayout::SparseF32 { k: 16 },
+            false,
+        )
+        .unwrap();
+        w.write_shard(0, &sample_dense(16, 4, 1)).unwrap();
+        let s = w.finish().unwrap();
+        assert_eq!(s.n_rows, 4);
+        assert_eq!(s.packed_bytes, 4 * 16 * 4);
+        let text = std::fs::read_to_string(dir.join(MANIFEST_NAME)).unwrap();
+        assert!(text.contains("version = 2"), "{text}");
+        assert!(text.contains("scheme = vw"), "{text}");
+        assert!(text.contains("b = 0"), "{text}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn missing_shard_is_an_error() {
         let dir = tmp("gap");
-        let mut w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        let mut w = ShardWriter::create(&dir, Scheme::Bbit, packed_layout(8, 4), false).unwrap();
         w.write_shard(0, &sample(8, 4, 2, 1)).unwrap();
         w.write_shard(2, &sample(8, 4, 2, 2)).unwrap(); // seq 1 never arrives
         let err = w.finish().unwrap_err();
@@ -195,9 +295,9 @@ mod tests {
     #[test]
     fn refuses_to_overwrite_existing_store() {
         let dir = tmp("clobber");
-        let w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        let w = ShardWriter::create(&dir, Scheme::Bbit, packed_layout(8, 4), false).unwrap();
         w.finish().unwrap();
-        let err = ShardWriter::create(&dir, 8, 4, false).unwrap_err();
+        let err = ShardWriter::create(&dir, Scheme::Bbit, packed_layout(8, 4), false).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::AlreadyExists);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -206,7 +306,15 @@ mod tests {
     #[should_panic(expected = "shard k")]
     fn mismatched_shape_panics() {
         let dir = tmp("shape");
-        let mut w = ShardWriter::create(&dir, 8, 4, false).unwrap();
+        let mut w = ShardWriter::create(&dir, Scheme::Bbit, packed_layout(8, 4), false).unwrap();
         let _ = w.write_shard(0, &sample(9, 4, 2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "is packed")]
+    fn mismatched_variant_panics() {
+        let dir = tmp("variant");
+        let mut w = ShardWriter::create(&dir, Scheme::Bbit, packed_layout(8, 4), false).unwrap();
+        let _ = w.write_shard(0, &sample_dense(8, 2, 1));
     }
 }

@@ -1,0 +1,346 @@
+//! Multi-scheme integration: the `FeatureMap` redesign's acceptance
+//! criteria.
+//!
+//! * scheme=bbit through the unified pipeline/store/trainer is
+//!   bit-identical to the legacy b-bit path (rows, store bytes framing,
+//!   trained weights);
+//! * `bbit_vw` ≡ VW applied to the Theorem-2 expansion (paper §7), as a
+//!   property over random shapes;
+//! * store round-trips are bit-identical per scheme (gzip on/off), the
+//!   version-1 header path still opens, and unknown scheme bytes are
+//!   rejected as `InvalidData`;
+//! * dense schemes run end-to-end: pipeline → store → out-of-core
+//!   training, bit-identical to in-memory when shuffling is off, plus the
+//!   CLI `train --scheme …` smoke.
+
+use std::path::PathBuf;
+
+use bbml::coordinator::pipeline::{
+    hash_dataset, sketch_dataset, sketch_dataset_to_store, PipelineOptions,
+};
+use bbml::coordinator::stream_train::{
+    train_epochs_sketch, train_stream, StreamAlgo, StreamTrainOptions,
+};
+use bbml::coordinator::trainer::{evaluate_sketch, train_sketch, Backend};
+use bbml::data::sparse::{SparseBinaryDataset, SparseBinaryVec};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::bbit::pack_lowest_bits;
+use bbml::hashing::expand_signature;
+use bbml::hashing::feature_map::{BbitVwMap, FeatureMap, FeatureMapSpec, Scheme};
+use bbml::hashing::sketch::SketchRow;
+use bbml::proptest_mini::{check, gen};
+use bbml::store::SigShardStore;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bbml_ischemes_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn corpus_cfg(n: usize) -> SynthConfig {
+    SynthConfig {
+        n_docs: n,
+        dim: 1 << 20,
+        vocab: 5_000,
+        topic_size: 100,
+        mean_len: 50,
+        topic_mix: 0.5,
+        ..Default::default()
+    }
+}
+
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn bbit_scheme_is_bit_identical_to_legacy_path() {
+    // Acceptance: with scheme=bbit the unified pipeline emits the exact
+    // words/labels of the historical hash_dataset, and training over the
+    // unified entry point yields bit-identical weights.
+    let ds = generate_corpus(&corpus_cfg(300));
+    let opt = PipelineOptions {
+        threads: 4,
+        chunk: 17,
+        queue: 2,
+    };
+    let (legacy, _) = hash_dataset(&ds, 24, 8, 7, &opt);
+    let map = FeatureMapSpec::new(Scheme::Bbit, ds.dim(), 24, 8, 7).build();
+    let (unified, stats) = sketch_dataset(&ds, map.as_ref(), &opt);
+    let packed = unified.as_bbit().expect("bbit scheme emits packed rows");
+    assert_eq!(packed.words(), legacy.words(), "rows must be bit-identical");
+    assert_eq!(packed.labels(), legacy.labels());
+    assert_eq!(stats.output_bytes, legacy.packed_bytes());
+
+    let old = bbml::coordinator::trainer::train_signatures(
+        &legacy,
+        Backend::SvmDcd,
+        1.0,
+        3,
+        None,
+        None,
+    )
+    .unwrap();
+    let new = train_sketch(&unified, Backend::SvmDcd, 1.0, 3, None, None).unwrap();
+    assert_eq!(
+        f32_bits(&old.model.w),
+        f32_bits(&new.model.w),
+        "trainer weights must be bit-identical"
+    );
+}
+
+#[test]
+fn bbit_store_keeps_version1_framing() {
+    // Acceptance: spilling scheme=bbit writes version-1 shard files with
+    // reserved-zero scheme/dtype bytes and a manifest without a scheme
+    // line — byte-compatible with every pre-v2 store.
+    let ds = generate_corpus(&corpus_cfg(120));
+    let opt = PipelineOptions {
+        threads: 2,
+        chunk: 50,
+        queue: 2,
+    };
+    let dir = tmp_dir("v1frame");
+    let map = FeatureMapSpec::new(Scheme::Bbit, ds.dim(), 16, 4, 5).build();
+    sketch_dataset_to_store(&ds, map.as_ref(), Scheme::Bbit, &opt, &dir, false).unwrap();
+    let shard0 = std::fs::read(dir.join("shard-00000.bbs")).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(shard0[8..12].try_into().unwrap()),
+        1,
+        "bbit shards stay version 1"
+    );
+    assert_eq!(shard0[52], 0, "scheme byte reserved-zero");
+    assert_eq!(shard0[53], 0, "dtype byte reserved-zero");
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    assert!(manifest.contains("version = 1"), "{manifest}");
+    assert!(!manifest.contains("scheme"), "{manifest}");
+    let store = SigShardStore::open(&dir).unwrap();
+    assert_eq!(store.scheme(), Scheme::Bbit);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn dense_store_roundtrip_bit_identical_per_scheme() {
+    // Satellite: write→read must be bit-identical for every dense scheme,
+    // gzip on and off, ragged final shards included.
+    let ds = generate_corpus(&corpus_cfg(130));
+    for (scheme, gzip) in [
+        (Scheme::Vw, false),
+        (Scheme::Vw, true),
+        (Scheme::ProjSparse, false),
+        (Scheme::BbitVw, true),
+    ] {
+        let opt = PipelineOptions {
+            threads: 4,
+            chunk: 23, // 130 = 5·23 + 15: ragged tail
+            queue: 2,
+        };
+        let map = FeatureMapSpec::new(scheme, ds.dim(), 16, 4, 11).build();
+        let (mem, _) = sketch_dataset(&ds, map.as_ref(), &opt);
+        let dir = tmp_dir(&format!("densert_{}_{gzip}", scheme.name()));
+        let (summary, _) =
+            sketch_dataset_to_store(&ds, map.as_ref(), scheme, &opt, &dir, gzip).unwrap();
+        assert_eq!(summary.n_rows, 130);
+        let store = SigShardStore::open(&dir).unwrap();
+        assert_eq!(store.scheme(), scheme);
+        assert_eq!(store.gzip(), gzip);
+        let mut back_vals = Vec::new();
+        let mut back_labels = Vec::new();
+        for s in 0..store.n_shards() {
+            let shard = store.read_shard(s).unwrap();
+            let d = shard.as_dense().expect("dense store yields dense shards");
+            back_vals.extend_from_slice(d.values());
+            back_labels.extend_from_slice(d.labels());
+        }
+        let mem_d = mem.as_dense().unwrap();
+        assert_eq!(
+            f32_bits(&back_vals),
+            f32_bits(mem_d.values()),
+            "{scheme} gzip={gzip}: values must be bit-identical"
+        );
+        assert_eq!(f32_bits(&back_labels), f32_bits(mem_d.labels()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn unknown_scheme_byte_is_rejected() {
+    // Satellite: a v2 shard whose scheme byte is from a future writer
+    // must fail as InvalidData — at the shard level and the store level.
+    let ds = generate_corpus(&corpus_cfg(40));
+    let opt = PipelineOptions {
+        threads: 1,
+        chunk: 40,
+        queue: 2,
+    };
+    let dir = tmp_dir("unknown");
+    let map = FeatureMapSpec::new(Scheme::Vw, ds.dim(), 8, 0, 3).build();
+    sketch_dataset_to_store(&ds, map.as_ref(), Scheme::Vw, &opt, &dir, false).unwrap();
+    let victim = dir.join("shard-00000.bbs");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes[52] = 200; // no such scheme
+    std::fs::write(&victim, &bytes).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+    let err = store.read_shard(0).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("unknown scheme"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_bbit_vw_equals_vw_of_expansion() {
+    // Satellite property test (paper §7): for random shapes and random
+    // documents, the fused bbit_vw encoder equals VW applied to
+    // expand_signature of the truncated signature, value for value
+    // (s = 1 signs sum to exact small integers in both f32 and f64).
+    check("bbit_vw == vw ∘ expand", 25, |rng| {
+        let dim = 1u64 << 20;
+        let sig_k = 1 + (rng.next_u64() % 64) as usize;
+        let b = 1 + (rng.next_u64() % 8) as u32;
+        let buckets = 1 + (rng.next_u64() % 128) as usize;
+        let seed = rng.next_u64();
+        let map = BbitVwMap::new(dim, sig_k, b, buckets, seed);
+        let set = gen::sparse_set(rng, dim, 1, 100);
+        let mut scratch = SketchRow::new(&map.layout());
+        map.encode_into(&set, scratch.row_mut());
+
+        let full = map.minwise().signature(&set);
+        let expanded = expand_signature(&pack_lowest_bits(&full, b), b);
+        let want: Vec<f32> = map
+            .vw()
+            .hash_binary(&expanded)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        assert_eq!(
+            f32_bits(scratch.dense()),
+            f32_bits(&want),
+            "sig_k={sig_k} b={b} buckets={buckets}"
+        );
+    });
+}
+
+#[test]
+fn dense_streaming_training_is_bit_identical_to_in_memory() {
+    // The out-of-core contract now holds per scheme: with shuffling off,
+    // training from a dense shard stream produces the exact same model as
+    // training over the resident sketch — weights AND objective bits.
+    let ds = generate_corpus(&corpus_cfg(260));
+    let opt = PipelineOptions {
+        threads: 4,
+        chunk: 31, // ragged: 260 = 8·31 + 12
+        queue: 2,
+    };
+    let map = FeatureMapSpec::new(Scheme::Vw, ds.dim(), 64, 0, 9).build();
+    let (mem, _) = sketch_dataset(&ds, map.as_ref(), &opt);
+    let dir = tmp_dir("dense_equiv");
+    sketch_dataset_to_store(&ds, map.as_ref(), Scheme::Vw, &opt, &dir, false).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+    assert_eq!(store.train_dim(), 64);
+
+    for algo in [StreamAlgo::Pegasos, StreamAlgo::LogRegSgd] {
+        let topt = StreamTrainOptions {
+            algo,
+            c: 1.0,
+            epochs: 3,
+            seed: 21,
+            shuffle: false,
+            prefetch: 3,
+            average: true,
+        };
+        let streamed = train_stream(&store, &topt).unwrap();
+        let resident = train_epochs_sketch(&mem, &topt);
+        assert_eq!(
+            f32_bits(&streamed.model.w),
+            f32_bits(&resident.w),
+            "{algo:?}: dense streamed weights must be bit-identical"
+        );
+        assert_eq!(
+            streamed.model.objective.to_bits(),
+            resident.objective.to_bits(),
+            "{algo:?}: objective must be bit-identical"
+        );
+        assert!(
+            streamed.peak_resident_rows < store.n_rows(),
+            "the full dense matrix must never be resident"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_scheme_trains_end_to_end_at_matched_storage() {
+    // The headline experiment in miniature: all five registry schemes,
+    // equal storage, through pipeline + trainer; accuracies recorded and
+    // sane. (The full curve is benches/bench_schemes.rs.)
+    let ds = generate_corpus(&corpus_cfg(360));
+    let (train, test) = ds.train_test_split(0.25, 5);
+    let opt = PipelineOptions::default();
+    let (k, b) = (128usize, 8u32); // 1024 bits/example, dense k = 32
+    for scheme in Scheme::ALL {
+        let spec = match scheme {
+            Scheme::Bbit | Scheme::BbitVw => FeatureMapSpec::new(scheme, ds.dim(), k, b, 11),
+            _ => FeatureMapSpec::new(scheme, ds.dim(), (k * b as usize) / 32, 0, 11),
+        };
+        let map = spec.build();
+        assert_eq!(
+            map.layout().storage_bits_per_example(),
+            k * b as usize,
+            "{scheme}: matched storage"
+        );
+        let (sk_tr, _) = sketch_dataset(&train, map.as_ref(), &opt);
+        let (sk_te, _) = sketch_dataset(&test, map.as_ref(), &opt);
+        let out = train_sketch(&sk_tr, Backend::SvmDcd, 1.0, 3, None, None).unwrap();
+        let (acc, _) = evaluate_sketch(&out.model, &sk_te);
+        assert!(acc > 0.65, "{scheme}: test acc {acc} at 1024 bits");
+    }
+}
+
+#[test]
+fn prop_store_roundtrip_random_dense_shapes() {
+    // Random (scheme, k, chunk, threads, gzip, n): the dense store path
+    // must never bend a bit.
+    let case = std::sync::atomic::AtomicUsize::new(0);
+    check("dense store roundtrip", 6, |rng| {
+        let schemes = [Scheme::Vw, Scheme::ProjSparse, Scheme::BbitVw];
+        let scheme = schemes[(rng.next_u64() % 3) as usize];
+        let k = 1 + rng.gen_range(24) as usize;
+        let chunk = 1 + rng.gen_range(40) as usize;
+        let threads = 1 + rng.gen_range(4) as usize;
+        let gzip = rng.gen_range(2) == 1;
+        let n = 1 + rng.gen_range(80) as usize;
+        let dim = 1u64 << 16;
+        let mut ds = SparseBinaryDataset::new(dim);
+        for i in 0..n {
+            let set = gen::sparse_set(rng, dim, 1, 30);
+            ds.push(
+                SparseBinaryVec::from_indices(set),
+                if i % 2 == 0 { 1.0 } else { -1.0 },
+            );
+        }
+        let opt = PipelineOptions {
+            threads,
+            chunk,
+            queue: 2,
+        };
+        let map = FeatureMapSpec::new(scheme, dim, k, 4, 13).build();
+        let (mem, _) = sketch_dataset(&ds, map.as_ref(), &opt);
+        let id = case.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = tmp_dir(&format!("prop_dense_{id}"));
+        let (summary, _) =
+            sketch_dataset_to_store(&ds, map.as_ref(), scheme, &opt, &dir, gzip).unwrap();
+        assert_eq!(summary.n_shards, n.div_ceil(chunk));
+        let store = SigShardStore::open(&dir).unwrap();
+        let mut vals = Vec::new();
+        for s in 0..store.n_shards() {
+            let shard = store.read_shard(s).unwrap();
+            vals.extend_from_slice(shard.as_dense().unwrap().values());
+        }
+        assert_eq!(
+            f32_bits(&vals),
+            f32_bits(mem.as_dense().unwrap().values()),
+            "{scheme} k={k} chunk={chunk} n={n}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}

@@ -39,7 +39,8 @@ fn corpus_cfg(n: usize) -> SynthConfig {
 fn read_all(store: &SigShardStore) -> BbitSignatureMatrix {
     let mut all = BbitSignatureMatrix::new(store.k(), store.b());
     for s in 0..store.n_shards() {
-        all.append(&store.read_shard(s).unwrap());
+        let shard = store.read_shard(s).unwrap();
+        all.append(shard.as_bbit().expect("bbit store yields packed shards"));
     }
     all
 }
