@@ -6,6 +6,8 @@
 //! bbml hash-store   [key=val ...]       corpus -> on-disk signature shards
 //! bbml train        [key=val ...]       hash + train + report accuracy
 //! bbml train-stream [key=val ...]       out-of-core train from a shard store
+//! bbml predict      [key=val ...]       score raw LIBSVM rows with a model
+//! bbml store-merge  SRC... --store DST  concatenate compatible shard stores
 //! bbml experiment <id|all> [key=val]    regenerate a paper figure/table
 //! bbml config       [key=val ...]       print the effective configuration
 //! bbml info                             runtime + artifact inventory
@@ -17,23 +19,28 @@
 //! meaningful. `hash-store` + `train-stream` is the paper's out-of-core
 //! path: the corpus is hashed once into a [`crate::store`] shard store and
 //! models train from the stream without the signature matrix ever being
-//! resident.
+//! resident. The model lifecycle runs end to end: `train --save-model`
+//! writes a self-describing [`crate::store::ModelArtifact`],
+//! `train-stream --checkpoint/--resume` survives interruption with
+//! bit-identical results, and `predict` scores raw LIBSVM rows through the
+//! encoder the artifact recorded.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::pipeline::{
     sketch_corpus, sketch_corpus_to_store, sketch_dataset, PipelineOptions,
 };
 use crate::coordinator::report;
-use crate::coordinator::stream_train::{
-    evaluate_stream, train_stream, StreamAlgo, StreamTrainOptions,
+use crate::coordinator::session::{CheckpointConfig, TrainSession, CKPT_LATEST};
+use crate::coordinator::stream_train::{evaluate_stream, StreamTrainOptions};
+use crate::coordinator::trainer::{
+    evaluate_pjrt, evaluate_sketch, predict_artifact, train_sketch, Backend,
 };
-use crate::coordinator::trainer::{evaluate_pjrt, evaluate_sketch, train_sketch, Backend};
 use crate::data::synth::CorpusSampler;
 use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
 use crate::runtime::Runtime;
-use crate::store::SigShardStore;
+use crate::store::{merge_stores, ModelArtifact, SigShardStore};
 
 const USAGE: &str = "\
 bbml — b-bit minwise hashing for large-scale learning (NIPS 2011 reproduction)
@@ -48,14 +55,23 @@ COMMANDS:
                   --scheme S, --store DIR, --gzip, --chunk N, --k K, --b B)
     train         hash + train + evaluate (flags: --scheme S, --backend
                   svm|logreg|pegasos|pjrt_logreg|pjrt_svm, --k K, --b B,
-                  --c C)
+                  --c C; --save-model PATH writes a self-describing
+                  model artifact for `predict`)
     train-stream  out-of-core training over a shard store of any scheme
                   (flags: --store DIR, --backend pegasos|logreg, --c C,
-                  --epochs N, --prefetch N, --no-shuffle, --scheme S to
-                  assert the store's scheme); writes
+                  --epochs N, --prefetch N, --no-shuffle, --no-row-shuffle,
+                  --scheme S to assert the store's scheme; checkpointing:
+                  --checkpoint DIR [--ckpt-every N], --resume PATH resumes
+                  bit-identically from a checkpoint file or dir); writes
                   <out_dir>/stream_report.json
+    predict       score raw LIBSVM rows end to end through a saved model
+                  (--model PATH, --data FILE.libsvm[.gz]; --scheme S
+                  asserts the recorded scheme); writes
+                  <out_dir>/predict_report.json + predict_scores.txt
+    store-merge   concatenate compatible shard stores: bbml store-merge
+                  SRC1 SRC2 ... --store DST (validates scheme/k/b)
     experiment    regenerate a figure/table: fig1..fig10, tab51, gvw,
-                  lemma1, lemma2, or 'all'
+                  lemma1, lemma2, bbitvw, or 'all'
     config        print the effective configuration
     info          PJRT platform + artifact inventory
     help          this message
@@ -89,13 +105,30 @@ struct Args {
     scheme: Option<Scheme>,
     /// `bbit_vw` output width (`--buckets`); 0 = matched storage.
     buckets: usize,
-    /// Shard-store flags (hash-store / train-stream).
+    /// Shard-store flags (hash-store / train-stream / store-merge).
     store: Option<String>,
     gzip: bool,
     chunk: Option<usize>,
     epochs: usize,
-    prefetch: usize,
+    /// Reader residency budget in shards (None = the default 4). Tracked
+    /// as an Option so `--resume` can tell an explicit flag apart from
+    /// the default and override the checkpointed value only when asked.
+    prefetch: Option<usize>,
     no_shuffle: bool,
+    /// Disable the within-shard row permutation (train-stream).
+    no_row_shuffle: bool,
+    /// Checkpoint directory (train-stream).
+    checkpoint: Option<String>,
+    /// Mid-epoch checkpoint cadence in shards (0 = epoch boundaries only).
+    ckpt_every: usize,
+    /// Checkpoint file (or dir containing latest.ckpt) to resume from.
+    resume: Option<String>,
+    /// Model artifact to load (`predict --model`).
+    model: Option<String>,
+    /// Model artifact to write (`train --save-model`).
+    save_model: Option<String>,
+    /// LIBSVM input for `predict`.
+    data: Option<String>,
 }
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
@@ -110,8 +143,15 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut gzip = false;
     let mut chunk: Option<usize> = None;
     let mut epochs = 5usize;
-    let mut prefetch = 4usize;
+    let mut prefetch: Option<usize> = None;
     let mut no_shuffle = false;
+    let mut no_row_shuffle = false;
+    let mut checkpoint: Option<String> = None;
+    let mut ckpt_every = 0usize;
+    let mut resume: Option<String> = None;
+    let mut model: Option<String> = None;
+    let mut save_model: Option<String> = None;
+    let mut data: Option<String> = None;
 
     let mut it = argv.iter().peekable();
     while let Some(arg) = it.next() {
@@ -185,12 +225,55 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
                     .ok_or_else(|| anyhow::anyhow!("--epochs needs a usize"))?;
             }
             "--prefetch" => {
-                prefetch = it
-                    .next()
-                    .and_then(|v| v.parse().ok())
-                    .ok_or_else(|| anyhow::anyhow!("--prefetch needs a usize"))?;
+                prefetch = Some(
+                    it.next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("--prefetch needs a usize"))?,
+                );
             }
             "--no-shuffle" => no_shuffle = true,
+            "--no-row-shuffle" => no_row_shuffle = true,
+            "--checkpoint" => {
+                checkpoint = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--checkpoint needs a directory"))?
+                        .to_string(),
+                );
+            }
+            "--ckpt-every" => {
+                ckpt_every = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--ckpt-every needs a usize"))?;
+            }
+            "--resume" => {
+                resume = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--resume needs a checkpoint path"))?
+                        .to_string(),
+                );
+            }
+            "--model" => {
+                model = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--model needs a path"))?
+                        .to_string(),
+                );
+            }
+            "--save-model" => {
+                save_model = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--save-model needs a path"))?
+                        .to_string(),
+                );
+            }
+            "--data" => {
+                data = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--data needs a LIBSVM path"))?
+                        .to_string(),
+                );
+            }
             other if other.contains('=') && !command.is_empty() => {
                 config.apply_overrides(&[other.to_string()])?;
             }
@@ -217,6 +300,13 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
         epochs,
         prefetch,
         no_shuffle,
+        no_row_shuffle,
+        checkpoint,
+        ckpt_every,
+        resume,
+        model,
+        save_model,
+        data,
     })
 }
 
@@ -351,24 +441,13 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "train-stream" => {
-            let algo = match args.backend {
-                Backend::Pegasos => StreamAlgo::Pegasos,
-                // The default backend (svm) maps to Pegasos: same hinge-loss
-                // SVM objective, but the streaming path optimizes it by SGD
-                // epochs rather than dual coordinate descent — say so out
-                // loud rather than silently swapping solvers.
-                Backend::SvmDcd => {
-                    println!(
-                        "note: out-of-core SVM trains via Pegasos SGD epochs \
-                         (dual coordinate descent needs resident data)"
-                    );
-                    StreamAlgo::Pegasos
-                }
-                Backend::LogRegDcd => StreamAlgo::LogRegSgd,
-                other => anyhow::bail!(
-                    "train-stream supports --backend pegasos|logreg, got {other:?}"
-                ),
-            };
+            if args.save_model.is_some() {
+                anyhow::bail!(
+                    "train-stream cannot save a model artifact: the shard store \
+                     records the scheme but not the encoder's seed/domain, so the \
+                     artifact would not be self-describing — use `train --save-model`"
+                );
+            }
             let dir = args.store_dir();
             let store = SigShardStore::open(Path::new(&dir))?;
             if let Some(want) = args.scheme {
@@ -380,16 +459,73 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                     );
                 }
             }
-            let opt = StreamTrainOptions {
-                algo,
-                c: args.c,
-                epochs: args.epochs,
-                seed: cfg.seed,
-                shuffle: !args.no_shuffle,
-                prefetch: args.prefetch,
-                average: true,
+            let ckpt_cfg = args.checkpoint.as_ref().map(|d| CheckpointConfig {
+                dir: PathBuf::from(d),
+                every_shards: args.ckpt_every,
+            });
+            let resumed = args.resume.is_some();
+            let sess = match &args.resume {
+                Some(p) => {
+                    // Accept a checkpoint file or a checkpoint dir (then
+                    // the freshest copy inside it).
+                    let mut path = PathBuf::from(p);
+                    if path.is_dir() {
+                        path = path.join(CKPT_LATEST);
+                    }
+                    let mut sess = TrainSession::resume(&path, &store)?;
+                    if let Some(p) = args.prefetch {
+                        // Value-neutral memory knob; see set_prefetch docs.
+                        sess.set_prefetch(p);
+                    }
+                    println!(
+                        "resumed from {} (epoch {}/{}, shard {}, {} rows seen); \
+                         checkpointed training options apply (only --prefetch, \
+                         a pure memory knob, can override)",
+                        path.display(),
+                        sess.epoch(),
+                        sess.options().epochs,
+                        sess.shard_pos(),
+                        sess.rows_seen()
+                    );
+                    sess
+                }
+                None => {
+                    // The one shared name table (Backend::parse) +
+                    // stream_algo mapping. The default backend (svm) maps
+                    // to Pegasos: same hinge-loss SVM objective, but the
+                    // streaming path optimizes it by SGD epochs rather
+                    // than dual coordinate descent — say so out loud
+                    // rather than silently swapping solvers.
+                    if args.backend == Backend::SvmDcd {
+                        println!(
+                            "note: out-of-core SVM trains via Pegasos SGD epochs \
+                             (dual coordinate descent needs resident data)"
+                        );
+                    }
+                    let algo = args.backend.stream_algo().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "train-stream supports --backend pegasos|logreg, got {:?}",
+                            args.backend
+                        )
+                    })?;
+                    TrainSession::new(
+                        &store,
+                        StreamTrainOptions {
+                            algo,
+                            c: args.c,
+                            epochs: args.epochs,
+                            seed: cfg.seed,
+                            shuffle: !args.no_shuffle,
+                            row_shuffle: !args.no_row_shuffle,
+                            prefetch: args.prefetch.unwrap_or(4),
+                            average: true,
+                        },
+                    )?
+                }
             };
-            let out = train_stream(&store, &opt)?;
+            // The run consumes the session; capture what the report needs.
+            let opt = sess.options().clone();
+            let out = sess.run(&store, ckpt_cfg.as_ref())?;
             let (acc, rows) = evaluate_stream(&out.model, &store, opt.prefetch)?;
             println!(
                 "streamed {} epochs over {} {} shards ({} rows/epoch, peak {} rows \
@@ -408,7 +544,7 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
             report::write_json_object(
                 &report_path,
                 &[
-                    ("backend", report::json_string(algo.name())),
+                    ("backend", report::json_string(opt.algo.name())),
                     ("scheme", report::json_string(store.scheme().name())),
                     ("store", report::json_string(&dir)),
                     ("epochs", out.epochs.to_string()),
@@ -416,14 +552,113 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                     ("rows", rows.to_string()),
                     ("rows_seen", out.rows_seen.to_string()),
                     ("peak_resident_rows", out.peak_resident_rows.to_string()),
-                    ("c", format!("{}", args.c)),
-                    ("shuffle", (!args.no_shuffle).to_string()),
+                    ("c", format!("{}", opt.c)),
+                    ("shuffle", opt.shuffle.to_string()),
+                    ("row_shuffle", (opt.shuffle && opt.row_shuffle).to_string()),
+                    ("resumed", resumed.to_string()),
+                    (
+                        "weights_crc32",
+                        report::weights_crc32(&out.model.w).to_string(),
+                    ),
                     ("acc", format!("{acc:.6}")),
                     ("objective", format!("{:.6}", out.model.objective)),
                     ("train_secs", format!("{:.6}", out.train_time.as_secs_f64())),
                 ],
             )?;
             println!("report: {}", report_path.display());
+            Ok(())
+        }
+        "predict" => {
+            let model_path = args.model.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("predict needs --model PATH (from `train --save-model`)")
+            })?;
+            let art = ModelArtifact::load(Path::new(model_path))?;
+            if let Some(want) = args.scheme {
+                art.assert_scheme(want)?;
+            }
+            // Raw rows: a LIBSVM file, or the configured synthetic corpus
+            // as a self-check when no data is given.
+            let ds = match &args.data {
+                Some(path) => crate::data::libsvm::read_libsvm(
+                    Path::new(path),
+                    Some(art.spec.dim),
+                )
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+                None => crate::data::synth::generate_corpus(&cfg.synth_config()),
+            };
+            let opt = PipelineOptions {
+                threads: cfg.threads,
+                ..Default::default()
+            };
+            let out = predict_artifact(&art, &ds, &opt)?;
+            println!(
+                "scored {} rows through {} (scheme={}, k={}, b={}, dim 2^{:.0}): \
+                 acc {:.4} in {:.2?}",
+                out.rows,
+                model_path,
+                art.scheme(),
+                art.spec.k,
+                art.spec.b,
+                (art.spec.dim as f64).log2(),
+                out.accuracy,
+                out.predict_time
+            );
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            let scores_path = Path::new(&cfg.out_dir).join("predict_scores.txt");
+            let mut text = String::with_capacity(out.scores.len() * 16);
+            for s in &out.scores {
+                text.push_str(&format!(
+                    "{} {s:.6}\n",
+                    if *s >= 0.0 { "+1" } else { "-1" }
+                ));
+            }
+            std::fs::write(&scores_path, text)?;
+            let report_path = Path::new(&cfg.out_dir).join("predict_report.json");
+            report::write_json_object(
+                &report_path,
+                &[
+                    ("model", report::json_string(model_path)),
+                    ("scheme", report::json_string(art.scheme().name())),
+                    ("k", art.spec.k.to_string()),
+                    ("b", art.spec.b.to_string()),
+                    ("train_dim", art.train_dim().to_string()),
+                    ("rows", out.rows.to_string()),
+                    ("acc", format!("{:.6}", out.accuracy)),
+                    (
+                        "weights_crc32",
+                        report::weights_crc32(&art.model.w).to_string(),
+                    ),
+                    (
+                        "predict_secs",
+                        format!("{:.6}", out.predict_time.as_secs_f64()),
+                    ),
+                ],
+            )?;
+            println!(
+                "scores: {} report: {}",
+                scores_path.display(),
+                report_path.display()
+            );
+            Ok(())
+        }
+        "store-merge" => {
+            let dst = args.store.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("store-merge needs --store DST (the merged store's directory)")
+            })?;
+            if args.positional.is_empty() {
+                anyhow::bail!("store-merge needs at least one source store directory");
+            }
+            let sources: Vec<PathBuf> = args.positional.iter().map(PathBuf::from).collect();
+            let source_refs: Vec<&Path> = sources.iter().map(PathBuf::as_path).collect();
+            let summary = merge_stores(&source_refs, Path::new(dst))?;
+            println!(
+                "merged {} stores -> {} ({} shards, {} rows, {:.2} MB on disk)",
+                sources.len(),
+                summary.dir.display(),
+                summary.n_shards,
+                summary.n_rows,
+                summary.stored_bytes as f64 / 1e6
+            );
             Ok(())
         }
         "train" => {
@@ -482,6 +717,18 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                     let (acc_pjrt, t) = evaluate_pjrt(&out.model, sig_te, rt)?;
                     println!("PJRT scorer cross-check: acc {acc_pjrt:.4} ({t:.2?})");
                 }
+            }
+            if let Some(model_path) = &args.save_model {
+                // --save-model: bundle the weights with the exact encoder
+                // spec that produced the training features.
+                let art = ModelArtifact::new(args.map_spec(), out.model.clone())?;
+                let bytes = art.save(Path::new(model_path))?;
+                println!(
+                    "saved model artifact: {model_path} ({bytes} bytes, scheme={}, \
+                     dim {}; score new data with `bbml predict --model {model_path}`)",
+                    art.scheme(),
+                    art.train_dim()
+                );
             }
             Ok(())
         }
@@ -602,13 +849,13 @@ mod tests {
         assert!(a.gzip);
         assert_eq!(a.chunk, Some(512));
         assert_eq!(a.epochs, 3);
-        assert_eq!(a.prefetch, 2);
+        assert_eq!(a.prefetch, Some(2));
         assert!(a.no_shuffle);
         // Defaults: store dir falls back under out_dir.
         let d = parse_args(&strs(&["train-stream"])).unwrap();
         assert_eq!(d.store_dir(), "results/sigstore");
         assert!(!d.gzip && !d.no_shuffle);
-        assert_eq!((d.epochs, d.prefetch), (5, 4));
+        assert_eq!((d.epochs, d.prefetch), (5, None));
     }
 
     #[test]
@@ -627,6 +874,69 @@ mod tests {
             "train-stream",
             "--store",
             "/definitely/not/a/store",
+        ]));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn parse_lifecycle_flags() {
+        let a = parse_args(&strs(&[
+            "train-stream",
+            "--checkpoint",
+            "/tmp/ck",
+            "--ckpt-every",
+            "3",
+            "--resume",
+            "/tmp/ck/latest.ckpt",
+            "--no-row-shuffle",
+        ]))
+        .unwrap();
+        assert_eq!(a.checkpoint.as_deref(), Some("/tmp/ck"));
+        assert_eq!(a.ckpt_every, 3);
+        assert_eq!(a.resume.as_deref(), Some("/tmp/ck/latest.ckpt"));
+        assert!(a.no_row_shuffle);
+        let b = parse_args(&strs(&[
+            "train",
+            "--save-model",
+            "/tmp/m.bbm",
+        ]))
+        .unwrap();
+        assert_eq!(b.save_model.as_deref(), Some("/tmp/m.bbm"));
+        let c = parse_args(&strs(&[
+            "predict",
+            "--model",
+            "/tmp/m.bbm",
+            "--data",
+            "/tmp/x.libsvm",
+        ]))
+        .unwrap();
+        assert_eq!(c.model.as_deref(), Some("/tmp/m.bbm"));
+        assert_eq!(c.data.as_deref(), Some("/tmp/x.libsvm"));
+        // store-merge sources are positional.
+        let d = parse_args(&strs(&["store-merge", "/a", "/b", "--store", "/dst"])).unwrap();
+        assert_eq!(d.positional, vec!["/a".to_string(), "/b".to_string()]);
+        assert_eq!(d.store_dir(), "/dst");
+    }
+
+    #[test]
+    fn predict_and_store_merge_require_flags() {
+        // predict without --model is a usage error.
+        assert!(run_with(&strs(&["predict"])).is_err());
+        // predict with a missing model file fails at load.
+        assert!(run_with(&strs(&["predict", "--model", "/no/such.bbm"])).is_err());
+        // store-merge without --store or without sources is a usage error.
+        assert!(run_with(&strs(&["store-merge", "/a"])).is_err());
+        assert!(run_with(&strs(&["store-merge", "--store", "/dst"])).is_err());
+    }
+
+    #[test]
+    fn resume_with_missing_checkpoint_errors() {
+        let err = run_with(&strs(&[
+            "train-stream",
+            "--store",
+            "/definitely/not/a/store",
+            "--resume",
+            "/definitely/not/a.ckpt",
         ]));
         assert!(err.is_err());
     }

@@ -13,10 +13,16 @@
 //! * [`trainer`] — training orchestration over a signature store: pure-rust
 //!   solvers (LIBLINEAR-style) or the AOT-compiled PJRT step (JAX/Pallas),
 //!   plus timed evaluation.
-//! * [`stream_train`] — the out-of-core training loop: multi-epoch SGD
+//! * [`session`] — the model-lifecycle state machine: [`TrainSession`]
+//!   owns the complete out-of-core training state (SGD core, epoch/shard
+//!   counters, shuffle RNG), checkpoints it (CKPT format) and resumes
+//!   bit-identically; plus [`SessionPlan`] shard-range partitioning and
+//!   the [`merge_weighted`] parameter-averaging merge.
+//! * [`stream_train`] — the out-of-core training wrappers: multi-epoch SGD
 //!   (Pegasos / logreg) over an on-disk [`crate::store`] shard stream with
-//!   per-epoch seeded shard shuffling; bit-identical to the in-memory path
-//!   when shuffling is off (the "200 GB" regime of arXiv:1108.3072).
+//!   per-epoch seeded shard (and optional within-shard row) shuffling;
+//!   bit-identical to the in-memory path when shuffling is off (the
+//!   "200 GB" regime of arXiv:1108.3072). Thin wrappers over [`session`].
 //! * [`sweep`] — the (b, k, C, repetition) grid driver behind Figures 1–9,
 //!   parallelized across worker threads.
 //! * [`report`] — CSV + console-table emission for `results/`.
@@ -24,11 +30,13 @@
 pub mod config;
 pub mod pipeline;
 pub mod report;
+pub mod session;
 pub mod stream_train;
 pub mod sweep;
 pub mod trainer;
 
 pub use config::RunConfig;
+pub use session::{merge_weighted, CheckpointConfig, SessionPlan, TrainSession};
 pub use pipeline::{
     hash_corpus, hash_corpus_to_store, hash_dataset, hash_dataset_to_store, sketch_corpus,
     sketch_corpus_to_store, sketch_dataset, sketch_dataset_to_store, PipelineOptions,
@@ -38,7 +46,10 @@ pub use stream_train::{
     evaluate_stream, train_epochs_in_memory, train_epochs_sketch, train_stream, StreamAlgo,
     StreamTrainOptions, StreamTrainReport,
 };
-pub use sweep::{run_scheme_sweep, SchemeRecord, SchemeSweepSpec};
+pub use sweep::{
+    run_bbit_vw_curve, run_scheme_sweep, BbitVwCurveSpec, SchemeRecord, SchemeSweepSpec,
+};
 pub use trainer::{
-    evaluate_sketch, train_signatures, train_sketch, Backend, TrainOutcome,
+    evaluate_sketch, predict_artifact, train_signatures, train_sketch, Backend, PredictOutcome,
+    TrainOutcome,
 };

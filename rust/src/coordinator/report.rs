@@ -125,6 +125,18 @@ pub fn write_json_object(path: &Path, entries: &[(&str, String)]) -> std::io::Re
     Ok(())
 }
 
+/// CRC-32 over the IEEE-754 bit patterns of a weight vector (LE byte
+/// order) — the cheap fingerprint the run reports carry so bit-identity
+/// (e.g. interrupted-and-resumed vs uninterrupted training) is assertable
+/// from JSON alone.
+pub fn weights_crc32(w: &[f32]) -> u32 {
+    let mut bytes = Vec::with_capacity(w.len() * 4);
+    for &x in w {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    crate::store::format::crc32(&bytes)
+}
+
 /// Render a JSON string literal (escapes quotes, backslashes and — per
 /// RFC 8259 — every control character below U+0020).
 pub fn json_string(s: &str) -> String {
@@ -236,6 +248,19 @@ mod tests {
         assert!(text.contains("\"backend\": \"pegasos\","));
         assert!(text.contains("\"acc\": 0.9525\n"), "{text}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn weights_crc_is_bit_sensitive() {
+        let w = vec![1.0f32, -2.5, 0.0];
+        let a = weights_crc32(&w);
+        assert_eq!(a, weights_crc32(&w), "deterministic");
+        let mut w2 = w.clone();
+        w2[1] = f32::from_bits(w2[1].to_bits() ^ 1); // one ULP
+        assert_ne!(a, weights_crc32(&w2), "one flipped bit must change the crc");
+        // +0.0 and -0.0 compare equal but are different bit patterns —
+        // the fingerprint is over bits, not values.
+        assert_ne!(weights_crc32(&[0.0]), weights_crc32(&[-0.0]));
     }
 
     #[test]

@@ -1,0 +1,975 @@
+//! [`TrainSession`]: the resumable model-lifecycle state machine over the
+//! shard store — the redesigned core that `train_stream` /
+//! `train_epochs_*` are now thin wrappers over.
+//!
+//! The 200 GB regime the store exists for (arXiv:1108.3072) trains for
+//! hours; a trainer whose entire state dies with the process cannot
+//! survive a crash mid-epoch, split an epoch across workers, or prove
+//! anything about what a restart recomputes. `TrainSession` fixes that by
+//! making the *complete* training state a first-class, serializable value:
+//!
+//! * the [`SgdCore`] (weights, lazy scale, step counter, averaging
+//!   accumulator),
+//! * the epoch counter, the current epoch's shard visit `order` and the
+//!   position within it,
+//! * the shuffle RNG state (so future epochs draw the same permutations),
+//! * the rows-seen / peak-residency gauges of the run report.
+//!
+//! [`TrainSession::run`] drives the store stream exactly like the old
+//! `train_stream` loop — same RNG draws, same visit order, same float ops,
+//! hence bit-identical output — and emits versioned **CKPT** checkpoints
+//! (framing documented in [`crate::store`]) at every epoch boundary and,
+//! optionally, every `every_shards` shards mid-epoch.
+//! [`TrainSession::resume`] rebuilds the session from any checkpoint and
+//! continues the *identical* float-op sequence: an interrupted-and-resumed
+//! run produces bit-identical weights AND objective to an uninterrupted
+//! one. This is provable precisely because the shuffle permutations and
+//! the lazy-scaling state are part of the checkpoint, and it is asserted
+//! over algo × shuffle × averaging in `tests/integration_session.rs`.
+//!
+//! Mid-epoch **row shuffling** (the ROADMAP item) also lives here: with
+//! `row_shuffle` on, rows within each decoded shard are visited in a
+//! seeded permutation whose seed derives from `(epoch, shard seq)` — not
+//! from the streamed RNG — so it is checkpoint-stable by construction and
+//! a single-shard store stays the fixed point that keeps the in-memory
+//! driver aligned.
+//!
+//! For multi-worker epochs, [`SessionPlan::partition`] assigns contiguous
+//! shard ranges; each worker trains its range as an independent session
+//! ([`TrainSession::new_range`]) and [`merge_weighted`] averages the
+//! resulting models by row count — the classic parameter-averaging merge.
+//!
+//! [`SgdCore`]: crate::solvers::sgd::SgdCore
+
+use std::io;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::coordinator::stream_train::{StreamAlgo, StreamTrainOptions, StreamTrainReport};
+use crate::hashing::feature_map::Scheme;
+use crate::rng::Xoshiro256;
+use crate::solvers::sgd::SgdCore;
+use crate::solvers::{Features, LinearModel, SketchView};
+use crate::store::format::{self, ByteReader};
+use crate::store::SigShardStore;
+
+/// File magic of a training checkpoint.
+pub const CKPT_MAGIC: [u8; 8] = *b"BBCKPT\0\0";
+/// Current checkpoint format version.
+pub const CKPT_VERSION: u32 = 1;
+/// Name of the always-freshest checkpoint copy inside a checkpoint dir.
+pub const CKPT_LATEST: &str = "latest.ckpt";
+
+/// Salt xor'd into the seed of the per-epoch shard-order RNG (the
+/// historical `train_stream` constant — changing it would change every
+/// seeded run).
+const ORDER_SEED_SALT: u64 = 0x0DD_BA11;
+/// Salt for the within-shard row permutation stream, kept apart from the
+/// shard-order stream so the two shuffles are independent.
+const ROW_SHUFFLE_SALT: u64 = 0x5EED_0F_20_11_0001;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("checkpoint: {msg}"))
+}
+
+/// Per-epoch shard visit order: `0..n_shards`, permuted through the shared
+/// seeded RNG when shuffling. A single-shard store (and the in-memory
+/// driver, which models the matrix as one shard) is a fixed point of every
+/// permutation — and consumes no RNG draws — so the two paths stay aligned
+/// for any `shuffle`.
+pub(crate) fn epoch_order(n_shards: usize, shuffle: bool, rng: &mut Xoshiro256) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n_shards).collect();
+    if shuffle {
+        rng.shuffle(&mut order);
+    }
+    order
+}
+
+/// Within-shard row visit order for `(epoch, shard seq)`: a permutation
+/// drawn from a *derived* seed, independent of the epoch-order RNG stream
+/// — which is exactly what makes it checkpoint-stable (resuming mid-epoch
+/// re-derives the identical permutation for every remaining shard). A
+/// 1-row shard is a fixed point, like the single-shard store above.
+pub(crate) fn row_order(n: usize, seed: u64, epoch: usize, seq: usize) -> Vec<usize> {
+    let mix = (seed ^ ROW_SHUFFLE_SALT)
+        .wrapping_add((epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((seq as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    let mut rng = Xoshiro256::seed_from_u64(mix);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+/// One shard's worth of SGD steps — the single copy of the visit-order
+/// rule shared by the disk and in-memory drivers (bit-identity between
+/// them depends on exactly this being shared).
+fn step_shard<Ft: Features>(
+    core: &mut SgdCore,
+    view: &Ft,
+    n: usize,
+    opt: &StreamTrainOptions,
+    epoch: usize,
+    seq: usize,
+) {
+    if opt.shuffle && opt.row_shuffle {
+        for i in row_order(n, opt.seed, epoch, seq) {
+            core.step(view, i);
+        }
+    } else {
+        for i in 0..n {
+            core.step(view, i);
+        }
+    }
+}
+
+/// Per-row loss term of the streamed objective (hinge or stable log-loss).
+fn row_loss<Ft: Features>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
+    let m = feats.label(i) as f64 * feats.dot(i, w);
+    match algo {
+        StreamAlgo::Pegasos => (1.0 - m).max(0.0),
+        StreamAlgo::LogRegSgd => {
+            if m > 0.0 {
+                (-m).exp().ln_1p()
+            } else {
+                -m + m.exp().ln_1p()
+            }
+        }
+    }
+}
+
+fn reg_term(lambda: f64, w: &[f32]) -> f64 {
+    0.5 * lambda * w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+}
+
+/// `λ/2·‖w‖² + loss_sum/n` — the objective assembled from one extra pass.
+fn objective(reg: f64, loss_sum: f64, n: usize) -> f64 {
+    reg + loss_sum / n as f64
+}
+
+/// The shared in-memory epoch driver: the same session core as the disk
+/// path, over any [`Features`] view modeled as a single resident shard
+/// (seq 0 — the fixed point of both shuffles).
+pub(crate) fn train_epochs_core<Ft: Features>(
+    view: &Ft,
+    dim: usize,
+    opt: &StreamTrainOptions,
+) -> LinearModel {
+    let n = view.n();
+    assert!(n > 0, "empty training set");
+    let lambda = 1.0 / (opt.c * n as f64);
+    let total_steps = opt.epochs * n;
+    let mut core = SgdCore::new(opt.algo.loss(), dim, lambda, total_steps, opt.average);
+    let mut order_rng = Xoshiro256::seed_from_u64(opt.seed ^ ORDER_SEED_SALT);
+    for epoch in 0..opt.epochs {
+        // One shard: the permutation is the identity, but consume the RNG
+        // exactly like the disk driver would.
+        let order = epoch_order(1, opt.shuffle, &mut order_rng);
+        debug_assert_eq!(order, [0]);
+        step_shard(&mut core, view, n, opt, epoch, 0);
+    }
+    let w = core.into_weights();
+    let mut loss_sum = 0.0f64;
+    for i in 0..n {
+        loss_sum += row_loss(opt.algo, view, i, &w);
+    }
+    let obj = objective(reg_term(lambda, &w), loss_sum, n);
+    LinearModel {
+        w,
+        iters: total_steps,
+        objective: obj,
+    }
+}
+
+/// The store-shape slice of a session's identity — validated against the
+/// store on [`TrainSession::resume`] so a checkpoint can never be replayed
+/// against data it was not training on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct SessionIdent {
+    scheme: Scheme,
+    k: usize,
+    b: u32,
+    /// First store shard of this session's range (0 for whole-store runs).
+    shard_base: usize,
+    /// Shards in this session's range.
+    n_shards: usize,
+    /// Rows in this session's range.
+    n_rows: usize,
+    /// Feature dimension the model trains in.
+    train_dim: usize,
+}
+
+/// Where and how often [`TrainSession::run`] writes checkpoints.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Directory the `ckpt-eEEEE-sSSSSS.ckpt` files (and the
+    /// [`CKPT_LATEST`] copy) go.
+    pub dir: PathBuf,
+    /// Additionally checkpoint every N shards *within* an epoch
+    /// (0 = epoch boundaries only).
+    pub every_shards: usize,
+}
+
+impl CheckpointConfig {
+    /// Epoch-boundary checkpoints into `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            every_shards: 0,
+        }
+    }
+
+    /// Also checkpoint every `n` shards mid-epoch.
+    pub fn every(mut self, n: usize) -> Self {
+        self.every_shards = n;
+        self
+    }
+}
+
+/// A resumable out-of-core training run (see module docs).
+pub struct TrainSession {
+    ident: SessionIdent,
+    opt: StreamTrainOptions,
+    core: SgdCore,
+    order_rng: Xoshiro256,
+    /// Current epoch (== `opt.epochs` when training is done).
+    epoch: usize,
+    /// This epoch's shard visit order (session-local indices; empty once
+    /// done).
+    order: Vec<usize>,
+    /// Shards of `order` already fully processed.
+    shard_pos: usize,
+    rows_seen: usize,
+    peak_resident_rows: usize,
+}
+
+impl TrainSession {
+    /// A fresh session over the whole store.
+    pub fn new(store: &SigShardStore, opt: StreamTrainOptions) -> io::Result<Self> {
+        Self::new_range(store, opt, 0..store.n_shards())
+    }
+
+    /// A fresh session over a contiguous shard range (one
+    /// [`SessionPlan::partition`] assignment). The range is trained as if
+    /// it were the whole store: λ and the step budget are sized by the
+    /// range's rows, which is what the [`merge_weighted`] averaging step
+    /// assumes.
+    pub fn new_range(
+        store: &SigShardStore,
+        opt: StreamTrainOptions,
+        shards: Range<usize>,
+    ) -> io::Result<Self> {
+        assert!(
+            shards.end <= store.n_shards() && shards.start <= shards.end,
+            "shard range {shards:?} out of 0..{}",
+            store.n_shards()
+        );
+        let whole = shards == (0..store.n_shards());
+        let n_rows = if whole {
+            store.n_rows()
+        } else {
+            let mut rows = 0usize;
+            for i in shards.clone() {
+                rows += store.shard_rows(i)?;
+            }
+            rows
+        };
+        if n_rows == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("store at {} is empty", store.dir().display()),
+            ));
+        }
+        let ident = SessionIdent {
+            scheme: store.scheme(),
+            k: store.k(),
+            b: store.b(),
+            shard_base: shards.start,
+            n_shards: shards.len(),
+            n_rows,
+            train_dim: store.train_dim(),
+        };
+        let lambda = 1.0 / (opt.c * n_rows as f64);
+        let total_steps = opt.epochs * n_rows;
+        let core = SgdCore::new(opt.algo.loss(), ident.train_dim, lambda, total_steps, opt.average);
+        let mut order_rng = Xoshiro256::seed_from_u64(opt.seed ^ ORDER_SEED_SALT);
+        let order = if opt.epochs > 0 {
+            epoch_order(ident.n_shards, opt.shuffle, &mut order_rng)
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            ident,
+            opt,
+            core,
+            order_rng,
+            epoch: 0,
+            order,
+            shard_pos: 0,
+            rows_seen: 0,
+            peak_resident_rows: 0,
+        })
+    }
+
+    /// The training options this session was created with (a resumed
+    /// session carries them in the checkpoint — CLI flags do not apply).
+    pub fn options(&self) -> &StreamTrainOptions {
+        &self.opt
+    }
+
+    /// Override the reader residency budget (shards prefetched at once).
+    /// Prefetch is a pure memory knob — it never changes the visit order
+    /// or any float op — so adjusting it on resume (e.g. a smaller
+    /// machine) is value-neutral by construction and explicitly allowed,
+    /// unlike the training options the checkpoint freezes.
+    pub fn set_prefetch(&mut self, prefetch: usize) {
+        self.opt.prefetch = prefetch;
+    }
+
+    /// Current epoch (== `epochs` once training is complete).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Shards of the current epoch already processed.
+    pub fn shard_pos(&self) -> usize {
+        self.shard_pos
+    }
+
+    /// Rows visited so far (across resumes).
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    /// Whether every training epoch has been processed (the objective
+    /// pass of [`Self::run`] still remains).
+    pub fn is_finished(&self) -> bool {
+        self.epoch >= self.opt.epochs
+    }
+
+    /// Finish the current epoch's bookkeeping and draw the next epoch's
+    /// shard order (consuming the RNG exactly like an uninterrupted run).
+    fn advance_epoch(&mut self) {
+        self.epoch += 1;
+        self.shard_pos = 0;
+        self.order = if self.epoch < self.opt.epochs {
+            epoch_order(self.ident.n_shards, self.opt.shuffle, &mut self.order_rng)
+        } else {
+            Vec::new()
+        };
+    }
+
+    /// Drive the session to completion: stream the remaining shards of
+    /// every remaining epoch (checkpointing per `ckpt`), then run the
+    /// objective pass and assemble the report. Bit-identical to the
+    /// pre-session `train_stream` for a fresh session, and to the
+    /// uninterrupted run for a resumed one.
+    pub fn run(
+        mut self,
+        store: &SigShardStore,
+        ckpt: Option<&CheckpointConfig>,
+    ) -> io::Result<StreamTrainReport> {
+        let t0 = Instant::now();
+        self.validate_store(store)?;
+        while self.epoch < self.opt.epochs {
+            let remaining: Vec<usize> = self.order[self.shard_pos..]
+                .iter()
+                .map(|&s| self.ident.shard_base + s)
+                .collect();
+            let mut stream = store.stream(&remaining, self.opt.prefetch);
+            // while-let (not `for … in &mut stream`) so the iterator borrow
+            // releases between shards and the residency gauge can be read
+            // mid-stream for checkpoints.
+            #[allow(clippy::while_let_on_iterator)]
+            while let Some(item) = stream.next() {
+                let shard = item?;
+                let seq = self.ident.shard_base + self.order[self.shard_pos];
+                let view = SketchView::new(&shard);
+                step_shard(
+                    &mut self.core,
+                    &view,
+                    shard.n(),
+                    &self.opt,
+                    self.epoch,
+                    seq,
+                );
+                self.rows_seen += shard.n();
+                drop(view);
+                drop(shard);
+                self.shard_pos += 1;
+                // Mid-epoch cadence (epoch boundaries checkpoint below).
+                // Fold the gauge in first so the checkpoint carries the
+                // current stream's high-water mark, not the last epoch's.
+                if let Some(c) = ckpt {
+                    let mid_epoch = self.shard_pos < self.order.len();
+                    if mid_epoch && c.every_shards > 0 && self.shard_pos % c.every_shards == 0 {
+                        self.peak_resident_rows =
+                            self.peak_resident_rows.max(stream.peak_resident_rows());
+                        self.checkpoint_into(c)?;
+                    }
+                }
+            }
+            self.peak_resident_rows = self.peak_resident_rows.max(stream.peak_resident_rows());
+            drop(stream);
+            self.advance_epoch();
+            if let Some(c) = ckpt {
+                self.checkpoint_into(c)?;
+            }
+        }
+        self.finish(store, t0)
+    }
+
+    /// The objective pass (sequential range order, matching the in-memory
+    /// driver's accumulation order exactly) + report assembly.
+    fn finish(self, store: &SigShardStore, t0: Instant) -> io::Result<StreamTrainReport> {
+        let TrainSession {
+            ident,
+            opt,
+            core,
+            rows_seen,
+            mut peak_resident_rows,
+            ..
+        } = self;
+        let lambda = 1.0 / (opt.c * ident.n_rows as f64);
+        let total_steps = opt.epochs * ident.n_rows;
+        let w = core.into_weights();
+        let seq_order: Vec<usize> =
+            (ident.shard_base..ident.shard_base + ident.n_shards).collect();
+        let mut loss_sum = 0.0f64;
+        let mut stream = store.stream(&seq_order, opt.prefetch);
+        for item in &mut stream {
+            let shard = item?;
+            let view = SketchView::new(&shard);
+            for i in 0..shard.n() {
+                loss_sum += row_loss(opt.algo, &view, i, &w);
+            }
+        }
+        peak_resident_rows = peak_resident_rows.max(stream.peak_resident_rows());
+        drop(stream);
+        let obj = objective(reg_term(lambda, &w), loss_sum, ident.n_rows);
+        Ok(StreamTrainReport {
+            model: LinearModel {
+                w,
+                iters: total_steps,
+                objective: obj,
+            },
+            rows_seen,
+            shards: ident.n_shards,
+            epochs: opt.epochs,
+            train_time: t0.elapsed(),
+            peak_resident_rows,
+        })
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    /// Serialize the complete session state (CKPT payload; framing in
+    /// [`crate::store`] docs). Field order, all little-endian:
+    ///
+    /// ```text
+    /// u8×8        scheme, algo, shuffle, row_shuffle, average, has_avg,
+    ///             pad, pad
+    /// u64,u32     k, b
+    /// u64×4       shard_base, n_shards, n_rows, train_dim
+    /// f64,u64×3   c, seed, epochs, prefetch
+    /// u64×4       epoch, shard_pos, rows_seen, peak_resident_rows
+    /// f64,f64     lambda, w_scale
+    /// u64×3       t, total_steps, avg_count
+    /// u64×4       order_rng state
+    /// u64,u64×L   order_len, order entries
+    /// u64,f32×N   n_weights, weights (bit patterns)
+    /// f64×N       averaging accumulator (iff has_avg)
+    /// ```
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            128 + self.order.len() * 8 + self.core.w.len() * 4
+                + self.core.avg.as_ref().map_or(0, |a| a.len() * 8),
+        );
+        out.push(self.ident.scheme.code());
+        out.push(self.opt.algo.code());
+        out.push(self.opt.shuffle as u8);
+        out.push(self.opt.row_shuffle as u8);
+        out.push(self.opt.average as u8);
+        out.push(self.core.avg.is_some() as u8);
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&(self.ident.k as u64).to_le_bytes());
+        out.extend_from_slice(&self.ident.b.to_le_bytes());
+        for v in [
+            self.ident.shard_base as u64,
+            self.ident.n_shards as u64,
+            self.ident.n_rows as u64,
+            self.ident.train_dim as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.opt.c.to_bits().to_le_bytes());
+        for v in [self.opt.seed, self.opt.epochs as u64, self.opt.prefetch as u64] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [
+            self.epoch as u64,
+            self.shard_pos as u64,
+            self.rows_seen as u64,
+            self.peak_resident_rows as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.core.lambda.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.core.w_scale.to_bits().to_le_bytes());
+        for v in [
+            self.core.t as u64,
+            self.core.total_steps as u64,
+            self.core.avg_count as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for s in self.order_rng.state() {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.order.len() as u64).to_le_bytes());
+        for &s in &self.order {
+            out.extend_from_slice(&(s as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.core.w.len() as u64).to_le_bytes());
+        for &w in &self.core.w {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        if let Some(avg) = &self.core.avg {
+            for &a in avg {
+                out.extend_from_slice(&a.to_bits().to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Write one checkpoint file (framed + CRC'd). Returns bytes written.
+    pub fn save(&self, path: &Path) -> io::Result<usize> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        format::write_framed_file(path, CKPT_MAGIC, CKPT_VERSION, &self.encode_payload())
+    }
+
+    /// Write `ckpt-eEEEE-sSSSSS.ckpt` into the config's dir and refresh
+    /// the [`CKPT_LATEST`] copy. Returns the named checkpoint's path.
+    fn checkpoint_into(&self, c: &CheckpointConfig) -> io::Result<PathBuf> {
+        std::fs::create_dir_all(&c.dir)?;
+        let path = c
+            .dir
+            .join(format!("ckpt-e{:04}-s{:05}.ckpt", self.epoch, self.shard_pos));
+        self.save(&path)?;
+        std::fs::copy(&path, c.dir.join(CKPT_LATEST))?;
+        Ok(path)
+    }
+
+    /// Rebuild a session from a checkpoint and validate it against the
+    /// store it will continue over. Every shape/consistency violation —
+    /// wrong scheme/k/b, a range the store does not cover, a row count
+    /// that disagrees, corrupt counters or a non-permutation order — is
+    /// `InvalidData`.
+    pub fn resume(path: &Path, store: &SigShardStore) -> io::Result<Self> {
+        let (_, payload) = format::read_framed_file(path, CKPT_MAGIC, CKPT_VERSION)?;
+        let mut r = ByteReader::new(&payload);
+        let scheme_byte = r.u8()?;
+        let scheme = Scheme::from_code(scheme_byte)
+            .ok_or_else(|| bad(format!("unknown scheme byte {scheme_byte}")))?;
+        let algo_byte = r.u8()?;
+        let algo = StreamAlgo::from_code(algo_byte)
+            .ok_or_else(|| bad(format!("unknown algorithm byte {algo_byte}")))?;
+        let shuffle = r.u8()? != 0;
+        let row_shuffle = r.u8()? != 0;
+        let average = r.u8()? != 0;
+        let has_avg = r.u8()? != 0;
+        r.u8()?;
+        r.u8()?;
+        if has_avg != average {
+            return Err(bad("averaging flag disagrees with accumulator presence".into()));
+        }
+        let k = r.usize()?;
+        let b = r.u32()?;
+        let shard_base = r.usize()?;
+        let n_shards = r.usize()?;
+        let n_rows = r.usize()?;
+        let train_dim = r.usize()?;
+        let c = r.f64()?;
+        let seed = r.u64()?;
+        let epochs = r.usize()?;
+        let prefetch = r.usize()?;
+        let epoch = r.usize()?;
+        let shard_pos = r.usize()?;
+        let rows_seen = r.usize()?;
+        let peak_resident_rows = r.usize()?;
+        let lambda = r.f64()?;
+        let w_scale = r.f64()?;
+        let t = r.usize()?;
+        let total_steps = r.usize()?;
+        let avg_count = r.usize()?;
+        let rng_state = r.u64_vec(4)?;
+        let order_len = r.usize()?;
+        if order_len > n_shards {
+            return Err(bad(format!("order of {order_len} entries for {n_shards} shards")));
+        }
+        let order: Vec<usize> = r.u64_vec(order_len)?.into_iter().map(|v| v as usize).collect();
+        let n_w = r.usize()?;
+        if n_w != train_dim {
+            return Err(bad(format!("{n_w} weights for training dimension {train_dim}")));
+        }
+        let w = r.f32_vec(n_w)?;
+        let avg = if has_avg { Some(r.f64_vec(n_w)?) } else { None };
+        r.finish()?;
+
+        // Structural consistency (corruption that survived the CRC cannot,
+        // but a hand-edited or mixed-up checkpoint can).
+        if epoch > epochs || (epoch < epochs && order.len() != n_shards) {
+            return Err(bad(format!(
+                "inconsistent progress: epoch {epoch}/{epochs} with {} order entries",
+                order.len()
+            )));
+        }
+        if shard_pos > order.len() {
+            return Err(bad(format!(
+                "shard position {shard_pos} beyond the {}-entry order",
+                order.len()
+            )));
+        }
+        let mut seen = vec![false; n_shards];
+        for &s in &order {
+            if s >= n_shards || std::mem::replace(&mut seen[s], true) {
+                return Err(bad(format!("order is not a permutation of 0..{n_shards}")));
+            }
+        }
+        if total_steps != epochs * n_rows || t > total_steps {
+            return Err(bad(format!(
+                "inconsistent step counters: t={t}, total={total_steps}, \
+                 epochs·rows={}",
+                epochs * n_rows
+            )));
+        }
+        let want_lambda = 1.0 / (c * n_rows as f64);
+        if lambda.to_bits() != want_lambda.to_bits() {
+            return Err(bad(format!("λ {lambda} disagrees with 1/(C·n) = {want_lambda}")));
+        }
+
+        let sess = TrainSession {
+            ident: SessionIdent {
+                scheme,
+                k,
+                b,
+                shard_base,
+                n_shards,
+                n_rows,
+                train_dim,
+            },
+            opt: StreamTrainOptions {
+                algo,
+                c,
+                epochs,
+                seed,
+                shuffle,
+                row_shuffle,
+                prefetch,
+                average,
+            },
+            core: SgdCore {
+                loss: algo.loss(),
+                lambda,
+                w,
+                w_scale,
+                t,
+                total_steps,
+                avg,
+                avg_count,
+            },
+            order_rng: Xoshiro256::from_state([
+                rng_state[0],
+                rng_state[1],
+                rng_state[2],
+                rng_state[3],
+            ]),
+            epoch,
+            order,
+            shard_pos,
+            rows_seen,
+            peak_resident_rows,
+        };
+        sess.validate_store(store)?;
+        Ok(sess)
+    }
+
+    /// Reject (as `InvalidData`) a store this session's state does not
+    /// describe.
+    fn validate_store(&self, store: &SigShardStore) -> io::Result<()> {
+        let id = &self.ident;
+        if store.scheme() != id.scheme || store.k() != id.k || store.b() != id.b {
+            return Err(bad(format!(
+                "session trained on ({}, k={}, b={}), store at {} holds \
+                 ({}, k={}, b={})",
+                id.scheme,
+                id.k,
+                id.b,
+                store.dir().display(),
+                store.scheme(),
+                store.k(),
+                store.b()
+            )));
+        }
+        if id.shard_base + id.n_shards > store.n_shards() {
+            return Err(bad(format!(
+                "session covers shards [{}, {}), store has {}",
+                id.shard_base,
+                id.shard_base + id.n_shards,
+                store.n_shards()
+            )));
+        }
+        let store_rows = if id.shard_base == 0 && id.n_shards == store.n_shards() {
+            store.n_rows()
+        } else {
+            let mut rows = 0usize;
+            for i in id.shard_base..id.shard_base + id.n_shards {
+                rows += store.shard_rows(i)?;
+            }
+            rows
+        };
+        if store_rows != id.n_rows {
+            return Err(bad(format!(
+                "session trained over {} rows, the store range holds {store_rows}",
+                id.n_rows
+            )));
+        }
+        if store.train_dim() != id.train_dim {
+            return Err(bad(format!(
+                "session dimension {} vs store dimension {}",
+                id.train_dim,
+                store.train_dim()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Shard-range assignment for multi-worker epochs over one store.
+#[derive(Clone, Debug)]
+pub struct SessionPlan {
+    pub n_shards: usize,
+}
+
+impl SessionPlan {
+    pub fn for_store(store: &SigShardStore) -> Self {
+        Self {
+            n_shards: store.n_shards(),
+        }
+    }
+
+    /// Contiguous, balanced shard ranges, one per worker: the first
+    /// `n_shards mod n_workers` ranges carry one extra shard. Workers
+    /// beyond the shard count get no range (a 1000-shard store splits
+    /// across at most 1000 workers), so every returned range is non-empty
+    /// and the ranges exactly tile `0..n_shards`.
+    pub fn partition(&self, n_workers: usize) -> Vec<Range<usize>> {
+        let workers = n_workers.clamp(1, self.n_shards.max(1));
+        let base = self.n_shards / workers;
+        let extra = self.n_shards % workers;
+        let mut out = Vec::with_capacity(workers);
+        let mut start = 0usize;
+        for wi in 0..workers {
+            let len = base + usize::from(wi < extra);
+            if len == 0 {
+                break; // n_shards == 0
+            }
+            out.push(start..start + len);
+            start += len;
+        }
+        out
+    }
+}
+
+/// Row-weighted parameter averaging — the merge step after per-worker
+/// range sessions: `w = Σ rows_i·w_i / Σ rows_i` (f64 accumulation),
+/// objective averaged with the same weights, iteration counts summed.
+pub fn merge_weighted(models: &[(LinearModel, usize)]) -> LinearModel {
+    assert!(!models.is_empty(), "nothing to merge");
+    let dim = models[0].0.w.len();
+    let total_rows: usize = models.iter().map(|&(_, rows)| rows).sum();
+    assert!(total_rows > 0, "merge weights sum to zero");
+    let mut acc = vec![0.0f64; dim];
+    let mut obj = 0.0f64;
+    let mut iters = 0usize;
+    for (m, rows) in models {
+        assert_eq!(
+            m.w.len(),
+            dim,
+            "all merged models must share one feature space"
+        );
+        let wgt = *rows as f64 / total_rows as f64;
+        for (a, &w) in acc.iter_mut().zip(&m.w) {
+            *a += wgt * w as f64;
+        }
+        obj += wgt * m.objective;
+        iters += m.iters;
+    }
+    LinearModel {
+        w: acc.into_iter().map(|x| x as f32).collect(),
+        iters,
+        objective: obj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::bbit::BbitSignatureMatrix;
+    use crate::hashing::feature_map::SketchLayout;
+    use crate::hashing::sketch::SketchMatrix;
+    use crate::store::writer::ShardWriter;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bbml_sess_{}_{}", name, std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn build_store(dir: &Path, k: usize, b: u32, shard_rows: &[usize], seed: u64) -> SigShardStore {
+        let mask = (1u32 << b) - 1;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut w = ShardWriter::create(
+            dir,
+            Scheme::Bbit,
+            SketchLayout::PackedBbit { k, b },
+            false,
+        )
+        .unwrap();
+        for (seq, &rows) in shard_rows.iter().enumerate() {
+            let mut m = BbitSignatureMatrix::new(k, b);
+            for _ in 0..rows {
+                let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+                m.push_row(&row, if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 });
+            }
+            w.write_shard(seq, &SketchMatrix::Bbit(m)).unwrap();
+        }
+        w.finish().unwrap();
+        SigShardStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn row_order_is_a_stable_permutation_keyed_on_epoch_and_seq() {
+        let a = row_order(20, 7, 2, 5);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+        // Deterministic in (seed, epoch, seq)…
+        assert_eq!(a, row_order(20, 7, 2, 5));
+        // …and keyed on every component.
+        assert_ne!(a, row_order(20, 8, 2, 5));
+        assert_ne!(a, row_order(20, 7, 3, 5));
+        assert_ne!(a, row_order(20, 7, 2, 6));
+        // A 1-row shard is a fixed point.
+        assert_eq!(row_order(1, 7, 2, 5), vec![0]);
+    }
+
+    #[test]
+    fn partition_tiles_the_store_evenly() {
+        let plan = SessionPlan { n_shards: 10 };
+        assert_eq!(plan.partition(3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(plan.partition(1), vec![0..10]);
+        // More workers than shards: one shard each, no empty ranges.
+        assert_eq!(
+            SessionPlan { n_shards: 2 }.partition(5),
+            vec![0..1, 1..2]
+        );
+        assert_eq!(SessionPlan { n_shards: 0 }.partition(4), vec![]);
+        // Tiling invariant across shapes.
+        for (n, w) in [(17, 4), (64, 7), (5, 5)] {
+            let ranges = SessionPlan { n_shards: n }.partition(w);
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+            }
+            assert!(ranges.iter().all(|r| !r.is_empty()));
+        }
+    }
+
+    #[test]
+    fn merge_weighted_averages_by_rows() {
+        let a = LinearModel {
+            w: vec![1.0, 0.0],
+            iters: 10,
+            objective: 1.0,
+        };
+        let b = LinearModel {
+            w: vec![0.0, 2.0],
+            iters: 5,
+            objective: 4.0,
+        };
+        let m = merge_weighted(&[(a, 3), (b, 1)]);
+        assert_eq!(m.w, vec![0.75, 0.5]);
+        assert_eq!(m.iters, 15);
+        assert!((m.objective - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_every_state_bit() {
+        let dir = tmp("rt_store");
+        let store = build_store(&dir, 8, 4, &[6, 5, 4], 3);
+        let opt = StreamTrainOptions {
+            epochs: 4,
+            seed: 99,
+            ..Default::default()
+        };
+        let sess = TrainSession::new(&store, opt).unwrap();
+        let path = dir.join("s.ckpt");
+        sess.save(&path).unwrap();
+        let back = TrainSession::resume(&path, &store).unwrap();
+        assert_eq!(back.ident, sess.ident);
+        assert_eq!(back.epoch, sess.epoch);
+        assert_eq!(back.shard_pos, sess.shard_pos);
+        assert_eq!(back.order, sess.order);
+        assert_eq!(back.order_rng.state(), sess.order_rng.state());
+        assert_eq!(back.core.w_scale.to_bits(), sess.core.w_scale.to_bits());
+        assert_eq!(back.core.t, sess.core.t);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.core.w), bits(&sess.core.w));
+        assert_eq!(back.core.avg.is_some(), sess.core.avg.is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_store_and_corruption() {
+        let dir = tmp("rej_store");
+        let store = build_store(&dir, 8, 4, &[6, 5], 3);
+        let sess = TrainSession::new(&store, StreamTrainOptions::default()).unwrap();
+        let path = dir.join("s.ckpt");
+        sess.save(&path).unwrap();
+        // A store of a different shape is refused.
+        let other_dir = tmp("rej_other");
+        let other = build_store(&other_dir, 8, 8, &[6, 5], 3);
+        let err = TrainSession::resume(&path, &other).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // …as is one with the right shape but different rows.
+        let third_dir = tmp("rej_third");
+        let third = build_store(&third_dir, 8, 4, &[6, 6], 3);
+        assert!(TrainSession::resume(&path, &third).is_err());
+        // Payload corruption is caught by the CRC.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x04;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TrainSession::resume(&path, &store).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        for d in [&dir, &other_dir, &third_dir] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn empty_store_range_is_invalid_input() {
+        let dir = tmp("empty");
+        let store = build_store(&dir, 8, 4, &[3, 3], 3);
+        let err =
+            TrainSession::new_range(&store, StreamTrainOptions::default(), 0..0).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

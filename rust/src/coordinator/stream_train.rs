@@ -2,40 +2,58 @@
 //! paper's "data do not fit in memory" regime (Li & Shrivastava,
 //! arXiv:1108.3072: Pegasos/logreg SGD epochs over batches read from disk).
 //!
-//! [`train_stream`] runs multi-epoch SGD over a [`SigShardStore`]: each
-//! epoch re-reads the shards through the prefetching [`ShardStream`] (at
-//! most `prefetch · chunk` rows resident, prefetch clamped to ≥ 3 — the
-//! full matrix never is) and visits rows shard by shard. Epoch order is either sequential
-//! (shard 0, 1, …, i.e. corpus row order) or a **seeded permutation of
-//! shard indices** re-drawn every epoch (`shuffle: true`, the default) —
-//! the out-of-core stand-in for per-example shuffling, exactly as the
-//! 200 GB follow-up trains from disk.
+//! Since the model-lifecycle redesign the state machine itself lives in
+//! [`crate::coordinator::session`] ([`TrainSession`]): it owns the
+//! [`SgdCore`], the epoch/shard/step counters and the shuffle RNG state,
+//! and can checkpoint/resume mid-run. The functions here are the
+//! **thin, bit-identical wrappers** the pre-session API consisted of:
+//!
+//! * [`train_stream`] — `TrainSession::new(store, opt).run(store, None)`:
+//!   multi-epoch SGD over the [`SigShardStore`] stream (at most
+//!   `prefetch · chunk` rows resident, prefetch clamped to ≥ 3), epoch
+//!   order either sequential or a seeded permutation of shard indices
+//!   re-drawn every epoch (`shuffle: true`, the default), optionally with
+//!   a seeded within-shard row permutation (`row_shuffle`, the mid-epoch
+//!   shuffling ROADMAP item — see the bit-identity notes below).
+//! * [`train_epochs_in_memory`] / [`train_epochs_sketch`] — the same
+//!   session core driven over a resident matrix modeled as a single shard:
+//!   the bit-identity oracle of the out-of-core tests.
+//! * [`evaluate_stream`] — one bounded-memory accuracy pass.
 //!
 //! # Bit-identity contract
 //!
-//! With `shuffle: false` the visit order is corpus row order, and
-//! [`train_epochs_in_memory`] — the same [`SgdCore`] driven over an
-//! in-memory matrix, which it treats as a single resident shard — performs
-//! the *identical* sequence of floating-point operations. Streaming from
-//! disk is therefore **bit-identical** to in-memory training on the same
-//! seed (asserted in `tests/integration_store.rs`), which is what makes the
-//! store trustworthy: spilling is a memory decision, never a model change.
+//! With `shuffle: false` the visit order is corpus row order, and the
+//! in-memory driver performs the *identical* sequence of floating-point
+//! operations — streaming from disk is **bit-identical** to in-memory
+//! training on the same seed (asserted in `tests/integration_store.rs`):
+//! spilling is a memory decision, never a model change. With shuffling on,
+//! a single-shard store remains a fixed point of both the shard
+//! permutation *and* the row permutation (its seed derives from
+//! `(epoch, shard seq)`), so the two paths stay aligned there too.
+//! `row_shuffle: false` restores the exact pre-session visit order
+//! (within-shard row order), bit for bit.
 //!
 //! The SGD itself is the cyclic-epoch variant of the Pegasos update (step
 //! `η_t = 1/(λt)`, λ = 1/(C·n), lazy scaling, optional suffix averaging —
-//! the same machinery as [`crate::solvers::sgd`], which samples rows
-//! randomly instead and is *not* expected to match bit-for-bit), with the
-//! hinge subgradient swapped for the logistic gradient when
-//! [`StreamAlgo::LogRegSgd`] is selected.
+//! the same [`SgdCore`] machinery as [`crate::solvers::sgd`], whose
+//! [`train_pegasos`] samples rows randomly instead and is *not* expected
+//! to match bit-for-bit), with the hinge subgradient swapped for the
+//! logistic gradient when [`StreamAlgo::LogRegSgd`] is selected.
+//!
+//! [`SgdCore`]: crate::solvers::sgd::SgdCore
+//! [`TrainSession`]: crate::coordinator::session::TrainSession
+//! [`train_pegasos`]: crate::solvers::sgd::train_pegasos
 
 use std::io;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::coordinator::session::{self, TrainSession};
+use crate::coordinator::trainer::Backend;
 use crate::hashing::bbit::BbitSignatureMatrix;
 use crate::hashing::feature_map::SketchLayout;
 use crate::hashing::sketch::SketchMatrix;
-use crate::rng::Xoshiro256;
-use crate::solvers::{ExpandedView, Features, LinearModel, SketchView};
+use crate::solvers::sgd::SgdLoss;
+use crate::solvers::{ExpandedView, LinearModel, SketchView};
 use crate::store::SigShardStore;
 
 /// Which streaming update to run per visited row.
@@ -48,18 +66,40 @@ pub enum StreamAlgo {
 }
 
 impl StreamAlgo {
+    /// Parse an algorithm name. Delegates to the one shared
+    /// [`Backend`] name table (`coordinator::trainer::BACKEND_NAMES`) and
+    /// maps through [`Backend::stream_algo`], so `train` and
+    /// `train-stream` accept identical spellings by construction; PJRT
+    /// backends have no streaming twin and parse to `None`.
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "pegasos" | "sgd" | "svm" => Some(Self::Pegasos),
-            "logreg" | "logreg_sgd" => Some(Self::LogRegSgd),
-            _ => None,
-        }
+        Backend::parse(s).and_then(Backend::stream_algo)
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Self::Pegasos => "pegasos",
             Self::LogRegSgd => "logreg_sgd",
+        }
+    }
+
+    /// The loss the shared SGD core steps with.
+    pub fn loss(&self) -> SgdLoss {
+        match self {
+            Self::Pegasos => SgdLoss::Hinge,
+            Self::LogRegSgd => SgdLoss::Logistic,
+        }
+    }
+
+    /// The byte a checkpoint records for this algorithm.
+    pub fn code(&self) -> u8 {
+        self.loss().code()
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown bytes.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match SgdLoss::from_code(code)? {
+            SgdLoss::Hinge => Some(Self::Pegasos),
+            SgdLoss::Logistic => Some(Self::LogRegSgd),
         }
     }
 }
@@ -74,8 +114,15 @@ pub struct StreamTrainOptions {
     pub epochs: usize,
     pub seed: u64,
     /// Re-draw a seeded permutation of shard indices every epoch. Off ⇒
-    /// corpus row order ⇒ bit-identical to [`train_epochs_in_memory`].
+    /// corpus row order ⇒ bit-identical to [`train_epochs_in_memory`]
+    /// (and `row_shuffle` is inert).
     pub shuffle: bool,
+    /// Additionally permute rows *within* each decoded shard (seeded by
+    /// `(epoch, shard seq)`, so it is checkpoint-stable) — the out-of-core
+    /// approximation of true per-example shuffling with memory still
+    /// bounded. Only effective when `shuffle` is on; `false` restores the
+    /// exact pre-session (shard-order-only) visit order.
+    pub row_shuffle: bool,
     /// Reader residency budget in shards ([`SigShardStore::stream`]'s
     /// `queue`): at most `max(prefetch, 3) · chunk` rows decoded at once.
     pub prefetch: usize,
@@ -91,6 +138,7 @@ impl Default for StreamTrainOptions {
             epochs: 5,
             seed: 1,
             shuffle: true,
+            row_shuffle: true,
             prefetch: 4,
             average: true,
         }
@@ -101,7 +149,8 @@ impl Default for StreamTrainOptions {
 #[derive(Clone, Debug)]
 pub struct StreamTrainReport {
     pub model: LinearModel,
-    /// Rows visited across all training epochs.
+    /// Rows visited across all training epochs (a resumed session counts
+    /// the pre-interruption rows too — the checkpoint carries them).
     pub rows_seen: usize,
     pub shards: usize,
     pub epochs: usize,
@@ -112,236 +161,18 @@ pub struct StreamTrainReport {
     pub peak_resident_rows: usize,
 }
 
-/// The epoch-SGD state machine shared verbatim by the disk and in-memory
-/// drivers (bit-identity depends on there being exactly one `step`).
-struct SgdCore {
-    algo: StreamAlgo,
-    lambda: f64,
-    w: Vec<f32>,
-    /// Lazy scaling: actual weights are `w · w_scale`.
-    w_scale: f64,
-    t: usize,
-    total_steps: usize,
-    avg: Option<Vec<f64>>,
-    avg_count: usize,
-}
-
-impl SgdCore {
-    fn new(algo: StreamAlgo, dim: usize, lambda: f64, total_steps: usize, average: bool) -> Self {
-        Self {
-            algo,
-            lambda,
-            w: vec![0.0f32; dim],
-            w_scale: 1.0,
-            t: 0,
-            total_steps,
-            avg: if average { Some(vec![0.0f64; dim]) } else { None },
-            avg_count: 0,
-        }
-    }
-
-    /// One SGD step on row `i` of `feats` (mirrors
-    /// `crate::solvers::sgd::train_pegasos`'s inner loop, minus the random
-    /// row sampling and the ball projection — and with it the incremental
-    /// ‖w‖² bookkeeping, so each update is one dot + one axpy pass).
-    /// Generic over [`Features`]: packed stores step through the virtual
-    /// expansion exactly as before, dense stores through their f32 rows.
-    fn step<Ft: Features>(&mut self, feats: &Ft, i: usize) {
-        self.t += 1;
-        let eta = 1.0 / (self.lambda * self.t as f64);
-        let y = feats.label(i) as f64;
-        let margin = y * feats.dot(i, &self.w) * self.w_scale;
-
-        // w ← (1 − η λ) w  [+ s·x_i];  shrink = 1 − 1/t zeroes w at t = 1.
-        let shrink = 1.0 - eta * self.lambda;
-        if shrink <= 0.0 {
-            self.w.iter_mut().for_each(|x| *x = 0.0);
-            self.w_scale = 1.0;
-        } else {
-            self.w_scale *= shrink;
-        }
-        let s = match self.algo {
-            StreamAlgo::Pegasos => {
-                if margin < 1.0 {
-                    eta * y
-                } else {
-                    0.0
-                }
-            }
-            // η·y·σ(−margin); exp overflow saturates s to 0, which is the
-            // correct limit for confidently-classified rows.
-            StreamAlgo::LogRegSgd => eta * y / (1.0 + margin.exp()),
-        };
-        if s != 0.0 {
-            feats.axpy(i, s / self.w_scale, &mut self.w);
-        }
-        // Re-materialize the lazy scale before f32 head-room runs out.
-        if self.w_scale < 1e-4 {
-            for x in self.w.iter_mut() {
-                *x = (*x as f64 * self.w_scale) as f32;
-            }
-            self.w_scale = 1.0;
-        }
-        // Suffix averaging over the second half of all steps.
-        if let Some(a) = self.avg.as_mut() {
-            if self.t > self.total_steps / 2 {
-                for (aj, &wj) in a.iter_mut().zip(&self.w) {
-                    *aj += wj as f64 * self.w_scale;
-                }
-                self.avg_count += 1;
-            }
-        }
-    }
-
-    /// Final dense weights (averaged iterate when enabled).
-    fn into_weights(self) -> Vec<f32> {
-        match self.avg {
-            Some(a) if self.avg_count > 0 => {
-                a.iter().map(|&x| (x / self.avg_count as f64) as f32).collect()
-            }
-            _ => self.w.iter().map(|&x| (x as f64 * self.w_scale) as f32).collect(),
-        }
-    }
-}
-
-/// Per-row loss term of the streamed objective (hinge or stable log-loss).
-fn row_loss<Ft: Features>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
-    let m = feats.label(i) as f64 * feats.dot(i, w);
-    match algo {
-        StreamAlgo::Pegasos => (1.0 - m).max(0.0),
-        StreamAlgo::LogRegSgd => {
-            if m > 0.0 {
-                (-m).exp().ln_1p()
-            } else {
-                -m + m.exp().ln_1p()
-            }
-        }
-    }
-}
-
-/// `λ/2·‖w‖² + loss_sum/n` — the streamed objective assembled from one
-/// extra data pass.
-fn objective(algo_independent_reg: f64, loss_sum: f64, n: usize) -> f64 {
-    algo_independent_reg + loss_sum / n as f64
-}
-
-fn reg_term(lambda: f64, w: &[f32]) -> f64 {
-    0.5 * lambda * w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
-}
-
-/// Per-epoch shard visit order: `0..n_shards`, permuted through the shared
-/// seeded RNG when shuffling. A single-shard store (and the in-memory
-/// driver, which models the matrix as one shard) is a fixed point of every
-/// permutation, so the two paths stay aligned for any `shuffle`.
-fn epoch_order(n_shards: usize, shuffle: bool, rng: &mut Xoshiro256) -> Vec<usize> {
-    let mut order: Vec<usize> = (0..n_shards).collect();
-    if shuffle {
-        rng.shuffle(&mut order);
-    }
-    order
-}
-
 /// Train a linear model over the store without ever materializing the full
-/// signature matrix (multi-epoch via re-read; see module docs).
+/// signature matrix (multi-epoch via re-read; see module docs). Thin
+/// wrapper over [`TrainSession`] — bit-identical to the pre-session
+/// implementation (asserted in `tests/integration_session.rs`).
 pub fn train_stream(
     store: &SigShardStore,
     opt: &StreamTrainOptions,
 ) -> io::Result<StreamTrainReport> {
-    let t0 = Instant::now();
-    let n = store.n_rows();
-    if n == 0 {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidInput,
-            format!("store at {} is empty", store.dir().display()),
-        ));
-    }
-    let dim = store.train_dim();
-    let lambda = 1.0 / (opt.c * n as f64);
-    let total_steps = opt.epochs * n;
-    let mut core = SgdCore::new(opt.algo, dim, lambda, total_steps, opt.average);
-    let mut order_rng = Xoshiro256::seed_from_u64(opt.seed ^ 0x0DD_BA11);
-    let mut peak_rows = 0usize;
-    let mut rows_seen = 0usize;
-
-    for _epoch in 0..opt.epochs {
-        let order = epoch_order(store.n_shards(), opt.shuffle, &mut order_rng);
-        let mut stream = store.stream(&order, opt.prefetch);
-        for item in &mut stream {
-            let shard = item?;
-            let view = SketchView::new(&shard);
-            for i in 0..shard.n() {
-                core.step(&view, i);
-            }
-            rows_seen += shard.n();
-        }
-        peak_rows = peak_rows.max(stream.peak_resident_rows());
-    }
-
-    let w = core.into_weights();
-    // Objective pass: one more sequential read (corpus row order, matching
-    // the in-memory driver's accumulation order exactly).
-    let mut loss_sum = 0.0f64;
-    let mut stream = store.stream(&store.seq_order(), opt.prefetch);
-    for item in &mut stream {
-        let shard = item?;
-        let view = SketchView::new(&shard);
-        for i in 0..shard.n() {
-            loss_sum += row_loss(opt.algo, &view, i, &w);
-        }
-    }
-    peak_rows = peak_rows.max(stream.peak_resident_rows());
-    let obj = objective(reg_term(lambda, &w), loss_sum, n);
-
-    Ok(StreamTrainReport {
-        model: LinearModel {
-            w,
-            iters: total_steps,
-            objective: obj,
-        },
-        rows_seen,
-        shards: store.n_shards(),
-        epochs: opt.epochs,
-        train_time: t0.elapsed(),
-        peak_resident_rows: peak_rows,
-    })
+    TrainSession::new(store, opt.clone())?.run(store, None)
 }
 
-/// The shared in-memory epoch driver: the same [`SgdCore`] as the disk
-/// path, over any [`Features`] view modeled as a single resident shard.
-fn train_epochs_core<Ft: Features>(
-    view: &Ft,
-    dim: usize,
-    opt: &StreamTrainOptions,
-) -> LinearModel {
-    let n = view.n();
-    assert!(n > 0, "empty training set");
-    let lambda = 1.0 / (opt.c * n as f64);
-    let total_steps = opt.epochs * n;
-    let mut core = SgdCore::new(opt.algo, dim, lambda, total_steps, opt.average);
-    let mut order_rng = Xoshiro256::seed_from_u64(opt.seed ^ 0x0DD_BA11);
-    for _epoch in 0..opt.epochs {
-        // One shard: the permutation is the identity, but consume the RNG
-        // exactly like the disk driver would.
-        let order = epoch_order(1, opt.shuffle, &mut order_rng);
-        debug_assert_eq!(order, [0]);
-        for i in 0..n {
-            core.step(view, i);
-        }
-    }
-    let w = core.into_weights();
-    let mut loss_sum = 0.0f64;
-    for i in 0..n {
-        loss_sum += row_loss(opt.algo, view, i, &w);
-    }
-    let obj = objective(reg_term(lambda, &w), loss_sum, n);
-    LinearModel {
-        w,
-        iters: total_steps,
-        objective: obj,
-    }
-}
-
-/// The in-memory twin of [`train_stream`]: the same [`SgdCore`] driven
+/// The in-memory twin of [`train_stream`]: the same session core driven
 /// over a resident matrix, treated as a single shard. With
 /// `shuffle: false` (or a single-shard store) this performs the identical
 /// floating-point operation sequence as the disk path — the bit-identity
@@ -355,7 +186,7 @@ pub fn train_epochs_in_memory(
         k: sigs.k(),
         b: sigs.b(),
     };
-    train_epochs_core(&view, layout.train_dim(), opt)
+    session::train_epochs_core(&view, layout.train_dim(), opt)
 }
 
 /// [`train_epochs_in_memory`] over any scheme's sketch output — the
@@ -368,7 +199,7 @@ pub fn train_epochs_sketch(sk: &SketchMatrix, opt: &StreamTrainOptions) -> Linea
         SketchMatrix::Bbit(m) => train_epochs_in_memory(m, opt),
         SketchMatrix::Dense(_) => {
             let view = SketchView::new(sk);
-            train_epochs_core(&view, sk.train_dim(), opt)
+            session::train_epochs_core(&view, sk.train_dim(), opt)
         }
     }
 }
@@ -380,6 +211,7 @@ pub fn evaluate_stream(
     store: &SigShardStore,
     prefetch: usize,
 ) -> io::Result<(f64, usize)> {
+    use crate::solvers::Features;
     let mut correct = 0usize;
     let mut total = 0usize;
     for item in store.stream(&store.seq_order(), prefetch) {
@@ -401,15 +233,24 @@ pub fn evaluate_stream(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::session::epoch_order;
+    use crate::rng::Xoshiro256;
 
     #[test]
     fn algo_parse_and_names() {
         assert_eq!(StreamAlgo::parse("pegasos"), Some(StreamAlgo::Pegasos));
         assert_eq!(StreamAlgo::parse("svm"), Some(StreamAlgo::Pegasos));
         assert_eq!(StreamAlgo::parse("logreg"), Some(StreamAlgo::LogRegSgd));
+        assert_eq!(StreamAlgo::parse("logreg_sgd"), Some(StreamAlgo::LogRegSgd));
         assert_eq!(StreamAlgo::parse("nope"), None);
+        // PJRT backends parse as backends but have no streaming twin.
+        assert_eq!(StreamAlgo::parse("pjrt_logreg"), None);
         assert_eq!(StreamAlgo::Pegasos.name(), "pegasos");
         assert_eq!(StreamAlgo::LogRegSgd.name(), "logreg_sgd");
+        for algo in [StreamAlgo::Pegasos, StreamAlgo::LogRegSgd] {
+            assert_eq!(StreamAlgo::from_code(algo.code()), Some(algo));
+        }
+        assert_eq!(StreamAlgo::from_code(7), None);
     }
 
     #[test]

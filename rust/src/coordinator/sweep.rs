@@ -348,6 +348,129 @@ pub fn run_scheme_sweep(
     out
 }
 
+/// §7 variance-curve sweep: `bbit_vw` accuracy vs VW bucket count at one
+/// fixed signature point `(k, b)` — the tradeoff the paper's §7 analysis
+/// predicts (fewer buckets ⇒ more collisions among the `2^b·k` expanded
+/// features ⇒ more variance ⇒ lower accuracy, at proportionally smaller
+/// storage). `None`-bucket items double as the plain `bbit` reference the
+/// curve converges to.
+#[derive(Clone, Debug)]
+pub struct BbitVwCurveSpec {
+    /// Signature width (permutations) of the fixed bbit point.
+    pub k: usize,
+    /// Bits kept per value of the fixed bbit point.
+    pub b: u32,
+    /// VW bucket counts to sweep.
+    pub buckets_list: Vec<usize>,
+    pub c: f64,
+    pub reps: usize,
+    pub backend: Backend,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Run the §7 curve: every bucket count (plus the bbit reference) ×
+/// repetitions, on the shared worker pool. The per-rep hash seed is shared
+/// across bucket counts, so within a repetition the minwise stage is
+/// common and only the VW bucketing varies — the curve isolates the
+/// bucket-collision variance, which is the quantity §7 bounds.
+pub fn run_bbit_vw_curve(
+    train: &SparseBinaryDataset,
+    test: &SparseBinaryDataset,
+    spec: &BbitVwCurveSpec,
+) -> Vec<SchemeRecord> {
+    let mut items: Vec<(Option<usize>, usize)> = Vec::new();
+    for rep in 0..spec.reps {
+        items.push((None, rep)); // bbit reference at (k, b)
+        for &m in &spec.buckets_list {
+            items.push((Some(m), rep));
+        }
+    }
+    let next = AtomicUsize::new(0);
+    let records = Mutex::new(Vec::<SchemeRecord>::new());
+    let threads = spec.threads.clamp(1, 64);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let pipe_opt = PipelineOptions {
+                    threads: 1,
+                    ..Default::default()
+                };
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= items.len() {
+                        break;
+                    }
+                    let (buckets, rep) = items[idx];
+                    let hash_seed = spec
+                        .seed
+                        .wrapping_add(rep as u64)
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ ((spec.b as u64) << 32 | spec.k as u64);
+                    let mspec = match buckets {
+                        None => FeatureMapSpec::new(
+                            Scheme::Bbit,
+                            train.dim(),
+                            spec.k,
+                            spec.b,
+                            hash_seed,
+                        ),
+                        Some(m) => FeatureMapSpec {
+                            buckets: m,
+                            ..FeatureMapSpec::new(
+                                Scheme::BbitVw,
+                                train.dim(),
+                                spec.k,
+                                spec.b,
+                                hash_seed,
+                            )
+                        },
+                    };
+                    let map = mspec.build();
+                    let t_hash = std::time::Instant::now();
+                    let (sk_train, _) = sketch_dataset(train, map.as_ref(), &pipe_opt);
+                    let (sk_test, _) = sketch_dataset(test, map.as_ref(), &pipe_opt);
+                    let hash_secs = t_hash.elapsed().as_secs_f64();
+                    let out = train_sketch(
+                        &sk_train,
+                        spec.backend,
+                        spec.c,
+                        spec.seed ^ rep as u64,
+                        None,
+                        None,
+                    )
+                    .expect("rust backends cannot fail");
+                    let (acc, test_time) = evaluate_sketch(&out.model, &sk_test);
+                    let layout = map.layout();
+                    let scheme = if buckets.is_none() {
+                        Scheme::Bbit
+                    } else {
+                        Scheme::BbitVw
+                    };
+                    records.lock().unwrap().push(SchemeRecord {
+                        scheme,
+                        k: layout.k(),
+                        b: spec.b,
+                        storage_bits: layout.storage_bits_per_example(),
+                        rep,
+                        accuracy: acc,
+                        train_secs: out.train_time.as_secs_f64(),
+                        test_secs: test_time.as_secs_f64(),
+                        hash_secs,
+                    });
+                }
+            });
+        }
+    });
+
+    let mut out = records.into_inner().unwrap();
+    out.sort_by(|a, b| {
+        (a.scheme, a.storage_bits, a.k, a.rep).cmp(&(b.scheme, b.storage_bits, b.k, b.rep))
+    });
+    out
+}
+
 /// Aggregated (over repetitions) grid cell.
 #[derive(Clone, Debug)]
 pub struct AggRecord {
@@ -456,6 +579,46 @@ mod tests {
         assert_eq!(vw.len(), 2);
         assert!(vw.iter().any(|r| r.k == 16) && vw.iter().any(|r| r.k == 32));
         assert!(vw.iter().all(|r| r.b == 0));
+    }
+
+    #[test]
+    fn bbit_vw_curve_sweeps_buckets_and_includes_reference() {
+        let cfg = SynthConfig {
+            n_docs: 120,
+            dim: 1 << 18,
+            vocab: 3_000,
+            topic_size: 80,
+            mean_len: 40,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (train, test) = ds.train_test_split(0.3, 1);
+        let spec = BbitVwCurveSpec {
+            k: 64,
+            b: 8,
+            buckets_list: vec![4, 16, 64],
+            c: 1.0,
+            reps: 2,
+            backend: Backend::SvmDcd,
+            threads: 4,
+            seed: 9,
+        };
+        let recs = run_bbit_vw_curve(&train, &test, &spec);
+        assert_eq!(recs.len(), (1 + 3) * 2);
+        let refs: Vec<&SchemeRecord> =
+            recs.iter().filter(|r| r.scheme == Scheme::Bbit).collect();
+        assert_eq!(refs.len(), 2, "one bbit reference per rep");
+        assert!(refs.iter().all(|r| r.k == 64 && r.storage_bits == 64 * 8));
+        for m in [4usize, 16, 64] {
+            let at_m: Vec<&SchemeRecord> = recs
+                .iter()
+                .filter(|r| r.scheme == Scheme::BbitVw && r.k == m)
+                .collect();
+            assert_eq!(at_m.len(), 2, "buckets={m}");
+            assert!(at_m.iter().all(|r| r.storage_bits == 32 * m));
+            assert!(at_m.iter().all(|r| r.accuracy > 0.4));
+        }
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //!   the L1 Pallas scoring kernel inside) through the PJRT runtime; the
 //!   rust side only shuffles, pads and streams batches.
 
+use std::io;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::pipeline::{sketch_dataset, PipelineOptions};
+use crate::coordinator::stream_train::StreamAlgo;
+use crate::data::sparse::SparseBinaryDataset;
 use crate::hashing::bbit::BbitSignatureMatrix;
 use crate::hashing::sketch::SketchMatrix;
 use crate::rng::Xoshiro256;
@@ -21,7 +25,8 @@ use crate::runtime::{ArtifactKind, Runtime};
 use crate::solvers::linear_svm::{train_svm, SvmLoss, SvmOptions};
 use crate::solvers::logreg::{train_logreg, LogRegOptions};
 use crate::solvers::sgd::{train_pegasos, PegasosOptions};
-use crate::solvers::{DenseView, ExpandedView, LinearModel, SketchView};
+use crate::solvers::{DenseView, ExpandedView, Features, LinearModel, SketchView};
+use crate::store::ModelArtifact;
 
 /// Which trainer to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,15 +38,42 @@ pub enum Backend {
     PjrtSvm,
 }
 
+/// The one algorithm-name table both `train` and `train-stream` parse
+/// from. `Backend::parse` and `StreamAlgo::parse` used to keep two
+/// diverging tables; now the streaming parser derives from this one via
+/// [`Backend::stream_algo`], so the two commands accept identical
+/// spellings by construction (pinned by `accepted_name_table_is_pinned`).
+pub const BACKEND_NAMES: &[(&str, Backend)] = &[
+    ("svm", Backend::SvmDcd),
+    ("svm_dcd", Backend::SvmDcd),
+    ("logreg", Backend::LogRegDcd),
+    ("logreg_dcd", Backend::LogRegDcd),
+    // The streaming spelling: the same logistic objective; in memory it
+    // resolves to the DCD solver, on the stream to the SGD twin.
+    ("logreg_sgd", Backend::LogRegDcd),
+    ("pegasos", Backend::Pegasos),
+    ("sgd", Backend::Pegasos),
+    ("pjrt_logreg", Backend::PjrtLogReg),
+    ("pjrt_svm", Backend::PjrtSvm),
+];
+
 impl Backend {
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "svm" | "svm_dcd" => Some(Self::SvmDcd),
-            "logreg" | "logreg_dcd" => Some(Self::LogRegDcd),
-            "pegasos" | "sgd" => Some(Self::Pegasos),
-            "pjrt_logreg" => Some(Self::PjrtLogReg),
-            "pjrt_svm" => Some(Self::PjrtSvm),
-            _ => None,
+        BACKEND_NAMES
+            .iter()
+            .find(|&&(name, _)| name == s)
+            .map(|&(_, b)| b)
+    }
+
+    /// The out-of-core twin of this backend: the hinge backends stream as
+    /// Pegasos SGD epochs (DCD needs resident data — callers should say so
+    /// out loud), logreg as logistic SGD on the same schedule. `None` for
+    /// the PJRT backends, which have no streaming twin.
+    pub fn stream_algo(self) -> Option<StreamAlgo> {
+        match self {
+            Backend::SvmDcd | Backend::Pegasos => Some(StreamAlgo::Pegasos),
+            Backend::LogRegDcd => Some(StreamAlgo::LogRegSgd),
+            Backend::PjrtLogReg | Backend::PjrtSvm => None,
         }
     }
 }
@@ -259,6 +291,70 @@ pub fn evaluate(
     (acc, t0.elapsed())
 }
 
+/// What scoring raw rows through a saved model reports.
+#[derive(Clone, Debug)]
+pub struct PredictOutcome {
+    /// Decision values w·φ(x_i), in row order.
+    pub scores: Vec<f64>,
+    /// Accuracy against the input labels (libsvm rows always carry one).
+    pub accuracy: f64,
+    pub rows: usize,
+    /// Encode + score wall-clock.
+    pub predict_time: Duration,
+}
+
+/// End-to-end prediction from a saved [`ModelArtifact`]: raw sparse binary
+/// rows → rebuild the recorded encoder → encode through the hashing
+/// pipeline → score with the saved weights. The artifact is
+/// self-describing, so nothing else identifies the feature space. An input
+/// domain larger than the recorded one is rejected as `InvalidData` — the
+/// encoder's permutations/projections are only defined on the domain the
+/// model was trained over.
+pub fn predict_artifact(
+    art: &ModelArtifact,
+    ds: &SparseBinaryDataset,
+    opt: &PipelineOptions,
+) -> io::Result<PredictOutcome> {
+    if ds.dim() > art.spec.dim {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "input domain {} exceeds the model's recorded domain {} \
+                 (scheme {}, k={}, b={})",
+                ds.dim(),
+                art.spec.dim,
+                art.spec.scheme,
+                art.spec.k,
+                art.spec.b
+            ),
+        ));
+    }
+    let t0 = Instant::now();
+    let map = art.spec.build();
+    let (sk, _) = sketch_dataset(ds, map.as_ref(), opt);
+    let view = SketchView::new(&sk);
+    let mut scores = Vec::with_capacity(ds.n());
+    let mut correct = 0usize;
+    for i in 0..ds.n() {
+        let s = art.model.score(&view, i);
+        if (s >= 0.0) == (Features::label(&view, i) > 0.0) {
+            correct += 1;
+        }
+        scores.push(s);
+    }
+    let accuracy = if ds.n() == 0 {
+        0.0
+    } else {
+        correct as f64 / ds.n() as f64
+    };
+    Ok(PredictOutcome {
+        scores,
+        accuracy,
+        rows: ds.n(),
+        predict_time: t0.elapsed(),
+    })
+}
+
 /// Same evaluation but scoring through the PJRT predict artifact (L1
 /// kernel on the inference path) — used to cross-check the two scorers.
 pub fn evaluate_pjrt(
@@ -317,6 +413,67 @@ mod tests {
         assert_eq!(Backend::parse("logreg"), Some(Backend::LogRegDcd));
         assert_eq!(Backend::parse("pjrt_logreg"), Some(Backend::PjrtLogReg));
         assert_eq!(Backend::parse("nope"), None);
+    }
+
+    #[test]
+    fn accepted_name_table_is_pinned() {
+        // The satellite contract: ONE name table, identical spellings for
+        // `train` and `train-stream`. This pins the exact accepted set so
+        // any future divergence is a deliberate, visible edit.
+        let want: &[(&str, Backend, Option<StreamAlgo>)] = &[
+            ("svm", Backend::SvmDcd, Some(StreamAlgo::Pegasos)),
+            ("svm_dcd", Backend::SvmDcd, Some(StreamAlgo::Pegasos)),
+            ("logreg", Backend::LogRegDcd, Some(StreamAlgo::LogRegSgd)),
+            ("logreg_dcd", Backend::LogRegDcd, Some(StreamAlgo::LogRegSgd)),
+            ("logreg_sgd", Backend::LogRegDcd, Some(StreamAlgo::LogRegSgd)),
+            ("pegasos", Backend::Pegasos, Some(StreamAlgo::Pegasos)),
+            ("sgd", Backend::Pegasos, Some(StreamAlgo::Pegasos)),
+            ("pjrt_logreg", Backend::PjrtLogReg, None),
+            ("pjrt_svm", Backend::PjrtSvm, None),
+        ];
+        assert_eq!(BACKEND_NAMES.len(), want.len());
+        for &(name, backend, stream) in want {
+            assert_eq!(Backend::parse(name), Some(backend), "{name}");
+            assert_eq!(StreamAlgo::parse(name), stream, "{name}");
+            assert_eq!(backend.stream_algo().is_some(), stream.is_some());
+        }
+        // Nothing outside the table parses, for either command.
+        for name in ["", "dcd", "svm-dcd", "PEGASOS", "quantum"] {
+            assert_eq!(Backend::parse(name), None, "{name}");
+            assert_eq!(StreamAlgo::parse(name), None, "{name}");
+        }
+    }
+
+    #[test]
+    fn predict_artifact_scores_and_rejects_oversized_domain() {
+        use crate::data::sparse::{SparseBinaryDataset, SparseBinaryVec};
+        use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
+        let (train, _) = sigs();
+        let spec = FeatureMapSpec::new(Scheme::Bbit, 1 << 20, 64, 8, 11);
+        let out = train_signatures(&train, Backend::SvmDcd, 1.0, 3, None, None).unwrap();
+        let art = crate::store::ModelArtifact::new(spec, out.model).unwrap();
+        // Scoring the training corpus end-to-end reproduces the resident
+        // accuracy exactly: same encoder seed, same weights.
+        let cfg = SynthConfig {
+            n_docs: 400,
+            dim: 1 << 20,
+            vocab: 5_000,
+            topic_size: 100,
+            mean_len: 60,
+            topic_mix: 0.5,
+            ..Default::default()
+        };
+        let ds = generate_corpus(&cfg);
+        let (tr, _) = ds.train_test_split(0.25, 5);
+        let pred = predict_artifact(&art, &tr, &PipelineOptions::default()).unwrap();
+        assert_eq!(pred.rows, tr.n());
+        let (acc_direct, _) = evaluate(&art.model, &train);
+        assert_eq!(pred.accuracy.to_bits(), acc_direct.to_bits());
+        // Oversized input domain → InvalidData, not silent garbage.
+        let mut big = SparseBinaryDataset::new(1 << 21);
+        big.push(SparseBinaryVec::from_indices(vec![1 << 20]), 1.0);
+        let err = predict_artifact(&art, &big, &PipelineOptions::default()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! §7 variance curve: `bbit_vw` accuracy vs VW bucket count at a fixed
+//! signature point (k, b).
+//!
+//! The paper's §7 combination VW-hashes the (virtual) `2^b·k`-dimensional
+//! expansion of the b-bit signatures down to `m` buckets. The analysis
+//! predicts a clean tradeoff: bucket collisions add variance that shrinks
+//! as `m` grows, so accuracy climbs toward the plain b-bit reference while
+//! storage grows as `32·m` bits/example — with the matched-storage point
+//! `m = k·b/32` the natural operating choice. This runner sweeps `m`
+//! around that point (¼× to 8×) through the
+//! [`run_bbit_vw_curve`](crate::coordinator::sweep::run_bbit_vw_curve)
+//! machinery, writes the per-rep series as CSV and the aggregated curve as
+//! `BENCH_bbit_vw_curve.json` under `cfg.out_dir`.
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::report::{json_string, print_table, write_json_object, write_rows_csv};
+use crate::coordinator::sweep::{run_bbit_vw_curve, BbitVwCurveSpec, SchemeRecord};
+use crate::coordinator::trainer::Backend;
+use crate::experiments::common::{corpus_split, out_path};
+use crate::hashing::feature_map::{matched_dense_k, Scheme};
+use crate::solvers::metrics::mean_std;
+
+/// One aggregated point of the curve.
+struct CurvePoint {
+    /// VW buckets (0 marks the plain bbit reference).
+    buckets: usize,
+    storage_bits: usize,
+    acc_mean: f64,
+    acc_std: f64,
+    train_secs_mean: f64,
+}
+
+fn aggregate(recs: &[SchemeRecord]) -> Vec<CurvePoint> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(usize, usize), Vec<&SchemeRecord>> = BTreeMap::new();
+    for r in recs {
+        let buckets = if r.scheme == Scheme::Bbit { 0 } else { r.k };
+        groups.entry((buckets, r.storage_bits)).or_default().push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((buckets, storage_bits), rs)| {
+            let accs: Vec<f64> = rs.iter().map(|r| r.accuracy).collect();
+            let (acc_mean, acc_std) = mean_std(&accs);
+            let trains: Vec<f64> = rs.iter().map(|r| r.train_secs).collect();
+            CurvePoint {
+                buckets,
+                storage_bits,
+                acc_mean,
+                acc_std,
+                train_secs_mean: mean_std(&trains).0,
+            }
+        })
+        .collect()
+}
+
+pub fn run(cfg: &RunConfig) -> anyhow::Result<()> {
+    let (train, test) = corpus_split(cfg);
+    let k = *cfg.k_list.iter().find(|&&k| k >= 100).unwrap_or(
+        cfg.k_list.last().expect("k_list must not be empty"),
+    );
+    let b = 8u32;
+    let matched = matched_dense_k(k, b);
+    // ¼× … 8× the matched-storage bucket count, deduped and ≥ 1.
+    let mut buckets_list: Vec<usize> = [
+        (matched / 4).max(1),
+        (matched / 2).max(1),
+        matched,
+        matched * 2,
+        matched * 4,
+        matched * 8,
+    ]
+    .to_vec();
+    buckets_list.sort_unstable();
+    buckets_list.dedup();
+
+    let spec = BbitVwCurveSpec {
+        k,
+        b,
+        buckets_list,
+        c: 1.0,
+        reps: cfg.reps,
+        backend: Backend::SvmDcd,
+        threads: cfg.threads,
+        seed: cfg.seed ^ 0xB1_7B0C,
+    };
+    let recs = run_bbit_vw_curve(&train, &test, &spec);
+
+    // Per-rep series as CSV (buckets = 0 marks the bbit reference).
+    let rows: Vec<Vec<f64>> = recs
+        .iter()
+        .map(|r| {
+            vec![
+                if r.scheme == Scheme::Bbit { 0.0 } else { r.k as f64 },
+                r.storage_bits as f64,
+                r.rep as f64,
+                r.accuracy,
+                r.train_secs,
+            ]
+        })
+        .collect();
+    write_rows_csv(
+        "buckets(0=bbit_ref),storage_bits,rep,accuracy,train_secs",
+        &rows,
+        &out_path(cfg, "bbit_vw_curve.csv"),
+    )?;
+
+    // Aggregated curve as JSON for the bench/acceptance tooling.
+    let points = aggregate(&recs);
+    let curve_json = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"buckets\": {}, \"storage_bits\": {}, \"acc_mean\": {:.6}, \
+                 \"acc_std\": {:.6}, \"train_secs_mean\": {:.6}}}",
+                p.buckets, p.storage_bits, p.acc_mean, p.acc_std, p.train_secs_mean
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
+    write_json_object(
+        &out_path(cfg, "BENCH_bbit_vw_curve.json"),
+        &[
+            ("experiment", json_string("bbit_vw_curve")),
+            ("k", k.to_string()),
+            ("b", b.to_string()),
+            ("matched_buckets", matched.to_string()),
+            ("c", "1.0".to_string()),
+            ("reps", cfg.reps.to_string()),
+            ("curve", format!("[{curve_json}]")),
+        ],
+    )?;
+
+    let table: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                if p.buckets == 0 {
+                    format!("bbit k={k} b={b}")
+                } else {
+                    format!("m={}", p.buckets)
+                },
+                p.storage_bits.to_string(),
+                format!("{:.4}", p.acc_mean),
+                format!("{:.4}", p.acc_std),
+                format!("{:.3}s", p.train_secs_mean),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("§7 bbit_vw curve @ k={k}, b={b} (matched m={matched})"),
+        &["series", "bits/ex", "acc", "std", "train"],
+        &table,
+    );
+    println!(
+        "\npaper §7: accuracy should climb toward the bbit reference as m \
+         grows past the matched-storage point m={matched}."
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_runner_writes_csv_and_json() {
+        let mut cfg = RunConfig::default();
+        cfg.n_docs = 120;
+        cfg.dim = 1 << 18;
+        cfg.vocab = 3_000;
+        cfg.mean_len = 40;
+        cfg.k_list = vec![32];
+        cfg.reps = 1;
+        cfg.out_dir = std::env::temp_dir()
+            .join(format!("bbml_bbitvw_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        run(&cfg).unwrap();
+        let json =
+            std::fs::read_to_string(out_path(&cfg, "BENCH_bbit_vw_curve.json")).unwrap();
+        assert!(json.contains("\"curve\": ["), "{json}");
+        assert!(json.contains("\"acc_mean\""), "{json}");
+        let csv = std::fs::read_to_string(out_path(&cfg, "bbit_vw_curve.csv")).unwrap();
+        assert!(csv.starts_with("buckets(0=bbit_ref)"), "{csv}");
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -10,10 +10,12 @@
 //! | `fig10`   | Fig. 10 / App. A approx-vs-exact | [`fig10::run`] |
 //! | `gvw`     | Figs. 11–14 / App. C G_vw ratios | [`gvw::run`] |
 //! | `lemma1`, `lemma2` | Lemma 1/2 variance checks | [`lemmas`] |
+//! | `bbitvw`  | §7 accuracy-vs-buckets variance curve | [`bbitvw::run`] |
 //!
 //! Every runner writes CSV series into `cfg.out_dir` and prints a console
 //! summary; EXPERIMENTS.md records paper-vs-measured.
 
+pub mod bbitvw;
 pub mod common;
 pub mod fig1_7;
 pub mod fig10;
@@ -27,7 +29,7 @@ use crate::coordinator::config::RunConfig;
 
 /// All experiment ids, in the order `experiment all` runs them.
 pub const ALL: &[&str] = &[
-    "fig10", "gvw", "lemma1", "lemma2", "fig1", "fig5", "tab51", "fig8", "fig9",
+    "fig10", "gvw", "lemma1", "lemma2", "fig1", "fig5", "tab51", "fig8", "fig9", "bbitvw",
 ];
 
 /// Dispatch one experiment id.
@@ -40,6 +42,7 @@ pub fn run(id: &str, cfg: &RunConfig) -> anyhow::Result<()> {
         "fig8" => fig8::run(cfg),
         "fig9" => fig9::run(cfg),
         "fig10" => fig10::run(cfg),
+        "bbitvw" | "bbit_vw" | "bbit_vw_curve" => bbitvw::run(cfg),
         "gvw" | "fig11" | "fig12" | "fig13" | "fig14" => gvw::run(cfg),
         "lemma1" => lemmas::run_lemma1(cfg),
         "lemma2" => lemmas::run_lemma2(cfg),

@@ -204,8 +204,9 @@ impl std::fmt::Display for Scheme {
 }
 
 /// Everything needed to build a [`FeatureMap`] — the config surface of the
-/// scheme registry.
-#[derive(Clone, Debug)]
+/// scheme registry, and (since the `ModelArtifact` format) the recorded
+/// identity of the encoder a saved model was trained over.
+#[derive(Clone, Debug, PartialEq)]
 pub struct FeatureMapSpec {
     pub scheme: Scheme,
     /// Input domain size Ω (the shingle space).
@@ -246,6 +247,20 @@ impl FeatureMapSpec {
             self.buckets
         } else {
             ((self.k * self.b as usize) / 32).max(1)
+        }
+    }
+
+    /// The layout the built encoder will emit — without constructing it
+    /// (the one copy of the scheme → layout rule next to the registry, so
+    /// artifact validation cannot drift from [`Self::build`]).
+    pub fn layout(&self) -> SketchLayout {
+        match self.scheme {
+            Scheme::Bbit => SketchLayout::PackedBbit { k: self.k, b: self.b },
+            Scheme::Vw => SketchLayout::SparseF32 { k: self.k },
+            Scheme::ProjNormal | Scheme::ProjSparse => SketchLayout::DenseF32 { k: self.k },
+            Scheme::BbitVw => SketchLayout::DenseF32 {
+                k: self.vw_buckets(),
+            },
         }
     }
 
@@ -581,6 +596,21 @@ mod tests {
             .map(|&v| v as f32)
             .collect();
         assert_eq!(scratch.dense(), want.as_slice());
+    }
+
+    #[test]
+    fn spec_layout_matches_built_encoder() {
+        // The no-build layout rule must agree with what build() emits for
+        // every scheme — this is what ModelArtifact validation leans on.
+        for scheme in Scheme::ALL {
+            let spec = FeatureMapSpec::new(scheme, 1 << 16, 16, 4, 3);
+            assert_eq!(spec.layout(), spec.build().layout(), "{scheme}");
+        }
+        let custom = FeatureMapSpec {
+            buckets: 9,
+            ..FeatureMapSpec::new(Scheme::BbitVw, 1 << 16, 16, 4, 3)
+        };
+        assert_eq!(custom.layout(), custom.build().layout());
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub mod logreg;
 pub mod metrics;
 pub mod sgd;
 
+pub use sgd::{SgdCore, SgdLoss};
+
 use crate::data::sparse::SparseBinaryDataset;
 use crate::hashing::bbit::BbitSignatureMatrix;
 use crate::hashing::sketch::{F32Matrix, SketchMatrix};

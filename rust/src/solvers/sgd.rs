@@ -9,6 +9,142 @@
 use super::{Features, LinearModel};
 use crate::rng::Xoshiro256;
 
+/// The per-row loss the cyclic-epoch SGD core optimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SgdLoss {
+    /// Hinge subgradient — the Pegasos SVM update.
+    Hinge,
+    /// Logistic gradient on the same η_t = 1/(λt) schedule.
+    Logistic,
+}
+
+impl SgdLoss {
+    /// The byte a checkpoint records for this loss.
+    pub fn code(self) -> u8 {
+        match self {
+            Self::Hinge => 0,
+            Self::Logistic => 1,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown bytes.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(Self::Hinge),
+            1 => Some(Self::Logistic),
+            _ => None,
+        }
+    }
+}
+
+/// The epoch-SGD state machine shared verbatim by the disk, in-memory and
+/// resumable-session drivers (bit-identity across all of them depends on
+/// there being exactly one `step`).
+///
+/// Every field is part of the model state a checkpoint must capture: the
+/// weights AND the lazy scale, step counter and averaging accumulator —
+/// restoring them all is what makes a resumed run continue the identical
+/// float-op sequence. The fields are `pub(crate)` so the checkpoint codec
+/// in [`crate::coordinator::session`] can serialize them exactly.
+pub struct SgdCore {
+    pub(crate) loss: SgdLoss,
+    pub(crate) lambda: f64,
+    pub(crate) w: Vec<f32>,
+    /// Lazy scaling: actual weights are `w · w_scale`.
+    pub(crate) w_scale: f64,
+    pub(crate) t: usize,
+    pub(crate) total_steps: usize,
+    pub(crate) avg: Option<Vec<f64>>,
+    pub(crate) avg_count: usize,
+}
+
+impl SgdCore {
+    pub fn new(loss: SgdLoss, dim: usize, lambda: f64, total_steps: usize, average: bool) -> Self {
+        Self {
+            loss,
+            lambda,
+            w: vec![0.0f32; dim],
+            w_scale: 1.0,
+            t: 0,
+            total_steps,
+            avg: if average { Some(vec![0.0f64; dim]) } else { None },
+            avg_count: 0,
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> usize {
+        self.t
+    }
+
+    /// The λt schedule's denominator n·epochs this core was sized for.
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    /// One SGD step on row `i` of `feats` (mirrors [`train_pegasos`]'s
+    /// inner loop, minus the random row sampling and the ball projection —
+    /// and with it the incremental ‖w‖² bookkeeping, so each update is one
+    /// dot + one axpy pass). Generic over [`Features`]: packed stores step
+    /// through the virtual expansion, dense stores through their f32 rows.
+    pub fn step<Ft: Features>(&mut self, feats: &Ft, i: usize) {
+        self.t += 1;
+        let eta = 1.0 / (self.lambda * self.t as f64);
+        let y = feats.label(i) as f64;
+        let margin = y * feats.dot(i, &self.w) * self.w_scale;
+
+        // w ← (1 − η λ) w  [+ s·x_i];  shrink = 1 − 1/t zeroes w at t = 1.
+        let shrink = 1.0 - eta * self.lambda;
+        if shrink <= 0.0 {
+            self.w.iter_mut().for_each(|x| *x = 0.0);
+            self.w_scale = 1.0;
+        } else {
+            self.w_scale *= shrink;
+        }
+        let s = match self.loss {
+            SgdLoss::Hinge => {
+                if margin < 1.0 {
+                    eta * y
+                } else {
+                    0.0
+                }
+            }
+            // η·y·σ(−margin); exp overflow saturates s to 0, which is the
+            // correct limit for confidently-classified rows.
+            SgdLoss::Logistic => eta * y / (1.0 + margin.exp()),
+        };
+        if s != 0.0 {
+            feats.axpy(i, s / self.w_scale, &mut self.w);
+        }
+        // Re-materialize the lazy scale before f32 head-room runs out.
+        if self.w_scale < 1e-4 {
+            for x in self.w.iter_mut() {
+                *x = (*x as f64 * self.w_scale) as f32;
+            }
+            self.w_scale = 1.0;
+        }
+        // Suffix averaging over the second half of all steps.
+        if let Some(a) = self.avg.as_mut() {
+            if self.t > self.total_steps / 2 {
+                for (aj, &wj) in a.iter_mut().zip(&self.w) {
+                    *aj += wj as f64 * self.w_scale;
+                }
+                self.avg_count += 1;
+            }
+        }
+    }
+
+    /// Final dense weights (averaged iterate when enabled).
+    pub fn into_weights(self) -> Vec<f32> {
+        match self.avg {
+            Some(a) if self.avg_count > 0 => {
+                a.iter().map(|&x| (x / self.avg_count as f64) as f32).collect()
+            }
+            _ => self.w.iter().map(|&x| (x as f64 * self.w_scale) as f32).collect(),
+        }
+    }
+}
+
 /// Pegasos options.
 #[derive(Clone, Debug)]
 pub struct PegasosOptions {
@@ -204,6 +340,36 @@ mod tests {
             peg.objective,
             dcd_obj
         );
+    }
+
+    #[test]
+    fn sgd_loss_codes_roundtrip() {
+        for loss in [SgdLoss::Hinge, SgdLoss::Logistic] {
+            assert_eq!(SgdLoss::from_code(loss.code()), Some(loss));
+        }
+        assert_eq!(SgdLoss::from_code(9), None);
+    }
+
+    #[test]
+    fn core_learns_and_reports_steps() {
+        let ds = toy(100, 50, 7);
+        let lambda = 1.0 / ds.n() as f64;
+        let total = 40 * ds.n();
+        let mut core = SgdCore::new(SgdLoss::Hinge, 50, lambda, total, true);
+        for _ in 0..40 {
+            for i in 0..ds.n() {
+                core.step(&ds, i);
+            }
+        }
+        assert_eq!(core.steps(), total);
+        assert_eq!(core.total_steps(), total);
+        let w = core.into_weights();
+        let model = LinearModel {
+            w,
+            iters: total,
+            objective: 0.0,
+        };
+        assert!(model.accuracy(&ds) > 0.9, "acc {}", model.accuracy(&ds));
     }
 
     #[test]

@@ -325,6 +325,193 @@ fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<SketchMatrix> {
     )))
 }
 
+/// Write a framed blob file — the shared envelope of the non-shard store
+/// formats (CKPT checkpoints, MODEL artifacts): a fixed 32-byte header
+/// (`magic`, version, payload length, CRC-32 of the payload, reserved
+/// zeros) followed by the payload. Returns total bytes written.
+///
+/// ```text
+/// offset  size  field
+/// ------  ----  -------------------------------------------
+///      0     8  magic           (caller-chosen, e.g. b"BBCKPT\0\0")
+///      8     4  version         u32 LE
+///     12     4  reserved flags  zero
+///     16     8  payload_len     u64 LE
+///     24     4  payload_crc32   u32 LE (CRC-32 of the payload)
+///     28     4  reserved        zero
+///     32     …  payload
+/// ```
+pub fn write_framed_file(
+    path: &Path,
+    magic: [u8; 8],
+    version: u32,
+    payload: &[u8],
+) -> io::Result<usize> {
+    let mut hdr = [0u8; FRAMED_HEADER_LEN];
+    hdr[0..8].copy_from_slice(&magic);
+    hdr[8..12].copy_from_slice(&version.to_le_bytes());
+    hdr[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    hdr[24..28].copy_from_slice(&crc32(payload).to_le_bytes());
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&hdr)?;
+    f.write_all(payload)?;
+    f.flush()?;
+    Ok(FRAMED_HEADER_LEN + payload.len())
+}
+
+/// Fixed header size of [`write_framed_file`] blobs.
+pub const FRAMED_HEADER_LEN: usize = 32;
+
+/// Read a [`write_framed_file`] blob back, verifying magic, version range,
+/// payload length and CRC. Returns `(version, payload)`; every failure is
+/// `InvalidData` (never a guess at corrupt state).
+pub fn read_framed_file(
+    path: &Path,
+    magic: [u8; 8],
+    max_version: u32,
+) -> io::Result<(u32, Vec<u8>)> {
+    let what = String::from_utf8_lossy(&magic)
+        .trim_end_matches('\0')
+        .to_string();
+    let mut bytes = std::fs::read(path)?;
+    if bytes.len() < FRAMED_HEADER_LEN {
+        return Err(bad(format!(
+            "{}: truncated {what} header ({} bytes)",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    if bytes[0..8] != magic {
+        return Err(bad(format!(
+            "{}: bad magic (not a {what} file)",
+            path.display()
+        )));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if !(1..=max_version).contains(&version) {
+        return Err(bad(format!(
+            "{}: unsupported {what} version {version} (want 1..={max_version})",
+            path.display()
+        )));
+    }
+    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(bytes[24..28].try_into().unwrap());
+    let stored = bytes.len() - FRAMED_HEADER_LEN;
+    if stored != payload_len {
+        return Err(bad(format!(
+            "{}: {what} payload is {stored} bytes, header says {payload_len}",
+            path.display(),
+        )));
+    }
+    if crc32(&bytes[FRAMED_HEADER_LEN..]) != crc {
+        return Err(bad(format!("{}: {what} payload CRC mismatch", path.display())));
+    }
+    // Hand the payload back without a second allocation (checkpoints carry
+    // full weight vectors — large): drop the header in place.
+    bytes.drain(..FRAMED_HEADER_LEN);
+    Ok((version, bytes))
+}
+
+/// Little-endian cursor over a framed payload: every read is
+/// length-checked, so a corrupt payload surfaces as `InvalidData` instead
+/// of a slice panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(bad(format!(
+                "payload truncated: want {n} more bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> io::Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// `n` f32 values (exact bit patterns).
+    pub fn f32_vec(&mut self, n: usize) -> io::Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| bad("implausible f32 count".into()))?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `n` f64 values (exact bit patterns).
+    pub fn f64_vec(&mut self, n: usize) -> io::Result<Vec<f64>> {
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| bad("implausible f64 count".into()))?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `n` u64 values.
+    pub fn u64_vec(&mut self, n: usize) -> io::Result<Vec<u64>> {
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| bad("implausible u64 count".into()))?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Assert the payload is fully consumed (trailing garbage is corruption).
+    pub fn finish(self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad(format!(
+                "payload has {} trailing bytes after offset {}",
+                self.buf.len() - self.pos,
+                self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Read and decode just the fixed 64-byte header of a shard file (cheap
+/// per-shard row counts for range partitioning — no payload I/O).
+pub fn read_shard_header(path: &Path) -> io::Result<ShardHeader> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = [0u8; HEADER_LEN];
+    f.read_exact(&mut buf).map_err(|e| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: truncated shard header ({e})", path.display()),
+        )
+    })?;
+    ShardHeader::decode(&buf)
+}
+
 /// Write one shard file (header + optionally gzip-wrapped payload).
 /// Returns the total bytes written. Bbit shards are framed as version 1 —
 /// byte-identical to every pre-v2 store.
@@ -635,6 +822,68 @@ mod tests {
         bytes.truncate(bytes.len() - 3);
         std::fs::write(&path, &bytes).unwrap();
         assert!(read_shard_file(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn framed_file_roundtrips_and_rejects_corruption() {
+        let magic = *b"BBTEST\0\0";
+        let payload: Vec<u8> = (0..200u16).map(|x| (x * 7) as u8).collect();
+        let path = tmp("framed");
+        let n = write_framed_file(&path, magic, 1, &payload).unwrap();
+        assert_eq!(n, FRAMED_HEADER_LEN + payload.len());
+        let (ver, back) = read_framed_file(&path, magic, 1).unwrap();
+        assert_eq!(ver, 1);
+        assert_eq!(back, payload);
+        // Wrong magic → InvalidData.
+        let err = read_framed_file(&path, *b"BBOTHER\0", 1).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Future version → InvalidData.
+        assert!(read_framed_file(&path, magic, 0).is_err());
+        // Flip a payload bit → CRC mismatch.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_framed_file(&path, magic, 1).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        // Truncation is caught by the length check.
+        bytes.truncate(bytes.len() - 5);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_framed_file(&path, magic, 1).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn byte_reader_checks_bounds_and_trailing_bytes() {
+        let mut buf = Vec::new();
+        buf.push(7u8);
+        buf.extend_from_slice(&42u32.to_le_bytes());
+        buf.extend_from_slice(&99u64.to_le_bytes());
+        buf.extend_from_slice(&1.5f64.to_bits().to_le_bytes());
+        buf.extend_from_slice(&2.5f32.to_le_bytes());
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 42);
+        assert_eq!(r.usize().unwrap(), 99);
+        assert_eq!(r.f64().unwrap(), 1.5);
+        assert_eq!(r.f32_vec(1).unwrap(), vec![2.5]);
+        // Reading past the end errors instead of panicking.
+        assert!(r.u64().is_err());
+        r.finish().unwrap();
+        // Trailing bytes are corruption.
+        let mut r2 = ByteReader::new(&buf);
+        r2.u8().unwrap();
+        assert!(r2.finish().is_err());
+    }
+
+    #[test]
+    fn shard_header_reads_without_payload() {
+        let m = sample_matrix(11, 4, 9, 8);
+        let path = tmp("hdr_only");
+        write_shard_file(&path, &SketchMatrix::Bbit(m), Scheme::Bbit, false).unwrap();
+        let hdr = read_shard_header(&path).unwrap();
+        assert_eq!((hdr.k, hdr.b, hdr.n_rows), (11, 4, 9));
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,209 @@
+//! Store merge/concat: combine independently-hashed shard stores into one.
+//!
+//! Distributed hashing runs (one corpus partition per node, or incremental
+//! re-hashes of new data) each produce their own store; training wants one.
+//! Because every shard file carries its full identity in the BBSHARD
+//! header (scheme, k, b, dtype, row count, payload CRC) and the sequence
+//! number lives only in the *filename*, merging is a pure byte-verbatim
+//! file copy with renumbered filenames — no decode, no re-encode, no
+//! re-compression — plus one combined manifest. Compatibility is validated
+//! up front: sources must agree on scheme, k and b (and therefore dtype),
+//! anything else is `InvalidData`. Row order of the merged store is source
+//! order (source 0's rows first), so a merge is exactly concatenation.
+
+use std::io;
+use std::path::Path;
+
+use super::reader::SigShardStore;
+use super::writer::{render_manifest, shard_path, StoreSummary, MANIFEST_NAME};
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Merge `sources` (in order) into a new store at `dst`. Refuses to
+/// overwrite an existing store at `dst`; rejects scheme/k/b disagreement
+/// between sources as `InvalidData`. The merged manifest records
+/// `gzip = 1` if *any* source was gzipped (decode is per-shard-header
+/// either way). Returns the merged store's summary.
+pub fn merge_stores(sources: &[&Path], dst: &Path) -> io::Result<StoreSummary> {
+    if sources.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "store merge needs at least one source store",
+        ));
+    }
+    let stores = sources
+        .iter()
+        .map(|p| SigShardStore::open(p))
+        .collect::<io::Result<Vec<_>>>()?;
+    let first = &stores[0];
+    for s in &stores[1..] {
+        if s.scheme() != first.scheme() || s.k() != first.k() || s.b() != first.b() {
+            return Err(bad(format!(
+                "cannot merge {} ({}, k={}, b={}) with {} ({}, k={}, b={}): \
+                 stores must agree on scheme, k and b",
+                s.dir().display(),
+                s.scheme(),
+                s.k(),
+                s.b(),
+                first.dir().display(),
+                first.scheme(),
+                first.k(),
+                first.b(),
+            )));
+        }
+    }
+    std::fs::create_dir_all(dst)?;
+    if dst.join(MANIFEST_NAME).exists() {
+        return Err(io::Error::new(
+            io::ErrorKind::AlreadyExists,
+            format!(
+                "refusing to overwrite existing signature store at {} \
+                 (remove the directory to rebuild)",
+                dst.display()
+            ),
+        ));
+    }
+    let mut seq = 0usize;
+    let mut stored_bytes = 0usize;
+    let mut packed_bytes = 0usize;
+    let mut n_rows = 0usize;
+    for s in &stores {
+        for i in 0..s.n_shards() {
+            stored_bytes += std::fs::copy(&shard_path(s.dir(), i), &shard_path(dst, seq))? as usize;
+            seq += 1;
+        }
+        n_rows += s.n_rows();
+        packed_bytes += s.packed_bytes();
+    }
+    let gzip = stores.iter().any(|s| s.gzip());
+    std::fs::write(
+        dst.join(MANIFEST_NAME),
+        render_manifest(
+            first.scheme(),
+            first.k(),
+            first.b(),
+            gzip,
+            seq,
+            n_rows,
+            packed_bytes,
+            stored_bytes,
+        ),
+    )?;
+    Ok(StoreSummary {
+        dir: dst.to_path_buf(),
+        n_shards: seq,
+        n_rows,
+        packed_bytes,
+        stored_bytes,
+    })
+}
+
+impl SigShardStore {
+    /// [`merge_stores`] as an associated constructor: concatenate the
+    /// sources into `dst` and open the result.
+    pub fn merge(sources: &[&Path], dst: &Path) -> io::Result<SigShardStore> {
+        merge_stores(sources, dst)?;
+        SigShardStore::open(dst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::bbit::BbitSignatureMatrix;
+    use crate::hashing::feature_map::{Scheme, SketchLayout};
+    use crate::hashing::sketch::SketchMatrix;
+    use crate::rng::Xoshiro256;
+    use crate::store::writer::ShardWriter;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bbml_merge_{}_{}", name, std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn build(dir: &Path, k: usize, b: u32, shard_rows: &[usize], gzip: bool, seed: u64) {
+        let mask = (1u32 << b) - 1;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut w =
+            ShardWriter::create(dir, Scheme::Bbit, SketchLayout::PackedBbit { k, b }, gzip)
+                .unwrap();
+        for (seq, &rows) in shard_rows.iter().enumerate() {
+            let mut m = BbitSignatureMatrix::new(k, b);
+            for _ in 0..rows {
+                let row: Vec<u16> = (0..k).map(|_| (rng.next_u32() & mask) as u16).collect();
+                m.push_row(&row, if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 });
+            }
+            w.write_shard(seq, &SketchMatrix::Bbit(m)).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    fn read_all(store: &SigShardStore) -> BbitSignatureMatrix {
+        let mut all = BbitSignatureMatrix::new(store.k(), store.b());
+        for s in 0..store.n_shards() {
+            all.append(store.read_shard(s).unwrap().as_bbit().unwrap());
+        }
+        all
+    }
+
+    #[test]
+    fn merge_concatenates_bit_identically() {
+        let (a, b_dir, dst) = (tmp("cat_a"), tmp("cat_b"), tmp("cat_dst"));
+        build(&a, 8, 4, &[5, 3], false, 1);
+        build(&b_dir, 8, 4, &[4], true, 2); // mixed gzip is fine
+        let sa = SigShardStore::open(&a).unwrap();
+        let sb = SigShardStore::open(&b_dir).unwrap();
+        let merged = SigShardStore::merge(&[a.as_path(), b_dir.as_path()], &dst).unwrap();
+        assert_eq!(merged.n_shards(), 3);
+        assert_eq!(merged.n_rows(), 12);
+        assert!(merged.gzip(), "any gzipped source marks the manifest");
+        let mut want = read_all(&sa);
+        want.append(&read_all(&sb));
+        let got = read_all(&merged);
+        assert_eq!(got.words(), want.words(), "merge must be pure concatenation");
+        assert_eq!(got.labels(), want.labels());
+        assert_eq!(
+            merged.stored_bytes(),
+            sa.stored_bytes() + sb.stored_bytes(),
+            "byte-verbatim copies"
+        );
+        for d in [&a, &b_dir, &dst] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn merge_rejects_shape_and_scheme_mismatch() {
+        let (a, b_dir, dst) = (tmp("rej_a"), tmp("rej_b"), tmp("rej_dst"));
+        build(&a, 8, 4, &[3], false, 1);
+        build(&b_dir, 8, 8, &[3], false, 2); // different b
+        let err = merge_stores(&[a.as_path(), b_dir.as_path()], &dst).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("agree on scheme"), "{err}");
+        assert!(
+            !dst.join(MANIFEST_NAME).exists(),
+            "rejected merge must not leave a store behind"
+        );
+        for d in [&a, &b_dir, &dst] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn merge_refuses_existing_destination_and_empty_sources() {
+        let (a, dst) = (tmp("ref_a"), tmp("ref_dst"));
+        build(&a, 4, 2, &[2], false, 1);
+        build(&dst, 4, 2, &[1], false, 2); // dst already a store
+        let err = merge_stores(&[a.as_path()], &dst).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::AlreadyExists);
+        let err = merge_stores(&[], &tmp("ref_none")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        for d in [&a, &dst] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+}

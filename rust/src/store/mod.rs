@@ -106,10 +106,79 @@
 //! bit-identical to the in-memory matrix for every scheme (property tested
 //! in `tests/integration_store.rs` and `tests/integration_schemes.rs`).
 
+//! # Framed blob formats (CKPT & MODEL)
+//!
+//! Two further store formats share one fixed 32-byte envelope (written by
+//! [`format::write_framed_file`], verified by [`format::read_framed_file`]
+//! — magic, version, payload length, CRC-32 of the payload):
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------------
+//!      0     8  magic            b"BBCKPT\0\0" (checkpoint) or
+//!                                b"BBMODEL\0" (model artifact)
+//!      8     4  version          u32, currently 1 for both formats
+//!     12     4  reserved         zero
+//!     16     8  payload_len      u64
+//!     24     4  payload_crc32    u32, CRC-32 (poly 0xEDB88320, reflected)
+//!                                of the payload
+//!     28     4  reserved         zero
+//!     32     …  payload
+//! ```
+//!
+//! Corruption anywhere (bad magic, unknown version, length disagreement,
+//! CRC mismatch, truncated or over-long payload fields) is `InvalidData` —
+//! a damaged checkpoint or model is never silently trained on or scored
+//! with.
+//!
+//! ## MODEL payload (version 1) — [`model::ModelArtifact`]
+//!
+//! The full [`FeatureMapSpec`] of the encoder that produced the training
+//! features, then the trained weights. All little-endian:
+//!
+//! ```text
+//! u8          scheme        Scheme::code (same registry as shard byte 52)
+//! u32         b             bits per value (bbit / bbit_vw; 0 otherwise)
+//! u64         dim           input domain Ω the encoder hashes from
+//! u64         k             sample width (permutations / buckets / projs)
+//! u64         buckets       bbit_vw output width (0 = matched storage)
+//! f64         s             sparse-projection fourth moment
+//! u64         seed          encoder seed (rebuilds the exact FeatureMap)
+//! u64         iters         solver iterations of the saved model
+//! f64         objective     final objective of the saved model
+//! u64         n_weights     must equal the spec's training dimension
+//! f32 × n_w   weights       IEEE-754 bit patterns, verbatim
+//! ```
+//!
+//! ## CKPT payload (version 1) — [`crate::coordinator::session`]
+//!
+//! The complete `TrainSession` state: store identity (validated against
+//! the store on resume), training options, progress counters, the current
+//! epoch's shard visit order, the shuffle RNG state and the full `SgdCore`
+//! (weights, lazy scale, step counter, averaging accumulator). The layout
+//! is documented field-by-field next to the codec in
+//! [`crate::coordinator::session`]; the invariant it exists to uphold:
+//! **resuming from any checkpoint replays the exact float-op sequence of
+//! the uninterrupted run** — weights and objective are bit-identical
+//! (property-tested in `tests/integration_session.rs`).
+//!
+//! # Merging stores
+//!
+//! [`merge::merge_stores`] concatenates compatible stores (same scheme, k,
+//! b) into a new one by byte-verbatim shard copies + one combined manifest
+//! — shard files carry no sequence number internally, so renumbering is a
+//! filename-only operation.
+//!
+//! [`FeatureMapSpec`]: crate::hashing::feature_map::FeatureMapSpec
+
 pub mod format;
+pub mod merge;
+pub mod model;
 pub mod reader;
 pub mod writer;
 
 pub use format::ShardHeader;
+pub use merge::merge_stores;
+pub use model::ModelArtifact;
 pub use reader::{ShardStream, SigShardStore, StreamedShard};
 pub use writer::{shard_path, ShardWriter, StoreSummary};

@@ -1,0 +1,293 @@
+//! [`ModelArtifact`]: a trained model plus the full identity of the
+//! encoder that produced its features, as one versioned, CRC-checked file.
+//!
+//! The `LinearModel` a trainer returns is only meaningful together with
+//! the [`FeatureMapSpec`] it was trained over — the weights live in the
+//! feature space that spec defines (the Theorem-2 expansion `k·2^b` for
+//! `bbit`, the bucket/projection width `k` for dense schemes). A saved
+//! artifact therefore bundles both, which is what makes `predict`
+//! end-to-end: raw libsvm rows → rebuild the recorded [`FeatureMap`] →
+//! encode → score, with nothing to pass on the command line but the model
+//! path. Scheme/shape mismatches (weights that do not fit the spec's
+//! training dimension, unknown scheme bytes, an input domain larger than
+//! the recorded one) are rejected as `InvalidData`, mirroring the BBSHARD
+//! header discipline.
+//!
+//! The on-disk framing is the shared [`format::write_framed_file`]
+//! envelope (`b"BBMODEL\0"` magic, version, payload CRC-32); the payload
+//! layout is documented byte-by-byte in [`crate::store`]'s module docs.
+//!
+//! [`FeatureMap`]: crate::hashing::feature_map::FeatureMap
+
+use std::io;
+use std::path::Path;
+
+use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
+use crate::solvers::LinearModel;
+
+use super::format;
+
+/// File magic of a model artifact.
+pub const MODEL_MAGIC: [u8; 8] = *b"BBMODEL\0";
+/// Current model-artifact format version.
+pub const MODEL_VERSION: u32 = 1;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("model artifact: {msg}"))
+}
+
+/// Validate a spec's shape the way `FeatureMapSpec::build` asserts it, but
+/// as `InvalidData` (artifact files are untrusted input, never panic), and
+/// return the training dimension its models live in.
+fn validated_train_dim(spec: &FeatureMapSpec) -> io::Result<usize> {
+    if spec.k == 0 {
+        return Err(bad(format!("invalid spec: k = 0 ({})", spec.scheme)));
+    }
+    match spec.scheme {
+        Scheme::Bbit | Scheme::BbitVw => {
+            if !(1..=16).contains(&spec.b) {
+                return Err(bad(format!(
+                    "invalid spec: scheme {} with b = {} (want 1..=16)",
+                    spec.scheme, spec.b
+                )));
+            }
+        }
+        _ => {}
+    }
+    if spec.dim == 0 {
+        return Err(bad("invalid spec: dim = 0".into()));
+    }
+    Ok(spec.layout().train_dim())
+}
+
+/// A self-describing trained model: the encoder spec and the weights it
+/// produced, saved/loaded as one CRC-checked file.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    /// The encoder identity (scheme, domain, k, b, buckets, s, seed) —
+    /// everything needed to rebuild the exact [`FeatureMap`] at predict
+    /// time.
+    ///
+    /// [`FeatureMap`]: crate::hashing::feature_map::FeatureMap
+    pub spec: FeatureMapSpec,
+    /// The trained weights (+ iteration count and final objective).
+    pub model: LinearModel,
+}
+
+impl ModelArtifact {
+    /// Bundle a trained model with the spec that produced its features.
+    /// Rejects (as `InvalidData`) weights whose length is not the spec's
+    /// training dimension — a mismatched pair is not a model.
+    pub fn new(spec: FeatureMapSpec, model: LinearModel) -> io::Result<Self> {
+        let dim = validated_train_dim(&spec)?;
+        if model.w.len() != dim {
+            return Err(bad(format!(
+                "{} weights for scheme {} that trains in dimension {dim} \
+                 (k={}, b={}, buckets={})",
+                model.w.len(),
+                spec.scheme,
+                spec.k,
+                spec.b,
+                spec.buckets
+            )));
+        }
+        Ok(Self { spec, model })
+    }
+
+    /// The recorded hashing scheme.
+    pub fn scheme(&self) -> Scheme {
+        self.spec.scheme
+    }
+
+    /// The feature dimension the weights live in.
+    pub fn train_dim(&self) -> usize {
+        self.model.w.len()
+    }
+
+    /// Reject (as `InvalidData`) a caller-asserted scheme that disagrees
+    /// with the recorded one — the CLI's `predict --scheme` guard.
+    pub fn assert_scheme(&self, want: Scheme) -> io::Result<()> {
+        if want != self.spec.scheme {
+            return Err(bad(format!(
+                "records scheme '{}', but scheme '{want}' was asserted",
+                self.spec.scheme
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the MODEL payload (see [`crate::store`] docs).
+    fn encode_payload(&self) -> Vec<u8> {
+        let s = &self.spec;
+        let mut out = Vec::with_capacity(64 + self.model.w.len() * 4);
+        out.push(s.scheme.code());
+        out.extend_from_slice(&s.b.to_le_bytes());
+        out.extend_from_slice(&s.dim.to_le_bytes());
+        out.extend_from_slice(&(s.k as u64).to_le_bytes());
+        out.extend_from_slice(&(s.buckets as u64).to_le_bytes());
+        out.extend_from_slice(&s.s.to_bits().to_le_bytes());
+        out.extend_from_slice(&s.seed.to_le_bytes());
+        out.extend_from_slice(&(self.model.iters as u64).to_le_bytes());
+        out.extend_from_slice(&self.model.objective.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.model.w.len() as u64).to_le_bytes());
+        for &w in &self.model.w {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Write the artifact (framed, CRC-checked). Returns bytes written.
+    pub fn save(&self, path: &Path) -> io::Result<usize> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        format::write_framed_file(path, MODEL_MAGIC, MODEL_VERSION, &self.encode_payload())
+    }
+
+    /// Read an artifact back, verifying the framing CRC and every shape
+    /// invariant (unknown scheme bytes, weight/spec dimension disagreement
+    /// and truncated payloads are all `InvalidData`).
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let (_, payload) = format::read_framed_file(path, MODEL_MAGIC, MODEL_VERSION)?;
+        let mut r = format::ByteReader::new(&payload);
+        let scheme_byte = r.u8()?;
+        let scheme = Scheme::from_code(scheme_byte)
+            .ok_or_else(|| bad(format!("unknown scheme byte {scheme_byte} — newer writer?")))?;
+        let b = r.u32()?;
+        let dim = r.u64()?;
+        let k = r.usize()?;
+        let buckets = r.usize()?;
+        let s = r.f64()?;
+        let seed = r.u64()?;
+        let iters = r.usize()?;
+        let objective = r.f64()?;
+        let n_w = r.usize()?;
+        let w = r.f32_vec(n_w)?;
+        r.finish()?;
+        let spec = FeatureMapSpec {
+            scheme,
+            dim,
+            k,
+            b,
+            buckets,
+            s,
+            seed,
+        };
+        Self::new(
+            spec,
+            LinearModel {
+                w,
+                iters,
+                objective,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bbml_model_{}_{}", name, std::process::id()))
+    }
+
+    fn sample(scheme: Scheme, k: usize, b: u32) -> ModelArtifact {
+        let spec = FeatureMapSpec::new(scheme, 1 << 20, k, b, 42);
+        let dim = spec.layout().train_dim();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let w: Vec<f32> = (0..dim).map(|_| rng.gen_f32() - 0.5).collect();
+        ModelArtifact::new(
+            spec,
+            LinearModel {
+                w,
+                iters: 1234,
+                objective: 0.321,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical_for_every_scheme() {
+        for scheme in Scheme::ALL {
+            let art = sample(scheme, 16, 4);
+            let path = tmp(&format!("rt_{}", scheme.name()));
+            art.save(&path).unwrap();
+            let back = ModelArtifact::load(&path).unwrap();
+            assert_eq!(back.spec, art.spec, "{scheme}");
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back.model.w), bits(&art.model.w), "{scheme}");
+            assert_eq!(back.model.iters, art.model.iters);
+            assert_eq!(
+                back.model.objective.to_bits(),
+                art.model.objective.to_bits()
+            );
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn new_rejects_weight_dimension_mismatch() {
+        let spec = FeatureMapSpec::new(Scheme::Bbit, 1 << 20, 16, 4, 1);
+        let err = ModelArtifact::new(
+            spec,
+            LinearModel {
+                w: vec![0.0; 17], // want 16·2^4 = 256
+                iters: 0,
+                objective: 0.0,
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn load_rejects_corruption_and_unknown_scheme() {
+        let art = sample(Scheme::Bbit, 8, 2);
+        let path = tmp("corrupt");
+        art.save(&path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+
+        // Payload bit flip → CRC mismatch.
+        let mut bytes = clean.clone();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("CRC"), "{err}");
+
+        // Truncation → length mismatch.
+        let mut short = clean.clone();
+        short.truncate(short.len() - 8);
+        std::fs::write(&path, &short).unwrap();
+        assert!(ModelArtifact::load(&path).is_err());
+
+        // Unknown scheme byte (payload offset 0) with a fixed-up CRC →
+        // rejected by the registry, not guessed at.
+        let mut unknown = clean.clone();
+        unknown[format::FRAMED_HEADER_LEN] = 9;
+        let crc = format::crc32(&unknown[format::FRAMED_HEADER_LEN..]);
+        unknown[24..28].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &unknown).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        assert!(err.to_string().contains("unknown scheme"), "{err}");
+
+        // Not a model file at all.
+        std::fs::write(&path, b"BBSHARD\0junk").unwrap();
+        assert!(ModelArtifact::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn assert_scheme_guards_mismatches() {
+        let art = sample(Scheme::Vw, 32, 0);
+        art.assert_scheme(Scheme::Vw).unwrap();
+        let err = art.assert_scheme(Scheme::Bbit).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

@@ -169,6 +169,13 @@ impl SigShardStore {
         self.train_dim()
     }
 
+    /// Row count of shard `i`, from its header alone (no payload I/O) —
+    /// what `SessionPlan` range partitioning sizes per-worker work with.
+    pub fn shard_rows(&self, i: usize) -> io::Result<usize> {
+        assert!(i < self.n_shards, "shard {i} out of {}", self.n_shards);
+        Ok(format::read_shard_header(&shard_path(&self.dir, i))?.n_rows)
+    }
+
     /// Decode shard `i` eagerly (no prefetch thread) — the random-access
     /// path for tests and tools; training goes through [`Self::stream`].
     pub fn read_shard(&self, i: usize) -> io::Result<SketchMatrix> {

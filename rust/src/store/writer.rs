@@ -28,6 +28,47 @@ pub fn shard_path(dir: &Path, seq: usize) -> PathBuf {
     dir.join(format!("shard-{seq:05}.bbs"))
 }
 
+/// Render a store manifest — the one copy of the format, shared by
+/// [`ShardWriter::finish`] and the store-merge tool. Bbit manifests stay
+/// byte-identical to version-1 stores: the scheme line only appears for
+/// dense schemes, and readers default a missing scheme to bbit.
+pub(crate) fn render_manifest(
+    scheme: Scheme,
+    k: usize,
+    b: u32,
+    gzip: bool,
+    n_shards: usize,
+    n_rows: usize,
+    packed_bytes: usize,
+    stored_bytes: usize,
+) -> String {
+    let version = format::wire_version(scheme);
+    let scheme_line = if scheme == Scheme::Bbit {
+        String::new()
+    } else {
+        format!("scheme = {}\n", scheme.name())
+    };
+    let stride = if scheme.is_dense() {
+        0
+    } else {
+        (k * b as usize).div_ceil(64)
+    };
+    format!(
+        "# bbml signature shard store\n\
+         version = {}\n\
+         {}k = {}\n\
+         b = {}\n\
+         stride_words = {}\n\
+         gzip = {}\n\
+         n_shards = {}\n\
+         n_rows = {}\n\
+         packed_bytes = {}\n\
+         stored_bytes = {}\n",
+        version, scheme_line, k, b, stride, gzip as u32, n_shards, n_rows, packed_bytes,
+        stored_bytes,
+    )
+}
+
 /// What a finished store looks like on disk.
 #[derive(Clone, Debug)]
 pub struct StoreSummary {
@@ -150,37 +191,11 @@ impl ShardWriter {
             }
         }
         let n_rows = self.rows_written();
-        let version = format::wire_version(self.scheme);
-        // Bbit manifests stay byte-identical to version-1 stores: the
-        // scheme line only appears for dense schemes, and readers default
-        // a missing scheme to bbit.
-        let scheme_line = if self.scheme == Scheme::Bbit {
-            String::new()
-        } else {
-            format!("scheme = {}\n", self.scheme.name())
-        };
-        let stride = if self.scheme.is_dense() {
-            0
-        } else {
-            (self.k * self.b as usize).div_ceil(64)
-        };
-        let manifest = format!(
-            "# bbml signature shard store\n\
-             version = {}\n\
-             {}k = {}\n\
-             b = {}\n\
-             stride_words = {}\n\
-             gzip = {}\n\
-             n_shards = {}\n\
-             n_rows = {}\n\
-             packed_bytes = {}\n\
-             stored_bytes = {}\n",
-            version,
-            scheme_line,
+        let manifest = render_manifest(
+            self.scheme,
             self.k,
             self.b,
-            stride,
-            self.gzip as u32,
+            self.gzip,
             self.shards.len(),
             n_rows,
             self.packed_bytes,

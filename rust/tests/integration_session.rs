@@ -1,0 +1,531 @@
+//! Model-lifecycle integration: checkpoint/resume bit-identity (property
+//! over algo × shuffle × row-shuffle × averaging), legacy-wrapper
+//! equivalence, partitioned training + weight-averaging merge, store
+//! merge, and end-to-end predict from a saved `ModelArtifact`.
+
+use std::path::{Path, PathBuf};
+
+use bbml::coordinator::pipeline::{
+    hash_dataset, hash_dataset_to_store, sketch_dataset, sketch_dataset_to_store,
+    PipelineOptions,
+};
+use bbml::coordinator::session::{CheckpointConfig, SessionPlan, TrainSession};
+use bbml::coordinator::stream_train::{
+    evaluate_stream, train_epochs_in_memory, train_stream, StreamAlgo, StreamTrainOptions,
+};
+use bbml::coordinator::{merge_weighted, predict_artifact, trainer};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::feature_map::{FeatureMapSpec, Scheme};
+use bbml::proptest_mini::check;
+use bbml::store::{merge_stores, ModelArtifact, SigShardStore};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bbml_isess_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn corpus_cfg(n: usize) -> SynthConfig {
+    SynthConfig {
+        n_docs: n,
+        dim: 1 << 20,
+        vocab: 5_000,
+        topic_size: 100,
+        mean_len: 50,
+        topic_mix: 0.5,
+        ..Default::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// List a checkpoint dir's named checkpoints in write order.
+fn checkpoint_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("ckpt-"))
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn resume_from_any_checkpoint_is_bit_identical() {
+    // THE acceptance criterion: a run interrupted at ANY checkpoint and
+    // resumed produces bit-identical weights and objective to the
+    // uninterrupted run — across both algorithms, shuffle on/off,
+    // row-shuffle on/off, averaging on/off.
+    let ds = generate_corpus(&corpus_cfg(130));
+    let popt = PipelineOptions {
+        threads: 4,
+        chunk: 13, // 130 = 10 shards
+        queue: 2,
+    };
+    let store_dir = tmp_dir("prop_store");
+    hash_dataset_to_store(&ds, 16, 4, 9, &popt, &store_dir, false).unwrap();
+    let store = SigShardStore::open(&store_dir).unwrap();
+
+    let case = std::sync::atomic::AtomicUsize::new(0);
+    check("ckpt resume bit-identity", 8, |rng| {
+        let opt = StreamTrainOptions {
+            algo: if rng.gen_range(2) == 0 {
+                StreamAlgo::Pegasos
+            } else {
+                StreamAlgo::LogRegSgd
+            },
+            c: 1.0,
+            epochs: 2 + rng.gen_range(2) as usize,
+            seed: rng.next_u64(),
+            shuffle: rng.gen_range(2) == 1,
+            row_shuffle: rng.gen_range(2) == 1,
+            prefetch: 3,
+            average: rng.gen_range(2) == 1,
+        };
+        let id = case.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let ckpt_dir = tmp_dir(&format!("prop_ckpt_{id}"));
+        let ckpt = CheckpointConfig::new(&ckpt_dir).every(1);
+
+        // Uninterrupted run (checkpointing must not perturb training).
+        let full = TrainSession::new(&store, opt.clone())
+            .unwrap()
+            .run(&store, Some(&ckpt))
+            .unwrap();
+        // The wrapper is the same machinery, bit for bit.
+        let plain = train_stream(&store, &opt).unwrap();
+        assert_eq!(bits(&full.model.w), bits(&plain.model.w), "{opt:?}");
+        assert_eq!(
+            full.model.objective.to_bits(),
+            plain.model.objective.to_bits()
+        );
+
+        // "Kill" at a random checkpoint, resume, run to completion.
+        let files = checkpoint_files(&ckpt_dir);
+        assert!(
+            files.len() >= opt.epochs * store.n_shards(),
+            "every shard and epoch boundary checkpointed: {} files",
+            files.len()
+        );
+        let pick = &files[rng.gen_range(files.len() as u64) as usize];
+        let resumed = TrainSession::resume(pick, &store)
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        assert_eq!(
+            bits(&resumed.model.w),
+            bits(&full.model.w),
+            "resume from {} must be bit-identical ({opt:?})",
+            pick.display()
+        );
+        assert_eq!(
+            resumed.model.objective.to_bits(),
+            full.model.objective.to_bits(),
+            "objective must be bit-identical"
+        );
+        assert_eq!(resumed.rows_seen, full.rows_seen, "rows_seen survives resume");
+        std::fs::remove_dir_all(&ckpt_dir).ok();
+    });
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+#[test]
+fn row_shuffle_changes_visits_but_keeps_the_single_shard_fixed_point() {
+    let ds = generate_corpus(&corpus_cfg(150));
+    let popt = PipelineOptions {
+        threads: 4,
+        chunk: 25,
+        queue: 2,
+    };
+    let (mem, _) = hash_dataset(&ds, 16, 4, 7, &popt);
+    let dir = tmp_dir("rowshuf");
+    hash_dataset_to_store(&ds, 16, 4, 7, &popt, &dir, false).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+    let base = StreamTrainOptions {
+        epochs: 3,
+        seed: 11,
+        shuffle: true,
+        prefetch: 3,
+        ..Default::default()
+    };
+    // Row shuffling changes the model (it is a real behavior change)…
+    let with = train_stream(
+        &store,
+        &StreamTrainOptions {
+            row_shuffle: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let without = train_stream(
+        &store,
+        &StreamTrainOptions {
+            row_shuffle: false,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert_ne!(
+        bits(&with.model.w),
+        bits(&without.model.w),
+        "row shuffling must actually permute multi-row shards"
+    );
+    // …is deterministic…
+    let again = train_stream(
+        &store,
+        &StreamTrainOptions {
+            row_shuffle: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert_eq!(bits(&with.model.w), bits(&again.model.w));
+    // …is inert when shard shuffling is off (bit-identical to the
+    // pre-session behavior, which the in-memory oracle still encodes)…
+    let off_a = train_stream(
+        &store,
+        &StreamTrainOptions {
+            shuffle: false,
+            row_shuffle: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let off_b = train_stream(
+        &store,
+        &StreamTrainOptions {
+            shuffle: false,
+            row_shuffle: false,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert_eq!(bits(&off_a.model.w), bits(&off_b.model.w));
+    let oracle = train_epochs_in_memory(
+        &mem,
+        &StreamTrainOptions {
+            shuffle: false,
+            row_shuffle: true,
+            ..base.clone()
+        },
+    );
+    assert_eq!(bits(&off_a.model.w), bits(&oracle.w));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Single-shard store: shuffle AND row-shuffle on, still the in-memory
+    // fixed point — the row permutation seed (epoch, seq=0) matches.
+    let dir1 = tmp_dir("rowshuf_single");
+    let popt1 = PipelineOptions {
+        threads: 2,
+        chunk: 4096, // one shard
+        queue: 2,
+    };
+    let (mem1, _) = hash_dataset(&ds, 16, 4, 7, &popt1);
+    hash_dataset_to_store(&ds, 16, 4, 7, &popt1, &dir1, false).unwrap();
+    let store1 = SigShardStore::open(&dir1).unwrap();
+    assert_eq!(store1.n_shards(), 1);
+    let streamed = train_stream(&store1, &base).unwrap();
+    let resident = train_epochs_in_memory(&mem1, &base);
+    assert_eq!(
+        bits(&streamed.model.w),
+        bits(&resident.w),
+        "single-shard store stays the fixed point with both shuffles on"
+    );
+    assert_eq!(
+        streamed.model.objective.to_bits(),
+        resident.objective.to_bits()
+    );
+    std::fs::remove_dir_all(&dir1).ok();
+}
+
+#[test]
+fn partitioned_workers_merge_into_a_working_model() {
+    let ds = generate_corpus(&corpus_cfg(300));
+    let popt = PipelineOptions {
+        threads: 4,
+        chunk: 30, // 10 shards
+        queue: 2,
+    };
+    let dir = tmp_dir("plan");
+    hash_dataset_to_store(&ds, 64, 8, 11, &popt, &dir, false).unwrap();
+    let store = SigShardStore::open(&dir).unwrap();
+    let plan = SessionPlan::for_store(&store);
+    let ranges = plan.partition(3);
+    assert_eq!(ranges.len(), 3);
+    assert_eq!(ranges.first().unwrap().start, 0);
+    assert_eq!(ranges.last().unwrap().end, store.n_shards());
+
+    let opt = StreamTrainOptions {
+        epochs: 80,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut parts = Vec::new();
+    let mut rows_covered = 0usize;
+    for r in ranges {
+        let sess = TrainSession::new_range(&store, opt.clone(), r.clone()).unwrap();
+        let report = sess.run(&store, None).unwrap();
+        rows_covered += report.rows_seen / opt.epochs;
+        parts.push((report.model, report.rows_seen / opt.epochs));
+    }
+    assert_eq!(rows_covered, store.n_rows(), "ranges tile every row");
+    let merged = merge_weighted(&parts);
+    assert_eq!(merged.w.len(), store.train_dim());
+    assert!(merged.w.iter().all(|x| x.is_finite()));
+    let (acc, rows) = evaluate_stream(&merged, &store, 3).unwrap();
+    assert_eq!(rows, store.n_rows());
+    assert!(
+        acc > 0.75,
+        "weight-averaged partitioned training should learn: acc {acc}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn merged_stores_train_like_the_concatenation() {
+    // Hash two halves of one corpus into separate stores (as independent
+    // nodes would), merge, and train — the merged store must behave as the
+    // single-store hash of the same rows, bit for bit.
+    let ds = generate_corpus(&corpus_cfg(200));
+    let (first, second) = ds.train_test_split(0.5, 3);
+    let popt = PipelineOptions {
+        threads: 2,
+        chunk: 16,
+        queue: 2,
+    };
+    let (d1, d2, dm, dw) = (
+        tmp_dir("m_src1"),
+        tmp_dir("m_src2"),
+        tmp_dir("m_dst"),
+        tmp_dir("m_whole"),
+    );
+    hash_dataset_to_store(&first, 16, 4, 9, &popt, &d1, false).unwrap();
+    hash_dataset_to_store(&second, 16, 4, 9, &popt, &d2, false).unwrap();
+    let merged = SigShardStore::merge(&[d1.as_path(), d2.as_path()], &dm).unwrap();
+    assert_eq!(merged.n_rows(), 200);
+
+    // The same rows hashed as one dataset: same hasher seed ⇒ the merged
+    // store must train bit-identically to it (shuffle off).
+    let mut both = first.clone();
+    for (row, label) in second.iter() {
+        both.push(bbml::data::sparse::SparseBinaryVec::from_indices(row.to_vec()), label);
+    }
+    hash_dataset_to_store(&both, 16, 4, 9, &popt, &dw, false).unwrap();
+    let whole = SigShardStore::open(&dw).unwrap();
+    let opt = StreamTrainOptions {
+        epochs: 3,
+        shuffle: false,
+        ..Default::default()
+    };
+    let a = train_stream(&merged, &opt).unwrap();
+    let b = train_stream(&whole, &opt).unwrap();
+    assert_eq!(
+        bits(&a.model.w),
+        bits(&b.model.w),
+        "merge must be pure concatenation, bit for bit"
+    );
+
+    // Rejections: a store of a different scheme cannot merge with bbit.
+    let spec = FeatureMapSpec::new(Scheme::Vw, first.dim(), 16, 0, 9);
+    let map = spec.build();
+    let dv = tmp_dir("m_vw");
+    sketch_dataset_to_store(&first, map.as_ref(), Scheme::Vw, &popt, &dv, false).unwrap();
+    let err = merge_stores(&[d1.as_path(), dv.as_path()], &tmp_dir("m_rej")).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    for d in [&d1, &d2, &dm, &dw, &dv] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn predict_end_to_end_from_saved_artifact() {
+    // The model lifecycle, end to end: train → save → load → predict on
+    // raw libsvm rows, for a packed scheme (bbit) and a dense one (vw).
+    let ds = generate_corpus(&corpus_cfg(400));
+    let (train, test) = ds.train_test_split(0.25, 5);
+    let popt = PipelineOptions::default();
+    for scheme in [Scheme::Bbit, Scheme::Vw] {
+        // bbit: 64 perms x 8 bits; vw: 256 buckets (the width the dense
+        // trainer tests already vouch for).
+        let k = if scheme == Scheme::Vw { 256 } else { 64 };
+        let spec = FeatureMapSpec::new(scheme, ds.dim(), k, 8, 11);
+        let map = spec.build();
+        let (sk_tr, _) = sketch_dataset(&train, map.as_ref(), &popt);
+        let (sk_te, _) = sketch_dataset(&test, map.as_ref(), &popt);
+        let out =
+            trainer::train_sketch(&sk_tr, trainer::Backend::SvmDcd, 1.0, 3, None, None).unwrap();
+        let (acc_direct, _) = trainer::evaluate_sketch(&out.model, &sk_te);
+
+        let art = ModelArtifact::new(spec, out.model).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "bbml_isess_model_{}_{}.bbm",
+            scheme.name(),
+            std::process::id()
+        ));
+        art.save(&path).unwrap();
+        let loaded = ModelArtifact::load(&path).unwrap();
+
+        // Round the test rows through the libsvm text format — the raw
+        // input `predict` consumes in production.
+        let libsvm_path = std::env::temp_dir().join(format!(
+            "bbml_isess_test_{}_{}.libsvm",
+            scheme.name(),
+            std::process::id()
+        ));
+        bbml::data::libsvm::write_libsvm(&test, &libsvm_path).unwrap();
+        let raw =
+            bbml::data::libsvm::read_libsvm(&libsvm_path, Some(loaded.spec.dim)).unwrap();
+        let pred = predict_artifact(&loaded, &raw, &popt).unwrap();
+        assert_eq!(pred.rows, test.n());
+        assert_eq!(
+            pred.accuracy.to_bits(),
+            acc_direct.to_bits(),
+            "{scheme}: predict-from-artifact ≡ direct evaluation"
+        );
+        assert!(pred.accuracy > 0.8, "{scheme}: acc {}", pred.accuracy);
+
+        // Scheme assertion mismatch → InvalidData.
+        let wrong = if scheme == Scheme::Bbit {
+            Scheme::Vw
+        } else {
+            Scheme::Bbit
+        };
+        let err = loaded.assert_scheme(wrong).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&libsvm_path).ok();
+    }
+}
+
+#[test]
+fn cli_lifecycle_train_save_predict_and_stream_resume() {
+    // The CI smoke path in-process: train --save-model, predict on the
+    // generated corpus file, and checkpoint → resume with equal
+    // weights_crc32 in the two reports.
+    let base = tmp_dir("cli");
+    let s = |v: &[&str]| -> Vec<String> { v.iter().map(|s| s.to_string()).collect() };
+    let corpus_dir = base.join("data");
+    let model_path = base.join("model.bbm");
+    bbml::cli::run_with(&s(&[
+        "generate",
+        "n_docs=150",
+        "dim=1048576",
+        "vocab=2000",
+        "mean_len=40",
+        &format!("out_dir={}", corpus_dir.display()),
+    ]))
+    .unwrap();
+    bbml::cli::run_with(&s(&[
+        "train",
+        "--scheme",
+        "bbit",
+        "--k",
+        "16",
+        "--b",
+        "4",
+        "--save-model",
+        model_path.to_str().unwrap(),
+        "n_docs=150",
+        "dim=1048576",
+        "vocab=2000",
+        "mean_len=40",
+        &format!("out_dir={}", base.join("train").display()),
+    ]))
+    .unwrap();
+    let pred_dir = base.join("pred");
+    bbml::cli::run_with(&s(&[
+        "predict",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--data",
+        corpus_dir.join("corpus.libsvm").to_str().unwrap(),
+        &format!("out_dir={}", pred_dir.display()),
+    ]))
+    .unwrap();
+    let report = std::fs::read_to_string(pred_dir.join("predict_report.json")).unwrap();
+    assert!(report.contains("\"scheme\": \"bbit\""), "{report}");
+    assert!(report.contains("\"rows\": 150"), "{report}");
+    // Asserting the wrong scheme on predict is refused.
+    assert!(bbml::cli::run_with(&s(&[
+        "predict",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--scheme",
+        "vw",
+    ]))
+    .is_err());
+
+    // Out-of-core: checkpointed full run, then resume from the epoch-1
+    // boundary; the reports must agree on the weights fingerprint.
+    let store_dir = base.join("sig");
+    bbml::cli::run_with(&s(&[
+        "hash-store",
+        "--k",
+        "16",
+        "--b",
+        "4",
+        "--chunk",
+        "48",
+        "--store",
+        store_dir.to_str().unwrap(),
+        "n_docs=150",
+        "dim=1048576",
+        "vocab=2000",
+        "mean_len=40",
+    ]))
+    .unwrap();
+    let ckpt_dir = base.join("ckpt");
+    let full_dir = base.join("full");
+    bbml::cli::run_with(&s(&[
+        "train-stream",
+        "--backend",
+        "pegasos",
+        "--epochs",
+        "2",
+        "--store",
+        store_dir.to_str().unwrap(),
+        "--checkpoint",
+        ckpt_dir.to_str().unwrap(),
+        "--ckpt-every",
+        "1",
+        &format!("out_dir={}", full_dir.display()),
+    ]))
+    .unwrap();
+    let resumed_dir = base.join("resumed");
+    bbml::cli::run_with(&s(&[
+        "train-stream",
+        "--store",
+        store_dir.to_str().unwrap(),
+        "--resume",
+        ckpt_dir.join("ckpt-e0001-s00000.ckpt").to_str().unwrap(),
+        &format!("out_dir={}", resumed_dir.display()),
+    ]))
+    .unwrap();
+    let full = std::fs::read_to_string(full_dir.join("stream_report.json")).unwrap();
+    let resumed = std::fs::read_to_string(resumed_dir.join("stream_report.json")).unwrap();
+    let crc_of = |text: &str| {
+        text.lines()
+            .find(|l| l.contains("weights_crc32"))
+            .unwrap()
+            .trim()
+            .trim_end_matches(',')
+            .rsplit(':')
+            .next()
+            .unwrap()
+            .trim()
+            .to_string()
+    };
+    assert_eq!(
+        crc_of(&full),
+        crc_of(&resumed),
+        "resumed weights fingerprint must match:\n{full}\n{resumed}"
+    );
+    assert!(resumed.contains("\"resumed\": true"), "{resumed}");
+    assert!(full.contains("\"resumed\": false"), "{full}");
+    std::fs::remove_dir_all(&base).ok();
+}

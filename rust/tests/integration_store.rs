@@ -146,6 +146,7 @@ fn streaming_training_is_bit_identical_to_in_memory() {
                 epochs: 3,
                 seed: 21,
                 shuffle: false,
+                row_shuffle: false,
                 prefetch: 3,
                 average,
             };
