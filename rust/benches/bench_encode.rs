@@ -1,0 +1,115 @@
+//! Encode-path latency: raw document set → packed b-bit signature words.
+//!
+//! Three questions, matching the fused-encode work:
+//!
+//! 1. **Lane width** — per-row fold-min cost of the per-permutation scalar
+//!    scan vs the 4-wide and 8-wide one-pass engines (`fold_min_into_x4`
+//!    vs `fold_min_into`), across k.
+//! 2. **Fused packing** — full encode via the legacy route (64-bit lanes →
+//!    `pack_lowest_bits` u16 detour → `push_row`) vs the fused route
+//!    (`signature_packed_into` + `push_row_from_lanes`), across b.
+//! 3. **Rows/s** — end-to-end encode throughput over a synthetic batch,
+//!    the number the ROADMAP perf note quotes.
+//!
+//! Results land in `results/BENCH_encode.{json,csv}` (median/p95 latency
+//! plus median-based items/s for the throughput entries). Set
+//! `BBML_BENCH_FAST=1` for a CI-sized run.
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::bbit::BbitSignatureMatrix;
+use bbml::hashing::minwise::MinwiseHasher;
+use bbml::hashing::pack_lowest_bits;
+use bbml::hashing::perm::PermutationBank;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = SynthConfig {
+        n_docs: 64,
+        dim: 1 << 24,
+        vocab: 30_000,
+        mean_len: 120,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let docs: Vec<Vec<u64>> = (0..ds.n()).map(|i| ds.row(i).to_vec()).collect();
+    let n_rows = docs.len() as u64;
+    println!(
+        "workload: {} docs, avg nnz {:.1}, dim 2^24",
+        docs.len(),
+        ds.avg_nnz()
+    );
+
+    // --- 1. lane width: scalar vs 4-wide vs 8-wide fold-min, across k ----
+    for k in [30usize, 64, 200, 500] {
+        let h = MinwiseHasher::new(cfg.dim, k, 1);
+        let bank = PermutationBank::new(cfg.dim, 1, k);
+        let mut lanes = Vec::new();
+
+        b.bench_throughput(&format!("fold/scalar k={k}"), n_rows, || {
+            for doc in &docs {
+                h.signature_scalar_into(black_box(doc), &mut lanes);
+            }
+            lanes.len()
+        });
+        b.bench_throughput(&format!("fold/x4 k={k}"), n_rows, || {
+            for doc in &docs {
+                lanes.clear();
+                lanes.resize(k, u64::MAX);
+                bank.fold_min_into_x4(black_box(doc), &mut lanes);
+            }
+            lanes.len()
+        });
+        // The production engine: 8-wide groups (SIMD when the
+        // `portable-simd` feature is on), 4-wide + scalar tails.
+        b.bench_throughput(&format!("fold/x8 k={k}"), n_rows, || {
+            for doc in &docs {
+                h.signature_batch_into(black_box(doc), &mut lanes);
+            }
+            lanes.len()
+        });
+    }
+
+    // --- 2. packing: legacy u16 detour vs fused lanes→words, across b ----
+    let k = 200usize;
+    let h = MinwiseHasher::new(cfg.dim, k, 1);
+    for bits in [1u32, 4, 8, 16] {
+        let mut lanes = Vec::new();
+        let mut words = Vec::new();
+
+        b.bench_throughput(&format!("encode/legacy k={k} b={bits}"), n_rows, || {
+            let mut m = BbitSignatureMatrix::new(k, bits);
+            for doc in &docs {
+                h.signature_batch_into(black_box(doc), &mut lanes);
+                m.push_row(&pack_lowest_bits(&lanes, bits), 0.0);
+            }
+            m.n()
+        });
+        b.bench_throughput(&format!("encode/fused k={k} b={bits}"), n_rows, || {
+            let mut m = BbitSignatureMatrix::new(k, bits);
+            for doc in &docs {
+                h.signature_packed_into(black_box(doc), bits, &mut lanes, &mut words);
+                m.push_packed_row(&words, 0.0);
+            }
+            m.n()
+        });
+    }
+
+    // --- 3. headline rows/s: the full fused encode at the paper's scale --
+    for (k, bits) in [(200usize, 4u32), (500, 1)] {
+        let h = MinwiseHasher::new(cfg.dim, k, 1);
+        let mut lanes = Vec::new();
+        let mut words = Vec::new();
+        b.bench_throughput(&format!("rows_per_sec/fused k={k} b={bits}"), n_rows, || {
+            let mut acc = 0u64;
+            for doc in &docs {
+                h.signature_packed_into(black_box(doc), bits, &mut lanes, &mut words);
+                acc ^= words[0];
+            }
+            acc
+        });
+    }
+
+    b.write_json("results/BENCH_encode.json").unwrap();
+    b.write_csv("results/BENCH_encode.csv").unwrap();
+}

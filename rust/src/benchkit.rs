@@ -1,11 +1,22 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
-//! Provides warmup + repeated timing with robust summary statistics, a
-//! `black_box` shim, and a tiny reporter that prints criterion-like lines:
+//! Provides warmup + repeated timing with tail-aware summary statistics
+//! (median/p10/p90/p95, not just mean), a `black_box` shim, and a tiny
+//! reporter that prints criterion-like lines:
 //!
 //! ```text
 //! hash/minwise/k=200      time: [ 1.21 ms  1.23 ms  1.27 ms ]  (median, p10..p90)
 //! ```
+//!
+//! **Warmup is always discarded**: every [`Bencher::bench`] call runs the
+//! closure for at least [`Bencher::MIN_WARMUP_ITERS`] iterations (and at
+//! least `warmup_time` wall-clock) before the first timed sample, so cold
+//! caches, lazy allocations and frequency ramp never contaminate the
+//! recorded distribution. Throughput benchmarks declare their per-iteration
+//! item count via [`Bencher::bench_throughput`], and the CSV/JSON writers
+//! emit derived `items_per_sec` (median-based) alongside the latency
+//! percentiles — `results/BENCH_encode.json` records encode rows/s this
+//! way.
 //!
 //! Used by every target in `rust/benches/` (all `harness = false`, so
 //! `cargo bench` drives them) and by the experiment harness for the timing
@@ -28,6 +39,9 @@ pub struct Stats {
     pub median: Duration,
     pub p10: Duration,
     pub p90: Duration,
+    /// Tail latency — what the encode-path acceptance numbers quote
+    /// alongside the median.
+    pub p95: Duration,
     pub min: Duration,
     pub max: Duration,
     pub std_dev: Duration,
@@ -56,10 +70,30 @@ impl Stats {
             median: pct(0.5),
             p10: pct(0.1),
             p90: pct(0.9),
+            p95: pct(0.95),
             min: samples[0],
             max: samples[n - 1],
             std_dev: Duration::from_secs_f64(var.sqrt()),
         }
+    }
+}
+
+/// One recorded benchmark: its name, the sample statistics, and (for
+/// throughput benchmarks) how many logical items one iteration processed.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub stats: Stats,
+    /// Items (rows, documents, …) per iteration — set by
+    /// [`Bencher::bench_throughput`], `None` for plain latency benches.
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchRecord {
+    /// Median-based throughput in items/s, when declared.
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items as f64 / self.stats.median.as_secs_f64().max(1e-12))
     }
 }
 
@@ -80,11 +114,11 @@ fn fmt_dur(d: Duration) -> String {
 pub struct Bencher {
     /// Target wall-clock spent measuring each benchmark.
     pub measure_time: Duration,
-    /// Wall-clock spent warming up.
+    /// Wall-clock spent warming up (always discarded; see module docs).
     pub warmup_time: Duration,
     /// Upper bound on measured iterations (keeps huge cases bounded).
     pub max_iters: usize,
-    results: Vec<(String, Stats)>,
+    results: Vec<BenchRecord>,
 }
 
 impl Default for Bencher {
@@ -105,12 +139,39 @@ impl Bencher {
         }
     }
 
+    /// Minimum warmup iterations before the first timed sample, regardless
+    /// of how quickly `warmup_time` elapses — the warmup-discard floor.
+    pub const MIN_WARMUP_ITERS: usize = 3;
+
     /// Time `f` (one logical iteration per call) and print a summary line.
-    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Stats {
-        // Warmup, also used to estimate per-iteration cost.
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) -> Stats {
+        self.bench_record(name, None, f).stats.clone()
+    }
+
+    /// [`Self::bench`] for a closure that processes `items_per_iter`
+    /// logical items (rows, documents, …) per call: the record additionally
+    /// carries the item count, the summary line and the CSV/JSON writers
+    /// report median-based items/s.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: u64,
+        f: impl FnMut() -> T,
+    ) -> Stats {
+        self.bench_record(name, Some(items_per_iter), f).stats.clone()
+    }
+
+    fn bench_record<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<u64>,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchRecord {
+        // Warmup — discarded from the recorded samples; also used to
+        // estimate per-iteration cost for the adaptive iteration count.
         let warm_start = Instant::now();
         let mut warm_iters = 0usize;
-        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+        while warm_start.elapsed() < self.warmup_time || warm_iters < Self::MIN_WARMUP_ITERS {
             black_box(f());
             warm_iters += 1;
             if warm_iters >= self.max_iters {
@@ -129,16 +190,25 @@ impl Bencher {
             samples.push(t.elapsed());
         }
         let stats = Stats::from_samples(samples);
+        let record = BenchRecord {
+            name: name.to_string(),
+            stats,
+            items_per_iter,
+        };
+        let rate = record
+            .items_per_sec()
+            .map(|r| format!("  {:.3e} items/s", r))
+            .unwrap_or_default();
         println!(
-            "{:<48} time: [{} {} {}]  ({} iters)",
+            "{:<48} time: [{} {} {}]  ({} iters){rate}",
             name,
-            fmt_dur(stats.p10),
-            fmt_dur(stats.median),
-            fmt_dur(stats.p90),
-            stats.n
+            fmt_dur(record.stats.p10),
+            fmt_dur(record.stats.median),
+            fmt_dur(record.stats.p90),
+            record.stats.n
         );
-        self.results.push((name.to_string(), stats.clone()));
-        stats
+        self.results.push(record);
+        self.results.last().unwrap()
     }
 
     /// Time a single execution of `f` (for long-running end-to-end cases).
@@ -147,34 +217,50 @@ impl Bencher {
         black_box(f());
         let d = t.elapsed();
         println!("{:<48} time: [{}]  (1 iter)", name, fmt_dur(d));
-        self.results
-            .push((name.to_string(), Stats::from_samples(vec![d])));
+        self.results.push(BenchRecord {
+            name: name.to_string(),
+            stats: Stats::from_samples(vec![d]),
+            items_per_iter: None,
+        });
         d
     }
 
     /// All recorded results, in execution order.
-    pub fn results(&self) -> &[(String, Stats)] {
+    pub fn results(&self) -> &[BenchRecord] {
         &self.results
     }
 
-    /// Write results as CSV (`name,median_ns,mean_ns,p10_ns,p90_ns,n`).
+    /// Write results as CSV
+    /// (`name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,iters,items_per_iter,items_per_sec`;
+    /// the throughput columns are empty for plain latency benches).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         use std::io::Write;
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "name,median_ns,mean_ns,p10_ns,p90_ns,iters")?;
-        for (name, s) in &self.results {
+        writeln!(
+            f,
+            "name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,iters,items_per_iter,items_per_sec"
+        )?;
+        for r in &self.results {
+            let s = &r.stats;
+            let (items, rate) = match (r.items_per_iter, r.items_per_sec()) {
+                (Some(i), Some(rate)) => (i.to_string(), format!("{rate:.3}")),
+                _ => (String::new(), String::new()),
+            };
             writeln!(
                 f,
-                "{},{},{},{},{},{}",
-                name,
+                "{},{},{},{},{},{},{},{},{}",
+                r.name,
                 s.median.as_nanos(),
                 s.mean.as_nanos(),
                 s.p10.as_nanos(),
                 s.p90.as_nanos(),
-                s.n
+                s.p95.as_nanos(),
+                s.n,
+                items,
+                rate
             )?;
         }
         Ok(())
@@ -182,11 +268,12 @@ impl Bencher {
 
     /// Write results as a JSON array (hand-rolled; serde is unavailable
     /// offline) — the machine-readable record the perf acceptance gates
-    /// read, e.g. `results/BENCH_kernel.json`:
+    /// read, e.g. `results/BENCH_kernel.json` or `results/BENCH_encode.json`:
     ///
     /// ```text
     /// [
     ///   {"name": "match_count/swar k=256 b=1", "median_ns": 512, ...},
+    ///   {"name": "encode/fused k=200 b=8", ..., "items_per_sec": 81000.0},
     ///   ...
     /// ]
     /// ```
@@ -197,18 +284,27 @@ impl Bencher {
         }
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "[")?;
-        for (idx, (name, s)) in self.results.iter().enumerate() {
+        for (idx, r) in self.results.iter().enumerate() {
+            let s = &r.stats;
             let sep = if idx + 1 == self.results.len() { "" } else { "," };
+            let throughput = match (r.items_per_iter, r.items_per_sec()) {
+                (Some(items), Some(rate)) => {
+                    format!(", \"items_per_iter\": {items}, \"items_per_sec\": {rate:.3}")
+                }
+                _ => String::new(),
+            };
             writeln!(
                 f,
                 "  {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \
-                 \"p10_ns\": {}, \"p90_ns\": {}, \"iters\": {}}}{}",
-                name.replace('\\', "\\\\").replace('"', "\\\""),
+                 \"p10_ns\": {}, \"p90_ns\": {}, \"p95_ns\": {}, \"iters\": {}{}}}{}",
+                r.name.replace('\\', "\\\\").replace('"', "\\\""),
                 s.median.as_nanos(),
                 s.mean.as_nanos(),
                 s.p10.as_nanos(),
                 s.p90.as_nanos(),
+                s.p95.as_nanos(),
                 s.n,
+                throughput,
                 sep
             )?;
         }
@@ -242,7 +338,58 @@ mod tests {
         let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
         let s = Stats::from_samples(samples);
         assert!(s.p10 <= s.median && s.median <= s.p90);
-        assert!(s.min <= s.p10 && s.p90 <= s.max);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.max);
+        assert!(s.min <= s.p10);
+        // 100 uniform samples: p95 = the 95th/96th value.
+        assert_eq!(s.p95, Duration::from_micros(95));
+    }
+
+    #[test]
+    fn bench_throughput_records_items_and_rate() {
+        std::env::set_var("BBML_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.measure_time = Duration::from_millis(5);
+        b.warmup_time = Duration::from_millis(1);
+        b.bench_throughput("tp/rows", 1000, || black_box(1 + 1));
+        b.bench("plain/latency", || black_box(2 + 2));
+        let recs = b.results();
+        assert_eq!(recs[0].items_per_iter, Some(1000));
+        assert!(recs[0].items_per_sec().unwrap() > 0.0);
+        assert_eq!(recs[1].items_per_iter, None);
+        assert!(recs[1].items_per_sec().is_none());
+        // Writers carry the throughput fields (and p95) through.
+        let dir = std::env::temp_dir();
+        let jpath = dir.join("bbml_benchkit_tp.json");
+        let cpath = dir.join("bbml_benchkit_tp.csv");
+        b.write_json(jpath.to_str().unwrap()).unwrap();
+        b.write_csv(cpath.to_str().unwrap()).unwrap();
+        let json = std::fs::read_to_string(&jpath).unwrap();
+        assert!(json.contains("\"items_per_iter\": 1000"));
+        assert!(json.contains("\"items_per_sec\":"));
+        assert!(json.contains("\"p95_ns\":"));
+        let csv = std::fs::read_to_string(&cpath).unwrap();
+        assert!(csv.starts_with(
+            "name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,iters,items_per_iter,items_per_sec"
+        ));
+        assert!(csv.contains("tp/rows"));
+        std::fs::remove_file(&jpath).ok();
+        std::fs::remove_file(&cpath).ok();
+    }
+
+    #[test]
+    fn warmup_runs_at_least_the_floor() {
+        std::env::set_var("BBML_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        // Zero warmup budget: the MIN_WARMUP_ITERS floor must still run
+        // (and be discarded) before sampling starts.
+        b.warmup_time = Duration::ZERO;
+        b.measure_time = Duration::from_millis(2);
+        let mut calls = 0u32;
+        let st = b.bench("warmup/floor", || {
+            calls += 1;
+            calls
+        });
+        assert!(calls as usize >= Bencher::MIN_WARMUP_ITERS + st.n);
     }
 
     #[test]

@@ -12,12 +12,17 @@
 //! per-worker [`SketchRow`] scratch, so the same machinery emits packed
 //! b-bit signatures, VW samples, random projections or the §7 bbit+VW
 //! combination — the paper's equal-storage comparison runs through one
-//! pipeline. Work is sharded in contiguous chunks tagged with sequence
-//! numbers; the collector pre-sizes the output and places each shard
-//! **zero-copy** at row offset `seq·chunk` the moment it arrives — no
-//! reordering buffer, no per-value re-pack — and the output is
-//! **bit-identical to the single-threaded run** for any thread count
-//! (tested).
+//! pipeline. For the packed scheme the worker loop is **fused end to
+//! end**: the encoder folds the k lane minima and packs them to b-bit row
+//! words in the scratch in one pass (`signature_packed_into`), and
+//! `push_encoded` copies those words into the shard verbatim — no 64-bit
+//! or u16 intermediate survives between encoder and shard. Work is sharded
+//! in contiguous chunks tagged with sequence numbers; the collector
+//! pre-sizes the output and places each shard **zero-copy** at row offset
+//! `seq·chunk` the moment it arrives — no reordering buffer, no per-value
+//! re-pack — and the output is **bit-identical to the single-threaded
+//! run** for any thread count (tested), and to the legacy three-buffer
+//! encode (`BBML_LEGACY_ENCODE=1`, asserted by CI on `weights_crc32`).
 //!
 //! Two sinks share the core:
 //!

@@ -38,13 +38,88 @@
 //! scalar `get_bits` path. [`BbitSignatureMatrix::match_count_scalar`]
 //! keeps that path callable for every b as the property-test reference for
 //! the SWAR kernels.
+//!
+//! # Fused encode (lanes → words in one pass)
+//!
+//! The encode hot path historically materialized every row three times:
+//! 64-bit lane buffer → [`pack_lowest_bits`] `u16` vector → packed row
+//! words via per-value `put_bits`. The fused path collapses the last two
+//! hops: [`pack_lanes_into_words`] truncates each 64-bit minimum to b bits
+//! and ORs it into position inside the stride words with a single running
+//! accumulator — one shift + OR per lane, one store per word, straddles
+//! handled by carrying the spill bits into the next accumulator. Entry
+//! points layered on it:
+//!
+//! * [`BbitSignatureMatrix::push_row_from_lanes`] — append a row straight
+//!   from the fold-min lane buffer (what `signature_matrix` and the kernel
+//!   SVM ride).
+//! * [`pack_lanes`] — pack into a caller-owned `Vec<u64>` scratch under the
+//!   in-place buffer contract (what `BbitMinwiseMap::encode_into` fills the
+//!   `SketchRow` packed-word scratch with).
+//! * [`BbitSignatureMatrix::push_packed_row`] — append an already-packed
+//!   row as a bare word copy (what `SketchMatrix::push_encoded` does, so
+//!   the pipeline workers never re-pack).
+//!
+//! [`pack_lowest_bits`] and [`BbitSignatureMatrix::push_row`] survive as
+//! the scalar property-test references: the fused path must stay
+//! bit-identical to `push_row(&pack_lowest_bits(lanes, b))` for every
+//! (b, k), including the empty-set sentinel rows the hasher emits.
 
 /// Extract the lowest `b` bits of each full hash value.
+///
+/// This is the *reference* truncation — the fused encode path
+/// ([`pack_lanes_into_words`]) never materializes this intermediate, and
+/// property tests pin the two against each other.
 #[inline]
 pub fn pack_lowest_bits(full: &[u64], b: u32) -> Vec<u16> {
     assert!((1..=16).contains(&b), "b must be in 1..=16");
     let mask = ((1u32 << b) - 1) as u64;
     full.iter().map(|&z| (z & mask) as u16).collect()
+}
+
+/// Fused lanes→words packer: truncate each 64-bit lane to its lowest `b`
+/// bits and OR it into position inside `out`, little-endian within the
+/// row, in a single pass with no intermediate buffer.
+///
+/// `out` must be zeroed and exactly `ceil(lanes.len()·b / 64)` words; pad
+/// bits beyond `lanes.len()·b` are left zero (the SWAR layout invariant).
+/// Values that straddle a word boundary (b ∤ 64) are split by carrying the
+/// spilled high bits into the next word's accumulator.
+pub fn pack_lanes_into_words(lanes: &[u64], b: u32, out: &mut [u64]) {
+    assert!((1..=16).contains(&b), "b must be in 1..=16");
+    let stride = (lanes.len() * b as usize).div_ceil(64);
+    assert_eq!(out.len(), stride, "out is {} words, want {stride}", out.len());
+    let b = b as usize;
+    let mask = (1u64 << b) - 1;
+    let mut acc = 0u64; // word being assembled
+    let mut off = 0usize; // bits of `acc` already filled, always < 64
+    let mut w = 0usize; // next word index in `out`
+    for &z in lanes {
+        let v = z & mask;
+        acc |= v << off;
+        off += b;
+        if off >= 64 {
+            out[w] = acc;
+            w += 1;
+            off -= 64;
+            // Spill: the high `off` bits of v that did not fit. off < b,
+            // so the shift amount b - off is in (0, b] and never 64.
+            acc = if off > 0 { v >> (b - off) } else { 0 };
+        }
+    }
+    if off > 0 {
+        out[w] = acc;
+    }
+}
+
+/// Pack `lanes` into a caller-owned word buffer under the in-place buffer
+/// contract: `out` is cleared and resized to the row stride, its capacity
+/// (and, once warm, its allocation) is reused across calls.
+pub fn pack_lanes(lanes: &[u64], b: u32, out: &mut Vec<u64>) {
+    let stride = (lanes.len() * b as usize).div_ceil(64);
+    out.clear();
+    out.resize(stride, 0);
+    pack_lanes_into_words(lanes, b, out);
 }
 
 /// Bit at the LSB of every 2-bit lane.
@@ -273,15 +348,45 @@ impl BbitSignatureMatrix {
         self.n += 1;
     }
 
+    /// Append a row straight from the 64-bit fold-min lane buffer:
+    /// truncate each lane to b bits and pack into the row words in one
+    /// fused pass ([`pack_lanes_into_words`]), no u16 intermediate.
+    pub fn push_row_from_lanes(&mut self, lanes: &[u64], label: f32) {
+        assert_eq!(lanes.len(), self.k, "row width {} != k {}", lanes.len(), self.k);
+        let start = self.words.len();
+        self.words.resize(start + self.stride, 0);
+        pack_lanes_into_words(lanes, self.b, &mut self.words[start..]);
+        self.labels.push(label);
+        self.n += 1;
+    }
+
     /// Append a row from full 64-bit minwise values (truncates to b bits).
+    /// Alias for [`Self::push_row_from_lanes`], kept under the historical
+    /// name for existing call sites.
+    #[inline]
     pub fn push_full_row(&mut self, full: &[u64], label: f32) {
-        let mask = ((1u32 << self.b) - 1) as u64;
-        assert_eq!(full.len(), self.k);
-        let base = self.n * self.stride * 64;
-        self.words.resize((self.n + 1) * self.stride, 0);
-        for (j, &z) in full.iter().enumerate() {
-            self.put_bits(base + j * self.b as usize, (z & mask) as u16);
-        }
+        self.push_row_from_lanes(full, label);
+    }
+
+    /// Append one already-packed row — exactly `stride_words` words with
+    /// the pad bits beyond `k·b` zero — as a bare word copy. This is the
+    /// [`SketchMatrix::push_encoded`](crate::hashing::sketch::SketchMatrix)
+    /// fast path: encoders pack once into the per-worker scratch, and the
+    /// shard matrix takes the words verbatim.
+    pub fn push_packed_row(&mut self, row_words: &[u64], label: f32) {
+        assert_eq!(
+            row_words.len(),
+            self.stride,
+            "packed row is {} words, want stride {}",
+            row_words.len(),
+            self.stride
+        );
+        let used = self.k * self.b as usize;
+        debug_assert!(
+            used % 64 == 0 || row_words[self.stride - 1] >> (used % 64) == 0,
+            "pad bits beyond k·b must be zero"
+        );
+        self.words.extend_from_slice(row_words);
         self.labels.push(label);
         self.n += 1;
     }
@@ -580,6 +685,66 @@ mod tests {
         let mut m = BbitSignatureMatrix::new(3, 2);
         m.push_full_row(&[12013, 25964, 20191], 1.0);
         assert_eq!(m.row(0), vec![1, 0, 3]);
+    }
+
+    #[test]
+    fn fused_pack_matches_put_bits_reference() {
+        // push_row_from_lanes must be bit-identical to the scalar
+        // pack_lowest_bits ∘ push_row reference, across straddling and
+        // exact-fit widths, multi-row, with high garbage bits in the lanes.
+        for b in [1u32, 2, 3, 4, 7, 8, 12, 16] {
+            for k in [1usize, 5, 13, 21, 64, 100] {
+                let mut rng = Xoshiro256::seed_from_u64(b as u64 * 131 + k as u64);
+                let mut fused = BbitSignatureMatrix::new(k, b);
+                let mut reference = BbitSignatureMatrix::new(k, b);
+                for i in 0..5 {
+                    let lanes: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+                    fused.push_row_from_lanes(&lanes, i as f32);
+                    reference.push_row(&pack_lowest_bits(&lanes, b), i as f32);
+                }
+                assert_eq!(fused.words(), reference.words(), "b={b} k={k}");
+                assert_eq!(fused.labels(), reference.labels());
+            }
+        }
+    }
+
+    #[test]
+    fn pack_lanes_reuses_buffer_in_place() {
+        let lanes: Vec<u64> = (0..21).map(|i| i * 0x9E37_79B9).collect();
+        let mut words = Vec::new();
+        pack_lanes(&lanes, 3, &mut words); // 63 bits -> 1 word
+        assert_eq!(words.len(), 1);
+        let ptr = words.as_ptr();
+        let cap = words.capacity();
+        // Re-pack a different row of the same shape: same allocation, and
+        // no stale bits from the previous contents survive the clear.
+        let lanes2 = vec![u64::MAX; 21];
+        pack_lanes(&lanes2, 3, &mut words);
+        assert_eq!(words.as_ptr(), ptr);
+        assert_eq!(words.capacity(), cap);
+        assert_eq!(words[0], (1u64 << 63) - 1, "21 lanes × 3 bits, all ones");
+    }
+
+    #[test]
+    fn push_packed_row_is_word_copy() {
+        let (k, b) = (13usize, 4u32);
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let lanes: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+        let mut words = Vec::new();
+        pack_lanes(&lanes, b, &mut words);
+        let mut via_copy = BbitSignatureMatrix::new(k, b);
+        via_copy.push_packed_row(&words, 1.0);
+        let mut via_lanes = BbitSignatureMatrix::new(k, b);
+        via_lanes.push_row_from_lanes(&lanes, 1.0);
+        assert_eq!(via_copy.words(), via_lanes.words());
+        assert_eq!(via_copy.row(0), pack_lowest_bits(&lanes, b));
+    }
+
+    #[test]
+    #[should_panic(expected = "packed row")]
+    fn push_packed_row_rejects_wrong_stride() {
+        let mut m = BbitSignatureMatrix::new(64, 4); // stride 4
+        m.push_packed_row(&[0u64; 3], 1.0);
     }
 
     #[test]

@@ -80,15 +80,23 @@ impl SketchLayout {
 /// and reused across rows (capacity survives, nothing is stolen — the
 /// PR-2 buffer contract).
 pub enum RowMut<'a> {
-    /// Packed layouts: the full 64-bit minwise lanes (cleared and resized
-    /// to k by the encoder; the matrix packs the low b bits on push).
-    Lanes(&'a mut Vec<u64>),
-    /// Dense layouts: the f32 output row (cleared and zero-resized to k by
-    /// the encoder), plus a 64-bit lane scratch for composite schemes
-    /// (`bbit_vw` signs its intermediate signature through it).
+    /// Packed layouts: the fused encode destination. The encoder fills
+    /// `lanes` with the full 64-bit minwise signature (len k) and `words`
+    /// with the finished word-aligned packed row (`ceil(k·b/64)` words,
+    /// pad bits zero) — the sink copies `words` verbatim, no re-pack.
+    Packed {
+        words: &'a mut Vec<u64>,
+        lanes: &'a mut Vec<u64>,
+    },
+    /// Dense layouts: the f32 output row (zeroed outside the written
+    /// support by the encoder), a 64-bit lane scratch for composite
+    /// schemes (`bbit_vw` signs its intermediate signature through it),
+    /// and a sparse `(bucket, value)` staging buffer that doubles as the
+    /// VW sparse path's touched-entry record (see [`VwFeatureMap`]).
     Dense {
         out: &'a mut Vec<f32>,
         lanes: &'a mut Vec<u64>,
+        pairs: &'a mut Vec<(u32, f32)>,
     },
 }
 
@@ -292,18 +300,37 @@ impl FeatureMapSpec {
 }
 
 /// `scheme = bbit`: k-permutation minwise signatures truncated to b bits —
-/// the paper's method, encoded through the one-pass k-lane engine.
+/// the paper's method, encoded through the one-pass k-lane engine and the
+/// fused lanes→words packer (`MinwiseHasher::signature_packed_into`).
+///
+/// Setting `BBML_LEGACY_ENCODE=1` at map construction keeps the old
+/// three-buffer route (lanes → `pack_lowest_bits` u16s → per-value
+/// `put_bits`) alive as a deployable oracle: CI hashes the same corpus
+/// both ways and asserts the train report's `weights_crc32` is unchanged.
 pub struct BbitMinwiseMap {
     hasher: MinwiseHasher,
     b: u32,
+    legacy: bool,
 }
 
 impl BbitMinwiseMap {
     pub fn new(dim: u64, k: usize, b: u32, seed: u64) -> Self {
+        let legacy = std::env::var("BBML_LEGACY_ENCODE").is_ok_and(|v| v == "1");
+        Self::with_encode_path(dim, k, b, seed, legacy)
+    }
+
+    /// The legacy three-buffer encoder, unconditionally — what tests use
+    /// to pin fused ≡ legacy without touching process-global env state.
+    pub fn with_legacy_encode(dim: u64, k: usize, b: u32, seed: u64) -> Self {
+        Self::with_encode_path(dim, k, b, seed, true)
+    }
+
+    fn with_encode_path(dim: u64, k: usize, b: u32, seed: u64, legacy: bool) -> Self {
         assert!((1..=16).contains(&b), "b must be in 1..=16");
         Self {
             hasher: MinwiseHasher::new(dim, k, seed),
             b,
+            legacy,
         }
     }
 
@@ -321,18 +348,48 @@ impl FeatureMap for BbitMinwiseMap {
     }
 
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
-        let RowMut::Lanes(out) = row else {
-            panic!("PackedBbit scheme encodes into a 64-bit lane buffer");
+        let RowMut::Packed { words, lanes } = row else {
+            panic!("PackedBbit scheme encodes into the packed-word scratch");
         };
-        self.hasher.signature_batch_into(set, out);
+        if self.legacy {
+            // Oracle route: signature → u16 truncation → per-value bit
+            // surgery through a one-row matrix. Allocates per row — that
+            // is the point; only the bits must match the fused path.
+            self.hasher.signature_batch_into(set, lanes);
+            let mut one = crate::hashing::bbit::BbitSignatureMatrix::new(self.hasher.k(), self.b);
+            one.push_row(&crate::hashing::bbit::pack_lowest_bits(lanes, self.b), 0.0);
+            words.clear();
+            words.extend_from_slice(one.words());
+        } else {
+            self.hasher.signature_packed_into(set, self.b, lanes, words);
+        }
     }
 }
 
 /// `scheme = vw`: VW feature hashing (paper §6.2, s = 1 Rademacher signs).
-/// Sparsity-preserving, hence the `SparseF32` layout.
+/// Sparsity-preserving, hence the `SparseF32` layout — and the encoder
+/// exploits it: when nnz ≪ k the row is built through the sort+merge
+/// sparse kernel ([`VwHasher::hash_binary_sparse_into`]) and only the
+/// previous row's touched entries are re-zeroed, so encode pays O(nnz),
+/// not O(k), per row. The `pairs` buffer of [`RowMut::Dense`] is both the
+/// staging area and the touched-entry record; the invariant it maintains
+/// is "`out` is all-zero outside the support recorded in `pairs`", and
+/// encoders that overwrite all k entries ([`ProjectionMap`], [`BbitVwMap`])
+/// clear `pairs` so a stale record can never leak between schemes.
+///
+/// Both branches produce bit-identical rows: s = 1 signs sum to small
+/// integers, exact in f32 in any addition order, and a bucket whose signs
+/// cancel holds +0.0 either way (the sparse kernel drops it; the dense
+/// scatter computes x + (−x) = +0.0).
 pub struct VwFeatureMap {
     hasher: VwHasher,
 }
+
+/// Route a VW row through the sparse kernel when `nnz · SPARSE_ROUTE_FACTOR
+/// ≤ k`: the sort+merge kernel costs ~nnz·log(nnz) plus a scattered write
+/// per surviving bucket, the dense scatter costs k zero-writes plus nnz
+/// scattered adds — the crossover sits safely above nnz/k = 1/4.
+const SPARSE_ROUTE_FACTOR: usize = 4;
 
 impl VwFeatureMap {
     pub fn new(k: usize, seed: u64) -> Self {
@@ -352,14 +409,38 @@ impl FeatureMap for VwFeatureMap {
     }
 
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
-        let RowMut::Dense { out, .. } = row else {
+        let RowMut::Dense { out, pairs, .. } = row else {
             panic!("VW encodes into a dense f32 row");
         };
-        out.clear();
-        out.resize(self.hasher.k, 0.0);
-        // Sums of ±1 signs stay small integers: f32 accumulation is exact.
-        for &i in set {
-            out[self.hasher.bucket(i)] += self.hasher.r(i) as f32;
+        let k = self.hasher.k;
+        // Re-zero the previous row: undo only its recorded support when
+        // the record is present and cheap; otherwise rebuild the full row
+        // (first use of the scratch, scratch last used by another scheme,
+        // or a support too wide for the undo to win).
+        if out.len() == k && !pairs.is_empty() && pairs.len() * 2 < k {
+            for &(j, _) in pairs.iter() {
+                out[j as usize] = 0.0;
+            }
+        } else {
+            out.clear();
+            out.resize(k, 0.0);
+        }
+        if set.len() * SPARSE_ROUTE_FACTOR <= k {
+            // Sparse path: pairs gets the merged (bucket, value) support.
+            self.hasher.hash_binary_sparse_into(set, pairs);
+            for &(j, v) in pairs.iter() {
+                out[j as usize] = v;
+            }
+        } else {
+            // Dense scatter; record touched buckets for the next row's
+            // undo (duplicates are fine — zeroing twice is zeroing).
+            pairs.clear();
+            pairs.reserve(set.len());
+            for &i in set {
+                let j = self.hasher.bucket(i);
+                out[j] += self.hasher.r(i) as f32;
+                pairs.push((j as u32, 0.0));
+            }
         }
     }
 }
@@ -389,9 +470,13 @@ impl FeatureMap for ProjectionMap {
     }
 
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
-        let RowMut::Dense { out, .. } = row else {
+        let RowMut::Dense { out, pairs, .. } = row else {
             panic!("random projections encode into a dense f32 row");
         };
+        // This encoder overwrites all k entries: invalidate the VW sparse
+        // path's touched-entry record so a later VW encode through the
+        // same scratch rebuilds from scratch.
+        pairs.clear();
         out.clear();
         out.reserve(self.proj.k);
         // Accumulate each output value in f64 (the same per-j op sequence
@@ -458,9 +543,12 @@ impl FeatureMap for BbitVwMap {
     }
 
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
-        let RowMut::Dense { out, lanes } = row else {
+        let RowMut::Dense { out, lanes, pairs } = row else {
             panic!("bbit_vw encodes into a dense f32 row (with lane scratch)");
         };
+        // Full-row overwrite: invalidate the VW touched-entry record (see
+        // ProjectionMap::encode_into).
+        pairs.clear();
         self.minwise.signature_batch_into(set, lanes);
         out.clear();
         out.resize(self.vw.k, 0.0);
@@ -534,6 +622,54 @@ mod tests {
         map.encode_into(&set, scratch.row_mut());
         let h = MinwiseHasher::new(1 << 20, 16, 7);
         assert_eq!(scratch.lanes(), h.signature(&set).as_slice());
+        // The fused encoder also leaves the finished packed row in the
+        // word scratch — identical to packing the signature by hand.
+        let mut want_words = Vec::new();
+        crate::hashing::bbit::pack_lanes(&h.signature(&set), 4, &mut want_words);
+        assert_eq!(scratch.packed_words(), want_words.as_slice());
+    }
+
+    #[test]
+    fn bbit_fused_and_legacy_encoders_are_bit_identical() {
+        // The CI smoke's unit-level twin: the BBML_LEGACY_ENCODE route and
+        // the fused route emit the same packed words for every row —
+        // including the empty-set sentinel — across straddling b values.
+        for b in [1u32, 3, 4, 7, 8, 16] {
+            let fused = BbitMinwiseMap::new(1 << 20, 21, b, 7);
+            let legacy = BbitMinwiseMap::with_legacy_encode(1 << 20, 21, b, 7);
+            let mut sf = SketchRow::new(&fused.layout());
+            let mut sl = SketchRow::new(&legacy.layout());
+            for set in [doc(3, 60), vec![], doc(4, 500)] {
+                fused.encode_into(&set, sf.row_mut());
+                legacy.encode_into(&set, sl.row_mut());
+                assert_eq!(
+                    sf.packed_words(),
+                    sl.packed_words(),
+                    "b={b} nnz={}",
+                    set.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_scratch_keeps_capacity_and_pointers_across_rows() {
+        // The PR-2 buffer contract extended to the fused path's word
+        // scratch: after the first encode, lanes and words never
+        // re-allocate, across ordinary rows and the empty-set sentinel.
+        let map = BbitMinwiseMap::new(1 << 20, 33, 12, 5); // stride 7 words
+        let mut scratch = SketchRow::new(&map.layout());
+        map.encode_into(&doc(1, 40), scratch.row_mut());
+        assert_eq!(scratch.packed_words().len(), (33 * 12usize).div_ceil(64));
+        let (lp, lc) = (scratch.lanes.as_ptr(), scratch.lanes.capacity());
+        let (wp, wc) = (scratch.words.as_ptr(), scratch.words.capacity());
+        for (i, set) in [doc(2, 80), vec![], doc(9, 7), doc(3, 300)].iter().enumerate() {
+            map.encode_into(set, scratch.row_mut());
+            assert_eq!(scratch.lanes.as_ptr(), lp, "row {i}: lane scratch moved");
+            assert_eq!(scratch.lanes.capacity(), lc, "row {i}");
+            assert_eq!(scratch.words.as_ptr(), wp, "row {i}: word scratch moved");
+            assert_eq!(scratch.words.capacity(), wc, "row {i}");
+        }
     }
 
     #[test]
@@ -547,6 +683,51 @@ mod tests {
         let h = VwHasher::new(64, 11);
         let want: Vec<f32> = h.hash_binary(&set).iter().map(|&v| v as f32).collect();
         // s = 1 signs sum to small integers: exact in f32 either way.
+        assert_eq!(scratch.dense(), want.as_slice());
+    }
+
+    #[test]
+    fn vw_sparse_and_dense_branches_are_bit_identical() {
+        // Document sizes straddling the nnz·4 ≤ k routing threshold must
+        // all reproduce the f64 reference — including through a *reused*
+        // scratch, where the sparse branch re-zeroes only the previous
+        // row's recorded support.
+        let k = 128;
+        let map = VwFeatureMap::new(k, 11);
+        let h = VwHasher::new(k, 11);
+        let mut scratch = SketchRow::new(&map.layout());
+        // Interleave sparse (≤ 32 nnz) and dense (> 32 nnz) rows through
+        // the same scratch in every adjacency order.
+        for len in [1usize, 10, 32, 33, 100, 5, 200, 0, 31, 64] {
+            let set = doc(1000 + len as u64, len.max(1));
+            let set = if len == 0 { vec![] } else { set };
+            map.encode_into(&set, scratch.row_mut());
+            let want: Vec<f32> = h.hash_binary(&set).iter().map(|&v| v as f32).collect();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(scratch.dense()),
+                bits(&want),
+                "nnz={} (bit-exact incl. cancelled buckets)",
+                set.len()
+            );
+        }
+    }
+
+    #[test]
+    fn vw_scratch_survives_other_schemes_invalidating_the_record() {
+        // A projection map overwrites all k entries of the shared scratch;
+        // its pairs-clear must force the next VW row to rebuild instead of
+        // trusting a stale touched-entry record.
+        let k = 64;
+        let vw = VwFeatureMap::new(k, 3);
+        let proj = ProjectionMap::new(k, ProjectionKind::Gaussian, 5);
+        let h = VwHasher::new(k, 3);
+        let mut scratch = SketchRow::new(&vw.layout());
+        let small = doc(7, 5); // sparse route both times
+        vw.encode_into(&small, scratch.row_mut());
+        proj.encode_into(&doc(8, 40), scratch.row_mut()); // trashes the row
+        vw.encode_into(&small, scratch.row_mut());
+        let want: Vec<f32> = h.hash_binary(&small).iter().map(|&v| v as f32).collect();
         assert_eq!(scratch.dense(), want.as_slice());
     }
 

@@ -10,23 +10,40 @@
 //! [`MinwiseHasher::signature_batch_into`] computes all k lane minima in a
 //! **single scan of the set**: elements stream through in small L1-resident
 //! blocks, and each block is mixed through the [`PermutationBank`]'s lanes
-//! four at a time with the running minima held in registers
-//! ([`PermutationBank::fold_min_into`]). The per-element cost is unchanged
-//! (k mixes either way), but the *data* is fetched from memory once instead
-//! of k times — the paper's "one scan of the data" preprocessing claim
-//! (§9), realized at the kernel level rather than per permutation. The old
-//! per-permutation scan survives as
-//! [`MinwiseHasher::signature_scalar_into`]: it is the reference oracle the
-//! property tests pin the batched engine against, bit for bit.
+//! in 8-wide groups with the running minima held in registers
+//! ([`PermutationBank::fold_min_into`]; 4-wide and scalar groups mop up
+//! ragged tails, and `--features portable-simd` swaps the 8-wide group
+//! onto `std::simd`). The per-element cost is unchanged (k mixes either
+//! way), but the *data* is fetched from memory once instead of k times —
+//! the paper's "one scan of the data" preprocessing claim (§9), realized
+//! at the kernel level rather than per permutation. Two oracles survive
+//! for the property tests: [`MinwiseHasher::signature_scalar_into`] (the
+//! per-permutation scan) and [`PermutationBank::fold_min_into_x4`] (the
+//! previous 4-wide engine), both bit-identical to the hot path.
+//!
+//! # The fused encode path
+//!
+//! b-bit consumers never need the 64-bit signature as an output — only the
+//! lowest b bits of each lane, packed. [`MinwiseHasher::signature_packed_into`]
+//! therefore goes from raw set to word-aligned packed row in one fused
+//! pass: fold-min into the caller's lane scratch, then a SWAR lanes→words
+//! pack ([`super::bbit::pack_lanes`]) straight into the caller's word
+//! scratch — no `u16` intermediate, no per-value bit surgery.
+//! [`MinwiseHasher::signature_matrix`] rides the same packer via
+//! [`BbitSignatureMatrix::push_row_from_lanes`]. The legacy three-buffer
+//! route (lanes → `pack_lowest_bits` → `push_row`) survives only as the
+//! property-test reference.
 //!
 //! # Buffer ownership
 //!
 //! Every `*_into` method **fills the caller's buffer in place** (clear +
-//! resize to k) and returns nothing: the buffer's capacity survives the
-//! call, so hot loops hash n rows with zero allocations after the first.
-//! (An earlier revision returned `std::mem::take(buf)`, which stole the
-//! caller's allocation and silently re-allocated on every call despite its
-//! "reuse" doc — the buffer-reuse test now pins the contract.)
+//! resize) and returns nothing: the buffer's capacity survives the call,
+//! so hot loops hash n rows with zero allocations after the first. This
+//! holds for both buffers of the fused path — the lane scratch (len k) and
+//! the packed-word scratch (len `ceil(k·b/64)`). (An earlier revision
+//! returned `std::mem::take(buf)`, which stole the caller's allocation and
+//! silently re-allocated on every call despite its "reuse" doc — the
+//! buffer-reuse tests now pin the contract.)
 
 use super::bbit::BbitSignatureMatrix;
 use super::perm::{Permutation, PermutationBank, Permuter};
@@ -132,9 +149,27 @@ impl MinwiseHasher {
         out
     }
 
+    /// Fused encode: raw set → packed b-bit row words in one pass. Fills
+    /// `lanes` with the k-lane signature (fold-min engine) and `words`
+    /// with the word-aligned packed row (`ceil(k·b/64)` words, pad bits
+    /// zero), both under the in-place buffer contract. This is what
+    /// `BbitMinwiseMap::encode_into` runs per row — the `u16` intermediate
+    /// of the legacy three-buffer path is gone.
+    pub fn signature_packed_into(
+        &self,
+        set: &[u64],
+        b: u32,
+        lanes: &mut Vec<u64>,
+        words: &mut Vec<u64>,
+    ) {
+        self.signature_batch_into(set, lanes);
+        super::bbit::pack_lanes(lanes, b, words);
+    }
+
     /// Hash every set through the batched engine and truncate into a packed
-    /// b-bit matrix — one shared signature buffer across all rows, so the
-    /// n-row build allocates nothing per row.
+    /// b-bit matrix — one shared lane buffer across all rows and the fused
+    /// lanes→words packer per row, so the n-row build allocates nothing
+    /// per row and never materializes a `u16` intermediate.
     pub fn signature_matrix<S: AsRef<[u64]>>(
         &self,
         b: u32,
@@ -146,7 +181,7 @@ impl MinwiseHasher {
         let mut buf = Vec::with_capacity(self.k());
         for (s, &y) in sets.iter().zip(labels) {
             self.signature_batch_into(s.as_ref(), &mut buf);
-            m.push_full_row(&buf, y);
+            m.push_row_from_lanes(&buf, y);
         }
         m
     }
@@ -296,6 +331,30 @@ mod tests {
             assert_eq!(sig, h2.signature_scalar(&set), "set {set:?}");
         }
         assert_eq!(h2.signature(&[0, 1]), vec![0u64; 16]);
+    }
+
+    #[test]
+    fn signature_packed_into_matches_legacy_route_and_reuses_buffers() {
+        use crate::hashing::bbit::pack_lowest_bits;
+        let h = MinwiseHasher::new(1 << 16, 21, 6);
+        for b in [1u32, 3, 4, 8, 12] {
+            let mut lanes = Vec::new();
+            let mut words = Vec::new();
+            // Warm the buffers, then pin pointer + capacity across reuse,
+            // including the empty-set sentinel row.
+            h.signature_packed_into(&[5, 9, 1000], b, &mut lanes, &mut words);
+            let (lp, lc) = (lanes.as_ptr(), lanes.capacity());
+            let (wp, wc) = (words.as_ptr(), words.capacity());
+            for set in [vec![5u64, 9, 1000], vec![], (0..80u64).collect()] {
+                h.signature_packed_into(&set, b, &mut lanes, &mut words);
+                // Legacy three-buffer reference: sig → u16s → put_bits row.
+                let mut reference = BbitSignatureMatrix::new(21, b);
+                reference.push_row(&pack_lowest_bits(&h.signature(&set), b), 0.0);
+                assert_eq!(words, reference.row_words(0), "b={b} set len {}", set.len());
+            }
+            assert_eq!((lanes.as_ptr(), lanes.capacity()), (lp, lc), "lane scratch b={b}");
+            assert_eq!((words.as_ptr(), words.capacity()), (wp, wc), "word scratch b={b}");
+        }
     }
 
     #[test]

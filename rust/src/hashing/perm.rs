@@ -179,6 +179,15 @@ impl Permuter for Permutation {
 /// set itself is read from memory exactly once per signature.
 const ELEM_BLOCK: usize = 32;
 
+/// Lane-group width of the hot fold-min engine: 8 independent mix chains
+/// per element. The mix round is a serial dependency chain of ~8 ops, so
+/// wider groups expose more instruction-level parallelism until register
+/// pressure bites; 8 × (4 keys + 1 minimum) = 40 live u64s still fits
+/// comfortably in 16 GPRs once the compiler re-materializes keys from the
+/// hoisted locals. [`PermutationBank::fold_min_into_x4`] keeps the
+/// previous 4-wide engine as the mid-width oracle and benchmark baseline.
+const LANE_GROUP: usize = 8;
+
 /// A bank of `k` simulated permutations of the same domain in
 /// struct-of-arrays layout: key slot `s` of lane `j` lives at `keys[s][j]`,
 /// so the four key arrays are each contiguous across lanes. All lanes share
@@ -189,8 +198,9 @@ const ELEM_BLOCK: usize = 32;
 ///
 /// [`PermutationBank::fold_min_into`] is the one-pass k-lane signature
 /// engine: it folds per-lane running minima over a set in a single scan of
-/// the data (element blocks × 4-lane groups, minima held in registers)
-/// instead of the k re-scans of the per-permutation path.
+/// the data (element blocks × width-parameterized lane groups, 8-wide in
+/// the hot loop, minima held in registers) instead of the k re-scans of
+/// the per-permutation path.
 #[derive(Clone, Debug)]
 pub struct PermutationBank {
     d: u64,
@@ -248,54 +258,134 @@ impl PermutationBank {
         apply_keys(x, &self.lane_keys(j), self.mask, self.half_bits, self.d)
     }
 
+    /// One element block × one `L`-wide lane group: fold the block's
+    /// minima into `mins[j..j+L]`. `L` is a compile-time width, so the
+    /// inner lane loops fully unroll — keys are hoisted into a local array
+    /// and the running minima stay in registers for the whole block.
+    #[inline(always)]
+    fn fold_block<const L: usize>(
+        &self,
+        block: &[u64],
+        j: usize,
+        mins: &mut [u64],
+        mask: u64,
+        hb: u32,
+        d: u64,
+    ) {
+        let keys: [[u64; 4]; L] = std::array::from_fn(|l| self.lane_keys(j + l));
+        let mut m: [u64; L] = std::array::from_fn(|l| mins[j + l]);
+        for &x in block {
+            for l in 0..L {
+                m[l] = m[l].min(apply_keys(x, &keys[l], mask, hb, d));
+            }
+        }
+        mins[j..j + L].copy_from_slice(&m);
+    }
+
     /// Fold `mins[j] = min(mins[j], min_{x ∈ set} π_j(x))` for every lane
     /// in **one pass over `set`** (`mins.len()` must be `k`; callers seed
     /// it with `u64::MAX` or the minima folded so far).
     ///
     /// §Perf: elements stream through in [`ELEM_BLOCK`]-sized blocks; for
-    /// each block the lanes are walked in groups of four whose running
-    /// minima live in registers, and whose 16 keys are hoisted out of the
-    /// element loop. The four mix chains are independent, so they overlap
-    /// in the pipeline (the mix itself is serial; cross-lane ILP replaces
-    /// the cross-element ILP of the per-permutation path). Each element is
+    /// each block the lanes are walked in width-parameterized groups
+    /// ([`Self::fold_block`]) — [`LANE_GROUP`]-wide (8) while they last,
+    /// one 4-wide group for the mid tail, scalar for the rest. The mix
+    /// chains inside a group are independent, so they overlap in the
+    /// pipeline (the mix itself is serial; cross-lane ILP replaces the
+    /// cross-element ILP of the per-permutation path). Each element is
     /// fetched from memory once — the block is L1-hot for all k lanes —
     /// which is what the old `k`-scan layout could not guarantee for
-    /// corpora larger than cache.
+    /// corpora larger than cache. With the off-by-default `portable-simd`
+    /// feature (nightly), the 8-wide group runs on `std::simd::u64x8`
+    /// instead, with masked-select cycle walking for bit-identity.
     pub fn fold_min_into(&self, set: &[u64], mins: &mut [u64]) {
         let k = self.k();
         assert_eq!(mins.len(), k, "mins width {} != k {}", mins.len(), k);
         let (mask, hb, d) = (self.mask, self.half_bits, self.d);
         for block in set.chunks(ELEM_BLOCK) {
             let mut j = 0usize;
-            while j + 4 <= k {
-                let ks0 = self.lane_keys(j);
-                let ks1 = self.lane_keys(j + 1);
-                let ks2 = self.lane_keys(j + 2);
-                let ks3 = self.lane_keys(j + 3);
-                let (mut m0, mut m1, mut m2, mut m3) =
-                    (mins[j], mins[j + 1], mins[j + 2], mins[j + 3]);
-                for &x in block {
-                    m0 = m0.min(apply_keys(x, &ks0, mask, hb, d));
-                    m1 = m1.min(apply_keys(x, &ks1, mask, hb, d));
-                    m2 = m2.min(apply_keys(x, &ks2, mask, hb, d));
-                    m3 = m3.min(apply_keys(x, &ks3, mask, hb, d));
-                }
-                mins[j] = m0;
-                mins[j + 1] = m1;
-                mins[j + 2] = m2;
-                mins[j + 3] = m3;
+            while j + LANE_GROUP <= k {
+                #[cfg(feature = "portable-simd")]
+                self.fold_group8_simd(block, j, mins);
+                #[cfg(not(feature = "portable-simd"))]
+                self.fold_block::<LANE_GROUP>(block, j, mins, mask, hb, d);
+                j += LANE_GROUP;
+            }
+            if j + 4 <= k {
+                self.fold_block::<4>(block, j, mins, mask, hb, d);
                 j += 4;
             }
-            // Ragged lane tail (k not a multiple of the lane width).
-            for (jj, m) in mins.iter_mut().enumerate().skip(j) {
-                let ks = self.lane_keys(jj);
-                let mut acc = *m;
-                for &x in block {
-                    acc = acc.min(apply_keys(x, &ks, mask, hb, d));
-                }
-                *m = acc;
+            // Ragged lane tail (fewer than 4 lanes left).
+            while j < k {
+                self.fold_block::<1>(block, j, mins, mask, hb, d);
+                j += 1;
             }
         }
+    }
+
+    /// The 4-wide engine the hot path shipped with before the 8-wide
+    /// groups landed — kept as the mid-width bit-identity oracle and the
+    /// benchmark baseline (`bench_encode` reports scalar vs x4 vs x8).
+    pub fn fold_min_into_x4(&self, set: &[u64], mins: &mut [u64]) {
+        let k = self.k();
+        assert_eq!(mins.len(), k, "mins width {} != k {}", mins.len(), k);
+        let (mask, hb, d) = (self.mask, self.half_bits, self.d);
+        for block in set.chunks(ELEM_BLOCK) {
+            let mut j = 0usize;
+            while j + 4 <= k {
+                self.fold_block::<4>(block, j, mins, mask, hb, d);
+                j += 4;
+            }
+            while j < k {
+                self.fold_block::<1>(block, j, mins, mask, hb, d);
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Portable-SIMD 8-wide lane group — compiled only under the off-by-default
+/// `portable-simd` cargo feature (requires a nightly toolchain for
+/// `#![feature(portable_simd)]`, see `lib.rs`). Bit-identity with the
+/// scalar group holds by construction: the mix is the same arithmetic
+/// element-wise (`Simd<u64, 8>` multiply wraps, shifts and xors are
+/// lane-wise), and cycle walking re-mixes only the lanes still outside
+/// [0, d) via masked select, exactly like the scalar per-lane `while`.
+#[cfg(feature = "portable-simd")]
+impl PermutationBank {
+    #[inline(always)]
+    fn fold_group8_simd(&self, block: &[u64], j: usize, mins: &mut [u64]) {
+        use std::simd::prelude::*;
+        let k0 = u64x8::from_slice(&self.keys[0][j..j + 8]);
+        let k1 = u64x8::from_slice(&self.keys[1][j..j + 8]);
+        let k2 = u64x8::from_slice(&self.keys[2][j..j + 8]);
+        let k3 = u64x8::from_slice(&self.keys[3][j..j + 8]);
+        let mask = u64x8::splat(self.mask);
+        let hb = u64x8::splat(self.half_bits as u64);
+        let d = u64x8::splat(self.d);
+        let mix = |mut x: u64x8| -> u64x8 {
+            x ^= k1 & mask;
+            x = (x * k0) & mask;
+            x ^= (x >> hb) & mask;
+            x = (x * k2) & mask;
+            x ^= k3 & mask;
+            x &= mask;
+            x ^= x >> hb;
+            (x * k0) & mask
+        };
+        let mut m = u64x8::from_slice(&mins[j..j + 8]);
+        for &x in block {
+            let mut y = mix(u64x8::splat(x));
+            loop {
+                let walking = y.simd_ge(d);
+                if !walking.any() {
+                    break;
+                }
+                y = walking.select(mix(y), y);
+            }
+            m = m.simd_min(y);
+        }
+        m.copy_to_slice(&mut mins[j..j + 8]);
     }
 }
 
@@ -374,6 +464,37 @@ mod tests {
             for (j, &m) in mins.iter().enumerate() {
                 let want = set.iter().map(|&x| bank.apply_lane(j, x)).min().unwrap();
                 assert_eq!(m, want, "k={k} lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_min_engines_agree_across_lane_widths() {
+        // The 8-wide hot engine, the 4-wide oracle, and the per-lane apply
+        // must produce identical minima for every k (ragged tails on both
+        // sides of both group widths) — including when `mins` arrives
+        // partially folded rather than all-MAX.
+        let d = 1u64 << 20;
+        for k in [1usize, 3, 4, 5, 7, 8, 9, 11, 12, 15, 16, 20, 23] {
+            let bank = PermutationBank::new(d, 31, k);
+            let set_a: Vec<u64> = (0..45).map(|t| (t * 2654435761) % d).collect();
+            let set_b: Vec<u64> = (0..33).map(|t| (t * 997 + 5) % d).collect();
+            let mut m8 = vec![u64::MAX; k];
+            let mut m4 = vec![u64::MAX; k];
+            bank.fold_min_into(&set_a, &mut m8);
+            bank.fold_min_into_x4(&set_a, &mut m4);
+            // Fold a second set into the partially-folded minima.
+            bank.fold_min_into(&set_b, &mut m8);
+            bank.fold_min_into_x4(&set_b, &mut m4);
+            assert_eq!(m8, m4, "k={k}: 8-wide vs 4-wide");
+            for (j, &m) in m8.iter().enumerate() {
+                let want = set_a
+                    .iter()
+                    .chain(&set_b)
+                    .map(|&x| bank.apply_lane(j, x))
+                    .min()
+                    .unwrap();
+                assert_eq!(m, want, "k={k} lane {j}: engine vs per-lane apply");
             }
         }
     }

@@ -12,11 +12,16 @@
 //!   `32·k` bits per row) that VW, the random projections and the §7
 //!   bbit+VW combination produce.
 //!
-//! [`SketchRow`] is the reusable per-worker encode buffer: it owns both a
-//! 64-bit lane buffer (minwise signatures) and a dense f32 row, hands the
-//! active one to a [`FeatureMap`](super::feature_map::FeatureMap) as a
+//! [`SketchRow`] is the reusable per-worker encode buffer: it owns a
+//! 64-bit lane buffer (minwise signatures), a packed-word row (the fused
+//! b-bit encode destination), a dense f32 row, and a sparse `(bucket,
+//! value)` staging buffer for the VW sparse path, hands the active ones to
+//! a [`FeatureMap`](super::feature_map::FeatureMap) as a
 //! [`RowMut`](super::feature_map::RowMut), and is pushed into a
-//! [`SketchMatrix`] without any per-row allocation.
+//! [`SketchMatrix`] without any per-row allocation. For packed layouts
+//! the encoder fills `words` with the finished row, so
+//! [`SketchMatrix::push_encoded`] is a bare word copy
+//! ([`BbitSignatureMatrix::push_packed_row`]) — no re-pack at the sink.
 
 use super::bbit::BbitSignatureMatrix;
 use super::feature_map::{RowMut, SketchLayout};
@@ -255,10 +260,11 @@ impl SketchMatrix {
     }
 
     /// Append one encoded row from a worker's scratch buffer (the buffer
-    /// variant must match the matrix variant).
+    /// variant must match the matrix variant). Packed rows arrive already
+    /// packed in `row.words` — this is a word copy, not a re-pack.
     pub fn push_encoded(&mut self, row: &SketchRow, label: f32) {
         match self {
-            Self::Bbit(m) => m.push_full_row(&row.lanes, label),
+            Self::Bbit(m) => m.push_packed_row(&row.words, label),
             Self::Dense(m) => m.push_row(&row.dense, label),
         }
     }
@@ -332,13 +338,31 @@ impl SketchMatrix {
     }
 }
 
-/// A reusable one-row encode buffer: owns both the 64-bit lane buffer
-/// (minwise signatures; also the intermediate of the §7 bbit+VW
-/// combination) and the dense f32 row. One `SketchRow` per pipeline worker
-/// serves every row it hashes — zero allocations after the first fill.
+/// A reusable one-row encode buffer: owns the 64-bit lane buffer (minwise
+/// signatures; also the intermediate of the §7 bbit+VW combination), the
+/// packed-word row the fused b-bit encoder emits, the dense f32 row, and
+/// the sparse `(bucket, value)` staging buffer of the VW sparse path. One
+/// `SketchRow` per pipeline worker serves every row it hashes — zero
+/// allocations after the first fill, and each buffer obeys the in-place
+/// reuse contract (capacity survives every encode).
+///
+/// A `SketchRow` is scratch for **one** [`FeatureMap`]: the VW sparse path
+/// records which dense entries it touched in `pairs` and undoes only those
+/// on the next row, so interleaving encoders of different dense schemes
+/// through one row requires them to invalidate the record (they do — see
+/// `feature_map.rs`), but sharing one scratch across maps concurrently is
+/// still a bug, same as before this buffer existed.
+///
+/// [`FeatureMap`]: super::feature_map::FeatureMap
 pub struct SketchRow {
     pub(crate) lanes: Vec<u64>,
+    /// Fused-encode destination: the finished word-aligned packed row
+    /// (`ceil(k·b/64)` words, pad bits zero) for packed layouts.
+    pub(crate) words: Vec<u64>,
     pub(crate) dense: Vec<f32>,
+    /// VW sparse staging: the `(bucket, value)` pairs of the current row,
+    /// which double as the touched-entry record for sparse re-zeroing.
+    pub(crate) pairs: Vec<(u32, f32)>,
     packed: bool,
 }
 
@@ -346,7 +370,9 @@ impl SketchRow {
     pub fn new(layout: &SketchLayout) -> Self {
         Self {
             lanes: Vec::new(),
+            words: Vec::new(),
             dense: Vec::new(),
+            pairs: Vec::new(),
             packed: layout.is_packed(),
         }
     }
@@ -357,11 +383,15 @@ impl SketchRow {
     /// [`FeatureMap`]: super::feature_map::FeatureMap
     pub fn row_mut(&mut self) -> RowMut<'_> {
         if self.packed {
-            RowMut::Lanes(&mut self.lanes)
+            RowMut::Packed {
+                words: &mut self.words,
+                lanes: &mut self.lanes,
+            }
         } else {
             RowMut::Dense {
                 out: &mut self.dense,
                 lanes: &mut self.lanes,
+                pairs: &mut self.pairs,
             }
         }
     }
@@ -369,6 +399,12 @@ impl SketchRow {
     /// The encoded 64-bit lanes (packed layouts).
     pub fn lanes(&self) -> &[u64] {
         &self.lanes
+    }
+
+    /// The finished packed row words (packed layouts) — what
+    /// [`SketchMatrix::push_encoded`] copies verbatim.
+    pub fn packed_words(&self) -> &[u64] {
+        &self.words
     }
 
     /// The encoded dense row (dense layouts).
@@ -453,9 +489,11 @@ mod tests {
         assert_eq!(d.layout(), dense);
         assert!(a.as_bbit().is_some() && a.as_dense().is_none());
         assert!(d.as_dense().is_some() && d.as_bbit().is_none());
-        // push_encoded routes by variant.
+        // push_encoded routes by variant; packed rows arrive pre-packed
+        // in `words` (here: 8 lanes of value 3 at b=4, fused-packed).
         let mut row = SketchRow::new(&packed);
         row.lanes = vec![3u64; 8];
+        crate::hashing::bbit::pack_lanes(&row.lanes, 4, &mut row.words);
         let mut a2 = SketchMatrix::for_layout(packed);
         a2.push_encoded(&row, 1.0);
         assert_eq!(a2.n(), 1);

@@ -1,3 +1,6 @@
+// portable_simd is unstable: the opt-in `portable-simd` feature (nightly
+// only) swaps the 8-wide fold-min group onto std::simd — see hashing/perm.rs.
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 //! # bbml — b-bit minwise hashing for large-scale learning
 //!
 //! A full reproduction of **"Hashing Algorithms for Large-Scale Learning"**

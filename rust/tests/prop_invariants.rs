@@ -115,6 +115,77 @@ fn prop_packing_roundtrip_and_expansion_count() {
 }
 
 #[test]
+fn prop_fused_pack_equals_scalar_reference() {
+    // The PR-6 tentpole invariant: the fused encode route (lanes → packed
+    // words in one pass, no u16 detour) must be bit-identical to the legacy
+    // reference composition `pack_lowest_bits` ∘ signature ∘ `push_row`,
+    // for every supported width b — including widths that straddle word
+    // boundaries (b ∤ 64) — over ragged k (no multiple of the lane group or
+    // the 64/b packing period) and the empty-set sentinel.
+    check("fused pack == scalar reference", 20, |rng| {
+        let d = 2 + rng.gen_range(1 << 20);
+        for &b in &[1u32, 2, 3, 4, 7, 8, 12, 16] {
+            let k = 1 + rng.gen_range(150) as usize;
+            let h = MinwiseHasher::new(d, k, rng.next_u64());
+            let sets: [Vec<u64>; 3] = [
+                gen::sparse_set(rng, d, 1, 60),
+                Vec::new(), // empty-set sentinel row (all-d lanes)
+                gen::sparse_set(rng, d, 1, 60),
+            ];
+
+            // Reference: legacy three-buffer route, one push_row per set.
+            let mut want = BbitSignatureMatrix::new(k, b);
+            for set in &sets {
+                want.push_row(&pack_lowest_bits(&h.signature(set), b), 0.0);
+            }
+
+            // Fused route 1: signature_packed_into + push_packed_row.
+            let mut got = BbitSignatureMatrix::new(k, b);
+            let mut lanes = Vec::new();
+            let mut words = Vec::new();
+            for set in &sets {
+                h.signature_packed_into(set, b, &mut lanes, &mut words);
+                got.push_packed_row(&words, 0.0);
+            }
+            // Fused route 2: push_row_from_lanes (matrix-side packer).
+            let mut got2 = BbitSignatureMatrix::new(k, b);
+            for set in &sets {
+                h.signature_batch_into(set, &mut lanes);
+                got2.push_row_from_lanes(&lanes, 0.0);
+            }
+
+            assert_eq!(got.words(), want.words(), "packed_into b={b} k={k}");
+            assert_eq!(got2.words(), want.words(), "from_lanes b={b} k={k}");
+            for i in 0..sets.len() {
+                assert_eq!(got.row(i), want.row(i), "row {i} b={b} k={k}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fold_min_lane_widths_agree() {
+    // The 8-wide production engine and the 4-wide engine are two lane-width
+    // instantiations of the same fold; both must match the per-permutation
+    // scalar oracle on ragged k around and across both group widths.
+    check("fold-min lane widths agree", 20, |rng| {
+        let d = 2 + rng.gen_range(1 << 20);
+        for &k in &[1usize, 3, 4, 5, 7, 8, 9, 11, 15, 16, 23, 40] {
+            let seed = rng.next_u64();
+            let h = MinwiseHasher::new(d, k, seed);
+            let set = gen::sparse_set(rng, d, 1, 80);
+            let (mut x8, mut x4, mut scalar) = (Vec::new(), Vec::new(), Vec::new());
+            h.signature_batch_into(&set, &mut x8);
+            h.signature_scalar_into(&set, &mut scalar);
+            x4.resize(k, u64::MAX);
+            bbml::hashing::PermutationBank::new(d, seed, k).fold_min_into_x4(&set, &mut x4);
+            assert_eq!(x8, scalar, "x8 vs scalar k={k}");
+            assert_eq!(x4, scalar, "x4 vs scalar k={k}");
+        }
+    });
+}
+
+#[test]
 fn prop_swar_match_count_equals_scalar_reference() {
     // The tentpole invariant: the word-parallel kernel must agree with the
     // scalar get_bits reference for every supported width, including
