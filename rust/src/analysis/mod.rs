@@ -1,0 +1,213 @@
+//! `bbml-lint` — static enforcement of this repo's hand-written contracts.
+//!
+//! Six PRs of desk-checked perf work rest on conventions no compiler
+//! checks: the PR-2 buffer-ownership rule for `*_into` APIs, zero-alloc
+//! hot loops, byte-exact store framing documented in prose, and retained
+//! scalar oracles that pin every SWAR/SIMD path. The one real bug shipped
+//! so far (the buffer-stealing `signature_into`) was exactly a contract
+//! violation no test caught. This module is the mechanical check: a
+//! line/token-level scanner (no external parser — consistent with the
+//! vendored-deps posture) plus five project rules, driven by
+//! `src/bin/bbml-lint.rs` and by fixture self-tests in
+//! `tests/integration_lint.rs`.
+//!
+//! # Rule catalog
+//!
+//! * **`buffer-contract` (R1)** — a `fn *_into` must take a `&mut`
+//!   destination (or a [`RowMut`] bundle), return `()`/`Result<()>`, and
+//!   never call `mem::take`/`mem::replace`. Rationale: `_into` names the
+//!   in-place reuse contract — "fills the caller's buffer, never steals
+//!   its allocation" — and PR 2's `signature_into` showed how silently a
+//!   violation turns every reusing call into a fresh allocation.
+//!
+//! * **`hot-path-alloc` (R2)** — a function annotated
+//!   `// bbml-lint: hot-path` may not call `Vec::new`/`vec!`/`to_vec`/
+//!   `collect`/`clone`. Rationale: the encode/match kernels are sized so
+//!   buffers are allocated once per worker and reused per row; one stray
+//!   per-row allocation costs more than the SWAR tricks save.
+//!   `reserve`/`clear`/`resize`/`extend_from_slice` on caller buffers are
+//!   fine (amortized, capacity survives).
+//!
+//! * **`no-unwrap` (R3)** — no `unwrap()`/`expect()`/`panic!` in library
+//!   code outside `tests/`, `benches/`, `#[cfg(test)]` regions and
+//!   `debug_assert` lines. Rationale: the store/training paths return
+//!   `io::Result`/`anyhow::Result` end to end so corrupt input is an
+//!   error, never an abort; a panic in a pipeline worker poisons the
+//!   whole run. Contract checks on programmer error (layout mismatch,
+//!   poisoned locks) may stay, suppressed with a reason.
+//!
+//! * **`format-drift` (R4)** — the byte-layout tables in `store/mod.rs`
+//!   docs must agree with `store/format.rs`: table rows contiguous,
+//!   `HEADER_LEN`/`FRAMED_HEADER_LEN` equal to the documented payload
+//!   offsets, the `MAGIC` literal and `VERSION` as documented, and every
+//!   `out[a..b]` write in `ShardHeader::encode` matching its documented
+//!   (offset, size). Rationale: the docs are the interchange spec other
+//!   tools read; drift between spec and codec is silent corruption-by-
+//!   documentation.
+//!
+//! * **`oracle-retention` (R5)** — every function whose doc comment
+//!   declares it a *bit-identity oracle* (or annotated
+//!   `// bbml-lint: oracle`) must be referenced from at least one test
+//!   (`tests/*.rs` or a `#[cfg(test)]` region). Rationale: every perf
+//!   claim here is pinned by a retained reference path; an oracle that no
+//!   test calls anymore pins nothing.
+//!
+//! # Suppressions
+//!
+//! `// bbml-lint: allow(rule-id) reason: <why>` on (or directly above)
+//! the offending line. The reason is mandatory — see [`suppress`].
+//! A malformed directive, an unknown rule id, or a missing reason is
+//! reported under the `lint-directive` meta-rule.
+//!
+//! [`RowMut`]: crate::hashing::feature_map::RowMut
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+pub mod suppress;
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, LintReport};
+pub use scanner::SourceFile;
+
+/// Lint in-memory sources: `lib` files get all rules; `tests` files only
+/// feed the R5 reference corpus. This is the fixture-test entry point.
+pub fn lint_sources(lib: &[(String, String)], tests: &[(String, String)]) -> LintReport {
+    let files: Vec<SourceFile> = lib
+        .iter()
+        .map(|(path, text)| scanner::scan(path, text))
+        .collect();
+    let test_files: Vec<SourceFile> = tests
+        .iter()
+        .map(|(path, text)| scanner::scan(path, text))
+        .collect();
+
+    // R5 reference corpus: every tests/ code line + every #[cfg(test)]
+    // code line of the library.
+    let mut corpus: Vec<&str> = Vec::new();
+    for f in &test_files {
+        for l in &f.lines {
+            corpus.push(&l.code);
+        }
+    }
+    for f in &files {
+        for l in &f.lines {
+            if l.in_test {
+                corpus.push(&l.code);
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for f in &files {
+        findings.extend(rules::check_buffer_contract(f));
+        findings.extend(rules::check_hot_path_alloc(f));
+        findings.extend(rules::check_no_unwrap(f));
+    }
+    findings.extend(rules::check_format_drift(&files));
+    findings.extend(rules::check_oracle_retention(&files, &corpus));
+
+    let (mut kept, suppressed) = suppress::apply(findings, &files);
+    for f in &files {
+        kept.extend(suppress::directive_findings(f));
+    }
+    kept.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+
+    LintReport {
+        findings: kept,
+        suppressed,
+        files_scanned: files.len(),
+    }
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for determinism),
+/// as `(display_path, contents)` pairs. Missing `dir` is an empty set.
+fn collect_rs(dir: &Path, strip_prefix: &Path) -> io::Result<Vec<(String, String)>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = match std::fs::read_dir(&d) {
+            Ok(e) => e,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(e),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                paths.push(p);
+            }
+        }
+    }
+    paths.sort();
+    let mut out = Vec::new();
+    for p in paths {
+        let display = p
+            .strip_prefix(strip_prefix)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.push((display, std::fs::read_to_string(&p)?));
+    }
+    Ok(out)
+}
+
+/// Lint a crate tree: every `.rs` under `<root>/src` is library scope,
+/// every `.rs` under `<root>/tests` feeds the R5 reference corpus.
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let lib = collect_rs(&root.join("src"), root)?;
+    if lib.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no .rs files under {}/src", root.display()),
+        ));
+    }
+    let tests = collect_rs(&root.join("tests"), root)?;
+    Ok(lint_sources(&lib, &tests))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs
+            .iter()
+            .map(|(p, t)| (p.to_string(), t.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn clean_sources_produce_clean_report() {
+        let rep = lint_sources(
+            &src(&[(
+                "src/a.rs",
+                "pub fn fill_into(out: &mut Vec<u64>) {\n    out.clear();\n}\n",
+            )]),
+            &[],
+        );
+        assert!(rep.is_clean(), "{}", rep.render_text());
+        assert_eq!(rep.files_scanned, 1);
+    }
+
+    #[test]
+    fn findings_are_sorted_and_counted() {
+        let rep = lint_sources(
+            &src(&[(
+                "src/a.rs",
+                "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\npub fn steal_into(v: &mut Vec<u64>) -> Vec<u64> {\n    std::mem::take(v)\n}\n",
+            )]),
+            &[],
+        );
+        assert!(!rep.is_clean());
+        assert!(rep.findings.len() >= 3, "{}", rep.render_text());
+        let lines: Vec<usize> = rep.findings.iter().map(|f| f.line).collect();
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+    }
+}

@@ -1,0 +1,143 @@
+//! Lint findings and their renderings (compiler-style text and the
+//! `results/LINT_report.json` document).
+
+use std::fmt::Write as _;
+
+/// One lint finding, anchored to a file/line and a rule id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative display path (e.g. `src/hashing/bbit.rs`).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id (`buffer-contract`, `hot-path-alloc`, …).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    /// The compiler-style one-liner: `file:line: rule-id: message`.
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of a lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Kept findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by valid `allow(…) reason: …` directives.
+    pub suppressed: usize,
+    /// Library files scanned (the rule scope; the test corpus is extra).
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// All findings as text, one per line, plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let _ = writeln!(out, "{}", f.render());
+        }
+        let _ = writeln!(
+            out,
+            "bbml-lint: {} finding{} ({} suppressed) in {} files",
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.suppressed,
+            self.files_scanned
+        );
+        out
+    }
+
+    /// The JSON document `--json` writes to `results/LINT_report.json`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"tool\": \"bbml-lint\",");
+        let _ = writeln!(out, "  \"files_scanned\": {},", self.files_scanned);
+        let _ = writeln!(out, "  \"suppressed\": {},", self.suppressed);
+        let _ = writeln!(out, "  \"finding_count\": {},", self.findings.len());
+        out.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}}}",
+                json_string(&f.file),
+                f.line,
+                json_string(f.rule),
+                json_string(&f.message)
+            );
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (the vendored-deps posture: no serde).
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_compiler_style_lines_and_json() {
+        let rep = LintReport {
+            findings: vec![Finding {
+                file: "src/x.rs".into(),
+                line: 7,
+                rule: "no-unwrap",
+                message: "a \"quoted\" message".into(),
+            }],
+            suppressed: 2,
+            files_scanned: 3,
+        };
+        let text = rep.render_text();
+        assert!(text.starts_with("src/x.rs:7: no-unwrap: "));
+        assert!(text.contains("1 finding (2 suppressed) in 3 files"));
+        let json = rep.to_json();
+        assert!(json.contains("\"finding_count\": 1"));
+        assert!(json.contains("\\\"quoted\\\""));
+        assert!(!rep.is_clean());
+    }
+
+    #[test]
+    fn empty_report_is_clean_with_empty_array() {
+        let rep = LintReport {
+            findings: Vec::new(),
+            suppressed: 0,
+            files_scanned: 1,
+        };
+        assert!(rep.is_clean());
+        assert!(rep.to_json().contains("\"findings\": []"));
+    }
+}

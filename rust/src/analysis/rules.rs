@@ -1,0 +1,621 @@
+//! The project-contract rules (R1–R5) over scanned sources.
+//!
+//! Each rule is a pure function from the scanned model to findings; the
+//! catalog lives in [`crate::analysis`]'s module docs and in [`RULES`].
+//! All rules skip test code (`tests/` files never reach them, and
+//! `#[cfg(test)]` regions inside library files are marked by the scanner).
+
+use super::report::Finding;
+use super::scanner::{contains_word, DirectiveKind, FnItem, SourceFile};
+
+/// Rule ids. Keep in sync with the catalog in the module docs and README.
+pub const R1_BUFFER_CONTRACT: &str = "buffer-contract";
+pub const R2_HOT_PATH_ALLOC: &str = "hot-path-alloc";
+pub const R3_NO_UNWRAP: &str = "no-unwrap";
+pub const R4_FORMAT_DRIFT: &str = "format-drift";
+pub const R5_ORACLE_RETENTION: &str = "oracle-retention";
+/// Meta-rule: malformed / reason-less / unknown-rule `bbml-lint:`
+/// directives (not suppressible).
+pub const LINT_DIRECTIVE: &str = "lint-directive";
+
+/// `(id, summary)` for every enforceable rule.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        R1_BUFFER_CONTRACT,
+        "fn *_into must take a &mut destination (or RowMut), return ()/Result<()>, \
+         and never mem::take/mem::replace a caller buffer",
+    ),
+    (
+        R2_HOT_PATH_ALLOC,
+        "functions marked `// bbml-lint: hot-path` may not allocate per call \
+         (Vec::new / vec! / to_vec / collect / clone)",
+    ),
+    (
+        R3_NO_UNWRAP,
+        "no unwrap()/expect()/panic! in library code outside tests, benches, \
+         #[cfg(test)] and debug_assert",
+    ),
+    (
+        R4_FORMAT_DRIFT,
+        "store/format.rs constants and encode offsets must agree with the \
+         byte-layout tables documented in store/mod.rs",
+    ),
+    (
+        R5_ORACLE_RETENTION,
+        "every function documented as a bit-identity oracle must be referenced \
+         from at least one test",
+    ),
+];
+
+fn finding(file: &SourceFile, line: usize, rule: &'static str, message: String) -> Finding {
+    Finding {
+        file: file.path.clone(),
+        line,
+        rule,
+        message,
+    }
+}
+
+/// The return-type text of a signature (after the `->` outside parens),
+/// or `""` when the function returns unit implicitly.
+fn return_type(sig: &str) -> String {
+    let chars: Vec<char> = sig.chars().collect();
+    let mut depth = 0i64;
+    let mut i = 0usize;
+    while i < chars.len() {
+        match chars[i] {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth -= 1,
+            '-' if depth == 0 && chars.get(i + 1) == Some(&'>') => {
+                return chars[i + 2..].iter().collect::<String>().trim().to_string();
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    String::new()
+}
+
+/// R1 — the PR-2 buffer-ownership contract for `*_into` APIs.
+pub fn check_buffer_contract(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &file.functions {
+        if f.in_test || !f.name.ends_with("_into") {
+            continue;
+        }
+        if !f.sig.contains("&mut") && !contains_word(&f.sig, "RowMut") {
+            out.push(finding(
+                file,
+                f.line,
+                R1_BUFFER_CONTRACT,
+                format!(
+                    "`{}` takes no `&mut` destination — an `_into` API fills a \
+                     caller buffer in place",
+                    f.name
+                ),
+            ));
+        }
+        let ret = return_type(&f.sig);
+        let ret_ok = ret.is_empty() || ret == "()" || (ret.contains("Result") && ret.contains("()"));
+        if !ret_ok {
+            out.push(finding(
+                file,
+                f.line,
+                R1_BUFFER_CONTRACT,
+                format!(
+                    "`{}` returns `{ret}` — an `_into` API returns `()` or \
+                     `Result<()>` (never the buffer: returning it invites the \
+                     mem::take bug PR 2 fixed)",
+                    f.name
+                ),
+            ));
+        }
+        if let Some((start, end)) = f.body {
+            for (idx, line) in file.lines.iter().enumerate().take(end).skip(start - 1) {
+                if line.in_test {
+                    continue;
+                }
+                for tok in ["mem::take", "mem::replace"] {
+                    if line.code.contains(tok) {
+                        out.push(finding(
+                            file,
+                            idx + 1,
+                            R1_BUFFER_CONTRACT,
+                            format!(
+                                "`{}` calls `{tok}` — an `_into` API must never \
+                                 steal a caller buffer's allocation",
+                                f.name
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tokens R2 bans inside hot-path function bodies.
+const ALLOC_TOKENS: &[&str] = &["Vec::new", "vec!", ".to_vec()", ".collect()", ".clone()"];
+
+/// R2 — per-call allocation in annotated hot paths.
+pub fn check_hot_path_alloc(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &file.functions {
+        if f.in_test || !f.annotations.contains(&DirectiveKind::HotPath) {
+            continue;
+        }
+        let Some((start, end)) = f.body else { continue };
+        for (idx, line) in file.lines.iter().enumerate().take(end).skip(start - 1) {
+            if line.in_test {
+                continue;
+            }
+            for tok in ALLOC_TOKENS {
+                if line.code.contains(tok) {
+                    out.push(finding(
+                        file,
+                        idx + 1,
+                        R2_HOT_PATH_ALLOC,
+                        format!(
+                            "hot path `{}` calls `{tok}` — reuse the caller's \
+                             buffer (reserve/clear/extend are fine; fresh \
+                             allocations are not)",
+                            f.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tokens R3 bans in library code.
+const PANIC_TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!"];
+
+/// R3 — no unwrap/expect/panic in library code.
+pub fn check_no_unwrap(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test || line.code.contains("debug_assert") {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            if line.code.contains(tok) {
+                out.push(finding(
+                    file,
+                    idx + 1,
+                    R3_NO_UNWRAP,
+                    format!(
+                        "`{}` in library code — propagate a Result (or add \
+                         `// bbml-lint: allow({R3_NO_UNWRAP}) reason: …` if the \
+                         failure is a contract violation, not an input)",
+                        tok.trim_matches(|c| c == '.' || c == '(')
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// One parsed row of a byte-layout doc table.
+struct DocRow {
+    line: usize,
+    offset: usize,
+    /// `None` for the terminator row (`offset … payload`), whose offset
+    /// is the total fixed-header length.
+    size: Option<usize>,
+    name: String,
+    raw: String,
+}
+
+/// Parse `//! <offset> <size> <field> …` rows, grouped into tables (a new
+/// table starts at offset 0).
+fn parse_doc_tables(file: &SourceFile) -> Vec<Vec<DocRow>> {
+    let mut tables: Vec<Vec<DocRow>> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let c = line.comment.trim();
+        let Some(rest) = c.strip_prefix("//!") else { continue };
+        let toks: Vec<&str> = rest.split_whitespace().collect();
+        if toks.len() < 3 {
+            continue;
+        }
+        let Ok(offset) = toks[0].parse::<usize>() else { continue };
+        let size = match toks[1].parse::<usize>() {
+            Ok(s) => Some(s),
+            // Only the explicit ellipsis marks the open-ended terminator
+            // row (`64 … payload`); any other non-numeric size token means
+            // this line is wrapped prose, not a table row.
+            Err(_) if toks[1] == "\u{2026}" || toks[1] == "..." => None,
+            Err(_) => continue,
+        };
+        let name = toks[2].to_string();
+        if !name.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_') {
+            continue;
+        }
+        let row = DocRow {
+            line: idx + 1,
+            offset,
+            size,
+            name,
+            raw: line.raw.clone(),
+        };
+        if offset == 0 || tables.is_empty() {
+            tables.push(vec![row]);
+        } else if let Some(t) = tables.last_mut() {
+            t.push(row);
+        }
+    }
+    tables
+}
+
+/// Extract the integer value of `const NAME: … = <int>;` from code text.
+fn const_value(file: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = &line.code;
+        if !contains_word(code, name) || !code.contains("const") {
+            continue;
+        }
+        let eq = code.find('=')?;
+        let digits: String = code[eq + 1..]
+            .chars()
+            .skip_while(|c| !c.is_ascii_digit())
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let Ok(v) = digits.parse::<usize>() {
+            return Some((v, idx + 1));
+        }
+    }
+    None
+}
+
+/// Extract the `b"…"` literal text on a raw line (escaped form, e.g.
+/// `BBSHARD\0`).
+fn byte_string(raw: &str) -> Option<String> {
+    let start = raw.find("b\"")? + 2;
+    let end = raw[start..].find('"')? + start;
+    Some(raw[start..end].to_string())
+}
+
+/// R4 — the store format's code constants vs the documented byte tables.
+/// Runs when the tree contains both `store/format.rs` and `store/mod.rs`.
+pub fn check_format_drift(files: &[SourceFile]) -> Vec<Finding> {
+    let Some(fmt) = files.iter().find(|f| f.path.ends_with("store/format.rs")) else {
+        return Vec::new();
+    };
+    let Some(docs) = files.iter().find(|f| f.path.ends_with("store/mod.rs")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let tables = parse_doc_tables(docs);
+
+    // Internal consistency of every table: contiguous fixed fields, and a
+    // terminator row equal to the end of the last fixed field.
+    for table in &tables {
+        let mut expect = 0usize;
+        for row in table {
+            if row.offset != expect {
+                out.push(finding(
+                    docs,
+                    row.line,
+                    R4_FORMAT_DRIFT,
+                    format!(
+                        "doc table row `{}` starts at offset {} but the previous \
+                         field ends at {expect}",
+                        row.name, row.offset
+                    ),
+                ));
+            }
+            match row.size {
+                Some(s) => expect = row.offset + s,
+                None => break,
+            }
+        }
+    }
+
+    let shard = tables
+        .iter()
+        .find(|t| t.iter().any(|r| r.raw.contains("BBSHARD")));
+    let framed = tables
+        .iter()
+        .find(|t| t.iter().any(|r| r.raw.contains("BBCKPT")));
+
+    // Header lengths: doc terminator (payload offset) vs code constant.
+    let checks: [(&str, Option<&Vec<DocRow>>, &str); 2] = [
+        ("HEADER_LEN", shard, "shard header"),
+        ("FRAMED_HEADER_LEN", framed, "framed envelope"),
+    ];
+    for (const_name, table, what) in checks {
+        let Some((value, const_line)) = const_value(fmt, const_name) else {
+            out.push(finding(
+                fmt,
+                1,
+                R4_FORMAT_DRIFT,
+                format!("`{const_name}` not found in store/format.rs"),
+            ));
+            continue;
+        };
+        let Some(table) = table else {
+            out.push(finding(
+                docs,
+                1,
+                R4_FORMAT_DRIFT,
+                format!("no {what} byte table found in store/mod.rs docs"),
+            ));
+            continue;
+        };
+        match table.iter().find(|r| r.size.is_none()) {
+            Some(term) if term.offset != value => out.push(finding(
+                fmt,
+                const_line,
+                R4_FORMAT_DRIFT,
+                format!(
+                    "`{const_name}` = {value} but the documented {what} table's \
+                     payload starts at {} (store/mod.rs:{})",
+                    term.offset, term.line
+                ),
+            )),
+            Some(_) => {}
+            None => out.push(finding(
+                docs,
+                table.first().map(|r| r.line).unwrap_or(1),
+                R4_FORMAT_DRIFT,
+                format!("documented {what} table has no payload terminator row"),
+            )),
+        }
+    }
+
+    // Magic: the MAGIC constant's bytes must appear verbatim in the doc
+    // table's magic row.
+    if let Some(magic_line) = fmt
+        .lines
+        .iter()
+        .position(|l| contains_word(&l.code, "MAGIC") && l.code.contains("const"))
+    {
+        match byte_string(&fmt.lines[magic_line].raw) {
+            Some(magic) => {
+                let documented = shard
+                    .and_then(|t| t.iter().find(|r| r.name == "magic"))
+                    .and_then(|r| byte_string(&r.raw));
+                if documented.as_deref() != Some(magic.as_str()) {
+                    out.push(finding(
+                        fmt,
+                        magic_line + 1,
+                        R4_FORMAT_DRIFT,
+                        format!(
+                            "MAGIC is b\"{magic}\" but the store/mod.rs shard table \
+                             documents {:?}",
+                            documented
+                        ),
+                    ));
+                }
+            }
+            None => out.push(finding(
+                fmt,
+                magic_line + 1,
+                R4_FORMAT_DRIFT,
+                "MAGIC constant is not a b\"…\" literal".to_string(),
+            )),
+        }
+    }
+
+    // Version: the shard layout heading documents the current version.
+    if let Some((version, vline)) = const_value(fmt, "VERSION") {
+        let documented = docs.lines.iter().find_map(|l| {
+            let c = &l.comment;
+            let pos = c.find("layout (version ")?;
+            let digits: String = c[pos + "layout (version ".len()..]
+                .chars()
+                .take_while(|ch| ch.is_ascii_digit())
+                .collect();
+            digits.parse::<usize>().ok()
+        });
+        if let Some(doc_v) = documented {
+            if doc_v != version {
+                out.push(finding(
+                    fmt,
+                    vline,
+                    R4_FORMAT_DRIFT,
+                    format!(
+                        "`VERSION` = {version} but store/mod.rs documents the \
+                         shard layout as version {doc_v}"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Encode ranges: every `out[a..b]` / `out[i]` write in
+    // ShardHeader::encode must match the documented (offset, size) of the
+    // field it names.
+    let encode = fmt.functions.iter().find(|f| {
+        f.name == "encode"
+            && f.body
+                .map(|(s, e)| {
+                    fmt.lines[s - 1..e]
+                        .iter()
+                        .any(|l| contains_word(&l.code, "MAGIC"))
+                })
+                .unwrap_or(false)
+    });
+    if let (Some(encode), Some(shard)) = (encode, shard) {
+        if let Some((start, end)) = encode.body {
+            for (idx, line) in fmt.lines.iter().enumerate().take(end).skip(start - 1) {
+                let code = &line.code;
+                let Some(open) = code.find("out[") else { continue };
+                let Some(close_rel) = code[open..].find(']') else { continue };
+                let range = &code[open + 4..open + close_rel];
+                let (a, b) = match range.split_once("..") {
+                    Some((lo, hi)) => {
+                        let (Ok(lo), Ok(hi)) =
+                            (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                        else {
+                            continue;
+                        };
+                        (lo, hi)
+                    }
+                    None => match range.trim().parse::<usize>() {
+                        Ok(i) => (i, i + 1),
+                        Err(_) => continue,
+                    },
+                };
+                let field = if contains_word(code, "MAGIC") {
+                    "magic".to_string()
+                } else if let Some(pos) = code.find("self.") {
+                    code[pos + 5..]
+                        .chars()
+                        .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                        .collect()
+                } else {
+                    continue;
+                };
+                match shard.iter().find(|r| r.name == field) {
+                    Some(row) => {
+                        if row.offset != a || row.size != Some(b - a) {
+                            out.push(finding(
+                                fmt,
+                                idx + 1,
+                                R4_FORMAT_DRIFT,
+                                format!(
+                                    "encode writes `{field}` at [{a}, {b}) but \
+                                     store/mod.rs documents offset {} size {:?}",
+                                    row.offset, row.size
+                                ),
+                            ));
+                        }
+                    }
+                    None => out.push(finding(
+                        fmt,
+                        idx + 1,
+                        R4_FORMAT_DRIFT,
+                        format!(
+                            "encode writes `{field}` at [{a}, {b}) but the \
+                             store/mod.rs shard table has no such field"
+                        ),
+                    )),
+                }
+            }
+        }
+    }
+    out
+}
+
+/// True when `f` declares itself a retained oracle, via the explicit
+/// annotation or via its doc comment naming it one.
+fn is_oracle(f: &FnItem) -> bool {
+    f.annotations.contains(&DirectiveKind::Oracle) || f.doc.contains("bit-identity oracle")
+}
+
+/// R5 — declared oracles must be exercised by at least one test.
+/// `test_corpus` is every `#[cfg(test)]` line of the library plus every
+/// line of `tests/*.rs`.
+pub fn check_oracle_retention(files: &[SourceFile], test_corpus: &[&str]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files {
+        for f in &file.functions {
+            if f.in_test || !is_oracle(f) {
+                continue;
+            }
+            let referenced = test_corpus.iter().any(|line| contains_word(line, &f.name));
+            if !referenced {
+                out.push(finding(
+                    file,
+                    f.line,
+                    R5_ORACLE_RETENTION,
+                    format!(
+                        "`{}` is documented as a bit-identity oracle but no test \
+                         references it — a dropped oracle silently unpins the \
+                         fast path",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    #[test]
+    fn return_type_extraction() {
+        assert_eq!(return_type("fn f(x: &mut [u64])"), "");
+        assert_eq!(return_type("fn f() -> io::Result<()>"), "io::Result<()>");
+        assert_eq!(return_type("fn f(g: impl Fn() -> u64) -> PathBuf"), "PathBuf");
+    }
+
+    #[test]
+    fn buffer_contract_flags_bad_into() {
+        let f = scan(
+            "x.rs",
+            "pub fn pack_into(v: &[u64]) -> Vec<u64> {\n    v.to_vec()\n}\n",
+        );
+        let got = check_buffer_contract(&f);
+        assert_eq!(got.len(), 2, "{got:?}"); // no &mut + bad return
+        assert!(got.iter().all(|g| g.rule == R1_BUFFER_CONTRACT && g.line == 1));
+    }
+
+    #[test]
+    fn buffer_contract_accepts_rowmut_and_result_unit() {
+        let f = scan(
+            "x.rs",
+            "fn encode_into(&self, set: &[u64], row: RowMut<'_>) -> io::Result<()> {\n    Ok(())\n}\n",
+        );
+        assert!(check_buffer_contract(&f).is_empty());
+    }
+
+    #[test]
+    fn hot_path_flags_alloc_only_when_annotated() {
+        let src = "\
+// bbml-lint: hot-path
+pub fn encode(out: &mut Vec<u64>) {
+    let tmp: Vec<u64> = (0..4).collect();
+    out.extend(tmp);
+}
+pub fn cold(out: &mut Vec<u64>) {
+    let tmp: Vec<u64> = (0..4).collect();
+    out.extend(tmp);
+}
+";
+        let f = scan("x.rs", src);
+        let got = check_hot_path_alloc(&f);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].line, 3);
+    }
+
+    #[test]
+    fn no_unwrap_skips_tests_and_debug_assert() {
+        let src = "\
+pub fn f(x: Option<u32>) -> u32 {
+    debug_assert!(x.map(|v| v > 0).unwrap_or(true));
+    x.unwrap()
+}
+#[cfg(test)]
+mod tests {
+    fn g(x: Option<u32>) -> u32 { x.unwrap() }
+}
+";
+        let f = scan("x.rs", src);
+        let got = check_no_unwrap(&f);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].line, 3);
+    }
+
+    #[test]
+    fn oracle_retention_requires_a_test_reference() {
+        let f = scan(
+            "x.rs",
+            "/// Scalar reference — kept as the bit-identity oracle.\npub fn slow_scalar() {}\n",
+        );
+        let files = vec![f];
+        let got = check_oracle_retention(&files, &[]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, R5_ORACLE_RETENTION);
+        let got = check_oracle_retention(&files, &["assert_eq!(slow_scalar(), ());"]);
+        assert!(got.is_empty());
+    }
+}

@@ -1,0 +1,654 @@
+//! Line/token-level Rust source scanner — the front end of `bbml-lint`.
+//!
+//! No external parser: the scanner is a small state machine that walks a
+//! file once and produces, per line, the *code text* (string/char-literal
+//! contents and comments blanked out with spaces) and the *comment text*
+//! (what the code text dropped). Everything downstream — rule matching,
+//! suppression directives, test-region exemptions — works on that split,
+//! so a banned token inside a string literal or a doc comment can never
+//! produce (or mask) a finding.
+//!
+//! On top of the stripped lines the scanner recovers just enough structure
+//! for the project rules:
+//!
+//! * **test regions** — any item under a `#[cfg(test)]` / `#[test]`
+//!   attribute, tracked by brace depth (in this repo the test module is by
+//!   convention the last item of a file, but the tracking is general);
+//! * **function items** — name, signature text, body line span, the doc
+//!   comment block above, and any `// bbml-lint:` annotations attached to
+//!   that block;
+//! * **directives** — the `// bbml-lint:` comment vocabulary
+//!   (`hot-path`, `oracle`, `allow(rule-id) reason: …`), parsed from
+//!   comment text only.
+
+/// One scanned source line.
+#[derive(Debug)]
+pub struct Line {
+    /// Original text, verbatim (rule R4 parses doc tables from this).
+    pub raw: String,
+    /// Code with comments and literal contents replaced by spaces.
+    pub code: String,
+    /// The comment on this line, including its `//`/`///`/`//!` marker
+    /// (empty when the line has none). Block-comment interiors land here
+    /// too, without a marker.
+    pub comment: String,
+    /// True when the line belongs to a `#[cfg(test)]` / `#[test]` item.
+    pub in_test: bool,
+}
+
+/// A `// bbml-lint:` comment directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DirectiveKind {
+    /// Marks the next function as a hot path (rule R2 scope).
+    HotPath,
+    /// Marks the next function as a retained bit-identity oracle (R5).
+    Oracle,
+    /// Suppresses `rule` on the directive's target line. `reason` is
+    /// mandatory; a reason-less allow is itself a finding and does NOT
+    /// suppress.
+    Allow { rule: String, reason: Option<String> },
+    /// Unparseable `bbml-lint:` payload (kept so it can be reported).
+    Malformed(String),
+}
+
+/// A directive plus where it sits and what it applies to.
+#[derive(Debug)]
+pub struct Directive {
+    /// 1-based line of the comment.
+    pub line: usize,
+    /// 1-based line the directive governs: the same line when it trails
+    /// code, otherwise the next line carrying code.
+    pub target_line: usize,
+    pub kind: DirectiveKind,
+}
+
+/// A function item recovered from the code text.
+#[derive(Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Signature code text from `fn` up to (not including) the body `{`
+    /// or the terminating `;` of a trait declaration.
+    pub sig: String,
+    /// Body line span (1-based, inclusive); `None` for bodiless
+    /// declarations.
+    pub body: Option<(usize, usize)>,
+    /// Doc-comment text (`///` lines above, markers stripped, joined).
+    pub doc: String,
+    /// `bbml-lint:` annotations in the comment/attribute block above.
+    pub annotations: Vec<DirectiveKind>,
+    pub in_test: bool,
+}
+
+/// A fully scanned file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Display path (repo-relative, e.g. `src/hashing/bbit.rs`).
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub functions: Vec<FnItem>,
+    pub directives: Vec<Directive>,
+}
+
+/// Lexer mode carried across lines (strings and block comments span
+/// lines; everything else resets at a line break).
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    Str,
+    RawStr(usize),
+    BlockComment(usize),
+}
+
+/// Split `source` into per-line (code, comment) pairs.
+fn strip(source: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for line in source.split('\n') {
+        let chars: Vec<char> = line.chars().collect();
+        let n = chars.len();
+        let mut code = String::with_capacity(n);
+        let mut comment = String::new();
+        let mut i = 0usize;
+        // A char literal never spans lines, so Char mode is line-local.
+        let mut in_char = false;
+        while i < n {
+            let c = chars[i];
+            let next = if i + 1 < n { Some(chars[i + 1]) } else { None };
+            match mode {
+                Mode::Code if in_char => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if next.is_some() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    } else if c == '\'' {
+                        code.push('\'');
+                        in_char = false;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && next == Some('/') {
+                        // Line comment (incl. /// and //!): the rest of
+                        // the line is comment text.
+                        comment.push_str(&chars[i..].iter().collect::<String>());
+                        for _ in i..n {
+                            code.push(' ');
+                        }
+                        i = n;
+                    } else if c == '/' && next == Some('*') {
+                        mode = Mode::BlockComment(1);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else if c == 'r' || c == 'b' {
+                        // Possible raw/byte string prefix: r"", r#""#,
+                        // b"", br"", b'x'.
+                        let mut j = i + 1;
+                        if c == 'b' && j < n && chars[j] == 'r' {
+                            j += 1;
+                        }
+                        let mut hashes = 0usize;
+                        let raw = chars.get(i + 1) == Some(&'r') || c == 'r';
+                        if raw {
+                            while j < n && chars[j] == '#' {
+                                hashes += 1;
+                                j += 1;
+                            }
+                        }
+                        if raw && j < n && chars[j] == '"' {
+                            for _ in i..=j {
+                                code.push(' ');
+                            }
+                            mode = Mode::RawStr(hashes);
+                            i = j + 1;
+                        } else if c == 'b' && next == Some('"') {
+                            code.push('b');
+                            code.push('"');
+                            mode = Mode::Str;
+                            i += 2;
+                        } else if c == 'b' && next == Some('\'') {
+                            code.push('b');
+                            code.push('\'');
+                            in_char = true;
+                            i += 2;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: a literal is '\…' or
+                        // 'X' followed by a closing quote.
+                        let is_char = next == Some('\\')
+                            || (i + 2 < n && chars[i + 2] == '\'' && next != Some('\''));
+                        code.push('\'');
+                        in_char = is_char;
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if next.is_some() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' && chars[i + 1..].iter().take_while(|&&h| h == '#').count() >= hashes
+                    {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::BlockComment(depth) => {
+                    if c == '*' && next == Some('/') {
+                        if depth == 1 {
+                            mode = Mode::Code;
+                        } else {
+                            mode = Mode::BlockComment(depth - 1);
+                        }
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        mode = Mode::BlockComment(depth + 1);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if matches!(mode, Mode::BlockComment(_)) {
+            comment.push(' ');
+        }
+        out.push((code, comment));
+    }
+    out
+}
+
+/// Mark every line that belongs to a `#[cfg(test)]` / `#[test]` item.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    // Depth the enclosing test item opened at, if inside one.
+    let mut region_depth: Option<i64> = None;
+    // Saw a test attribute, waiting for the item's opening brace.
+    let mut awaiting_open = false;
+    for line in lines.iter_mut() {
+        if region_depth.is_some() || awaiting_open {
+            line.in_test = true;
+        }
+        if region_depth.is_none()
+            && (line.code.contains("#[cfg(test)")
+                || line.code.contains("#[cfg(all(test")
+                || line.code.contains("#[test]"))
+        {
+            awaiting_open = true;
+            line.in_test = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if awaiting_open && region_depth.is_none() {
+                        region_depth = Some(depth);
+                        awaiting_open = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if region_depth == Some(depth) {
+                        region_depth = None;
+                    }
+                }
+                ';' => {
+                    // A braceless item (e.g. `#[cfg(test)] use …;`).
+                    if awaiting_open && region_depth.is_none() {
+                        awaiting_open = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// True when `hay` contains `needle` delimited by non-identifier chars.
+pub fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = hay[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !hay[..at].chars().next_back().map(is_ident_char).unwrap_or(false);
+        let after = at + needle.len();
+        let after_ok = after >= hay.len()
+            || !hay[after..].chars().next().map(is_ident_char).unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + needle.len().max(1);
+    }
+    false
+}
+
+/// Find `fn <ident>` in a code line; returns (name, byte offset of `fn`).
+fn find_fn(code: &str) -> Option<(String, usize)> {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("fn") {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().map(is_ident_char).unwrap_or(false);
+        let rest = &code[at + 2..];
+        let after_ws = rest.chars().take_while(|c| c.is_whitespace()).count();
+        if before_ok && after_ws > 0 {
+            let name: String = rest[after_ws..].chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() && !name.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(true)
+            {
+                return Some((name, at));
+            }
+        }
+        start = at + 2;
+    }
+    None
+}
+
+/// Parse the `bbml-lint:` payload of a comment, if present. Only a
+/// comment that *starts* with the marker (after its `//`/`///`/`//!`
+/// prefix) is a directive — prose that merely mentions the vocabulary
+/// (docs, the rule catalog) is not.
+fn parse_directive(comment: &str) -> Option<DirectiveKind> {
+    let body = comment.trim_start_matches(['/', '!']).trim_start();
+    let rest = body.strip_prefix("bbml-lint:")?.trim();
+    if rest == "hot-path" {
+        return Some(DirectiveKind::HotPath);
+    }
+    if rest == "oracle" {
+        return Some(DirectiveKind::Oracle);
+    }
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        if let Some(close) = inner.find(')') {
+            let rule = inner[..close].trim().to_string();
+            let tail = inner[close + 1..].trim();
+            let reason = tail.strip_prefix("reason:").map(|r| r.trim().to_string());
+            let reason = match reason {
+                Some(r) if !r.is_empty() => Some(r),
+                _ => None,
+            };
+            return Some(DirectiveKind::Allow { rule, reason });
+        }
+    }
+    Some(DirectiveKind::Malformed(rest.to_string()))
+}
+
+/// Scan one file into the structured model the rules consume.
+pub fn scan(path: &str, source: &str) -> SourceFile {
+    let stripped = strip(source);
+    let mut lines: Vec<Line> = source
+        .split('\n')
+        .zip(stripped)
+        .map(|(raw, (code, comment))| Line {
+            raw: raw.to_string(),
+            code,
+            comment,
+            in_test: false,
+        })
+        .collect();
+    mark_test_regions(&mut lines);
+
+    // Directives, with their target line resolved.
+    let mut directives = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if line.comment.is_empty() {
+            continue;
+        }
+        if let Some(kind) = parse_directive(&line.comment) {
+            let own_code = !line.code.trim().is_empty();
+            let target = if own_code {
+                idx + 1
+            } else {
+                // Next line carrying code (skip blank/comment-only lines).
+                let mut t = idx + 1;
+                while t < lines.len() && lines[t].code.trim().is_empty() {
+                    t += 1;
+                }
+                if t < lines.len() {
+                    t + 1
+                } else {
+                    idx + 1
+                }
+            };
+            directives.push(Directive {
+                line: idx + 1,
+                target_line: target,
+                kind,
+            });
+        }
+    }
+
+    // Function items.
+    let mut functions = Vec::new();
+    let n = lines.len();
+    let mut li = 0usize;
+    while li < n {
+        let Some((name, fn_off)) = find_fn(&lines[li].code) else {
+            li += 1;
+            continue;
+        };
+        // Signature: from `fn` to the first `{` or `;` at paren/angle
+        // depth 0 (spanning lines as needed).
+        let mut sig = String::new();
+        let mut paren: i64 = 0;
+        let mut angle: i64 = 0;
+        let mut body_open: Option<usize> = None; // line index of `{`
+        let mut ended = false;
+        let mut sl = li;
+        let mut prev: Option<char> = None;
+        'sig: while sl < n {
+            let text = if sl == li { &lines[sl].code[fn_off..] } else { &lines[sl].code[..] };
+            for c in text.chars() {
+                match c {
+                    '(' | '[' => paren += 1,
+                    ')' | ']' => paren -= 1,
+                    '<' => {
+                        if paren == 0 {
+                            angle += 1;
+                        }
+                    }
+                    '>' => {
+                        if paren == 0 && angle > 0 && prev != Some('-') {
+                            angle -= 1;
+                        }
+                    }
+                    '{' if paren == 0 => {
+                        body_open = Some(sl);
+                        ended = true;
+                        break 'sig;
+                    }
+                    ';' if paren == 0 && angle <= 0 => {
+                        ended = true;
+                        break 'sig;
+                    }
+                    _ => {}
+                }
+                sig.push(c);
+                prev = Some(c);
+            }
+            sig.push(' ');
+            sl += 1;
+        }
+        if !ended {
+            li += 1;
+            continue;
+        }
+        // Body span: match braces from the opening line.
+        let body = body_open.map(|open_line| {
+            let mut depth: i64 = 0;
+            let mut started = false;
+            let mut end = open_line;
+            'body: for (bi, line) in lines.iter().enumerate().take(n).skip(open_line) {
+                let text =
+                    if bi == li { &line.code[fn_off..] } else { &line.code[..] };
+                for c in text.chars() {
+                    if c == '{' {
+                        depth += 1;
+                        started = true;
+                    } else if c == '}' {
+                        depth -= 1;
+                        if started && depth == 0 {
+                            end = bi;
+                            break 'body;
+                        }
+                    }
+                }
+                end = bi;
+            }
+            (open_line + 1, end + 1)
+        });
+        // Doc comments + annotations from the contiguous block above
+        // (comment-only lines and attribute lines; a blank line stops it).
+        let mut doc_lines: Vec<String> = Vec::new();
+        let mut annotations = Vec::new();
+        let mut up = li;
+        while up > 0 {
+            let above = &lines[up - 1];
+            let code_trim = above.code.trim();
+            let is_attr = code_trim.starts_with("#[")
+                || (code_trim.ends_with(']') && code_trim.starts_with('#'));
+            let comment_only = code_trim.is_empty() && !above.comment.trim().is_empty();
+            if !is_attr && !comment_only {
+                break;
+            }
+            if comment_only {
+                let c = above.comment.trim();
+                if let Some(doc) = c.strip_prefix("///") {
+                    doc_lines.push(doc.trim().to_string());
+                }
+                if let Some(kind) = parse_directive(c) {
+                    match kind {
+                        DirectiveKind::HotPath | DirectiveKind::Oracle => annotations.push(kind),
+                        _ => {}
+                    }
+                }
+            }
+            up -= 1;
+        }
+        doc_lines.reverse();
+        functions.push(FnItem {
+            name,
+            line: li + 1,
+            sig,
+            body,
+            doc: doc_lines.join(" "),
+            annotations,
+            in_test: lines[li].in_test,
+        });
+        // Resume after the signature line (nested fns inside bodies are
+        // still found because we only skip the signature lines).
+        li = sl.max(li) + 1;
+    }
+
+    SourceFile {
+        path: path.to_string(),
+        lines,
+        functions,
+        directives,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_strings_and_chars() {
+        let f = scan(
+            "t.rs",
+            "let s = \"a.unwrap() // x\"; // real comment\nlet c = '}'; /* b */ let d = 1;\n",
+        );
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code.contains("let s"));
+        assert!(f.lines[0].comment.contains("real comment"));
+        assert!(!f.lines[1].code.contains('}'));
+        assert!(f.lines[1].code.contains("let d"));
+        assert!(f.lines[1].comment.contains('b'));
+    }
+
+    #[test]
+    fn raw_strings_and_multiline_strings_are_blanked() {
+        let src = "let a = r#\"panic!(\"x\")\"#;\nlet b = \"line1\nline2.unwrap()\";\nlet c = 3;\n";
+        let f = scan("t.rs", src);
+        assert!(!f.lines[0].code.contains("panic"));
+        assert!(!f.lines[2].code.contains("unwrap"));
+        assert!(f.lines[3].code.contains("let c"));
+    }
+
+    #[test]
+    fn finds_functions_with_docs_and_annotations() {
+        let src = "\
+/// Fills the buffer — the bit-identity oracle for the fast path.
+// bbml-lint: hot-path
+#[inline]
+pub fn fill_into(out: &mut Vec<u64>) -> () {
+    out.clear();
+}
+";
+        let f = scan("t.rs", src);
+        assert_eq!(f.functions.len(), 1);
+        let func = &f.functions[0];
+        assert_eq!(func.name, "fill_into");
+        assert_eq!(func.line, 4);
+        assert!(func.sig.contains("&mut"));
+        assert!(func.doc.contains("bit-identity oracle"));
+        assert_eq!(func.annotations, vec![DirectiveKind::HotPath]);
+        assert_eq!(func.body, Some((4, 6)));
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let src = "\
+pub fn lib_code() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let x: Option<u32> = None;
+        x.unwrap();
+    }
+}
+";
+        let f = scan("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[2].in_test); // attribute line
+        assert!(f.lines[7].in_test); // unwrap line
+        assert!(f.lines[9].in_test); // closing brace
+    }
+
+    #[test]
+    fn directive_parsing_and_targets() {
+        let src = "\
+// bbml-lint: allow(no-unwrap) reason: infallible by construction
+let a = x.unwrap();
+let b = y.unwrap(); // bbml-lint: allow(no-unwrap) reason: same
+// bbml-lint: allow(no-unwrap)
+let c = z.unwrap();
+";
+        let f = scan("t.rs", src);
+        assert_eq!(f.directives.len(), 3);
+        assert_eq!(f.directives[0].target_line, 2);
+        assert!(matches!(
+            f.directives[0].kind,
+            DirectiveKind::Allow { ref rule, reason: Some(_) } if rule == "no-unwrap"
+        ));
+        assert_eq!(f.directives[1].target_line, 3);
+        assert_eq!(f.directives[2].target_line, 5);
+        assert!(matches!(
+            f.directives[2].kind,
+            DirectiveKind::Allow { reason: None, .. }
+        ));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("m.match_count_scalar(i, j)", "match_count_scalar"));
+        assert!(!contains_word("match_count_scalar_x4(i)", "match_count_scalar"));
+        assert!(!contains_word("xmatch_count_scalar(i)", "match_count_scalar"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Suppression handling: `// bbml-lint: allow(rule-id) reason: …`.
+//!
+//! An allow directive silences findings of `rule-id` on its **target
+//! line** — the directive's own line when it trails code, otherwise the
+//! next line carrying code (so it sits directly above the offending
+//! statement, or directly above a `fn` line for function-anchored rules;
+//! attribute lines count as code, so place the comment *after* any
+//! attributes). The reason is mandatory: a reason-less allow suppresses
+//! nothing and is itself reported, as is an allow naming an unknown rule.
+//! This keeps every suppression greppable and self-justifying — the
+//! lint's findings can be silenced, but never silently.
+
+use super::report::Finding;
+use super::rules::{self, LINT_DIRECTIVE};
+use super::scanner::{DirectiveKind, SourceFile};
+
+/// True when `rule` is one of the enforceable rule ids.
+fn known_rule(rule: &str) -> bool {
+    rules::RULES.iter().any(|(id, _)| *id == rule)
+}
+
+/// Findings about the directives themselves: malformed payloads, unknown
+/// rule ids, missing reasons. These are not suppressible.
+pub fn directive_findings(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for d in &file.directives {
+        let message = match &d.kind {
+            DirectiveKind::Malformed(text) => Some(format!(
+                "unrecognized bbml-lint directive `{text}` — expected `hot-path`, \
+                 `oracle`, or `allow(rule-id) reason: …`"
+            )),
+            DirectiveKind::Allow { rule, reason } => {
+                if !known_rule(rule) {
+                    Some(format!(
+                        "allow names unknown rule `{rule}` — known rules: {}",
+                        rules::RULES
+                            .iter()
+                            .map(|(id, _)| *id)
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ))
+                } else if reason.is_none() {
+                    Some(format!(
+                        "allow({rule}) has no reason — a suppression must justify \
+                         itself: `// bbml-lint: allow({rule}) reason: …`"
+                    ))
+                } else {
+                    None
+                }
+            }
+            DirectiveKind::HotPath | DirectiveKind::Oracle => None,
+        };
+        if let Some(message) = message {
+            out.push(Finding {
+                file: file.path.clone(),
+                line: d.line,
+                rule: LINT_DIRECTIVE,
+                message,
+            });
+        }
+    }
+    out
+}
+
+/// Drop findings covered by a valid allow directive. Returns the kept
+/// findings and the number suppressed.
+pub fn apply(findings: Vec<Finding>, files: &[SourceFile]) -> (Vec<Finding>, usize) {
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        let covered = files
+            .iter()
+            .filter(|file| file.path == f.file)
+            .flat_map(|file| file.directives.iter())
+            .any(|d| match &d.kind {
+                DirectiveKind::Allow {
+                    rule,
+                    reason: Some(_),
+                } => rule == f.rule && d.target_line == f.line && known_rule(rule),
+                _ => false,
+            });
+        if covered {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    (kept, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::check_no_unwrap;
+    use crate::analysis::scanner::scan;
+
+    #[test]
+    fn valid_allow_suppresses() {
+        let src = "\
+// bbml-lint: allow(no-unwrap) reason: infallible by construction
+let a = x.unwrap();
+";
+        let f = scan("x.rs", src);
+        let findings = check_no_unwrap(&f);
+        assert_eq!(findings.len(), 1);
+        let files = vec![f];
+        let (kept, suppressed) = apply(findings, &files);
+        assert!(kept.is_empty());
+        assert_eq!(suppressed, 1);
+        assert!(directive_findings(&files[0]).is_empty());
+    }
+
+    #[test]
+    fn reasonless_allow_reports_and_does_not_suppress() {
+        let src = "\
+// bbml-lint: allow(no-unwrap)
+let a = x.unwrap();
+";
+        let f = scan("x.rs", src);
+        let findings = check_no_unwrap(&f);
+        let files = vec![f];
+        let (kept, suppressed) = apply(findings, &files);
+        assert_eq!(kept.len(), 1, "reason-less allow must not suppress");
+        assert_eq!(suppressed, 0);
+        let dirs = directive_findings(&files[0]);
+        assert_eq!(dirs.len(), 1);
+        assert!(dirs[0].message.contains("no reason"));
+    }
+
+    #[test]
+    fn unknown_rule_is_reported() {
+        let f = scan("x.rs", "// bbml-lint: allow(no-such-rule) reason: because\n");
+        let dirs = directive_findings(&f);
+        assert_eq!(dirs.len(), 1);
+        assert!(dirs[0].message.contains("unknown rule"));
+    }
+}

@@ -208,7 +208,7 @@ impl Bencher {
             record.stats.n
         );
         self.results.push(record);
-        self.results.last().unwrap()
+        &self.results[self.results.len() - 1]
     }
 
     /// Time a single execution of `f` (for long-running end-to-end cases).

@@ -1,0 +1,122 @@
+//! `bbml-lint` — project-contract static analysis driver.
+//!
+//! Walks the crate tree (`src/**` as library scope, `tests/*` as the
+//! oracle-reference corpus) and enforces the rules cataloged in
+//! [`bbml::analysis`]. Output is compiler-style `file:line: rule-id:
+//! message` lines plus a summary; `--json` additionally writes
+//! `results/LINT_report.json`.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/io error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use bbml::analysis;
+
+const USAGE: &str = "\
+bbml-lint: static analysis for bbml's hand-written contracts
+
+USAGE:
+    bbml-lint [--root <crate-dir>] [--json] [--quiet]
+
+OPTIONS:
+    --root <dir>   Crate root containing src/ and tests/.
+                   Default: ./ if ./src exists, else ./rust.
+    --json         Also write results/LINT_report.json (under the CWD).
+    --quiet        Suppress per-finding lines; print only the summary.
+    -h, --help     Show this help.
+
+Rules (suppress with `// bbml-lint: allow(rule-id) reason: ...`):
+    buffer-contract    *_into fns fill &mut destinations, never steal them
+    hot-path-alloc     `// bbml-lint: hot-path` fns may not allocate
+    no-unwrap          no unwrap/expect/panic! in library code
+    format-drift       store/mod.rs byte tables == store/format.rs codec
+    oracle-retention   declared bit-identity oracles stay test-referenced
+";
+
+fn detect_root() -> Option<PathBuf> {
+    if Path::new("src").is_dir() {
+        Some(PathBuf::from("."))
+    } else if Path::new("rust/src").is_dir() {
+        Some(PathBuf::from("rust"))
+    } else {
+        None
+    }
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json = false;
+    let mut quiet = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--quiet" => quiet = true,
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => {
+                    eprintln!("bbml-lint: --root requires a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("bbml-lint: unrecognized argument `{other}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root.or_else(detect_root) {
+        Some(r) => r,
+        None => {
+            eprintln!(
+                "bbml-lint: could not find a crate root (no ./src or ./rust/src); \
+                 pass --root <dir>"
+            );
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = match analysis::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bbml-lint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if quiet {
+        let text = report.render_text();
+        if let Some(summary) = text.lines().last() {
+            println!("{summary}");
+        }
+    } else {
+        print!("{}", report.render_text());
+    }
+
+    if json {
+        let out_dir = Path::new("results");
+        let out_path = out_dir.join("LINT_report.json");
+        let write = std::fs::create_dir_all(out_dir)
+            .and_then(|()| std::fs::write(&out_path, report.to_json()));
+        match write {
+            Ok(()) => eprintln!("bbml-lint: wrote {}", out_path.display()),
+            Err(e) => {
+                eprintln!("bbml-lint: failed to write {}: {e}", out_path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

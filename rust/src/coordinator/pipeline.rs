@@ -106,6 +106,7 @@ enum Shard {
 /// nothing): workers stop claiming chunks, the channel drains, and the
 /// all-shards-placed invariant is only asserted for runs that were not
 /// aborted.
+// bbml-lint: hot-path
 fn run_pipeline<F>(
     n: usize,
     layout: SketchLayout,
@@ -125,8 +126,15 @@ fn run_pipeline<F>(
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
+            // bbml-lint: allow(hot-path-alloc) reason: once per worker at
+            // spawn, not per row — cloning a SyncSender/Arc handle is the
+            // sanctioned way to share them across scoped threads.
             let out_tx = out_tx.clone();
+            // bbml-lint: allow(hot-path-alloc) reason: once per worker at
+            // spawn, not per row (Arc handle).
             let next = next.clone();
+            // bbml-lint: allow(hot-path-alloc) reason: once per worker at
+            // spawn, not per row (Arc handle).
             let stop = stop.clone();
             scope.spawn(move || {
                 // One scratch per worker: zero allocations per row after
@@ -276,6 +284,9 @@ pub fn hash_dataset(
 ) -> (BbitSignatureMatrix, PipelineStats) {
     let map = BbitMinwiseMap::new(ds.dim(), k, b, seed);
     let (out, stats) = sketch_dataset(ds, &map, opt);
+    // bbml-lint: allow(no-unwrap) reason: BbitMinwiseMap's layout is
+    // PackedBbit by construction, so the sketch is always the Bbit arm;
+    // a Dense here is a FeatureMap implementation bug.
     (out.into_bbit().expect("bbit map emits packed rows"), stats)
 }
 
@@ -291,6 +302,9 @@ pub fn hash_corpus(
 ) -> (BbitSignatureMatrix, PipelineStats) {
     let map = BbitMinwiseMap::new(sampler.config().dim, k, b, hash_seed);
     let (out, stats) = sketch_corpus(sampler, n_docs, &map, opt);
+    // bbml-lint: allow(no-unwrap) reason: BbitMinwiseMap's layout is
+    // PackedBbit by construction, so the sketch is always the Bbit arm;
+    // a Dense here is a FeatureMap implementation bug.
     (out.into_bbit().expect("bbit map emits packed rows"), stats)
 }
 

@@ -405,7 +405,7 @@ impl TrainSession {
                     if mid_epoch && c.every_shards > 0 && self.shard_pos % c.every_shards == 0 {
                         self.peak_resident_rows =
                             self.peak_resident_rows.max(stream.peak_resident_rows());
-                        self.checkpoint_into(c)?;
+                        self.write_checkpoint(c)?;
                     }
                 }
             }
@@ -413,7 +413,7 @@ impl TrainSession {
             drop(stream);
             self.advance_epoch();
             if let Some(c) = ckpt {
-                self.checkpoint_into(c)?;
+                self.write_checkpoint(c)?;
             }
         }
         self.finish(store, t0)
@@ -554,7 +554,7 @@ impl TrainSession {
 
     /// Write `ckpt-eEEEE-sSSSSS.ckpt` into the config's dir and refresh
     /// the [`CKPT_LATEST`] copy. Returns the named checkpoint's path.
-    fn checkpoint_into(&self, c: &CheckpointConfig) -> io::Result<PathBuf> {
+    fn write_checkpoint(&self, c: &CheckpointConfig) -> io::Result<PathBuf> {
         std::fs::create_dir_all(&c.dir)?;
         let path = c
             .dir

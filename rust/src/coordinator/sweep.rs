@@ -96,9 +96,12 @@ pub fn run_sweep(
                             None,
                             None,
                         )
+                        // bbml-lint: allow(no-unwrap) reason: Rust backends are
+                        // declared infallible by BackendKind::train's contract;
+                        // an Err here is a solver bug, not an input condition.
                         .expect("rust backends cannot fail");
                         let (acc, test_time) = evaluate(&out.model, &sig_test);
-                        records.lock().unwrap().push(SweepRecord {
+                        records.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(SweepRecord {
                             b,
                             k,
                             c,
@@ -114,11 +117,11 @@ pub fn run_sweep(
         }
     });
 
-    let mut out = records.into_inner().unwrap();
+    let mut out = records.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     out.sort_by(|a, b| {
         (a.b, a.k, a.rep)
             .cmp(&(b.b, b.k, b.rep))
-            .then(a.c.partial_cmp(&b.c).unwrap())
+            .then(a.c.total_cmp(&b.c))
     });
     out
 }
@@ -322,10 +325,13 @@ pub fn run_scheme_sweep(
                         None,
                         None,
                     )
+                    // bbml-lint: allow(no-unwrap) reason: Rust backends are
+                    // declared infallible by BackendKind::train's contract;
+                    // an Err here is a solver bug, not an input condition.
                     .expect("rust backends cannot fail");
                     let (acc, test_time) = evaluate_sketch(&out.model, &sk_test);
                     let layout = map.layout();
-                    records.lock().unwrap().push(SchemeRecord {
+                    records.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(SchemeRecord {
                         scheme,
                         k: layout.k(),
                         b: if scheme.is_dense() { 0 } else { spec.b },
@@ -341,7 +347,7 @@ pub fn run_scheme_sweep(
         }
     });
 
-    let mut out = records.into_inner().unwrap();
+    let mut out = records.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     out.sort_by(|a, b| {
         (a.scheme, a.storage_bits, a.k, a.rep).cmp(&(b.scheme, b.storage_bits, b.k, b.rep))
     });
@@ -440,6 +446,9 @@ pub fn run_bbit_vw_curve(
                         None,
                         None,
                     )
+                    // bbml-lint: allow(no-unwrap) reason: Rust backends are
+                    // declared infallible by BackendKind::train's contract;
+                    // an Err here is a solver bug, not an input condition.
                     .expect("rust backends cannot fail");
                     let (acc, test_time) = evaluate_sketch(&out.model, &sk_test);
                     let layout = map.layout();
@@ -448,7 +457,7 @@ pub fn run_bbit_vw_curve(
                     } else {
                         Scheme::BbitVw
                     };
-                    records.lock().unwrap().push(SchemeRecord {
+                    records.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(SchemeRecord {
                         scheme,
                         k: layout.k(),
                         b: spec.b,
@@ -464,7 +473,7 @@ pub fn run_bbit_vw_curve(
         }
     });
 
-    let mut out = records.into_inner().unwrap();
+    let mut out = records.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     out.sort_by(|a, b| {
         (a.scheme, a.storage_bits, a.k, a.rep).cmp(&(b.scheme, b.storage_bits, b.k, b.rep))
     });

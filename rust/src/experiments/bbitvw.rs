@@ -56,9 +56,10 @@ fn aggregate(recs: &[SchemeRecord]) -> Vec<CurvePoint> {
 
 pub fn run(cfg: &RunConfig) -> anyhow::Result<()> {
     let (train, test) = corpus_split(cfg);
-    let k = *cfg.k_list.iter().find(|&&k| k >= 100).unwrap_or(
-        cfg.k_list.last().expect("k_list must not be empty"),
-    );
+    let Some(&k) = cfg.k_list.iter().find(|&&k| k >= 100).or_else(|| cfg.k_list.last())
+    else {
+        anyhow::bail!("bbitvw experiment needs a non-empty k_list");
+    };
     let b = 8u32;
     let matched = matched_dense_k(k, b);
     // ¼× … 8× the matched-storage bucket count, deduped and ≥ 1.

@@ -45,11 +45,11 @@ fn run_solver(cfg: &RunConfig, backend: Backend, stem: &str) -> anyhow::Result<(
         .c_list
         .iter()
         .copied()
-        .min_by(|a, b| (a - 1.0).abs().partial_cmp(&(b - 1.0).abs()).unwrap())
+        .min_by(|a, b| (a - 1.0).abs().total_cmp(&(b - 1.0).abs()))
         .unwrap_or(1.0);
     let base_acc = baseline
         .iter()
-        .min_by(|a, b| (a.c - c_star).abs().partial_cmp(&(b.c - c_star).abs()).unwrap())
+        .min_by(|a, b| (a.c - c_star).abs().total_cmp(&(b.c - c_star).abs()))
         .map(|r| (r.accuracy, r.train_secs, r.test_secs));
     let mut rows = Vec::new();
     for a in agg.iter().filter(|a| (a.c - c_star).abs() < 1e-12) {

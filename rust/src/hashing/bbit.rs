@@ -67,9 +67,9 @@
 
 /// Extract the lowest `b` bits of each full hash value.
 ///
-/// This is the *reference* truncation — the fused encode path
-/// ([`pack_lanes_into_words`]) never materializes this intermediate, and
-/// property tests pin the two against each other.
+/// This is the *reference* truncation — the bit-identity oracle the
+/// fused encode path ([`pack_lanes_into_words`]) never materializes but
+/// must match; property tests pin the two against each other.
 #[inline]
 pub fn pack_lowest_bits(full: &[u64], b: u32) -> Vec<u16> {
     assert!((1..=16).contains(&b), "b must be in 1..=16");
@@ -85,6 +85,7 @@ pub fn pack_lowest_bits(full: &[u64], b: u32) -> Vec<u16> {
 /// bits beyond `lanes.len()·b` are left zero (the SWAR layout invariant).
 /// Values that straddle a word boundary (b ∤ 64) are split by carrying the
 /// spilled high bits into the next word's accumulator.
+// bbml-lint: hot-path
 pub fn pack_lanes_into_words(lanes: &[u64], b: u32, out: &mut [u64]) {
     assert!((1..=16).contains(&b), "b must be in 1..=16");
     let stride = (lanes.len() * b as usize).div_ceil(64);
@@ -110,11 +111,22 @@ pub fn pack_lanes_into_words(lanes: &[u64], b: u32, out: &mut [u64]) {
     if off > 0 {
         out[w] = acc;
     }
+    // Exit invariants of the packing state machine: the accumulator never
+    // carries bits above `off` (so the final word's pad bits stay zero),
+    // and the word cursor lands exactly on the stride.
+    debug_assert!(off == 0 || acc >> off == 0, "pad bits beyond k·b must stay zero");
+    debug_assert_eq!(
+        w + (off > 0) as usize,
+        stride,
+        "packed {w} full words + {} partial, want stride {stride}",
+        (off > 0) as usize
+    );
 }
 
 /// Pack `lanes` into a caller-owned word buffer under the in-place buffer
 /// contract: `out` is cleared and resized to the row stride, its capacity
 /// (and, once warm, its allocation) is reused across calls.
+// bbml-lint: hot-path
 pub fn pack_lanes(lanes: &[u64], b: u32, out: &mut Vec<u64>) {
     let stride = (lanes.len() * b as usize).div_ceil(64);
     out.clear();
@@ -351,6 +363,7 @@ impl BbitSignatureMatrix {
     /// Append a row straight from the 64-bit fold-min lane buffer:
     /// truncate each lane to b bits and pack into the row words in one
     /// fused pass ([`pack_lanes_into_words`]), no u16 intermediate.
+    // bbml-lint: hot-path
     pub fn push_row_from_lanes(&mut self, lanes: &[u64], label: f32) {
         assert_eq!(lanes.len(), self.k, "row width {} != k {}", lanes.len(), self.k);
         let start = self.words.len();
@@ -373,6 +386,7 @@ impl BbitSignatureMatrix {
     /// [`SketchMatrix::push_encoded`](crate::hashing::sketch::SketchMatrix)
     /// fast path: encoders pack once into the per-worker scratch, and the
     /// shard matrix takes the words verbatim.
+    // bbml-lint: hot-path
     pub fn push_packed_row(&mut self, row_words: &[u64], label: f32) {
         assert_eq!(
             row_words.len(),
@@ -382,6 +396,7 @@ impl BbitSignatureMatrix {
             self.stride
         );
         let used = self.k * self.b as usize;
+        debug_assert_eq!(self.stride, used.div_ceil(64), "stride drifted from k·b");
         debug_assert!(
             used % 64 == 0 || row_words[self.stride - 1] >> (used % 64) == 0,
             "pad bits beyond k·b must be zero"
@@ -455,6 +470,7 @@ impl BbitSignatureMatrix {
     /// Count matching positions between rows i and j — the Gram entry
     /// `k·P̂_b` (Theorem 2 / eq. (5) numerator). SWAR whenever b divides 64
     /// (see module docs): 64/b positions per xor+fold+popcount.
+    // bbml-lint: hot-path
     pub fn match_count(&self, i: usize, j: usize) -> usize {
         if 64 % self.b == 0 {
             self.k - mismatched_lanes(self.row_words(i), self.row_words(j), self.b)
@@ -463,8 +479,10 @@ impl BbitSignatureMatrix {
         }
     }
 
-    /// Scalar reference for [`Self::match_count`]: one `get_bits` pair per
-    /// position, valid for every b. Property tests assert SWAR == scalar.
+    /// Scalar reference for [`Self::match_count`] — the bit-identity
+    /// oracle: one `get_bits` pair per position, valid for every b.
+    /// Property tests assert SWAR == scalar.
+    // bbml-lint: hot-path
     pub fn match_count_scalar(&self, i: usize, j: usize) -> usize {
         let b = self.b as usize;
         let (bi, bj) = (i * self.stride * 64, j * self.stride * 64);
@@ -477,6 +495,7 @@ impl BbitSignatureMatrix {
 
     /// Match counts of row `i` against every row of the matrix — a full
     /// Gram row, the kernel-SVM row-cache fill unit (§5.1).
+    // bbml-lint: hot-path
     pub fn match_count_row_into(&self, i: usize, out: &mut Vec<u32>) {
         self.match_count_row_range_into(i, 0, out);
     }
@@ -484,6 +503,7 @@ impl BbitSignatureMatrix {
     /// Gram row of row `i` as `match_count(i, j) / divisor` for all j,
     /// written straight into `out` — no intermediate counts buffer (this
     /// is the kernel-SVM row-cache fill, so the second pass matters).
+    // bbml-lint: hot-path
     pub fn match_count_row_div_into(&self, i: usize, divisor: f64, out: &mut Vec<f64>) {
         out.clear();
         out.reserve(self.n);
@@ -503,6 +523,7 @@ impl BbitSignatureMatrix {
     /// Match counts of row `i` against rows `start..n` only — the
     /// upper-triangle fill unit for all-pairs sweeps (half the work of a
     /// full Gram row when callers discard `j ≤ i`).
+    // bbml-lint: hot-path
     pub fn match_count_row_range_into(&self, i: usize, start: usize, out: &mut Vec<u32>) {
         out.clear();
         out.reserve(self.n.saturating_sub(start));
@@ -528,6 +549,7 @@ impl BbitSignatureMatrix {
     }
 
     /// [`Self::match_count_block`] into a caller-owned tile buffer.
+    // bbml-lint: hot-path
     pub fn match_count_block_into(&self, rows_a: &[usize], rows_b: &[usize], out: &mut [u32]) {
         assert_eq!(out.len(), rows_a.len() * rows_b.len(), "tile size mismatch");
         const TILE_A: usize = 8;

@@ -347,8 +347,12 @@ impl FeatureMap for BbitMinwiseMap {
         }
     }
 
+    // bbml-lint: hot-path
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
         let RowMut::Packed { words, lanes } = row else {
+            // bbml-lint: allow(no-unwrap) reason: layout guard — a caller
+            // handing the wrong scratch variant is API misuse (the layout
+            // is fixed by Scheme), not a data condition to propagate.
             panic!("PackedBbit scheme encodes into the packed-word scratch");
         };
         if self.legacy {
@@ -408,8 +412,12 @@ impl FeatureMap for VwFeatureMap {
         SketchLayout::SparseF32 { k: self.hasher.k }
     }
 
+    // bbml-lint: hot-path
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
         let RowMut::Dense { out, pairs, .. } = row else {
+            // bbml-lint: allow(no-unwrap) reason: layout guard — a caller
+            // handing the wrong scratch variant is API misuse, not a data
+            // condition to propagate.
             panic!("VW encodes into a dense f32 row");
         };
         let k = self.hasher.k;
@@ -469,8 +477,12 @@ impl FeatureMap for ProjectionMap {
         SketchLayout::DenseF32 { k: self.proj.k }
     }
 
+    // bbml-lint: hot-path
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
         let RowMut::Dense { out, pairs, .. } = row else {
+            // bbml-lint: allow(no-unwrap) reason: layout guard — a caller
+            // handing the wrong scratch variant is API misuse, not a data
+            // condition to propagate.
             panic!("random projections encode into a dense f32 row");
         };
         // This encoder overwrites all k entries: invalidate the VW sparse
@@ -542,8 +554,12 @@ impl FeatureMap for BbitVwMap {
         SketchLayout::DenseF32 { k: self.vw.k }
     }
 
+    // bbml-lint: hot-path
     fn encode_into(&self, set: &[u64], row: RowMut<'_>) {
         let RowMut::Dense { out, lanes, pairs } = row else {
+            // bbml-lint: allow(no-unwrap) reason: layout guard — a caller
+            // handing the wrong scratch variant is API misuse, not a data
+            // condition to propagate.
             panic!("bbit_vw encodes into a dense f32 row (with lane scratch)");
         };
         // Full-row overwrite: invalidate the VW touched-entry record (see

@@ -100,6 +100,7 @@ impl MinwiseHasher {
     /// k, and filled with `z_j = min π_j(S)` for every lane in a single
     /// scan of `set` (module docs). `out`'s capacity is reused, never
     /// stolen. Bit-identical to [`Self::signature_scalar_into`].
+    // bbml-lint: hot-path
     pub fn signature_batch_into(&self, set: &[u64], out: &mut Vec<u64>) {
         out.clear();
         if set.is_empty() {
@@ -115,6 +116,7 @@ impl MinwiseHasher {
     /// the pipeline). Kept callable for the equivalence property tests and
     /// the old-vs-batched micro-benchmark; fills `out` in place like every
     /// other `*_into`.
+    // bbml-lint: oracle
     pub fn signature_scalar_into(&self, set: &[u64], out: &mut Vec<u64>) {
         out.clear();
         out.reserve(self.k());
@@ -155,6 +157,7 @@ impl MinwiseHasher {
     /// zero), both under the in-place buffer contract. This is what
     /// `BbitMinwiseMap::encode_into` runs per row — the `u16` intermediate
     /// of the legacy three-buffer path is gone.
+    // bbml-lint: hot-path
     pub fn signature_packed_into(
         &self,
         set: &[u64],

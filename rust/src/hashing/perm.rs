@@ -263,6 +263,7 @@ impl PermutationBank {
     /// inner lane loops fully unroll — keys are hoisted into a local array
     /// and the running minima stay in registers for the whole block.
     #[inline(always)]
+    // bbml-lint: hot-path
     fn fold_block<const L: usize>(
         &self,
         block: &[u64],
@@ -298,6 +299,7 @@ impl PermutationBank {
     /// corpora larger than cache. With the off-by-default `portable-simd`
     /// feature (nightly), the 8-wide group runs on `std::simd::u64x8`
     /// instead, with masked-select cycle walking for bit-identity.
+    // bbml-lint: hot-path
     pub fn fold_min_into(&self, set: &[u64], mins: &mut [u64]) {
         let k = self.k();
         assert_eq!(mins.len(), k, "mins width {} != k {}", mins.len(), k);

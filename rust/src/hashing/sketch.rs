@@ -274,6 +274,9 @@ impl SketchMatrix {
         match (self, other) {
             (Self::Bbit(a), Self::Bbit(b)) => a.append(b),
             (Self::Dense(a), Self::Dense(b)) => a.append(b),
+            // bbml-lint: allow(no-unwrap) reason: layout mismatch between
+            // shards of one run is API misuse (the pipeline fixes the
+            // scheme up front), not a recoverable input condition.
             _ => panic!("cannot merge sketches of different layouts"),
         }
     }
@@ -284,6 +287,9 @@ impl SketchMatrix {
         match (self, other) {
             (Self::Bbit(a), Self::Bbit(b)) => a.copy_rows_from(b, dst_row),
             (Self::Dense(a), Self::Dense(b)) => a.copy_rows_from(b, dst_row),
+            // bbml-lint: allow(no-unwrap) reason: layout mismatch between
+            // shards of one run is API misuse (the pipeline fixes the
+            // scheme up front), not a recoverable input condition.
             _ => panic!("cannot place a shard of a different layout"),
         }
     }

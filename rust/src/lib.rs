@@ -41,6 +41,7 @@
 //! See `DESIGN.md` for the per-experiment index and substitutions, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod coordinator;

@@ -39,6 +39,9 @@ pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Xoshiro256)) {
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
+            // bbml-lint: allow(no-unwrap) reason: this panic IS the
+            // property harness's failure reporter — it must abort the test
+            // with the replay seed, exactly like assert! would.
             panic!(
                 "property '{name}' failed on case {case} (replay with \
                  BBML_PROP_SEED={base} — failing seed {seed:#x}):\n  {msg}"

@@ -52,7 +52,10 @@ impl Runtime {
     /// Load + compile an artifact (cached).
     fn executable(&self, meta: &ArtifactMeta) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = self
+                .cache
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             if let Some(exe) = cache.get(&meta.name) {
                 return Ok(exe.clone());
             }
@@ -71,7 +74,7 @@ impl Runtime {
         let exe = std::sync::Arc::new(exe);
         self.cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .insert(meta.name.clone(), exe.clone());
         Ok(exe)
     }

@@ -87,6 +87,7 @@ impl Kernel for BbitKernel<'_> {
         self.sigs.match_count(i, j) as f64 / self.sigs.k() as f64
     }
 
+    // bbml-lint: hot-path
     fn fill_row(&self, i: usize, out: &mut Vec<f64>) {
         self.sigs.match_count_row_div_into(i, self.sigs.k() as f64, out);
     }

@@ -98,6 +98,32 @@ fn bad(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("shard: {msg}"))
 }
 
+/// LE decode over a slice whose first 4 bytes exist (callers guarantee
+/// length via `chunks_exact` or a checked fixed range, so no fallible
+/// `try_into` is needed).
+fn u32_le(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(a)
+}
+
+/// LE decode over a slice whose first 8 bytes exist.
+fn u64_le(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(a)
+}
+
+/// f32 from the LE bit pattern in a slice's first 4 bytes.
+fn f32_le(b: &[u8]) -> f32 {
+    f32::from_bits(u32_le(b))
+}
+
+/// f64 from the LE bit pattern in a slice's first 8 bytes.
+fn f64_le(b: &[u8]) -> f64 {
+    f64::from_bits(u64_le(b))
+}
+
 /// Decoded fixed header of one shard file.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardHeader {
@@ -162,8 +188,8 @@ impl ShardHeader {
         if buf[0..8] != MAGIC {
             return Err(bad("bad magic (not a BBSHARD file)".into()));
         }
-        let u32_at = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
-        let u64_at = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+        let u32_at = |o: usize| u32_le(&buf[o..o + 4]);
+        let u64_at = |o: usize| u64_le(&buf[o..o + 8]);
         let version = u32_at(8);
         if !(1..=VERSION).contains(&version) {
             return Err(bad(format!(
@@ -251,6 +277,16 @@ fn encode_payload(m: &SketchMatrix) -> Vec<u8> {
     }
 }
 
+/// Debug-build cross-check for streaming readers: the CRC a decoded
+/// matrix would re-encode to. Equal to the header's `payload_crc32`
+/// whenever decode is lossless (it must be — the payload encoding is
+/// bijective). Compiled only under `debug_assertions`; release readers
+/// already verify the stored bytes' CRC on the read path.
+#[cfg(debug_assertions)]
+pub(crate) fn debug_reencode_crc(m: &SketchMatrix) -> u32 {
+    crc32(&encode_payload(m))
+}
+
 /// Inverse of [`encode_payload`] for a validated header. All size
 /// arithmetic is checked: a corrupt `n_rows` must surface as
 /// `InvalidData`, never as an arithmetic panic.
@@ -278,14 +314,8 @@ fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<SketchMatrix> {
             )));
         }
         let (val_bytes, label_bytes) = raw.split_at(n_vals * 4);
-        let values: Vec<f32> = val_bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        let labels: Vec<f32> = label_bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let values: Vec<f32> = val_bytes.chunks_exact(4).map(f32_le).collect();
+        let labels: Vec<f32> = label_bytes.chunks_exact(4).map(f32_le).collect();
         return Ok(SketchMatrix::Dense(F32Matrix::from_raw_parts(
             hdr.k, values, labels,
         )));
@@ -312,14 +342,8 @@ fn decode_payload(hdr: &ShardHeader, raw: &[u8]) -> io::Result<SketchMatrix> {
         )));
     }
     let (word_bytes, label_bytes) = raw.split_at(n_words * 8);
-    let words: Vec<u64> = word_bytes
-        .chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    let labels: Vec<f32> = label_bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
+    let words: Vec<u64> = word_bytes.chunks_exact(8).map(u64_le).collect();
+    let labels: Vec<f32> = label_bytes.chunks_exact(4).map(f32_le).collect();
     Ok(SketchMatrix::Bbit(BbitSignatureMatrix::from_raw_parts(
         hdr.k, hdr.b, words, labels,
     )))
@@ -387,15 +411,15 @@ pub fn read_framed_file(
             path.display()
         )));
     }
-    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let version = u32_le(&bytes[8..12]);
     if !(1..=max_version).contains(&version) {
         return Err(bad(format!(
             "{}: unsupported {what} version {version} (want 1..={max_version})",
             path.display()
         )));
     }
-    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
-    let crc = u32::from_le_bytes(bytes[24..28].try_into().unwrap());
+    let payload_len = u64_le(&bytes[16..24]) as usize;
+    let crc = u32_le(&bytes[24..28]);
     let stored = bytes.len() - FRAMED_HEADER_LEN;
     if stored != payload_len {
         return Err(bad(format!(
@@ -443,11 +467,11 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn u32(&mut self) -> io::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32_le(self.take(4)?))
     }
 
     pub fn u64(&mut self) -> io::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64_le(self.take(8)?))
     }
 
     pub fn usize(&mut self) -> io::Result<usize> {
@@ -461,28 +485,19 @@ impl<'a> ByteReader<'a> {
     /// `n` f32 values (exact bit patterns).
     pub fn f32_vec(&mut self, n: usize) -> io::Result<Vec<f32>> {
         let bytes = self.take(n.checked_mul(4).ok_or_else(|| bad("implausible f32 count".into()))?)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(bytes.chunks_exact(4).map(f32_le).collect())
     }
 
     /// `n` f64 values (exact bit patterns).
     pub fn f64_vec(&mut self, n: usize) -> io::Result<Vec<f64>> {
         let bytes = self.take(n.checked_mul(8).ok_or_else(|| bad("implausible f64 count".into()))?)?;
-        Ok(bytes
-            .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(bytes.chunks_exact(8).map(f64_le).collect())
     }
 
     /// `n` u64 values.
     pub fn u64_vec(&mut self, n: usize) -> io::Result<Vec<u64>> {
         let bytes = self.take(n.checked_mul(8).ok_or_else(|| bad("implausible u64 count".into()))?)?;
-        Ok(bytes
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(bytes.chunks_exact(8).map(u64_le).collect())
     }
 
     /// Assert the payload is fully consumed (trailing garbage is corruption).

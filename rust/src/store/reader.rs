@@ -260,6 +260,17 @@ impl ShardStream {
                             hdr.b
                         )));
                     }
+                    // Debug builds re-encode the decoded matrix and check
+                    // its CRC against the header: decode must be lossless
+                    // (read_shard_file already verified the stored bytes,
+                    // so a mismatch here is a decode bug, not disk rot).
+                    #[cfg(debug_assertions)]
+                    debug_assert_eq!(
+                        format::debug_reencode_crc(&m),
+                        hdr.payload_crc32,
+                        "{}: decoded shard does not re-encode to its own CRC",
+                        path.display()
+                    );
                     let resident = live.fetch_add(m.n(), Ordering::SeqCst) + m.n();
                     peak.fetch_max(resident, Ordering::SeqCst);
                     Ok(StreamedShard {

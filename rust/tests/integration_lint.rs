@@ -1,0 +1,383 @@
+//! bbml-lint self-tests: per-rule fixtures (a known-bad source that must
+//! produce the exact finding, and a known-good twin that must pass), the
+//! suppression contract (a reasoned allow silences, a reason-less allow is
+//! itself a finding), and the keystone check — the lint runs clean on this
+//! repo's real `src/` tree, which is what keeps every fixture honest.
+//!
+//! Fixtures are inline string literals: the scanner blanks string contents
+//! before rule matching, so the banned tokens quoted *inside this file*
+//! never leak into a lint of the test tree itself.
+
+use std::path::Path;
+
+use bbml::analysis::rules::{
+    R1_BUFFER_CONTRACT, R2_HOT_PATH_ALLOC, R3_NO_UNWRAP, R4_FORMAT_DRIFT, R5_ORACLE_RETENTION,
+};
+use bbml::analysis::{lint_sources, lint_tree, LintReport};
+
+fn src(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs
+        .iter()
+        .map(|(p, t)| (p.to_string(), t.to_string()))
+        .collect()
+}
+
+fn lint_lib(pairs: &[(&str, &str)]) -> LintReport {
+    lint_sources(&src(pairs), &[])
+}
+
+/// Assert the report contains exactly the expected `(rule, line)` pairs,
+/// in any multiplicity order, and nothing else.
+fn assert_findings(rep: &LintReport, expected: &[(&str, usize)]) {
+    let mut got: Vec<(&str, usize)> = rep.findings.iter().map(|f| (f.rule, f.line)).collect();
+    let mut want = expected.to_vec();
+    got.sort_unstable();
+    want.sort_unstable();
+    assert_eq!(got, want, "findings:\n{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R1 ----
+
+#[test]
+fn r1_flags_into_without_mut_dest_bad_return_and_buffer_steal() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn pack_into(v: &[u64]) -> Vec<u64> {\n\
+         \x20   v.to_vec()\n\
+         }\n\
+         pub fn steal_into(dst: &mut Vec<u64>, src: &mut Vec<u64>) {\n\
+         \x20   *dst = std::mem::take(src);\n\
+         }\n",
+    )]);
+    assert_findings(
+        &rep,
+        &[
+            (R1_BUFFER_CONTRACT, 1), // no &mut destination
+            (R1_BUFFER_CONTRACT, 1), // returns Vec<u64>
+            (R1_BUFFER_CONTRACT, 5), // mem::take inside an _into body
+        ],
+    );
+    assert!(rep.findings[0].message.contains("pack_into"));
+}
+
+#[test]
+fn r1_accepts_the_contractual_shapes() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn fill_into(out: &mut [u64], x: u64) {\n\
+         \x20   out[0] = x;\n\
+         }\n\
+         pub fn encode_into(set: &[u32], row: RowMut<'_>) -> io::Result<()> {\n\
+         \x20   Ok(())\n\
+         }\n",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R2 ----
+
+#[test]
+fn r2_flags_alloc_in_annotated_hot_path_only() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "// bbml-lint: hot-path\n\
+         pub fn hot(out: &mut Vec<u64>) {\n\
+         \x20   let tmp: Vec<u64> = (0..4).collect();\n\
+         \x20   out.extend(tmp.clone());\n\
+         }\n\
+         pub fn cold(out: &mut Vec<u64>) {\n\
+         \x20   let tmp: Vec<u64> = (0..4).collect();\n\
+         \x20   out.extend(tmp);\n\
+         }\n",
+    )]);
+    assert_findings(
+        &rep,
+        &[(R2_HOT_PATH_ALLOC, 3), (R2_HOT_PATH_ALLOC, 4)],
+    );
+    assert!(rep.findings[0].message.contains("hot"));
+}
+
+#[test]
+fn r2_accepts_amortized_buffer_reuse() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "// bbml-lint: hot-path\n\
+         pub fn hot(out: &mut Vec<u64>, row: &[u64]) {\n\
+         \x20   out.clear();\n\
+         \x20   out.reserve(row.len());\n\
+         \x20   out.extend_from_slice(row);\n\
+         }\n",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R3 ----
+
+#[test]
+fn r3_flags_unwrap_expect_panic_in_library_code() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n\
+         \x20   x.unwrap()\n\
+         }\n\
+         pub fn g(x: Option<u32>) -> u32 {\n\
+         \x20   x.expect(\"present\")\n\
+         }\n\
+         pub fn h() {\n\
+         \x20   panic!(\"boom\");\n\
+         }\n",
+    )]);
+    assert_findings(
+        &rep,
+        &[(R3_NO_UNWRAP, 2), (R3_NO_UNWRAP, 5), (R3_NO_UNWRAP, 8)],
+    );
+}
+
+#[test]
+fn r3_skips_cfg_test_regions_debug_assert_and_strings() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>) -> bool {\n\
+         \x20   debug_assert!(x.map(|v| v > 0).unwrap_or(true));\n\
+         \x20   // a comment saying .unwrap() is not a call\n\
+         \x20   let s = \".unwrap()\";\n\
+         \x20   !s.is_empty()\n\
+         }\n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+         \x20   #[test]\n\
+         \x20   fn t() {\n\
+         \x20       Some(1u32).unwrap();\n\
+         \x20   }\n\
+         }\n",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R4 ----
+
+/// A minimal store/mod.rs + store/format.rs pair that satisfies every R4
+/// check: contiguous doc tables with terminators, header-length constants,
+/// the magic literal, the documented version, and matching encode ranges.
+const R4_GOOD_DOCS: &str = "\
+//! # Shard file layout (version 1)
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----
+//!      0     8  magic            b\"BBSHARD\\0\"
+//!      8     4  version          u32
+//!     12     4  n_rows           u32
+//!     16     …  payload
+//! ```
+//!
+//! # Framed blob formats (CKPT)
+//!
+//! ```text
+//!      0     4  magic            b\"BBCK\" (alias BBCKPT)
+//!      4     4  payload_crc32    u32
+//!      8     …  payload
+//! ```
+";
+
+const R4_GOOD_FORMAT: &str = "\
+pub const MAGIC: &[u8; 8] = b\"BBSHARD\\0\";
+pub const VERSION: u32 = 1;
+pub const HEADER_LEN: usize = 16;
+pub const FRAMED_HEADER_LEN: usize = 8;
+impl ShardHeader {
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[0..8].copy_from_slice(MAGIC);
+        out[8..12].copy_from_slice(&self.version.to_le_bytes());
+        out[12..16].copy_from_slice(&self.n_rows.to_le_bytes());
+        out
+    }
+}
+";
+
+#[test]
+fn r4_accepts_agreeing_docs_and_codec() {
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", R4_GOOD_DOCS),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+    ]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+#[test]
+fn r4_flags_header_len_and_encode_range_drift() {
+    // Same docs, but the codec disagrees: HEADER_LEN says 24 while the
+    // documented payload starts at 16, and n_rows is written as 8 bytes
+    // where the table documents 4.
+    let drifted = R4_GOOD_FORMAT
+        .replace("HEADER_LEN: usize = 16", "HEADER_LEN: usize = 24")
+        .replace("out[12..16].copy_from_slice(&self.n_rows", "out[12..20].copy_from_slice(&self.n_rows");
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", R4_GOOD_DOCS),
+        ("src/store/format.rs", &drifted),
+    ]);
+    let rules: Vec<&str> = rep.findings.iter().map(|f| f.rule).collect();
+    assert_eq!(
+        rules,
+        vec![R4_FORMAT_DRIFT, R4_FORMAT_DRIFT],
+        "{}",
+        rep.render_text()
+    );
+    assert!(rep.findings.iter().any(|f| f.message.contains("HEADER_LEN")));
+    assert!(rep.findings.iter().any(|f| f.message.contains("n_rows")));
+}
+
+#[test]
+fn r4_flags_noncontiguous_doc_table() {
+    let gapped = R4_GOOD_DOCS.replace("//!     12     4  n_rows", "//!     13     4  n_rows");
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", &gapped),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+    ]);
+    assert!(
+        rep.findings
+            .iter()
+            .any(|f| f.rule == R4_FORMAT_DRIFT && f.message.contains("n_rows")),
+        "{}",
+        rep.render_text()
+    );
+}
+
+#[test]
+fn r4_only_runs_on_the_store_pair() {
+    // The same drifted codec under a different path is out of R4's scope.
+    let rep = lint_lib(&[("src/other.rs", R4_GOOD_FORMAT)]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R5 ----
+
+#[test]
+fn r5_flags_unreferenced_oracles_by_doc_phrase_and_annotation() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "/// The bit-identity oracle the fused path must match.\n\
+         pub fn slow_ref(xs: &[u64]) -> u64 {\n\
+         \x20   xs.iter().sum()\n\
+         }\n\
+         // bbml-lint: oracle\n\
+         pub fn scalar_ref(xs: &[u64]) -> u64 {\n\
+         \x20   xs.iter().fold(0, |a, b| a ^ b)\n\
+         }\n",
+    )]);
+    assert_findings(
+        &rep,
+        &[(R5_ORACLE_RETENTION, 2), (R5_ORACLE_RETENTION, 6)],
+    );
+}
+
+#[test]
+fn r5_satisfied_by_tests_dir_or_cfg_test_references() {
+    let lib = "\
+/// The bit-identity oracle the fused path must match.
+pub fn slow_ref(xs: &[u64]) -> u64 {
+    xs.iter().sum()
+}
+// bbml-lint: oracle
+pub fn scalar_ref(xs: &[u64]) -> u64 {
+    xs.iter().fold(0, |a, b| a ^ b)
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pins_scalar() {
+        assert_eq!(super::scalar_ref(&[1, 2]), 3);
+    }
+}
+";
+    let tests = "\
+#[test]
+fn pins_slow() {
+    assert_eq!(bbml::slow_ref(&[1, 2]), 3);
+}
+";
+    let rep = lint_sources(
+        &src(&[("src/fix.rs", lib)]),
+        &src(&[("tests/integration_fix.rs", tests)]),
+    );
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ------------------------------------------------------- suppressions ----
+
+#[test]
+fn reasoned_allow_suppresses_and_is_counted() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n\
+         \x20   // bbml-lint: allow(no-unwrap) reason: contract check on\n\
+         \x20   // programmer error, not on input\n\
+         \x20   x.unwrap()\n\
+         }\n",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+    assert_eq!(rep.suppressed, 1);
+}
+
+#[test]
+fn reasonless_allow_does_not_suppress_and_is_itself_reported() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n\
+         \x20   // bbml-lint: allow(no-unwrap)\n\
+         \x20   x.unwrap()\n\
+         }\n",
+    )]);
+    assert_eq!(rep.suppressed, 0);
+    assert_findings(&rep, &[(R3_NO_UNWRAP, 3), ("lint-directive", 2)]);
+    assert!(rep.findings.iter().any(|f| f.message.contains("no reason")));
+}
+
+#[test]
+fn allow_of_unknown_rule_is_reported() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "// bbml-lint: allow(no-such-rule) reason: because\n\
+         pub fn f() {}\n",
+    )]);
+    assert_findings(&rep, &[("lint-directive", 1)]);
+    assert!(rep.findings[0].message.contains("unknown rule"));
+}
+
+#[test]
+fn allow_covers_only_its_target_line() {
+    // The directive anchors to the next code line; a second violation two
+    // lines down stays reported.
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {\n\
+         \x20   // bbml-lint: allow(no-unwrap) reason: checked above\n\
+         \x20   let a = x.unwrap();\n\
+         \x20   a + y.unwrap()\n\
+         }\n",
+    )]);
+    assert_eq!(rep.suppressed, 1);
+    assert_findings(&rep, &[(R3_NO_UNWRAP, 4)]);
+}
+
+// ----------------------------------------------------- the real tree ----
+
+#[test]
+fn lint_runs_clean_on_this_repo() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rep = lint_tree(root).expect("lint_tree walks the crate");
+    assert!(
+        rep.is_clean(),
+        "bbml-lint found contract violations in the tree:\n{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.files_scanned > 50,
+        "expected the full src tree, scanned only {} files",
+        rep.files_scanned
+    );
+    // The tree carries justified suppressions (layout-guard panics, poison
+    // recovery notes); the count proves the allow machinery ran.
+    assert!(rep.suppressed > 0);
+}
