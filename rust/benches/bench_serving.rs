@@ -1,0 +1,140 @@
+//! Serving-path benchmarks: an in-process scoring server on a loopback
+//! socket, hammered by real `ScoreClient` connections.
+//!
+//! Two questions, matching the serving acceptance numbers:
+//!
+//! 1. **Rows/s** — end-to-end wire throughput at 1/4/8 concurrent client
+//!    threads, batched (64 rows/request) vs single-row requests. The gap
+//!    between the two is the framing+syscall overhead a batch amortizes.
+//! 2. **Request latency** — single-connection p50/p95/p99 per request
+//!    (benchkit records the full percentile set per entry).
+//!
+//! Results land in `results/BENCH_serving.{json,csv}` — every entry
+//! carries `median_ns`/`p95_ns`/`p99_ns` and the throughput entries add
+//! median-based `items_per_sec` (rows/s). Set `BBML_BENCH_FAST=1` for a
+//! CI-sized run.
+
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::coordinator::report::weights_crc32;
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::feature_map::{FeatureMapSpec, Scheme};
+use bbml::rng::Xoshiro256;
+use bbml::serve::{serve, ModelSlot, ScoreClient, ServeOptions, ServeStats, ServedModel};
+use bbml::solvers::LinearModel;
+use bbml::store::ModelArtifact;
+
+fn main() {
+    let mut b = Bencher::new();
+    let fast = std::env::var("BBML_BENCH_FAST").ok().as_deref() == Some("1");
+    let reqs_per_thread = if fast { 4 } else { 16 };
+
+    // The served model: b-bit minwise, the paper's sweet spot (k=64, b=4),
+    // synthetic weights — serving cost is encode + dot product, which does
+    // not care how the weights were trained.
+    let dim = 1u64 << 24;
+    let spec = FeatureMapSpec::new(Scheme::Bbit, dim, 64, 4, 42);
+    let n_weights = spec.layout().train_dim();
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    let w: Vec<f32> = (0..n_weights).map(|_| rng.gen_f32() - 0.5).collect();
+    let artifact = ModelArtifact::new(
+        spec,
+        LinearModel {
+            w,
+            iters: 1,
+            objective: 0.0,
+        },
+    )
+    .unwrap();
+    let crc32 = weights_crc32(&artifact.model.w);
+    let served = ServedModel {
+        artifact,
+        crc32,
+        source: "/dev/null".into(),
+        mtime: None,
+    };
+
+    let slot = Arc::new(ModelSlot::new(served));
+    let stats = Arc::new(ServeStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let (slot, stats, stop) = (Arc::clone(&slot), Arc::clone(&stats), Arc::clone(&stop));
+        std::thread::spawn(move || {
+            let opt = ServeOptions {
+                workers: 8,
+                ..Default::default()
+            };
+            serve(listener, slot, stats, &opt, stop).unwrap();
+        })
+    };
+
+    // The request workload: synthetic shingled documents, the rows a real
+    // client would ship raw over the wire.
+    let cfg = SynthConfig {
+        n_docs: 512,
+        dim,
+        vocab: 20_000,
+        mean_len: 60,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let rows: Vec<Vec<u64>> = (0..ds.n()).map(|i| ds.row(i).to_vec()).collect();
+    println!(
+        "workload: {} rows, avg nnz {:.1}, server {addr} (k=64, b=4, crc32 {crc32})",
+        rows.len(),
+        ds.avg_nnz()
+    );
+
+    // --- 1. rows/s: client fan-in × batched vs single-row requests -------
+    for &threads in &[1usize, 4, 8] {
+        for &(label, batch) in &[("batched", 64usize), ("single", 1usize)] {
+            // One pre-connected client per thread, reused across
+            // iterations so connect cost never pollutes the samples.
+            let clients: Vec<Mutex<ScoreClient>> = (0..threads)
+                .map(|_| Mutex::new(ScoreClient::connect(addr).unwrap()))
+                .collect();
+            let rows_ref = &rows;
+            let total_rows = (threads * reqs_per_thread * batch) as u64;
+            b.bench_throughput(
+                &format!("serve/{label} batch={batch} clients={threads}"),
+                total_rows,
+                || {
+                    std::thread::scope(|s| {
+                        for client in &clients {
+                            s.spawn(move || {
+                                let mut c = client.lock().unwrap();
+                                for r in 0..reqs_per_thread {
+                                    let start = (r * batch) % rows_ref.len();
+                                    let end = (start + batch).min(rows_ref.len());
+                                    let (crc, scores) = c.score(&rows_ref[start..end]).unwrap();
+                                    black_box((crc, scores.len()));
+                                }
+                            });
+                        }
+                    });
+                },
+            );
+        }
+    }
+
+    // --- 2. per-request latency on one quiet connection ------------------
+    let mut client = ScoreClient::connect(addr).unwrap();
+    for &batch in &[1usize, 64] {
+        b.bench(&format!("latency/batch={batch} clients=1"), || {
+            let (crc, scores) = client.score(&rows[..batch]).unwrap();
+            black_box((crc, scores.len()));
+        });
+    }
+
+    println!("server gauges: {}", client.stats().unwrap());
+    client.shutdown().unwrap();
+    server.join().unwrap();
+
+    b.write_json("results/BENCH_serving.json").unwrap();
+    b.write_csv("results/BENCH_serving.csv").unwrap();
+}

@@ -37,13 +37,16 @@
 //!   poisoned locks) may stay, suppressed with a reason.
 //!
 //! * **`format-drift` (R4)** — the byte-layout tables in `store/mod.rs`
-//!   docs must agree with `store/format.rs`: table rows contiguous,
-//!   `HEADER_LEN`/`FRAMED_HEADER_LEN` equal to the documented payload
-//!   offsets, the `MAGIC` literal and `VERSION` as documented, and every
-//!   `out[a..b]` write in `ShardHeader::encode` matching its documented
-//!   (offset, size). Rationale: the docs are the interchange spec other
-//!   tools read; drift between spec and codec is silent corruption-by-
-//!   documentation.
+//!   docs must agree with the codecs: table rows contiguous,
+//!   `HEADER_LEN`/`FRAMED_HEADER_LEN` (`store/format.rs`) and
+//!   `FRAME_HEADER_LEN` (`serve/protocol.rs`) equal to the documented
+//!   payload offsets, the `MAGIC`/`FRAME_MAGIC` literals and
+//!   `VERSION`/`FRAME_VERSION` as documented, and every `out[a..b]` write
+//!   in `ShardHeader::encode` / `FrameHeader::encode` matching its
+//!   documented (offset, size). A serve protocol without its doc table
+//!   (or vice versa) is itself drift. Rationale: the docs are the
+//!   interchange spec other tools read; drift between spec and codec is
+//!   silent corruption-by-documentation.
 //!
 //! * **`oracle-retention` (R5)** — every function whose doc comment
 //!   declares it a *bit-identity oracle* (or annotated

@@ -37,8 +37,8 @@ pub const RULES: &[(&str, &str)] = &[
     ),
     (
         R4_FORMAT_DRIFT,
-        "store/format.rs constants and encode offsets must agree with the \
-         byte-layout tables documented in store/mod.rs",
+        "store/format.rs and serve/protocol.rs constants and encode offsets \
+         must agree with the byte-layout tables documented in store/mod.rs",
     ),
     (
         R5_ORACLE_RETENTION,
@@ -429,76 +429,228 @@ pub fn check_format_drift(files: &[SourceFile]) -> Vec<Finding> {
     // Encode ranges: every `out[a..b]` / `out[i]` write in
     // ShardHeader::encode must match the documented (offset, size) of the
     // field it names.
-    let encode = fmt.functions.iter().find(|f| {
+    if let (Some(encode), Some(shard)) = (find_encode_fn(fmt, "MAGIC"), shard) {
+        check_encode_offsets(fmt, encode, "MAGIC", shard, "shard", &mut out);
+    }
+
+    // The serve frame header gets the same drift discipline: the "Serve
+    // wire frames" table in store/mod.rs vs serve/protocol.rs. A tree with
+    // neither is fine; one without the other is itself drift.
+    let serve_table = tables
+        .iter()
+        .find(|t| t.iter().any(|r| r.raw.contains("BBSERVE")));
+    let proto = files
+        .iter()
+        .find(|f| f.path.ends_with("serve/protocol.rs"));
+    match (proto, serve_table) {
+        (None, None) => {}
+        (Some(proto), None) => out.push(finding(
+            proto,
+            1,
+            R4_FORMAT_DRIFT,
+            "serve/protocol.rs exists but store/mod.rs documents no serve \
+             frame byte table (magic BBSERVE)"
+                .to_string(),
+        )),
+        (None, Some(table)) => out.push(finding(
+            docs,
+            table.first().map(|r| r.line).unwrap_or(1),
+            R4_FORMAT_DRIFT,
+            "store/mod.rs documents a serve frame table but the tree has no \
+             serve/protocol.rs"
+                .to_string(),
+        )),
+        (Some(proto), Some(table)) => check_frame_header(proto, docs, table, &mut out),
+    }
+    out
+}
+
+/// The header-encoding fn of a codec file: named `encode`, body mentions
+/// the file's magic constant (distinguishes it from payload codecs).
+fn find_encode_fn<'a>(file: &'a SourceFile, magic_token: &str) -> Option<&'a FnItem> {
+    file.functions.iter().find(|f| {
         f.name == "encode"
             && f.body
                 .map(|(s, e)| {
-                    fmt.lines[s - 1..e]
+                    file.lines[s - 1..e]
                         .iter()
-                        .any(|l| contains_word(&l.code, "MAGIC"))
+                        .any(|l| contains_word(&l.code, magic_token))
                 })
                 .unwrap_or(false)
-    });
-    if let (Some(encode), Some(shard)) = (encode, shard) {
-        if let Some((start, end)) = encode.body {
-            for (idx, line) in fmt.lines.iter().enumerate().take(end).skip(start - 1) {
-                let code = &line.code;
-                let Some(open) = code.find("out[") else { continue };
-                let Some(close_rel) = code[open..].find(']') else { continue };
-                let range = &code[open + 4..open + close_rel];
-                let (a, b) = match range.split_once("..") {
-                    Some((lo, hi)) => {
-                        let (Ok(lo), Ok(hi)) =
-                            (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
-                        else {
-                            continue;
-                        };
-                        (lo, hi)
-                    }
-                    None => match range.trim().parse::<usize>() {
-                        Ok(i) => (i, i + 1),
-                        Err(_) => continue,
-                    },
-                };
-                let field = if contains_word(code, "MAGIC") {
-                    "magic".to_string()
-                } else if let Some(pos) = code.find("self.") {
-                    code[pos + 5..]
-                        .chars()
-                        .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
-                        .collect()
-                } else {
+    })
+}
+
+/// Shared encode-offset walk: every `out[a..b]` / `out[i]` write inside a
+/// header `encode` fn must match the documented (offset, size) of the
+/// field it names — the line's `self.` ident, or `magic` for the line
+/// writing the magic constant.
+fn check_encode_offsets(
+    file: &SourceFile,
+    encode: &FnItem,
+    magic_token: &str,
+    table: &[DocRow],
+    what: &str,
+    out: &mut Vec<Finding>,
+) {
+    let Some((start, end)) = encode.body else { return };
+    for (idx, line) in file.lines.iter().enumerate().take(end).skip(start - 1) {
+        let code = &line.code;
+        let Some(open) = code.find("out[") else { continue };
+        let Some(close_rel) = code[open..].find(']') else { continue };
+        let range = &code[open + 4..open + close_rel];
+        let (a, b) = match range.split_once("..") {
+            Some((lo, hi)) => {
+                let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                else {
                     continue;
                 };
-                match shard.iter().find(|r| r.name == field) {
-                    Some(row) => {
-                        if row.offset != a || row.size != Some(b - a) {
-                            out.push(finding(
-                                fmt,
-                                idx + 1,
-                                R4_FORMAT_DRIFT,
-                                format!(
-                                    "encode writes `{field}` at [{a}, {b}) but \
-                                     store/mod.rs documents offset {} size {:?}",
-                                    row.offset, row.size
-                                ),
-                            ));
-                        }
-                    }
-                    None => out.push(finding(
-                        fmt,
+                (lo, hi)
+            }
+            None => match range.trim().parse::<usize>() {
+                Ok(i) => (i, i + 1),
+                Err(_) => continue,
+            },
+        };
+        let field = if contains_word(code, magic_token) {
+            "magic".to_string()
+        } else if let Some(pos) = code.find("self.") {
+            code[pos + 5..]
+                .chars()
+                .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                .collect()
+        } else {
+            continue;
+        };
+        match table.iter().find(|r| r.name == field) {
+            Some(row) => {
+                if row.offset != a || row.size != Some(b - a) {
+                    out.push(finding(
+                        file,
                         idx + 1,
                         R4_FORMAT_DRIFT,
                         format!(
-                            "encode writes `{field}` at [{a}, {b}) but the \
-                             store/mod.rs shard table has no such field"
+                            "encode writes `{field}` at [{a}, {b}) but \
+                             store/mod.rs documents offset {} size {:?}",
+                            row.offset, row.size
                         ),
-                    )),
+                    ));
                 }
+            }
+            None => out.push(finding(
+                file,
+                idx + 1,
+                R4_FORMAT_DRIFT,
+                format!(
+                    "encode writes `{field}` at [{a}, {b}) but the \
+                     store/mod.rs {what} table has no such field"
+                ),
+            )),
+        }
+    }
+}
+
+/// The serve-frame half of R4: `serve/protocol.rs` constants and
+/// `FrameHeader::encode` offsets vs the "Serve wire frames" table.
+fn check_frame_header(
+    proto: &SourceFile,
+    docs: &SourceFile,
+    table: &[DocRow],
+    out: &mut Vec<Finding>,
+) {
+    // Header length: the doc terminator row vs FRAME_HEADER_LEN.
+    match const_value(proto, "FRAME_HEADER_LEN") {
+        None => out.push(finding(
+            proto,
+            1,
+            R4_FORMAT_DRIFT,
+            "`FRAME_HEADER_LEN` not found in serve/protocol.rs".to_string(),
+        )),
+        Some((value, const_line)) => match table.iter().find(|r| r.size.is_none()) {
+            Some(term) if term.offset != value => out.push(finding(
+                proto,
+                const_line,
+                R4_FORMAT_DRIFT,
+                format!(
+                    "`FRAME_HEADER_LEN` = {value} but the documented serve frame \
+                     table's payload starts at {} (store/mod.rs:{})",
+                    term.offset, term.line
+                ),
+            )),
+            Some(_) => {}
+            None => out.push(finding(
+                docs,
+                table.first().map(|r| r.line).unwrap_or(1),
+                R4_FORMAT_DRIFT,
+                "documented serve frame table has no payload terminator row".to_string(),
+            )),
+        },
+    }
+
+    // Magic: FRAME_MAGIC's bytes verbatim in the table's magic row.
+    if let Some(magic_line) = proto
+        .lines
+        .iter()
+        .position(|l| contains_word(&l.code, "FRAME_MAGIC") && l.code.contains("const"))
+    {
+        match byte_string(&proto.lines[magic_line].raw) {
+            Some(magic) => {
+                let documented = table
+                    .iter()
+                    .find(|r| r.name == "magic")
+                    .and_then(|r| byte_string(&r.raw));
+                if documented.as_deref() != Some(magic.as_str()) {
+                    out.push(finding(
+                        proto,
+                        magic_line + 1,
+                        R4_FORMAT_DRIFT,
+                        format!(
+                            "FRAME_MAGIC is b\"{magic}\" but the store/mod.rs serve \
+                             frame table documents {:?}",
+                            documented
+                        ),
+                    ));
+                }
+            }
+            None => out.push(finding(
+                proto,
+                magic_line + 1,
+                R4_FORMAT_DRIFT,
+                "FRAME_MAGIC constant is not a b\"…\" literal".to_string(),
+            )),
+        }
+    }
+
+    // Version: the "wire frames (version N)" heading documents the
+    // current protocol version.
+    if let Some((version, vline)) = const_value(proto, "FRAME_VERSION") {
+        let documented = docs.lines.iter().find_map(|l| {
+            let c = &l.comment;
+            let pos = c.find("wire frames (version ")?;
+            let digits: String = c[pos + "wire frames (version ".len()..]
+                .chars()
+                .take_while(|ch| ch.is_ascii_digit())
+                .collect();
+            digits.parse::<usize>().ok()
+        });
+        if let Some(doc_v) = documented {
+            if doc_v != version {
+                out.push(finding(
+                    proto,
+                    vline,
+                    R4_FORMAT_DRIFT,
+                    format!(
+                        "`FRAME_VERSION` = {version} but store/mod.rs documents \
+                         the serve wire frames as version {doc_v}"
+                    ),
+                ));
             }
         }
     }
-    out
+
+    // Encode ranges, same walk as the shard header.
+    if let Some(encode) = find_encode_fn(proto, "FRAME_MAGIC") {
+        check_encode_offsets(proto, encode, "FRAME_MAGIC", table, "serve frame", out);
+    }
 }
 
 /// True when `f` declares itself a retained oracle, via the explicit

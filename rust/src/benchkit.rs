@@ -1,7 +1,7 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup + repeated timing with tail-aware summary statistics
-//! (median/p10/p90/p95, not just mean), a `black_box` shim, and a tiny
+//! (median/p10/p90/p95/p99, not just mean), a `black_box` shim, and a tiny
 //! reporter that prints criterion-like lines:
 //!
 //! ```text
@@ -42,6 +42,8 @@ pub struct Stats {
     /// Tail latency — what the encode-path acceptance numbers quote
     /// alongside the median.
     pub p95: Duration,
+    /// Deep tail — what the serving benchmarks quote (`BENCH_serving`).
+    pub p99: Duration,
     pub min: Duration,
     pub max: Duration,
     pub std_dev: Duration,
@@ -71,6 +73,7 @@ impl Stats {
             p10: pct(0.1),
             p90: pct(0.9),
             p95: pct(0.95),
+            p99: pct(0.99),
             min: samples[0],
             max: samples[n - 1],
             std_dev: Duration::from_secs_f64(var.sqrt()),
@@ -231,7 +234,7 @@ impl Bencher {
     }
 
     /// Write results as CSV
-    /// (`name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,iters,items_per_iter,items_per_sec`;
+    /// (`name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,p99_ns,iters,items_per_iter,items_per_sec`;
     /// the throughput columns are empty for plain latency benches).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         use std::io::Write;
@@ -241,7 +244,7 @@ impl Bencher {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,iters,items_per_iter,items_per_sec"
+            "name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,p99_ns,iters,items_per_iter,items_per_sec"
         )?;
         for r in &self.results {
             let s = &r.stats;
@@ -251,13 +254,14 @@ impl Bencher {
             };
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{}",
                 r.name,
                 s.median.as_nanos(),
                 s.mean.as_nanos(),
                 s.p10.as_nanos(),
                 s.p90.as_nanos(),
                 s.p95.as_nanos(),
+                s.p99.as_nanos(),
                 s.n,
                 items,
                 rate
@@ -296,13 +300,15 @@ impl Bencher {
             writeln!(
                 f,
                 "  {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \
-                 \"p10_ns\": {}, \"p90_ns\": {}, \"p95_ns\": {}, \"iters\": {}{}}}{}",
+                 \"p10_ns\": {}, \"p90_ns\": {}, \"p95_ns\": {}, \"p99_ns\": {}, \
+                 \"iters\": {}{}}}{}",
                 r.name.replace('\\', "\\\\").replace('"', "\\\""),
                 s.median.as_nanos(),
                 s.mean.as_nanos(),
                 s.p10.as_nanos(),
                 s.p90.as_nanos(),
                 s.p95.as_nanos(),
+                s.p99.as_nanos(),
                 s.n,
                 throughput,
                 sep
@@ -338,10 +344,11 @@ mod tests {
         let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
         let s = Stats::from_samples(samples);
         assert!(s.p10 <= s.median && s.median <= s.p90);
-        assert!(s.p90 <= s.p95 && s.p95 <= s.max);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert!(s.min <= s.p10);
-        // 100 uniform samples: p95 = the 95th/96th value.
+        // 100 uniform samples: nearest-rank picks the 95th/99th values.
         assert_eq!(s.p95, Duration::from_micros(95));
+        assert_eq!(s.p99, Duration::from_micros(99));
     }
 
     #[test]
@@ -367,9 +374,10 @@ mod tests {
         assert!(json.contains("\"items_per_iter\": 1000"));
         assert!(json.contains("\"items_per_sec\":"));
         assert!(json.contains("\"p95_ns\":"));
+        assert!(json.contains("\"p99_ns\":"));
         let csv = std::fs::read_to_string(&cpath).unwrap();
         assert!(csv.starts_with(
-            "name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,iters,items_per_iter,items_per_sec"
+            "name,median_ns,mean_ns,p10_ns,p90_ns,p95_ns,p99_ns,iters,items_per_iter,items_per_sec"
         ));
         assert!(csv.contains("tp/rows"));
         std::fs::remove_file(&jpath).ok();

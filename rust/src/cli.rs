@@ -7,6 +7,8 @@
 //! bbml train        [key=val ...]       hash + train + report accuracy
 //! bbml train-stream [key=val ...]       out-of-core train from a shard store
 //! bbml predict      [key=val ...]       score raw LIBSVM rows with a model
+//! bbml serve        --model M --port P  long-lived scoring server (hot swap)
+//! bbml score        --port P [...]      score/reload/stats/shutdown a server
 //! bbml store-merge  SRC... --store DST  concatenate compatible shard stores
 //! bbml experiment <id|all> [key=val]    regenerate a paper figure/table
 //! bbml config       [key=val ...]       print the effective configuration
@@ -23,9 +25,12 @@
 //! writes a self-describing [`crate::store::ModelArtifact`],
 //! `train-stream --checkpoint/--resume` survives interruption with
 //! bit-identical results, and `predict` scores raw LIBSVM rows through the
-//! encoder the artifact recorded.
+//! encoder the artifact recorded. `serve` keeps that artifact resident
+//! behind a TCP scoring service (see [`crate::serve`]) with atomic hot
+//! swap, and `score` is its client.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::pipeline::{
@@ -40,6 +45,7 @@ use crate::coordinator::trainer::{
 use crate::data::synth::CorpusSampler;
 use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
 use crate::runtime::Runtime;
+use crate::serve::{ModelSlot, ScoreClient, ServeOptions, ServeStats, ServedModel};
 use crate::store::{merge_stores, ModelArtifact, SigShardStore};
 
 const USAGE: &str = "\
@@ -68,6 +74,19 @@ COMMANDS:
                   (--model PATH, --data FILE.libsvm[.gz]; --scheme S
                   asserts the recorded scheme); writes
                   <out_dir>/predict_report.json + predict_scores.txt
+    serve         long-lived scoring server over a saved model artifact
+                  (--model PATH, --port P; --workers N, --watch to
+                  hot-swap on file mtime change). Scores are bit-identical
+                  to `predict`; `score --reload` hot-swaps atomically;
+                  Ctrl-C / `score --shutdown` drains and writes
+                  <out_dir>/serve_report.json (p50/p95/p99, rows/s,
+                  swap count, queue depth)
+    score         client for a running `serve` (--port P): --data
+                  FILE.libsvm[.gz] scores rows (batched --chunk rows at a
+                  time, default 256), --reload PATH hot-swaps the served
+                  model ('-' re-reads the current file), --stats prints
+                  the live gauges JSON, --shutdown stops the server;
+                  writes <out_dir>/score_report.json when scoring
     store-merge   concatenate compatible shard stores: bbml store-merge
                   SRC1 SRC2 ... --store DST (validates scheme/k/b)
     experiment    regenerate a figure/table: fig1..fig10, tab51, gvw,
@@ -127,8 +146,20 @@ struct Args {
     model: Option<String>,
     /// Model artifact to write (`train --save-model`).
     save_model: Option<String>,
-    /// LIBSVM input for `predict`.
+    /// LIBSVM input for `predict` / `score`.
     data: Option<String>,
+    /// Serving port (`serve` / `score --port`).
+    port: Option<u16>,
+    /// Serving worker threads (`serve --workers`).
+    workers: usize,
+    /// Hot-swap the served model on file mtime change (`serve --watch`).
+    watch: bool,
+    /// Hot-swap request (`score --reload PATH`, '-' = re-read current).
+    reload: Option<String>,
+    /// Print the live serving gauges (`score --stats`).
+    stats: bool,
+    /// Ask the server to drain and exit (`score --shutdown`).
+    shutdown: bool,
 }
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
@@ -152,6 +183,12 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut model: Option<String> = None;
     let mut save_model: Option<String> = None;
     let mut data: Option<String> = None;
+    let mut port: Option<u16> = None;
+    let mut workers = 4usize;
+    let mut watch = false;
+    let mut reload: Option<String> = None;
+    let mut stats = false;
+    let mut shutdown = false;
 
     let mut it = argv.iter().peekable();
     while let Some(arg) = it.next() {
@@ -274,6 +311,32 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
                         .to_string(),
                 );
             }
+            "--port" => {
+                port = Some(
+                    it.next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("--port needs a u16"))?,
+                );
+            }
+            "--workers" => {
+                workers = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .filter(|&w: &usize| w > 0)
+                    .ok_or_else(|| anyhow::anyhow!("--workers needs a positive usize"))?;
+            }
+            "--watch" => watch = true,
+            "--reload" => {
+                reload = Some(
+                    it.next()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("--reload needs a model path ('-' = current)")
+                        })?
+                        .to_string(),
+                );
+            }
+            "--stats" => stats = true,
+            "--shutdown" => shutdown = true,
             other if other.contains('=') && !command.is_empty() => {
                 config.apply_overrides(&[other.to_string()])?;
             }
@@ -307,6 +370,12 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
         model,
         save_model,
         data,
+        port,
+        workers,
+        watch,
+        reload,
+        stats,
+        shutdown,
     })
 }
 
@@ -641,6 +710,139 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "serve" => {
+            let model_path = args.model.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("serve needs --model PATH (from `train --save-model`)")
+            })?;
+            let port = args
+                .port
+                .ok_or_else(|| anyhow::anyhow!("serve needs --port P"))?;
+            let served = ServedModel::load(Path::new(model_path))?;
+            let (scheme, k, b, dim, crc) = (
+                served.artifact.scheme(),
+                served.artifact.spec.k,
+                served.artifact.spec.b,
+                served.artifact.spec.dim,
+                served.crc32,
+            );
+            let slot = Arc::new(ModelSlot::new(served));
+            let stats = Arc::new(ServeStats::new());
+            let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+            let addr = listener.local_addr()?;
+            let opt = ServeOptions {
+                workers: args.workers,
+                watch: args.watch,
+                ..Default::default()
+            };
+            println!(
+                "serving {model_path} on {addr} (scheme={scheme}, k={k}, b={b}, \
+                 dim 2^{:.0}, weights_crc32 {crc}, {} workers, watch={})",
+                (dim as f64).log2(),
+                opt.workers,
+                opt.watch
+            );
+            // Flush so scripts polling our (possibly piped) stdout see
+            // the readiness line before the first request lands.
+            std::io::Write::flush(&mut std::io::stdout())?;
+            crate::serve::install_signal_handlers();
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            crate::serve::serve(listener, Arc::clone(&slot), Arc::clone(&stats), &opt, stop)?;
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            let report_path = Path::new(&cfg.out_dir).join("serve_report.json");
+            report::write_json_object(
+                &report_path,
+                &stats.report_entries(slot.swap_count(), stats.in_flight()),
+            )?;
+            println!(
+                "drained: {} requests, {} rows, {} errors, {} hot swaps; report: {}",
+                stats.requests(),
+                stats.rows(),
+                stats.errors(),
+                slot.swap_count(),
+                report_path.display()
+            );
+            Ok(())
+        }
+        "score" => {
+            let port = args
+                .port
+                .ok_or_else(|| anyhow::anyhow!("score needs --port P"))?;
+            if args.reload.is_none() && args.data.is_none() && !args.stats && !args.shutdown {
+                anyhow::bail!(
+                    "score needs at least one action: --data FILE, --reload PATH, \
+                     --stats, --shutdown"
+                );
+            }
+            let mut client = ScoreClient::connect(("127.0.0.1", port))
+                .map_err(|e| anyhow::anyhow!("connect to 127.0.0.1:{port}: {e}"))?;
+            if let Some(path) = &args.reload {
+                let target = if path == "-" { None } else { Some(path.as_str()) };
+                let crc = client.reload(target)?;
+                println!("hot-swapped server model (weights_crc32 {crc})");
+            }
+            if let Some(path) = &args.data {
+                let ds = crate::data::libsvm::read_libsvm(Path::new(path), None)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let chunk = args.chunk.unwrap_or(256).max(1);
+                let t0 = std::time::Instant::now();
+                let mut scores: Vec<f64> = Vec::with_capacity(ds.n());
+                let mut batch: Vec<Vec<u64>> = Vec::with_capacity(chunk);
+                let mut model_crc = 0u32;
+                let mut start = 0usize;
+                while start < ds.n() {
+                    let end = (start + chunk).min(ds.n());
+                    batch.clear();
+                    for i in start..end {
+                        batch.push(ds.row(i).to_vec());
+                    }
+                    let (crc, got) = client.score(&batch)?;
+                    model_crc = crc;
+                    scores.extend_from_slice(&got);
+                    start = end;
+                }
+                let wall = t0.elapsed();
+                // Labels ride along in the LIBSVM file, so report the
+                // same sign-accuracy `predict` would.
+                let correct = scores
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, s)| (**s >= 0.0) == (ds.label(*i) > 0.0))
+                    .count();
+                let acc = if ds.n() > 0 {
+                    correct as f64 / ds.n() as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "scored {} rows over the wire (model weights_crc32 {model_crc}): \
+                     acc {acc:.4} in {wall:.2?} ({:.0} rows/s, batches of {chunk})",
+                    ds.n(),
+                    ds.n() as f64 / wall.as_secs_f64().max(1e-9)
+                );
+                std::fs::create_dir_all(&cfg.out_dir)?;
+                let report_path = Path::new(&cfg.out_dir).join("score_report.json");
+                report::write_json_object(
+                    &report_path,
+                    &[
+                        ("port", port.to_string()),
+                        ("rows", ds.n().to_string()),
+                        ("chunk", chunk.to_string()),
+                        ("weights_crc32", model_crc.to_string()),
+                        ("acc", format!("{acc:.6}")),
+                        ("score_secs", format!("{:.6}", wall.as_secs_f64())),
+                    ],
+                )?;
+                println!("report: {}", report_path.display());
+            }
+            if args.stats {
+                println!("{}", client.stats()?);
+            }
+            if args.shutdown {
+                client.shutdown()?;
+                println!("server acknowledged shutdown");
+            }
+            Ok(())
+        }
         "store-merge" => {
             let dst = args.store.as_ref().ok_or_else(|| {
                 anyhow::anyhow!("store-merge needs --store DST (the merged store's directory)")
@@ -927,6 +1129,57 @@ mod tests {
         // store-merge without --store or without sources is a usage error.
         assert!(run_with(&strs(&["store-merge", "/a"])).is_err());
         assert!(run_with(&strs(&["store-merge", "--store", "/dst"])).is_err());
+    }
+
+    #[test]
+    fn parse_serve_and_score_flags() {
+        let a = parse_args(&strs(&[
+            "serve",
+            "--model",
+            "/tmp/m.bbm",
+            "--port",
+            "7979",
+            "--workers",
+            "2",
+            "--watch",
+        ]))
+        .unwrap();
+        assert_eq!(a.port, Some(7979));
+        assert_eq!(a.workers, 2);
+        assert!(a.watch);
+        assert_eq!(a.model.as_deref(), Some("/tmp/m.bbm"));
+        let b = parse_args(&strs(&[
+            "score",
+            "--port",
+            "7979",
+            "--reload",
+            "-",
+            "--stats",
+            "--shutdown",
+        ]))
+        .unwrap();
+        assert_eq!(b.port, Some(7979));
+        assert_eq!(b.reload.as_deref(), Some("-"));
+        assert!(b.stats && b.shutdown);
+        // Defaults and bad values.
+        let d = parse_args(&strs(&["serve"])).unwrap();
+        assert_eq!((d.port, d.workers, d.watch), (None, 4, false));
+        assert!(parse_args(&strs(&["serve", "--port", "99999"])).is_err());
+        assert!(parse_args(&strs(&["serve", "--workers", "0"])).is_err());
+    }
+
+    #[test]
+    fn serve_and_score_require_flags() {
+        // serve without --model / --port, or with a missing artifact,
+        // errors before ever binding a socket.
+        assert!(run_with(&strs(&["serve"])).is_err());
+        assert!(run_with(&strs(&["serve", "--model", "/no/such.bbm"])).is_err());
+        assert!(
+            run_with(&strs(&["serve", "--model", "/no/such.bbm", "--port", "7979"])).is_err()
+        );
+        // score without --port, or with no action, is a usage error.
+        assert!(run_with(&strs(&["score"])).is_err());
+        assert!(run_with(&strs(&["score", "--port", "1"])).is_err());
     }
 
     #[test]

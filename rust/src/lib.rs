@@ -33,6 +33,10 @@
 //! * [`runtime`] — the PJRT bridge: loads the AOT HLO-text artifacts
 //!   lowered from JAX/Pallas (see `python/compile/`) and executes them on
 //!   the CPU PJRT client from the rust hot path.
+//! * [`serve`] — the online scoring service: a std-only thread-pool TCP
+//!   server over a saved [`store::ModelArtifact`] with a length-prefixed
+//!   binary protocol, atomic hot model swap, graceful shutdown and
+//!   p50/p95/p99 serving gauges (`serve` / `score` CLI verbs).
 //! * [`experiments`] — one runner per figure/table of the paper's
 //!   evaluation; regenerates every plot series as CSV.
 //! * [`benchkit`] — a minimal timing-statistics harness used by the cargo
@@ -51,6 +55,7 @@ pub mod hashing;
 pub mod proptest_mini;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod store;
 pub mod theory;

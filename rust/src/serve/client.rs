@@ -1,0 +1,90 @@
+//! [`ScoreClient`] — a minimal blocking client for the serve protocol,
+//! used by the `score` CLI verb, the integration tests, and
+//! `bench_serving`. One client owns one TCP connection; requests on it
+//! are strictly sequential (frame out, frame back), which is exactly the
+//! protocol's per-connection contract.
+
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::protocol::{
+    decode_reload_ok, decode_score_response, decode_text, encode_reload, encode_score_request,
+    read_frame, write_frame, FrameType,
+};
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("serve client: {msg}"))
+}
+
+/// A blocking scoring-service client over one TCP connection.
+pub struct ScoreClient {
+    stream: TcpStream,
+}
+
+impl ScoreClient {
+    /// Connect to a running server. Reads get a generous timeout so a
+    /// hung server surfaces as `TimedOut` instead of blocking forever.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(Self { stream })
+    }
+
+    /// Send one frame and block for the server's reply.
+    fn roundtrip(&mut self, ft: FrameType, payload: &[u8]) -> io::Result<(FrameType, Vec<u8>)> {
+        write_frame(&mut self.stream, ft, payload)?;
+        match read_frame(&mut self.stream)? {
+            Some(reply) => Ok(reply),
+            None => Err(bad("server closed the connection mid-request".to_string())),
+        }
+    }
+
+    /// Turn an `Error` frame into an `io::Error`, anything else through.
+    fn expect(
+        reply: (FrameType, Vec<u8>),
+        want: FrameType,
+    ) -> io::Result<Vec<u8>> {
+        let (ft, payload) = reply;
+        if ft == FrameType::Error {
+            return Err(bad(format!("server error: {}", decode_text(&payload)?)));
+        }
+        if ft != want {
+            return Err(bad(format!("expected {want:?} reply, got {ft:?}")));
+        }
+        Ok(payload)
+    }
+
+    /// Score a micro-batch of raw sparse rows (sorted unique indices).
+    /// Returns the serving model's `weights_crc32` fingerprint and one
+    /// f64 score per row, bit-identical to offline `predict_artifact`.
+    pub fn score(&mut self, rows: &[Vec<u64>]) -> io::Result<(u32, Vec<f64>)> {
+        let body = encode_score_request(rows);
+        let reply = self.roundtrip(FrameType::ScoreRequest, &body)?;
+        decode_score_response(&Self::expect(reply, FrameType::ScoreResponse)?)
+    }
+
+    /// Hot-swap the served model (`None` = re-read the current source
+    /// file). Returns the newly published model's fingerprint.
+    pub fn reload(&mut self, path: Option<&str>) -> io::Result<u32> {
+        let body = encode_reload(path);
+        let reply = self.roundtrip(FrameType::Reload, &body)?;
+        decode_reload_ok(&Self::expect(reply, FrameType::ReloadOk)?)
+    }
+
+    /// Fetch the live gauges as a JSON object string.
+    pub fn stats(&mut self) -> io::Result<String> {
+        let reply = self.roundtrip(FrameType::Stats, b"")?;
+        decode_text(&Self::expect(reply, FrameType::StatsResponse)?)
+    }
+
+    /// Ask the server to shut down gracefully (stop accepting, drain,
+    /// emit the final report). Consumes the client — the server closes
+    /// this connection after acknowledging.
+    pub fn shutdown(mut self) -> io::Result<()> {
+        let reply = self.roundtrip(FrameType::Shutdown, b"")?;
+        Self::expect(reply, FrameType::ShutdownOk)?;
+        Ok(())
+    }
+}

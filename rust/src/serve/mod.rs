@@ -1,0 +1,37 @@
+//! Online scoring service over a saved [`ModelArtifact`].
+//!
+//! The batch pipeline ends at a `MODEL` file; this subsystem serves it:
+//! a long-lived, std-only TCP server (`serve` CLI verb) answering
+//! micro-batches of raw libsvm-style sparse rows with scores that are
+//! **bit-identical** to offline [`predict_artifact`], plus an atomic hot
+//! model swap so a freshly retrained artifact can be published under
+//! load without dropping or mixing a single in-flight request.
+//!
+//! Layout:
+//!
+//! * [`protocol`] — the length-prefixed, CRC-checked binary frame codec
+//!   (header byte table documented in [`crate::store`], enforced by
+//!   bbml-lint R4);
+//! * [`slot`] — [`ModelSlot`], the atomically swappable published model
+//!   with scheme/input-domain compatibility validation;
+//! * [`server`] — worker pool, per-worker encoder reuse (the PR-2
+//!   buffer contract), graceful shutdown, mtime watch;
+//! * [`stats`] — [`ServeStats`] gauges (p50/p95/p99 latency, rows/s,
+//!   swap count, queue depth) reported as JSON;
+//! * [`client`] — [`ScoreClient`], the blocking client used by the
+//!   `score` verb, tests and `bench_serving`.
+//!
+//! [`ModelArtifact`]: crate::store::ModelArtifact
+//! [`predict_artifact`]: crate::coordinator::trainer::predict_artifact
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod slot;
+pub mod stats;
+
+pub use client::ScoreClient;
+pub use protocol::{FrameHeader, FrameType, FRAME_HEADER_LEN, FRAME_MAGIC, FRAME_VERSION};
+pub use server::{install_signal_handlers, serve, stop_requested, BatchScorer, ServeOptions};
+pub use slot::{ModelSlot, ServedModel};
+pub use stats::ServeStats;

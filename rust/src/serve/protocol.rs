@@ -1,0 +1,465 @@
+//! The serving wire protocol: length-prefixed, CRC-checked binary frames
+//! over a plain TCP stream (no async, no new deps — std all the way down).
+//!
+//! Every frame is a fixed [`FRAME_HEADER_LEN`]-byte header followed by a
+//! payload whose length and CRC-32 the header states up front, mirroring
+//! the framed-blob envelope discipline of [`crate::store::format`]: a
+//! reader always knows exactly how many bytes to consume next, and a
+//! corrupted or truncated frame is `InvalidData`, never a mis-parse. The
+//! byte-by-byte header table lives in [`crate::store`]'s module docs next
+//! to the shard and framed-blob tables, and bbml-lint's `format-drift`
+//! rule (R4) holds [`FrameHeader::encode`] to it.
+//!
+//! Frame types (the `frame_type` header field, u32):
+//!
+//! | code | frame            | payload                                      |
+//! |------|------------------|----------------------------------------------|
+//! | 0    | `ScoreRequest`   | u32 n_rows, then per row u32 nnz + nnz×u64   |
+//! |      |                  | sorted unique shingle indices                |
+//! | 1    | `ScoreResponse`  | u32 model_crc32, u32 n, then n×f64 scores    |
+//! |      |                  | (IEEE-754 bit patterns, LE)                  |
+//! | 2    | `Reload`         | u32 len + utf8 model path (len 0 = re-read   |
+//! |      |                  | the currently served file)                   |
+//! | 3    | `ReloadOk`       | u32 weights_crc32 of the newly published model|
+//! | 4    | `Shutdown`       | empty                                        |
+//! | 5    | `ShutdownOk`     | empty                                        |
+//! | 6    | `Stats`          | empty                                        |
+//! | 7    | `StatsResponse`  | utf8 JSON gauges object                      |
+//! | 8    | `Error`          | utf8 message                                 |
+//!
+//! Scores are shipped as raw `f64::to_bits` words so a served batch is
+//! **bit-identical** to the offline [`predict_artifact`] scores — the
+//! protocol never rounds through text.
+//!
+//! [`predict_artifact`]: crate::coordinator::trainer::predict_artifact
+
+use std::io::{self, Read, Write};
+
+use crate::store::format::{crc32, ByteReader};
+
+/// Frame magic — first 8 bytes of every frame on the wire.
+pub const FRAME_MAGIC: [u8; 8] = *b"BBSERVE\0";
+/// Current serve wire-protocol version.
+pub const FRAME_VERSION: u32 = 1;
+/// Fixed frame header length in bytes.
+pub const FRAME_HEADER_LEN: usize = 32;
+/// Upper bound on a single frame's payload (sanity guard against reading
+/// garbage lengths from a corrupt or hostile stream).
+pub const MAX_FRAME_PAYLOAD: u64 = 1 << 30;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("serve frame: {msg}"))
+}
+
+/// The frame-type registry (header `frame_type` field). Codes are wire
+/// bytes: stable, explicit, and rejected when unknown — same posture as
+/// [`Scheme::code`].
+///
+/// [`Scheme::code`]: crate::hashing::feature_map::Scheme::code
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameType {
+    ScoreRequest,
+    ScoreResponse,
+    Reload,
+    ReloadOk,
+    Shutdown,
+    ShutdownOk,
+    Stats,
+    StatsResponse,
+    Error,
+}
+
+impl FrameType {
+    /// The wire code (header bytes 12–16).
+    pub fn code(self) -> u32 {
+        match self {
+            Self::ScoreRequest => 0,
+            Self::ScoreResponse => 1,
+            Self::Reload => 2,
+            Self::ReloadOk => 3,
+            Self::Shutdown => 4,
+            Self::ShutdownOk => 5,
+            Self::Stats => 6,
+            Self::StatsResponse => 7,
+            Self::Error => 8,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown codes (a newer
+    /// peer?) — callers reject, never guess.
+    pub fn from_code(code: u32) -> Option<Self> {
+        Some(match code {
+            0 => Self::ScoreRequest,
+            1 => Self::ScoreResponse,
+            2 => Self::Reload,
+            3 => Self::ReloadOk,
+            4 => Self::Shutdown,
+            5 => Self::ShutdownOk,
+            6 => Self::Stats,
+            7 => Self::StatsResponse,
+            8 => Self::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// The decoded fixed frame header. Field order and widths are documented
+/// byte-by-byte in [`crate::store`]'s module docs ("Serve wire frames");
+/// [`Self::encode`] is checked against that table by bbml-lint R4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Protocol version ([`FRAME_VERSION`] for writers).
+    pub version: u32,
+    /// [`FrameType::code`] of the frame.
+    pub frame_type: u32,
+    /// Payload bytes following the header.
+    pub payload_len: u64,
+    /// CRC-32 (poly 0xEDB88320, reflected) of the payload.
+    pub payload_crc32: u32,
+}
+
+impl FrameHeader {
+    /// Build the header for `payload` of the given type.
+    pub fn for_payload(frame_type: FrameType, payload: &[u8]) -> Self {
+        Self {
+            version: FRAME_VERSION,
+            frame_type: frame_type.code(),
+            payload_len: payload.len() as u64,
+            payload_crc32: crc32(payload),
+        }
+    }
+
+    /// Serialize to wire bytes (layout documented in [`crate::store`]).
+    pub fn encode(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut out = [0u8; FRAME_HEADER_LEN];
+        out[0..8].copy_from_slice(&FRAME_MAGIC);
+        out[8..12].copy_from_slice(&self.version.to_le_bytes());
+        out[12..16].copy_from_slice(&self.frame_type.to_le_bytes());
+        out[16..24].copy_from_slice(&self.payload_len.to_le_bytes());
+        out[24..28].copy_from_slice(&self.payload_crc32.to_le_bytes());
+        out
+    }
+
+    /// Decode + validate magic, version and the payload-length bound.
+    /// The payload CRC is checked later, by [`Self::verify_payload`],
+    /// once the payload bytes have actually arrived.
+    pub fn decode(buf: &[u8; FRAME_HEADER_LEN]) -> io::Result<Self> {
+        if buf[0..8] != FRAME_MAGIC {
+            return Err(bad(format!("bad magic {:02x?}", &buf[0..8])));
+        }
+        let mut r = ByteReader::new(&buf[8..]);
+        let version = r.u32()?;
+        let frame_type = r.u32()?;
+        let payload_len = r.u64()?;
+        let payload_crc32 = r.u32()?;
+        if version == 0 || version > FRAME_VERSION {
+            return Err(bad(format!(
+                "unsupported version {version} (this build speaks ≤ {FRAME_VERSION})"
+            )));
+        }
+        if payload_len > MAX_FRAME_PAYLOAD {
+            return Err(bad(format!(
+                "payload_len {payload_len} exceeds the {MAX_FRAME_PAYLOAD}-byte bound"
+            )));
+        }
+        Ok(Self {
+            version,
+            frame_type,
+            payload_len,
+            payload_crc32,
+        })
+    }
+
+    /// The decoded frame type, rejecting unknown codes.
+    pub fn frame_type(&self) -> io::Result<FrameType> {
+        FrameType::from_code(self.frame_type)
+            .ok_or_else(|| bad(format!("unknown frame type {}", self.frame_type)))
+    }
+
+    /// Verify the received payload against the header's length + CRC.
+    pub fn verify_payload(&self, payload: &[u8]) -> io::Result<()> {
+        if payload.len() as u64 != self.payload_len {
+            return Err(bad(format!(
+                "payload length {} != header payload_len {}",
+                payload.len(),
+                self.payload_len
+            )));
+        }
+        let got = crc32(payload);
+        if got != self.payload_crc32 {
+            return Err(bad(format!(
+                "payload CRC mismatch: header {:#010x}, computed {got:#010x}",
+                self.payload_crc32
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Write one complete frame (header + payload) to the stream.
+pub fn write_frame<W: Write>(w: &mut W, ft: FrameType, payload: &[u8]) -> io::Result<()> {
+    let header = FrameHeader::for_payload(ft, payload);
+    w.write_all(&header.encode())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one complete frame from a blocking stream (the client path; the
+/// server uses an interruptible reader around the same header/verify
+/// codec). Returns `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<(FrameType, Vec<u8>)>> {
+    let mut head = [0u8; FRAME_HEADER_LEN];
+    // Distinguish clean EOF (no bytes at all) from a truncated header.
+    let mut got = 0usize;
+    while got < head.len() {
+        let n = r.read(&mut head[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(bad(format!("EOF after {got} of {FRAME_HEADER_LEN} header bytes")));
+        }
+        got += n;
+    }
+    let header = FrameHeader::decode(&head)?;
+    let mut payload = vec![0u8; header.payload_len as usize];
+    r.read_exact(&mut payload)?;
+    header.verify_payload(&payload)?;
+    Ok(Some((header.frame_type()?, payload)))
+}
+
+// ------------------------------------------------------ payload codecs ----
+
+/// Encode a score request: a micro-batch of raw sparse rows (sorted
+/// unique shingle indices, libsvm-style).
+pub fn encode_score_request(rows: &[Vec<u64>]) -> Vec<u8> {
+    let nnz: usize = rows.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(4 + rows.len() * 4 + nnz * 8);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for row in rows {
+        out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+        for &idx in row {
+            out.extend_from_slice(&idx.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a score request. Truncation / trailing bytes are `InvalidData`;
+/// row *content* validation (index < model dim, sortedness) is the
+/// scorer's job, where the active model is known.
+pub fn decode_score_request(payload: &[u8]) -> io::Result<Vec<Vec<u64>>> {
+    let mut r = ByteReader::new(payload);
+    let n_rows = r.u32()? as usize;
+    let mut rows = Vec::with_capacity(n_rows.min(1 << 20));
+    for _ in 0..n_rows {
+        let nnz = r.u32()? as usize;
+        rows.push(r.u64_vec(nnz)?);
+    }
+    r.finish()?;
+    Ok(rows)
+}
+
+/// Encode a score response: the serving model's `weights_crc32`
+/// fingerprint plus one f64 score per requested row, shipped as raw bit
+/// patterns so the client sees exactly what the scorer computed.
+pub fn encode_score_response(model_crc32: u32, scores: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + scores.len() * 8);
+    out.extend_from_slice(&model_crc32.to_le_bytes());
+    out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+    for &s in scores {
+        out.extend_from_slice(&s.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Decode a score response into `(model_crc32, scores)`.
+pub fn decode_score_response(payload: &[u8]) -> io::Result<(u32, Vec<f64>)> {
+    let mut r = ByteReader::new(payload);
+    let model_crc32 = r.u32()?;
+    let n = r.u32()? as usize;
+    let mut scores = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        scores.push(f64::from_bits(r.u64()?));
+    }
+    r.finish()?;
+    Ok((model_crc32, scores))
+}
+
+/// Encode a reload request (`None` = re-read the currently served path).
+pub fn encode_reload(path: Option<&str>) -> Vec<u8> {
+    let p = path.unwrap_or("");
+    let mut out = Vec::with_capacity(4 + p.len());
+    out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    out.extend_from_slice(p.as_bytes());
+    out
+}
+
+/// Decode a reload request.
+pub fn decode_reload(payload: &[u8]) -> io::Result<Option<String>> {
+    let mut r = ByteReader::new(payload);
+    let len = r.u32()? as usize;
+    if payload.len() != 4 + len {
+        return Err(bad(format!(
+            "reload path length {len} disagrees with payload size {}",
+            payload.len()
+        )));
+    }
+    if len == 0 {
+        return Ok(None);
+    }
+    let path = std::str::from_utf8(&payload[4..])
+        .map_err(|e| bad(format!("reload path is not utf8: {e}")))?;
+    Ok(Some(path.to_string()))
+}
+
+/// Encode a reload acknowledgement carrying the new model fingerprint.
+pub fn encode_reload_ok(weights_crc32: u32) -> Vec<u8> {
+    weights_crc32.to_le_bytes().to_vec()
+}
+
+/// Decode a reload acknowledgement.
+pub fn decode_reload_ok(payload: &[u8]) -> io::Result<u32> {
+    let mut r = ByteReader::new(payload);
+    let crc = r.u32()?;
+    r.finish()?;
+    Ok(crc)
+}
+
+/// Decode a utf8 text payload (`StatsResponse` / `Error` frames).
+pub fn decode_text(payload: &[u8]) -> io::Result<String> {
+    std::str::from_utf8(payload)
+        .map(str::to_string)
+        .map_err(|e| bad(format!("text payload is not utf8: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_type_codes_roundtrip_and_reject_unknown() {
+        for ft in [
+            FrameType::ScoreRequest,
+            FrameType::ScoreResponse,
+            FrameType::Reload,
+            FrameType::ReloadOk,
+            FrameType::Shutdown,
+            FrameType::ShutdownOk,
+            FrameType::Stats,
+            FrameType::StatsResponse,
+            FrameType::Error,
+        ] {
+            assert_eq!(FrameType::from_code(ft.code()), Some(ft));
+        }
+        assert_eq!(FrameType::from_code(9), None);
+        assert_eq!(FrameType::from_code(u32::MAX), None);
+    }
+
+    #[test]
+    fn header_encode_decode_roundtrip() {
+        let h = FrameHeader::for_payload(FrameType::ScoreRequest, b"abc");
+        assert_eq!(h.version, FRAME_VERSION);
+        assert_eq!(h.payload_len, 3);
+        let back = FrameHeader::decode(&h.encode()).unwrap();
+        assert_eq!(back, h);
+        back.verify_payload(b"abc").unwrap();
+        assert!(back.verify_payload(b"abd").is_err());
+        assert!(back.verify_payload(b"ab").is_err());
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_version_and_oversized_len() {
+        let h = FrameHeader::for_payload(FrameType::Stats, b"");
+        let mut bytes = h.encode();
+        bytes[0] ^= 0xFF;
+        assert!(FrameHeader::decode(&bytes).is_err());
+
+        let mut bytes = h.encode();
+        bytes[8..12].copy_from_slice(&(FRAME_VERSION + 1).to_le_bytes());
+        assert!(FrameHeader::decode(&bytes).is_err());
+        bytes[8..12].copy_from_slice(&0u32.to_le_bytes());
+        assert!(FrameHeader::decode(&bytes).is_err());
+
+        let mut bytes = h.encode();
+        bytes[16..24].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+        assert!(FrameHeader::decode(&bytes).is_err());
+
+        // Unknown frame types decode (header-level) but refuse to type.
+        let mut bytes = h.encode();
+        bytes[12..16].copy_from_slice(&99u32.to_le_bytes());
+        let hd = FrameHeader::decode(&bytes).unwrap();
+        assert!(hd.frame_type().is_err());
+    }
+
+    #[test]
+    fn frame_write_read_roundtrip_over_a_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameType::Error, b"boom").unwrap();
+        write_frame(&mut wire, FrameType::Shutdown, b"").unwrap();
+        let mut cur = std::io::Cursor::new(wire);
+        let (ft, p) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!((ft, p.as_slice()), (FrameType::Error, &b"boom"[..]));
+        let (ft, p) = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!((ft, p.len()), (FrameType::Shutdown, 0));
+        // Clean EOF at a frame boundary.
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_header_and_corrupt_payload_are_errors() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameType::Error, b"boom").unwrap();
+        // Truncate mid-header.
+        let mut cur = std::io::Cursor::new(&wire[..10]);
+        assert!(read_frame(&mut cur).is_err());
+        // Flip a payload bit: CRC catches it.
+        let mut corrupt = wire.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x01;
+        let mut cur = std::io::Cursor::new(corrupt);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn score_request_roundtrip_and_truncation() {
+        let rows = vec![vec![1u64, 5, 900], vec![], vec![42]];
+        let payload = encode_score_request(&rows);
+        assert_eq!(decode_score_request(&payload).unwrap(), rows);
+        assert!(decode_score_request(&payload[..payload.len() - 1]).is_err());
+        let mut extra = payload.clone();
+        extra.push(0);
+        assert!(decode_score_request(&extra).is_err());
+        // Empty batch is legal.
+        assert_eq!(
+            decode_score_request(&encode_score_request(&[])).unwrap(),
+            Vec::<Vec<u64>>::new()
+        );
+    }
+
+    #[test]
+    fn score_response_is_bit_exact() {
+        let scores = vec![1.5, -0.0, f64::MIN_POSITIVE, -3.25e300];
+        let payload = encode_score_response(0xDEADBEEF, &scores);
+        let (crc, back) = decode_score_response(&payload).unwrap();
+        assert_eq!(crc, 0xDEADBEEF);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back), bits(&scores));
+        assert!(decode_score_response(&payload[..5]).is_err());
+    }
+
+    #[test]
+    fn reload_and_text_codecs() {
+        assert_eq!(decode_reload(&encode_reload(None)).unwrap(), None);
+        assert_eq!(
+            decode_reload(&encode_reload(Some("/m/v2.bbm"))).unwrap(),
+            Some("/m/v2.bbm".to_string())
+        );
+        assert!(decode_reload(&[1, 0, 0]).is_err());
+        assert!(decode_reload(&[9, 0, 0, 0, b'x']).is_err());
+        assert_eq!(decode_reload_ok(&encode_reload_ok(7)).unwrap(), 7);
+        assert!(decode_reload_ok(&[1, 2]).is_err());
+        assert_eq!(decode_text(b"{\"a\":1}").unwrap(), "{\"a\":1}");
+        assert!(decode_text(&[0xFF, 0xFE]).is_err());
+    }
+}

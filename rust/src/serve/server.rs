@@ -1,0 +1,570 @@
+//! The scoring server: a std-only thread-pool TCP front end over
+//! [`predict_artifact`]-equivalent scoring.
+//!
+//! Architecture (no async, no new deps):
+//!
+//! * the caller binds the `TcpListener` (tests bind port 0 and read the
+//!   chosen address back) and calls [`serve`], which blocks until stopped;
+//! * the accept loop runs nonblocking, polling the stop flag between
+//!   accepts, and hands whole connections to a fixed pool of workers over
+//!   a bounded channel — one connection is owned by one worker at a time,
+//!   frames on it are handled strictly in order;
+//! * each worker owns one [`BatchScorer`]: a cached encoder
+//!   (`FeatureMap` + `SketchRow` scratch, the PR-2 buffer contract) that
+//!   is rebuilt only when a hot swap publishes a model with a different
+//!   [`FeatureMapSpec`];
+//! * every score request takes **one** [`ModelSlot::load`] snapshot, so
+//!   a concurrent swap can never mix models within a response;
+//! * graceful shutdown — a `Shutdown` frame, Ctrl-C/SIGTERM (see
+//!   [`install_signal_handlers`]), or the caller's stop flag — stops
+//!   accepting, lets in-flight connections drain (idle connections close;
+//!   half-read frames get a bounded grace period), and returns so the
+//!   caller can emit the final stats JSON;
+//! * `--watch` adds an mtime-poll thread that hot-swaps the served file
+//!   in place when it changes, logging (not crashing) on a bad artifact.
+//!
+//! [`predict_artifact`]: crate::coordinator::trainer::predict_artifact
+
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::hashing::feature_map::{FeatureMap, FeatureMapSpec};
+use crate::hashing::sketch::{SketchMatrix, SketchRow};
+use crate::solvers::{LinearModel, SketchView};
+
+use super::protocol::{
+    self, decode_reload, decode_score_request, write_frame, FrameHeader, FrameType,
+    FRAME_HEADER_LEN,
+};
+use super::slot::{ModelSlot, ServedModel};
+use super::stats::ServeStats;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("serve: {msg}"))
+}
+
+// --------------------------------------------------------- stop signal ----
+
+/// Process-wide stop flag set by SIGINT/SIGTERM. Kept separate from the
+/// per-server flag so one Ctrl-C stops every server in the process.
+static STOP_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGINT/SIGTERM arrived (or [`request_stop`] was called).
+pub fn stop_requested() -> bool {
+    STOP_REQUESTED.load(Ordering::Relaxed)
+}
+
+/// Programmatic equivalent of Ctrl-C (tests, embedders).
+pub fn request_stop() {
+    STOP_REQUESTED.store(true, Ordering::Relaxed);
+}
+
+/// Route SIGINT (Ctrl-C) and SIGTERM into the stop flag so `serve`
+/// drains and reports instead of the process dying mid-request.
+///
+/// std has no signal API and no libc crate is vendored, so this binds
+/// libc's `signal(2)` directly (std already links libc on unix). The
+/// handler body is one atomic store — async-signal-safe.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        STOP_REQUESTED.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    // POSIX-fixed numbers on every unix target rust supports.
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+}
+
+/// No-op off unix: the stop flag still works via `Shutdown` frames.
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+fn should_stop(stop: &AtomicBool) -> bool {
+    stop.load(Ordering::Relaxed) || stop_requested()
+}
+
+// -------------------------------------------------------- batch scorer ----
+
+/// Per-worker scoring state: the encoder for the model generation it last
+/// served, rebuilt only when a hot swap changes the [`FeatureMapSpec`].
+/// Scoring through it is bit-identical to offline `predict_artifact`:
+/// the same `spec.build()` encoder, the same per-row `encode_into`, the
+/// same `SketchView` dot product (asserted in `tests/integration_serve.rs`).
+pub struct BatchScorer {
+    spec: Option<FeatureMapSpec>,
+    map: Option<Box<dyn FeatureMap>>,
+    scratch: Option<SketchRow>,
+}
+
+impl Default for BatchScorer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchScorer {
+    pub fn new() -> Self {
+        Self {
+            spec: None,
+            map: None,
+            scratch: None,
+        }
+    }
+
+    /// Rebuild the cached encoder iff the served spec changed.
+    fn ensure_spec(&mut self, spec: &FeatureMapSpec) {
+        if self.spec.as_ref() != Some(spec) {
+            let map = spec.build();
+            self.scratch = Some(SketchRow::new(&map.layout()));
+            self.map = Some(map);
+            self.spec = Some(spec.clone());
+        }
+    }
+
+    /// Score one micro-batch against one model snapshot, filling `out`.
+    /// Row validation happens here, where the active model (and hence the
+    /// input domain) is known: indices must be strictly increasing and
+    /// `< spec.dim`, exactly the invariants `SparseBinaryDataset` holds
+    /// offline — so a bad row is an `Error` frame, never a worker panic.
+    pub fn score_batch(
+        &mut self,
+        model: &ServedModel,
+        rows: &[Vec<u64>],
+        out: &mut Vec<f64>,
+    ) -> io::Result<()> {
+        let spec = &model.artifact.spec;
+        for (i, row) in rows.iter().enumerate() {
+            if !row.windows(2).all(|w| w[0] < w[1]) {
+                return Err(bad(format!(
+                    "row {i}: indices must be sorted strictly increasing"
+                )));
+            }
+            if let Some(&max) = row.last() {
+                if max >= spec.dim {
+                    return Err(bad(format!(
+                        "row {i}: index {max} outside the model's input domain {}",
+                        spec.dim
+                    )));
+                }
+            }
+        }
+        self.ensure_spec(spec);
+        let (Some(map), Some(scratch)) = (self.map.as_deref(), self.scratch.as_mut()) else {
+            return Err(bad("encoder cache empty after ensure_spec".to_string()));
+        };
+        // One fresh matrix per request (request-scoped, sized up front);
+        // the per-row path below reuses the worker's scratch only.
+        let mut sk = SketchMatrix::with_capacity(map.layout(), rows.len());
+        encode_rows_into(map, rows, scratch, &mut sk);
+        let view = SketchView::new(&sk);
+        score_view_into(&model.artifact.model, &view, rows.len(), out);
+        Ok(())
+    }
+}
+
+/// Encode a request's rows through the worker's reusable scratch — the
+/// per-request encode hot loop (labels are unknown at serving time; the
+/// stored 0.0 is never read by scoring).
+// bbml-lint: hot-path
+fn encode_rows_into(
+    map: &dyn FeatureMap,
+    rows: &[Vec<u64>],
+    scratch: &mut SketchRow,
+    sk: &mut SketchMatrix,
+) {
+    for row in rows {
+        map.encode_into(row, scratch.row_mut());
+        sk.push_encoded(scratch, 0.0);
+    }
+}
+
+/// Score every encoded row into `out` — the per-request score hot loop.
+// bbml-lint: hot-path
+fn score_view_into(model: &LinearModel, view: &SketchView<'_>, n: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(n);
+    for i in 0..n {
+        out.push(model.score(view, i));
+    }
+}
+
+// ------------------------------------------------------------- options ----
+
+/// Server tuning knobs.
+pub struct ServeOptions {
+    /// Worker threads (each owns one connection at a time).
+    pub workers: usize,
+    /// Poll the served model file's mtime and hot-swap on change.
+    pub watch: bool,
+    /// Mtime poll cadence.
+    pub watch_interval: Duration,
+    /// Per-read socket timeout — the granularity at which idle
+    /// connections notice the stop flag.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            watch: false,
+            watch_interval: Duration::from_millis(500),
+            read_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+// ------------------------------------------------- interruptible reads ----
+
+/// Extra read-timeout rounds granted to a connection that is mid-frame
+/// when the stop flag lands (in-flight requests drain; stalls don't hang
+/// shutdown forever).
+const SHUTDOWN_GRACE_POLLS: u32 = 8;
+
+/// Fill `buf` from the stream, polling the stop flag on every read
+/// timeout. Returns `Ok(false)` when the connection should close without
+/// data: clean EOF before any byte of `buf`, or idle (no byte of `buf`
+/// yet) when stopping.
+fn fill_interruptible(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    clean_at_zero: bool,
+) -> io::Result<bool> {
+    let mut got = 0usize;
+    let mut grace = 0u32;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && clean_at_zero {
+                    return Ok(false);
+                }
+                return Err(bad(format!("EOF after {got} of {} bytes", buf.len())));
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if should_stop(stop) {
+                    if got == 0 && clean_at_zero {
+                        return Ok(false);
+                    }
+                    grace += 1;
+                    if grace > SHUTDOWN_GRACE_POLLS {
+                        return Err(bad(
+                            "connection stalled mid-frame during shutdown".to_string(),
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame, returning `Ok(None)` when the connection closed
+/// cleanly (EOF at a frame boundary, or idle at shutdown).
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> io::Result<Option<(FrameType, Vec<u8>)>> {
+    let mut head = [0u8; FRAME_HEADER_LEN];
+    if !fill_interruptible(stream, &mut head, stop, true)? {
+        return Ok(None);
+    }
+    let header = FrameHeader::decode(&head)?;
+    let mut payload = vec![0u8; header.payload_len as usize];
+    fill_interruptible(stream, &mut payload, stop, false)?;
+    header.verify_payload(&payload)?;
+    Ok(Some((header.frame_type()?, payload)))
+}
+
+// -------------------------------------------------------------- server ----
+
+/// Run the scoring server on an already-bound listener until stopped (by
+/// a `Shutdown` frame, a signal, or `stop`). Blocks; returns once every
+/// worker has drained. The caller reads the final gauges from `stats`
+/// afterwards.
+pub fn serve(
+    listener: TcpListener,
+    slot: Arc<ModelSlot>,
+    stats: Arc<ServeStats>,
+    opt: &ServeOptions,
+    stop: Arc<AtomicBool>,
+) -> io::Result<()> {
+    let workers = opt.workers.max(1);
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = sync_channel::<TcpStream>(workers * 2);
+    let rx = Arc::new(Mutex::new(rx));
+
+    std::thread::scope(|s| -> io::Result<()> {
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let slot = Arc::clone(&slot);
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            let read_timeout = opt.read_timeout;
+            s.spawn(move || worker_loop(w, &rx, &slot, &stats, &stop, read_timeout));
+        }
+        if opt.watch {
+            let slot = Arc::clone(&slot);
+            let stop = Arc::clone(&stop);
+            let interval = opt.watch_interval;
+            s.spawn(move || watch_loop(&slot, &stop, interval));
+        }
+
+        while !should_stop(&stop) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nodelay(true).ok();
+                    if tx.send(stream).is_err() {
+                        break; // every worker exited — nothing can serve
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("serve: accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+        // Stop accepting; closing the channel lets workers drain queued
+        // connections and exit. scope joins them (and the watcher, which
+        // polls the same stop flag) before returning.
+        drop(tx);
+        Ok(())
+    })
+}
+
+/// One worker: pull whole connections off the queue, serve them
+/// frame-by-frame until EOF / stop, repeat until the queue closes.
+fn worker_loop(
+    worker: usize,
+    rx: &Mutex<Receiver<TcpStream>>,
+    slot: &ModelSlot,
+    stats: &ServeStats,
+    stop: &AtomicBool,
+    read_timeout: Duration,
+) {
+    let mut scorer = BatchScorer::new();
+    loop {
+        let next = {
+            // bbml-lint: allow(no-unwrap) reason: lock poisoning is a
+            // propagated panic from another worker, not an input error;
+            // recover the receiver and keep draining
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        let Ok(stream) = next else { return }; // channel closed: drain done
+        if let Err(e) = handle_connection(stream, slot, stats, stop, &mut scorer, read_timeout)
+        {
+            stats.count_error();
+            eprintln!("serve: worker {worker}: connection error: {e}");
+        }
+    }
+}
+
+/// Serve one connection until clean close. Malformed *payloads* get an
+/// `Error` frame and the connection lives on; a broken *stream* (bad
+/// frame header, socket error) is propagated and the connection dropped.
+fn handle_connection(
+    mut stream: TcpStream,
+    slot: &ModelSlot,
+    stats: &ServeStats,
+    stop: &AtomicBool,
+    scorer: &mut BatchScorer,
+    read_timeout: Duration,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(read_timeout))?;
+    let mut scores: Vec<f64> = Vec::new();
+    loop {
+        let Some((ft, payload)) = read_frame_interruptible(&mut stream, stop)? else {
+            return Ok(());
+        };
+        match ft {
+            FrameType::ScoreRequest => {
+                let t0 = Instant::now();
+                stats.begin_request();
+                let outcome = decode_score_request(&payload).and_then(|rows| {
+                    // ONE snapshot for the whole request — the no-mixed-
+                    // model guarantee under concurrent hot swap.
+                    let model = slot.load();
+                    scorer.score_batch(&model, &rows, &mut scores)?;
+                    Ok((model.crc32, rows.len()))
+                });
+                match outcome {
+                    Ok((crc, n_rows)) => {
+                        let body = protocol::encode_score_response(crc, &scores);
+                        write_frame(&mut stream, FrameType::ScoreResponse, &body)?;
+                        stats.end_request(n_rows, t0.elapsed());
+                    }
+                    Err(e) => {
+                        stats.abort_request();
+                        write_frame(&mut stream, FrameType::Error, e.to_string().as_bytes())?;
+                    }
+                }
+            }
+            FrameType::Reload => {
+                let outcome = decode_reload(&payload)
+                    .and_then(|path| slot.reload_from(path.as_deref().map(std::path::Path::new)));
+                match outcome {
+                    Ok(crc) => {
+                        println!("serve: hot-swapped model (weights_crc32 {crc})");
+                        let body = protocol::encode_reload_ok(crc);
+                        write_frame(&mut stream, FrameType::ReloadOk, &body)?;
+                    }
+                    Err(e) => {
+                        stats.count_error();
+                        write_frame(&mut stream, FrameType::Error, e.to_string().as_bytes())?;
+                    }
+                }
+            }
+            FrameType::Stats => {
+                let body = stats.to_json(slot.swap_count(), stats.in_flight());
+                write_frame(&mut stream, FrameType::StatsResponse, body.as_bytes())?;
+            }
+            FrameType::Shutdown => {
+                stop.store(true, Ordering::Relaxed);
+                write_frame(&mut stream, FrameType::ShutdownOk, b"")?;
+                return Ok(());
+            }
+            other => {
+                // Server-bound streams never carry response frames.
+                stats.count_error();
+                let msg = format!("unexpected frame {other:?} on a server connection");
+                write_frame(&mut stream, FrameType::Error, msg.as_bytes())?;
+            }
+        }
+    }
+}
+
+/// The `--watch` thread: poll the served file's mtime; on change, reload
+/// in place. A half-written or incompatible file is logged and retried on
+/// the next tick — the slot's validation guarantees the live model stays.
+fn watch_loop(slot: &ModelSlot, stop: &AtomicBool, interval: Duration) {
+    let tick = Duration::from_millis(50).min(interval);
+    let mut since_poll = Duration::ZERO;
+    while !should_stop(stop) {
+        std::thread::sleep(tick);
+        since_poll += tick;
+        if since_poll < interval {
+            continue;
+        }
+        since_poll = Duration::ZERO;
+        if slot.source_changed() {
+            match slot.reload_from(None) {
+                Ok(crc) => println!("serve: watch hot-swapped model (weights_crc32 {crc})"),
+                Err(e) => eprintln!("serve: watch reload failed (keeping live model): {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::feature_map::Scheme;
+    use crate::rng::Xoshiro256;
+    use crate::store::ModelArtifact;
+    use std::path::PathBuf;
+
+    fn served(scheme: Scheme, k: usize, seed: u64) -> ServedModel {
+        let spec = FeatureMapSpec::new(scheme, 1 << 20, k, 4, seed);
+        let n = spec.layout().train_dim();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let w: Vec<f32> = (0..n).map(|_| rng.gen_f32() - 0.5).collect();
+        let artifact = ModelArtifact::new(
+            spec,
+            LinearModel {
+                w,
+                iters: 1,
+                objective: 0.0,
+            },
+        )
+        .unwrap();
+        let crc32 = crate::coordinator::report::weights_crc32(&artifact.model.w);
+        ServedModel {
+            artifact,
+            crc32,
+            source: PathBuf::from("/dev/null"),
+            mtime: None,
+        }
+    }
+
+    #[test]
+    fn batch_scorer_is_deterministic_and_validates_rows() {
+        let model = served(Scheme::Bbit, 16, 7);
+        let mut scorer = BatchScorer::new();
+        let rows = vec![vec![3u64, 99, 4000], vec![17, 170_000]];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        scorer.score_batch(&model, &rows, &mut a).unwrap();
+        scorer.score_batch(&model, &rows, &mut b).unwrap();
+        assert_eq!(a.len(), 2);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b), "same scorer, same rows, same bits");
+
+        // Unsorted, duplicate, and out-of-domain rows are InvalidData.
+        for rows in [
+            vec![vec![5u64, 3]],
+            vec![vec![5u64, 5]],
+            vec![vec![1u64 << 20]],
+        ] {
+            let err = scorer.score_batch(&model, &rows, &mut a).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{rows:?}");
+        }
+        // Empty rows and empty batches are fine.
+        scorer.score_batch(&model, &[vec![]], &mut a).unwrap();
+        assert_eq!(a.len(), 1);
+        scorer.score_batch(&model, &[], &mut a).unwrap();
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn batch_scorer_rebuilds_encoder_on_spec_change_only() {
+        let m8 = served(Scheme::Bbit, 8, 1);
+        let m16 = served(Scheme::Bbit, 16, 1);
+        let mut scorer = BatchScorer::new();
+        let rows = vec![vec![10u64, 20, 30]];
+        let mut out = Vec::new();
+        scorer.score_batch(&m8, &rows, &mut out).unwrap();
+        assert_eq!(scorer.spec.as_ref().map(|s| s.k), Some(8));
+        scorer.score_batch(&m16, &rows, &mut out).unwrap();
+        assert_eq!(scorer.spec.as_ref().map(|s| s.k), Some(16));
+        // Dense schemes flow through the same cache.
+        let vw = served(Scheme::Vw, 12, 2);
+        scorer.score_batch(&vw, &rows, &mut out).unwrap();
+        assert_eq!(scorer.spec.as_ref().map(|s| s.scheme), Some(Scheme::Vw));
+    }
+
+    #[test]
+    fn stop_flag_helpers() {
+        let local = AtomicBool::new(false);
+        assert!(!should_stop(&local));
+        local.store(true, Ordering::Relaxed);
+        assert!(should_stop(&local));
+        // The global flag feeds the same predicate (reset afterwards so
+        // other tests in this process see a quiet flag).
+        let fresh = AtomicBool::new(false);
+        request_stop();
+        assert!(should_stop(&fresh));
+        STOP_REQUESTED.store(false, Ordering::Relaxed);
+    }
+}

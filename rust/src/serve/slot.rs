@@ -1,0 +1,237 @@
+//! [`ModelSlot`] — the atomically hot-swappable published model.
+//!
+//! The serving invariant: a request is scored **entirely** by one model.
+//! Workers take one `Arc<ServedModel>` snapshot per request
+//! ([`ModelSlot::load`]) and never touch the slot again until the
+//! response is written, so a concurrent [`ModelSlot::reload_from`] can
+//! swap the published artifact without a torn read — in-flight requests
+//! finish on the model they started with, new requests see the new one,
+//! and a mixed-model response is structurally impossible (asserted under
+//! hammering in `tests/integration_serve.rs`).
+//!
+//! Swap validation: the incoming artifact must keep the live requests'
+//! *input contract* — same scheme and same input domain `dim` — because
+//! clients encode nothing; they ship raw indices that must stay valid
+//! against whatever model is active. Width parameters (`k`, `b`,
+//! `buckets`, `seed`) may change freely: workers compare the snapshot's
+//! [`FeatureMapSpec`] against their cached encoder and rebuild it when a
+//! retrained model differs. A failed validation leaves the slot untouched.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::SystemTime;
+
+use crate::coordinator::report::weights_crc32;
+use crate::store::ModelArtifact;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("model slot: {msg}"))
+}
+
+/// One published model: the artifact plus everything the serving layer
+/// reports about it (fingerprint, source path, file mtime for the watch).
+pub struct ServedModel {
+    /// The self-describing artifact being served.
+    pub artifact: ModelArtifact,
+    /// `weights_crc32` fingerprint, computed once at publish time and
+    /// stamped on every score response.
+    pub crc32: u32,
+    /// The file this model was loaded from (reload / watch target).
+    pub source: PathBuf,
+    /// Source-file modification time at load, when the filesystem
+    /// reports one — the mtime watch's change detector.
+    pub mtime: Option<SystemTime>,
+}
+
+impl ServedModel {
+    /// Load an artifact file into a publishable model.
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let artifact = ModelArtifact::load(path)?;
+        let crc32 = weights_crc32(&artifact.model.w);
+        let mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        Ok(Self {
+            artifact,
+            crc32,
+            source: path.to_path_buf(),
+            mtime,
+        })
+    }
+}
+
+/// The slot itself: an `RwLock<Arc<…>>` in lieu of an external arc-swap
+/// crate. Readers clone the `Arc` under a momentary read lock (two atomic
+/// ops, no allocation); the write lock is held only for the pointer swap
+/// itself — artifact loading and validation happen outside it.
+pub struct ModelSlot {
+    inner: RwLock<Arc<ServedModel>>,
+    swaps: AtomicU64,
+}
+
+impl ModelSlot {
+    /// Publish the initial model.
+    pub fn new(model: ServedModel) -> Self {
+        Self {
+            inner: RwLock::new(Arc::new(model)),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the currently published model. The returned `Arc` keeps
+    /// that model alive for the whole request even if a swap lands
+    /// mid-flight.
+    pub fn load(&self) -> Arc<ServedModel> {
+        // bbml-lint: allow(no-unwrap) reason: lock poisoning is a
+        // propagated panic from another thread, not an input error;
+        // recover the guard and keep serving (repo-wide poison idiom)
+        let guard = self.inner.read().unwrap_or_else(|e| e.into_inner());
+        Arc::clone(&guard)
+    }
+
+    /// Completed swaps so far (the `swap_count` gauge).
+    pub fn swap_count(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Load a new artifact and atomically publish it. `path` of `None`
+    /// re-reads the currently served source file (the `reload` control
+    /// frame's default, and what the mtime watch triggers).
+    ///
+    /// Validates scheme + input-domain compatibility against the live
+    /// model *before* committing; on any error the slot is unchanged and
+    /// in-flight requests are unaffected. Returns the new fingerprint.
+    pub fn reload_from(&self, path: Option<&Path>) -> io::Result<u32> {
+        let current = self.load();
+        let path = path.unwrap_or(&current.source);
+        let incoming = ServedModel::load(path)?;
+        let (old, new) = (&current.artifact.spec, &incoming.artifact.spec);
+        if new.scheme != old.scheme {
+            return Err(bad(format!(
+                "refusing swap: live model serves scheme '{}', {} records '{}'",
+                old.scheme,
+                path.display(),
+                new.scheme
+            )));
+        }
+        if new.dim != old.dim {
+            return Err(bad(format!(
+                "refusing swap: live input domain is {}, {} records {} — \
+                 clients' raw indices would silently change meaning",
+                old.dim,
+                path.display(),
+                new.dim
+            )));
+        }
+        let crc = incoming.crc32;
+        {
+            // bbml-lint: allow(no-unwrap) reason: lock poisoning is a
+            // propagated panic, not an input error; recover and swap
+            let mut guard = self.inner.write().unwrap_or_else(|e| e.into_inner());
+            *guard = Arc::new(incoming);
+        }
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(crc)
+    }
+
+    /// True when the served source file's mtime differs from the one
+    /// recorded at publish — the mtime watch's poll predicate. Errors
+    /// reading metadata (file mid-replace) read as "unchanged".
+    pub fn source_changed(&self) -> bool {
+        let current = self.load();
+        match std::fs::metadata(&current.source).and_then(|m| m.modified()) {
+            Ok(mtime) => current.mtime.map(|old| mtime != old).unwrap_or(false),
+            Err(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
+    use crate::rng::Xoshiro256;
+    use crate::solvers::LinearModel;
+
+    fn artifact(scheme: Scheme, dim: u64, k: usize, seed: u64) -> ModelArtifact {
+        let spec = FeatureMapSpec::new(scheme, dim, k, 4, seed);
+        let n = spec.layout().train_dim();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let w: Vec<f32> = (0..n).map(|_| rng.gen_f32() - 0.5).collect();
+        ModelArtifact::new(
+            spec,
+            LinearModel {
+                w,
+                iters: 1,
+                objective: 0.0,
+            },
+        )
+        .unwrap()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bbml_slot_{}_{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn publish_swap_and_count() {
+        let p1 = tmp("m1.bbm");
+        let p2 = tmp("m2.bbm");
+        artifact(Scheme::Bbit, 1 << 20, 8, 1).save(&p1).unwrap();
+        artifact(Scheme::Bbit, 1 << 20, 16, 2).save(&p2).unwrap();
+        let slot = ModelSlot::new(ServedModel::load(&p1).unwrap());
+        let first = slot.load();
+        assert_eq!(slot.swap_count(), 0);
+
+        let crc2 = slot.reload_from(Some(&p2)).unwrap();
+        assert_eq!(slot.swap_count(), 1);
+        let second = slot.load();
+        assert_eq!(second.crc32, crc2);
+        assert_ne!(first.crc32, second.crc32);
+        // Differing k is fine (retrained model); the old snapshot is
+        // still fully usable — that's the no-torn-read guarantee.
+        assert_eq!(first.artifact.spec.k, 8);
+        assert_eq!(second.artifact.spec.k, 16);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn incompatible_swap_is_rejected_and_slot_unchanged() {
+        let p1 = tmp("c1.bbm");
+        let p_scheme = tmp("c2.bbm");
+        let p_dim = tmp("c3.bbm");
+        artifact(Scheme::Bbit, 1 << 20, 8, 1).save(&p1).unwrap();
+        artifact(Scheme::Vw, 1 << 20, 8, 2).save(&p_scheme).unwrap();
+        artifact(Scheme::Bbit, 1 << 21, 8, 3).save(&p_dim).unwrap();
+        let slot = ModelSlot::new(ServedModel::load(&p1).unwrap());
+        let before = slot.load().crc32;
+
+        let err = slot.reload_from(Some(&p_scheme)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("scheme"), "{err}");
+        let err = slot.reload_from(Some(&p_dim)).unwrap_err();
+        assert!(err.to_string().contains("domain"), "{err}");
+        // Missing file: also refused, slot untouched.
+        assert!(slot.reload_from(Some(Path::new("/no/such.bbm"))).is_err());
+
+        assert_eq!(slot.load().crc32, before);
+        assert_eq!(slot.swap_count(), 0);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p_scheme).ok();
+        std::fs::remove_file(&p_dim).ok();
+    }
+
+    #[test]
+    fn reload_none_rereads_the_source_path() {
+        let p = tmp("rr.bbm");
+        artifact(Scheme::Bbit, 1 << 20, 8, 1).save(&p).unwrap();
+        let slot = ModelSlot::new(ServedModel::load(&p).unwrap());
+        // Overwrite the file in place with a retrained model.
+        artifact(Scheme::Bbit, 1 << 20, 8, 99).save(&p).unwrap();
+        let crc = slot.reload_from(None).unwrap();
+        assert_eq!(slot.load().crc32, crc);
+        assert_eq!(slot.swap_count(), 1);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,247 @@
+//! [`ServeStats`] — the serving gauges: request/row/error counters, queue
+//! depth, and a capped latency reservoir that yields p50/p95/p99 in the
+//! same index-rounding convention as [`crate::benchkit::Stats`], so the
+//! report numbers and the `bench_serving` numbers are comparable.
+//!
+//! Counters are plain atomics (workers bump them lock-free); only the
+//! latency reservoir takes a mutex, once per request, to push one `u64`.
+//! Gauges are emitted two ways from the same entries: the final
+//! `serve_report.json` (via [`report::write_json_object`]) and the
+//! `Stats` control frame's inline JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::report;
+
+/// Retained latency samples. Old samples are overwritten ring-style once
+/// full, so long-running servers report *recent* tails, not launch-time
+/// warmup forever.
+const LATENCY_CAP: usize = 16_384;
+
+/// Shared serving gauges (one per server, `Arc`-shared with workers).
+pub struct ServeStats {
+    started: Instant,
+    requests: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    /// Requests currently being scored (decremented on completion).
+    in_flight: AtomicU64,
+    /// High-water mark of `in_flight` — the queue-depth gauge.
+    peak_in_flight: AtomicU64,
+    /// Per-request wall latency in µs, ring-buffered.
+    latency_us: Mutex<LatencyRing>,
+}
+
+struct LatencyRing {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            peak_in_flight: AtomicU64::new(0),
+            latency_us: Mutex::new(LatencyRing {
+                samples: Vec::with_capacity(1024),
+                next: 0,
+            }),
+        }
+    }
+
+    /// A request entered scoring. Returns the depth *including* it.
+    pub fn begin_request(&self) -> u64 {
+        let depth = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_in_flight.fetch_max(depth, Ordering::Relaxed);
+        depth
+    }
+
+    /// A request finished (scored `rows` rows in `latency`).
+    pub fn end_request(&self, rows: usize, latency: Duration) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        // bbml-lint: allow(no-unwrap) reason: lock poisoning is a
+        // propagated panic, not an input error; recover and keep counting
+        let mut ring = self.latency_us.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.samples.len() < LATENCY_CAP {
+            ring.samples.push(us);
+        } else {
+            let at = ring.next;
+            ring.samples[at] = us;
+            ring.next = (at + 1) % LATENCY_CAP;
+        }
+    }
+
+    /// A begun request failed before producing scores: leave the
+    /// in-flight gauge balanced and count the error.
+    pub fn abort_request(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request failed (protocol error, invalid rows, failed reload…).
+    pub fn count_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests being scored right now — the live queue-depth gauge.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_in_flight(&self) -> u64 {
+        self.peak_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Latency percentiles over the retained samples, in µs:
+    /// `(p50, p95, p99)`. All zero before the first completed request.
+    pub fn latency_percentiles_us(&self) -> (u64, u64, u64) {
+        // bbml-lint: allow(no-unwrap) reason: lock poisoning is a
+        // propagated panic, not an input error; recover and report
+        let ring = self.latency_us.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.samples.is_empty() {
+            return (0, 0, 0);
+        }
+        let mut sorted = ring.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        // Same nearest-rank rounding as benchkit::Stats::from_samples.
+        let pct = |q: f64| sorted[((n - 1) as f64 * q).round() as usize];
+        (pct(0.5), pct(0.95), pct(0.99))
+    }
+
+    /// The gauges as report entries — one source of truth for both the
+    /// final `serve_report.json` and the `Stats` frame. `swap_count` and
+    /// `queue_depth` come from the caller (slot / live counter).
+    pub fn report_entries(&self, swap_count: u64, queue_depth: u64) -> Vec<(&'static str, String)> {
+        let (p50, p95, p99) = self.latency_percentiles_us();
+        let uptime = self.started.elapsed().as_secs_f64();
+        let rows = self.rows();
+        let rows_per_sec = if uptime > 0.0 {
+            rows as f64 / uptime
+        } else {
+            0.0
+        };
+        vec![
+            ("requests", self.requests().to_string()),
+            ("rows", rows.to_string()),
+            ("errors", self.errors().to_string()),
+            ("swap_count", swap_count.to_string()),
+            ("queue_depth", queue_depth.to_string()),
+            ("peak_queue_depth", self.peak_in_flight().to_string()),
+            ("p50_us", p50.to_string()),
+            ("p95_us", p95.to_string()),
+            ("p99_us", p99.to_string()),
+            ("rows_per_sec", format!("{rows_per_sec:.3}")),
+            ("uptime_secs", format!("{uptime:.6}")),
+        ]
+    }
+
+    /// The gauges as one inline JSON object (the `StatsResponse` payload).
+    pub fn to_json(&self, swap_count: u64, queue_depth: u64) -> String {
+        let entries = self.report_entries(swap_count, queue_depth);
+        let mut out = String::with_capacity(entries.len() * 24);
+        out.push('{');
+        for (idx, (key, value)) in entries.iter().enumerate() {
+            if idx > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{}: {value}", report::json_string(key)));
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let s = ServeStats::new();
+        assert_eq!(s.latency_percentiles_us(), (0, 0, 0));
+        let d1 = s.begin_request();
+        let d2 = s.begin_request();
+        assert_eq!((d1, d2), (1, 2));
+        assert_eq!(s.in_flight(), 2);
+        s.end_request(10, Duration::from_micros(100));
+        s.end_request(20, Duration::from_micros(300));
+        s.count_error();
+        assert_eq!(s.in_flight(), 0);
+        s.begin_request();
+        s.abort_request();
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.errors(), 2);
+        assert_eq!(s.requests(), 2);
+        assert_eq!(s.rows(), 30);
+        assert_eq!(s.peak_in_flight(), 2);
+        let (p50, p95, p99) = s.latency_percentiles_us();
+        assert!((100..=300).contains(&p50));
+        assert_eq!((p95, p99), (300, 300));
+        assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn ring_caps_and_keeps_recent_samples() {
+        let s = ServeStats::new();
+        for i in 0..(LATENCY_CAP + 10) {
+            s.begin_request();
+            s.end_request(1, Duration::from_micros(i as u64));
+        }
+        let ring = s.latency_us.lock().unwrap();
+        assert_eq!(ring.samples.len(), LATENCY_CAP);
+        // The overwritten head now holds the newest samples.
+        assert_eq!(ring.samples[0], LATENCY_CAP as u64);
+        assert_eq!(ring.next, 10);
+    }
+
+    #[test]
+    fn json_gauges_parse_by_eye() {
+        let s = ServeStats::new();
+        s.begin_request();
+        s.end_request(5, Duration::from_micros(42));
+        let j = s.to_json(3, 1);
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        for key in [
+            "\"requests\": 1",
+            "\"rows\": 5",
+            "\"swap_count\": 3",
+            "\"queue_depth\": 1",
+            "\"p50_us\": 42",
+            "\"p99_us\": 42",
+            "\"rows_per_sec\":",
+            "\"uptime_secs\":",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        let entries = s.report_entries(0, 0);
+        assert_eq!(entries.len(), 11);
+    }
+}

@@ -162,6 +162,38 @@
 //! the uninterrupted run** — weights and objective are bit-identical
 //! (property-tested in `tests/integration_session.rs`).
 //!
+//! # Serve wire frames (version 1)
+//!
+//! The online scoring service ([`crate::serve`]) speaks length-prefixed
+//! binary frames over TCP with the same envelope discipline as the framed
+//! blobs above — a fixed header states the payload's length and CRC-32
+//! before a byte of payload is read. The header is encoded by
+//! [`crate::serve::protocol::FrameHeader::encode`] and held to this table
+//! by bbml-lint's `format-drift` rule (R4). All little-endian:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------------
+//!      0     8  magic            b"BBSERVE\0"
+//!      8     4  version          u32, currently 1
+//!     12     4  frame_type       u32 frame-type code (registry below)
+//!     16     8  payload_len      u64, payload bytes following the header
+//!     24     4  payload_crc32    u32, CRC-32 (poly 0xEDB88320, reflected)
+//!                                of the payload
+//!     28     4  reserved         zero
+//!     32     …  payload
+//! ```
+//!
+//! Frame-type codes (u32): 0 ScoreRequest, 1 ScoreResponse, 2 Reload,
+//! 3 ReloadOk, 4 Shutdown, 5 ShutdownOk, 6 Stats, 7 StatsResponse,
+//! 8 Error — unknown codes are rejected, never guessed at. Per-type
+//! payload layouts (score batches as u32/u64 tables, scores as raw
+//! IEEE-754 f64 bit patterns) are documented in [`crate::serve::protocol`];
+//! scores ship as bit patterns so a served response is **bit-identical**
+//! to offline [`predict_artifact`] on the same rows.
+//!
+//! [`predict_artifact`]: crate::coordinator::trainer::predict_artifact
+//!
 //! # Merging stores
 //!
 //! [`merge::merge_stores`] concatenates compatible stores (same scheme, k,

@@ -251,6 +251,109 @@ fn r4_only_runs_on_the_store_pair() {
     assert!(rep.is_clean(), "{}", rep.render_text());
 }
 
+/// The serve wire-frame table appended to the store docs, mirroring the
+/// real one: BBSERVE magic, contiguous rows, payload terminator at 32.
+const R4_SERVE_DOCS_TABLE: &str = "\
+//! # Serve wire frames (version 1)
+//!
+//! ```text
+//!      0     8  magic            b\"BBSERVE\\0\"
+//!      8     4  version          u32
+//!     12     4  frame_type       u32
+//!     16     8  payload_len      u64
+//!     24     4  payload_crc32    u32
+//!     28     4  reserved         zero
+//!     32     …  payload
+//! ```
+";
+
+const R4_SERVE_PROTO: &str = "\
+pub const FRAME_MAGIC: [u8; 8] = *b\"BBSERVE\\0\";
+pub const FRAME_VERSION: u32 = 1;
+pub const FRAME_HEADER_LEN: usize = 32;
+impl FrameHeader {
+    pub fn encode(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut out = [0u8; FRAME_HEADER_LEN];
+        out[0..8].copy_from_slice(&FRAME_MAGIC);
+        out[8..12].copy_from_slice(&self.version.to_le_bytes());
+        out[12..16].copy_from_slice(&self.frame_type.to_le_bytes());
+        out[16..24].copy_from_slice(&self.payload_len.to_le_bytes());
+        out[24..28].copy_from_slice(&self.payload_crc32.to_le_bytes());
+        out
+    }
+}
+";
+
+fn serve_docs() -> String {
+    format!("{R4_GOOD_DOCS}{R4_SERVE_DOCS_TABLE}")
+}
+
+#[test]
+fn r4_accepts_agreeing_serve_protocol_and_table() {
+    let docs = serve_docs();
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", &docs),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+        ("src/serve/protocol.rs", R4_SERVE_PROTO),
+    ]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+#[test]
+fn r4_flags_serve_header_len_version_and_encode_drift() {
+    // Three independent drifts: FRAME_HEADER_LEN disagrees with the
+    // documented payload offset, FRAME_VERSION disagrees with the table
+    // heading, and frame_type is written wider than documented.
+    let docs = serve_docs();
+    let drifted = R4_SERVE_PROTO
+        .replace("FRAME_HEADER_LEN: usize = 32", "FRAME_HEADER_LEN: usize = 40")
+        .replace("FRAME_VERSION: u32 = 1", "FRAME_VERSION: u32 = 2")
+        .replace(
+            "out[12..16].copy_from_slice(&self.frame_type",
+            "out[12..18].copy_from_slice(&self.frame_type",
+        );
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", &docs),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+        ("src/serve/protocol.rs", &drifted),
+    ]);
+    let rules: Vec<&str> = rep.findings.iter().map(|f| f.rule).collect();
+    assert_eq!(
+        rules,
+        vec![R4_FORMAT_DRIFT, R4_FORMAT_DRIFT, R4_FORMAT_DRIFT],
+        "{}",
+        rep.render_text()
+    );
+    for needle in ["FRAME_HEADER_LEN", "FRAME_VERSION", "frame_type"] {
+        assert!(
+            rep.findings.iter().any(|f| f.message.contains(needle)),
+            "missing {needle}:\n{}",
+            rep.render_text()
+        );
+    }
+}
+
+#[test]
+fn r4_flags_serve_protocol_without_doc_table_and_vice_versa() {
+    // A protocol with no documented table is drift…
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", R4_GOOD_DOCS),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+        ("src/serve/protocol.rs", R4_SERVE_PROTO),
+    ]);
+    assert_eq!(rep.findings.len(), 1, "{}", rep.render_text());
+    assert!(rep.findings[0].message.contains("BBSERVE"));
+
+    // …and so is a documented table with no protocol behind it.
+    let docs = serve_docs();
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", &docs),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+    ]);
+    assert_eq!(rep.findings.len(), 1, "{}", rep.render_text());
+    assert!(rep.findings[0].message.contains("serve/protocol.rs"));
+}
+
 // ---------------------------------------------------------------- R5 ----
 
 #[test]

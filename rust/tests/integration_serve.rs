@@ -1,0 +1,293 @@
+//! End-to-end serving tests over real loopback sockets: bit-identity with
+//! offline `predict_artifact`, atomic hot swap under concurrent hammering
+//! (ISSUE-8's no-drop / no-mix acceptance), swap validation, and graceful
+//! shutdown draining.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use bbml::coordinator::pipeline::PipelineOptions;
+use bbml::coordinator::trainer::predict_artifact;
+use bbml::data::sparse::SparseBinaryDataset;
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::feature_map::{FeatureMapSpec, Scheme};
+use bbml::rng::Xoshiro256;
+use bbml::serve::{serve, ModelSlot, ScoreClient, ServeOptions, ServeStats, ServedModel};
+use bbml::solvers::LinearModel;
+use bbml::store::ModelArtifact;
+
+const DIM: u64 = 1 << 18;
+
+fn artifact(scheme: Scheme, k: usize, seed: u64) -> ModelArtifact {
+    let spec = FeatureMapSpec::new(scheme, DIM, k, 4, seed);
+    let n = spec.layout().train_dim();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let w: Vec<f32> = (0..n).map(|_| rng.gen_f32() - 0.5).collect();
+    ModelArtifact::new(
+        spec,
+        LinearModel {
+            w,
+            iters: 1,
+            objective: 0.0,
+        },
+    )
+    .unwrap()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bbml_serve_{}_{}", name, std::process::id()))
+}
+
+fn corpus(n_docs: usize) -> SparseBinaryDataset {
+    generate_corpus(&SynthConfig {
+        n_docs,
+        dim: DIM,
+        vocab: 400,
+        mean_len: 30,
+        ..Default::default()
+    })
+}
+
+fn rows_of(ds: &SparseBinaryDataset) -> Vec<Vec<u64>> {
+    (0..ds.n()).map(|i| ds.row(i).to_vec()).collect()
+}
+
+fn offline_bits(art: &ModelArtifact, ds: &SparseBinaryDataset) -> Vec<u64> {
+    let opt = PipelineOptions {
+        threads: 1,
+        ..Default::default()
+    };
+    let out = predict_artifact(art, ds, &opt).unwrap();
+    out.scores.iter().map(|s| s.to_bits()).collect()
+}
+
+/// Bind port 0, launch the server on a background thread, and hand back
+/// the pieces a test needs: address, slot/stats handles, the stop flag,
+/// and the join handle (joins clean after a `Shutdown` frame).
+#[allow(clippy::type_complexity)]
+fn start_server(
+    model: ServedModel,
+    workers: usize,
+) -> (
+    std::net::SocketAddr,
+    Arc<ModelSlot>,
+    Arc<ServeStats>,
+    Arc<AtomicBool>,
+    JoinHandle<()>,
+) {
+    let slot = Arc::new(ModelSlot::new(model));
+    let stats = Arc::new(ServeStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = {
+        let (slot, stats, stop) = (Arc::clone(&slot), Arc::clone(&stats), Arc::clone(&stop));
+        std::thread::spawn(move || {
+            let opt = ServeOptions {
+                workers,
+                ..Default::default()
+            };
+            serve(listener, slot, stats, &opt, stop).unwrap();
+        })
+    };
+    (addr, slot, stats, stop, handle)
+}
+
+#[test]
+fn served_scores_are_bit_identical_to_offline_predict() {
+    // One sparse scheme (the paper's) and one dense baseline: the serving
+    // path must reproduce `predict_artifact` bit for bit on both.
+    for scheme in [Scheme::Bbit, Scheme::Vw] {
+        let path = tmp(&format!("ident_{scheme}.bbm"));
+        artifact(scheme, 16, 7).save(&path).unwrap();
+        let art = ModelArtifact::load(&path).unwrap();
+        let ds = corpus(41);
+        let rows = rows_of(&ds);
+        let expected = offline_bits(&art, &ds);
+
+        let (addr, _slot, _stats, _stop, handle) =
+            start_server(ServedModel::load(&path).unwrap(), 2);
+        let mut client = ScoreClient::connect(addr).unwrap();
+        let mut got = Vec::with_capacity(rows.len());
+        // Odd batch size on purpose: responses must stitch across
+        // request boundaries without reordering.
+        for batch in rows.chunks(7) {
+            let (crc, scores) = client.score(batch).unwrap();
+            assert_eq!(crc, ServedModel::load(&path).unwrap().crc32);
+            got.extend(scores.iter().map(|s| s.to_bits()));
+        }
+        assert_eq!(got, expected, "scheme {scheme}: served bits != offline");
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn hammer_under_repeated_hot_swap_never_mixes_or_drops() {
+    // Two compatible models (same scheme + input domain, different k and
+    // weights) swapped back and forth while 4 client threads hammer.
+    let (pa, pb) = (tmp("hammer_a.bbm"), tmp("hammer_b.bbm"));
+    let art_a = artifact(Scheme::Bbit, 8, 11);
+    let art_b = artifact(Scheme::Bbit, 16, 22);
+    art_a.save(&pa).unwrap();
+    art_b.save(&pb).unwrap();
+    let ds = corpus(64);
+    let rows = rows_of(&ds);
+    let served_a = ServedModel::load(&pa).unwrap();
+    let (crc_a, crc_b) = (served_a.crc32, ServedModel::load(&pb).unwrap().crc32);
+    assert_ne!(crc_a, crc_b);
+    let mut expected: HashMap<u32, Vec<u64>> = HashMap::new();
+    expected.insert(crc_a, offline_bits(&art_a, &ds));
+    expected.insert(crc_b, offline_bits(&art_b, &ds));
+
+    // More workers than live connections (4 scorers + 1 swapper): a
+    // connection-per-worker pool must never starve the swapper.
+    let (addr, slot, stats, _stop, handle) = start_server(served_a, 6);
+    const SCORERS: usize = 4;
+    const REQS: usize = 50;
+    const BATCH: usize = 8;
+    const SWAPS: usize = 30;
+
+    std::thread::scope(|s| {
+        let rows = &rows;
+        let expected = &expected;
+        let mut scorers = Vec::new();
+        for t in 0..SCORERS {
+            scorers.push(s.spawn(move || {
+                let mut client = ScoreClient::connect(addr).unwrap();
+                let mut answered = 0usize;
+                for r in 0..REQS {
+                    let start = ((t * 13 + r * BATCH) % (rows.len() - BATCH)).min(rows.len());
+                    let batch = &rows[start..start + BATCH];
+                    // Every request must be answered (no drops)...
+                    let (crc, scores) = client.score(batch).unwrap();
+                    // ...by exactly one published model (no mixes):
+                    let want = expected
+                        .get(&crc)
+                        .unwrap_or_else(|| panic!("crc {crc} is neither published model"));
+                    let got: Vec<u64> = scores.iter().map(|sc| sc.to_bits()).collect();
+                    assert_eq!(got, want[start..start + BATCH], "thread {t} req {r}");
+                    answered += 1;
+                }
+                answered
+            }));
+        }
+        let (pa_ref, pb_ref) = (&pa, &pb);
+        let swapper = s.spawn(move || {
+            let mut client = ScoreClient::connect(addr).unwrap();
+            for i in 0..SWAPS {
+                let (path, want) = if i % 2 == 0 {
+                    (pb_ref, crc_b)
+                } else {
+                    (pa_ref, crc_a)
+                };
+                let crc = client.reload(Some(path.to_str().unwrap())).unwrap();
+                assert_eq!(crc, want);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        let answered: usize = scorers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(answered, SCORERS * REQS, "a request was dropped");
+        swapper.join().unwrap();
+    });
+
+    assert_eq!(slot.swap_count(), SWAPS as u64);
+    assert_eq!(stats.requests(), (SCORERS * REQS) as u64);
+    assert_eq!(stats.errors(), 0);
+
+    ScoreClient::connect(addr).unwrap().shutdown().unwrap();
+    handle.join().unwrap();
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+#[test]
+fn incompatible_swap_is_refused_and_serving_continues() {
+    let (p_live, p_bad) = (tmp("guard_live.bbm"), tmp("guard_bad.bbm"));
+    artifact(Scheme::Bbit, 8, 1).save(&p_live).unwrap();
+    artifact(Scheme::Vw, 8, 2).save(&p_bad).unwrap();
+    let live_crc = ServedModel::load(&p_live).unwrap().crc32;
+    let (addr, slot, _stats, _stop, handle) =
+        start_server(ServedModel::load(&p_live).unwrap(), 2);
+
+    let mut client = ScoreClient::connect(addr).unwrap();
+    let err = client.reload(Some(p_bad.to_str().unwrap())).unwrap_err();
+    assert!(err.to_string().contains("scheme"), "{err}");
+    // The refused swap left the live model serving on the same connection.
+    let (crc, scores) = client.score(&[vec![1u64, 5, 900]]).unwrap();
+    assert_eq!(crc, live_crc);
+    assert_eq!(scores.len(), 1);
+    assert_eq!(slot.swap_count(), 0);
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    std::fs::remove_file(&p_live).ok();
+    std::fs::remove_file(&p_bad).ok();
+}
+
+#[test]
+fn bad_rows_get_an_error_frame_and_the_connection_survives() {
+    let p = tmp("rows.bbm");
+    artifact(Scheme::Bbit, 8, 3).save(&p).unwrap();
+    let (addr, _slot, stats, _stop, handle) =
+        start_server(ServedModel::load(&p).unwrap(), 2);
+
+    let mut client = ScoreClient::connect(addr).unwrap();
+    // Out-of-domain index → Error frame, not a dropped connection.
+    let err = client.score(&[vec![DIM]]).unwrap_err();
+    assert!(err.to_string().contains("domain"), "{err}");
+    // Unsorted row → same.
+    let err = client.score(&[vec![5u64, 3]]).unwrap_err();
+    assert!(err.to_string().contains("sorted"), "{err}");
+    // The connection still scores valid rows afterwards.
+    let (_, scores) = client.score(&[vec![3u64, 99]]).unwrap();
+    assert_eq!(scores.len(), 1);
+    assert_eq!(stats.errors(), 2);
+    assert_eq!(stats.requests(), 1);
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn stats_frame_and_graceful_shutdown_drain() {
+    let p = tmp("stats.bbm");
+    artifact(Scheme::Bbit, 8, 5).save(&p).unwrap();
+    let (addr, slot, stats, _stop, handle) =
+        start_server(ServedModel::load(&p).unwrap(), 2);
+
+    let mut client = ScoreClient::connect(addr).unwrap();
+    for _ in 0..3 {
+        client.score(&[vec![1u64, 2, 3], vec![10, 20]]).unwrap();
+    }
+    let json = client.stats().unwrap();
+    for key in [
+        "\"requests\": 3",
+        "\"rows\": 6",
+        "\"swap_count\": 0",
+        "\"p50_us\":",
+        "\"p95_us\":",
+        "\"p99_us\":",
+        "\"rows_per_sec\":",
+        "\"queue_depth\":",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+
+    // Graceful shutdown: acknowledged, server drains and joins, and the
+    // gauges survive for the final report.
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+    assert_eq!(stats.requests(), 3);
+    assert_eq!(stats.rows(), 6);
+    assert_eq!(slot.swap_count(), 0);
+    // The drained listener is gone: a fresh connect must fail.
+    assert!(ScoreClient::connect(addr).is_err());
+    std::fs::remove_file(&p).ok();
+}
