@@ -1,0 +1,723 @@
+//! Crate-wide call graph over the token stream — the engine behind
+//! R6 (`hot-path-transitive`), R7's interprocedural lock checks and
+//! R9's reachability from the bit-identity surfaces.
+//!
+//! Extraction is token-level: every `ident(` in non-test code is a call
+//! candidate, classified by what precedes it — `.` makes a method call,
+//! `::` a path call, anything else a free call — then resolved against
+//! the [`SymbolTable`]. Resolution is deliberately conservative:
+//!
+//! * method calls resolve to *every* impl fn with that name (a union)
+//!   unless the receiver is literally `self` and the enclosing impl type
+//!   has the method — well-known std method names are excluded first;
+//! * path calls are absolutized through the per-file `use` map
+//!   (`bbml::`/`crate::`/`self::`/`super::` all normalize), `Type::m`
+//!   goes through the impl index, externals (`std::`, `anyhow::`, …)
+//!   are terminal;
+//! * free calls prefer the enclosing module's own fn (shadowing), then
+//!   `use`-imports, then a crate-wide unique name;
+//! * calls through fn-typed params or closure-bound locals are *dynamic*
+//!   — acknowledged, not resolved (the closure body is analyzed in its
+//!   defining function).
+//!
+//! Anything else inside `crate::` that fails to resolve is kept as
+//! [`Callee::Unresolved`] — in a hot-path function that is itself an R6
+//! finding, so the graph can never silently drop an edge on the paths
+//! that matter.
+
+use std::collections::{HashMap, HashSet};
+
+use super::scanner::SourceFile;
+use super::symbols::{FnId, SymbolTable};
+
+/// Resolution of one call site.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Callee {
+    /// One or more crate-internal candidates (a union for ambiguous
+    /// method names — every candidate is treated as reachable).
+    Resolved(Vec<FnId>),
+    /// A std / external-crate call; terminal for every transitive check.
+    External,
+    /// A call through a fn-typed parameter or closure-bound local.
+    Dynamic,
+    /// Crate-internal but unresolvable (reason in payload).
+    Unresolved(String),
+}
+
+/// One extracted call site.
+#[derive(Debug)]
+pub struct CallSite {
+    /// 1-based line of the call.
+    pub line: usize,
+    /// Callee name as written.
+    pub name: String,
+    pub callee: Callee,
+}
+
+/// Call sites per function, indexed `[file][fn]`.
+pub struct CallGraph {
+    pub calls: Vec<Vec<Vec<CallSite>>>,
+}
+
+/// Method names resolved as std/primitive — never unioned onto crate
+/// impls (except through an exact `self.` + impl-type match, which is
+/// checked first). Keep sorted for readability; lookup is linear.
+const STD_METHODS: &[&str] = &[
+    "abs", "accept", "all", "any", "as_bytes", "as_deref", "as_mut", "as_mut_ptr", "as_ptr",
+    "as_ref", "as_slice", "as_str", "binary_search", "binary_search_by", "by_ref", "bytes", "cast",
+    "ceil", "chain", "chars", "chunks", "chunks_exact", "chunks_exact_mut", "chunks_mut", "clamp",
+    "clear", "clone", "cloned", "cmp", "collect", "compare_exchange", "compare_exchange_weak",
+    "contains", "contains_key", "copied", "copy_from_slice", "count", "count_ones", "count_zeros",
+    "dedup", "display", "drain", "elapsed", "ends_with", "entry", "enumerate", "eq", "exp",
+    "extend", "extend_from_slice", "fetch_add", "fetch_and", "fetch_max", "fetch_min", "fetch_or",
+    "fetch_sub", "fetch_update", "fetch_xor", "fill", "filter", "filter_map", "find", "find_map",
+    "first", "flat_map", "flatten", "floor", "flush", "fold", "for_each", "fract", "get",
+    "get_mut", "get_or_insert_with", "hash", "insert", "int", "into", "into_inner", "into_iter",
+    "is_char_boundary", "is_dir", "is_empty", "is_file", "is_finite", "is_nan", "is_none",
+    "is_ok", "is_some", "iter", "iter_mut", "join", "keys", "kind", "last", "leading_zeros",
+    "len", "ln", "load", "lock", "log2", "map", "map_err", "map_or", "max", "max_by",
+    "max_by_key", "metadata", "min", "min_by", "min_by_key", "mul_add", "next", "nth", "ok",
+    "ok_or", "ok_or_else", "or_else", "or_insert_with", "parse", "partial_cmp", "peek",
+    "position", "pow", "powf", "powi", "product", "push", "push_str", "read", "read_exact",
+    "read_to_end", "read_to_string", "recv", "recv_timeout", "remove", "repeat", "replace",
+    "reserve", "resize", "rev", "rotate_left", "rotate_right", "round", "rsplit", "saturating_add",
+    "saturating_mul", "saturating_sub", "send", "set_len", "set_nonblocking", "set_read_timeout",
+    "set_write_timeout", "shutdown", "skip", "skip_while", "sort", "sort_by", "sort_by_key",
+    "sort_unstable", "sort_unstable_by", "sort_unstable_by_key", "split", "split_at",
+    "split_at_mut", "split_first", "split_last", "split_off", "split_whitespace", "sqrt",
+    "starts_with", "step_by", "store", "subsec_nanos", "sum", "swap", "swap_remove", "take",
+    "take_while", "tan", "tanh", "then", "then_some", "to_le_bytes", "to_lowercase", "to_owned",
+    "to_str", "to_string", "to_uppercase", "to_vec", "trailing_zeros", "trim", "trim_end",
+    "trim_start", "truncate", "try_clone", "try_into", "unwrap", "unwrap_or", "unwrap_or_default",
+    "unwrap_or_else", "unzip", "values", "values_mut", "wait", "windows", "with_capacity",
+    "wrapping_add", "wrapping_mul", "wrapping_sub", "write", "write_all", "write_fmt", "zip",
+];
+
+/// Keywords that look like `ident(` but are not calls.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "in", "as", "move", "else", "fn", "let",
+    "impl", "unsafe", "where", "use", "pub", "mut", "ref", "dyn", "break", "continue", "struct",
+    "enum", "trait", "type", "mod", "const", "static", "crate", "super", "await", "yield",
+];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Parameter names of a fn signature (binding idents before each
+/// top-level `:` in the param list). The param list is the first `(` at
+/// angle depth 0 — generic bounds like `<F: Fn()>` are skipped.
+fn param_names(sig: &str) -> Vec<String> {
+    let mut angle = 0i64;
+    let mut prev = ' ';
+    let mut open = None;
+    for (i, c) in sig.char_indices() {
+        match c {
+            '<' => angle += 1,
+            '>' if prev != '-' && angle > 0 => angle -= 1,
+            '(' if angle == 0 => {
+                open = Some(i);
+                break;
+            }
+            _ => {}
+        }
+        prev = c;
+    }
+    let Some(open) = open else { return Vec::new() };
+    let chars: Vec<char> = sig[open + 1..].chars().collect();
+    let mut depth = 0i64;
+    let mut end = chars.len();
+    for (i, &c) in chars.iter().enumerate() {
+        match c {
+            '(' | '[' | '<' => depth += 1,
+            ')' | ']' | '>' => {
+                if c == ')' && depth == 0 {
+                    end = i;
+                    break;
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+    }
+    let params: String = chars[..end].iter().collect();
+    let mut out = Vec::new();
+    let mut d = 0i64;
+    let mut start = 0usize;
+    let pb: Vec<char> = params.chars().collect();
+    for i in 0..=pb.len() {
+        let c = pb.get(i).copied().unwrap_or(',');
+        match c {
+            '(' | '[' | '<' => d += 1,
+            ')' | ']' | '>' => d -= 1,
+            ',' if d <= 0 => {
+                let piece: String = pb[start..i.min(pb.len())].iter().collect();
+                if let Some(colon) = piece.find(':') {
+                    let name = piece[..colon]
+                        .trim()
+                        .trim_start_matches("mut ")
+                        .trim()
+                        .to_string();
+                    if name.chars().all(is_ident_char) && !name.is_empty() {
+                        out.push(name);
+                    }
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Closure-bound local names in a body line range:
+/// `let f = |…|` / `let f = move |…|`.
+fn closure_locals(file: &SourceFile, start: usize, end: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in file.lines.iter().take(end).skip(start.saturating_sub(1)) {
+        let code = line.code.trim_start();
+        let Some(rest) = code.strip_prefix("let ") else { continue };
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+        let Some(eq) = rest.find('=') else { continue };
+        let rhs = rest[eq + 1..].trim_start();
+        if !name.is_empty() && (rhs.starts_with('|') || rhs.starts_with("move")) {
+            out.push(name);
+        }
+    }
+    out
+}
+
+/// Line spans of functions nested inside `outer` (their calls belong to
+/// the nested item, not to `outer`).
+fn nested_spans(file: &SourceFile, outer: usize) -> Vec<(usize, usize)> {
+    let Some((os, oe)) = file.functions[outer].body else { return Vec::new() };
+    file.functions
+        .iter()
+        .enumerate()
+        .filter(|&(j, f)| {
+            j != outer && f.body.is_some_and(|(s, e)| s >= os && e <= oe && (s, e) != (os, oe))
+        })
+        .map(|(_, f)| (f.line.min(f.body.map(|b| b.0).unwrap_or(f.line)), f.body.map(|b| b.1).unwrap_or(f.line)))
+        .collect()
+}
+
+/// One raw call candidate on a line: name, its path segments (empty for
+/// free/method calls), and whether it is a method call.
+struct RawCall {
+    name: String,
+    segments: Vec<String>,
+    method: bool,
+    /// For method calls: true when the receiver chain is literally `self`.
+    on_self: bool,
+}
+
+/// Extract call candidates from one code line.
+fn extract_calls(code: &str) -> Vec<RawCall> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    for (pos, &c) in chars.iter().enumerate() {
+        if c != '(' {
+            continue;
+        }
+        let mut j = pos; // exclusive end of the token before `(`
+        while j > 0 && chars[j - 1].is_whitespace() {
+            j -= 1;
+        }
+        // Turbofish `::<…>(`: skip the generic args back to the `::`.
+        if j > 0 && chars[j - 1] == '>' {
+            let mut depth = 0i64;
+            let mut k = j;
+            while k > 0 {
+                match chars[k - 1] {
+                    '>' => depth += 1,
+                    '<' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            k -= 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k -= 1;
+            }
+            if k >= 2 && chars[k - 1] == ':' && chars[k - 2] == ':' {
+                j = k - 2;
+            } else {
+                continue;
+            }
+        }
+        if j == 0 {
+            continue;
+        }
+        if chars[j - 1] == '!' {
+            continue; // macro invocation
+        }
+        let mut i = j;
+        while i > 0 && is_ident_char(chars[i - 1]) {
+            i -= 1;
+        }
+        if i == j {
+            continue; // no ident before `(`
+        }
+        let name: String = chars[i..j].iter().collect();
+        if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        if KEYWORDS.contains(&name.as_str()) {
+            continue;
+        }
+        // What precedes the ident?
+        let mut segments: Vec<String> = Vec::new();
+        let mut method = false;
+        let mut on_self = false;
+        if i >= 1 && chars[i - 1] == '.' {
+            method = true;
+            // Receiver chain: is it exactly `self.` (possibly `(self.`)?
+            let mut r = i - 1;
+            while r > 0 && is_ident_char(chars[r - 1]) {
+                r -= 1;
+            }
+            let recv: String = chars[r..i - 1].iter().collect();
+            let before_ok = r == 0 || !matches!(chars[r - 1], '.' | ':');
+            on_self = recv == "self" && before_ok;
+        } else if i >= 2 && chars[i - 1] == ':' && chars[i - 2] == ':' {
+            // Path call: walk segments backwards.
+            let mut k = i;
+            while k >= 2 && chars[k - 1] == ':' && chars[k - 2] == ':' {
+                let mut s = k - 2;
+                while s > 0 && is_ident_char(chars[s - 1]) {
+                    s -= 1;
+                }
+                if s == k - 2 {
+                    break; // `<T as Trait>::` or similar — stop here
+                }
+                segments.insert(0, chars[s..k - 2].iter().collect());
+                k = s;
+            }
+            if segments.is_empty() {
+                continue; // unparseable qualifier
+            }
+        } else if i >= 2 && chars[i - 1] == ' ' && chars[..i].iter().collect::<String>().trim_end().ends_with("fn") {
+            continue; // the fn item's own name
+        }
+        out.push(RawCall {
+            name,
+            segments,
+            method,
+            on_self,
+        });
+    }
+    out
+}
+
+/// Resolve a normalized absolute path call (`segments::name`).
+fn resolve_path(
+    syms: &SymbolTable,
+    file: usize,
+    owner: Option<&String>,
+    mut segments: Vec<String>,
+    name: &str,
+) -> Callee {
+    // Absolutize the first segment.
+    let first = segments[0].clone();
+    let abs: String = match first.as_str() {
+        "crate" | "bbml" => {
+            segments.remove(0);
+            "crate".to_string()
+        }
+        "self" => {
+            segments.remove(0);
+            syms.module_of[file].clone()
+        }
+        "super" => {
+            let mut m = syms.module_of[file].clone();
+            while segments.first().map(String::as_str) == Some("super") {
+                segments.remove(0);
+                m = match m.rfind("::") {
+                    Some(i) => m[..i].to_string(),
+                    None => m,
+                };
+            }
+            m
+        }
+        "Self" => {
+            segments.remove(0);
+            match owner {
+                Some(t) => {
+                    segments.insert(0, t.clone());
+                    String::new()
+                }
+                None => return Callee::Unresolved("`Self::` outside an impl block".to_string()),
+            }
+        }
+        _ => match syms.uses.get(file).and_then(|u| u.get(&first)) {
+            Some(full) => {
+                segments.remove(0);
+                full.clone()
+            }
+            None => String::new(),
+        },
+    };
+
+    // Type-qualified call: `Type::name` — last segment uppercase.
+    let type_seg = segments
+        .last()
+        .filter(|s| s.chars().next().is_some_and(|c| c.is_ascii_uppercase()))
+        .cloned()
+        .or_else(|| {
+            // `use crate::x::Type; Type::name(…)` — the alias itself
+            // resolved to a path ending in an uppercase segment.
+            abs.rsplit("::")
+                .next()
+                .filter(|s| s.chars().next().is_some_and(|c| c.is_ascii_uppercase()))
+                .map(str::to_string)
+        });
+    if let Some(t) = type_seg {
+        if let Some(ids) = syms.typed_methods.get(&(t.clone(), name.to_string())) {
+            return Callee::Resolved(ids.clone());
+        }
+        if name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            return Callee::External; // tuple-variant constructor
+        }
+        // A crate type we know but a method we don't: associated consts /
+        // derived trait methods land here — internal only if the type has
+        // any impl at all.
+        let known_type = syms.typed_methods.keys().any(|(ty, _)| *ty == t);
+        if known_type {
+            return Callee::Unresolved(format!("no impl fn `{t}::{name}` found"));
+        }
+        return Callee::External;
+    }
+
+    // Module-path call.
+    let full = if abs.is_empty() {
+        if segments.is_empty() {
+            return Callee::External;
+        }
+        // Unknown external root (std, io, anyhow, …).
+        let root = &segments[0];
+        if syms.path_fns.keys().any(|p| p.starts_with(&format!("crate::{root}::"))) {
+            format!("crate::{}::{name}", segments.join("::"))
+        } else {
+            return Callee::External;
+        }
+    } else if segments.is_empty() {
+        format!("{abs}::{name}")
+    } else {
+        format!("{abs}::{}::{name}", segments.join("::"))
+    };
+    if !full.starts_with("crate") && !full.starts_with("xbin") && !full.starts_with("xtest") {
+        return Callee::External;
+    }
+    match syms.path_fns.get(&full) {
+        Some(ids) => Callee::Resolved(ids.clone()),
+        None => Callee::Unresolved(format!("no fn at path `{full}`")),
+    }
+}
+
+/// Build the call graph for every function in every file.
+pub fn build(files: &[SourceFile], syms: &SymbolTable) -> CallGraph {
+    let mut calls: Vec<Vec<Vec<CallSite>>> = Vec::with_capacity(files.len());
+    for (fi, file) in files.iter().enumerate() {
+        let mut per_fn: Vec<Vec<CallSite>> = Vec::with_capacity(file.functions.len());
+        for (fj, f) in file.functions.iter().enumerate() {
+            let mut sites = Vec::new();
+            if let Some((start, end)) = f.body {
+                let params = param_names(&f.sig);
+                let closures = closure_locals(file, start, end);
+                let nested = nested_spans(file, fj);
+                let owner = syms.fn_owner[fi][fj].as_ref();
+                for (idx, line) in file.lines.iter().enumerate().take(end).skip(start - 1) {
+                    let ln = idx + 1;
+                    if line.in_test && !f.in_test {
+                        continue;
+                    }
+                    if nested.iter().any(|&(s, e)| s <= ln && ln <= e) {
+                        continue;
+                    }
+                    if line.code.trim_start().starts_with("#[") {
+                        continue;
+                    }
+                    for raw in extract_calls(&line.code) {
+                        let callee = if raw.method {
+                            resolve_method(syms, owner, &raw)
+                        } else if !raw.segments.is_empty() {
+                            resolve_path(syms, fi, owner, raw.segments.clone(), &raw.name)
+                        } else {
+                            resolve_free(syms, fi, &params, &closures, &raw.name)
+                        };
+                        sites.push(CallSite {
+                            line: ln,
+                            name: raw.name,
+                            callee,
+                        });
+                    }
+                }
+            }
+            per_fn.push(sites);
+        }
+        calls.push(per_fn);
+    }
+    CallGraph { calls }
+}
+
+fn resolve_method(syms: &SymbolTable, owner: Option<&String>, raw: &RawCall) -> Callee {
+    if raw.on_self {
+        if let Some(t) = owner {
+            if let Some(ids) = syms.typed_methods.get(&(t.clone(), raw.name.clone())) {
+                return Callee::Resolved(ids.clone());
+            }
+        }
+    }
+    if STD_METHODS.contains(&raw.name.as_str()) {
+        return Callee::External;
+    }
+    match syms.methods.get(&raw.name) {
+        Some(ids) if !ids.is_empty() => Callee::Resolved(ids.clone()),
+        _ => Callee::External,
+    }
+}
+
+fn resolve_free(
+    syms: &SymbolTable,
+    file: usize,
+    params: &[String],
+    closures: &[String],
+    name: &str,
+) -> Callee {
+    if params.iter().any(|p| p == name) || closures.iter().any(|c| c == name) {
+        return Callee::Dynamic;
+    }
+    if name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+        return Callee::External; // tuple-struct / enum-variant constructor
+    }
+    if name == "drop" {
+        return Callee::External;
+    }
+    // Same module first (shadowing), then `use` imports, then a unique
+    // crate-wide name.
+    let local = format!("{}::{name}", syms.module_of[file]);
+    if let Some(ids) = syms.path_fns.get(&local) {
+        return Callee::Resolved(ids.clone());
+    }
+    if let Some(full) = syms.uses.get(file).and_then(|u| u.get(name)) {
+        if full.starts_with("crate") {
+            return match syms.path_fns.get(full) {
+                Some(ids) => Callee::Resolved(ids.clone()),
+                None => Callee::Unresolved(format!("imported `{full}` is not a known fn")),
+            };
+        }
+        return Callee::External;
+    }
+    match syms.free_by_name.get(name).map(Vec::as_slice) {
+        Some([id]) => Callee::Resolved(vec![*id]),
+        Some(ids) if !ids.is_empty() => Callee::Unresolved(format!(
+            "`{name}` is ambiguous ({} crate-wide candidates) — import or qualify it",
+            ids.len()
+        )),
+        _ => Callee::External,
+    }
+}
+
+impl CallGraph {
+    /// All crate-internal targets of a function's call sites.
+    pub fn targets(&self, id: FnId) -> impl Iterator<Item = FnId> + '_ {
+        self.calls[id.0][id.1].iter().flat_map(|s| match &s.callee {
+            Callee::Resolved(ids) => ids.clone(),
+            _ => Vec::new(),
+        })
+    }
+
+    /// Every function reachable from `roots` through resolved edges
+    /// (roots included).
+    pub fn reachable(&self, roots: &[FnId]) -> HashSet<FnId> {
+        let mut seen: HashSet<FnId> = roots.iter().copied().collect();
+        let mut stack: Vec<FnId> = roots.to_vec();
+        while let Some(id) = stack.pop() {
+            for t in self.targets(id) {
+                if seen.insert(t) {
+                    stack.push(t);
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Cycle-tolerant memoized DFS: does `direct` hold for `id` or anything
+/// it (transitively) calls? Returns the witness chain of fn names from
+/// `id` to the first function where `direct` holds, or `None`. A call
+/// site is skipped when `skip_site` says so (e.g. reason-suppressed
+/// amortized allocations must not taint callers).
+///
+/// Positive results are always cacheable. A `None` computed while the
+/// DFS was cut by a back-edge to an in-progress ancestor might only hold
+/// *under that ancestor* — such results are not memoized (`cut` reports
+/// the condition upward). A minimal witness path never revisits a node,
+/// so the cycle cut can never hide a real chain from a top-level query.
+pub fn find_chain(
+    graph: &CallGraph,
+    files: &[SourceFile],
+    id: FnId,
+    direct: &dyn Fn(FnId) -> bool,
+    skip_site: &dyn Fn(FnId, &CallSite) -> bool,
+    memo: &mut HashMap<FnId, Option<Vec<String>>>,
+    visiting: &mut HashSet<FnId>,
+) -> Option<Vec<String>> {
+    find_chain_inner(graph, files, id, direct, skip_site, memo, visiting).0
+}
+
+#[allow(clippy::type_complexity)]
+fn find_chain_inner(
+    graph: &CallGraph,
+    files: &[SourceFile],
+    id: FnId,
+    direct: &dyn Fn(FnId) -> bool,
+    skip_site: &dyn Fn(FnId, &CallSite) -> bool,
+    memo: &mut HashMap<FnId, Option<Vec<String>>>,
+    visiting: &mut HashSet<FnId>,
+) -> (Option<Vec<String>>, bool) {
+    if let Some(hit) = memo.get(&id) {
+        return (hit.clone(), false);
+    }
+    if !visiting.insert(id) {
+        return (None, true); // back-edge: result depends on the ancestor
+    }
+    let name = files[id.0].functions[id.1].name.clone();
+    let mut cut = false;
+    let result = if direct(id) {
+        Some(vec![name.clone()])
+    } else {
+        let mut found = None;
+        'sites: for site in &graph.calls[id.0][id.1] {
+            if skip_site(id, site) {
+                continue;
+            }
+            if let Callee::Resolved(ids) = &site.callee {
+                for &t in ids {
+                    let (chain, sub_cut) =
+                        find_chain_inner(graph, files, t, direct, skip_site, memo, visiting);
+                    cut |= sub_cut;
+                    if let Some(mut chain) = chain {
+                        let mut full = vec![name.clone()];
+                        full.append(&mut chain);
+                        found = Some(full);
+                        break 'sites;
+                    }
+                }
+            }
+        }
+        found
+    };
+    visiting.remove(&id);
+    if result.is_some() || !cut {
+        memo.insert(id, result.clone());
+    }
+    (result, cut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+    use crate::analysis::symbols;
+
+    fn graph_of(sources: &[(&str, &str)]) -> (Vec<SourceFile>, SymbolTable, CallGraph) {
+        let files: Vec<SourceFile> =
+            sources.iter().map(|(p, t)| scan(p, t)).collect();
+        let syms = symbols::build(&files);
+        let graph = build(&files, &syms);
+        (files, syms, graph)
+    }
+
+    fn fn_id(files: &[SourceFile], name: &str) -> FnId {
+        for (fi, f) in files.iter().enumerate() {
+            for (fj, func) in f.functions.iter().enumerate() {
+                if func.name == name {
+                    return (fi, fj);
+                }
+            }
+        }
+        panic!("no fn {name}");
+    }
+
+    #[test]
+    fn cross_module_resolution() {
+        let (files, _, graph) = graph_of(&[
+            (
+                "src/a.rs",
+                "use crate::b::helper;\npub fn top() {\n    helper();\n    crate::b::helper2();\n}\n",
+            ),
+            ("src/b.rs", "pub fn helper() {}\npub fn helper2() {}\n"),
+        ]);
+        let top = fn_id(&files, "top");
+        let targets: Vec<FnId> = graph.targets(top).collect();
+        assert_eq!(targets.len(), 2, "{:?}", graph.calls[top.0][top.1]);
+        assert!(targets.contains(&fn_id(&files, "helper")));
+        assert!(targets.contains(&fn_id(&files, "helper2")));
+    }
+
+    #[test]
+    fn shadowed_names_prefer_the_local_module() {
+        let (files, _, graph) = graph_of(&[
+            ("src/a.rs", "fn helper() {}\npub fn top() {\n    helper();\n}\n"),
+            ("src/b.rs", "pub fn helper() {}\n"),
+        ]);
+        let top = fn_id(&files, "top");
+        let targets: Vec<FnId> = graph.targets(top).collect();
+        assert_eq!(targets, vec![(0, 0)], "must bind to src/a.rs's own helper");
+    }
+
+    #[test]
+    fn method_and_self_calls_resolve() {
+        let (files, _, graph) = graph_of(&[(
+            "src/a.rs",
+            "pub struct S;\nimpl S {\n    pub fn outer(&self) {\n        self.inner();\n    }\n    fn inner(&self) {}\n}\n",
+        )]);
+        let outer = fn_id(&files, "outer");
+        let targets: Vec<FnId> = graph.targets(outer).collect();
+        assert_eq!(targets, vec![fn_id(&files, "inner")]);
+    }
+
+    #[test]
+    fn dynamic_and_external_calls_are_classified() {
+        let (files, _, graph) = graph_of(&[(
+            "src/a.rs",
+            "pub fn top<F: Fn()>(cb: F) {\n    cb();\n    let local = || ();\n    local();\n    std::fs::read(\"x\").ok();\n    Vec::<u8>::new();\n}\n",
+        )]);
+        let top = fn_id(&files, "top");
+        let sites = &graph.calls[top.0][top.1];
+        let kinds: Vec<(&str, &Callee)> =
+            sites.iter().map(|s| (s.name.as_str(), &s.callee)).collect();
+        assert!(kinds.contains(&("cb", &Callee::Dynamic)), "{kinds:?}");
+        assert!(kinds.contains(&("local", &Callee::Dynamic)), "{kinds:?}");
+        assert!(kinds.contains(&("read", &Callee::External)), "{kinds:?}");
+        assert!(kinds.contains(&("new", &Callee::External)), "{kinds:?}");
+    }
+
+    #[test]
+    fn cycles_terminate_and_chains_report() {
+        let (files, _, graph) = graph_of(&[(
+            "src/a.rs",
+            "pub fn a() { b(); }\npub fn b() { a(); c(); }\npub fn c() { let v = Vec::new(); drop(v); }\n",
+        )]);
+        let direct = |id: FnId| {
+            let f = &files[id.0].functions[id.1];
+            let (s, e) = f.body.unwrap();
+            files[id.0].lines[s - 1..e].iter().any(|l| l.code.contains("Vec::new"))
+        };
+        let mut memo = HashMap::new();
+        let chain = find_chain(
+            &graph,
+            &files,
+            fn_id(&files, "a"),
+            &direct,
+            &|_, _| false,
+            &mut memo,
+            &mut HashSet::new(),
+        );
+        assert_eq!(chain, Some(vec!["a".into(), "b".into(), "c".into()]));
+    }
+}

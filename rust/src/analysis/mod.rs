@@ -1,15 +1,18 @@
 //! `bbml-lint` — static enforcement of this repo's hand-written contracts.
 //!
-//! Six PRs of desk-checked perf work rest on conventions no compiler
-//! checks: the PR-2 buffer-ownership rule for `*_into` APIs, zero-alloc
-//! hot loops, byte-exact store framing documented in prose, and retained
-//! scalar oracles that pin every SWAR/SIMD path. The one real bug shipped
-//! so far (the buffer-stealing `signature_into`) was exactly a contract
-//! violation no test caught. This module is the mechanical check: a
-//! line/token-level scanner (no external parser — consistent with the
-//! vendored-deps posture) plus five project rules, driven by
-//! `src/bin/bbml-lint.rs` and by fixture self-tests in
-//! `tests/integration_lint.rs`.
+//! Eight PRs of desk-checked perf and concurrency work rest on
+//! conventions no compiler checks: the PR-2 buffer-ownership rule for
+//! `*_into` APIs, zero-alloc hot loops, byte-exact store framing
+//! documented in prose, retained scalar oracles pinning every SWAR/SIMD
+//! path, and — since the serving subsystem landed — lock ordering and
+//! atomic-ordering protocols that exist only in module docs. The one
+//! real bug shipped so far (the buffer-stealing `signature_into`) was
+//! exactly a contract violation no test caught. This module is the
+//! mechanical check: a line/token-level scanner (no external parser —
+//! consistent with the vendored-deps posture), a crate-wide symbol table
+//! ([`symbols`]) and call graph ([`callgraph`]) built on the same lexer,
+//! and nine project rules, driven by `src/bin/bbml-lint.rs` and by
+//! fixture self-tests in `tests/integration_lint.rs`.
 //!
 //! # Rule catalog
 //!
@@ -22,11 +25,11 @@
 //!
 //! * **`hot-path-alloc` (R2)** — a function annotated
 //!   `// bbml-lint: hot-path` may not call `Vec::new`/`vec!`/`to_vec`/
-//!   `collect`/`clone`. Rationale: the encode/match kernels are sized so
-//!   buffers are allocated once per worker and reused per row; one stray
-//!   per-row allocation costs more than the SWAR tricks save.
-//!   `reserve`/`clear`/`resize`/`extend_from_slice` on caller buffers are
-//!   fine (amortized, capacity survives).
+//!   `collect`/`clone` *in its own body*. Rationale: the encode/match
+//!   kernels are sized so buffers are allocated once per worker and
+//!   reused per row; one stray per-row allocation costs more than the
+//!   SWAR tricks save. `reserve`/`clear`/`resize`/`extend_from_slice` on
+//!   caller buffers are fine (amortized, capacity survives).
 //!
 //! * **`no-unwrap` (R3)** — no `unwrap()`/`expect()`/`panic!` in library
 //!   code outside `tests/`, `benches/`, `#[cfg(test)]` regions and
@@ -37,8 +40,9 @@
 //!   poisoned locks) may stay, suppressed with a reason.
 //!
 //! * **`format-drift` (R4)** — the byte-layout tables in `store/mod.rs`
-//!   docs must agree with the codecs: table rows contiguous,
-//!   `HEADER_LEN`/`FRAMED_HEADER_LEN` (`store/format.rs`) and
+//!   docs must agree with the codecs: table rows contiguous and
+//!   non-overlapping (two tables merged by a missing blank line is
+//!   drift), `HEADER_LEN`/`FRAMED_HEADER_LEN` (`store/format.rs`) and
 //!   `FRAME_HEADER_LEN` (`serve/protocol.rs`) equal to the documented
 //!   payload offsets, the `MAGIC`/`FRAME_MAGIC` literals and
 //!   `VERSION`/`FRAME_VERSION` as documented, and every `out[a..b]` write
@@ -55,19 +59,73 @@
 //!   claim here is pinned by a retained reference path; an oracle that no
 //!   test calls anymore pins nothing.
 //!
-//! # Suppressions
+//! * **`hot-path-transitive` (R6)** — a `hot-path` function may not
+//!   *reach* an allocating function through any call chain, and every
+//!   call it makes must resolve in the call graph (an unresolvable callee
+//!   in a hot path is itself a finding — "probably fine" is not a
+//!   zero-alloc proof). R2 checks the annotated body; R6 closes the
+//!   loophole where the allocation hides one call down. Findings name the
+//!   chain (`a -> b -> c`) so the fix site is obvious.
+//!
+//! * **`lock-discipline` (R7)** — guards from `.lock()`/`.read()`/
+//!   `.write()` must not be held across blocking calls (file I/O, socket
+//!   accept/recv/send, `thread::sleep`, `join`), must not double-acquire
+//!   the same lock, and nested acquisitions must follow the declared
+//!   crate lock order — [`rules::LOCK_ORDER`], currently
+//!   `rx < inner < latency_us < cache < records` (acquire left before
+//!   right, never the reverse; a nested pair the order does not cover is
+//!   reported too, so the declaration stays total). Checked on the
+//!   guard's live range (binding to scope end or `drop`), including
+//!   chains reached through the call graph.
+//!
+//! * **`atomic-ordering` (R8)** — every atomic is classified as a
+//!   **gauge** (monitoring counter, no cross-thread protocol;
+//!   `Ordering::Relaxed` required) or a **handoff** (publishes state
+//!   another thread acts on; `Acquire` loads / `Release` stores /
+//!   `AcqRel` RMWs / `(AcqRel, Acquire)` CAS required). Numeric atomics
+//!   default to gauge, `AtomicBool` to handoff; override at the
+//!   declaration with `// bbml-lint: atomic(gauge)` or
+//!   `atomic(handoff)`. Rationale: `SeqCst` sprinkled "to be safe" hides
+//!   the actual protocol, and a `Relaxed` stop-flag is a liveness bug on
+//!   weakly-ordered targets.
+//!
+//! * **`float-determinism` (R9)** — in functions reachable from the
+//!   training/serving cores (`SgdCore`, `BatchScorer`,
+//!   `predict_artifact`): no float accumulation driven by hash-map
+//!   iteration order, no float sorts via bare `partial_cmp` (use
+//!   `total_cmp`), and no float reductions inside spawned worker
+//!   closures. Rationale: run-to-run bit-identity of scores is a project
+//!   contract (the serving baselines diff bit-exactly); HashMap iteration
+//!   and thread interleaving both break it silently.
+//!
+//! # Suppressions & directives
 //!
 //! `// bbml-lint: allow(rule-id) reason: <why>` on (or directly above)
 //! the offending line. The reason is mandatory — see [`suppress`].
-//! A malformed directive, an unknown rule id, or a missing reason is
-//! reported under the `lint-directive` meta-rule.
+//! `// bbml-lint: hot-path` / `oracle` annotate functions;
+//! `// bbml-lint: atomic(gauge|handoff)` annotates atomic declarations
+//! for R8. A malformed directive, an unknown rule id, or a missing
+//! reason is reported under the `lint-directive` meta-rule.
+//!
+//! # Scopes
+//!
+//! [`lint_sources_scoped`] takes three file sets. **lib** (`src/**`) gets
+//! every rule. **exercise** (`benches/**` plus the repo-root `examples/`
+//! the manifest points at) gets R1 + R2 + directive hygiene — benches
+//! exercise the hot paths, so their buffer and allocation contracts are
+//! real, but unwrap-on-setup is idiomatic there. **tests** (`tests/**`)
+//! get R1 + directive hygiene and feed the R5 reference corpus. The
+//! symbol table and call graph are built over *all three* sets so
+//! cross-scope calls resolve, but R6–R9 report only on lib files.
 //!
 //! [`RowMut`]: crate::hashing::feature_map::RowMut
 
+pub mod callgraph;
 pub mod report;
 pub mod rules;
 pub mod scanner;
 pub mod suppress;
+pub mod symbols;
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -75,27 +133,45 @@ use std::path::{Path, PathBuf};
 pub use report::{Finding, LintReport};
 pub use scanner::SourceFile;
 
-/// Lint in-memory sources: `lib` files get all rules; `tests` files only
-/// feed the R5 reference corpus. This is the fixture-test entry point.
+/// Back-compat wrapper: `lib` files get all rules, `tests` files feed the
+/// R5 reference corpus, no exercise scope.
 pub fn lint_sources(lib: &[(String, String)], tests: &[(String, String)]) -> LintReport {
-    let files: Vec<SourceFile> = lib
-        .iter()
-        .map(|(path, text)| scanner::scan(path, text))
-        .collect();
-    let test_files: Vec<SourceFile> = tests
-        .iter()
-        .map(|(path, text)| scanner::scan(path, text))
-        .collect();
+    lint_sources_scoped(lib, &[], tests)
+}
+
+/// Lint in-memory sources under the three-scope model documented in the
+/// module docs. This is the fixture-test entry point; [`lint_tree`] maps
+/// a crate directory onto it.
+pub fn lint_sources_scoped(
+    lib: &[(String, String)],
+    exercise: &[(String, String)],
+    tests: &[(String, String)],
+) -> LintReport {
+    // One combined scan, lib files first: R6–R9 index files by position
+    // and report only on `0..lib_len`, while symbol/call-graph resolution
+    // sees every scope.
+    let lib_len = lib.len();
+    let mut files: Vec<SourceFile> = Vec::with_capacity(lib.len() + exercise.len() + tests.len());
+    for (path, text) in lib.iter().chain(exercise) {
+        files.push(scanner::scan(path, text));
+    }
+    let test_start = files.len();
+    for (path, text) in tests {
+        files.push(scanner::scan(path, text));
+    }
+
+    let syms = symbols::build(&files);
+    let graph = callgraph::build(&files, &syms);
 
     // R5 reference corpus: every tests/ code line + every #[cfg(test)]
     // code line of the library.
     let mut corpus: Vec<&str> = Vec::new();
-    for f in &test_files {
+    for f in &files[test_start..] {
         for l in &f.lines {
             corpus.push(&l.code);
         }
     }
-    for f in &files {
+    for f in &files[..lib_len] {
         for l in &f.lines {
             if l.in_test {
                 corpus.push(&l.code);
@@ -104,13 +180,21 @@ pub fn lint_sources(lib: &[(String, String)], tests: &[(String, String)]) -> Lin
     }
 
     let mut findings = Vec::new();
-    for f in &files {
+    for (i, f) in files.iter().enumerate() {
         findings.extend(rules::check_buffer_contract(f));
-        findings.extend(rules::check_hot_path_alloc(f));
-        findings.extend(rules::check_no_unwrap(f));
+        if i < test_start {
+            findings.extend(rules::check_hot_path_alloc(f));
+        }
+        if i < lib_len {
+            findings.extend(rules::check_no_unwrap(f));
+        }
     }
-    findings.extend(rules::check_format_drift(&files));
-    findings.extend(rules::check_oracle_retention(&files, &corpus));
+    findings.extend(rules::check_format_drift(&files[..lib_len]));
+    findings.extend(rules::check_oracle_retention(&files[..lib_len], &corpus));
+    findings.extend(rules::check_hot_path_transitive(&files, lib_len, &graph));
+    findings.extend(rules::check_lock_discipline(&files, lib_len, &graph));
+    findings.extend(rules::check_atomic_ordering(&files, lib_len, &syms));
+    findings.extend(rules::check_float_determinism(&files, lib_len, &syms, &graph));
 
     let (mut kept, suppressed) = suppress::apply(findings, &files);
     for f in &files {
@@ -121,6 +205,7 @@ pub fn lint_sources(lib: &[(String, String)], tests: &[(String, String)]) -> Lin
     LintReport {
         findings: kept,
         suppressed,
+        baselined: 0,
         files_scanned: files.len(),
     }
 }
@@ -159,8 +244,11 @@ fn collect_rs(dir: &Path, strip_prefix: &Path) -> io::Result<Vec<(String, String
     Ok(out)
 }
 
-/// Lint a crate tree: every `.rs` under `<root>/src` is library scope,
-/// every `.rs` under `<root>/tests` feeds the R5 reference corpus.
+/// Lint a crate tree: `src/**` is lib scope, `benches/**` plus the
+/// examples directory (at `<root>/examples`, else the repo-root
+/// `<root>/../examples` the manifest's `path = "../examples/*.rs"`
+/// entries point at) are exercise scope, and `tests/**` feeds R1 +
+/// the R5 reference corpus.
 pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
     let lib = collect_rs(&root.join("src"), root)?;
     if lib.is_empty() {
@@ -169,8 +257,15 @@ pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
             format!("no .rs files under {}/src", root.display()),
         ));
     }
+    let mut exercise = collect_rs(&root.join("benches"), root)?;
+    let local_examples = root.join("examples");
+    if local_examples.is_dir() {
+        exercise.extend(collect_rs(&local_examples, root)?);
+    } else if let Some(parent) = root.parent() {
+        exercise.extend(collect_rs(&parent.join("examples"), parent)?);
+    }
     let tests = collect_rs(&root.join("tests"), root)?;
-    Ok(lint_sources(&lib, &tests))
+    Ok(lint_sources_scoped(&lib, &exercise, &tests))
 }
 
 #[cfg(test)]
@@ -212,5 +307,48 @@ mod tests {
         let mut sorted = lines.clone();
         sorted.sort_unstable();
         assert_eq!(lines, sorted);
+    }
+
+    #[test]
+    fn exercise_scope_gets_buffer_and_alloc_rules_but_not_unwrap() {
+        let bench = "\
+// bbml-lint: hot-path
+fn measure(out: &mut Vec<u64>) {
+    let v: Vec<u64> = Vec::new();
+    out.push(v.first().copied().unwrap_or(0));
+    let n = std::env::args().next().unwrap();
+    let _ = n;
+}
+fn steal_into(v: &mut Vec<u64>) -> Vec<u64> {
+    std::mem::take(v)
+}
+";
+        let rep = lint_sources_scoped(&[], &src(&[("benches/b.rs", bench)]), &[]);
+        let rules: Vec<&str> = rep.findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&rules::R2_HOT_PATH_ALLOC), "{rules:?}");
+        assert!(rules.contains(&rules::R1_BUFFER_CONTRACT), "{rules:?}");
+        assert!(
+            !rules.contains(&rules::R3_NO_UNWRAP),
+            "benches may unwrap on setup: {rules:?}"
+        );
+    }
+
+    #[test]
+    fn test_scope_is_exempt_from_alloc_and_unwrap_but_not_buffer_contract() {
+        let test = "\
+#[test]
+fn t() {
+    let v: Vec<u64> = Vec::new();
+    assert_eq!(v.first(), None);
+}
+fn steal_into(v: &mut Vec<u64>) -> Vec<u64> {
+    std::mem::take(v)
+}
+";
+        let rep = lint_sources_scoped(&[], &[], &src(&[("tests/t.rs", test)]));
+        let rules: Vec<&str> = rep.findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&rules::R1_BUFFER_CONTRACT), "{rules:?}");
+        assert!(!rules.contains(&rules::R3_NO_UNWRAP), "{rules:?}");
+        assert!(!rules.contains(&rules::R2_HOT_PATH_ALLOC), "{rules:?}");
     }
 }

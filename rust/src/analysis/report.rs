@@ -1,5 +1,10 @@
-//! Lint findings and their renderings (compiler-style text and the
-//! `results/LINT_report.json` document).
+//! Lint findings and their renderings (compiler-style text, the
+//! `results/LINT_report.json` document, and SARIF 2.1.0 for code-scanning
+//! upload), plus baseline support: a committed `LINT_baseline.json` of
+//! accepted findings that CI subtracts so only *new* findings fail the
+//! build. Baseline entries are matched as a `(file, rule, message)`
+//! multiset — line numbers drift with unrelated edits and deliberately do
+//! not participate.
 
 use std::fmt::Write as _;
 
@@ -29,6 +34,8 @@ pub struct LintReport {
     pub findings: Vec<Finding>,
     /// Findings silenced by valid `allow(…) reason: …` directives.
     pub suppressed: usize,
+    /// Findings subtracted by the accepted baseline (`--baseline`).
+    pub baselined: usize,
     /// Library files scanned (the rule scope; the test corpus is extra).
     pub files_scanned: usize,
 }
@@ -46,13 +53,37 @@ impl LintReport {
         }
         let _ = writeln!(
             out,
-            "bbml-lint: {} finding{} ({} suppressed) in {} files",
+            "bbml-lint: {} finding{} ({} suppressed, {} baselined) in {} files",
             self.findings.len(),
             if self.findings.len() == 1 { "" } else { "s" },
             self.suppressed,
+            self.baselined,
             self.files_scanned
         );
         out
+    }
+
+    /// Subtract findings present in a committed baseline document (the
+    /// `--json` format). Matching is a `(file, rule, message)` multiset:
+    /// each baseline entry cancels at most one live finding, so a rule
+    /// regressing from one accepted instance to two still fails. Returns
+    /// an error describing the problem when the baseline does not parse.
+    pub fn apply_baseline(&mut self, baseline: &str) -> Result<(), String> {
+        let mut budget = parse_baseline(baseline)?;
+        let mut kept = Vec::new();
+        for f in self.findings.drain(..) {
+            let key = (f.file.clone(), f.rule.to_string(), f.message.clone());
+            if let Some(n) = budget.get_mut(&key) {
+                if *n > 0 {
+                    *n -= 1;
+                    self.baselined += 1;
+                    continue;
+                }
+            }
+            kept.push(f);
+        }
+        self.findings = kept;
+        Ok(())
     }
 
     /// The JSON document `--json` writes to `results/LINT_report.json`.
@@ -61,6 +92,7 @@ impl LintReport {
         let _ = writeln!(out, "  \"tool\": \"bbml-lint\",");
         let _ = writeln!(out, "  \"files_scanned\": {},", self.files_scanned);
         let _ = writeln!(out, "  \"suppressed\": {},", self.suppressed);
+        let _ = writeln!(out, "  \"baselined\": {},", self.baselined);
         let _ = writeln!(out, "  \"finding_count\": {},", self.findings.len());
         out.push_str("  \"findings\": [");
         for (i, f) in self.findings.iter().enumerate() {
@@ -82,6 +114,185 @@ impl LintReport {
         out.push_str("]\n}\n");
         out
     }
+
+    /// SARIF 2.1.0 document (`--sarif`), the interchange format GitHub
+    /// code scanning and most SARIF viewers ingest. One run, one driver,
+    /// the full rule catalog, one `result` per finding at `warning`
+    /// level (the lint's severity gradient lives in exit codes, not
+    /// SARIF levels).
+    pub fn to_sarif(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(
+            out,
+            "  \"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\","
+        );
+        let _ = writeln!(out, "  \"version\": \"2.1.0\",");
+        out.push_str("  \"runs\": [\n    {\n      \"tool\": {\n        \"driver\": {\n");
+        let _ = writeln!(out, "          \"name\": \"bbml-lint\",");
+        out.push_str("          \"rules\": [");
+        for (i, (id, summary)) in super::rules::RULES.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n            {{\"id\": {}, \"shortDescription\": {{\"text\": {}}}}}",
+                json_string(id),
+                json_string(summary)
+            );
+        }
+        out.push_str("\n          ]\n        }\n      },\n      \"results\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n        {{\"ruleId\": {}, \"level\": \"warning\", \
+                 \"message\": {{\"text\": {}}}, \"locations\": [{{\
+                 \"physicalLocation\": {{\"artifactLocation\": {{\"uri\": {}}}, \
+                 \"region\": {{\"startLine\": {}}}}}}}]}}",
+                json_string(f.rule),
+                json_string(&f.message),
+                json_string(&f.file),
+                f.line
+            );
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n      ");
+        }
+        out.push_str("]\n    }\n  ]\n}\n");
+        out
+    }
+}
+
+/// Parse a baseline document (the `--json` format) into a multiset of
+/// `(file, rule, message)` keys. Hand-rolled like the rest of the tool —
+/// the vendored-deps posture rules out serde — but a real recursive
+/// object walk, not substring matching, so messages containing braces or
+/// quotes round-trip.
+fn parse_baseline(
+    text: &str,
+) -> Result<std::collections::HashMap<(String, String, String), usize>, String> {
+    let bytes: Vec<char> = text.chars().collect();
+    let mut pos = match text.find("\"findings\"") {
+        Some(p) => text[..p].chars().count() + "\"findings\"".chars().count(),
+        None => return Err("baseline has no \"findings\" key".into()),
+    };
+    let skip_ws = |pos: &mut usize, bytes: &[char]| {
+        while *pos < bytes.len() && bytes[*pos].is_whitespace() {
+            *pos += 1;
+        }
+    };
+    skip_ws(&mut pos, &bytes);
+    if pos >= bytes.len() || bytes[pos] != ':' {
+        return Err("baseline: expected `:` after \"findings\"".into());
+    }
+    pos += 1;
+    skip_ws(&mut pos, &bytes);
+    if pos >= bytes.len() || bytes[pos] != '[' {
+        return Err("baseline: expected `[` after \"findings\":".into());
+    }
+    pos += 1;
+    let mut out: std::collections::HashMap<(String, String, String), usize> =
+        std::collections::HashMap::new();
+    loop {
+        skip_ws(&mut pos, &bytes);
+        match bytes.get(pos) {
+            Some(']') => break,
+            Some(',') => {
+                pos += 1;
+                continue;
+            }
+            Some('{') => {}
+            _ => return Err("baseline: malformed findings array".into()),
+        }
+        pos += 1; // past '{'
+        let mut file = None;
+        let mut rule = None;
+        let mut message = None;
+        loop {
+            skip_ws(&mut pos, &bytes);
+            match bytes.get(pos) {
+                Some('}') => {
+                    pos += 1;
+                    break;
+                }
+                Some(',') => {
+                    pos += 1;
+                    continue;
+                }
+                Some('"') => {}
+                _ => return Err("baseline: malformed finding object".into()),
+            }
+            let key = parse_json_string(&bytes, &mut pos)?;
+            skip_ws(&mut pos, &bytes);
+            if bytes.get(pos) != Some(&':') {
+                return Err(format!("baseline: expected `:` after key `{key}`"));
+            }
+            pos += 1;
+            skip_ws(&mut pos, &bytes);
+            match bytes.get(pos) {
+                Some('"') => {
+                    let val = parse_json_string(&bytes, &mut pos)?;
+                    match key.as_str() {
+                        "file" => file = Some(val),
+                        "rule" => rule = Some(val),
+                        "message" => message = Some(val),
+                        _ => {}
+                    }
+                }
+                Some(c) if c.is_ascii_digit() || *c == '-' => {
+                    pos += 1;
+                    while matches!(bytes.get(pos), Some(c) if c.is_ascii_digit()) {
+                        pos += 1;
+                    }
+                }
+                _ => return Err(format!("baseline: unsupported value for key `{key}`")),
+            }
+        }
+        match (file, rule, message) {
+            (Some(f), Some(r), Some(m)) => *out.entry((f, r, m)).or_insert(0) += 1,
+            _ => return Err("baseline: finding missing file/rule/message".into()),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a JSON string literal at `pos` (which must point at the opening
+/// quote); leaves `pos` one past the closing quote.
+fn parse_json_string(bytes: &[char], pos: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(bytes.get(*pos), Some(&'"'));
+    *pos += 1;
+    let mut out = String::new();
+    while let Some(&c) = bytes.get(*pos) {
+        *pos += 1;
+        match c {
+            '"' => return Ok(out),
+            '\\' => {
+                let esc = bytes.get(*pos).copied();
+                *pos += 1;
+                match esc {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('/') => out.push('/'),
+                    Some('n') => out.push('\n'),
+                    Some('r') => out.push('\r'),
+                    Some('t') => out.push('\t'),
+                    Some('u') => {
+                        let hex: String = bytes.iter().skip(*pos).take(4).collect();
+                        *pos += 4;
+                        let code = u32::from_str_radix(&hex, 16)
+                            .map_err(|_| format!("baseline: bad \\u escape `{hex}`"))?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    _ => return Err("baseline: bad escape in string".into()),
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    Err("baseline: unterminated string".into())
 }
 
 /// Minimal JSON string escaping (the vendored-deps posture: no serde).
@@ -119,11 +330,12 @@ mod tests {
                 message: "a \"quoted\" message".into(),
             }],
             suppressed: 2,
+            baselined: 0,
             files_scanned: 3,
         };
         let text = rep.render_text();
         assert!(text.starts_with("src/x.rs:7: no-unwrap: "));
-        assert!(text.contains("1 finding (2 suppressed) in 3 files"));
+        assert!(text.contains("1 finding (2 suppressed, 0 baselined) in 3 files"));
         let json = rep.to_json();
         assert!(json.contains("\"finding_count\": 1"));
         assert!(json.contains("\\\"quoted\\\""));
@@ -135,9 +347,81 @@ mod tests {
         let rep = LintReport {
             findings: Vec::new(),
             suppressed: 0,
+            baselined: 0,
             files_scanned: 1,
         };
         assert!(rep.is_clean());
         assert!(rep.to_json().contains("\"findings\": []"));
+        let sarif = rep.to_sarif();
+        assert!(sarif.contains("\"version\": \"2.1.0\""));
+        assert!(sarif.contains("\"results\": []"));
+    }
+
+    fn report_with(findings: Vec<Finding>) -> LintReport {
+        LintReport {
+            findings,
+            suppressed: 0,
+            baselined: 0,
+            files_scanned: 1,
+        }
+    }
+
+    #[test]
+    fn baseline_subtracts_as_a_multiset() {
+        let f = |line: usize| Finding {
+            file: "src/x.rs".into(),
+            line,
+            rule: "no-unwrap",
+            message: "call `.unwrap()` outside tests".into(),
+        };
+        // Baseline accepts ONE instance; the live tree has two.
+        let baseline = report_with(vec![f(7)]).to_json();
+        let mut rep = report_with(vec![f(7), f(40)]);
+        rep.apply_baseline(&baseline).expect("baseline parses");
+        assert_eq!(rep.baselined, 1);
+        assert_eq!(rep.findings.len(), 1, "second instance is NEW and kept");
+        // Line drift alone does not un-baseline a finding.
+        let mut rep = report_with(vec![f(99)]);
+        rep.apply_baseline(&baseline).expect("baseline parses");
+        assert_eq!(rep.baselined, 1);
+        assert!(rep.is_clean());
+    }
+
+    #[test]
+    fn baseline_roundtrips_messages_with_quotes_and_braces() {
+        let f = Finding {
+            file: "src/x.rs".into(),
+            line: 3,
+            rule: "format-drift",
+            message: "rows `{a}` and \"b\" overlap\twide".into(),
+        };
+        let baseline = report_with(vec![f.clone()]).to_json();
+        let mut rep = report_with(vec![f]);
+        rep.apply_baseline(&baseline).expect("baseline parses");
+        assert!(rep.is_clean());
+        assert_eq!(rep.baselined, 1);
+    }
+
+    #[test]
+    fn malformed_baseline_is_an_error_not_a_pass() {
+        let mut rep = report_with(Vec::new());
+        assert!(rep.apply_baseline("{}").is_err());
+        assert!(rep.apply_baseline("{\"findings\": [{\"file\": 3}]}").is_err());
+    }
+
+    #[test]
+    fn sarif_carries_rule_catalog_and_locations() {
+        let rep = report_with(vec![Finding {
+            file: "src/x.rs".into(),
+            line: 7,
+            rule: "no-unwrap",
+            message: "msg".into(),
+        }]);
+        let sarif = rep.to_sarif();
+        assert!(sarif.contains("\"name\": \"bbml-lint\""));
+        assert!(sarif.contains("\"id\": \"hot-path-transitive\""));
+        assert!(sarif.contains("\"ruleId\": \"no-unwrap\""));
+        assert!(sarif.contains("\"startLine\": 7"));
+        assert!(sarif.contains("\"uri\": \"src/x.rs\""));
     }
 }

@@ -1,12 +1,18 @@
-//! The project-contract rules (R1–R5) over scanned sources.
+//! The project-contract rules (R1–R9) over scanned sources.
 //!
 //! Each rule is a pure function from the scanned model to findings; the
 //! catalog lives in [`crate::analysis`]'s module docs and in [`RULES`].
 //! All rules skip test code (`tests/` files never reach them, and
 //! `#[cfg(test)]` regions inside library files are marked by the scanner).
+//! R1–R5 are per-file; R6–R9 additionally consume the crate-wide
+//! [`SymbolTable`] and [`CallGraph`].
 
+use std::collections::{HashMap, HashSet};
+
+use super::callgraph::{find_chain, CallGraph, Callee};
 use super::report::Finding;
-use super::scanner::{contains_word, DirectiveKind, FnItem, SourceFile};
+use super::scanner::{contains_word, AtomicClass, DirectiveKind, FnItem, SourceFile};
+use super::symbols::{FnId, SymbolTable};
 
 /// Rule ids. Keep in sync with the catalog in the module docs and README.
 pub const R1_BUFFER_CONTRACT: &str = "buffer-contract";
@@ -14,9 +20,19 @@ pub const R2_HOT_PATH_ALLOC: &str = "hot-path-alloc";
 pub const R3_NO_UNWRAP: &str = "no-unwrap";
 pub const R4_FORMAT_DRIFT: &str = "format-drift";
 pub const R5_ORACLE_RETENTION: &str = "oracle-retention";
+pub const R6_HOT_PATH_TRANSITIVE: &str = "hot-path-transitive";
+pub const R7_LOCK_DISCIPLINE: &str = "lock-discipline";
+pub const R8_ATOMIC_ORDERING: &str = "atomic-ordering";
+pub const R9_FLOAT_DETERMINISM: &str = "float-determinism";
 /// Meta-rule: malformed / reason-less / unknown-rule `bbml-lint:`
 /// directives (not suppressible).
 pub const LINT_DIRECTIVE: &str = "lint-directive";
+
+/// The declared crate lock order (R7): a thread holding a lock may only
+/// acquire locks strictly *later* in this list. Locks never held
+/// together need not appear. Keep in sync with the catalog in
+/// `analysis/mod.rs` and the taxonomy in `serve/mod.rs`.
+pub const LOCK_ORDER: &[&str] = &["rx", "inner", "latency_us", "cache", "records"];
 
 /// `(id, summary)` for every enforceable rule.
 pub const RULES: &[(&str, &str)] = &[
@@ -44,6 +60,31 @@ pub const RULES: &[(&str, &str)] = &[
         R5_ORACLE_RETENTION,
         "every function documented as a bit-identity oracle must be referenced \
          from at least one test",
+    ),
+    (
+        R6_HOT_PATH_TRANSITIVE,
+        "functions marked `// bbml-lint: hot-path` may not transitively call \
+         an allocating function, and every callee must resolve in the crate \
+         call graph",
+    ),
+    (
+        R7_LOCK_DISCIPLINE,
+        "no blocking call (file I/O, send/recv, TcpStream) while holding a \
+         Mutex/RwLock guard; no double-acquire; nested acquisition must follow \
+         the declared LOCK_ORDER",
+    ),
+    (
+        R8_ATOMIC_ORDERING,
+        "gauge atomics use Relaxed; handoff atomics use Acquire loads, \
+         Release stores and AcqRel RMWs — classified by declaration \
+         (`// bbml-lint: atomic(gauge|handoff)`, AtomicBool defaults to \
+         handoff, numeric atomics to gauge)",
+    ),
+    (
+        R9_FLOAT_DETERMINISM,
+        "functions reachable from SgdCore / predict_artifact / BatchScorer \
+         must not iterate hash-ordered maps into float accumulation, sort \
+         floats without total_cmp, or reduce floats inside worker threads",
     ),
 ];
 
@@ -311,6 +352,45 @@ pub fn check_format_drift(files: &[SourceFile]) -> Vec<Finding> {
                 Some(s) => expect = row.offset + s,
                 None => break,
             }
+        }
+    }
+
+    // Overlap between tables: the contiguity walk stops at the first
+    // terminator row, so a second table that fails to restart at offset 0
+    // gets appended to the previous one and its rows can silently claim
+    // bytes the first table already assigned. Flag any two fixed rows of
+    // one parsed table whose ranges intersect, and any second terminator
+    // (two payload rows = two merged tables).
+    for table in &tables {
+        let fixed: Vec<&DocRow> = table.iter().filter(|r| r.size.is_some()).collect();
+        for (i, a) in fixed.iter().enumerate() {
+            for b in &fixed[i + 1..] {
+                let (a0, a1) = (a.offset, a.offset + a.size.unwrap_or(0));
+                let (b0, b1) = (b.offset, b.offset + b.size.unwrap_or(0));
+                if a0 < b1 && b0 < a1 {
+                    out.push(finding(
+                        docs,
+                        b.line,
+                        R4_FORMAT_DRIFT,
+                        format!(
+                            "doc table rows `{}` [{a0}, {a1}) and `{}` [{b0}, {b1}) \
+                             overlap — two layout tables merged? every table must \
+                             restart at offset 0",
+                            a.name, b.name
+                        ),
+                    ));
+                }
+            }
+        }
+        for term in table.iter().filter(|r| r.size.is_none()).skip(1) {
+            out.push(finding(
+                docs,
+                term.line,
+                R4_FORMAT_DRIFT,
+                "second payload terminator row in one doc table — a following \
+                 layout table must restart at offset 0"
+                    .to_string(),
+            ));
         }
     }
 
@@ -685,6 +765,824 @@ pub fn check_oracle_retention(files: &[SourceFile], test_corpus: &[&str]) -> Vec
             }
         }
     }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Crate-wide rules (R6–R9): these consume the symbol table + call graph
+// built over every scanned file, but report only on library-scope files
+// (indices `0..lib_len` of the combined slice).
+// ---------------------------------------------------------------------
+
+/// True when `line` carries a valid (reasoned) allow for any of `rules`.
+fn covered_by_allow(file: &SourceFile, line: usize, rules: &[&str]) -> bool {
+    file.directives.iter().any(|d| match &d.kind {
+        DirectiveKind::Allow {
+            rule,
+            reason: Some(_),
+        } => d.target_line == line && rules.iter().any(|r| r == rule),
+        _ => false,
+    })
+}
+
+/// Body lines of `f` that are its own: non-test, outside any nested fn
+/// item, not attribute lines. Yields (1-based line, code text).
+fn own_body_lines<'a>(
+    file: &'a SourceFile,
+    f: &FnItem,
+    include_test: bool,
+) -> Vec<(usize, &'a str)> {
+    let Some((start, end)) = f.body else { return Vec::new() };
+    let nested: Vec<(usize, usize)> = file
+        .functions
+        .iter()
+        .filter(|g| {
+            g.line != f.line
+                && g.body
+                    .is_some_and(|(s, e)| s >= start && e <= end && (s, e) != (start, end))
+        })
+        .map(|g| (g.line.min(g.body.map(|b| b.0).unwrap_or(g.line)), g.body.map(|b| b.1).unwrap_or(g.line)))
+        .collect();
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate().take(end).skip(start - 1) {
+        let ln = idx + 1;
+        if (line.in_test && !include_test)
+            || nested.iter().any(|&(s, e)| s <= ln && ln <= e)
+            || line.code.trim_start().starts_with("#[")
+        {
+            continue;
+        }
+        out.push((ln, line.code.as_str()));
+    }
+    out
+}
+
+/// True when `f` (at `id`) allocates directly: an R2 alloc token on one
+/// of its own lines, not justified by a reasoned
+/// `allow(hot-path-alloc)` / `allow(hot-path-transitive)` (a justified
+/// amortized allocation must not taint every transitive caller).
+fn direct_allocates(files: &[SourceFile], id: FnId) -> bool {
+    let file = &files[id.0];
+    let f = &file.functions[id.1];
+    own_body_lines(file, f, false).iter().any(|&(ln, code)| {
+        ALLOC_TOKENS.iter().any(|t| code.contains(t))
+            && !covered_by_allow(file, ln, &[R2_HOT_PATH_ALLOC, R6_HOT_PATH_TRANSITIVE])
+    })
+}
+
+/// R6 — hot-path functions may not *transitively* allocate, and every
+/// callee of a hot-path function must resolve in the call graph.
+pub fn check_hot_path_transitive(
+    files: &[SourceFile],
+    lib_len: usize,
+    graph: &CallGraph,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let direct = |id: FnId| direct_allocates(files, id);
+    let skip = |id: FnId, site: &super::callgraph::CallSite| {
+        covered_by_allow(&files[id.0], site.line, &[R6_HOT_PATH_TRANSITIVE])
+    };
+    let mut memo = HashMap::new();
+    for (fi, file) in files.iter().enumerate().take(lib_len) {
+        for (fj, f) in file.functions.iter().enumerate() {
+            if f.in_test || !f.annotations.contains(&DirectiveKind::HotPath) {
+                continue;
+            }
+            for site in &graph.calls[fi][fj] {
+                match &site.callee {
+                    Callee::Unresolved(why) => out.push(finding(
+                        file,
+                        site.line,
+                        R6_HOT_PATH_TRANSITIVE,
+                        format!(
+                            "hot path `{}` calls `{}` which the call graph cannot \
+                             resolve ({why}) — every hot-path callee must resolve",
+                            f.name, site.name
+                        ),
+                    )),
+                    Callee::Resolved(ids) => {
+                        for &t in ids {
+                            let chain = find_chain(
+                                graph,
+                                files,
+                                t,
+                                &direct,
+                                &skip,
+                                &mut memo,
+                                &mut HashSet::new(),
+                            );
+                            if let Some(chain) = chain {
+                                out.push(finding(
+                                    file,
+                                    site.line,
+                                    R6_HOT_PATH_TRANSITIVE,
+                                    format!(
+                                        "hot path `{}` transitively allocates via \
+                                         `{}` — hoist the buffer to the caller or \
+                                         justify with allow({R6_HOT_PATH_TRANSITIVE})",
+                                        f.name,
+                                        chain.join(" -> ")
+                                    ),
+                                ));
+                                break;
+                            }
+                        }
+                    }
+                    Callee::External | Callee::Dynamic => {}
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Calls that block the thread (R7): file I/O, channel send/recv, socket
+/// ops, joins and sleeps. Token-level, matched against code text.
+const BLOCKING_TOKENS: &[&str] = &[
+    "std::fs::",
+    "fs::read",
+    "fs::write",
+    "fs::metadata",
+    "fs::rename",
+    "fs::remove",
+    "File::open",
+    "File::create",
+    "read_to_string(",
+    "TcpStream",
+    "TcpListener",
+    ".accept(",
+    ".recv(",
+    ".send(",
+    "recv_timeout(",
+    "thread::sleep",
+    ".join()",
+    ".write_all(",
+    ".read_exact(",
+    ".flush(",
+    "write_frame(",
+    "read_frame(",
+];
+
+fn blocking_token(code: &str) -> Option<&'static str> {
+    BLOCKING_TOKENS.iter().find(|t| code.contains(*t)).copied()
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// First line of the multi-line statement containing `idx` (0-based):
+/// walk up while the previous line doesn't end a statement or block.
+fn stmt_start(file: &SourceFile, idx: usize, lo: usize) -> usize {
+    let mut s = idx;
+    while s > lo {
+        let t = file.lines[s - 1].code.trim();
+        if t.is_empty() || t.ends_with(';') || t.ends_with('{') || t.ends_with('}') || t.ends_with(',') {
+            break;
+        }
+        s -= 1;
+    }
+    s
+}
+
+/// Last line of the statement containing `idx` (0-based, capped at `hi`).
+fn stmt_end(file: &SourceFile, idx: usize, hi: usize) -> usize {
+    let mut e = idx;
+    while e < hi {
+        let t = file.lines[e].code.trim();
+        if t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+            break;
+        }
+        e += 1;
+    }
+    e
+}
+
+/// The ident immediately before byte `col` of line `idx`, joining the
+/// statement's earlier lines when the token starts its own line (method
+/// chains wrapped by rustfmt).
+fn receiver_before(file: &SourceFile, idx: usize, col: usize, lo: usize) -> Option<String> {
+    let mut text = String::new();
+    for l in stmt_start(file, idx, lo)..idx {
+        text.push_str(&file.lines[l].code);
+        text.push(' ');
+    }
+    text.push_str(&file.lines[idx].code[..col]);
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = chars.len();
+    while i > 0 && chars[i - 1].is_whitespace() {
+        i -= 1;
+    }
+    let end = i;
+    while i > 0 && is_ident_char(chars[i - 1]) {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    Some(chars[i..end].iter().collect())
+}
+
+/// Per-line brace depth at line start, over the whole file (index `i` =
+/// depth before line `i`, 0-based; length `lines + 1`).
+fn depth_prefix(file: &SourceFile) -> Vec<i64> {
+    let mut out = Vec::with_capacity(file.lines.len() + 1);
+    let mut d = 0i64;
+    out.push(0);
+    for line in &file.lines {
+        for c in line.code.chars() {
+            match c {
+                '{' => d += 1,
+                '}' => d -= 1,
+                _ => {}
+            }
+        }
+        out.push(d);
+    }
+    out
+}
+
+/// One guard acquisition: lock name, optional binding, and the 1-based
+/// inclusive line range the guard is live.
+struct Acquisition {
+    line: usize,
+    lock: String,
+    end: usize,
+}
+
+/// Extract Mutex/RwLock guard acquisitions in `f`: `.lock()`, `.read()`,
+/// `.write()` with empty argument lists (distinguishes lock APIs from
+/// io::Read/Write, which take buffers). A `let`-bound guard lives to the
+/// end of its enclosing block (or an explicit `drop(guard)`); a chained
+/// temporary lives for its statement.
+fn acquisitions(file: &SourceFile, f: &FnItem, depth: &[i64]) -> Vec<Acquisition> {
+    let Some((start, end)) = f.body else { return Vec::new() };
+    let (lo, hi) = (start - 1, end - 1);
+    let mut out = Vec::new();
+    for (ln, code) in own_body_lines(file, f, false) {
+        let idx = ln - 1;
+        for tok in [".lock(", ".read(", ".write("] {
+            let mut from = 0usize;
+            while let Some(pos) = code[from..].find(tok) {
+                let at = from + pos;
+                from = at + tok.len();
+                let rest = code[at + tok.len()..].trim_start();
+                if !rest.starts_with(')') {
+                    continue;
+                }
+                let Some(lock) = receiver_before(file, idx, at, lo) else { continue };
+                let first = &file.lines[stmt_start(file, idx, lo)].code;
+                let trimmed = first.trim_start();
+                let is_let = trimmed.starts_with("let ");
+                let range_end = if is_let {
+                    let guard: Option<String> = {
+                        let rest = trimmed.trim_start_matches("let ").trim_start();
+                        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+                        let name: String =
+                            rest.chars().take_while(|&c| is_ident_char(c)).collect();
+                        (!name.is_empty()).then_some(name)
+                    };
+                    let d = depth[stmt_start(file, idx, lo)];
+                    let mut m = idx;
+                    while m < hi && depth[m + 1] >= d {
+                        if let Some(g) = &guard {
+                            if m > idx
+                                && file.lines[m].code.contains("drop(")
+                                && contains_word(&file.lines[m].code, g)
+                            {
+                                break;
+                            }
+                        }
+                        m += 1;
+                    }
+                    m
+                } else {
+                    stmt_end(file, idx, hi)
+                };
+                out.push(Acquisition {
+                    line: ln,
+                    lock,
+                    end: range_end + 1,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Lock-order verdict for acquiring `inner` while holding `outer`.
+fn order_violation(outer: &str, inner: &str) -> Option<String> {
+    let oi = LOCK_ORDER.iter().position(|l| *l == outer);
+    let ii = LOCK_ORDER.iter().position(|l| *l == inner);
+    match (oi, ii) {
+        (Some(o), Some(i)) if i <= o => Some(format!(
+            "acquiring `{inner}` while holding `{outer}` violates the declared \
+             LOCK_ORDER ({})",
+            LOCK_ORDER.join(" < ")
+        )),
+        (Some(_), Some(_)) => None,
+        _ => Some(format!(
+            "nested acquisition of `{inner}` under `{outer}` but the pair is \
+             not covered by the declared LOCK_ORDER ({}) — add both locks to \
+             the order in analysis/rules.rs",
+            LOCK_ORDER.join(" < ")
+        )),
+    }
+}
+
+/// R7 — guard live-ranges: no blocking calls, no double-acquire, declared
+/// lock order; interprocedural through the call graph.
+pub fn check_lock_discipline(
+    files: &[SourceFile],
+    lib_len: usize,
+    graph: &CallGraph,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // Direct lock sets per fn (crate-wide, for interprocedural checks).
+    let mut direct_locks: HashMap<FnId, Vec<String>> = HashMap::new();
+    for (fi, file) in files.iter().enumerate() {
+        let depth = depth_prefix(file);
+        for (fj, f) in file.functions.iter().enumerate() {
+            let locks: Vec<String> = acquisitions(file, f, &depth)
+                .into_iter()
+                .map(|a| a.lock)
+                .collect();
+            if !locks.is_empty() {
+                direct_locks.insert((fi, fj), locks);
+            }
+        }
+    }
+    let mut reach_locks: HashMap<FnId, HashSet<String>> = HashMap::new();
+    let mut locks_of = |id: FnId, graph: &CallGraph| -> HashSet<String> {
+        if let Some(hit) = reach_locks.get(&id) {
+            return hit.clone();
+        }
+        let mut set = HashSet::new();
+        for r in graph.reachable(&[id]) {
+            if let Some(ls) = direct_locks.get(&r) {
+                set.extend(ls.iter().cloned());
+            }
+        }
+        reach_locks.insert(id, set.clone());
+        set
+    };
+
+    // Transitive blocking predicate (reason-suppressed lines excluded).
+    let direct_block = |id: FnId| {
+        let file = &files[id.0];
+        own_body_lines(file, &file.functions[id.1], false)
+            .iter()
+            .any(|&(ln, code)| {
+                blocking_token(code).is_some()
+                    && !covered_by_allow(file, ln, &[R7_LOCK_DISCIPLINE])
+            })
+    };
+    let skip = |id: FnId, site: &super::callgraph::CallSite| {
+        covered_by_allow(&files[id.0], site.line, &[R7_LOCK_DISCIPLINE])
+    };
+    let mut block_memo = HashMap::new();
+
+    for (fi, file) in files.iter().enumerate().take(lib_len) {
+        let depth = depth_prefix(file);
+        for (fj, f) in file.functions.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            let acqs = acquisitions(file, f, &depth);
+            for a in &acqs {
+                // Direct blocking tokens inside the live range.
+                for (ln, code) in own_body_lines(file, f, false) {
+                    if ln < a.line || ln > a.end {
+                        continue;
+                    }
+                    if let Some(tok) = blocking_token(code) {
+                        out.push(finding(
+                            file,
+                            ln,
+                            R7_LOCK_DISCIPLINE,
+                            format!(
+                                "blocking call (`{}`) while holding the `{}` guard \
+                                 acquired on line {} — do the blocking work outside \
+                                 the lock",
+                                tok.trim_matches(|c| c == '.' || c == '('),
+                                a.lock,
+                                a.line
+                            ),
+                        ));
+                    }
+                }
+                // Nested direct acquisitions.
+                for b in &acqs {
+                    if b.line <= a.line || b.line > a.end {
+                        continue;
+                    }
+                    if b.lock == a.lock {
+                        out.push(finding(
+                            file,
+                            b.line,
+                            R7_LOCK_DISCIPLINE,
+                            format!(
+                                "double acquisition of `{}` — the guard from line \
+                                 {} is still live (self-deadlock)",
+                                a.lock, a.line
+                            ),
+                        ));
+                    } else if let Some(msg) = order_violation(&a.lock, &b.lock) {
+                        out.push(finding(file, b.line, R7_LOCK_DISCIPLINE, msg));
+                    }
+                }
+                // Interprocedural: calls made while the guard is live.
+                for site in &graph.calls[fi][fj] {
+                    if site.line < a.line || site.line > a.end {
+                        continue;
+                    }
+                    let Callee::Resolved(ids) = &site.callee else { continue };
+                    for &t in ids {
+                        if find_chain(
+                            graph,
+                            files,
+                            t,
+                            &direct_block,
+                            &skip,
+                            &mut block_memo,
+                            &mut HashSet::new(),
+                        )
+                        .is_some()
+                        {
+                            out.push(finding(
+                                file,
+                                site.line,
+                                R7_LOCK_DISCIPLINE,
+                                format!(
+                                    "call to `{}` (which blocks) while holding the \
+                                     `{}` guard acquired on line {}",
+                                    site.name, a.lock, a.line
+                                ),
+                            ));
+                            break;
+                        }
+                    }
+                    let callee_locks: HashSet<String> = ids
+                        .iter()
+                        .flat_map(|&t| locks_of(t, graph))
+                        .collect();
+                    for l in &callee_locks {
+                        if *l == a.lock {
+                            out.push(finding(
+                                file,
+                                site.line,
+                                R7_LOCK_DISCIPLINE,
+                                format!(
+                                    "call to `{}` re-acquires `{}` while the guard \
+                                     from line {} is still live (deadlock path)",
+                                    site.name, a.lock, a.line
+                                ),
+                            ));
+                        } else if let Some(msg) = order_violation(&a.lock, l) {
+                            out.push(finding(
+                                file,
+                                site.line,
+                                R7_LOCK_DISCIPLINE,
+                                format!("via call to `{}`: {msg}", site.name),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.sort_by(|x, y| (&x.file, x.line, &x.message).cmp(&(&y.file, y.line, &y.message)));
+    out.dedup_by(|x, y| x.file == y.file && x.line == y.line && x.message == y.message);
+    out
+}
+
+/// Atomic-op tokens and their R8 shape.
+#[derive(Clone, Copy, PartialEq)]
+enum AtomicOp {
+    Load,
+    Store,
+    Rmw,
+    Cas,
+}
+
+const ATOMIC_OPS: &[(&str, AtomicOp)] = &[
+    (".load(", AtomicOp::Load),
+    (".store(", AtomicOp::Store),
+    (".swap(", AtomicOp::Rmw),
+    (".fetch_add(", AtomicOp::Rmw),
+    (".fetch_sub(", AtomicOp::Rmw),
+    (".fetch_max(", AtomicOp::Rmw),
+    (".fetch_min(", AtomicOp::Rmw),
+    (".fetch_and(", AtomicOp::Rmw),
+    (".fetch_or(", AtomicOp::Rmw),
+    (".fetch_xor(", AtomicOp::Rmw),
+    (".compare_exchange(", AtomicOp::Cas),
+    (".compare_exchange_weak(", AtomicOp::Cas),
+    (".fetch_update(", AtomicOp::Cas),
+];
+
+/// `Ordering::X` idents in `text`, in order.
+fn orderings_in(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find("Ordering::") {
+        let at = from + pos + "Ordering::".len();
+        let name: String = text[at..].chars().take_while(|&c| is_ident_char(c)).collect();
+        if !name.is_empty() {
+            out.push(name);
+        }
+        from = at;
+    }
+    out
+}
+
+/// R8 — every atomic site must match its declaration's class: gauges
+/// stay `Relaxed`, handoffs pair `Acquire` loads with `Release` stores
+/// (`AcqRel` for RMWs; CAS uses `AcqRel` + `Acquire` failure).
+pub fn check_atomic_ordering(
+    files: &[SourceFile],
+    lib_len: usize,
+    syms: &SymbolTable,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (fi, file) in files.iter().enumerate().take(lib_len) {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test || line.code.trim_start().starts_with("#[") {
+                continue;
+            }
+            let code = &line.code;
+            for (tok, op) in ATOMIC_OPS {
+                let mut from = 0usize;
+                while let Some(pos) = code[from..].find(tok) {
+                    let at = from + pos;
+                    from = at + tok.len();
+                    // The call's orderings: from the token to the end of
+                    // the statement.
+                    let send = stmt_end(file, idx, file.lines.len() - 1);
+                    let mut text = code[at..].to_string();
+                    for l in idx + 1..=send {
+                        text.push(' ');
+                        text.push_str(&file.lines[l].code);
+                    }
+                    let expected = if *op == AtomicOp::Cas { 2 } else { 1 };
+                    let ords: Vec<String> =
+                        orderings_in(&text).into_iter().take(expected).collect();
+                    if ords.is_empty() {
+                        continue; // not an atomic op (no Ordering argument)
+                    }
+                    let Some(name) = receiver_before(file, idx, at, 0) else { continue };
+                    let ln = idx + 1;
+                    match syms.atomic_class(fi, &name) {
+                        Err(true) => out.push(finding(
+                            file,
+                            ln,
+                            R8_ATOMIC_ORDERING,
+                            format!(
+                                "atomic `{name}` has conflicting gauge/handoff \
+                                 declarations across files — rename or annotate \
+                                 the declarations"
+                            ),
+                        )),
+                        Err(false) => out.push(finding(
+                            file,
+                            ln,
+                            R8_ATOMIC_ORDERING,
+                            format!(
+                                "no classified declaration found for atomic \
+                                 `{name}` — keep the binding named after the \
+                                 declared field, or annotate the declaration \
+                                 `// bbml-lint: atomic(gauge|handoff)`"
+                            ),
+                        )),
+                        Ok(AtomicClass::Gauge) => {
+                            for ord in &ords {
+                                if ord != "Relaxed" {
+                                    out.push(finding(
+                                        file,
+                                        ln,
+                                        R8_ATOMIC_ORDERING,
+                                        format!(
+                                            "gauge atomic `{name}` uses \
+                                             Ordering::{ord} — gauges must be \
+                                             Relaxed (exactness comes from RMW \
+                                             atomicity; see the serve/mod.rs \
+                                             taxonomy)"
+                                        ),
+                                    ));
+                                }
+                            }
+                        }
+                        Ok(AtomicClass::Handoff) => {
+                            let want: &[&str] = match op {
+                                AtomicOp::Load => &["Acquire"],
+                                AtomicOp::Store => &["Release"],
+                                AtomicOp::Rmw => &["AcqRel"],
+                                AtomicOp::Cas => &["AcqRel", "Acquire"],
+                            };
+                            for (i, ord) in ords.iter().enumerate() {
+                                let expect = want.get(i).copied().unwrap_or("Acquire");
+                                if ord != expect {
+                                    out.push(finding(
+                                        file,
+                                        ln,
+                                        R8_ATOMIC_ORDERING,
+                                        format!(
+                                            "handoff atomic `{name}` uses \
+                                             Ordering::{ord} — expected {expect} \
+                                             here (Acquire loads / Release stores \
+                                             / AcqRel RMWs pair the flag with the \
+                                             memory it publishes)"
+                                        ),
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// R9 root surfaces: reachability starts from these impl types / fns.
+const R9_ROOT_TYPES: &[&str] = &["SgdCore", "BatchScorer"];
+const R9_ROOT_FNS: &[&str] = &["predict_artifact"];
+
+/// Hash-container iteration tokens (R9).
+const ITER_TOKENS: &[&str] = &[".iter()", ".values()", ".keys()", ".into_iter()", ".drain("];
+
+/// True when `code` contains a float literal (`digit . digit`).
+fn has_float_literal(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    chars.windows(3).any(|w| {
+        w[0].is_ascii_digit() && w[1] == '.' && w[2].is_ascii_digit()
+    })
+}
+
+/// Line spans (1-based, inclusive) of `spawn(…)` closures in a body.
+fn spawn_spans(file: &SourceFile, f: &FnItem) -> Vec<(usize, usize)> {
+    let Some((start, end)) = f.body else { return Vec::new() };
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate().take(end).skip(start - 1) {
+        let Some(pos) = line.code.find("spawn(") else { continue };
+        // Brace-match from the first `{` at or after the token.
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut sp_end = idx;
+        'span: for (bi, l) in file.lines.iter().enumerate().take(end).skip(idx) {
+            let text = if bi == idx { &l.code[pos..] } else { &l.code[..] };
+            for c in text.chars() {
+                if c == '{' {
+                    depth += 1;
+                    started = true;
+                } else if c == '}' {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        sp_end = bi;
+                        break 'span;
+                    }
+                }
+            }
+            sp_end = bi;
+        }
+        if started {
+            out.push((idx + 1, sp_end + 1));
+        }
+    }
+    out
+}
+
+/// R9 — float determinism on the bit-identity surfaces: no hash-ordered
+/// iteration feeding float accumulation, no `partial_cmp` float sorts,
+/// no float reduction inside worker (non-collector) threads, in any
+/// function reachable from `SgdCore` / `predict_artifact` /
+/// `BatchScorer`.
+pub fn check_float_determinism(
+    files: &[SourceFile],
+    lib_len: usize,
+    syms: &SymbolTable,
+    graph: &CallGraph,
+) -> Vec<Finding> {
+    let mut roots: Vec<FnId> = Vec::new();
+    for (fi, file) in files.iter().enumerate().take(lib_len) {
+        for (fj, f) in file.functions.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            let owner = syms.fn_owner[fi][fj].as_deref();
+            if owner.is_some_and(|t| R9_ROOT_TYPES.contains(&t))
+                || R9_ROOT_FNS.contains(&f.name.as_str())
+            {
+                roots.push((fi, fj));
+            }
+        }
+    }
+    let reach = graph.reachable(&roots);
+    let mut out = Vec::new();
+    for &(fi, fj) in reach.iter().filter(|id| id.0 < lib_len) {
+        let file = &files[fi];
+        let f = &file.functions[fj];
+        if f.in_test {
+            continue;
+        }
+        let body = own_body_lines(file, f, false);
+        let float_fn = contains_word(&f.sig, "f32")
+            || contains_word(&f.sig, "f64")
+            || body
+                .iter()
+                .any(|(_, c)| contains_word(c, "f32") || contains_word(c, "f64"));
+
+        // Hash-container locals/fields/params declared in this fn's file
+        // lines (decl extraction shared with the atomic table).
+        let mut map_names: Vec<String> = Vec::new();
+        for &(_, code) in &body {
+            for ty in ["HashMap", "HashSet"] {
+                if let Some(pos) = code.find(ty) {
+                    if contains_word(code, ty) && !code.trim_start().starts_with("use ") {
+                        if let Some(n) = super::symbols::decl_name(code, pos) {
+                            map_names.push(n);
+                        }
+                    }
+                }
+            }
+        }
+        let accumulates = body.iter().any(|(_, c)| {
+            (c.contains("+=") && has_float_literal(c))
+                || c.contains(".sum::<f32")
+                || c.contains(".sum::<f64")
+                || c.contains("fold(0.0")
+                || (c.contains("+=") && float_fn && !c.contains("usize") && c.contains("* "))
+        });
+
+        for &(ln, code) in &body {
+            if float_fn && accumulates {
+                for tok in ITER_TOKENS {
+                    let Some(pos) = code.find(tok) else { continue };
+                    let Some(recv) = receiver_before(file, ln - 1, pos, 0) else { continue };
+                    if map_names.iter().any(|m| *m == recv) {
+                        out.push(finding(
+                            file,
+                            ln,
+                            R9_FLOAT_DETERMINISM,
+                            format!(
+                                "iteration over hash-ordered `{recv}` in `{}` \
+                                 (reachable from the bit-identity surfaces) feeds \
+                                 float accumulation — hash order varies per \
+                                 process; iterate a sorted view",
+                                f.name
+                            ),
+                        ));
+                    }
+                }
+            }
+            if code.contains("partial_cmp")
+                && [".sort", ".min_by", ".max_by"].iter().any(|t| code.contains(t))
+            {
+                out.push(finding(
+                    file,
+                    ln,
+                    R9_FLOAT_DETERMINISM,
+                    format!(
+                        "float comparison via partial_cmp in `{}` (reachable from \
+                         the bit-identity surfaces) — use total_cmp for a total, \
+                         deterministic order",
+                        f.name
+                    ),
+                ));
+            }
+        }
+        for (ss, se) in spawn_spans(file, f) {
+            for &(ln, code) in &body {
+                if ln <= ss || ln > se {
+                    continue;
+                }
+                let float_red = code.contains(".sum::<f32")
+                    || code.contains(".sum::<f64")
+                    || code.contains("fold(0.0")
+                    || (code.contains("+=") && has_float_literal(code))
+                    || (code.contains("+=")
+                        && (contains_word(code, "f32") || contains_word(code, "f64")));
+                if float_red {
+                    out.push(finding(
+                        file,
+                        ln,
+                        R9_FLOAT_DETERMINISM,
+                        format!(
+                            "float reduction inside a worker thread in `{}` \
+                             (reachable from the bit-identity surfaces) — workers \
+                             must emit per-item values; only the collector may \
+                             reduce, in deterministic order",
+                            f.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out.sort_by(|x, y| (&x.file, x.line, &x.message).cmp(&(&y.file, y.line, &y.message)));
+    out.dedup_by(|x, y| x.file == y.file && x.line == y.line && x.message == y.message);
     out
 }
 

@@ -18,8 +18,8 @@
 //!   comment block above, and any `// bbml-lint:` annotations attached to
 //!   that block;
 //! * **directives** — the `// bbml-lint:` comment vocabulary
-//!   (`hot-path`, `oracle`, `allow(rule-id) reason: …`), parsed from
-//!   comment text only.
+//!   (`hot-path`, `oracle`, `atomic(gauge|handoff)`,
+//!   `allow(rule-id) reason: …`), parsed from comment text only.
 
 /// One scanned source line.
 #[derive(Debug)]
@@ -36,6 +36,17 @@ pub struct Line {
     pub in_test: bool,
 }
 
+/// Declared role of an atomic variable — rule R8's taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomicClass {
+    /// Monitoring counter: exactness comes from RMW atomicity alone, no
+    /// other memory is published through it. Must use `Relaxed`.
+    Gauge,
+    /// Cross-thread signal (stop flag, swap counter): a reader acts on
+    /// memory written before the store. Must pair `Acquire`/`Release`.
+    Handoff,
+}
+
 /// A `// bbml-lint:` comment directive.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DirectiveKind {
@@ -43,6 +54,9 @@ pub enum DirectiveKind {
     HotPath,
     /// Marks the next function as a retained bit-identity oracle (R5).
     Oracle,
+    /// `atomic(gauge)` / `atomic(handoff)` on an atomic declaration —
+    /// overrides R8's default classification for that variable.
+    Atomic(AtomicClass),
     /// Suppresses `rule` on the directive's target line. `reason` is
     /// mandatory; a reason-less allow is itself a finding and does NOT
     /// suppress.
@@ -361,6 +375,12 @@ fn parse_directive(comment: &str) -> Option<DirectiveKind> {
     }
     if rest == "oracle" {
         return Some(DirectiveKind::Oracle);
+    }
+    if rest == "atomic(gauge)" {
+        return Some(DirectiveKind::Atomic(AtomicClass::Gauge));
+    }
+    if rest == "atomic(handoff)" {
+        return Some(DirectiveKind::Atomic(AtomicClass::Handoff));
     }
     if let Some(inner) = rest.strip_prefix("allow(") {
         if let Some(close) = inner.find(')') {

@@ -27,7 +27,7 @@ pub fn directive_findings(file: &SourceFile) -> Vec<Finding> {
         let message = match &d.kind {
             DirectiveKind::Malformed(text) => Some(format!(
                 "unrecognized bbml-lint directive `{text}` — expected `hot-path`, \
-                 `oracle`, or `allow(rule-id) reason: …`"
+                 `oracle`, `atomic(gauge|handoff)`, or `allow(rule-id) reason: …`"
             )),
             DirectiveKind::Allow { rule, reason } => {
                 if !known_rule(rule) {
@@ -48,7 +48,7 @@ pub fn directive_findings(file: &SourceFile) -> Vec<Finding> {
                     None
                 }
             }
-            DirectiveKind::HotPath | DirectiveKind::Oracle => None,
+            DirectiveKind::HotPath | DirectiveKind::Oracle | DirectiveKind::Atomic(_) => None,
         };
         if let Some(message) = message {
             out.push(Finding {

@@ -1,0 +1,572 @@
+//! Crate-wide symbol table — the name-resolution layer under the call
+//! graph (R6–R9).
+//!
+//! Built on the same stripped token stream as the per-file rules, with no
+//! external parser: module paths come from file paths (`src/store/mod.rs`
+//! → `crate::store`), `use` statements become per-file alias maps
+//! (brace groups, `as` renames and `self` imports included), `impl`
+//! blocks become line spans that give every method an owner type, and
+//! atomic declarations (`static`/`let`/struct-field/fn-param) are
+//! classified gauge-vs-handoff for R8 — by the
+//! `// bbml-lint: atomic(gauge|handoff)` directive when present, else by
+//! type (`AtomicBool` defaults to handoff, numeric atomics to gauge).
+
+use std::collections::HashMap;
+
+use super::scanner::{AtomicClass, Directive, DirectiveKind, SourceFile};
+
+/// A function identity: (file index, index into that file's `functions`).
+pub type FnId = (usize, usize);
+
+/// The crate-wide symbol table consumed by [`super::callgraph`] and the
+/// R7/R8 rules.
+pub struct SymbolTable {
+    /// Module path per file (`crate::store::reader`, or a private root
+    /// like `xtest::integration_store` for non-library files).
+    pub module_of: Vec<String>,
+    /// Per-file `use` alias map: last-segment (or `as`) name → full path,
+    /// normalized so `bbml::…`/`crate::…`/`self::…`/`super::…` all become
+    /// absolute `crate::…` paths.
+    pub uses: Vec<HashMap<String, String>>,
+    /// Owner type (impl-block target) per function, `None` for free fns.
+    pub fn_owner: Vec<Vec<Option<String>>>,
+    /// Free functions by full path `module::name` (shadowing-safe: a
+    /// module's own fn wins before any cross-module candidate).
+    pub path_fns: HashMap<String, Vec<FnId>>,
+    /// Impl-block methods by bare name (for method-call unions).
+    pub methods: HashMap<String, Vec<FnId>>,
+    /// Impl-block methods by (owner type, name).
+    pub typed_methods: HashMap<(String, String), Vec<FnId>>,
+    /// Free functions by bare name (crate-wide; used only when a name is
+    /// globally unique).
+    pub free_by_name: HashMap<String, Vec<FnId>>,
+    /// Per-file atomic declarations: variable name → class.
+    pub atomics: Vec<HashMap<String, AtomicClass>>,
+    /// Crate-wide atomic classes per name (deduped), the fallback when a
+    /// use site's file has no local declaration (e.g. an `Arc<AtomicBool>`
+    /// created by the caller).
+    pub atomics_global: HashMap<String, Vec<AtomicClass>>,
+}
+
+/// Module path for a display path. Library files get `crate::…`; bins,
+/// tests, benches and examples each get a private root so their free fns
+/// never collide with (or shadow) library items.
+pub fn module_path(path: &str) -> String {
+    let p = path.trim_start_matches("../").trim_end_matches(".rs");
+    if let Some(rest) = p.strip_prefix("src/") {
+        if rest == "lib" {
+            return "crate".to_string();
+        }
+        if rest == "main" || rest.starts_with("bin/") {
+            let stem = rest.rsplit('/').next().unwrap_or(rest);
+            return format!("xbin::{}", stem.replace('-', "_"));
+        }
+        let rest = rest.strip_suffix("/mod").unwrap_or(rest);
+        return format!("crate::{}", rest.replace('/', "::"));
+    }
+    // tests/, benches/, examples/ — each file is its own crate root.
+    format!("xtest::{}", p.replace(['/', '-'], "_"))
+}
+
+fn parent_module(module: &str) -> String {
+    match module.rfind("::") {
+        Some(i) => module[..i].to_string(),
+        None => module.to_string(),
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split on commas at brace/angle/paren depth 0.
+fn split_top_commas(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' | '<' | '(' => depth += 1,
+            '}' | '>' | ')' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Expand one `use` spec (after `use`, before `;`) into (alias, path)
+/// pairs. `prefix` carries the already-parsed leading path (ending with
+/// `::` when non-empty).
+fn expand_use(prefix: &str, spec: &str, out: &mut Vec<(String, String)>) {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return;
+    }
+    if let Some(brace) = spec.find('{') {
+        let head = &spec[..brace];
+        let close = spec.rfind('}').unwrap_or(spec.len());
+        for part in split_top_commas(&spec[brace + 1..close]) {
+            expand_use(&format!("{prefix}{head}"), part, out);
+        }
+        return;
+    }
+    let (path, alias) = match spec.find(" as ") {
+        Some(i) => (spec[..i].trim(), spec[i + 4..].trim().to_string()),
+        None => {
+            let last = spec.rsplit("::").next().unwrap_or(spec).trim();
+            (spec, last.to_string())
+        }
+    };
+    if alias == "*" || alias == "_" {
+        return; // glob / anonymous trait import: nothing nameable
+    }
+    let full = format!("{prefix}{path}");
+    if alias == "self" {
+        // `use a::b::{self}` — binds `b`.
+        let full = full.trim_end_matches("::self").to_string();
+        let name = full.rsplit("::").next().unwrap_or(&full).to_string();
+        out.push((name, full));
+    } else {
+        out.push((alias, full));
+    }
+}
+
+/// Absolutize a use path against the declaring module: `bbml`/`crate`
+/// map to `crate`, `self`/`super` are resolved, externals pass through.
+fn normalize_use_path(path: &str, module: &str) -> String {
+    let segs: Vec<&str> = path.split("::").map(str::trim).collect();
+    let mut root = module.to_string();
+    let mut rest_start = 0usize;
+    match segs.first().copied() {
+        Some("crate") | Some("bbml") => {
+            root = "crate".to_string();
+            rest_start = 1;
+        }
+        Some("self") => {
+            rest_start = 1;
+        }
+        Some("super") => {
+            while segs.get(rest_start) == Some(&"super") {
+                root = parent_module(&root);
+                rest_start += 1;
+            }
+        }
+        _ => return segs.join("::"), // external crate (std, anyhow, …)
+    }
+    let mut out = root;
+    for s in &segs[rest_start..] {
+        out.push_str("::");
+        out.push_str(s);
+    }
+    out
+}
+
+/// Collect `use …;` statements (joined across lines) from code text.
+fn use_statements(file: &SourceFile) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut buf: Option<String> = None;
+    for line in &file.lines {
+        let code = line.code.trim();
+        if buf.is_none() {
+            let after = code
+                .strip_prefix("pub use ")
+                .or_else(|| code.strip_prefix("pub(crate) use "))
+                .or_else(|| code.strip_prefix("use "));
+            if let Some(after) = after {
+                buf = Some(after.to_string());
+            }
+        } else if let Some(b) = buf.as_mut() {
+            b.push(' ');
+            b.push_str(code);
+        }
+        if let Some(b) = &buf {
+            if b.contains(';') {
+                let stmt = b[..b.find(';').unwrap_or(b.len())].to_string();
+                out.push(stmt);
+                buf = None;
+            }
+        }
+    }
+    out
+}
+
+/// An `impl` block's line span and target type (last path segment).
+pub struct ImplSpan {
+    pub start: usize,
+    pub end: usize,
+    pub type_name: String,
+}
+
+/// Find `impl` blocks: the target type is the path after `for` when
+/// present, else the first path after the (skipped) generic params.
+fn impl_spans(file: &SourceFile) -> Vec<ImplSpan> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = &line.code;
+        let Some(pos) = find_word(code, "impl") else { continue };
+        // Reject `impl Trait` in type position (fn sigs, where clauses).
+        let before = code[..pos].trim();
+        if !(before.is_empty() || before.ends_with("unsafe")) {
+            continue;
+        }
+        // Join the header until its opening brace (may span lines).
+        let mut header = code[pos + 4..].to_string();
+        let mut open_line = idx;
+        while !header.contains('{') && open_line + 1 < file.lines.len() {
+            open_line += 1;
+            header.push(' ');
+            header.push_str(&file.lines[open_line].code);
+        }
+        let header = &header[..header.find('{').unwrap_or(header.len())];
+        let Some(type_name) = impl_target(header) else { continue };
+        // Brace-match from the opening line for the span.
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut end = open_line;
+        'span: for (bi, l) in file.lines.iter().enumerate().skip(open_line) {
+            for c in l.code.chars() {
+                if c == '{' {
+                    depth += 1;
+                    started = true;
+                } else if c == '}' {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        end = bi;
+                        break 'span;
+                    }
+                }
+            }
+            end = bi;
+        }
+        out.push(ImplSpan {
+            start: idx + 1,
+            end: end + 1,
+            type_name,
+        });
+    }
+    out
+}
+
+/// The target type name of an impl header (generics stripped).
+fn impl_target(header: &str) -> Option<String> {
+    let mut s = header.trim_start();
+    // Skip leading generic params `<…>`.
+    if let Some(rest) = s.strip_prefix('<') {
+        let mut depth = 1i64;
+        let mut cut = rest.len();
+        for (i, c) in rest.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        cut = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        s = rest[cut..].trim_start();
+    }
+    let s = match find_word(s, "for") {
+        Some(i) => s[i + 3..].trim_start(),
+        None => s,
+    };
+    let path: String = s
+        .chars()
+        .take_while(|&c| is_ident_char(c) || c == ':')
+        .collect();
+    let name = path.rsplit("::").next().unwrap_or(&path).trim().to_string();
+    if name.is_empty() || !name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+        return None;
+    }
+    Some(name)
+}
+
+/// First word-boundary occurrence of `needle` in `hay`.
+fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    let mut start = 0usize;
+    while let Some(pos) = hay[start..].find(needle) {
+        let at = start + pos;
+        let before_ok =
+            at == 0 || !hay[..at].chars().next_back().map(is_ident_char).unwrap_or(false);
+        let after = at + needle.len();
+        let after_ok =
+            after >= hay.len() || !hay[after..].chars().next().map(is_ident_char).unwrap_or(false);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + needle.len().max(1);
+    }
+    None
+}
+
+/// The atomic types R8 classifies.
+const ATOMIC_TYPES: &[&str] = &[
+    "AtomicBool",
+    "AtomicUsize",
+    "AtomicU64",
+    "AtomicU32",
+    "AtomicU16",
+    "AtomicU8",
+    "AtomicIsize",
+    "AtomicI64",
+    "AtomicI32",
+    "AtomicI16",
+    "AtomicI8",
+];
+
+/// Declared name on a typed line: `let`/`static` binding first, else the
+/// `name:` field/param directly before the type token at `type_pos`
+/// (skipping `::` path separators). Shared by the R8 atomic table and
+/// R9's hash-container tracking.
+pub(crate) fn decl_name(code: &str, type_pos: usize) -> Option<String> {
+    for kw in ["let", "static"] {
+        if let Some(at) = find_word(&code[..type_pos], kw) {
+            let rest = code[at + kw.len()..].trim_start();
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+            let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    // Walk back to a single `:` (not `::`) and take the ident before it.
+    let bytes: Vec<char> = code[..type_pos].chars().collect();
+    let mut i = bytes.len();
+    while i > 0 {
+        let c = bytes[i - 1];
+        if c == ':' {
+            let double = (i >= 2 && bytes[i - 2] == ':') || bytes.get(i) == Some(&':');
+            if !double {
+                let mut j = i - 1;
+                while j > 0 && bytes[j - 1].is_whitespace() {
+                    j -= 1;
+                }
+                let mut k = j;
+                while k > 0 && is_ident_char(bytes[k - 1]) {
+                    k -= 1;
+                }
+                if k < j {
+                    return Some(bytes[k..j].iter().collect());
+                }
+                return None;
+            }
+            // Skip the `::` pair entirely.
+            i = i.saturating_sub(2);
+            continue;
+        }
+        if is_ident_char(c) || c.is_whitespace() || "<&'>,".contains(c) {
+            i -= 1;
+            continue;
+        }
+        return None;
+    }
+    None
+}
+
+fn directive_class(directives: &[Directive], line: usize) -> Option<AtomicClass> {
+    directives.iter().find_map(|d| match d.kind {
+        DirectiveKind::Atomic(c) if d.target_line == line => Some(c),
+        _ => None,
+    })
+}
+
+/// Build the symbol table over every scanned file (library, bins, tests,
+/// benches, examples — cross-scope so bench `use bbml::…` calls resolve).
+pub fn build(files: &[SourceFile]) -> SymbolTable {
+    let module_of: Vec<String> = files.iter().map(|f| module_path(&f.path)).collect();
+
+    let mut uses: Vec<HashMap<String, String>> = Vec::with_capacity(files.len());
+    for (fi, file) in files.iter().enumerate() {
+        let mut map = HashMap::new();
+        for stmt in use_statements(file) {
+            let mut pairs = Vec::new();
+            expand_use("", &stmt, &mut pairs);
+            for (alias, path) in pairs {
+                map.insert(alias, normalize_use_path(&path, &module_of[fi]));
+            }
+        }
+        uses.push(map);
+    }
+
+    let mut fn_owner: Vec<Vec<Option<String>>> = Vec::with_capacity(files.len());
+    let mut path_fns: HashMap<String, Vec<FnId>> = HashMap::new();
+    let mut methods: HashMap<String, Vec<FnId>> = HashMap::new();
+    let mut typed_methods: HashMap<(String, String), Vec<FnId>> = HashMap::new();
+    let mut free_by_name: HashMap<String, Vec<FnId>> = HashMap::new();
+    for (fi, file) in files.iter().enumerate() {
+        let impls = impl_spans(file);
+        let mut owners = Vec::with_capacity(file.functions.len());
+        for (fj, f) in file.functions.iter().enumerate() {
+            // Innermost impl span containing the fn line.
+            let owner = impls
+                .iter()
+                .filter(|s| s.start <= f.line && f.line <= s.end)
+                .min_by_key(|s| s.end - s.start)
+                .map(|s| s.type_name.clone());
+            let id: FnId = (fi, fj);
+            match &owner {
+                Some(t) => {
+                    methods.entry(f.name.clone()).or_default().push(id);
+                    typed_methods
+                        .entry((t.clone(), f.name.clone()))
+                        .or_default()
+                        .push(id);
+                }
+                None => {
+                    path_fns
+                        .entry(format!("{}::{}", module_of[fi], f.name))
+                        .or_default()
+                        .push(id);
+                    free_by_name.entry(f.name.clone()).or_default().push(id);
+                }
+            }
+            owners.push(owner);
+        }
+        fn_owner.push(owners);
+    }
+
+    let mut atomics: Vec<HashMap<String, AtomicClass>> = Vec::with_capacity(files.len());
+    let mut atomics_global: HashMap<String, Vec<AtomicClass>> = HashMap::new();
+    for file in files {
+        let mut map: HashMap<String, AtomicClass> = HashMap::new();
+        for (idx, line) in file.lines.iter().enumerate() {
+            let code = &line.code;
+            if code.trim_start().starts_with("use ") {
+                continue;
+            }
+            for ty in ATOMIC_TYPES {
+                let Some(pos) = find_word(code, ty) else { continue };
+                // `AtomicU64::new(0)` on a use site's rhs still carries its
+                // `let`/field name on the same line, so the extractor works
+                // for both declaration shapes.
+                let Some(name) = decl_name(code, pos) else { continue };
+                let class = directive_class(&file.directives, idx + 1).unwrap_or(if *ty
+                    == "AtomicBool"
+                {
+                    AtomicClass::Handoff
+                } else {
+                    AtomicClass::Gauge
+                });
+                map.entry(name.clone()).or_insert(class);
+                let g = atomics_global.entry(name).or_default();
+                if !g.contains(&class) {
+                    g.push(class);
+                }
+                break;
+            }
+        }
+        atomics.push(map);
+    }
+
+    SymbolTable {
+        module_of,
+        uses,
+        fn_owner,
+        path_fns,
+        methods,
+        typed_methods,
+        free_by_name,
+        atomics,
+        atomics_global,
+    }
+}
+
+impl SymbolTable {
+    /// The R8 class of atomic `name` as seen from `file`: local
+    /// declaration first, else the crate-wide class when unambiguous.
+    /// `Err(true)` = conflicting declarations, `Err(false)` = none.
+    pub fn atomic_class(&self, file: usize, name: &str) -> Result<AtomicClass, bool> {
+        if let Some(c) = self.atomics.get(file).and_then(|m| m.get(name)) {
+            return Ok(*c);
+        }
+        match self.atomics_global.get(name).map(|v| v.as_slice()) {
+            Some([c]) => Ok(*c),
+            Some(_) => Err(true),
+            None => Err(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path("src/lib.rs"), "crate");
+        assert_eq!(module_path("src/store/mod.rs"), "crate::store");
+        assert_eq!(module_path("src/store/reader.rs"), "crate::store::reader");
+        assert_eq!(module_path("src/bin/bbml-lint.rs"), "xbin::bbml_lint");
+        assert_eq!(module_path("tests/integration_lint.rs"), "xtest::tests_integration_lint");
+        assert_eq!(module_path("../examples/quickstart.rs"), "xtest::examples_quickstart");
+    }
+
+    #[test]
+    fn use_aliases_resolve() {
+        let f = scan(
+            "src/serve/server.rs",
+            "use crate::store::reader::{ShardStream, self};\nuse bbml::hashing::bbit as bb;\nuse super::slot::ModelSlot;\nuse std::sync::Arc;\n",
+        );
+        let t = build(&[f]);
+        let u = &t.uses[0];
+        assert_eq!(u["ShardStream"], "crate::store::reader::ShardStream");
+        assert_eq!(u["reader"], "crate::store::reader");
+        assert_eq!(u["bb"], "crate::hashing::bbit");
+        assert_eq!(u["ModelSlot"], "crate::serve::slot::ModelSlot");
+        assert_eq!(u["Arc"], "std::sync::Arc");
+    }
+
+    #[test]
+    fn impl_owners_and_free_fns() {
+        let src = "\
+pub struct Scorer;
+impl Scorer {
+    pub fn score(&self) -> f64 { helper() }
+}
+impl std::fmt::Display for Scorer {
+    fn fmt(&self) -> () {}
+}
+fn helper() -> f64 { 0.0 }
+";
+        let f = scan("src/a.rs", src);
+        let t = build(&[f]);
+        assert_eq!(t.fn_owner[0][0], Some("Scorer".to_string()));
+        assert_eq!(t.fn_owner[0][1], Some("Scorer".to_string()));
+        assert_eq!(t.fn_owner[0][2], None);
+        assert!(t.typed_methods.contains_key(&("Scorer".to_string(), "score".to_string())));
+        assert!(t.path_fns.contains_key("crate::a::helper"));
+    }
+
+    #[test]
+    fn atomic_declarations_classify() {
+        let src = "\
+static STOP: std::sync::atomic::AtomicBool = AtomicBool::new(false);
+pub struct S {
+    requests: AtomicU64,
+    // bbml-lint: atomic(handoff)
+    swaps: AtomicU64,
+}
+fn f(stop: std::sync::Arc<std::sync::atomic::AtomicBool>) {
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let _ = (stop, next);
+}
+";
+        let f = scan("src/a.rs", src);
+        let t = build(&[f]);
+        assert_eq!(t.atomic_class(0, "STOP"), Ok(AtomicClass::Handoff));
+        assert_eq!(t.atomic_class(0, "requests"), Ok(AtomicClass::Gauge));
+        assert_eq!(t.atomic_class(0, "swaps"), Ok(AtomicClass::Handoff));
+        assert_eq!(t.atomic_class(0, "stop"), Ok(AtomicClass::Handoff));
+        assert_eq!(t.atomic_class(0, "next"), Ok(AtomicClass::Gauge));
+        assert_eq!(t.atomic_class(0, "nope"), Err(false));
+    }
+}

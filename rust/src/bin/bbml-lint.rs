@@ -1,12 +1,15 @@
 //! `bbml-lint` — project-contract static analysis driver.
 //!
-//! Walks the crate tree (`src/**` as library scope, `tests/*` as the
+//! Walks the crate tree (`src/**` as library scope, `benches/**` and the
+//! repo-root `examples/` as exercise scope, `tests/*` as the
 //! oracle-reference corpus) and enforces the rules cataloged in
 //! [`bbml::analysis`]. Output is compiler-style `file:line: rule-id:
 //! message` lines plus a summary; `--json` additionally writes
-//! `results/LINT_report.json`.
+//! `results/LINT_report.json`, `--sarif` writes a SARIF 2.1.0 document,
+//! and `--baseline` subtracts a committed set of accepted findings so CI
+//! fails only on *new* ones.
 //!
-//! Exit codes: 0 clean, 1 findings, 2 usage/io error.
+//! Exit codes: 0 clean (after baseline), 1 findings, 2 usage/io error.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -18,20 +21,33 @@ bbml-lint: static analysis for bbml's hand-written contracts
 
 USAGE:
     bbml-lint [--root <crate-dir>] [--json] [--quiet]
+              [--baseline <file>] [--write-baseline <file>] [--sarif <file>]
 
 OPTIONS:
-    --root <dir>   Crate root containing src/ and tests/.
-                   Default: ./ if ./src exists, else ./rust.
-    --json         Also write results/LINT_report.json (under the CWD).
-    --quiet        Suppress per-finding lines; print only the summary.
-    -h, --help     Show this help.
+    --root <dir>       Crate root containing src/ and tests/.
+                       Default: ./ if ./src exists, else ./rust.
+    --json             Also write results/LINT_report.json (under the CWD).
+    --baseline <file>  Subtract accepted findings (a --json document);
+                       exit 1 only on findings NOT in the baseline.
+                       A missing or malformed baseline is an error (2).
+    --write-baseline <file>
+                       Write the current findings as a new baseline and
+                       exit 0. Review the diff before committing it.
+    --sarif <file>     Also write a SARIF 2.1.0 document (for code
+                       scanning upload). Reflects post-baseline findings.
+    --quiet            Suppress per-finding lines; print only the summary.
+    -h, --help         Show this help.
 
 Rules (suppress with `// bbml-lint: allow(rule-id) reason: ...`):
-    buffer-contract    *_into fns fill &mut destinations, never steal them
-    hot-path-alloc     `// bbml-lint: hot-path` fns may not allocate
-    no-unwrap          no unwrap/expect/panic! in library code
-    format-drift       store/mod.rs byte tables == store/format.rs codec
-    oracle-retention   declared bit-identity oracles stay test-referenced
+    buffer-contract      *_into fns fill &mut destinations, never steal them
+    hot-path-alloc       `// bbml-lint: hot-path` fns may not allocate
+    no-unwrap            no unwrap/expect/panic! in library code
+    format-drift         store/mod.rs byte tables == store/format.rs codec
+    oracle-retention     declared bit-identity oracles stay test-referenced
+    hot-path-transitive  hot-path fns may not reach an allocation via calls
+    lock-discipline      no blocking under guards; declared lock order holds
+    atomic-ordering      gauge atomics Relaxed, handoff atomics Acq/Rel
+    float-determinism    no map-order / thread-order float accumulation
 ";
 
 fn detect_root() -> Option<PathBuf> {
@@ -48,19 +64,28 @@ fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut json = false;
     let mut quiet = false;
+    let mut baseline: Option<PathBuf> = None;
+    let mut write_baseline: Option<PathBuf> = None;
+    let mut sarif: Option<PathBuf> = None;
 
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
             "--json" => json = true,
             "--quiet" => quiet = true,
-            "--root" => match args.next() {
-                Some(dir) => root = Some(PathBuf::from(dir)),
-                None => {
-                    eprintln!("bbml-lint: --root requires a directory argument");
+            "--root" | "--baseline" | "--write-baseline" | "--sarif" => {
+                let Some(val) = args.next() else {
+                    eprintln!("bbml-lint: {arg} requires an argument");
                     return ExitCode::from(2);
+                };
+                let val = PathBuf::from(val);
+                match arg.as_str() {
+                    "--root" => root = Some(val),
+                    "--baseline" => baseline = Some(val),
+                    "--write-baseline" => write_baseline = Some(val),
+                    _ => sarif = Some(val),
                 }
-            },
+            }
             "-h" | "--help" => {
                 print!("{USAGE}");
                 return ExitCode::SUCCESS;
@@ -83,13 +108,40 @@ fn main() -> ExitCode {
         }
     };
 
-    let report = match analysis::lint_tree(&root) {
+    let mut report = match analysis::lint_tree(&root) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("bbml-lint: failed to scan {}: {e}", root.display());
             return ExitCode::from(2);
         }
     };
+
+    if let Some(path) = write_baseline {
+        if let Err(e) = std::fs::write(&path, report.to_json()) {
+            eprintln!("bbml-lint: failed to write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        eprintln!(
+            "bbml-lint: wrote baseline with {} finding(s) to {}",
+            report.findings.len(),
+            path.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    if let Some(path) = baseline {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bbml-lint: failed to read baseline {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        if let Err(e) = report.apply_baseline(&text) {
+            eprintln!("bbml-lint: {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
 
     if quiet {
         let text = report.render_text();
@@ -109,6 +161,22 @@ fn main() -> ExitCode {
             Ok(()) => eprintln!("bbml-lint: wrote {}", out_path.display()),
             Err(e) => {
                 eprintln!("bbml-lint: failed to write {}: {e}", out_path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if let Some(path) = sarif {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!("bbml-lint: failed to create {}: {e}", dir.display());
+                return ExitCode::from(2);
+            }
+        }
+        match std::fs::write(&path, report.to_sarif()) {
+            Ok(()) => eprintln!("bbml-lint: wrote {}", path.display()),
+            Err(e) => {
+                eprintln!("bbml-lint: failed to write {}: {e}", path.display());
                 return ExitCode::from(2);
             }
         }

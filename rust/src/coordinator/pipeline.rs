@@ -136,14 +136,24 @@ fn run_pipeline<F>(
             // bbml-lint: allow(hot-path-alloc) reason: once per worker at
             // spawn, not per row (Arc handle).
             let stop = stop.clone();
+            // bbml-lint: allow(hot-path-transitive) reason: `scope.spawn`
+            // is std's scoped-thread spawn, run once per worker at startup
+            // — the call graph's name-union also matches the crate's
+            // `ShardReader::spawn` (reader setup), never the receiver here.
             scope.spawn(move || {
                 // One scratch per worker: zero allocations per row after
                 // the first fill. Encoders are deterministic and shared by
                 // reference, so output does not depend on which worker ran
                 // the chunk.
+                // bbml-lint: allow(hot-path-transitive) reason: once per
+                // worker at spawn, not per row — this is the buffer the
+                // zero-alloc row loop reuses.
                 let mut scratch = SketchRow::new(&layout);
                 loop {
-                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    // Acquire pairs with the collector's Release store:
+                    // a worker that sees the stop flag also sees the sink
+                    // failure that caused it (handoff, not a gauge).
+                    if stop.load(std::sync::atomic::Ordering::Acquire) {
                         break; // sink failed: stop claiming work
                     }
                     let seq = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -152,6 +162,10 @@ fn run_pipeline<F>(
                     }
                     let lo = seq * chunk;
                     let hi = (lo + chunk).min(n);
+                    // bbml-lint: allow(hot-path-transitive) reason: one
+                    // shard allocation per chunk (thousands of rows), not
+                    // per row — the shard is moved to the collector, so a
+                    // reusable buffer cannot work here.
                     let mut shard = SketchMatrix::with_capacity(layout, hi - lo);
                     let mut nnz = 0usize;
                     for i in lo..hi {
@@ -170,11 +184,13 @@ fn run_pipeline<F>(
         for shard in out_rx {
             let Shard::Rows(seq, m, nnz) = shard;
             if !on_shard(seq, m, nnz) {
-                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                // Release pairs with the workers' Acquire loads (handoff:
+                // the flag publishes "the sink has failed").
+                stop.store(true, std::sync::atomic::Ordering::Release);
             }
             placed += 1;
         }
-        if !stop.load(std::sync::atomic::Ordering::Relaxed) {
+        if !stop.load(std::sync::atomic::Ordering::Acquire) {
             assert_eq!(placed, n_chunks, "pipeline lost shards: got {placed}/{n_chunks}");
         }
     });

@@ -360,7 +360,12 @@ impl FeatureMap for BbitMinwiseMap {
             // surgery through a one-row matrix. Allocates per row — that
             // is the point; only the bits must match the fused path.
             self.hasher.signature_batch_into(set, lanes);
+            // bbml-lint: allow(hot-path-transitive) reason: the legacy
+            // oracle route allocates per row by design — it exists only to
+            // pin the fused path's bits, never to be fast.
             let mut one = crate::hashing::bbit::BbitSignatureMatrix::new(self.hasher.k(), self.b);
+            // bbml-lint: allow(hot-path-transitive) reason: same oracle
+            // route — pack_lowest_bits builds a fresh lane vector on purpose.
             one.push_row(&crate::hashing::bbit::pack_lowest_bits(lanes, self.b), 0.0);
             words.clear();
             words.extend_from_slice(one.words());

@@ -21,6 +21,35 @@
 //! * [`client`] — [`ScoreClient`], the blocking client used by the
 //!   `score` verb, tests and `bench_serving`.
 //!
+//! # Concurrency contracts (enforced by bbml-lint R7/R8)
+//!
+//! **Atomics — gauge vs handoff.** Every atomic in the subsystem is one
+//! of two kinds, and the ordering follows from the kind, never from
+//! caution. A *gauge* is monitoring output no thread acts on (the
+//! [`ServeStats`] counters, the store reader's residency counters):
+//! `Ordering::Relaxed`, because nothing is published through it. A
+//! *handoff* publishes state another thread acts on (the server stop
+//! flags, [`ModelSlot`]'s swap counter): `Acquire` loads, `Release`
+//! stores, `AcqRel` read-modify-writes — the observer of the flag must
+//! also observe what the flagger wrote before raising it. `SeqCst`
+//! appears nowhere: where a handoff needs more than acquire/release
+//! pairing it should use a lock, not a stronger fence "to be safe".
+//! Declarations that deviate from the type-based default (numeric =
+//! gauge, `AtomicBool` = handoff) carry a
+//! `// bbml-lint: atomic(gauge|handoff)` annotation.
+//!
+//! **Lock order.** Nested lock acquisitions crate-wide follow the
+//! declared order `rx < inner < latency_us < cache < records` (acquire
+//! left before right; see `analysis::rules::LOCK_ORDER`). In practice
+//! the serving path holds at most one lock at a time — the worker queue
+//! mutex (`rx`) is released before a connection is served, the slot's
+//! `inner` write lock covers only the pointer swap, and the `latency_us`
+//! reservoir push happens after scoring with no other guard live. R7
+//! additionally rejects blocking calls (I/O, `recv`, `sleep`, `join`)
+//! while any guard is held; the single sanctioned exception — blocking
+//! on `rx.recv()` *is* the multi-consumer design — is suppressed with a
+//! reason at the site.
+//!
 //! [`ModelArtifact`]: crate::store::ModelArtifact
 //! [`predict_artifact`]: crate::coordinator::trainer::predict_artifact
 

@@ -66,6 +66,11 @@ impl ServedModel {
 /// itself — artifact loading and validation happen outside it.
 pub struct ModelSlot {
     inner: RwLock<Arc<ServedModel>>,
+    /// Completed-swap counter. Classified as a handoff, not a gauge: the
+    /// serving tests (and any operator polling `swap_count`) use "count
+    /// advanced" as proof the new model is visible, so the increment must
+    /// publish the swap it counts.
+    // bbml-lint: atomic(handoff)
     swaps: AtomicU64,
 }
 
@@ -89,9 +94,11 @@ impl ModelSlot {
         Arc::clone(&guard)
     }
 
-    /// Completed swaps so far (the `swap_count` gauge).
+    /// Completed swaps so far. Acquire pairs with the AcqRel increment in
+    /// [`ModelSlot::reload_from`]: an observer that sees count N also
+    /// sees the Nth published model.
     pub fn swap_count(&self) -> u64 {
-        self.swaps.load(Ordering::Relaxed)
+        self.swaps.load(Ordering::Acquire)
     }
 
     /// Load a new artifact and atomically publish it. `path` of `None`
@@ -130,7 +137,9 @@ impl ModelSlot {
             let mut guard = self.inner.write().unwrap_or_else(|e| e.into_inner());
             *guard = Arc::new(incoming);
         }
-        self.swaps.fetch_add(1, Ordering::Relaxed);
+        // AcqRel: the increment happens-after the pointer swap above and
+        // publishes it to whoever reads the count (see `swap_count`).
+        self.swaps.fetch_add(1, Ordering::AcqRel);
         Ok(crc)
     }
 

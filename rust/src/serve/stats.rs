@@ -8,6 +8,16 @@
 //! Gauges are emitted two ways from the same entries: the final
 //! `serve_report.json` (via [`report::write_json_object`]) and the
 //! `Stats` control frame's inline JSON.
+//!
+//! Every atomic here is a **gauge** in the R8 (`atomic-ordering`) sense
+//! and uses `Ordering::Relaxed` deliberately: no thread acts on these
+//! values — they only feed monitoring output, where a count that trails
+//! reality by a few operations is harmless. Nothing is published
+//! *through* them (the request/response data flows over sockets and the
+//! [`super::slot::ModelSlot`] lock, which carry their own ordering), so
+//! Acquire/Release here would cost fence traffic on every request and
+//! buy nothing. Contrast with the handoff atomics in [`super::server`]
+//! (stop flags) and [`super::slot`] (swap counter).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

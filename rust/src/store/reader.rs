@@ -225,7 +225,10 @@ impl std::ops::Deref for StreamedShard {
 
 impl Drop for StreamedShard {
     fn drop(&mut self) {
-        self.live_rows.fetch_sub(self.m.n(), Ordering::SeqCst);
+        // Relaxed: residency is a monitoring gauge — nothing is published
+        // through it, and the channel send/recv already orders the shard
+        // handoff itself.
+        self.live_rows.fetch_sub(self.m.n(), Ordering::Relaxed);
     }
 }
 
@@ -244,10 +247,15 @@ impl ShardStream {
         // Residency budget: `queue` shards total = (queue − 2) in the
         // channel + 1 decoded-in-hand (blocked on send) + 1 consumer-held.
         let (tx, rx) = sync_channel::<io::Result<StreamedShard>>(queue.max(3) - 2);
+        // Both counters are monitoring gauges (Relaxed throughout): the
+        // channel orders the shard handoff; these only feed the residency
+        // report read after the stream is drained.
         let live_rows = Arc::new(AtomicUsize::new(0));
         let peak_rows = Arc::new(AtomicUsize::new(0));
-        let (live, peak) = (live_rows.clone(), peak_rows.clone());
+        let reader_live_rows = live_rows.clone();
+        let reader_peak_rows = peak_rows.clone();
         let reader = std::thread::spawn(move || {
+            let (live_rows, peak_rows) = (reader_live_rows, reader_peak_rows);
             for path in paths {
                 let item = format::read_shard_file(&path).and_then(|(hdr, m)| {
                     if hdr.scheme != scheme || hdr.k != k || hdr.b != b {
@@ -271,11 +279,11 @@ impl ShardStream {
                         "{}: decoded shard does not re-encode to its own CRC",
                         path.display()
                     );
-                    let resident = live.fetch_add(m.n(), Ordering::SeqCst) + m.n();
-                    peak.fetch_max(resident, Ordering::SeqCst);
+                    let resident = live_rows.fetch_add(m.n(), Ordering::Relaxed) + m.n();
+                    peak_rows.fetch_max(resident, Ordering::Relaxed);
                     Ok(StreamedShard {
                         m,
-                        live_rows: live.clone(),
+                        live_rows: live_rows.clone(),
                     })
                 });
                 let stop = item.is_err();
@@ -296,12 +304,12 @@ impl ShardStream {
     /// (channel + reader-in-hand + consumer-held). Bounded by
     /// `max(queue, 3) · max_shard_rows`.
     pub fn peak_resident_rows(&self) -> usize {
-        self.peak_rows.load(Ordering::SeqCst)
+        self.peak_rows.load(Ordering::Relaxed)
     }
 
     /// Rows currently resident (decoded, not yet dropped by the consumer).
     pub fn resident_rows(&self) -> usize {
-        self.live_rows.load(Ordering::SeqCst)
+        self.live_rows.load(Ordering::Relaxed)
     }
 }
 

@@ -12,8 +12,9 @@ use std::path::Path;
 
 use bbml::analysis::rules::{
     R1_BUFFER_CONTRACT, R2_HOT_PATH_ALLOC, R3_NO_UNWRAP, R4_FORMAT_DRIFT, R5_ORACLE_RETENTION,
+    R6_HOT_PATH_TRANSITIVE, R7_LOCK_DISCIPLINE, R8_ATOMIC_ORDERING, R9_FLOAT_DETERMINISM,
 };
-use bbml::analysis::{lint_sources, lint_tree, LintReport};
+use bbml::analysis::{lint_sources, lint_sources_scoped, lint_tree, LintReport};
 
 fn src(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
     pairs
@@ -354,6 +355,35 @@ fn r4_flags_serve_protocol_without_doc_table_and_vice_versa() {
     assert!(rep.findings[0].message.contains("serve/protocol.rs"));
 }
 
+#[test]
+fn r4_flags_overlapping_rows_from_a_merged_table() {
+    // A second layout table that fails to restart at offset 0 gets parsed
+    // into the previous one: its rows claim already-assigned bytes and it
+    // contributes a second payload terminator. Both are drift.
+    let merged = format!(
+        "{R4_GOOD_DOCS}\
+         //!      6     4  tail             u32\n\
+         //!     10     …  payload\n"
+    );
+    let rep = lint_lib(&[
+        ("src/store/mod.rs", &merged),
+        ("src/store/format.rs", R4_GOOD_FORMAT),
+    ]);
+    assert_findings(&rep, &[(R4_FORMAT_DRIFT, 19), (R4_FORMAT_DRIFT, 20)]);
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("overlap")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings
+            .iter()
+            .any(|f| f.message.contains("second payload terminator")),
+        "{}",
+        rep.render_text()
+    );
+}
+
 // ---------------------------------------------------------------- R5 ----
 
 #[test]
@@ -405,6 +435,433 @@ fn pins_slow() {
         &src(&[("tests/integration_fix.rs", tests)]),
     );
     assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R6 ----
+
+#[test]
+fn r6_flags_transitive_alloc_chain_and_unresolved_callee() {
+    // `hot` itself is clean under R2; the allocation hides one call down
+    // (`helper -> grow`), and `dup()` is ambiguous crate-wide so the call
+    // graph refuses to resolve it.
+    let fix = "\
+// bbml-lint: hot-path
+pub fn hot(out: &mut Vec<u64>) {
+    helper(out);
+    dup();
+}
+pub fn helper(out: &mut Vec<u64>) {
+    grow(out);
+}
+pub fn grow(out: &mut Vec<u64>) {
+    let tmp: Vec<u64> = (0..4).collect();
+    out.extend(tmp);
+}
+";
+    let dup = "pub fn dup() {}\n";
+    let rep = lint_lib(&[("src/fix.rs", fix), ("src/a.rs", dup), ("src/b.rs", dup)]);
+    assert_findings(
+        &rep,
+        &[(R6_HOT_PATH_TRANSITIVE, 3), (R6_HOT_PATH_TRANSITIVE, 4)],
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("helper -> grow")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("ambiguous")),
+        "{}",
+        rep.render_text()
+    );
+}
+
+#[test]
+fn r6_accepts_alloc_free_chains_and_justified_amortized_allocs() {
+    // A reasoned allow on the allocating line stops the taint: a justified
+    // amortized allocation must not poison every transitive caller.
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "\
+// bbml-lint: hot-path
+pub fn hot(out: &mut Vec<u64>, row: &[u64]) {
+    helper(out, row);
+    amortized(out);
+}
+pub fn helper(out: &mut Vec<u64>, row: &[u64]) {
+    out.extend_from_slice(row);
+}
+pub fn amortized(out: &mut Vec<u64>) {
+    if out.capacity() == 0 {
+        // bbml-lint: allow(hot-path-alloc) reason: one-time seed built on
+        // first call; every later call reuses the buffer's capacity
+        let seed: Vec<u64> = (0..4).collect();
+        out.extend(seed);
+    }
+}
+",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+#[test]
+fn r6_resolves_chains_across_scopes_but_reports_on_lib_only() {
+    // The call graph spans every scope: a lib hot path reaching an
+    // allocating bench helper is a finding, anchored at the lib call site.
+    let lib = "\
+// bbml-lint: hot-path
+pub fn hot(out: &mut Vec<u64>) {
+    bench_helper(out);
+}
+";
+    let bench = "\
+pub fn bench_helper(out: &mut Vec<u64>) {
+    let tmp: Vec<u64> = (0..4).collect();
+    out.extend(tmp);
+}
+";
+    let rep = lint_sources_scoped(
+        &src(&[("src/fix.rs", lib)]),
+        &src(&[("benches/b.rs", bench)]),
+        &[],
+    );
+    assert_findings(&rep, &[(R6_HOT_PATH_TRANSITIVE, 3)]);
+    assert_eq!(rep.findings[0].file, "src/fix.rs");
+    assert!(rep.findings[0].message.contains("bench_helper"));
+}
+
+// ---------------------------------------------------------------- R7 ----
+
+#[test]
+fn r7_flags_blocking_double_acquire_order_violation_and_call_chains() {
+    let fix = "\
+use std::sync::Mutex;
+pub struct S {
+    pub rx: Mutex<u64>,
+    pub inner: Mutex<u64>,
+    pub cache: Mutex<u64>,
+}
+impl S {
+    pub fn bad_io(&self) -> u64 {
+        let g = self.inner.lock();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        1
+    }
+    pub fn bad_double(&self) -> u64 {
+        let a = self.cache.lock();
+        let b = self.cache.lock();
+        2
+    }
+    pub fn bad_order(&self) -> u64 {
+        let c = self.cache.lock();
+        let i = self.inner.lock();
+        3
+    }
+    pub fn bad_call(&self) -> u64 {
+        let g = self.rx.lock();
+        slow()
+    }
+}
+pub fn slow() -> u64 {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    4
+}
+";
+    let rep = lint_lib(&[("src/fix.rs", fix)]);
+    assert_findings(
+        &rep,
+        &[
+            (R7_LOCK_DISCIPLINE, 10), // thread::sleep under `inner`
+            (R7_LOCK_DISCIPLINE, 15), // double acquisition of `cache`
+            (R7_LOCK_DISCIPLINE, 20), // `inner` acquired under `cache`
+            (R7_LOCK_DISCIPLINE, 25), // call to blocking `slow` under `rx`
+        ],
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("self-deadlock")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("LOCK_ORDER")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings
+            .iter()
+            .any(|f| f.message.contains("`slow` (which blocks)")),
+        "{}",
+        rep.render_text()
+    );
+}
+
+#[test]
+fn r7_accepts_dropped_guards_and_declared_order() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "\
+use std::sync::Mutex;
+pub struct S {
+    pub inner: Mutex<u64>,
+    pub cache: Mutex<u64>,
+}
+impl S {
+    pub fn ok_drop_before_io(&self) -> u64 {
+        let g = self.inner.lock();
+        drop(g);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        1
+    }
+    pub fn ok_ordered(&self) -> u64 {
+        let i = self.inner.lock();
+        let c = self.cache.lock();
+        2
+    }
+}
+",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R8 ----
+
+#[test]
+fn r8_flags_strong_gauges_weak_handoffs_and_unclassified_receivers() {
+    let fix = "\
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+pub struct S {
+    hits: AtomicU64,
+    stop: AtomicBool,
+}
+impl S {
+    pub fn bad_gauge(&self) {
+        self.hits.fetch_add(1, Ordering::SeqCst);
+    }
+    pub fn bad_handoff(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+    pub fn bad_unknown(&self, flag: &AtomicBool) {
+        let alias = flag;
+        alias.store(true, Ordering::Release);
+    }
+}
+";
+    let rep = lint_lib(&[("src/fix.rs", fix)]);
+    assert_findings(
+        &rep,
+        &[
+            (R8_ATOMIC_ORDERING, 8),  // SeqCst on a gauge
+            (R8_ATOMIC_ORDERING, 11), // Relaxed load of a handoff
+            (R8_ATOMIC_ORDERING, 15), // unclassified `alias`
+        ],
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("must be Relaxed")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("expected Acquire")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings
+            .iter()
+            .any(|f| f.message.contains("no classified declaration")),
+        "{}",
+        rep.render_text()
+    );
+}
+
+#[test]
+fn r8_accepts_classified_orderings_and_gauge_override() {
+    // `seen` is an AtomicBool forced to gauge by annotation; `stop` keeps
+    // the handoff default and pairs Acquire/Release/AcqRel correctly
+    // (CAS: AcqRel success, Acquire failure).
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "\
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+pub struct S {
+    hits: AtomicU64,
+    stop: AtomicBool,
+    // bbml-lint: atomic(gauge)
+    seen: AtomicBool,
+}
+impl S {
+    pub fn ok(&self) -> bool {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.seen.store(true, Ordering::Relaxed);
+        if self.stop.load(Ordering::Acquire) {
+            return true;
+        }
+        self.stop.store(true, Ordering::Release);
+        let _ = self
+            .stop
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire);
+        self.stop.swap(true, Ordering::AcqRel)
+    }
+}
+",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// ---------------------------------------------------------------- R9 ----
+
+#[test]
+fn r9_flags_hash_iteration_partial_cmp_and_worker_reductions() {
+    // All three sites live in `SgdCore` methods, i.e. on the bit-identity
+    // reachability roots.
+    let fix = "\
+use std::collections::HashMap;
+pub struct SgdCore {
+    pub w: Vec<f32>,
+}
+impl SgdCore {
+    pub fn step(&mut self, grads: &HashMap<u32, f32>) -> f32 {
+        let mut total = 0.0f32;
+        for (_k, g) in grads.iter() {
+            total += 0.5 * *g;
+        }
+        total
+    }
+    pub fn rank(&self, xs: &mut Vec<f32>) {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    }
+    pub fn par_sum(&self) -> f32 {
+        let handle = std::thread::spawn(move || {
+            let mut local = 0.0f32;
+            local += 1.0;
+            local
+        });
+        0.0
+    }
+}
+";
+    let rep = lint_lib(&[("src/fix.rs", fix)]);
+    assert_findings(
+        &rep,
+        &[
+            (R9_FLOAT_DETERMINISM, 8),  // grads.iter() into `total +=`
+            (R9_FLOAT_DETERMINISM, 14), // partial_cmp sort
+            (R9_FLOAT_DETERMINISM, 19), // `local +=` inside spawn
+        ],
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("hash-ordered")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("total_cmp")),
+        "{}",
+        rep.render_text()
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("worker thread")),
+        "{}",
+        rep.render_text()
+    );
+}
+
+#[test]
+fn r9_accepts_sorted_views_and_total_cmp() {
+    // The sanctioned shapes: a BTreeMap (deterministic iteration order)
+    // and total_cmp for float sorts.
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "\
+use std::collections::BTreeMap;
+pub struct SgdCore {
+    pub w: Vec<f32>,
+}
+impl SgdCore {
+    pub fn step(&mut self, grads: &BTreeMap<u32, f32>) -> f32 {
+        let mut total = 0.0f32;
+        for (_k, g) in grads.iter() {
+            total += 0.5 * *g;
+        }
+        total
+    }
+    pub fn rank(&self, xs: &mut Vec<f32>) {
+        xs.sort_by(|a, b| a.total_cmp(b));
+    }
+}
+",
+    )]);
+    assert!(rep.is_clean(), "{}", rep.render_text());
+}
+
+// --------------------------------------------------- baseline & SARIF ----
+
+#[test]
+fn baseline_roundtrip_subtracts_lint_findings_and_survives_line_drift() {
+    let bad = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let rep = lint_lib(&[("src/fix.rs", bad)]);
+    assert_eq!(rep.findings.len(), 1);
+    let baseline = rep.to_json();
+
+    // Same finding, accepted by the baseline → clean exit.
+    let mut rep = lint_lib(&[("src/fix.rs", bad)]);
+    rep.apply_baseline(&baseline).expect("baseline parses");
+    assert!(rep.is_clean(), "{}", rep.render_text());
+    assert_eq!(rep.baselined, 1);
+
+    // The finding moved two lines down (unrelated edit): still baselined —
+    // matching is (file, rule, message), not line.
+    let drifted = format!("// a\n// b\n{bad}");
+    let mut rep = lint_lib(&[("src/fix.rs", &drifted)]);
+    rep.apply_baseline(&baseline).expect("baseline parses");
+    assert!(rep.is_clean(), "{}", rep.render_text());
+
+    // A second instance of the same violation is NEW and kept.
+    let doubled = "pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {\n    x.unwrap()\n        + y.unwrap()\n}\n";
+    let mut rep = lint_lib(&[("src/fix.rs", doubled)]);
+    rep.apply_baseline(&baseline).expect("baseline parses");
+    assert_eq!(rep.baselined, 1);
+    assert_eq!(rep.findings.len(), 1, "{}", rep.render_text());
+}
+
+#[test]
+fn sarif_document_carries_lint_findings_with_locations() {
+    let rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )]);
+    let sarif = rep.to_sarif();
+    assert!(sarif.contains("\"version\": \"2.1.0\""));
+    assert!(sarif.contains("\"ruleId\": \"no-unwrap\""));
+    assert!(sarif.contains("\"uri\": \"src/fix.rs\""));
+    assert!(sarif.contains("\"startLine\": 2"));
+    // The driver advertises the full rule catalog, including the v2 rules.
+    for id in [
+        "hot-path-transitive",
+        "lock-discipline",
+        "atomic-ordering",
+        "float-determinism",
+    ] {
+        assert!(sarif.contains(&format!("\"id\": \"{id}\"")), "missing {id}");
+    }
+}
+
+#[test]
+fn committed_baseline_is_empty_and_parses() {
+    // CI lints with `--baseline results/LINT_baseline.json`; the committed
+    // document must parse and accept nothing — the tree is clean, so any
+    // finding is new by definition.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/LINT_baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing {}: {e}", path.display()));
+    let mut rep = lint_lib(&[(
+        "src/fix.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )]);
+    rep.apply_baseline(&text).expect("committed baseline parses");
+    assert_eq!(rep.baselined, 0, "the committed baseline must stay empty");
+    assert_eq!(rep.findings.len(), 1);
 }
 
 // ------------------------------------------------------- suppressions ----
