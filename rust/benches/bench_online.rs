@@ -1,0 +1,115 @@
+//! Online-trainer benchmarks: what the streaming loop costs per row and
+//! what a snapshot publish costs per swap.
+//!
+//! Three questions, matching the subsystem's serving-loop shape:
+//!
+//! 1. **Ingest rows/s** — the full live-row path (drift gauges → encode →
+//!    SGD step → epoch-0 spool flush), the number an operator sizes a
+//!    producer against.
+//! 2. **Drift gauge overhead** — `observe_row` alone, to show the
+//!    Count-Min watch is a small slice of (1).
+//! 3. **Snapshot publish latency** — temp+rename artifact + pointer, the
+//!    stall between "trainer decides to publish" and "`serve --watch`
+//!    can see it" (benchkit records the full percentile set).
+//!
+//! Results land in `results/BENCH_online.{json,csv}`. Set
+//! `BBML_BENCH_FAST=1` for a CI-sized run.
+
+use bbml::benchkit::{black_box, Bencher};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::feature_map::{FeatureMapSpec, Scheme};
+use bbml::online::{DriftStats, OnlineOptions, OnlineSession, SnapshotPublisher};
+use bbml::coordinator::StreamAlgo;
+use bbml::rng::Xoshiro256;
+use bbml::solvers::LinearModel;
+use bbml::store::ModelArtifact;
+
+fn main() {
+    let mut b = Bencher::new();
+    let fast = std::env::var("BBML_BENCH_FAST").ok().as_deref() == Some("1");
+    let n_rows = if fast { 256 } else { 2048 };
+
+    // The paper's sweet spot (k=64, b=4) over a webspam-shaped stream.
+    let dim = 1u64 << 24;
+    let spec = FeatureMapSpec::new(Scheme::Bbit, dim, 64, 4, 42);
+    let cfg = SynthConfig {
+        n_docs: n_rows,
+        dim,
+        vocab: 20_000,
+        mean_len: 60,
+        ..Default::default()
+    };
+    let ds = generate_corpus(&cfg);
+    let rows: Vec<(f32, Vec<u64>)> = (0..ds.n())
+        .map(|i| (ds.label(i), ds.row(i).to_vec()))
+        .collect();
+    println!(
+        "workload: {} rows, avg nnz {:.1}, k=64 b=4, dim 2^24",
+        rows.len(),
+        ds.avg_nnz()
+    );
+
+    // --- 1. full ingest path (drift + encode + step + spool) -------------
+    // A declared epoch far longer than the bench ever feeds keeps the
+    // session in epoch 0 throughout, so every iteration pays the same
+    // live-row cost (including the spool's shard flushes).
+    let snap_dir = std::env::temp_dir().join(format!("bbml_bench_online_{}", std::process::id()));
+    std::fs::remove_dir_all(&snap_dir).ok();
+    let mut sess = OnlineSession::new(
+        spec.clone(),
+        OnlineOptions {
+            algo: StreamAlgo::Pegasos,
+            c: 1.0,
+            epochs: 1,
+            rows_per_epoch: 1 << 30,
+            average: false,
+            snapshot_every: 0,
+            chunk: 512,
+        },
+        &snap_dir,
+        None,
+    )
+    .unwrap();
+    b.bench_throughput("online/ingest k=64 b=4", rows.len() as u64, || {
+        for (label, row) in &rows {
+            sess.ingest(*label, row).unwrap();
+        }
+        black_box(sess.steps());
+    });
+
+    // --- 2. the drift gauges alone ---------------------------------------
+    let mut drift = DriftStats::new(dim, 1024);
+    b.bench_throughput("online/drift-observe", rows.len() as u64, || {
+        for (_, row) in &rows {
+            drift.observe_row(row);
+        }
+        black_box(drift.rows());
+    });
+
+    // --- 3. snapshot publish latency -------------------------------------
+    // The artifact a k=64/b=4 trainer publishes: 1024 weights + spec.
+    let n_weights = spec.layout().train_dim();
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let w: Vec<f32> = (0..n_weights).map(|_| rng.gen_f32() - 0.5).collect();
+    let artifact = ModelArtifact::new(
+        spec,
+        LinearModel {
+            w,
+            iters: 1,
+            objective: 0.0,
+        },
+    )
+    .unwrap();
+    let pub_dir = snap_dir.join("publish");
+    let mut publisher = SnapshotPublisher::new(&pub_dir, 0).unwrap();
+    b.bench("online/snapshot-publish", || {
+        let snap = publisher.publish(&artifact).unwrap();
+        black_box(snap.model_crc32);
+        // Keep the history directory bounded across iterations.
+        std::fs::remove_file(&snap.path).ok();
+    });
+
+    std::fs::remove_dir_all(&snap_dir).ok();
+    b.write_json("results/BENCH_online.json").unwrap();
+    b.write_csv("results/BENCH_online.csv").unwrap();
+}

@@ -7,6 +7,7 @@
 //! bbml train        [key=val ...]       hash + train + report accuracy
 //! bbml train-stream [key=val ...]       out-of-core train from a shard store
 //! bbml predict      [key=val ...]       score raw LIBSVM rows with a model
+//! bbml online-train [key=val ...]       streaming train + snapshot publish
 //! bbml serve        --model M --port P  long-lived scoring server (hot swap)
 //! bbml score        --port P [...]      score/reload/stats/shutdown a server
 //! bbml store-merge  SRC... --store DST  concatenate compatible shard stores
@@ -44,6 +45,7 @@ use crate::coordinator::trainer::{
 };
 use crate::data::synth::CorpusSampler;
 use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
+use crate::online::{DirSource, LineSource, OnlineOptions, OnlineSession, SocketSource};
 use crate::runtime::Runtime;
 use crate::serve::{ModelSlot, ScoreClient, ServeOptions, ServeStats, ServedModel};
 use crate::store::{merge_stores, ModelArtifact, SigShardStore};
@@ -74,6 +76,19 @@ COMMANDS:
                   (--model PATH, --data FILE.libsvm[.gz]; --scheme S
                   asserts the recorded scheme); writes
                   <out_dir>/predict_report.json + predict_scores.txt
+    online-train  streaming training that publishes snapshots for `serve`
+                  (--snapshot-dir DIR required; --rows N declares the epoch
+                  length, sizing λ = 1/(C·N) and the step budget; --from
+                  stdin|dir|socket picks the row source — dir reads
+                  `.libsvm` files dropped into --data DIR, socket ingests
+                  RowBatch frames on --port P; --snapshot-every N publishes
+                  every N rows, --epochs E replays the epoch-0 spool to E
+                  passes, --backend pegasos|logreg, --chunk rows per
+                  mini-batch; --checkpoint DIR + --resume PATH survive
+                  kill/restart bit-identically; --report PATH overrides
+                  <out_dir>/online_report.json). A finite stream with the
+                  same rows trains bit-identically to `train-stream
+                  --no-shuffle`
     serve         long-lived scoring server over a saved model artifact
                   (--model PATH, --port P; --workers N, --watch to
                   hot-swap on file mtime change). Scores are bit-identical
@@ -160,6 +175,16 @@ struct Args {
     stats: bool,
     /// Ask the server to drain and exit (`score --shutdown`).
     shutdown: bool,
+    /// Row source for `online-train` (stdin | dir | socket).
+    from: String,
+    /// Snapshot directory (`online-train --snapshot-dir`).
+    snapshot_dir: Option<String>,
+    /// Snapshot cadence in rows (`online-train`, 0 = final only).
+    snapshot_every: usize,
+    /// Declared epoch length N (`online-train --rows`).
+    rows: usize,
+    /// Report path override (`online-train --report`).
+    report: Option<String>,
 }
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
@@ -189,6 +214,11 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut reload: Option<String> = None;
     let mut stats = false;
     let mut shutdown = false;
+    let mut from = "stdin".to_string();
+    let mut snapshot_dir: Option<String> = None;
+    let mut snapshot_every = 0usize;
+    let mut rows = 0usize;
+    let mut report: Option<String> = None;
 
     let mut it = argv.iter().peekable();
     while let Some(arg) = it.next() {
@@ -337,6 +367,42 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
             }
             "--stats" => stats = true,
             "--shutdown" => shutdown = true,
+            "--from" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--from needs stdin|dir|socket"))?;
+                if !matches!(v.as_str(), "stdin" | "dir" | "socket") {
+                    anyhow::bail!("unknown row source '{v}' (want stdin|dir|socket)");
+                }
+                from = v.to_string();
+            }
+            "--snapshot-dir" => {
+                snapshot_dir = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--snapshot-dir needs a directory"))?
+                        .to_string(),
+                );
+            }
+            "--snapshot-every" => {
+                snapshot_every = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--snapshot-every needs a usize"))?;
+            }
+            "--rows" => {
+                rows = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .filter(|&n: &usize| n > 0)
+                    .ok_or_else(|| anyhow::anyhow!("--rows needs a positive usize"))?;
+            }
+            "--report" => {
+                report = Some(
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("--report needs a path"))?
+                        .to_string(),
+                );
+            }
             other if other.contains('=') && !command.is_empty() => {
                 config.apply_overrides(&[other.to_string()])?;
             }
@@ -376,6 +442,11 @@ fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
         reload,
         stats,
         shutdown,
+        from,
+        snapshot_dir,
+        snapshot_every,
+        rows,
+        report,
     })
 }
 
@@ -708,6 +779,199 @@ pub fn run_with(argv: &[String]) -> anyhow::Result<()> {
                 scores_path.display(),
                 report_path.display()
             );
+            Ok(())
+        }
+        "online-train" => {
+            let snapshot_dir = args.snapshot_dir.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "online-train needs --snapshot-dir DIR (snapshots, the \
+                     latest.model pointer and the epoch-0 spool live there)"
+                )
+            })?;
+            let snapshot_dir = Path::new(snapshot_dir);
+            let ckpt_dir = args.checkpoint.as_ref().map(Path::new);
+            let resumed = args.resume.is_some();
+            let mut sess = match &args.resume {
+                Some(p) => {
+                    // Accept a checkpoint file or a checkpoint dir (then
+                    // the freshest copy inside it).
+                    let mut path = PathBuf::from(p);
+                    if path.is_dir() {
+                        path = OnlineSession::checkpoint_latest(&path);
+                    }
+                    let sess = OnlineSession::resume(&path, snapshot_dir, ckpt_dir)?;
+                    println!(
+                        "resumed from {} (epoch {}/{}, {} steps, next snapshot \
+                         seq {}); checkpointed training options apply",
+                        path.display(),
+                        sess.epoch(),
+                        sess.options().epochs,
+                        sess.steps(),
+                        sess.snapshots_published()
+                    );
+                    sess
+                }
+                None => {
+                    if args.rows == 0 {
+                        anyhow::bail!(
+                            "online-train needs --rows N, the declared epoch \
+                             length: it sizes λ = 1/(C·N) and the η_t step \
+                             budget, which is what makes a replayed stream \
+                             bit-identical to the batch trainer"
+                        );
+                    }
+                    // Same solver name table as train-stream: the default
+                    // backend (svm) streams via Pegasos.
+                    if args.backend == Backend::SvmDcd {
+                        println!(
+                            "note: online SVM trains via Pegasos SGD \
+                             (dual coordinate descent needs resident data)"
+                        );
+                    }
+                    let algo = args.backend.stream_algo().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "online-train supports --backend pegasos|logreg, got {:?}",
+                            args.backend
+                        )
+                    })?;
+                    OnlineSession::new(
+                        args.map_spec(),
+                        OnlineOptions {
+                            algo,
+                            c: args.c,
+                            epochs: args.epochs,
+                            rows_per_epoch: args.rows,
+                            average: true,
+                            snapshot_every: args.snapshot_every,
+                            chunk: args.chunk.unwrap_or(512),
+                        },
+                        snapshot_dir,
+                        ckpt_dir,
+                    )?
+                }
+            };
+            let dim = sess.spec().dim;
+            let out = match args.from.as_str() {
+                "stdin" => {
+                    let stdin = std::io::stdin();
+                    let mut src = LineSource::new(stdin.lock(), dim);
+                    sess.run(&mut src)?
+                }
+                "dir" => {
+                    let dir = args.data.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("--from dir needs --data DIR (the drop directory)")
+                    })?;
+                    let mut src = DirSource::new(
+                        Path::new(dir),
+                        dim,
+                        std::time::Duration::from_millis(200),
+                        std::time::Duration::from_secs(5),
+                    )?;
+                    sess.run(&mut src)?
+                }
+                "socket" => {
+                    let port = args
+                        .port
+                        .ok_or_else(|| anyhow::anyhow!("--from socket needs --port P"))?;
+                    let mut src = SocketSource::bind(port, dim)?;
+                    println!(
+                        "ingesting RowBatch frames on 127.0.0.1:{} \
+                         (a Shutdown frame ends the stream)",
+                        src.local_port()?
+                    );
+                    // Flush so producer scripts polling our (possibly
+                    // piped) stdout see the readiness line.
+                    std::io::Write::flush(&mut std::io::stdout())?;
+                    sess.run(&mut src)?
+                }
+                // parse_args validated; unreachable but total.
+                other => anyhow::bail!("unknown row source '{other}'"),
+            };
+            let secs = out.train_time.as_secs_f64();
+            let rows_per_sec = out.rows_ingested as f64 / secs.max(1e-9);
+            let drift = sess.drift();
+            println!(
+                "online: ingested {} rows ({rows_per_sec:.0} rows/s), stepped {} \
+                 (epoch {}/{} of {} rows), {} snapshots -> {} (completed={})",
+                out.rows_ingested,
+                out.rows_stepped,
+                out.epochs_done,
+                sess.options().epochs,
+                sess.options().rows_per_epoch,
+                out.snapshots_published,
+                snapshot_dir.display(),
+                out.completed
+            );
+            println!(
+                "drift: {} rows watched, new-feature rate {:.4}, mass shift \
+                 {:.4}, domain high-water {} of {}",
+                drift.rows(),
+                drift.new_feature_rate(),
+                drift.mass_shift(),
+                drift.domain_hiwater(),
+                dim
+            );
+            if let Some(snap) = &out.last_snapshot {
+                println!(
+                    "published: {} (seq {}; `serve --watch --model {}` follows it)",
+                    snap.path.display(),
+                    snap.seq,
+                    snapshot_dir.join(crate::online::POINTER_NAME).display()
+                );
+            }
+            let report_path = args
+                .report
+                .as_ref()
+                .map(PathBuf::from)
+                .unwrap_or_else(|| Path::new(&cfg.out_dir).join("online_report.json"));
+            if let Some(dir) = report_path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            report::write_json_object(
+                &report_path,
+                &[
+                    ("source", report::json_string(&args.from)),
+                    ("backend", report::json_string(sess.options().algo.name())),
+                    ("scheme", report::json_string(sess.spec().scheme.name())),
+                    (
+                        "snapshot_dir",
+                        report::json_string(&snapshot_dir.display().to_string()),
+                    ),
+                    ("rows_per_epoch", sess.options().rows_per_epoch.to_string()),
+                    ("epochs", sess.options().epochs.to_string()),
+                    ("c", format!("{}", sess.options().c)),
+                    ("rows_ingested", out.rows_ingested.to_string()),
+                    ("rows_stepped", out.rows_stepped.to_string()),
+                    ("epochs_done", out.epochs_done.to_string()),
+                    ("completed", out.completed.to_string()),
+                    ("resumed", resumed.to_string()),
+                    ("snapshots_published", out.snapshots_published.to_string()),
+                    (
+                        "last_snapshot_seq",
+                        out.last_snapshot
+                            .as_ref()
+                            .map(|s| s.seq.to_string())
+                            .unwrap_or_else(|| "-1".to_string()),
+                    ),
+                    ("rows_per_sec", format!("{rows_per_sec:.2}")),
+                    ("drift_rows", drift.rows().to_string()),
+                    (
+                        "drift_new_feature_rate",
+                        format!("{:.6}", drift.new_feature_rate()),
+                    ),
+                    ("drift_mass_shift", format!("{:.6}", drift.mass_shift())),
+                    ("drift_domain_hiwater", drift.domain_hiwater().to_string()),
+                    (
+                        "weights_crc32",
+                        report::weights_crc32(&out.model.w).to_string(),
+                    ),
+                    ("objective", format!("{:.6}", out.model.objective)),
+                    ("train_secs", format!("{secs:.6}")),
+                ],
+            )?;
+            println!("report: {}", report_path.display());
             Ok(())
         }
         "serve" => {
@@ -1180,6 +1444,103 @@ mod tests {
         // score without --port, or with no action, is a usage error.
         assert!(run_with(&strs(&["score"])).is_err());
         assert!(run_with(&strs(&["score", "--port", "1"])).is_err());
+    }
+
+    #[test]
+    fn parse_online_train_flags() {
+        let a = parse_args(&strs(&[
+            "online-train",
+            "--from",
+            "dir",
+            "--snapshot-dir",
+            "/tmp/snaps",
+            "--snapshot-every",
+            "100",
+            "--rows",
+            "5000",
+            "--report",
+            "/tmp/r.json",
+            "--data",
+            "/tmp/drop",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "online-train");
+        assert_eq!(a.from, "dir");
+        assert_eq!(a.snapshot_dir.as_deref(), Some("/tmp/snaps"));
+        assert_eq!(a.snapshot_every, 100);
+        assert_eq!(a.rows, 5000);
+        assert_eq!(a.report.as_deref(), Some("/tmp/r.json"));
+        // Defaults: stdin source, final-only snapshots, no epoch length.
+        let d = parse_args(&strs(&["online-train"])).unwrap();
+        assert_eq!(d.from, "stdin");
+        assert_eq!((d.snapshot_every, d.rows), (0, 0));
+        // Bad values are parse errors.
+        assert!(parse_args(&strs(&["online-train", "--from", "carrier-pigeon"])).is_err());
+        assert!(parse_args(&strs(&["online-train", "--rows", "0"])).is_err());
+    }
+
+    #[test]
+    fn online_train_requires_flags() {
+        // No --snapshot-dir is a usage error.
+        assert!(run_with(&strs(&["online-train"])).is_err());
+        // --snapshot-dir but no --rows (fresh session) is a usage error.
+        assert!(run_with(&strs(&[
+            "online-train",
+            "--snapshot-dir",
+            "/tmp/bbml_cli_online_norows",
+        ]))
+        .is_err());
+        // --from dir without --data; --from socket without --port. Both
+        // fail before any row is read (--rows present so options pass).
+        assert!(run_with(&strs(&[
+            "online-train",
+            "--snapshot-dir",
+            "/tmp/bbml_cli_online_nodata",
+            "--rows",
+            "10",
+            "--from",
+            "dir",
+        ]))
+        .is_err());
+        assert!(run_with(&strs(&[
+            "online-train",
+            "--snapshot-dir",
+            "/tmp/bbml_cli_online_noport",
+            "--rows",
+            "10",
+            "--from",
+            "socket",
+        ]))
+        .is_err());
+        // PJRT backends have no streaming twin.
+        assert!(run_with(&strs(&[
+            "online-train",
+            "--snapshot-dir",
+            "/tmp/bbml_cli_online_pjrt",
+            "--rows",
+            "10",
+            "--backend",
+            "pjrt_logreg",
+        ]))
+        .is_err());
+        // Resume from a missing checkpoint fails at load.
+        assert!(run_with(&strs(&[
+            "online-train",
+            "--snapshot-dir",
+            "/tmp/bbml_cli_online_resume",
+            "--resume",
+            "/no/such.ckpt",
+        ]))
+        .is_err());
+        for d in [
+            "/tmp/bbml_cli_online_norows",
+            "/tmp/bbml_cli_online_nodata",
+            "/tmp/bbml_cli_online_noport",
+            "/tmp/bbml_cli_online_pjrt",
+            "/tmp/bbml_cli_online_resume",
+        ] {
+            std::fs::remove_dir_all(d).ok();
+        }
     }
 
     #[test]

@@ -124,7 +124,9 @@ fn step_shard<Ft: Features>(
 }
 
 /// Per-row loss term of the streamed objective (hinge or stable log-loss).
-fn row_loss<Ft: Features>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
+/// `pub(crate)` so the online trainer's objective pass is literally this
+/// code — same call, same bits as the batch session's.
+pub(crate) fn row_loss<Ft: Features>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> f64 {
     let m = feats.label(i) as f64 * feats.dot(i, w);
     match algo {
         StreamAlgo::Pegasos => (1.0 - m).max(0.0),
@@ -138,12 +140,12 @@ fn row_loss<Ft: Features>(algo: StreamAlgo, feats: &Ft, i: usize, w: &[f32]) -> 
     }
 }
 
-fn reg_term(lambda: f64, w: &[f32]) -> f64 {
+pub(crate) fn reg_term(lambda: f64, w: &[f32]) -> f64 {
     0.5 * lambda * w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
 }
 
 /// `λ/2·‖w‖² + loss_sum/n` — the objective assembled from one extra pass.
-fn objective(reg: f64, loss_sum: f64, n: usize) -> f64 {
+pub(crate) fn objective(reg: f64, loss_sum: f64, n: usize) -> f64 {
     reg + loss_sum / n as f64
 }
 

@@ -51,7 +51,13 @@ impl From<io::Error> for LibsvmError {
     }
 }
 
-fn parse_line(line: &str, lineno: usize) -> Result<Option<(f32, Vec<u64>)>, LibsvmError> {
+/// Parse one LIBSVM line (shared with the online row sources): `Ok(None)`
+/// for blank/comment lines, otherwise the normalized ±1 label and the
+/// 0-based indices of the nonzero features, in file order.
+pub(crate) fn parse_line(
+    line: &str,
+    lineno: usize,
+) -> Result<Option<(f32, Vec<u64>)>, LibsvmError> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {
         return Ok(None);

@@ -37,6 +37,10 @@
 //!   server over a saved [`store::ModelArtifact`] with a length-prefixed
 //!   binary protocol, atomic hot model swap, graceful shutdown and
 //!   p50/p95/p99 serving gauges (`serve` / `score` CLI verbs).
+//! * [`online`] — streaming training (`online-train`): row sources
+//!   (stdin / drop-dir / socket), mini-batch SGD with the batch trainer's
+//!   exact float-op sequence, Count-Min drift gauges, and atomic snapshot
+//!   publication that `serve --watch` hot-swaps in.
 //! * [`experiments`] — one runner per figure/table of the paper's
 //!   evaluation; regenerates every plot series as CSV.
 //! * [`benchkit`] — a minimal timing-statistics harness used by the cargo
@@ -52,6 +56,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod hashing;
+pub mod online;
 pub mod proptest_mini;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,505 @@
+//! Streaming drift statistics for the online trainer: a Count-Min sketch
+//! with *conservative update* over the raw feature stream.
+//!
+//! The companion paper to the hashing line ("b-Bit Minwise Hashing in
+//! Practice: Large-Scale Batch and Online Learning", arXiv:1205.2958)
+//! moves training onto unbounded streams — where the input distribution
+//! is no longer a fixed corpus property but something that moves under
+//! the model. [`DriftStats`] watches the raw index stream with two
+//! fixed-memory [`CountMin`] sketches: a *reference* frozen after a
+//! warmup prefix and a *current* one that keeps absorbing rows. From the
+//! pair it derives the gauges the online report publishes:
+//!
+//! * **new-feature rate** — the fraction of index occurrences whose
+//!   pre-update estimate was zero (never seen before, up to sketch
+//!   collisions, which only ever under-report novelty);
+//! * **mass shift** — the fraction of post-warmup occurrences landing on
+//!   indices the frozen reference never saw: input mass moving into
+//!   regions the early stream (and any model warmed on it) had no
+//!   evidence for;
+//! * **domain high-water** — the largest raw index observed, with a
+//!   one-shot logged advisory once it comes within 10% of the encoder's
+//!   recorded input domain `dim` (rows at or beyond `dim` are rejected
+//!   by every source, so a creeping vocabulary is operator-actionable
+//!   *before* rows start bouncing).
+//!
+//! *Conservative update* (Estan & Varghese) only raises the counters
+//! that are currently pinned at the row minimum, so for any stream
+//! `true count ≤ CU estimate ≤ plain-CM estimate` — strictly less
+//! overestimation for the same memory. The plain-update path is retained
+//! as [`CountMin::observe_plain`], the upper-bound reference the
+//! property tests sandwich the conservative path against.
+
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::store::format::ByteReader;
+
+/// Default sketch depth (hash rows) for [`DriftStats`].
+pub const DRIFT_DEPTH: usize = 4;
+/// Default sketch width (counters per row) for [`DriftStats`].
+pub const DRIFT_WIDTH: usize = 1 << 12;
+/// Fraction of the recorded input domain at which the high-water
+/// advisory fires.
+pub const DOMAIN_ADVISORY_FRACTION: f64 = 0.9;
+
+/// SplitMix64 finalizer — the per-row index mixer. Distinct rows get
+/// distinct pre-mix salts, so one multiply-xorshift chain per lookup.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Row salt for hash row `j` — a fixed, seedless schedule so a sketch
+/// rebuilt from checkpointed counters hashes identically by construction.
+#[inline]
+fn row_salt(j: usize) -> u64 {
+    mix64(0xa076_1d64_78bd_642f ^ (j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+/// A Count-Min sketch over `u64` items with saturating `u32` counters.
+///
+/// `depth` independent hash rows of `width` counters each (`width` is
+/// rounded up to a power of two so the bucket map is a mask). Updates are
+/// *conservative* ([`CountMin::observe`]) unless the plain-CM reference
+/// path ([`CountMin::observe_plain`]) is asked for explicitly.
+#[derive(Clone, Debug)]
+pub struct CountMin {
+    depth: usize,
+    /// `width - 1`; width is a power of two.
+    mask: u64,
+    /// Row-major `depth × width` counters.
+    counters: Vec<u32>,
+}
+
+impl CountMin {
+    /// A zeroed sketch. `width` is rounded up to the next power of two;
+    /// both dimensions must be nonzero.
+    pub fn new(depth: usize, width: usize) -> Self {
+        assert!(depth >= 1, "sketch depth must be >= 1");
+        assert!(width >= 1, "sketch width must be >= 1");
+        let width = width.next_power_of_two();
+        Self {
+            depth,
+            mask: width as u64 - 1,
+            counters: vec![0u32; depth * width],
+        }
+    }
+
+    /// Hash rows.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Counters per hash row (a power of two).
+    pub fn width(&self) -> usize {
+        (self.mask + 1) as usize
+    }
+
+    #[inline]
+    fn bucket(&self, j: usize, item: u64) -> usize {
+        let w = (self.mask + 1) as usize;
+        j * w + (mix64(item ^ row_salt(j)) & self.mask) as usize
+    }
+
+    /// Point estimate: the minimum counter across rows. Never
+    /// underestimates the true count (each counter only ever absorbs
+    /// additional items), so `estimate(x) == 0` proves `x` was never
+    /// observed.
+    pub fn estimate(&self, item: u64) -> u32 {
+        let mut est = u32::MAX;
+        for j in 0..self.depth {
+            est = est.min(self.counters[self.bucket(j, item)]);
+        }
+        est
+    }
+
+    /// Count one occurrence with **conservative update**: only counters
+    /// sitting below `estimate + 1` are raised to it, so collisions on
+    /// non-minimal rows stop inflating. Returns the **pre-update**
+    /// estimate (zero ⇒ first sighting, up to collisions).
+    pub fn observe(&mut self, item: u64) -> u32 {
+        let est = self.estimate(item);
+        let target = est.saturating_add(1);
+        for j in 0..self.depth {
+            let b = self.bucket(j, item);
+            if self.counters[b] < target {
+                self.counters[b] = target;
+            }
+        }
+        est
+    }
+
+    /// Count one occurrence with the **plain** Count-Min update (every
+    /// row's counter increments). Returns the pre-update estimate. For
+    /// identical streams into identically-shaped sketches, plain
+    /// estimates dominate conservative ones — the sandwich
+    /// `true ≤ conservative ≤ plain` the property tests pin.
+    // bbml-lint: oracle
+    pub fn observe_plain(&mut self, item: u64) -> u32 {
+        let est = self.estimate(item);
+        for j in 0..self.depth {
+            let b = self.bucket(j, item);
+            self.counters[b] = self.counters[b].saturating_add(1);
+        }
+        est
+    }
+
+    /// Serialize shape + counters (checkpoint payload fragment).
+    pub(crate) fn encode_state(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.depth as u64).to_le_bytes());
+        out.extend_from_slice(&(self.width() as u64).to_le_bytes());
+        for &c in &self.counters {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+
+    /// Rebuild a sketch from [`CountMin::encode_state`] bytes.
+    pub(crate) fn decode_state(r: &mut ByteReader<'_>) -> io::Result<Self> {
+        let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+        let depth = r.usize()?;
+        let width = r.usize()?;
+        if depth == 0 || width == 0 || !width.is_power_of_two() {
+            return Err(bad(format!(
+                "drift sketch shape {depth}×{width} is invalid"
+            )));
+        }
+        let mut counters = vec![0u32; depth * width];
+        for c in counters.iter_mut() {
+            *c = r.u32()?;
+        }
+        Ok(Self {
+            depth,
+            mask: width as u64 - 1,
+            counters,
+        })
+    }
+}
+
+/// Streaming drift gauges over the raw (pre-encode) index stream.
+///
+/// Single-writer by design — the online trainer owns it mutably — but the
+/// gauges are atomics so the final report (and any future stats endpoint)
+/// can read a coherent-enough snapshot without a lock. All of them are
+/// monotone counters read for ratios; none synchronizes any other data.
+pub struct DriftStats {
+    /// The encoder's recorded input domain (`FeatureMapSpec::dim`).
+    dim: u64,
+    /// Rows after which the reference sketch freezes.
+    warmup_rows: u64,
+    /// Set once the reference snapshot is taken.
+    frozen: bool,
+    /// One-shot latch for the domain advisory log line.
+    advisory_logged: bool,
+    /// Frozen warmup-prefix sketch (equal to `current` until the freeze).
+    reference: CountMin,
+    /// Live sketch, absorbing every row.
+    current: CountMin,
+    /// Rows observed.
+    // bbml-lint: atomic(gauge)
+    drift_rows: AtomicU64,
+    /// Index occurrences observed (sum of row nnz).
+    // bbml-lint: atomic(gauge)
+    drift_feats: AtomicU64,
+    /// Occurrences whose pre-update estimate was zero (first sightings).
+    // bbml-lint: atomic(gauge)
+    drift_new: AtomicU64,
+    /// Post-freeze occurrences (denominator of the mass-shift ratio).
+    // bbml-lint: atomic(gauge)
+    drift_post: AtomicU64,
+    /// Post-freeze occurrences on indices the reference never saw.
+    // bbml-lint: atomic(gauge)
+    drift_shifted: AtomicU64,
+    /// `max observed index + 1` — the observed input-domain high-water.
+    // bbml-lint: atomic(gauge)
+    drift_hiwater: AtomicU64,
+}
+
+impl DriftStats {
+    /// Fresh stats for an encoder domain of `dim`, freezing the reference
+    /// sketch after `warmup_rows` rows (sketches use the default
+    /// `DRIFT_DEPTH × DRIFT_WIDTH` shape).
+    pub fn new(dim: u64, warmup_rows: u64) -> Self {
+        Self {
+            dim,
+            warmup_rows,
+            frozen: false,
+            advisory_logged: false,
+            reference: CountMin::new(DRIFT_DEPTH, DRIFT_WIDTH),
+            current: CountMin::new(DRIFT_DEPTH, DRIFT_WIDTH),
+            drift_rows: AtomicU64::new(0),
+            drift_feats: AtomicU64::new(0),
+            drift_new: AtomicU64::new(0),
+            drift_post: AtomicU64::new(0),
+            drift_shifted: AtomicU64::new(0),
+            drift_hiwater: AtomicU64::new(0),
+        }
+    }
+
+    /// Absorb one validated sparse row (sorted raw indices). Not on the
+    /// encode hot path — the trainer feeds the sketch alongside, never
+    /// inside, the per-row encode/step functions.
+    pub fn observe_row(&mut self, row: &[u64]) {
+        for &idx in row {
+            let before = self.current.observe(idx);
+            self.drift_feats.fetch_add(1, Ordering::Relaxed);
+            if before == 0 {
+                self.drift_new.fetch_add(1, Ordering::Relaxed);
+            }
+            if self.frozen {
+                self.drift_post.fetch_add(1, Ordering::Relaxed);
+                if self.reference.estimate(idx) == 0 {
+                    self.drift_shifted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            if idx + 1 > self.drift_hiwater.load(Ordering::Relaxed) {
+                self.drift_hiwater.store(idx + 1, Ordering::Relaxed);
+            }
+        }
+        let rows = self.drift_rows.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.frozen && rows >= self.warmup_rows {
+            self.reference = self.current.clone();
+            self.frozen = true;
+        }
+        if !self.advisory_logged {
+            let hiwater = self.drift_hiwater.load(Ordering::Relaxed);
+            if (hiwater as f64) >= DOMAIN_ADVISORY_FRACTION * self.dim as f64 {
+                eprintln!(
+                    "online-train: drift advisory — observed feature index \
+                     high-water {} is within {:.0}% of the encoder's recorded \
+                     input domain {}; indices at or beyond the domain are \
+                     rejected, consider re-hashing with a larger dim",
+                    hiwater,
+                    (1.0 - DOMAIN_ADVISORY_FRACTION) * 100.0,
+                    self.dim
+                );
+                self.advisory_logged = true;
+            }
+        }
+    }
+
+    /// Rows observed so far.
+    pub fn rows(&self) -> u64 {
+        self.drift_rows.load(Ordering::Relaxed)
+    }
+
+    /// Index occurrences observed so far.
+    pub fn occurrences(&self) -> u64 {
+        self.drift_feats.load(Ordering::Relaxed)
+    }
+
+    /// First-sighting occurrences (pre-update estimate was zero).
+    pub fn new_features(&self) -> u64 {
+        self.drift_new.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of all occurrences that were first sightings.
+    pub fn new_feature_rate(&self) -> f64 {
+        ratio(self.new_features(), self.occurrences())
+    }
+
+    /// Post-freeze occurrences on indices the frozen reference never saw.
+    pub fn shifted(&self) -> u64 {
+        self.drift_shifted.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of post-freeze mass on reference-unseen indices — the
+    /// mass-shift gauge (0.0 until the reference freezes).
+    pub fn mass_shift(&self) -> f64 {
+        ratio(self.shifted(), self.drift_post.load(Ordering::Relaxed))
+    }
+
+    /// `max observed index + 1` — the observed input-domain high-water.
+    pub fn domain_hiwater(&self) -> u64 {
+        self.drift_hiwater.load(Ordering::Relaxed)
+    }
+
+    /// Whether the reference sketch has frozen yet.
+    pub fn reference_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Serialize the complete drift state (checkpoint payload fragment).
+    pub(crate) fn encode_state(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.dim.to_le_bytes());
+        out.extend_from_slice(&self.warmup_rows.to_le_bytes());
+        out.push(self.frozen as u8);
+        out.push(self.advisory_logged as u8);
+        for g in [
+            &self.drift_rows,
+            &self.drift_feats,
+            &self.drift_new,
+            &self.drift_post,
+            &self.drift_shifted,
+            &self.drift_hiwater,
+        ] {
+            out.extend_from_slice(&g.load(Ordering::Relaxed).to_le_bytes());
+        }
+        self.reference.encode_state(out);
+        self.current.encode_state(out);
+    }
+
+    /// Rebuild drift state from [`DriftStats::encode_state`] bytes.
+    pub(crate) fn decode_state(r: &mut ByteReader<'_>) -> io::Result<Self> {
+        let dim = r.u64()?;
+        let warmup_rows = r.u64()?;
+        let frozen = r.u8()? != 0;
+        let advisory_logged = r.u8()? != 0;
+        let rows = r.u64()?;
+        let feats = r.u64()?;
+        let new = r.u64()?;
+        let post = r.u64()?;
+        let shifted = r.u64()?;
+        let hiwater = r.u64()?;
+        let reference = CountMin::decode_state(r)?;
+        let current = CountMin::decode_state(r)?;
+        Ok(Self {
+            dim,
+            warmup_rows,
+            frozen,
+            advisory_logged,
+            reference,
+            current,
+            drift_rows: AtomicU64::new(rows),
+            drift_feats: AtomicU64::new(feats),
+            drift_new: AtomicU64::new(new),
+            drift_post: AtomicU64::new(post),
+            drift_shifted: AtomicU64::new(shifted),
+            drift_hiwater: AtomicU64::new(hiwater),
+        })
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use std::collections::HashMap;
+
+    #[test]
+    fn unseen_items_estimate_zero_and_singletons_count() {
+        let mut cm = CountMin::new(4, 64);
+        assert_eq!(cm.estimate(42), 0);
+        assert_eq!(cm.observe(42), 0);
+        assert!(cm.estimate(42) >= 1);
+        // A second observation reports the prior estimate.
+        assert!(cm.observe(42) >= 1);
+    }
+
+    #[test]
+    fn conservative_update_is_sandwiched_between_truth_and_plain_cm() {
+        // A small width forces collisions so the sandwich is non-trivial.
+        let mut cu = CountMin::new(3, 32);
+        let mut plain = CountMin::new(3, 32);
+        let mut truth: HashMap<u64, u32> = HashMap::new();
+        let mut rng = Xoshiro256::seed_from_u64(0xD41F7);
+        for _ in 0..4000 {
+            // Zipf-ish: small ids dominate, with a heavy tail of new ids.
+            let item = if rng.gen_f32() < 0.7 {
+                (rng.next_u32() % 20) as u64
+            } else {
+                (rng.next_u32() % 5000) as u64
+            };
+            cu.observe(item);
+            plain.observe_plain(item);
+            *truth.entry(item).or_insert(0) += 1;
+        }
+        let mut some_overestimate = false;
+        for (&item, &count) in &truth {
+            let e_cu = cu.estimate(item);
+            let e_plain = plain.estimate(item);
+            assert!(e_cu >= count, "CU underestimated {item}: {e_cu} < {count}");
+            assert!(
+                e_cu <= e_plain,
+                "CU {e_cu} above plain {e_plain} for {item}"
+            );
+            some_overestimate |= e_plain > count;
+        }
+        assert!(some_overestimate, "width 32 over 4000 draws must collide");
+    }
+
+    #[test]
+    fn width_rounds_to_power_of_two_and_state_roundtrips() {
+        let mut cm = CountMin::new(2, 48);
+        assert_eq!(cm.width(), 64);
+        for i in 0..100u64 {
+            cm.observe(i % 7);
+        }
+        let mut bytes = Vec::new();
+        cm.encode_state(&mut bytes);
+        let mut r = ByteReader::new(&bytes);
+        let back = CountMin::decode_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.depth(), cm.depth());
+        assert_eq!(back.width(), cm.width());
+        for i in 0..7u64 {
+            assert_eq!(back.estimate(i), cm.estimate(i));
+        }
+    }
+
+    #[test]
+    fn drift_gauges_track_new_mass_and_hiwater() {
+        let mut d = DriftStats::new(1000, 2);
+        // Warmup: two rows over a small "old" vocabulary.
+        d.observe_row(&[1, 2, 3]);
+        d.observe_row(&[1, 2, 4]);
+        assert!(d.reference_frozen());
+        assert_eq!(d.rows(), 2);
+        assert_eq!(d.occurrences(), 6);
+        // 1, 2, 3, 4 were each new once ⇒ 4 first sightings.
+        assert_eq!(d.new_features(), 4);
+        assert_eq!(d.mass_shift(), 0.0);
+
+        // Post-freeze row: half old mass, half brand-new mass.
+        d.observe_row(&[1, 2, 700, 701]);
+        assert_eq!(d.shifted(), 2);
+        assert!((d.mass_shift() - 0.5).abs() < 1e-12);
+        assert!(d.new_feature_rate() > 0.0);
+        assert_eq!(d.domain_hiwater(), 702);
+    }
+
+    #[test]
+    fn drift_state_roundtrips_bit_exactly() {
+        let mut d = DriftStats::new(512, 1);
+        d.observe_row(&[5, 9]);
+        d.observe_row(&[5, 300]);
+        let mut bytes = Vec::new();
+        d.encode_state(&mut bytes);
+        let mut r = ByteReader::new(&bytes);
+        let back = DriftStats::decode_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.rows(), d.rows());
+        assert_eq!(back.occurrences(), d.occurrences());
+        assert_eq!(back.new_features(), d.new_features());
+        assert_eq!(back.shifted(), d.shifted());
+        assert_eq!(back.domain_hiwater(), d.domain_hiwater());
+        assert_eq!(back.reference_frozen(), d.reference_frozen());
+        let mut a = Vec::new();
+        back.encode_state(&mut a);
+        assert_eq!(a, bytes, "re-encode must be byte-identical");
+    }
+
+    #[test]
+    fn domain_advisory_latches_once_near_the_recorded_dim() {
+        let mut d = DriftStats::new(100, 1000);
+        d.observe_row(&[10]);
+        assert!(!d.advisory_logged);
+        d.observe_row(&[95]);
+        assert!(d.advisory_logged, "index 95 of dim 100 must advise");
+        d.observe_row(&[99]); // stays latched, no second fire
+        assert!(d.advisory_logged);
+    }
+}

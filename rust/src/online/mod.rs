@@ -1,0 +1,52 @@
+//! Online learning: streaming training that publishes into the serving
+//! layer.
+//!
+//! The batch pipeline (hash → store → `train_stream`) assumes the corpus
+//! exists before training starts. This subsystem removes that assumption
+//! while keeping the system's central invariant — determinism you can
+//! check with `==` — intact. The loop:
+//!
+//! ```text
+//!   stdin / drop-dir / socket        (source)
+//!        │ validated sparse rows
+//!        ▼
+//!   FeatureMap::encode_into          (one reusable scratch row)
+//!        │ encoded rows              (epoch 0 also spools to a shard store)
+//!        ▼
+//!   SgdCore::step                    (the batch trainer's exact step)
+//!        │ every snapshot_every rows
+//!        ▼
+//!   SnapshotPublisher                (temp+rename artifact, then pointer)
+//!        │ latest.model
+//!        ▼
+//!   serve --watch                    (CRC-validated atomic hot swap)
+//! ```
+//!
+//! * [`source`] — where rows come from: [`source::LineSource`] (stdin),
+//!   [`source::DirSource`] (drop directory, `(mtime, name)` order),
+//!   [`source::SocketSource`] (`BBSERVE` RowBatch frames);
+//! * [`trainer`] — [`trainer::OnlineSession`]: mini-batch SGD with the
+//!   batch trainer's float-op sequence, an epoch-0 spool that lets one
+//!   corpus delivery train E epochs, resumable `BBOCKPT` checkpoints;
+//! * [`publish`] — [`publish::SnapshotPublisher`]: atomic snapshot +
+//!   pointer publication (the handshake [`crate::serve`]'s watcher
+//!   completes);
+//! * [`drift`] — [`drift::DriftStats`]: Count-Min (conservative-update)
+//!   gauges over the raw input stream — new-feature rate, mass shift,
+//!   domain high-water advisory.
+//!
+//! The testable contract tying it together: replaying a finite corpus
+//! stream (shuffle is always off online) produces weights and objective
+//! **bit-identical** to batch [`crate::coordinator::train_stream`] over
+//! the same corpus, and a killed-and-resumed session is bit-identical to
+//! an uninterrupted one (`tests/integration_online.rs`).
+
+pub mod drift;
+pub mod publish;
+pub mod source;
+pub mod trainer;
+
+pub use drift::{CountMin, DriftStats};
+pub use publish::{PublishedSnapshot, SnapshotPublisher, POINTER_NAME};
+pub use source::{DirSource, LineSource, RowSource, SocketSource};
+pub use trainer::{OnlineOptions, OnlineReport, OnlineSession, ONLINE_CKPT_LATEST, SPOOL_DIR_NAME};

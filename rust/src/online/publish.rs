@@ -1,0 +1,183 @@
+//! Atomic model-snapshot publication: how the online trainer hands
+//! models to the serving layer without ever exposing a torn file.
+//!
+//! Each snapshot is an ordinary [`ModelArtifact`] written under a
+//! sequence-numbered name, plus a tiny `latest.model` [`ModelPointer`]
+//! naming it. Both are published by the same two-step dance:
+//!
+//! 1. write the complete file under a dot-temp name **in the same
+//!    directory** (same filesystem ⇒ `rename` is atomic),
+//! 2. `rename` it over its final name.
+//!
+//! The artifact is renamed *before* the pointer, so any pointer a
+//! watcher can observe names a target that is already fully on disk;
+//! the pointer additionally records the target's framed payload CRC, so
+//! a reader can prove it is looking at the published bytes (the
+//! `serve --watch` loader checks exactly that before swapping — the
+//! other half of the handshake, documented in [`crate::store`]).
+//!
+//! Snapshot sequence numbers are monotonic per session and survive
+//! checkpoint/resume (the trainer checkpoints the next sequence), so a
+//! resumed session keeps appending `model-<seq>.model` files instead of
+//! silently rewriting history.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::store::{model_payload_crc32, ModelArtifact, ModelPointer};
+
+/// File name of the snapshot pointer inside a snapshot directory.
+pub const POINTER_NAME: &str = "latest.model";
+
+/// Name of snapshot `seq` inside the snapshot directory.
+pub fn snapshot_name(seq: u64) -> String {
+    format!("model-{seq:05}.model")
+}
+
+/// One published snapshot, as reported back to the trainer.
+#[derive(Clone, Debug)]
+pub struct PublishedSnapshot {
+    /// Publish sequence number.
+    pub seq: u64,
+    /// Final path of the artifact file.
+    pub path: PathBuf,
+    /// The artifact's framed payload CRC-32 (what the pointer records).
+    pub model_crc32: u32,
+}
+
+/// Publishes snapshots into one directory with the atomic
+/// temp+rename protocol and a monotonic sequence counter.
+pub struct SnapshotPublisher {
+    dir: PathBuf,
+    next_seq: u64,
+}
+
+impl SnapshotPublisher {
+    /// Publisher over `dir` (created if missing), starting at `next_seq`
+    /// (0 for a fresh session; a resumed session passes the checkpointed
+    /// counter so sequence numbers keep ascending).
+    pub fn new(dir: &Path, next_seq: u64) -> io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            next_seq,
+        })
+    }
+
+    /// The sequence number the next publish will use.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Where the pointer file lives.
+    pub fn pointer_path(&self) -> PathBuf {
+        self.dir.join(POINTER_NAME)
+    }
+
+    /// Publish one snapshot: artifact under its sequence name, then the
+    /// pointer — both via temp+rename, in that order, so every observable
+    /// pointer names a complete, CRC-verifiable target.
+    pub fn publish(&mut self, artifact: &ModelArtifact) -> io::Result<PublishedSnapshot> {
+        let seq = self.next_seq;
+        let name = snapshot_name(seq);
+        let final_path = self.dir.join(&name);
+        let tmp_path = self.dir.join(format!(".{name}.tmp"));
+        artifact.save(&tmp_path)?;
+        // Fingerprint what actually hit the disk (also re-verifies the
+        // envelope CRC before anything becomes observable).
+        let model_crc32 = model_payload_crc32(&tmp_path)?;
+        std::fs::rename(&tmp_path, &final_path)?;
+
+        let pointer = ModelPointer {
+            seq,
+            model_crc32,
+            name,
+        };
+        let ptr_tmp = self.dir.join(format!(".{POINTER_NAME}.tmp"));
+        pointer.save(&ptr_tmp)?;
+        std::fs::rename(&ptr_tmp, self.pointer_path())?;
+
+        self.next_seq = seq + 1;
+        Ok(PublishedSnapshot {
+            seq,
+            path: final_path,
+            model_crc32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::feature_map::{FeatureMapSpec, Scheme};
+    use crate::rng::Xoshiro256;
+    use crate::solvers::LinearModel;
+
+    fn artifact(seed: u64) -> ModelArtifact {
+        let spec = FeatureMapSpec::new(Scheme::Bbit, 1 << 16, 8, 4, 3);
+        let n = spec.layout().train_dim();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let w: Vec<f32> = (0..n).map(|_| rng.gen_f32() - 0.5).collect();
+        ModelArtifact::new(
+            spec,
+            LinearModel {
+                w,
+                iters: seed as usize,
+                objective: 0.0,
+            },
+        )
+        .unwrap()
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bbml_pub_{}_{}", name, std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn publishes_are_sequenced_and_pointer_always_resolves() {
+        let dir = tmp_dir("seq");
+        let mut p = SnapshotPublisher::new(&dir, 0).unwrap();
+        let s0 = p.publish(&artifact(1)).unwrap();
+        let s1 = p.publish(&artifact(2)).unwrap();
+        assert_eq!((s0.seq, s1.seq), (0, 1));
+        assert_eq!(p.next_seq(), 2);
+        assert!(s0.path.exists() && s1.path.exists(), "history is kept");
+
+        let ptr = ModelPointer::load(&p.pointer_path()).unwrap();
+        assert_eq!(ptr.seq, 1);
+        assert_eq!(ptr.model_crc32, s1.model_crc32);
+        let target = ptr.target(&p.pointer_path());
+        assert_eq!(target, s1.path);
+        assert_eq!(model_payload_crc32(&target).unwrap(), ptr.model_crc32);
+        // The published artifact loads cleanly and is the one we gave.
+        let back = ModelArtifact::load(&target).unwrap();
+        assert_eq!(back.model.iters, 2);
+        // No temp files survive a publish.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(
+                !name.to_string_lossy().ends_with(".tmp"),
+                "leftover temp {name:?}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resumed_publisher_continues_the_sequence() {
+        let dir = tmp_dir("resume");
+        let mut p = SnapshotPublisher::new(&dir, 0).unwrap();
+        p.publish(&artifact(1)).unwrap();
+        drop(p);
+        // Resume with the checkpointed counter: history keeps ascending.
+        let mut p = SnapshotPublisher::new(&dir, 1).unwrap();
+        let s = p.publish(&artifact(9)).unwrap();
+        assert_eq!(s.seq, 1);
+        assert!(dir.join(snapshot_name(0)).exists());
+        assert!(dir.join(snapshot_name(1)).exists());
+        assert_eq!(ModelPointer::load(&p.pointer_path()).unwrap().seq, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,475 @@
+//! Row sources for the online trainer: where streaming training rows
+//! come from.
+//!
+//! A [`RowSource`] yields validated `(label, sorted raw indices)` rows
+//! one at a time until the stream ends (`Ok(None)`). Three transports:
+//!
+//! * [`LineSource`] — LIBSVM text lines from any `BufRead` (the CLI
+//!   wraps stdin in one; tests feed cursors);
+//! * [`DirSource`] — a drop directory: LIBSVM files appear over time and
+//!   are consumed whole, ordered by `(mtime, file name)` — the
+//!   lexicographic tiebreak makes consumption order (and therefore the
+//!   trained `weights_crc32`) deterministic even when a burst of files
+//!   lands within one filesystem timestamp granule;
+//! * [`SocketSource`] — a TCP listener speaking the serving layer's
+//!   `BBSERVE` frame envelope: producers push `RowBatch` frames, get
+//!   `RowBatchAck` back, and end the stream with `Shutdown`
+//!   (acknowledged with `ShutdownOk`). Producers may connect one after
+//!   another; the stream ends at the first `Shutdown`, not at a
+//!   connection close.
+//!
+//! Every source enforces the same row contract the serving scorer
+//! enforces on score requests: indices sorted strictly increasing and
+//! `< dim` (the encoder's recorded input domain). A bad row fails the
+//! session — silently dropping or reordering rows would break the
+//! replayed-stream bit-identity contract.
+
+use std::collections::VecDeque;
+use std::io::{self, BufRead, BufReader};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+use crate::data::libsvm::parse_line;
+use crate::serve::protocol::{
+    decode_row_batch, encode_row_batch_ack, read_frame, write_frame, FrameType,
+};
+
+/// One parsed training row: normalized ±1 label + sorted raw indices.
+pub type Row = (f32, Vec<u64>);
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("row source: {msg}"))
+}
+
+/// A blocking stream of validated training rows.
+pub trait RowSource {
+    /// The next row, or `Ok(None)` once the stream has ended. Sources
+    /// are pull-driven and single-consumer; errors are fatal to the
+    /// session (no row is ever silently skipped).
+    fn next_row(&mut self) -> io::Result<Option<Row>>;
+}
+
+/// Validate the shared row contract: sorted strictly increasing indices,
+/// all inside the encoder's recorded input domain.
+pub(crate) fn validate_row(row: &[u64], dim: u64, ctx: &str) -> io::Result<()> {
+    if !row.windows(2).all(|w| w[0] < w[1]) {
+        return Err(bad(format!(
+            "{ctx}: indices must be sorted strictly increasing"
+        )));
+    }
+    if let Some(&max) = row.last() {
+        if max >= dim {
+            return Err(bad(format!(
+                "{ctx}: index {max} outside the encoder's input domain {dim}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- stdin ----
+
+/// LIBSVM lines from any `BufRead` — `online-train --from stdin`, and the
+/// in-process source the bit-identity tests replay vectors through.
+pub struct LineSource<R> {
+    reader: R,
+    lineno: usize,
+    dim: u64,
+}
+
+impl<R: BufRead> LineSource<R> {
+    /// Wrap a buffered reader producing LIBSVM text lines; `dim` is the
+    /// encoder's recorded input domain.
+    pub fn new(reader: R, dim: u64) -> Self {
+        Self {
+            reader,
+            lineno: 0,
+            dim,
+        }
+    }
+}
+
+impl<R: BufRead> RowSource for LineSource<R> {
+    fn next_row(&mut self) -> io::Result<Option<Row>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            self.lineno += 1;
+            if self.reader.read_line(&mut line)? == 0 {
+                return Ok(None); // clean EOF
+            }
+            let parsed = parse_line(&line, self.lineno)
+                .map_err(|e| bad(format!("stdin {e}")))?;
+            if let Some((label, row)) = parsed {
+                validate_row(&row, self.dim, &format!("stdin line {}", self.lineno))?;
+                return Ok(Some((label, row)));
+            }
+            // Blank/comment line: keep reading.
+        }
+    }
+}
+
+// ---------------------------------------------------- directory watch ----
+
+/// Deterministic consumption order for a batch of candidate files:
+/// modification time first, lexicographic file name on ties. The
+/// tiebreak is what pins `weights_crc32` when several files land within
+/// one mtime granule (coarse-timestamp filesystems make that common).
+pub(crate) fn order_files(mut entries: Vec<(SystemTime, PathBuf)>) -> Vec<PathBuf> {
+    entries.sort_by(|a, b| {
+        a.0.cmp(&b.0)
+            .then_with(|| a.1.file_name().cmp(&b.1.file_name()))
+    });
+    entries.into_iter().map(|(_, p)| p).collect()
+}
+
+/// A drop-directory source: `.libsvm` files appear (atomically renamed
+/// in, ideally) and are consumed whole, oldest first. Files appended to
+/// the directory mid-run are picked up on the next scan; a scan that
+/// finds nothing new polls until `idle_timeout` elapses, then ends the
+/// stream.
+pub struct DirSource {
+    dir: PathBuf,
+    dim: u64,
+    /// Files already fully consumed (by file name — the directory is the
+    /// namespace).
+    consumed: Vec<PathBuf>,
+    /// The file currently being read.
+    current: Option<(PathBuf, BufReader<std::fs::File>, usize)>,
+    poll_interval: Duration,
+    idle_timeout: Duration,
+}
+
+impl DirSource {
+    /// Watch `dir` for `.libsvm` files. `poll_interval` is the rescan
+    /// cadence when idle; after `idle_timeout` with no new file the
+    /// stream reports end-of-stream.
+    pub fn new(
+        dir: &Path,
+        dim: u64,
+        poll_interval: Duration,
+        idle_timeout: Duration,
+    ) -> io::Result<Self> {
+        if !dir.is_dir() {
+            return Err(bad(format!("{} is not a directory", dir.display())));
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            dim,
+            consumed: Vec::new(),
+            current: None,
+            poll_interval,
+            idle_timeout,
+        })
+    }
+
+    /// Unconsumed `.libsvm` files, in deterministic consumption order.
+    fn scan(&self) -> io::Result<Vec<PathBuf>> {
+        let mut found = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if !path.is_file()
+                || !path.extension().is_some_and(|e| e == "libsvm")
+                || self.consumed.contains(&path)
+            {
+                continue;
+            }
+            let mtime = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(SystemTime::UNIX_EPOCH);
+            found.push((mtime, path));
+        }
+        Ok(order_files(found))
+    }
+
+    /// Open the next unconsumed file, polling up to `idle_timeout`.
+    fn open_next(&mut self) -> io::Result<bool> {
+        let deadline = std::time::Instant::now() + self.idle_timeout;
+        loop {
+            if let Some(path) = self.scan()?.into_iter().next() {
+                let file = std::fs::File::open(&path)?;
+                self.current = Some((path, BufReader::new(file), 0));
+                return Ok(true);
+            }
+            if std::time::Instant::now() >= deadline {
+                return Ok(false);
+            }
+            std::thread::sleep(self.poll_interval);
+        }
+    }
+}
+
+impl RowSource for DirSource {
+    fn next_row(&mut self) -> io::Result<Option<Row>> {
+        loop {
+            if self.current.is_none() && !self.open_next()? {
+                return Ok(None);
+            }
+            let mut exhausted = false;
+            let mut out = None;
+            if let Some((path, reader, lineno)) = self.current.as_mut() {
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    *lineno += 1;
+                    if reader.read_line(&mut line)? == 0 {
+                        exhausted = true; // file done: consume, move on
+                        break;
+                    }
+                    let parsed = parse_line(&line, *lineno)
+                        .map_err(|e| bad(format!("{}: {e}", path.display())))?;
+                    if let Some((label, row)) = parsed {
+                        let ctx = format!("{} line {}", path.display(), lineno);
+                        validate_row(&row, self.dim, &ctx)?;
+                        out = Some((label, row));
+                        break;
+                    }
+                }
+            }
+            if let Some(row) = out {
+                return Ok(Some(row));
+            }
+            if exhausted {
+                if let Some((path, _, _)) = self.current.take() {
+                    self.consumed.push(path);
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ socket ----
+
+/// A `BBSERVE`-framed TCP ingest listener: producers connect, push
+/// `RowBatch` frames (each acknowledged with `RowBatchAck`), and end the
+/// whole stream with `Shutdown`. Rows are delivered in arrival order.
+pub struct SocketSource {
+    listener: TcpListener,
+    conn: Option<TcpStream>,
+    queue: VecDeque<Row>,
+    dim: u64,
+    done: bool,
+}
+
+impl SocketSource {
+    /// Bind the ingest listener on `port` (loopback).
+    pub fn bind(port: u16, dim: u64) -> io::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        Ok(Self {
+            listener,
+            conn: None,
+            queue: VecDeque::new(),
+            dim,
+            done: false,
+        })
+    }
+
+    /// The port actually bound (useful with `port` 0 in tests).
+    pub fn local_port(&self) -> io::Result<u16> {
+        Ok(self.listener.local_addr()?.port())
+    }
+
+    /// Pump frames from the current producer until a row lands in the
+    /// queue, the stream shuts down, or the producer disconnects (in
+    /// which case the caller goes back to accepting).
+    fn pump(&mut self, mut stream: TcpStream) -> io::Result<()> {
+        loop {
+            let Some((ft, payload)) = read_frame(&mut stream)? else {
+                return Ok(()); // producer hung up; accept the next one
+            };
+            match ft {
+                FrameType::RowBatch => {
+                    let rows = decode_row_batch(&payload)?;
+                    for (i, (_, row)) in rows.iter().enumerate() {
+                        if let Err(e) = validate_row(row, self.dim, &format!("socket row {i}")) {
+                            write_frame(&mut stream, FrameType::Error, e.to_string().as_bytes())?;
+                            return Err(e);
+                        }
+                    }
+                    write_frame(
+                        &mut stream,
+                        FrameType::RowBatchAck,
+                        &encode_row_batch_ack(rows.len() as u64),
+                    )?;
+                    let had_rows = !rows.is_empty();
+                    self.queue.extend(rows);
+                    if had_rows {
+                        self.conn = Some(stream);
+                        return Ok(());
+                    }
+                }
+                FrameType::Shutdown => {
+                    write_frame(&mut stream, FrameType::ShutdownOk, b"")?;
+                    self.done = true;
+                    return Ok(());
+                }
+                other => {
+                    let msg = format!("unexpected {other:?} frame on the ingest port");
+                    write_frame(&mut stream, FrameType::Error, msg.as_bytes())?;
+                    return Err(bad(msg));
+                }
+            }
+        }
+    }
+}
+
+impl RowSource for SocketSource {
+    fn next_row(&mut self) -> io::Result<Option<Row>> {
+        loop {
+            if let Some(row) = self.queue.pop_front() {
+                return Ok(Some(row));
+            }
+            if self.done {
+                return Ok(None);
+            }
+            match self.conn.take() {
+                Some(stream) => self.pump(stream)?,
+                None => {
+                    let (stream, _) = self.listener.accept()?;
+                    self.pump(stream)?;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::{decode_row_batch_ack, encode_row_batch};
+    use std::io::Cursor;
+
+    #[test]
+    fn line_source_parses_validates_and_skips_blanks() {
+        let text = "+1 2:1 5:1 9:1\n\n# comment\n-1 1:1 3:1\n";
+        let mut src = LineSource::new(Cursor::new(text), 1 << 10);
+        let (l1, r1) = src.next_row().unwrap().unwrap();
+        assert_eq!(l1, 1.0);
+        assert_eq!(r1, vec![1, 4, 8]); // 0-based
+        let (l2, r2) = src.next_row().unwrap().unwrap();
+        assert_eq!(l2, -1.0);
+        assert_eq!(r2, vec![0, 2]);
+        assert!(src.next_row().unwrap().is_none());
+        assert!(src.next_row().unwrap().is_none(), "EOF is sticky");
+    }
+
+    #[test]
+    fn line_source_rejects_unsorted_and_out_of_domain_rows() {
+        let mut src = LineSource::new(Cursor::new("+1 5:1 2:1\n"), 1 << 10);
+        let err = src.next_row().unwrap_err();
+        assert!(err.to_string().contains("sorted"), "{err}");
+
+        let mut src = LineSource::new(Cursor::new("+1 2000:1\n"), 1000);
+        let err = src.next_row().unwrap_err();
+        assert!(err.to_string().contains("input domain"), "{err}");
+    }
+
+    #[test]
+    fn order_files_breaks_mtime_ties_lexicographically() {
+        let t0 = SystemTime::UNIX_EPOCH + Duration::from_secs(100);
+        let t1 = SystemTime::UNIX_EPOCH + Duration::from_secs(200);
+        // Arrival order scrambled; b.libsvm and a.libsvm share one mtime.
+        let got = order_files(vec![
+            (t1, PathBuf::from("/in/z-late.libsvm")),
+            (t0, PathBuf::from("/in/b.libsvm")),
+            (t0, PathBuf::from("/in/a.libsvm")),
+        ]);
+        assert_eq!(
+            got,
+            vec![
+                PathBuf::from("/in/a.libsvm"),
+                PathBuf::from("/in/b.libsvm"),
+                PathBuf::from("/in/z-late.libsvm"),
+            ]
+        );
+        // Equal mtimes throughout: pure name order — fully deterministic.
+        let got = order_files(vec![
+            (t0, PathBuf::from("/in/c.libsvm")),
+            (t0, PathBuf::from("/in/a.libsvm")),
+            (t0, PathBuf::from("/in/b.libsvm")),
+        ]);
+        assert_eq!(
+            got,
+            vec![
+                PathBuf::from("/in/a.libsvm"),
+                PathBuf::from("/in/b.libsvm"),
+                PathBuf::from("/in/c.libsvm"),
+            ]
+        );
+    }
+
+    #[test]
+    fn dir_source_consumes_files_in_order_and_sees_late_arrivals() {
+        let dir = std::env::temp_dir().join(format!("bbml_dirsrc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // Two files, same content shape, plus a non-libsvm distractor.
+        std::fs::write(dir.join("b.libsvm"), "+1 2:1\n").unwrap();
+        std::fs::write(dir.join("a.libsvm"), "-1 1:1\n+1 3:1\n").unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignore me\n").unwrap();
+        let mut src = DirSource::new(
+            &dir,
+            1 << 10,
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+        )
+        .unwrap();
+        let mut rows = Vec::new();
+        while let Some(row) = src.next_row().unwrap() {
+            rows.push(row);
+            if rows.len() == 3 {
+                // Drop a late file mid-run: the next scan must find it.
+                std::fs::write(dir.join("c.libsvm"), "+1 7:1\n").unwrap();
+            }
+        }
+        // a.libsvm (2 rows) before b.libsvm (1 row) regardless of mtime
+        // noise is not guaranteed here (mtimes differ), but the late
+        // arrival must be last and every row must be present.
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[3].1, vec![6]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn socket_source_streams_batches_and_ends_on_shutdown() {
+        let mut src = SocketSource::bind(0, 1 << 10).unwrap();
+        let port = src.local_port().unwrap();
+        let producer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let batch = vec![(1.0f32, vec![1u64, 5]), (-1.0f32, vec![2u64])];
+            write_frame(&mut s, FrameType::RowBatch, &encode_row_batch(&batch)).unwrap();
+            let (ft, p) = read_frame(&mut s).unwrap().unwrap();
+            assert_eq!(ft, FrameType::RowBatchAck);
+            assert_eq!(decode_row_batch_ack(&p).unwrap(), 2);
+            write_frame(&mut s, FrameType::Shutdown, b"").unwrap();
+            let (ft, _) = read_frame(&mut s).unwrap().unwrap();
+            assert_eq!(ft, FrameType::ShutdownOk);
+        });
+        let r1 = src.next_row().unwrap().unwrap();
+        assert_eq!(r1, (1.0, vec![1, 5]));
+        let r2 = src.next_row().unwrap().unwrap();
+        assert_eq!(r2, (-1.0, vec![2]));
+        assert!(src.next_row().unwrap().is_none());
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn socket_source_rejects_invalid_rows_with_an_error_frame() {
+        let mut src = SocketSource::bind(0, 100).unwrap();
+        let port = src.local_port().unwrap();
+        let producer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let batch = vec![(1.0f32, vec![500u64])]; // outside dim 100
+            write_frame(&mut s, FrameType::RowBatch, &encode_row_batch(&batch)).unwrap();
+            let (ft, p) = read_frame(&mut s).unwrap().unwrap();
+            assert_eq!(ft, FrameType::Error);
+            assert!(String::from_utf8_lossy(&p).contains("input domain"));
+        });
+        let err = src.next_row().unwrap_err();
+        assert!(err.to_string().contains("input domain"), "{err}");
+        producer.join().unwrap();
+    }
+}

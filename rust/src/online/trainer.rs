@@ -1,0 +1,976 @@
+//! [`OnlineSession`]: streaming mini-batch SGD over a [`RowSource`], with
+//! the batch trainer's exact float-op sequence.
+//!
+//! The contract that makes this subsystem testable at the bit level: a
+//! finite stream that delivers the corpus in order, trained with an
+//! `OnlineSession` of `epochs = E`, produces **bit-identical weights and
+//! objective** to `train_stream` over a store of the same corpus with
+//! shuffling off. There is no separate online solver — every row is
+//! stepped through the one [`SgdCore::step`], with λ = 1/(C·N) and
+//! `total_steps = E·N` sized by the declared epoch length `N`
+//! (`rows_per_epoch`), exactly how the batch session sizes them. Online
+//! training is always shuffle-off: the stream order *is* the visit order,
+//! which also means the session needs no RNG at all.
+//!
+//! # The spool
+//!
+//! Epoch 0's rows are simultaneously trained on and **spooled** to
+//! `<snapshot-dir>/spool` as an ordinary signature shard store (one shard
+//! per chunk; the manifest is rewritten via temp+rename at every flush,
+//! so the spool is a valid, openable store at all times). The spool is
+//! what lets one delivery of the corpus train for E epochs: at EOF the
+//! remaining epochs replay from the spool, shard by shard, stepping the
+//! identical bits the live pass stepped (store roundtrips are bit-exact).
+//! It is also the corpus for the final objective pass, which is literally
+//! the batch session's code ([`row_loss`]/[`reg_term`]/[`objective`]).
+//!
+//! # Snapshots and checkpoints
+//!
+//! Every `snapshot_every` rows (checked at chunk boundaries) the current
+//! weights — via [`SgdCore::weights_snapshot`], the same float ops as the
+//! final extraction — are published through [`SnapshotPublisher`] for the
+//! serving layer to hot-swap in. Independently, an **OCKPT** checkpoint
+//! (magic `BBOCKPT\0`, same framed envelope as the other blob formats in
+//! [`crate::store`]) captures the complete session state at every chunk
+//! boundary, so a killed session resumes from its last checkpoint and
+//! continues the identical float-op sequence. Payload field order, all
+//! little-endian:
+//!
+//! ```text
+//! u8×8        scheme, algo, average, has_avg, pad×4
+//! u64,u32     k, b
+//! u64×3       dim, buckets, seed
+//! f64         s
+//! f64,u64×4   c, epochs, rows_per_epoch, snapshot_every, chunk
+//! u64×4       epoch, rows_in_epoch, rows_since_snapshot, next_snapshot_seq
+//! u64×4       spool_shards, spool_rows, spool_packed, spool_stored
+//! f64,f64     lambda, w_scale
+//! u64×3       t, total_steps, avg_count
+//! u64,f32×N   n_weights, weights (bit patterns)
+//! f64×N       averaging accumulator (iff has_avg)
+//! bytes       drift state (DriftStats::encode_state)
+//! ```
+//!
+//! A crash *between* a publish/flush and its checkpoint is harmless by
+//! construction: the resumed session re-steps the re-fed rows into the
+//! same bits, re-writes the same spool shard under the same name and
+//! re-publishes the same snapshot sequence numbers.
+//!
+//! [`RowSource`]: crate::online::source::RowSource
+//! [`SgdCore`]: crate::solvers::sgd::SgdCore
+//! [`SgdCore::step`]: crate::solvers::sgd::SgdCore::step
+//! [`SgdCore::weights_snapshot`]: crate::solvers::sgd::SgdCore::weights_snapshot
+//! [`SnapshotPublisher`]: crate::online::publish::SnapshotPublisher
+//! [`row_loss`]: crate::coordinator::session
+//! [`reg_term`]: crate::coordinator::session
+//! [`objective`]: crate::coordinator::session
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::session::{objective, reg_term, row_loss};
+use crate::coordinator::stream_train::StreamAlgo;
+use crate::hashing::feature_map::{FeatureMap, FeatureMapSpec, Scheme, SketchLayout};
+use crate::hashing::sketch::{SketchMatrix, SketchRow};
+use crate::online::drift::DriftStats;
+use crate::online::publish::{PublishedSnapshot, SnapshotPublisher};
+use crate::online::source::RowSource;
+use crate::solvers::sgd::SgdCore;
+use crate::solvers::{LinearModel, SketchView};
+use crate::store::format::{self, ByteReader};
+use crate::store::writer::{render_manifest, shard_path, MANIFEST_NAME};
+use crate::store::{ModelArtifact, SigShardStore};
+
+/// File magic of an online-training checkpoint.
+pub const ONLINE_CKPT_MAGIC: [u8; 8] = *b"BBOCKPT\0";
+/// Current online checkpoint format version.
+pub const ONLINE_CKPT_VERSION: u32 = 1;
+/// Name of the always-freshest online checkpoint inside a checkpoint dir.
+pub const ONLINE_CKPT_LATEST: &str = "online-latest.ckpt";
+/// Name of the epoch-0 spool store inside the snapshot directory.
+pub const SPOOL_DIR_NAME: &str = "spool";
+/// Reference-sketch warmup cap for the drift gauges (rows).
+const DRIFT_WARMUP_CAP: u64 = 1024;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("online-train: {msg}"))
+}
+
+/// Options of an online training session (frozen into its checkpoints —
+/// a resumed session carries them; CLI flags do not apply).
+#[derive(Clone, Debug)]
+pub struct OnlineOptions {
+    pub algo: StreamAlgo,
+    /// The paper's C; λ = 1/(C·rows_per_epoch).
+    pub c: f64,
+    /// Total passes over the (declared) corpus.
+    pub epochs: usize,
+    /// Declared epoch length N — sizes λ and the η_t step budget, and is
+    /// the row count at which the spool is one complete corpus.
+    pub rows_per_epoch: usize,
+    /// Suffix-average the trailing half of all steps.
+    pub average: bool,
+    /// Publish a snapshot every this many rows, checked at chunk
+    /// boundaries (0 = only the final snapshot).
+    pub snapshot_every: usize,
+    /// Rows per spool shard / per training mini-batch buffer.
+    pub chunk: usize,
+}
+
+impl Default for OnlineOptions {
+    fn default() -> Self {
+        Self {
+            algo: StreamAlgo::Pegasos,
+            c: 1.0,
+            epochs: 1,
+            rows_per_epoch: 0, // must be set; validated by OnlineSession::new
+            average: true,
+            snapshot_every: 0,
+            chunk: 512,
+        }
+    }
+}
+
+/// What a finished (or paused) session run reports.
+#[derive(Clone, Debug)]
+pub struct OnlineReport {
+    /// Final weights; `objective` is the batch objective over the spooled
+    /// corpus once at least one full epoch exists, else 0.0.
+    pub model: LinearModel,
+    /// Rows consumed from the live source during this run.
+    pub rows_ingested: u64,
+    /// Total SGD steps taken (across resumes and spool replays).
+    pub rows_stepped: u64,
+    /// Epochs fully processed.
+    pub epochs_done: usize,
+    /// Whether the full `epochs × rows_per_epoch` budget was trained.
+    pub completed: bool,
+    /// Snapshots published so far (across resumes), final one included.
+    pub snapshots_published: u64,
+    /// The final published snapshot.
+    pub last_snapshot: Option<PublishedSnapshot>,
+    /// Wall-clock time of this run.
+    pub train_time: Duration,
+}
+
+/// The `(k, b)` shape a spool manifest records for a layout (same rule as
+/// `ShardWriter::create`).
+fn store_shape(layout: SketchLayout) -> (usize, u32) {
+    match layout {
+        SketchLayout::PackedBbit { k, b } => (k, b),
+        SketchLayout::DenseF32 { k } | SketchLayout::SparseF32 { k } => (k, 0),
+    }
+}
+
+/// Encode one validated row through the session's reusable scratch and
+/// append it to the mini-batch — the per-row encode hot loop (one shared
+/// scratch, no per-row allocation).
+// bbml-lint: hot-path
+fn encode_push(
+    map: &dyn FeatureMap,
+    row: &[u64],
+    label: f32,
+    scratch: &mut SketchRow,
+    batch: &mut SketchMatrix,
+) {
+    map.encode_into(row, scratch.row_mut());
+    batch.push_encoded(scratch, label);
+}
+
+/// One SGD step on row `i` of a sketch matrix — the per-row update hot
+/// loop, shared by the live path (freshly encoded mini-batch) and the
+/// spool replay (decoded shard): both step the identical bits.
+// bbml-lint: hot-path
+fn step_row(core: &mut SgdCore, batch: &SketchMatrix, i: usize) {
+    let view = SketchView::new(batch);
+    SgdCore::step(core, &view, i);
+}
+
+/// A streaming training session (see module docs).
+pub struct OnlineSession {
+    spec: FeatureMapSpec,
+    opt: OnlineOptions,
+    map: Box<dyn FeatureMap>,
+    scratch: SketchRow,
+    batch: SketchMatrix,
+    core: SgdCore,
+    drift: DriftStats,
+    publisher: SnapshotPublisher,
+    spool_dir: PathBuf,
+    ckpt_dir: Option<PathBuf>,
+    /// Epochs fully processed so far.
+    epoch: usize,
+    /// Rows stepped in the current epoch (< rows_per_epoch).
+    rows_in_epoch: usize,
+    /// Rows stepped since the last snapshot publish.
+    rows_since_snapshot: usize,
+    // Spool accounting (mirrors ShardWriter's manifest bookkeeping).
+    spool_shards: usize,
+    spool_rows: usize,
+    spool_packed: usize,
+    spool_stored: usize,
+    last_snapshot: Option<PublishedSnapshot>,
+}
+
+impl OnlineSession {
+    /// A fresh session publishing into `snapshot_dir` (created if
+    /// missing), checkpointing into `checkpoint_dir` when given. Refuses
+    /// (as `AlreadyExists`) a snapshot directory whose spool already holds
+    /// a store — resume from the checkpoint or remove the directory.
+    pub fn new(
+        spec: FeatureMapSpec,
+        opt: OnlineOptions,
+        snapshot_dir: &Path,
+        checkpoint_dir: Option<&Path>,
+    ) -> io::Result<Self> {
+        validate_options(&opt)?;
+        let spool_dir = snapshot_dir.join(SPOOL_DIR_NAME);
+        if spool_dir.join(MANIFEST_NAME).exists() {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                format!(
+                    "online-train: spool store already exists at {} — resume \
+                     from its checkpoint or remove the snapshot directory",
+                    spool_dir.display()
+                ),
+            ));
+        }
+        std::fs::create_dir_all(&spool_dir)?;
+        let publisher = SnapshotPublisher::new(snapshot_dir, 0)?;
+        let n = opt.rows_per_epoch;
+        let lambda = 1.0 / (opt.c * n as f64);
+        let total_steps = opt.epochs * n;
+        let layout = spec.layout();
+        let core = SgdCore::new(opt.algo.loss(), layout.train_dim(), lambda, total_steps, opt.average);
+        let drift = DriftStats::new(spec.dim, (n as u64).min(DRIFT_WARMUP_CAP));
+        Ok(Self {
+            map: spec.build(),
+            scratch: SketchRow::new(&layout),
+            batch: SketchMatrix::with_capacity(layout, opt.chunk),
+            core,
+            drift,
+            publisher,
+            spool_dir,
+            ckpt_dir: checkpoint_dir.map(Path::to_path_buf),
+            epoch: 0,
+            rows_in_epoch: 0,
+            rows_since_snapshot: 0,
+            spool_shards: 0,
+            spool_rows: 0,
+            spool_packed: 0,
+            spool_stored: 0,
+            last_snapshot: None,
+            spec,
+            opt,
+        })
+    }
+
+    /// Rebuild a session from an online checkpoint and continue the
+    /// identical float-op sequence. The spool on disk is validated against
+    /// the checkpointed accounting (shape match; at least the recorded
+    /// shards/rows present — a crash between a flush and its checkpoint
+    /// legitimately leaves the spool one shard ahead, and the re-fed rows
+    /// deterministically overwrite it).
+    pub fn resume(
+        ckpt_path: &Path,
+        snapshot_dir: &Path,
+        checkpoint_dir: Option<&Path>,
+    ) -> io::Result<Self> {
+        let (_, payload) =
+            format::read_framed_file(ckpt_path, ONLINE_CKPT_MAGIC, ONLINE_CKPT_VERSION)?;
+        let mut r = ByteReader::new(&payload);
+        let scheme_byte = r.u8()?;
+        let scheme = Scheme::from_code(scheme_byte)
+            .ok_or_else(|| bad(format!("unknown scheme byte {scheme_byte}")))?;
+        let algo_byte = r.u8()?;
+        let algo = StreamAlgo::from_code(algo_byte)
+            .ok_or_else(|| bad(format!("unknown algorithm byte {algo_byte}")))?;
+        let average = r.u8()? != 0;
+        let has_avg = r.u8()? != 0;
+        for _ in 0..4 {
+            r.u8()?;
+        }
+        if has_avg != average {
+            return Err(bad(
+                "averaging flag disagrees with accumulator presence".into(),
+            ));
+        }
+        let k = r.usize()?;
+        let b = r.u32()?;
+        let dim = r.u64()?;
+        let buckets = r.usize()?;
+        let seed = r.u64()?;
+        let s = r.f64()?;
+        let c = r.f64()?;
+        let epochs = r.usize()?;
+        let rows_per_epoch = r.usize()?;
+        let snapshot_every = r.usize()?;
+        let chunk = r.usize()?;
+        let epoch = r.usize()?;
+        let rows_in_epoch = r.usize()?;
+        let rows_since_snapshot = r.usize()?;
+        let next_snapshot_seq = r.u64()?;
+        let spool_shards = r.usize()?;
+        let spool_rows = r.usize()?;
+        let spool_packed = r.usize()?;
+        let spool_stored = r.usize()?;
+        let lambda = r.f64()?;
+        let w_scale = r.f64()?;
+        let t = r.usize()?;
+        let total_steps = r.usize()?;
+        let avg_count = r.usize()?;
+        let n_w = r.usize()?;
+        let spec = FeatureMapSpec {
+            scheme,
+            dim,
+            k,
+            b,
+            buckets,
+            s,
+            seed,
+        };
+        if !scheme.is_dense() && !(1..=16).contains(&b) {
+            return Err(bad(format!("b = {b} out of 1..=16 for scheme {scheme}")));
+        }
+        let layout = spec.layout();
+        if n_w != layout.train_dim() {
+            return Err(bad(format!(
+                "{n_w} weights for training dimension {}",
+                layout.train_dim()
+            )));
+        }
+        let w = r.f32_vec(n_w)?;
+        let avg = if has_avg { Some(r.f64_vec(n_w)?) } else { None };
+        let drift = DriftStats::decode_state(&mut r)?;
+        r.finish()?;
+
+        let opt = OnlineOptions {
+            algo,
+            c,
+            epochs,
+            rows_per_epoch,
+            average,
+            snapshot_every,
+            chunk,
+        };
+        validate_options(&opt)?;
+        let n = rows_per_epoch;
+        let want_lambda = 1.0 / (c * n as f64);
+        if lambda.to_bits() != want_lambda.to_bits() {
+            return Err(bad(format!("λ {lambda} disagrees with 1/(C·N) = {want_lambda}")));
+        }
+        if total_steps != epochs * n || t > epoch * n + rows_in_epoch {
+            return Err(bad(format!(
+                "inconsistent step counters: t={t}, total={total_steps}, \
+                 epoch {epoch} + {rows_in_epoch} rows"
+            )));
+        }
+        if t != epoch * n + rows_in_epoch || rows_in_epoch >= n {
+            return Err(bad(format!(
+                "progress counters disagree: t={t} vs epoch {epoch}·{n} + {rows_in_epoch}"
+            )));
+        }
+        if spool_rows > n || (spool_shards == 0) != (spool_rows == 0) {
+            return Err(bad(format!(
+                "spool accounting {spool_shards} shards / {spool_rows} rows is invalid for N={n}"
+            )));
+        }
+        if epoch >= 1 && spool_rows != n {
+            return Err(bad(format!(
+                "epoch {epoch} reached but the spool holds {spool_rows} of {n} rows"
+            )));
+        }
+
+        let spool_dir = snapshot_dir.join(SPOOL_DIR_NAME);
+        if spool_shards > 0 {
+            let store = SigShardStore::open(&spool_dir)?;
+            let (want_k, want_b) = store_shape(layout);
+            if store.scheme() != scheme || store.k() != want_k || store.b() != want_b {
+                return Err(bad(format!(
+                    "spool at {} holds ({}, k={}, b={}), checkpoint trained \
+                     ({scheme}, k={want_k}, b={want_b})",
+                    spool_dir.display(),
+                    store.scheme(),
+                    store.k(),
+                    store.b()
+                )));
+            }
+            if store.n_shards() < spool_shards || store.n_rows() < spool_rows {
+                return Err(bad(format!(
+                    "spool at {} has {} shards / {} rows, checkpoint recorded \
+                     {spool_shards} / {spool_rows}",
+                    spool_dir.display(),
+                    store.n_shards(),
+                    store.n_rows()
+                )));
+            }
+        }
+        std::fs::create_dir_all(&spool_dir)?;
+        let publisher = SnapshotPublisher::new(snapshot_dir, next_snapshot_seq)?;
+
+        Ok(Self {
+            map: spec.build(),
+            scratch: SketchRow::new(&layout),
+            batch: SketchMatrix::with_capacity(layout, chunk),
+            core: SgdCore {
+                loss: algo.loss(),
+                lambda,
+                w,
+                w_scale,
+                t,
+                total_steps,
+                avg,
+                avg_count,
+            },
+            drift,
+            publisher,
+            spool_dir,
+            ckpt_dir: checkpoint_dir.map(Path::to_path_buf),
+            epoch,
+            rows_in_epoch,
+            rows_since_snapshot,
+            spool_shards,
+            spool_rows,
+            spool_packed,
+            spool_stored,
+            last_snapshot: None,
+            spec,
+            opt,
+        })
+    }
+
+    /// The encoder spec this session trains features of.
+    pub fn spec(&self) -> &FeatureMapSpec {
+        &self.spec
+    }
+
+    /// The session options (a resumed session's come from the checkpoint).
+    pub fn options(&self) -> &OnlineOptions {
+        &self.opt
+    }
+
+    /// The drift gauges over the raw input stream.
+    pub fn drift(&self) -> &DriftStats {
+        &self.drift
+    }
+
+    /// Epochs fully processed so far.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// SGD steps taken so far (across resumes and replays).
+    pub fn steps(&self) -> usize {
+        self.core.steps()
+    }
+
+    /// Snapshots published so far (across resumes).
+    pub fn snapshots_published(&self) -> u64 {
+        self.publisher.next_seq()
+    }
+
+    /// Where the epoch-0 spool store lives.
+    pub fn spool_dir(&self) -> &Path {
+        &self.spool_dir
+    }
+
+    /// The `online-latest.ckpt` path inside a checkpoint directory.
+    pub fn checkpoint_latest(dir: &Path) -> PathBuf {
+        dir.join(ONLINE_CKPT_LATEST)
+    }
+
+    /// Drive the session over a source until the stream ends, then finish
+    /// (spool replay for undelivered epochs, objective pass, final
+    /// snapshot + checkpoint).
+    pub fn run(&mut self, source: &mut dyn RowSource) -> io::Result<OnlineReport> {
+        let t0 = Instant::now();
+        let mut rows_ingested = 0u64;
+        while let Some((label, row)) = source.next_row()? {
+            self.ingest(label, &row)?;
+            rows_ingested += 1;
+        }
+        self.finish(t0, rows_ingested)
+    }
+
+    /// Train on one validated row: drift gauges, encode through the
+    /// shared scratch, one SGD step, then chunk-boundary bookkeeping
+    /// (spool flush / snapshot / checkpoint).
+    pub fn ingest(&mut self, label: f32, row: &[u64]) -> io::Result<()> {
+        self.drift.observe_row(row);
+        encode_push(&*self.map, row, label, &mut self.scratch, &mut self.batch);
+        step_row(&mut self.core, &self.batch, self.batch.n() - 1);
+        self.rows_in_epoch += 1;
+        self.rows_since_snapshot += 1;
+        if self.batch.n() >= self.opt.chunk || self.rows_in_epoch == self.opt.rows_per_epoch {
+            self.flush_chunk()?;
+            if self.rows_in_epoch == self.opt.rows_per_epoch {
+                self.epoch += 1;
+                self.rows_in_epoch = 0;
+            }
+            self.maybe_snapshot()?;
+            self.write_checkpoint()?;
+        }
+        Ok(())
+    }
+
+    /// Spool the buffered chunk (epoch 0 only — later epochs re-visit
+    /// spooled rows) and reset the mini-batch buffer.
+    fn flush_chunk(&mut self) -> io::Result<()> {
+        if self.epoch == 0 && self.batch.n() > 0 {
+            let bytes = format::write_shard_file(
+                &shard_path(&self.spool_dir, self.spool_shards),
+                &self.batch,
+                self.spec.scheme,
+                false,
+            )?;
+            self.spool_shards += 1;
+            self.spool_rows += self.batch.n();
+            self.spool_packed += self.batch.packed_bytes();
+            self.spool_stored += bytes;
+            self.write_spool_manifest()?;
+        }
+        self.batch = SketchMatrix::with_capacity(self.spec.layout(), self.opt.chunk);
+        Ok(())
+    }
+
+    /// Rewrite the spool manifest via temp+rename: after every flush the
+    /// spool is a complete, openable shard store.
+    fn write_spool_manifest(&self) -> io::Result<()> {
+        let (k, b) = store_shape(self.spec.layout());
+        let manifest = render_manifest(
+            self.spec.scheme,
+            k,
+            b,
+            false,
+            self.spool_shards,
+            self.spool_rows,
+            self.spool_packed,
+            self.spool_stored,
+        );
+        let tmp = self.spool_dir.join(format!(".{MANIFEST_NAME}.tmp"));
+        std::fs::write(&tmp, manifest)?;
+        std::fs::rename(&tmp, self.spool_dir.join(MANIFEST_NAME))
+    }
+
+    /// Publish a snapshot if the cadence says so (chunk-boundary check).
+    fn maybe_snapshot(&mut self) -> io::Result<()> {
+        if self.opt.snapshot_every > 0 && self.rows_since_snapshot >= self.opt.snapshot_every {
+            self.publish_snapshot(0.0)?;
+        }
+        Ok(())
+    }
+
+    /// Publish the current weights as a model artifact (iteration count =
+    /// steps so far; mid-stream snapshots carry objective 0.0 — computing
+    /// the true objective means a full spool pass, which only the final
+    /// snapshot pays for).
+    fn publish_snapshot(&mut self, obj: f64) -> io::Result<PublishedSnapshot> {
+        let model = LinearModel {
+            w: self.core.weights_snapshot(),
+            iters: self.core.steps(),
+            objective: obj,
+        };
+        let artifact = ModelArtifact::new(self.spec.clone(), model)?;
+        let snap = self.publisher.publish(&artifact)?;
+        self.rows_since_snapshot = 0;
+        self.last_snapshot = Some(snap.clone());
+        Ok(snap)
+    }
+
+    /// Atomically refresh `online-latest.ckpt` (no-op without a
+    /// checkpoint dir). Temp+rename, unlike the batch session's plain
+    /// write: an online session can be killed at any instant, and a torn
+    /// latest-checkpoint would strand the whole stream.
+    fn write_checkpoint(&self) -> io::Result<()> {
+        let Some(dir) = &self.ckpt_dir else {
+            return Ok(());
+        };
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!(".{ONLINE_CKPT_LATEST}.tmp"));
+        format::write_framed_file(&tmp, ONLINE_CKPT_MAGIC, ONLINE_CKPT_VERSION, &self.encode_payload())?;
+        std::fs::rename(&tmp, dir.join(ONLINE_CKPT_LATEST))
+    }
+
+    /// Serialize the complete session state (layout in the module docs).
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            192 + self.core.w.len() * 4
+                + self.core.avg.as_ref().map_or(0, |a| a.len() * 8),
+        );
+        out.push(self.spec.scheme.code());
+        out.push(self.opt.algo.code());
+        out.push(self.opt.average as u8);
+        out.push(self.core.avg.is_some() as u8);
+        out.extend_from_slice(&[0u8; 4]);
+        out.extend_from_slice(&(self.spec.k as u64).to_le_bytes());
+        out.extend_from_slice(&self.spec.b.to_le_bytes());
+        out.extend_from_slice(&self.spec.dim.to_le_bytes());
+        out.extend_from_slice(&(self.spec.buckets as u64).to_le_bytes());
+        out.extend_from_slice(&self.spec.seed.to_le_bytes());
+        out.extend_from_slice(&self.spec.s.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.opt.c.to_bits().to_le_bytes());
+        for v in [
+            self.opt.epochs as u64,
+            self.opt.rows_per_epoch as u64,
+            self.opt.snapshot_every as u64,
+            self.opt.chunk as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [
+            self.epoch as u64,
+            self.rows_in_epoch as u64,
+            self.rows_since_snapshot as u64,
+            self.publisher.next_seq(),
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [
+            self.spool_shards as u64,
+            self.spool_rows as u64,
+            self.spool_packed as u64,
+            self.spool_stored as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.core.lambda.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.core.w_scale.to_bits().to_le_bytes());
+        for v in [
+            self.core.t as u64,
+            self.core.total_steps as u64,
+            self.core.avg_count as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.core.w.len() as u64).to_le_bytes());
+        for &w in &self.core.w {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        if let Some(avg) = &self.core.avg {
+            for &a in avg {
+                out.extend_from_slice(&a.to_bits().to_le_bytes());
+            }
+        }
+        self.drift.encode_state(&mut out);
+        out
+    }
+
+    /// EOF handling: flush the trailing chunk, replay the spool for any
+    /// undelivered epochs, run the objective pass when a full corpus
+    /// exists, publish the final snapshot and checkpoint.
+    fn finish(&mut self, t0: Instant, rows_ingested: u64) -> io::Result<OnlineReport> {
+        if self.batch.n() > 0 {
+            self.flush_chunk()?;
+            self.write_checkpoint()?;
+        }
+        if self.epoch >= 1 && self.epoch < self.opt.epochs {
+            self.replay_spool()?;
+        }
+        let completed = self.epoch >= self.opt.epochs && self.rows_in_epoch == 0;
+        let w = self.core.weights_snapshot();
+        let obj = if self.epoch >= 1 {
+            self.objective_over_spool(&w)?
+        } else {
+            0.0
+        };
+        let model = LinearModel {
+            w,
+            iters: self.core.steps(),
+            objective: obj,
+        };
+        let artifact = ModelArtifact::new(self.spec.clone(), model.clone())?;
+        let snap = self.publisher.publish(&artifact)?;
+        self.rows_since_snapshot = 0;
+        self.last_snapshot = Some(snap);
+        self.write_checkpoint()?;
+        Ok(OnlineReport {
+            model,
+            rows_ingested,
+            rows_stepped: self.core.steps() as u64,
+            epochs_done: self.epoch,
+            completed,
+            snapshots_published: self.publisher.next_seq(),
+            last_snapshot: self.last_snapshot.clone(),
+            train_time: t0.elapsed(),
+        })
+    }
+
+    /// Train the remaining epochs from the spool, shard by shard in
+    /// corpus order — stepping the identical bits the live pass stepped.
+    /// A mid-epoch entry position (resume, or a stream that overshot an
+    /// epoch boundary before EOF) skips the already-stepped prefix. Drift
+    /// gauges are *not* fed here: they watch the live input stream, and a
+    /// replay brings no new information.
+    fn replay_spool(&mut self) -> io::Result<()> {
+        let store = SigShardStore::open(&self.spool_dir)?;
+        if store.n_rows() != self.opt.rows_per_epoch || self.spool_rows != self.opt.rows_per_epoch {
+            return Err(bad(format!(
+                "spool holds {} rows, cannot replay an epoch of {}",
+                store.n_rows(),
+                self.opt.rows_per_epoch
+            )));
+        }
+        while self.epoch < self.opt.epochs {
+            let mut skip = self.rows_in_epoch;
+            for seq in 0..store.n_shards() {
+                let rows = store.shard_rows(seq)?;
+                if skip >= rows {
+                    skip -= rows;
+                    continue;
+                }
+                let shard = store.read_shard(seq)?;
+                for i in skip..shard.n() {
+                    step_row(&mut self.core, &shard, i);
+                }
+                let stepped = shard.n() - skip;
+                skip = 0;
+                self.rows_in_epoch += stepped;
+                self.rows_since_snapshot += stepped;
+                drop(shard);
+                if self.rows_in_epoch < self.opt.rows_per_epoch {
+                    self.maybe_snapshot()?;
+                    self.write_checkpoint()?;
+                }
+            }
+            if self.rows_in_epoch != self.opt.rows_per_epoch {
+                return Err(bad(format!(
+                    "replay of epoch {} visited {} of {} rows",
+                    self.epoch, self.rows_in_epoch, self.opt.rows_per_epoch
+                )));
+            }
+            self.epoch += 1;
+            self.rows_in_epoch = 0;
+            self.maybe_snapshot()?;
+            self.write_checkpoint()?;
+        }
+        Ok(())
+    }
+
+    /// The batch objective over the spooled corpus with weights `w`:
+    /// sequential shard order, the batch session's `row_loss`/`reg_term`/
+    /// `objective` — same calls, same accumulation order, same bits.
+    fn objective_over_spool(&self, w: &[f32]) -> io::Result<f64> {
+        let store = SigShardStore::open(&self.spool_dir)?;
+        let n = self.opt.rows_per_epoch;
+        let lambda = 1.0 / (self.opt.c * n as f64);
+        let mut loss_sum = 0.0f64;
+        for seq in 0..store.n_shards() {
+            let shard = store.read_shard(seq)?;
+            let view = SketchView::new(&shard);
+            for i in 0..shard.n() {
+                loss_sum += row_loss(self.opt.algo, &view, i, w);
+            }
+        }
+        Ok(objective(reg_term(lambda, w), loss_sum, n))
+    }
+}
+
+fn validate_options(opt: &OnlineOptions) -> io::Result<()> {
+    if opt.rows_per_epoch == 0 {
+        return Err(bad("rows_per_epoch (--rows) must be >= 1".into()));
+    }
+    if opt.epochs == 0 {
+        return Err(bad("epochs must be >= 1".into()));
+    }
+    if opt.chunk == 0 {
+        return Err(bad("chunk must be >= 1".into()));
+    }
+    if !(opt.c > 0.0) {
+        return Err(bad(format!("C = {} must be positive", opt.c)));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::online::source::LineSource;
+    use crate::store::ModelPointer;
+    use std::io::Cursor;
+
+    fn spec() -> FeatureMapSpec {
+        FeatureMapSpec::new(Scheme::Bbit, 1 << 12, 8, 4, 7)
+    }
+
+    fn corpus(n: usize) -> String {
+        // Deterministic, sorted, in-domain LIBSVM rows.
+        let mut s = String::new();
+        for i in 0..n {
+            let y = if i % 2 == 0 { "+1" } else { "-1" };
+            let a = (i * 3) % 100 + 1;
+            let b = a + 37 + i % 5;
+            let c = b + 101;
+            s.push_str(&format!("{y} {a}:1 {b}:1 {c}:1\n"));
+        }
+        s
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "bbml_online_{}_{}",
+            name,
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn mid_epoch_eof_pauses_with_incomplete_report() {
+        let dir = tmp_dir("pause");
+        let ckpt = dir.join("ckpt");
+        let opt = OnlineOptions {
+            rows_per_epoch: 8,
+            epochs: 2,
+            chunk: 2,
+            ..Default::default()
+        };
+        let mut sess = OnlineSession::new(spec(), opt, &dir, Some(&ckpt)).unwrap();
+        // Only 5 of the 8 declared rows arrive before EOF.
+        let mut src = LineSource::new(Cursor::new(corpus(5)), spec().dim);
+        let report = sess.run(&mut src).unwrap();
+        assert!(!report.completed);
+        assert_eq!(report.rows_ingested, 5);
+        assert_eq!(report.rows_stepped, 5);
+        assert_eq!(report.epochs_done, 0);
+        assert_eq!(report.model.objective, 0.0, "no full corpus yet");
+        // The final snapshot always publishes, and a checkpoint exists.
+        assert_eq!(report.snapshots_published, 1);
+        assert!(OnlineSession::checkpoint_latest(&ckpt).exists());
+        let ptr = ModelPointer::load(&dir.join(crate::online::publish::POINTER_NAME)).unwrap();
+        assert_eq!(ptr.seq, 0);
+        // The spool holds the 5 delivered rows as a valid store.
+        let store = SigShardStore::open(&dir.join(SPOOL_DIR_NAME)).unwrap();
+        assert_eq!(store.n_rows(), 5);
+        assert_eq!(store.n_shards(), 3, "chunks of 2 ⇒ 2+2+1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn single_delivery_auto_replays_remaining_epochs() {
+        let dir = tmp_dir("replay");
+        let opt = OnlineOptions {
+            rows_per_epoch: 6,
+            epochs: 3,
+            chunk: 4,
+            ..Default::default()
+        };
+        let mut sess = OnlineSession::new(spec(), opt, &dir, None).unwrap();
+        let mut src = LineSource::new(Cursor::new(corpus(6)), spec().dim);
+        let report = sess.run(&mut src).unwrap();
+        assert!(report.completed);
+        assert_eq!(report.rows_ingested, 6, "corpus delivered once");
+        assert_eq!(report.rows_stepped, 18, "but trained for 3 epochs");
+        assert_eq!(report.epochs_done, 3);
+        assert_eq!(report.model.iters, 18);
+        assert!(report.model.objective > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_cadence_publishes_monotonic_sequence() {
+        let dir = tmp_dir("cadence");
+        let opt = OnlineOptions {
+            rows_per_epoch: 8,
+            epochs: 1,
+            chunk: 2,
+            snapshot_every: 4,
+            ..Default::default()
+        };
+        let mut sess = OnlineSession::new(spec(), opt, &dir, None).unwrap();
+        let mut src = LineSource::new(Cursor::new(corpus(8)), spec().dim);
+        let report = sess.run(&mut src).unwrap();
+        // Snapshots at rows 4 and 8 (chunk boundaries), plus the final.
+        assert_eq!(report.snapshots_published, 3);
+        let last = report.last_snapshot.unwrap();
+        assert_eq!(last.seq, 2);
+        let ptr = ModelPointer::load(&dir.join(crate::online::publish::POINTER_NAME)).unwrap();
+        assert_eq!(ptr.target(&dir.join(crate::online::publish::POINTER_NAME)), last.path);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_every_counter_bit_exactly() {
+        let dir = tmp_dir("ckpt_rt");
+        let ckpt = dir.join("ckpt");
+        let opt = OnlineOptions {
+            rows_per_epoch: 8,
+            epochs: 2,
+            chunk: 2,
+            snapshot_every: 4,
+            ..Default::default()
+        };
+        let mut sess = OnlineSession::new(spec(), opt, &dir, Some(&ckpt)).unwrap();
+        let mut src = LineSource::new(Cursor::new(corpus(6)), spec().dim);
+        while let Some((y, row)) = src.next_row().unwrap() {
+            sess.ingest(y, &row).unwrap();
+        }
+        let back = OnlineSession::resume(
+            &OnlineSession::checkpoint_latest(&ckpt),
+            &dir,
+            Some(&ckpt),
+        )
+        .unwrap();
+        assert_eq!(back.epoch, sess.epoch);
+        assert_eq!(back.rows_in_epoch, sess.rows_in_epoch);
+        assert_eq!(back.spool_shards, sess.spool_shards);
+        assert_eq!(back.spool_rows, sess.spool_rows);
+        assert_eq!(back.snapshots_published(), sess.snapshots_published());
+        assert_eq!(back.core.t, sess.core.t);
+        assert_eq!(back.core.w_scale.to_bits(), sess.core.w_scale.to_bits());
+        let a: Vec<u32> = back.core.w.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = sess.core.w.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "restored weights must be bit-identical");
+        assert_eq!(back.drift().rows(), sess.drift().rows());
+        // Re-encode of the restored state is byte-identical.
+        assert_eq!(back.encode_payload(), sess.encode_payload());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_session_refuses_an_existing_spool() {
+        let dir = tmp_dir("clobber");
+        let opt = OnlineOptions {
+            rows_per_epoch: 4,
+            epochs: 1,
+            chunk: 2,
+            ..Default::default()
+        };
+        let mut sess = OnlineSession::new(spec(), opt.clone(), &dir, None).unwrap();
+        let mut src = LineSource::new(Cursor::new(corpus(4)), spec().dim);
+        sess.run(&mut src).unwrap();
+        let err = OnlineSession::new(spec(), opt, &dir, None).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::AlreadyExists);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn invalid_options_are_rejected() {
+        let dir = tmp_dir("badopt");
+        for opt in [
+            OnlineOptions {
+                rows_per_epoch: 0,
+                ..Default::default()
+            },
+            OnlineOptions {
+                rows_per_epoch: 4,
+                epochs: 0,
+                ..Default::default()
+            },
+            OnlineOptions {
+                rows_per_epoch: 4,
+                chunk: 0,
+                ..Default::default()
+            },
+            OnlineOptions {
+                rows_per_epoch: 4,
+                c: 0.0,
+                ..Default::default()
+            },
+        ] {
+            assert!(OnlineSession::new(spec(), opt, &dir, None).is_err());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

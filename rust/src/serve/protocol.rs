@@ -26,6 +26,9 @@
 //! | 6    | `Stats`          | empty                                        |
 //! | 7    | `StatsResponse`  | utf8 JSON gauges object                      |
 //! | 8    | `Error`          | utf8 message                                 |
+//! | 9    | `RowBatch`       | u32 n_rows, then per row f32 label + u32 nnz |
+//! |      |                  | + nnz×u64 sorted indices (online ingest)     |
+//! | 10   | `RowBatchAck`    | u64 rows accepted from the batch             |
 //!
 //! Scores are shipped as raw `f64::to_bits` words so a served batch is
 //! **bit-identical** to the offline [`predict_artifact`] scores — the
@@ -67,6 +70,11 @@ pub enum FrameType {
     Stats,
     StatsResponse,
     Error,
+    /// A labeled training micro-batch for the online trainer's socket
+    /// source (same framing envelope as scoring, different direction).
+    RowBatch,
+    /// Ingest acknowledgement: rows accepted from the preceding batch.
+    RowBatchAck,
 }
 
 impl FrameType {
@@ -82,6 +90,8 @@ impl FrameType {
             Self::Stats => 6,
             Self::StatsResponse => 7,
             Self::Error => 8,
+            Self::RowBatch => 9,
+            Self::RowBatchAck => 10,
         }
     }
 
@@ -98,6 +108,8 @@ impl FrameType {
             6 => Self::Stats,
             7 => Self::StatsResponse,
             8 => Self::Error,
+            9 => Self::RowBatch,
+            10 => Self::RowBatchAck,
             _ => return None,
         })
     }
@@ -326,6 +338,51 @@ pub fn decode_reload_ok(payload: &[u8]) -> io::Result<u32> {
     Ok(crc)
 }
 
+/// Encode a training row batch for the online trainer's socket source:
+/// per row, the ±1 label and the sorted raw sparse indices.
+pub fn encode_row_batch(rows: &[(f32, Vec<u64>)]) -> Vec<u8> {
+    let nnz: usize = rows.iter().map(|(_, r)| r.len()).sum();
+    let mut out = Vec::with_capacity(4 + rows.len() * 8 + nnz * 8);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for (label, row) in rows {
+        out.extend_from_slice(&label.to_le_bytes());
+        out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+        for &idx in row {
+            out.extend_from_slice(&idx.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a training row batch. Truncation / trailing bytes are
+/// `InvalidData`; row *content* validation (sortedness, index < encoder
+/// dim) is the row source's job, where the live spec is known.
+pub fn decode_row_batch(payload: &[u8]) -> io::Result<Vec<(f32, Vec<u64>)>> {
+    let mut r = ByteReader::new(payload);
+    let n_rows = r.u32()? as usize;
+    let mut rows = Vec::with_capacity(n_rows.min(1 << 20));
+    for _ in 0..n_rows {
+        let label = f32::from_le_bytes(r.u32()?.to_le_bytes());
+        let nnz = r.u32()? as usize;
+        rows.push((label, r.u64_vec(nnz)?));
+    }
+    r.finish()?;
+    Ok(rows)
+}
+
+/// Encode an ingest acknowledgement (rows accepted from the batch).
+pub fn encode_row_batch_ack(rows: u64) -> Vec<u8> {
+    rows.to_le_bytes().to_vec()
+}
+
+/// Decode an ingest acknowledgement.
+pub fn decode_row_batch_ack(payload: &[u8]) -> io::Result<u64> {
+    let mut r = ByteReader::new(payload);
+    let rows = r.u64()?;
+    r.finish()?;
+    Ok(rows)
+}
+
 /// Decode a utf8 text payload (`StatsResponse` / `Error` frames).
 pub fn decode_text(payload: &[u8]) -> io::Result<String> {
     std::str::from_utf8(payload)
@@ -349,10 +406,12 @@ mod tests {
             FrameType::Stats,
             FrameType::StatsResponse,
             FrameType::Error,
+            FrameType::RowBatch,
+            FrameType::RowBatchAck,
         ] {
             assert_eq!(FrameType::from_code(ft.code()), Some(ft));
         }
-        assert_eq!(FrameType::from_code(9), None);
+        assert_eq!(FrameType::from_code(11), None);
         assert_eq!(FrameType::from_code(u32::MAX), None);
     }
 
@@ -446,6 +505,29 @@ mod tests {
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&back), bits(&scores));
         assert!(decode_score_response(&payload[..5]).is_err());
+    }
+
+    #[test]
+    fn row_batch_roundtrip_is_bit_exact_and_rejects_truncation() {
+        let rows = vec![
+            (1.0f32, vec![1u64, 5, 900]),
+            (-1.0f32, vec![]),
+            (1.0f32, vec![42]),
+        ];
+        let payload = encode_row_batch(&rows);
+        let back = decode_row_batch(&payload).unwrap();
+        assert_eq!(back.len(), rows.len());
+        for ((la, ra), (lb, rb)) in rows.iter().zip(&back) {
+            assert_eq!(la.to_bits(), lb.to_bits());
+            assert_eq!(ra, rb);
+        }
+        assert!(decode_row_batch(&payload[..payload.len() - 1]).is_err());
+        let mut extra = payload.clone();
+        extra.push(0);
+        assert!(decode_row_batch(&extra).is_err());
+        assert_eq!(decode_row_batch(&encode_row_batch(&[])).unwrap(), vec![]);
+        assert_eq!(decode_row_batch_ack(&encode_row_batch_ack(7)).unwrap(), 7);
+        assert!(decode_row_batch_ack(&[1, 2]).is_err());
     }
 
     #[test]

@@ -16,6 +16,23 @@
 //! `buckets`, `seed`) may change freely: workers compare the snapshot's
 //! [`FeatureMapSpec`] against their cached encoder and rebuild it when a
 //! retrained model differs. A failed validation leaves the slot untouched.
+//!
+//! # The snapshot-pointer handshake (`serve --watch` × `online-train`)
+//!
+//! The online trainer publishes snapshots as immutable
+//! `model-<seq>.model` files plus a tiny `latest.model` **pointer**
+//! ([`crate::store::ModelPointer`]), each renamed into place atomically —
+//! artifact first, pointer second (the publisher half lives in
+//! [`crate::online::publish`]; the byte format in [`crate::store`]).
+//! This loader completes the handshake: [`ServedModel::load`] sniffs the
+//! `BBMPTR` magic, resolves the pointer's sibling target, and **refuses
+//! the swap unless the target exists and its framed payload CRC matches
+//! the one the pointer recorded** — so a reload can never serve a
+//! half-written, damaged, or mismatched file; the slot keeps the previous
+//! model on any failure and the watch simply retries next poll. The
+//! served `source` (and the watched mtime) stay on the *pointer* file:
+//! targets are immutable history, the pointer is the only thing that
+//! moves, and re-resolving it is exactly what a reload should do.
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -24,7 +41,7 @@ use std::sync::{Arc, RwLock};
 use std::time::SystemTime;
 
 use crate::coordinator::report::weights_crc32;
-use crate::store::ModelArtifact;
+use crate::store::{is_model_pointer, model_payload_crc32, ModelArtifact, ModelPointer};
 
 fn bad(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("model slot: {msg}"))
@@ -46,9 +63,35 @@ pub struct ServedModel {
 }
 
 impl ServedModel {
-    /// Load an artifact file into a publishable model.
+    /// Load an artifact file — or a snapshot **pointer** file — into a
+    /// publishable model.
+    ///
+    /// A pointer (sniffed by its `BBMPTR` magic) is resolved to its
+    /// sibling target, which must exist and whose framed payload CRC must
+    /// equal the one the pointer recorded — the reader half of the
+    /// publish handshake (module docs). Any violation is an error and
+    /// loads nothing; the recorded `source`/`mtime` stay on the pointer
+    /// file so the mtime watch follows pointer swaps, not the immutable
+    /// snapshot files behind them.
     pub fn load(path: &Path) -> io::Result<Self> {
-        let artifact = ModelArtifact::load(path)?;
+        let artifact_path = if is_model_pointer(path) {
+            let ptr = ModelPointer::load(path)?;
+            let target = ptr.target(path);
+            let got = model_payload_crc32(&target)?;
+            if got != ptr.model_crc32 {
+                return Err(bad(format!(
+                    "pointer {} records payload CRC {:#010x} but its target \
+                     {} has {got:#010x} — refusing the swap",
+                    path.display(),
+                    ptr.model_crc32,
+                    target.display()
+                )));
+            }
+            target
+        } else {
+            path.to_path_buf()
+        };
+        let artifact = ModelArtifact::load(&artifact_path)?;
         let crc32 = weights_crc32(&artifact.model.w);
         let mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
         Ok(Self {
@@ -229,6 +272,71 @@ mod tests {
         std::fs::remove_file(&p1).ok();
         std::fs::remove_file(&p_scheme).ok();
         std::fs::remove_file(&p_dim).ok();
+    }
+
+    #[test]
+    fn pointer_load_resolves_target_and_follows_pointer_swaps() {
+        use crate::online::publish::SnapshotPublisher;
+        let dir = tmp("ptr_dir");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut publisher = SnapshotPublisher::new(&dir, 0).unwrap();
+        publisher.publish(&artifact(Scheme::Bbit, 1 << 20, 8, 1)).unwrap();
+        let ptr_path = publisher.pointer_path();
+
+        let served = ServedModel::load(&ptr_path).unwrap();
+        // The watch follows the pointer file, not the snapshot behind it.
+        assert_eq!(served.source, ptr_path);
+        let first = served.crc32;
+        let slot = ModelSlot::new(served);
+
+        // Publish a retrained snapshot; the pointer now names seq 1 and
+        // a source-path reload (what the mtime watch issues) swaps to it.
+        publisher.publish(&artifact(Scheme::Bbit, 1 << 20, 16, 2)).unwrap();
+        let crc = slot.reload_from(None).unwrap();
+        assert_ne!(crc, first);
+        assert_eq!(slot.load().crc32, crc);
+        assert_eq!(slot.load().artifact.spec.k, 16);
+        assert_eq!(slot.swap_count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn damaged_pointer_pairs_are_refused_and_slot_unchanged() {
+        use crate::online::publish::SnapshotPublisher;
+        use crate::store::ModelPointer;
+        let dir = tmp("ptr_bad");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut publisher = SnapshotPublisher::new(&dir, 0).unwrap();
+        let snap = publisher.publish(&artifact(Scheme::Bbit, 1 << 20, 8, 1)).unwrap();
+        let ptr_path = publisher.pointer_path();
+        let slot = ModelSlot::new(ServedModel::load(&ptr_path).unwrap());
+        let before = slot.load().crc32;
+
+        // Pointer whose recorded CRC disagrees with the on-disk target:
+        // mid-publish damage — the swap must be refused.
+        ModelPointer {
+            seq: 1,
+            model_crc32: snap.model_crc32 ^ 0xdead_beef,
+            name: "model-00000.model".to_string(),
+        }
+        .save(&ptr_path)
+        .unwrap();
+        let err = slot.reload_from(None).unwrap_err();
+        assert!(err.to_string().contains("refusing the swap"), "{err}");
+
+        // Pointer naming a target that does not exist yet: also refused.
+        ModelPointer {
+            seq: 2,
+            model_crc32: snap.model_crc32,
+            name: "model-00099.model".to_string(),
+        }
+        .save(&ptr_path)
+        .unwrap();
+        assert!(slot.reload_from(None).is_err());
+
+        assert_eq!(slot.load().crc32, before, "slot keeps the old model");
+        assert_eq!(slot.swap_count(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -143,6 +143,20 @@ impl SgdCore {
             _ => self.w.iter().map(|&x| (x as f64 * self.w_scale) as f32).collect(),
         }
     }
+
+    /// [`Self::into_weights`] without consuming the core — the exact same
+    /// float-op sequence, for mid-stream snapshot publication: the online
+    /// trainer keeps stepping the very state it just snapshotted, so a
+    /// published snapshot is precisely "the model had training stopped
+    /// here", bit for bit.
+    pub fn weights_snapshot(&self) -> Vec<f32> {
+        match &self.avg {
+            Some(a) if self.avg_count > 0 => {
+                a.iter().map(|&x| (x / self.avg_count as f64) as f32).collect()
+            }
+            _ => self.w.iter().map(|&x| (x as f64 * self.w_scale) as f32).collect(),
+        }
+    }
 }
 
 /// Pegasos options.

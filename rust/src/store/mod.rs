@@ -129,7 +129,10 @@
 //! Corruption anywhere (bad magic, unknown version, length disagreement,
 //! CRC mismatch, truncated or over-long payload fields) is `InvalidData` —
 //! a damaged checkpoint or model is never silently trained on or scored
-//! with.
+//! with. Two more formats ride the same envelope with their own magics:
+//! the snapshot pointer (`BBMPTR\0\0`, below) and the online trainer's
+//! checkpoint (`BBOCKPT\0`, documented field-by-field next to its codec
+//! in [`crate::online::trainer`]).
 //!
 //! ## MODEL payload (version 1) — [`model::ModelArtifact`]
 //!
@@ -149,6 +152,43 @@
 //! u64         n_weights     must equal the spec's training dimension
 //! f32 × n_w   weights       IEEE-754 bit patterns, verbatim
 //! ```
+//!
+//! ## MODEL-POINTER payload (version 1) — [`model::ModelPointer`]
+//!
+//! The tiny `latest.model` file the online trainer publishes next to its
+//! sequence-numbered snapshots (magic `BBMPTR\0\0`, envelope as above).
+//! It names its target by bare file name — resolved against the
+//! pointer's own directory, path separators rejected on both ends — and
+//! records the target's framed payload CRC. All little-endian:
+//!
+//! ```text
+//! u64         seq           monotonic publish sequence number
+//! u32         model_crc32   the target artifact's framed payload CRC-32
+//! u32         name_len      target file-name length in bytes
+//! bytes       name          target file name, UTF-8, no separators
+//! ```
+//!
+//! # Online snapshot publishing (the `latest.model` handshake)
+//!
+//! How the online trainer ([`crate::online`]) hands models to
+//! `serve --watch` without the watcher ever observing a torn file:
+//!
+//! 1. the publisher writes the complete artifact under a dot-temp name in
+//!    the snapshot directory, fingerprints what hit the disk, and
+//!    `rename`s it to `model-<seq>.model` (same directory ⇒ same
+//!    filesystem ⇒ atomic);
+//! 2. only then does it write + `rename` the `latest.model` pointer
+//!    recording that name and CRC.
+//!
+//! Artifact-before-pointer means any pointer a watcher can see names a
+//! target already fully on disk; the recorded CRC lets the loader
+//! *prove* it ([`crate::serve::slot::ServedModel::load`] refuses the
+//! swap — keeping the previous model — unless the resolved target's
+//! payload CRC matches). Snapshot files are immutable history; the
+//! pointer is the only thing that moves, so the serving watch polls the
+//! pointer's mtime. Sequence numbers survive checkpoint/resume (the
+//! online checkpoint records the next one), so a resumed session appends
+//! to the history rather than rewriting it.
 //!
 //! ## CKPT payload (version 1) — [`crate::coordinator::session`]
 //!
@@ -186,7 +226,9 @@
 //!
 //! Frame-type codes (u32): 0 ScoreRequest, 1 ScoreResponse, 2 Reload,
 //! 3 ReloadOk, 4 Shutdown, 5 ShutdownOk, 6 Stats, 7 StatsResponse,
-//! 8 Error — unknown codes are rejected, never guessed at. Per-type
+//! 8 Error, 9 RowBatch, 10 RowBatchAck (the online trainer's socket
+//! ingest; Shutdown/ShutdownOk end an ingest stream too) — unknown codes
+//! are rejected, never guessed at. Per-type
 //! payload layouts (score batches as u32/u64 tables, scores as raw
 //! IEEE-754 f64 bit patterns) are documented in [`crate::serve::protocol`];
 //! scores ship as bit patterns so a served response is **bit-identical**
@@ -211,6 +253,6 @@ pub mod writer;
 
 pub use format::ShardHeader;
 pub use merge::merge_stores;
-pub use model::ModelArtifact;
+pub use model::{is_model_pointer, model_payload_crc32, ModelArtifact, ModelPointer};
 pub use reader::{ShardStream, SigShardStore, StreamedShard};
 pub use writer::{shard_path, ShardWriter, StoreSummary};

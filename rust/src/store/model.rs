@@ -31,6 +31,10 @@ use super::format;
 pub const MODEL_MAGIC: [u8; 8] = *b"BBMODEL\0";
 /// Current model-artifact format version.
 pub const MODEL_VERSION: u32 = 1;
+/// File magic of a snapshot pointer file (`latest.model`).
+pub const MODEL_POINTER_MAGIC: [u8; 8] = *b"BBMPTR\0\0";
+/// Current snapshot-pointer format version.
+pub const MODEL_POINTER_VERSION: u32 = 1;
 
 fn bad(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("model artifact: {msg}"))
@@ -186,6 +190,125 @@ impl ModelArtifact {
     }
 }
 
+// ---------------------------------------------------- snapshot pointer ----
+
+/// A decoded snapshot pointer — the `latest.model` indirection the online
+/// publisher writes and `serve --watch` follows.
+///
+/// A pointer never embeds model bytes; it names a sibling artifact file
+/// (same directory, publish-sequence-numbered) plus the fingerprint a
+/// loader must find there. The publish handshake that makes the pair
+/// torn-read-free is documented in [`crate::store`]'s module docs
+/// ("Online snapshot publishing"); the payload bytes are pinned by the
+/// BBMPTR table there.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelPointer {
+    /// Monotonic publish sequence number (strictly increasing per
+    /// session; resumes continue, never reuse).
+    pub seq: u64,
+    /// The target artifact's framed **payload CRC-32** — a loader that
+    /// resolves the pointer must find exactly these bytes, or the pair
+    /// is mid-publish/damaged and must be retried, not served.
+    pub model_crc32: u32,
+    /// Target artifact's file name, resolved against the pointer's own
+    /// directory. Never a path: separators are rejected on both ends.
+    pub name: String,
+}
+
+impl ModelPointer {
+    fn validated_name(name: &str) -> io::Result<()> {
+        if name.is_empty() || name == "." || name == ".." {
+            return Err(bad(format!("pointer target name '{name}' is invalid")));
+        }
+        if name.contains('/') || name.contains('\\') {
+            return Err(bad(format!(
+                "pointer target '{name}' must be a sibling file name, not a path"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the BBMPTR payload (see [`crate::store`] docs).
+    fn encode_payload(&self) -> io::Result<Vec<u8>> {
+        Self::validated_name(&self.name)?;
+        let mut out = Vec::with_capacity(16 + self.name.len());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.model_crc32.to_le_bytes());
+        out.extend_from_slice(&(self.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.name.as_bytes());
+        Ok(out)
+    }
+
+    /// Write the pointer (framed, CRC-checked) to `path`. This writes the
+    /// bytes *at* `path` — atomic publication is the caller's job
+    /// (write to a temp name, then rename; see the publish handshake in
+    /// [`crate::store`]'s docs).
+    pub fn save(&self, path: &Path) -> io::Result<usize> {
+        format::write_framed_file(
+            path,
+            MODEL_POINTER_MAGIC,
+            MODEL_POINTER_VERSION,
+            &self.encode_payload()?,
+        )
+    }
+
+    /// Read a pointer back, verifying framing CRC and name discipline.
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let (_, payload) =
+            format::read_framed_file(path, MODEL_POINTER_MAGIC, MODEL_POINTER_VERSION)?;
+        let mut r = format::ByteReader::new(&payload);
+        let seq = r.u64()?;
+        let model_crc32 = r.u32()?;
+        let name_len = r.u32()? as usize;
+        if payload.len() != 16 + name_len {
+            return Err(bad(format!(
+                "pointer name length {name_len} disagrees with payload size {}",
+                payload.len()
+            )));
+        }
+        let name = std::str::from_utf8(&payload[16..])
+            .map_err(|e| bad(format!("pointer target name is not utf8: {e}")))?
+            .to_string();
+        Self::validated_name(&name)?;
+        Ok(Self {
+            seq,
+            model_crc32,
+            name,
+        })
+    }
+
+    /// Resolve the target artifact path: the named sibling of the pointer
+    /// file itself.
+    pub fn target(&self, pointer_path: &Path) -> std::path::PathBuf {
+        match pointer_path.parent() {
+            Some(dir) if !dir.as_os_str().is_empty() => dir.join(&self.name),
+            _ => std::path::PathBuf::from(&self.name),
+        }
+    }
+}
+
+/// True when the file at `path` starts with the snapshot-pointer magic —
+/// the cheap sniff `serve`'s loader uses to decide whether a model path
+/// is an artifact or a pointer to one. Unreadable/short files sniff as
+/// "not a pointer" (the subsequent real load reports the error).
+pub fn is_model_pointer(path: &Path) -> bool {
+    use std::io::Read;
+    let mut head = [0u8; 8];
+    match std::fs::File::open(path).and_then(|mut f| f.read_exact(&mut head)) {
+        Ok(()) => head == MODEL_POINTER_MAGIC,
+        Err(_) => false,
+    }
+}
+
+/// The framed payload CRC-32 of a model artifact on disk, recomputed from
+/// the payload bytes (the envelope's own CRC check runs first, so a torn
+/// file errors rather than fingerprinting garbage). This is the value a
+/// [`ModelPointer`] records for its target.
+pub fn model_payload_crc32(path: &Path) -> io::Result<u32> {
+    let (_, payload) = format::read_framed_file(path, MODEL_MAGIC, MODEL_VERSION)?;
+    Ok(format::crc32(&payload))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +403,73 @@ mod tests {
         // Not a model file at all.
         std::fs::write(&path, b"BBSHARD\0junk").unwrap();
         assert!(ModelArtifact::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pointer_roundtrips_resolves_and_rejects_paths() {
+        let path = tmp("ptr.model");
+        let ptr = ModelPointer {
+            seq: 42,
+            model_crc32: 0xC0FFEE11,
+            name: "model-00042.model".to_string(),
+        };
+        ptr.save(&path).unwrap();
+        assert!(is_model_pointer(&path));
+        let back = ModelPointer::load(&path).unwrap();
+        assert_eq!(back, ptr);
+        assert_eq!(
+            back.target(&path),
+            path.parent().unwrap().join("model-00042.model")
+        );
+
+        // Path-like target names are refused on write…
+        let evil = ModelPointer {
+            seq: 1,
+            model_crc32: 0,
+            name: "../escape.model".to_string(),
+        };
+        assert!(evil.save(&path).is_err());
+        // …and empty names too.
+        let empty = ModelPointer {
+            seq: 1,
+            model_crc32: 0,
+            name: String::new(),
+        };
+        assert!(empty.save(&path).is_err());
+
+        // A model artifact does not sniff as a pointer, and vice versa.
+        let model_path = tmp("ptr_model.bbm");
+        sample(Scheme::Bbit, 8, 2).save(&model_path).unwrap();
+        assert!(!is_model_pointer(&model_path));
+        assert!(ModelArtifact::load(&path).is_err());
+        assert!(!is_model_pointer(Path::new("/no/such/file")));
+
+        // Corruption: flip a payload byte, CRC rejects.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ModelPointer::load(&path).is_err());
+
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&model_path).ok();
+    }
+
+    #[test]
+    fn model_payload_crc32_matches_the_envelope() {
+        let path = tmp("crc.bbm");
+        let art = sample(Scheme::Vw, 16, 0);
+        art.save(&path).unwrap();
+        let crc = model_payload_crc32(&path).unwrap();
+        // The envelope records the same value at bytes 24..28.
+        let bytes = std::fs::read(&path).unwrap();
+        let mut recorded = [0u8; 4];
+        recorded.copy_from_slice(&bytes[24..28]);
+        assert_eq!(crc, u32::from_le_bytes(recorded));
+        // A torn file errors instead of fingerprinting garbage.
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(model_payload_crc32(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,327 @@
+//! Online-learning integration: the subsystem's acceptance criteria.
+//!
+//! * A replayed finite stream (shuffle is always off online) trains
+//!   **bit-identically** to batch `train_stream` over the same corpus —
+//!   weights, objective and `weights_crc32` — across schemes and both
+//!   SGD algorithms.
+//! * A published snapshot picked up through the `latest.model` pointer by
+//!   the serving slot scores bit-identically to offline `predict`.
+//! * A session killed mid-stream and resumed from its `BBOCKPT`
+//!   checkpoint finishes bit-identical to an uninterrupted one.
+//! * The Count-Min conservative update is sandwiched between the true
+//!   count and the plain-update estimate (property test against the
+//!   [`CountMin::observe_plain`] oracle).
+
+use std::io::Cursor;
+use std::path::PathBuf;
+
+use bbml::coordinator::report::weights_crc32;
+use bbml::coordinator::{
+    predict_artifact, sketch_dataset_to_store, train_stream, PipelineOptions, StreamAlgo,
+    StreamTrainOptions,
+};
+use bbml::data::synth::{generate_corpus, SynthConfig};
+use bbml::hashing::feature_map::{FeatureMapSpec, Scheme};
+use bbml::online::{CountMin, LineSource, OnlineOptions, OnlineSession, POINTER_NAME};
+use bbml::proptest_mini::check;
+use bbml::serve::{ModelSlot, ServedModel};
+use bbml::store::{ModelArtifact, ModelPointer, SigShardStore};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bbml_ionline_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn corpus_cfg(n: usize) -> SynthConfig {
+    SynthConfig {
+        n_docs: n,
+        dim: 1 << 20,
+        vocab: 4_000,
+        topic_size: 100,
+        mean_len: 40,
+        topic_mix: 0.5,
+        ..Default::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The corpus as LIBSVM text — the exact byte stream `--from stdin` would
+/// consume, written through the same serializer `generate` uses.
+fn libsvm_text(ds: &bbml::data::sparse::SparseBinaryDataset, tag: &str) -> String {
+    let path = std::env::temp_dir().join(format!(
+        "bbml_ionline_{}_{}.libsvm",
+        tag,
+        std::process::id()
+    ));
+    bbml::data::libsvm::write_libsvm(ds, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    text
+}
+
+#[test]
+fn replayed_stream_is_bit_identical_to_batch_train_stream() {
+    // THE bit-identity contract: same rows, same declared epoch length,
+    // shuffle off ⇒ the streaming trainer IS the batch trainer, bit for
+    // bit — weights, objective, fingerprint. Across packed (bbit), dense
+    // hashed (vw) and dense projected (proj_sparse) schemes, and both
+    // stream algorithms.
+    let n = 120;
+    let ds = generate_corpus(&corpus_cfg(n));
+    let text = libsvm_text(&ds, "bitid");
+    let popt = PipelineOptions {
+        threads: 2,
+        chunk: 30,
+        queue: 2,
+    };
+    for (scheme, k, algo) in [
+        (Scheme::Bbit, 16, StreamAlgo::Pegasos),
+        (Scheme::Bbit, 16, StreamAlgo::LogRegSgd),
+        (Scheme::Vw, 256, StreamAlgo::Pegasos),
+        (Scheme::ProjSparse, 64, StreamAlgo::LogRegSgd),
+    ] {
+        let spec = FeatureMapSpec::new(scheme, ds.dim(), k, 4, 9);
+        let store_dir = tmp_dir(&format!("bitid_store_{}_{}", scheme.name(), algo.name()));
+        let map = spec.build();
+        sketch_dataset_to_store(&ds, map.as_ref(), scheme, &popt, &store_dir, false).unwrap();
+        let store = SigShardStore::open(&store_dir).unwrap();
+        assert_eq!(store.n_rows(), n);
+
+        let batch = train_stream(
+            &store,
+            &StreamTrainOptions {
+                algo,
+                c: 1.0,
+                epochs: 2,
+                seed: 0,
+                shuffle: false,
+                row_shuffle: false,
+                prefetch: 3,
+                average: true,
+            },
+        )
+        .unwrap();
+
+        let snap_dir = tmp_dir(&format!("bitid_snap_{}_{}", scheme.name(), algo.name()));
+        let mut sess = OnlineSession::new(
+            spec,
+            OnlineOptions {
+                algo,
+                c: 1.0,
+                epochs: 2,
+                rows_per_epoch: n,
+                average: true,
+                snapshot_every: 0,
+                chunk: 30,
+            },
+            &snap_dir,
+            None,
+        )
+        .unwrap();
+        let mut src = LineSource::new(Cursor::new(text.clone()), ds.dim());
+        let online = sess.run(&mut src).unwrap();
+
+        assert!(online.completed, "{scheme}/{}", algo.name());
+        assert_eq!(online.rows_ingested, n as u64);
+        assert_eq!(online.rows_stepped, 2 * n as u64, "epoch 1 replays the spool");
+        assert_eq!(
+            bits(&online.model.w),
+            bits(&batch.model.w),
+            "{scheme}/{}: streamed weights must be the batch weights",
+            algo.name()
+        );
+        assert_eq!(
+            online.model.objective.to_bits(),
+            batch.model.objective.to_bits(),
+            "{scheme}/{}: objective bits",
+            algo.name()
+        );
+        assert_eq!(
+            weights_crc32(&online.model.w),
+            weights_crc32(&batch.model.w)
+        );
+        std::fs::remove_dir_all(&store_dir).ok();
+        std::fs::remove_dir_all(&snap_dir).ok();
+    }
+}
+
+#[test]
+fn published_snapshot_serves_bit_identical_scores() {
+    // Stream → snapshot → pointer → serving slot → scores, against
+    // offline predict over an artifact assembled from the same report.
+    let ds = generate_corpus(&corpus_cfg(90));
+    let text = libsvm_text(&ds, "serve");
+    let spec = FeatureMapSpec::new(Scheme::Bbit, ds.dim(), 16, 4, 7);
+    let snap_dir = tmp_dir("serve_snap");
+    let mut sess = OnlineSession::new(
+        spec.clone(),
+        OnlineOptions {
+            algo: StreamAlgo::Pegasos,
+            c: 1.0,
+            epochs: 1,
+            rows_per_epoch: 90,
+            average: true,
+            snapshot_every: 32,
+            chunk: 16,
+        },
+        &snap_dir,
+        None,
+    )
+    .unwrap();
+    let mut src = LineSource::new(Cursor::new(text), ds.dim());
+    let report = sess.run(&mut src).unwrap();
+    assert!(report.completed);
+    assert!(
+        report.snapshots_published >= 2,
+        "cadence 32 over 90 rows plus the final snapshot: {}",
+        report.snapshots_published
+    );
+
+    // The pointer resolves through the serving loader and carries the
+    // final weights.
+    let served = ServedModel::load(&snap_dir.join(POINTER_NAME)).unwrap();
+    assert_eq!(bits(&served.artifact.model.w), bits(&report.model.w));
+    assert_eq!(served.crc32, weights_crc32(&report.model.w));
+    let slot = ModelSlot::new(served);
+
+    // Scores through the slot's artifact ≡ offline predict on an
+    // artifact assembled directly from the training report.
+    let popt = PipelineOptions::default();
+    let offline_art = ModelArtifact::new(spec, report.model.clone()).unwrap();
+    let offline = predict_artifact(&offline_art, &ds, &popt).unwrap();
+    let via_slot = predict_artifact(&slot.load().artifact, &ds, &popt).unwrap();
+    assert_eq!(via_slot.rows, offline.rows);
+    let score_bits =
+        |s: &[f64]| s.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(
+        score_bits(&via_slot.scores),
+        score_bits(&offline.scores),
+        "slot-served scores must be the offline scores, bit for bit"
+    );
+
+    // The pointer itself records the sequence the report saw last.
+    let ptr = ModelPointer::load(&snap_dir.join(POINTER_NAME)).unwrap();
+    assert_eq!(Some(ptr.seq), report.last_snapshot.as_ref().map(|s| s.seq));
+    std::fs::remove_dir_all(&snap_dir).ok();
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_to_uninterrupted() {
+    // Feed 37 of 100 rows, "die" (drop the session after its EOF
+    // checkpoint), resume from BBOCKPT, feed the remaining 63: the final
+    // weights/objective must equal an uninterrupted run's, bit for bit.
+    // 37 is deliberately not chunk-aligned (chunk 16): the trailing
+    // partial chunk is flushed and checkpointed at EOF.
+    let n = 100;
+    let ds = generate_corpus(&corpus_cfg(n));
+    let text = libsvm_text(&ds, "resume");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), n);
+    let head = lines[..37].join("\n") + "\n";
+    let tail = lines[37..].join("\n") + "\n";
+    let spec = FeatureMapSpec::new(Scheme::Bbit, ds.dim(), 16, 4, 5);
+    let opt = OnlineOptions {
+        algo: StreamAlgo::Pegasos,
+        c: 1.0,
+        epochs: 2,
+        rows_per_epoch: n,
+        average: true,
+        snapshot_every: 48,
+        chunk: 16,
+    };
+
+    // Uninterrupted reference.
+    let (snap_full, ckpt_full) = (tmp_dir("res_full"), tmp_dir("res_full_ck"));
+    let mut sess = OnlineSession::new(spec.clone(), opt.clone(), &snap_full, Some(&ckpt_full))
+        .unwrap();
+    let mut src = LineSource::new(Cursor::new(text.clone()), ds.dim());
+    let full = sess.run(&mut src).unwrap();
+    assert!(full.completed);
+
+    // Interrupted run: part 1 pauses incomplete at EOF…
+    let (snap, ckpt) = (tmp_dir("res_cut"), tmp_dir("res_cut_ck"));
+    let mut part1 = OnlineSession::new(spec, opt, &snap, Some(&ckpt)).unwrap();
+    let mut src = LineSource::new(Cursor::new(head), ds.dim());
+    let r1 = part1.run(&mut src).unwrap();
+    assert!(!r1.completed, "mid-epoch EOF pauses");
+    assert_eq!(r1.rows_ingested, 37);
+    drop(part1); // the "kill" — everything live is gone
+
+    // …part 2 rebuilds from the checkpoint and finishes the stream.
+    let latest = OnlineSession::checkpoint_latest(&ckpt);
+    let mut part2 = OnlineSession::resume(&latest, &snap, Some(&ckpt)).unwrap();
+    assert_eq!(part2.epoch(), 0);
+    assert_eq!(part2.steps(), 37);
+    let mut src = LineSource::new(Cursor::new(tail), ds.dim());
+    let r2 = part2.run(&mut src).unwrap();
+
+    assert!(r2.completed);
+    assert_eq!(r2.rows_ingested, 63, "this run only saw the tail");
+    assert_eq!(
+        r2.rows_stepped, full.rows_stepped,
+        "total steps survive the resume"
+    );
+    assert_eq!(
+        bits(&r2.model.w),
+        bits(&full.model.w),
+        "killed-and-resumed weights must be the uninterrupted weights"
+    );
+    assert_eq!(
+        r2.model.objective.to_bits(),
+        full.model.objective.to_bits()
+    );
+    assert_eq!(
+        weights_crc32(&r2.model.w),
+        weights_crc32(&full.model.w)
+    );
+    // The snapshot sequence kept ascending across the resume: the
+    // pointer's seq is the last of `snapshots_published` monotonic
+    // publishes (part 1's EOF snapshot was seq 0).
+    let ptr = ModelPointer::load(&snap.join(POINTER_NAME)).unwrap();
+    assert_eq!(ptr.seq + 1, r2.snapshots_published);
+    assert!(r2.snapshots_published >= 2);
+    for d in [&snap_full, &ckpt_full, &snap, &ckpt] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn conservative_update_is_sandwiched_by_truth_and_plain_updates() {
+    // Property: for every observed item, true count ≤ conservative
+    // estimate ≤ plain estimate — conservative update only tightens the
+    // classic Count-Min overestimate, never undercounts. The plain
+    // sketch here is the textbook oracle (`observe_plain`).
+    check("count-min conservative sandwich", 24, |rng| {
+        let depth = 2 + rng.gen_range(3) as usize;
+        let width = 8 + rng.gen_range(56) as usize;
+        let mut conservative = CountMin::new(depth, width);
+        let mut plain = CountMin::new(depth, width);
+        let mut truth: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+        let events = 50 + rng.gen_range(400);
+        let universe = 1 + rng.gen_range(96);
+        for _ in 0..events {
+            let item = rng.gen_range(universe);
+            conservative.observe(item);
+            plain.observe_plain(item);
+            *truth.entry(item).or_insert(0) += 1;
+        }
+        for (&item, &count) in &truth {
+            let c = conservative.estimate(item);
+            let p = plain.estimate(item);
+            assert!(
+                c >= count,
+                "conservative undercounts item {item}: {c} < true {count} \
+                 (depth {depth}, width {width})"
+            );
+            assert!(
+                c <= p,
+                "conservative exceeds plain for item {item}: {c} > {p} \
+                 (depth {depth}, width {width})"
+            );
+        }
+    });
+}
